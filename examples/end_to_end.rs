@@ -1,0 +1,93 @@
+//! End-to-end validation driver (EXPERIMENTS.md records a full run).
+//!
+//! Proves all three layers compose on a real small workload:
+//!
+//! 1. loads the AOT artifacts (L2/L1 products) through the PJRT runtime,
+//! 2. pre-trains every Table-2 model from scratch on the synthetic
+//!    datasets via the AOT train-step executables, logging loss curves,
+//! 3. regenerates Table 1, Table 2 (both ACU operating points), the ACU
+//!    ablation and Table 4 (all four engines),
+//! 4. exercises the dynamic-batching inference engine,
+//! 5. writes everything under artifacts/results/.
+//!
+//! ```bash
+//! cargo run --release --example end_to_end            # full (~20 min)
+//! cargo run --release --example end_to_end -- --quick # smoke (~3 min)
+//! ```
+
+use std::time::Duration;
+
+use adapt::coordinator::engine::{EngineConfig, InferenceEngine};
+use adapt::coordinator::experiments::{self, Table2Config, Table4Config};
+use adapt::coordinator::features;
+use adapt::coordinator::ops::InferVariant;
+use adapt::data::Sizes;
+use adapt::runtime::Runtime;
+use adapt::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t_start = std::time::Instant::now();
+    let artifacts = adapt::artifacts_dir();
+    let mut rt = Runtime::open(&artifacts)?;
+    println!("== AdaPT-RS end-to-end validation ==");
+    println!("artifacts: {} ({} models, {} LUTs)\n",
+        artifacts.display(), rt.manifest.models.len(), rt.manifest.luts.len());
+
+    // ---- Table 1 --------------------------------------------------------
+    println!("--- Table 1: model specifications ---\n{}", experiments::table1(&rt));
+
+    // ---- Table 2 (pre-trains on demand, snapshots under artifacts/trained)
+    let sizes = if quick { Sizes { n_train: 512, n_eval: 128 } } else { Sizes::default() };
+    let t2 = Table2Config {
+        sizes,
+        steps_scale: if quick { 0.25 } else { 1.0 },
+        eval_batches: if quick { Some(2) } else { None },
+        verbose: true,
+        ..Table2Config::default()
+    };
+    println!("--- Table 2: quantization + retraining ---\n{}", experiments::table2(&mut rt, &t2)?);
+
+    // ---- Table 4 --------------------------------------------------------
+    let t4 = Table4Config {
+        sizes,
+        eval_batches: if quick { 1 } else { 2 },
+        verbose: true,
+        ..Table4Config::default()
+    };
+    println!("--- Table 4: emulation wall-clock ---\n{}", experiments::table4(&mut rt, &t4)?);
+
+    // ---- ACU ablation ----------------------------------------------------
+    println!("--- ACU ablation (small_vgg) ---\n{}",
+        experiments::ablation(&mut rt, "small_vgg", &sizes, Some(2))?);
+
+    // ---- Table 3 ---------------------------------------------------------
+    println!("--- Table 3: functionality matrix ---\n{}", features::table3());
+
+    // ---- Dynamic batching engine ----------------------------------------
+    println!("--- inference engine (dynamic batching) ---");
+    let ds = adapt::data::load("cifar_syn", &Sizes::small());
+    drop(rt); // the engine thread opens its own runtime
+    let engine = InferenceEngine::start(EngineConfig {
+        artifacts: artifacts.clone(),
+        model: "small_vgg".into(),
+        variant: InferVariant::ApproxLut,
+        acu: Some("mul8s_1l2h_like".into()),
+        max_wait: Duration::from_millis(10),
+    })?;
+    let n = if quick { 48 } else { 96 };
+    let per = 32 * 32 * 3;
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..n)
+        .map(|i| engine.submit(ds.eval.x_f[(i % ds.eval.num) * per..][..per].to_vec()))
+        .collect::<Result<_, _>>()?;
+    let ok = pending.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
+    let wall = t0.elapsed();
+    let stats = engine.shutdown()?;
+    println!("{ok}/{n} requests in {} ({:.0} req/s), {} batches, {} padded slots\n",
+        fmt::dur(wall), n as f64 / wall.as_secs_f64(), stats.batches, stats.padded_slots);
+
+    println!("== end-to-end validation complete in {} ==", fmt::dur(t_start.elapsed()));
+    println!("results appended under {}/results/", artifacts.display());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Image classification, end to end (the paper's headline use case).
+//!
+//! Reproduces one Table-2 row live: fp32 pre-training on the synthetic
+//! CIFAR stand-in, percentile calibration, accuracy under the exact and
+//! approximate 8-bit multipliers, approximation-aware retraining, and the
+//! recovered accuracy — with the loss curves printed.
+//!
+//! ```bash
+//! cargo run --release --example image_classification -- [model] [acu]
+//! ```
+
+use adapt::coordinator::experiments::hyper_for;
+use adapt::coordinator::ops::{self, InferVariant, ModelState, TrainVariant};
+use adapt::data::{self, Sizes};
+use adapt::quant::calib::CalibratorKind;
+use adapt::runtime::{weights, Runtime};
+use adapt::util::fmt;
+
+fn sparkline(losses: &[f32]) -> String {
+    let blocks = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (mn, mx) = losses
+        .iter()
+        .fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+    let span = (mx - mn).max(1e-9);
+    losses
+        .iter()
+        .step_by((losses.len() / 60).max(1))
+        .map(|&v| blocks[(((v - mn) / span) * 7.0) as usize])
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("small_resnet");
+    let acu = args.get(1).map(|s| s.as_str()).unwrap_or("mul8s_1l2h_like");
+
+    let mut rt = Runtime::open(&adapt::artifacts_dir())?;
+    let m = rt.manifest.model(model)?.clone();
+    anyhow::ensure!(m.kind == "cnn", "pick a CNN (got {})", m.kind);
+    let sizes = Sizes::default();
+    let ds = data::load(&m.dataset, &sizes);
+    let hy = hyper_for(model);
+
+    println!("== {model} on {} ({} params, {} MACs/sample) ==",
+        m.dataset, fmt::count(m.params_count), fmt::count(m.macs));
+
+    // 1. fp32 pre-training (fresh, to show the loss curve).
+    let mut st = ModelState::load(&rt, model, &weights::initial_path(&rt.manifest.root, &m))?;
+    let tr = ops::train(&mut rt, &mut st, TrainVariant::Fp32, &ds,
+        hy.pretrain_steps, hy.pretrain_lr, None, 0)?;
+    println!("fp32 pre-train {} steps in {}:", tr.steps, fmt::dur(tr.wall));
+    println!("  loss {:.3} -> {:.3}  {}", tr.first_loss, tr.last_loss, sparkline(&tr.losses));
+
+    let fp32 = ops::evaluate(&mut rt, &st, InferVariant::Fp32, &ds, None, None)?;
+    println!("fp32 accuracy: {}", fmt::pct(fp32.accuracy));
+
+    // 2. Post-training calibration (paper default: 99.9% percentile, 2 batches).
+    ops::calibrate(&mut rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
+
+    // 3. Quantized + approximate accuracy.
+    let (_e, exact_lut) = ops::load_lut(&rt, "exact8")?;
+    let q = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&exact_lut), None)?;
+    println!("8-bit (exact mult): {}", fmt::pct(q.accuracy));
+    let (_a, acu_lut) = ops::load_lut(&rt, acu)?;
+    let ap = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&acu_lut), None)?;
+    println!("8-bit via {acu}: {}  (drop {:.2} pts)",
+        fmt::pct(ap.accuracy), 100.0 * (q.accuracy - ap.accuracy));
+
+    // 4. Approximation-aware retraining (§3.2.1).
+    let tr2 = ops::train(&mut rt, &mut st, TrainVariant::QatLut, &ds,
+        hy.qat_steps, hy.qat_lr, Some(&acu_lut), 0)?;
+    println!("QAT retrain {} steps in {}:", tr2.steps, fmt::dur(tr2.wall));
+    println!("  loss {:.3} -> {:.3}  {}", tr2.first_loss, tr2.last_loss, sparkline(&tr2.losses));
+
+    let rec = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&acu_lut), None)?;
+    println!("retrained accuracy via {acu}: {}  (recovered {:.2} of {:.2} pts)",
+        fmt::pct(rec.accuracy),
+        100.0 * (rec.accuracy - ap.accuracy),
+        100.0 * (q.accuracy - ap.accuracy));
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Image reconstruction: approximate VAE + GAN generator (§5's third
+//! application domain).
+//!
+//! * VAE: trains on the MNIST stand-in, then reconstructs through the
+//!   approximate multiplier and prints pixel accuracy + an ASCII render
+//!   of one (input, reconstruction) pair.
+//! * GAN: runs the Fashion-stand-in generator forward through the exact
+//!   and approximate paths (the paper's GAN row is forward-only).
+
+use adapt::coordinator::experiments::ensure_pretrained;
+use adapt::coordinator::ops::{self, InferVariant};
+use adapt::data::{self, Sizes};
+use adapt::metrics;
+use adapt::quant::calib::CalibratorKind;
+use adapt::runtime::Runtime;
+use adapt::util::fmt;
+
+fn ascii28(img: &[f32]) -> String {
+    let ramp = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut out = String::new();
+    for y in (0..28).step_by(2) {
+        for x in 0..28 {
+            let v = (img[y * 28 + x] + img[(y + 1) * 28 + x]) / 2.0;
+            out.push(ramp[((v.clamp(0.0, 1.0)) * 9.0) as usize]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::open(&adapt::artifacts_dir())?;
+    let sizes = Sizes::default();
+
+    // ---- VAE ----------------------------------------------------------
+    let mut st = ensure_pretrained(&mut rt, "vae_mnist", &sizes, 1.0, false)?;
+    let ds = data::load("mnist_syn", &sizes);
+    ops::calibrate(&mut rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
+
+    let bs = rt.manifest.batch;
+    let x = ops::batch_input(&st.model, &ds.eval, 0, bs)?;
+    let target = ds.eval.batch_f(0, bs);
+
+    let (_l, acu_lut) = ops::load_lut(&rt, "mul8s_1l2h_like")?;
+    let fp = ops::infer_batch(&mut rt, &st, InferVariant::Fp32, &x, None)?;
+    let ap = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&acu_lut))?;
+
+    println!("== vae_mnist reconstruction ==");
+    println!("fp32 pixel accuracy:   {}", fmt::pct(metrics::pixel_accuracy(&fp, &target)));
+    println!("approx pixel accuracy: {}", fmt::pct(metrics::pixel_accuracy(&ap, &target)));
+    println!("\ninput:                        approx reconstruction:");
+    let inp = ascii28(&target[..784]);
+    let rec = ascii28(&ap[..784]);
+    for (a, b) in inp.lines().zip(rec.lines()) {
+        println!("{a}  {b}");
+    }
+
+    // ---- GAN generator (timing-style forward) --------------------------
+    let mut gst = ensure_pretrained(&mut rt, "gan_fashion", &sizes, 1.0, false)?;
+    let gds = data::load("noise64", &sizes);
+    ops::calibrate(&mut rt, &mut gst, &gds, 2, CalibratorKind::Percentile, 0.999)?;
+    let z = ops::batch_input(&gst.model, &gds.eval, 0, bs)?;
+    let t0 = std::time::Instant::now();
+    let gen_fp = ops::infer_batch(&mut rt, &gst, InferVariant::Fp32, &z, None)?;
+    let t_fp = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let gen_ap = ops::infer_batch(&mut rt, &gst, InferVariant::ApproxLut, &z, Some(&acu_lut))?;
+    let t_ap = t0.elapsed();
+    // tanh outputs in [-1, 1]; compare the two paths.
+    let mut max_dev = 0f32;
+    for (a, b) in gen_fp.iter().zip(&gen_ap) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    println!("\n== gan_fashion generator ==");
+    println!("fp32 forward {} / approx forward {} (batch {bs})",
+        fmt::dur(t_fp), fmt::dur(t_ap));
+    println!("max |fp32 - approx| over generated pixels: {max_dev:.4} (range 2.0)");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! ACU design-space exploration (ALWANN-style): accuracy vs error profile
+//! vs power proxy across the whole multiplier library, plus a mixed-
+//! precision demo of the graph re-transform tool (§3.4).
+//!
+//! ```bash
+//! cargo run --release --example multiplier_explorer -- [model]
+//! ```
+
+use adapt::coordinator::experiments::ensure_pretrained;
+use adapt::coordinator::ops::{self, InferVariant};
+use adapt::data::{self, Sizes};
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, LayerMode, Policy};
+use adapt::lut::Lut;
+use adapt::metrics;
+use adapt::quant::calib::CalibratorKind;
+use adapt::runtime::Runtime;
+use adapt::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "small_vgg".into());
+    let mut rt = Runtime::open(&adapt::artifacts_dir())?;
+    let sizes = Sizes::default();
+    let mut st = ensure_pretrained(&mut rt, &model, &sizes, 1.0, false)?;
+    let ds = data::load(&st.model.dataset.clone(), &sizes);
+    ops::calibrate(&mut rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
+
+    let fp32 = ops::evaluate(&mut rt, &st, InferVariant::Fp32, &ds, None, Some(4))?;
+    println!("== ACU sweep on {model} (fp32 = {}) ==\n", fmt::pct(fp32.accuracy));
+    let mut rows = Vec::new();
+    let acus: Vec<String> = rt.manifest.luts.keys().cloned().collect();
+    for acu in &acus {
+        let meta = rt.manifest.luts[acu].clone();
+        let (_l, lit) = ops::load_lut(&rt, acu)?;
+        let ev = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&lit), Some(4))?;
+        rows.push(vec![
+            acu.clone(),
+            format!("{:.3}%", meta.mre_pct),
+            format!("{:.2}x", meta.power),
+            fmt::pct(ev.accuracy),
+            format!("{:+.2} pts", 100.0 * (ev.accuracy - fp32.accuracy)),
+        ]);
+    }
+    println!("{}", fmt::table(&["ACU", "MRE", "power", "accuracy", "vs fp32"], &rows));
+
+    // ---- Mixed precision via the re-transform tool ----------------------
+    // Keep the most error-sensitive layers exact (stem + classifier head),
+    // approximate everything else — a per-layer policy the paper's plugin
+    // exposes as "enable/disable per layer".
+    println!("\n== mixed-precision re-transform on {model} (Rust engine) ==");
+    let m = rt.manifest.model(&model)?.clone();
+    let params = st.params_tensors()?;
+    let scales = st.act_scales.clone().unwrap();
+    let lut = Lut::load(&rt.manifest.lut_path("mul8s_1l2h_like")?)?;
+
+    let quantizable: Vec<String> = m
+        .nodes
+        .iter()
+        .filter_map(|n| n.op.layer_name().map(|s| s.to_string()))
+        .collect();
+    let first = quantizable.first().cloned().unwrap_or_default();
+    let last = quantizable.last().cloned().unwrap_or_default();
+
+    let policies = [
+        ("all approx", Policy::all(LayerMode::ApproxLut)),
+        (
+            "stem+head exact",
+            Policy::all(LayerMode::ApproxLut)
+                .with_override(&first, LayerMode::Fp32)
+                .with_override(&last, LayerMode::Fp32),
+        ),
+        (
+            "head 12-bit functional",
+            Policy::all(LayerMode::ApproxLut).with_override(
+                &last,
+                LayerMode::ApproxFunc { bits: 12, trunc_k: 4 },
+            ),
+        ),
+    ];
+    let bs = rt.manifest.batch;
+    let mut rows = Vec::new();
+    for (label, policy) in &policies {
+        let plan = retransform(&m, policy);
+        let exec = Executor::new(
+            &m,
+            params.clone(),
+            plan,
+            adapt::coordinator::ops::rescale_for_bits(&scales, 8),
+            Some(Lut::generate(adapt::mult::get("mul8s_1l2h_like")?)),
+            Style::Optimized { threads: 2 },
+        )?;
+        let _ = &lut;
+        let mut hits = 0.0;
+        let nb = 2;
+        for bi in 0..nb {
+            let out = exec.forward(Value::F(ds.eval.batch_tensor(bi, bs)))?;
+            hits += metrics::top1(&out.data, m.out_dim, &ds.eval.batch_labels(bi, bs));
+        }
+        rows.push(vec![label.to_string(), fmt::pct(hits / nb as f64)]);
+    }
+    println!("{}", fmt::table(&["policy", "accuracy"], &rows));
+    Ok(())
+}

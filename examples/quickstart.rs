@@ -1,0 +1,48 @@
+//! Quickstart: load the AOT artifacts, run approximate inference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads `small_vgg`, calibrates its activation scales on two batches
+//! (99.9 % percentile histogram — the paper's default), then evaluates one
+//! batch three ways: fp32, 8-bit exact-quantized, and through the
+//! `mul8s_1l2h_like` approximate multiplier.
+
+use adapt::coordinator::ops::{self, InferVariant, ModelState};
+use adapt::data::{self, Sizes};
+use adapt::metrics;
+use adapt::quant::calib::CalibratorKind;
+use adapt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::open(&adapt::artifacts_dir())?;
+    let model = "small_vgg";
+    println!("== AdaPT-RS quickstart: {model} ==");
+
+    // 1. Load weights (trained snapshot if `adapt table2` ran, else init).
+    let mut st = ModelState::load_best(&rt, model)?;
+    let ds = data::load(&st.model.dataset.clone(), &Sizes::small());
+
+    // 2. Calibrate activation ranges offline (Fig. 1, left box).
+    let scales = ops::calibrate(&mut rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
+    println!("calibrated {} activation scales", scales.len());
+
+    // 3. One batch through each execution mode.
+    let bs = rt.manifest.batch;
+    let x = ops::batch_input(&st.model, &ds.eval, 0, bs)?;
+    let labels = ds.eval.batch_labels(0, bs);
+
+    let fp32 = ops::infer_batch(&mut rt, &st, InferVariant::Fp32, &x, None)?;
+    let (_l, exact_lut) = ops::load_lut(&rt, "exact8")?;
+    let q8 = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&exact_lut))?;
+    let (_l, acu_lut) = ops::load_lut(&rt, "mul8s_1l2h_like")?;
+    let a8 = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&acu_lut))?;
+
+    let dim = st.model.out_dim;
+    println!("fp32 top-1:       {:.1}%", 100.0 * metrics::top1(&fp32, dim, &labels));
+    println!("8-bit quantized:  {:.1}%", 100.0 * metrics::top1(&q8, dim, &labels));
+    println!("8-bit mul8s-like: {:.1}%", 100.0 * metrics::top1(&a8, dim, &labels));
+    println!("(run `adapt table2` to retrain the approximate model)");
+    Ok(())
+}

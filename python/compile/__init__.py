@@ -1,0 +1,1 @@
+"""AdaPT-RS build-time compile package (L1+L2). Never imported at runtime."""

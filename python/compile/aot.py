@@ -1,0 +1,229 @@
+"""AOT driver: lower the whole model zoo to HLO text + emit artifacts.
+
+Python runs exactly once (``make artifacts``); afterwards the Rust binary
+is self-contained. Outputs under ``artifacts/``:
+
+* ``hlo/<model>_<variant>.hlo.txt`` — one XLA executable per execution
+  variant (HLO *text*, not serialized proto: jax >= 0.5 emits 64-bit
+  instruction ids that xla_extension 0.5.1 rejects; the text parser
+  reassigns ids — see /opt/xla-example/README.md);
+* ``luts/<acu>.bin``   — product LUTs for every 8-bit ACU in the library;
+* ``weights/<model>.bin`` — deterministic initial parameters (flat f32 LE);
+* ``manifest.json``    — the IR graphs, param specs, artifact index and
+  dataset bindings the Rust coordinator + emulators consume.
+
+Variants per model (Table-2 models get all; timing-only models get the
+first and fourth):
+
+  fp32_infer      (*params, x)                          -> out
+  fp32_train      (*params, x, y, lr)                   -> (*params', loss)
+  acts            (*params, x)                          -> calibration taps
+  approx_infer    (*params, scales, x, lut)             -> out   [8-bit LUT ACU]
+  qat_train       (*params, scales, x, y, lr, lut)      -> (*params', loss)
+  quant12_infer   (*params, scales, x)                  -> out   [12-bit exact]
+  approx12_infer  (*params, scales, x)                  -> out   [12-bit func ACU]
+  qat12_train     (*params, scales, x, y, lr)           -> (*params', loss)
+
+The 8-bit *exact-quantized* column of Table 2 needs no extra executable:
+it is ``approx_infer`` fed the ``exact8`` LUT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as MZ
+from . import multipliers as MU
+from . import nn, train
+
+# 8-bit ACUs whose LUTs ship as artifacts (ablation bench sweeps them all).
+LUT_ACUS = [
+    "exact8", "mul8s_1l2h_like", "mitchell8", "drum8_4", "drum8_6",
+    "trunc_out8_4", "comp_trunc_out8_6", "trunc_in8_2", "perf_pp8_3",
+    "perf_pp8_5", "floor_trunc8_5", "floor_trunc8_6", "floor_trunc8_7",
+]
+
+TRUNC12_K = 4  # the mul12s_2km_like functional ACU
+
+
+def to_hlo_text(lowered) -> str:
+    """HLO-text interchange (see module docstring / aot_recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    )
+
+
+def model_specs(mdef: MZ.ModelDef):
+    params = [spec(p["shape"]) for p in mdef.param_specs]
+    x = spec((MZ.BATCH,) + mdef.input_shape, mdef.input_dtype)
+    y = spec((MZ.BATCH,), "i32")
+    lr = spec((), "f32")
+    scales = spec((mdef.n_scales,), "f32")
+    lut = spec((256, 256), "i32")
+    return params, x, y, lr, scales, lut
+
+
+def variants_for(mdef: MZ.ModelDef):
+    """(variant name, callable, example-arg specs) triples."""
+    params, x, y, lr, scales, lut = model_specs(mdef)
+    v = {
+        "fp32_infer": (
+            train.make_infer(mdef, train.fp32_ctx, False, False),
+            [*params, x],
+        ),
+        "approx_infer": (
+            train.make_infer(mdef, train.lut8_ctx, True, True),
+            [*params, scales, x, lut],
+        ),
+        # Every model gets calibration taps — Table-4 timing also runs the
+        # approx path, which needs calibrated activation scales.
+        "acts": (train.make_acts(mdef), [*params, x]),
+    }
+    if mdef.table2:
+        v["fp32_train"] = (
+            train.make_train_step(mdef, train.fp32_ctx, False, False),
+            [*params, *params, x, y, lr],
+        )
+        v["qat_train"] = (
+            train.make_train_step(mdef, train.lut8_ctx, True, True),
+            [*params, *params, scales, x, y, lr, lut],
+        )
+        v["quant12_infer"] = (
+            train.make_infer(mdef, train.func12_ctx(0), True, False),
+            [*params, scales, x],
+        )
+        v["approx12_infer"] = (
+            train.make_infer(mdef, train.func12_ctx(TRUNC12_K), True, False),
+            [*params, scales, x],
+        )
+        v["qat12_train"] = (
+            train.make_train_step(mdef, train.func12_ctx(TRUNC12_K), True, False),
+            [*params, *params, scales, x, y, lr],
+        )
+    return v
+
+
+def write_weights(mdef: MZ.ModelDef, path: str, seed: int = 0) -> None:
+    params = nn.init_params(mdef.param_specs, seed=seed)
+    with open(path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="", help="comma filter (default: all)")
+    ap.add_argument("--variants", default="", help="comma filter (default: all)")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(f"{out}/hlo", exist_ok=True)
+    os.makedirs(f"{out}/luts", exist_ok=True)
+    os.makedirs(f"{out}/weights", exist_ok=True)
+
+    model_filter = set(filter(None, args.models.split(",")))
+    var_filter = set(filter(None, args.variants.split(",")))
+
+    # --- LUTs + characterization ----------------------------------------
+    luts_meta = {}
+    for acu in LUT_ACUS:
+        path = f"{out}/luts/{acu}.bin"
+        MU.write_lut(acu, path)
+        ch = MU.characterize(acu)
+        luts_meta[acu] = {
+            "file": f"luts/{acu}.bin",
+            "bits": MU.get(acu).bits,
+            "mae_pct": ch["mae_pct"],
+            "mre_pct": ch["mre_pct"],
+            "wce": ch["wce"],
+            "power": ch["power"],
+        }
+        print(f"[lut] {acu:<20} MRE {ch['mre_pct']:.5f}%", flush=True)
+
+    # --- models ----------------------------------------------------------
+    manifest_models = {}
+    for name in MZ.all_models():
+        if model_filter and name not in model_filter:
+            continue
+        mdef = MZ.build(name)
+        write_weights(mdef, f"{out}/weights/{name}.bin")
+        arts = {}
+        for vname, (fn, specs) in variants_for(mdef).items():
+            if var_filter and vname not in var_filter:
+                continue
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"hlo/{name}_{vname}.hlo.txt"
+            with open(f"{out}/{fname}", "w") as f:
+                f.write(text)
+            arts[vname] = fname
+            print(
+                f"[hlo] {name}_{vname}: {len(text)/1e6:.2f} MB "
+                f"({time.time()-t0:.1f}s)",
+                flush=True,
+            )
+        manifest_models[name] = {
+            "paper_row": mdef.paper_row,
+            "kind": mdef.kind,
+            "dataset": mdef.dataset,
+            "input_shape": list(mdef.input_shape),
+            "input_dtype": mdef.input_dtype,
+            "out_dim": mdef.out_dim,
+            "loss": mdef.loss,
+            "metric": mdef.metric,
+            "table2": mdef.table2,
+            "n_scales": mdef.n_scales,
+            "params": mdef.param_specs,
+            "params_count": mdef.params_count,
+            "macs": mdef.macs,
+            "graph": mdef.graph,
+            "weights_file": f"weights/{name}.bin",
+            "artifacts": arts,
+        }
+
+    # Merge with any existing manifest so partial regeneration (--models /
+    # --variants filters) never loses previously-lowered artifacts.
+    manifest = {
+        "version": 1,
+        "batch": MZ.BATCH,
+        "trunc12_k": TRUNC12_K,
+        "luts": luts_meta,
+        "models": manifest_models,
+    }
+    mpath = f"{out}/manifest.json"
+    if os.path.exists(mpath) and (model_filter or var_filter):
+        with open(mpath) as f:
+            old = json.load(f)
+        for name, entry in old.get("models", {}).items():
+            if name not in manifest["models"]:
+                manifest["models"][name] = entry
+            else:
+                merged = dict(entry.get("artifacts", {}))
+                merged.update(manifest["models"][name]["artifacts"])
+                manifest["models"][name]["artifacts"] = merged
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[manifest] {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

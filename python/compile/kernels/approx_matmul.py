@@ -1,0 +1,193 @@
+"""L1 Pallas kernels: approximate integer matmul (LUT-gather + functional).
+
+This is the TPU rethink of the paper's AVX2 hot loop (DESIGN.md
+§Hardware-Adaptation). The paper tiles an im2col GEMM across OpenMP threads
+and vectorizes each scalar multiply as an AVX2 ``vpgatherdd`` into a
+cache-aligned product LUT. Here:
+
+* the LUT (256x256 int32 = 256 KiB at 8-bit) is pinned whole in VMEM via a
+  BlockSpec that maps it to every grid step — the analogue of "populate the
+  CPU cores' cache with the LUTs" (§3.4);
+* the GEMM is blocked over (M, K) on the Pallas grid; each step gathers a
+  (bm, bk, N) product slab from the VMEM LUT on the VPU and accumulates
+  into the (bm, N) output block, giving the HBM<->VMEM schedule the paper
+  expressed with threadblocks;
+* at 12-bit the LUT would be 64 MiB (> VMEM), so — like the paper's
+  C-functional fallback — the ACU is computed in-register as integer
+  shift/mask arithmetic (``functional`` kernel).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers to plain HLO (while-loop +
+dynamic-slice + gather) that both jax and the Rust runtime execute.
+Numerics are identical either way — these are integer kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# --- Block-shape selection (EXPERIMENTS.md §Perf documents the sweep) ----
+#
+# VMEM per grid step at 8-bit = LUT (256 KiB) + x (bm*bk*4) + w (bk*N*4)
+# + out (bm*N*4) + gather slab (bm*bk*N*4, dominant). The *slab budget*
+# controls the trade-off:
+#
+#  * TPU profile (budget ≈ 8 MiB): blocks sized so the working set fits a
+#    16 MiB VMEM with double-buffer headroom, e.g. (512, 144) at N=32.
+#  * CPU-emulation profile (default, 64 MiB): interpret-mode pallas lowers
+#    the grid to an HLO while loop whose per-step slice/update copies
+#    dominate wall-clock — fewer, larger steps are ~100x faster (measured:
+#    59 s -> 0.48 s on the 32768x288x32 conv GEMM going from 32x32 to
+#    2048x288 blocks). Emulation numerics are identical either way.
+#
+# Override with ADAPT_SLAB_BUDGET (bytes) at `make artifacts` time.
+def slab_budget() -> int:
+    return int(os.environ.get("ADAPT_SLAB_BUDGET", 64 * 2**20))
+
+
+def pick_blocks(m: int, k: int, n: int) -> tuple:
+    """Choose (bm, bk) for an (m, k) x (k, n) LUT GEMM under the budget."""
+    budget = slab_budget()
+    bm = 1 << max(0, (min(m, 2048) - 1)).bit_length()  # pow2 >= min(m, 2048)
+    bm = max(8, min(bm, 2048))
+    bk = budget // (bm * n * 4)
+    while bk < 32 and bm > 8:  # shrink rows before starving the K block
+        bm //= 2
+        bk = budget // (bm * n * 4)
+    bk = max(8, min(k, bk))
+    return bm, bk
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to a multiple of ``mult``.
+
+    Zero padding is *numerically safe* for every ACU in the family: all are
+    sign-magnitude behavioral models with approx(0, y) == approx(x, 0) == 0,
+    so padded lanes contribute exactly 0 to the accumulator.
+    """
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _lut_kernel(x_ref, w_ref, lut_ref, o_ref, *, half: int):
+    """One (mi, ki) grid step: o[mi] += sum_k LUT[x[mi,ki,k], w[ki,k,:]]."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...]  # (bm, bk) int32
+    wb = w_ref[...]  # (bk, N) int32
+    lut = lut_ref[...]  # (2h, 2h) int32, whole table resident in VMEM
+    # VPU gather: (bm, bk, N) product slab from the table.
+    prods = lut[xb[:, :, None] + half, wb[None, :, :] + half]
+    o_ref[...] += jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+def lut_matmul(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """Blocked Pallas LUT matmul. xq (M,K) i32, wq (K,N) i32 -> (M,N) i32.
+
+    acc[m,n] = sum_k LUT[xq[m,k] + half, wq[k,n] + half].
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    if bm is None or bk is None:
+        abm, abk = pick_blocks(m, k, n)
+        bm = bm or abm
+        bk = bk or abk
+    half = lut.shape[0] // 2
+
+    xp = _pad_to(_pad_to(xq, 0, bm), 1, bk)
+    wp = _pad_to(wq, 0, bk)
+    mp, kp = xp.shape
+    grid = (mp // bm, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_lut_kernel, half=half),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ki: (mi, ki)),
+            pl.BlockSpec((bk, n), lambda mi, ki: (ki, 0)),
+            # whole LUT at every step: the "keep the table hot" strategy.
+            pl.BlockSpec(lut.shape, lambda mi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda mi, ki: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.int32),
+        interpret=True,
+    )(xp, wp, lut)
+    return out[:m, :]
+
+
+def _functional_kernel(x_ref, w_ref, o_ref, *, trunc_k: int):
+    """Functional-ACU grid step: product = trunc_out(|a|*|b|, k) * sign."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...][:, :, None]  # (bm, bk, 1)
+    wb = w_ref[...][None, :, :]  # (1, bk, N)
+    sign = jnp.sign(xb) * jnp.sign(wb)
+    mask = jnp.int32(~((1 << trunc_k) - 1))
+    prods = sign * ((jnp.abs(xb) * jnp.abs(wb)) & mask)
+    o_ref[...] += jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+def functional_matmul(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    trunc_k: int = 4,
+    bm: int | None = None,
+    bk: int | None = None,
+) -> jnp.ndarray:
+    """Blocked Pallas matmul with the 12-bit functional ACU (trunc_out k).
+
+    Same schedule as :func:`lut_matmul` but the product op is in-register
+    integer arithmetic — no table traffic at all.
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    if bm is None or bk is None:
+        abm, abk = pick_blocks(m, k, n)
+        bm = bm or abm
+        bk = bk or abk
+
+    xp = _pad_to(_pad_to(xq, 0, bm), 1, bk)
+    wp = _pad_to(wq, 0, bk)
+    mp, kp = xp.shape
+    grid = (mp // bm, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_functional_kernel, trunc_k=trunc_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ki: (mi, ki)),
+            pl.BlockSpec((bk, n), lambda mi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda mi, ki: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :]

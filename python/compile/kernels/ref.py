@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas approximate-matmul kernels.
+
+These are the correctness ground truth: small, obviously-right
+implementations with no blocking, no padding tricks, no pallas. The pytest
+suite asserts exact integer equality between kernel and oracle across a
+hypothesis sweep of shapes, and the Rust emulator is cross-checked against
+the same numbers through the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(xq: jnp.ndarray, wq: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Integer matmul where every scalar product is a LUT lookup.
+
+    xq: (M, K) int32 in [-half, half-1]
+    wq: (K, N) int32
+    lut: (2^b, 2^b) int32, biased-unsigned indexing (value + half)
+
+    Returns (M, N) int32 accumulators: acc[m,n] = sum_k LUT[xq[m,k], wq[k,n]].
+    """
+    half = lut.shape[0] // 2
+    # (M, K, N) gather — fine at oracle scale, never used on the hot path.
+    prods = lut[xq[:, :, None] + half, wq[None, :, :] + half]
+    return jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+def _split_sign(a, b):
+    sign = jnp.sign(a) * jnp.sign(b)
+    return jnp.abs(a), jnp.abs(b), sign
+
+
+def trunc_out_product(a: jnp.ndarray, b: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Functional form of multipliers.trunc_out (sign-magnitude, k LSBs
+    zeroed) on int32 arrays. Mirrors python/compile/multipliers.py."""
+    aa, ab, sign = _split_sign(a, b)
+    mask = jnp.int32(~((1 << k) - 1))
+    return sign * ((aa * ab) & mask)
+
+
+def functional_matmul_ref(
+    xq: jnp.ndarray, wq: jnp.ndarray, trunc_k: int = 4
+) -> jnp.ndarray:
+    """Oracle for the LUT-free ("functional") path used at 12-bit, where a
+    4096x4096 LUT would blow VMEM/cache (paper §3.4). Product op is
+    trunc_out(k) — the mul12s_2km_like ACU."""
+    prods = trunc_out_product(xq[:, :, None], wq[None, :, :], trunc_k)
+    return jnp.sum(prods, axis=1, dtype=jnp.int32)

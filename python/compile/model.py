@@ -1,0 +1,262 @@
+"""L2 model zoo — the nine DNNs of the paper's evaluation (Tables 1/2/4).
+
+Scaled-down same-topology stand-ins for the paper's networks (DESIGN.md
+§Substitutions): each keeps the structural feature that stresses a distinct
+AdaPT layer path — residual adds (ResNet), deep VGG stacks, fire modules
+(SqueezeNet), dense concats (DenseNet), multi-branch concat (Inception),
+grouped+depthwise conv with channel shuffle (ShuffleNet), LSTM recurrence,
+VAE/GAN dense decoders.
+
+Each builder returns a :class:`ModelDef`: the IR graph, parameter specs,
+dataset binding and eval config. ``aot.py`` lowers every execution variant
+of each model to HLO text and writes the graph verbatim into
+``manifest.json`` for the Rust emulators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+from . import nn
+from .nn import GraphBuilder
+
+# Eval/train batch shared by all AOT artifacts (static shapes).
+BATCH = 32
+IMG10 = 10  # classes for all synthetic image tasks
+SEQ_LEN = 48
+VOCAB = 512
+EMBED = 32
+LSTM_H = 64
+
+
+@dataclasses.dataclass
+class ModelDef:
+    name: str
+    kind: str  # cnn | lstm | vae | gan
+    dataset: str
+    input_shape: Tuple[int, ...]  # per-sample, no batch
+    input_dtype: str  # f32 | i32
+    graph: List[Dict[str, Any]]
+    param_specs: List[Dict[str, Any]]
+    n_scales: int
+    out_dim: int
+    loss: str  # ce | vae | none
+    metric: str  # top1 | top5 | pixel | none
+    table2: bool  # participates in the retraining experiment
+    paper_row: str  # name of the paper model this stands in for
+
+    @property
+    def params_count(self) -> int:
+        return nn.count_params(self.param_specs)
+
+    @property
+    def macs(self) -> int:
+        return nn.count_macs(self.graph, self.input_shape)
+
+
+def _res_block(g: GraphBuilder, x: int, cin: int, cout: int, stride: int, tag: str) -> int:
+    c1 = g.conv2d(x, f"{tag}.c1", 3, 3, cin, cout, stride=stride, pad=1)
+    r1 = g.relu(c1)
+    c2 = g.conv2d(r1, f"{tag}.c2", 3, 3, cout, cout, stride=1, pad=1)
+    if stride != 1 or cin != cout:
+        sc = g.conv2d(x, f"{tag}.sc", 1, 1, cin, cout, stride=stride, pad=0)
+    else:
+        sc = x
+    return g.relu(g.add(c2, sc))
+
+
+def small_resnet() -> ModelDef:
+    """ResNet50 stand-in: 3 stages of residual blocks on 32x32x3."""
+    g = GraphBuilder((32, 32, 3))
+    x = g.relu(g.conv2d(0, "stem", 3, 3, 3, 16, stride=1, pad=1))
+    x = _res_block(g, x, 16, 16, 1, "s1b1")
+    x = _res_block(g, x, 16, 32, 2, "s2b1")
+    x = _res_block(g, x, 32, 32, 1, "s2b2")
+    x = _res_block(g, x, 32, 64, 2, "s3b1")
+    x = _res_block(g, x, 64, 64, 1, "s3b2")
+    x = g.gap(x)
+    g.linear(x, "fc", 64, IMG10)
+    return ModelDef(
+        "small_resnet", "cnn", "cifar_syn", (32, 32, 3), "f32",
+        g.nodes, g.param_specs, g.n_scales, IMG10, "ce", "top1", True, "ResNet50",
+    )
+
+
+def small_vgg() -> ModelDef:
+    """VGG19 stand-in: plain 3x3 stacks with pooling."""
+    g = GraphBuilder((32, 32, 3))
+    x = g.relu(g.conv2d(0, "c1a", 3, 3, 3, 32, pad=1))
+    x = g.relu(g.conv2d(x, "c1b", 3, 3, 32, 32, pad=1))
+    x = g.avgpool2(x)
+    x = g.relu(g.conv2d(x, "c2a", 3, 3, 32, 64, pad=1))
+    x = g.relu(g.conv2d(x, "c2b", 3, 3, 64, 64, pad=1))
+    x = g.avgpool2(x)
+    x = g.relu(g.conv2d(x, "c3a", 3, 3, 64, 128, pad=1))
+    x = g.avgpool2(x)
+    x = g.flatten(x)
+    x = g.relu(g.linear(x, "fc1", 4 * 4 * 128, 128))
+    g.linear(x, "fc2", 128, IMG10)
+    return ModelDef(
+        "small_vgg", "cnn", "cifar_syn", (32, 32, 3), "f32",
+        g.nodes, g.param_specs, g.n_scales, IMG10, "ce", "top1", True, "VGG19",
+    )
+
+
+def _fire(g: GraphBuilder, x: int, cin: int, sq: int, ex: int, tag: str) -> int:
+    s = g.relu(g.conv2d(x, f"{tag}.sq", 1, 1, cin, sq))
+    e1 = g.relu(g.conv2d(s, f"{tag}.e1", 1, 1, sq, ex))
+    e3 = g.relu(g.conv2d(s, f"{tag}.e3", 3, 3, sq, ex, pad=1))
+    return g.concat([e1, e3])
+
+
+def squeezenet_mini() -> ModelDef:
+    """SqueezeNet stand-in: fire modules, conv classifier head."""
+    g = GraphBuilder((32, 32, 3))
+    x = g.relu(g.conv2d(0, "stem", 3, 3, 3, 32, stride=2, pad=1))
+    x = _fire(g, x, 32, 8, 16, "f1")
+    x = _fire(g, x, 32, 8, 16, "f2")
+    x = g.avgpool2(x)
+    x = _fire(g, x, 32, 16, 32, "f3")
+    x = g.relu(g.conv2d(x, "head", 1, 1, 64, IMG10))
+    g.gap(x)
+    return ModelDef(
+        "squeezenet_mini", "cnn", "imagenet_syn32", (32, 32, 3), "f32",
+        g.nodes, g.param_specs, g.n_scales, IMG10, "ce", "top5", True, "SqueezeNet",
+    )
+
+
+def densenet_mini() -> ModelDef:
+    """DenseNet121 stand-in: two dense blocks (growth 12) + transition."""
+    g = GraphBuilder((32, 32, 3))
+    x = g.relu(g.conv2d(0, "stem", 3, 3, 3, 16, pad=1))
+    ch = 16
+    for bi in range(2):
+        for li in range(3):
+            y = g.relu(g.conv2d(x, f"b{bi}l{li}", 3, 3, ch, 12, pad=1))
+            x = g.concat([x, y])
+            ch += 12
+        if bi == 0:
+            x = g.relu(g.conv2d(x, "trans", 1, 1, ch, ch // 2))
+            ch //= 2
+            x = g.avgpool2(x)
+    x = g.gap(x)
+    g.linear(x, "fc", ch, IMG10)
+    return ModelDef(
+        "densenet_mini", "cnn", "cifar_syn", (32, 32, 3), "f32",
+        g.nodes, g.param_specs, g.n_scales, IMG10, "ce", "top1", False, "DenseNet121",
+    )
+
+
+def _inception_block(g: GraphBuilder, x: int, cin: int, c1: int, c3: int, c5: int, tag: str) -> int:
+    b1 = g.relu(g.conv2d(x, f"{tag}.b1", 1, 1, cin, c1))
+    b3 = g.relu(g.conv2d(x, f"{tag}.b3", 3, 3, cin, c3, pad=1))
+    # 5x5 factored as two 3x3 (Inception-v3 style)
+    b5a = g.relu(g.conv2d(x, f"{tag}.b5a", 3, 3, cin, c5, pad=1))
+    b5 = g.relu(g.conv2d(b5a, f"{tag}.b5b", 3, 3, c5, c5, pad=1))
+    return g.concat([b1, b3, b5])
+
+
+def inception_mini() -> ModelDef:
+    """Inception-v3 stand-in: factored multi-branch concat blocks."""
+    g = GraphBuilder((32, 32, 3))
+    x = g.relu(g.conv2d(0, "stem", 3, 3, 3, 16, stride=1, pad=1))
+    x = _inception_block(g, x, 16, 8, 16, 8, "i1")  # -> 32ch
+    x = g.avgpool2(x)
+    x = _inception_block(g, x, 32, 16, 32, 16, "i2")  # -> 64ch
+    x = g.avgpool2(x)
+    x = g.gap(x)
+    g.linear(x, "fc", 64, IMG10)
+    return ModelDef(
+        "inception_mini", "cnn", "imagenet_syn32", (32, 32, 3), "f32",
+        g.nodes, g.param_specs, g.n_scales, IMG10, "ce", "top1", False, "Inceptionv3",
+    )
+
+
+def _shuffle_unit(g: GraphBuilder, x: int, cin: int, groups: int, tag: str) -> int:
+    """ShuffleNet unit: grouped 1x1 -> shuffle -> depthwise 3x3 -> grouped 1x1,
+    residual add. Exercises grouped + depthwise (separable) conv (§3.3.2)."""
+    p1 = g.relu(g.conv2d(x, f"{tag}.p1", 1, 1, cin, cin, groups=groups))
+    sh = g.channel_shuffle(p1, groups)
+    dw = g.conv2d(sh, f"{tag}.dw", 3, 3, cin, cin, pad=1, groups=cin)
+    p2 = g.conv2d(dw, f"{tag}.p2", 1, 1, cin, cin, groups=groups)
+    return g.relu(g.add(p2, x))
+
+
+def shufflenet_mini() -> ModelDef:
+    g = GraphBuilder((32, 32, 3))
+    x = g.relu(g.conv2d(0, "stem", 3, 3, 3, 32, stride=2, pad=1))
+    x = _shuffle_unit(g, x, 32, 4, "u1")
+    x = _shuffle_unit(g, x, 32, 4, "u2")
+    x = g.avgpool2(x)
+    x = _shuffle_unit(g, x, 32, 4, "u3")
+    x = g.gap(x)
+    g.linear(x, "fc", 32, IMG10)
+    return ModelDef(
+        "shufflenet_mini", "cnn", "imagenet_syn32", (32, 32, 3), "f32",
+        g.nodes, g.param_specs, g.n_scales, IMG10, "ce", "top1", False, "ShuffleNet",
+    )
+
+
+def lstm_imdb() -> ModelDef:
+    """LSTM text classifier (IMDB stand-in): embed -> LSTM -> linear, 2-way."""
+    g = GraphBuilder((SEQ_LEN,))
+    x = g.embedding(0, "embed", VOCAB, EMBED)
+    h = g.lstm(x, "lstm", EMBED, LSTM_H)
+    g.linear(h, "fc", LSTM_H, 2)
+    return ModelDef(
+        "lstm_imdb", "lstm", "imdb_syn", (SEQ_LEN,), "i32",
+        g.nodes, g.param_specs, g.n_scales, 2, "ce", "top1", True, "LSTM-IMDB",
+    )
+
+
+def vae_mnist() -> ModelDef:
+    """MLP VAE (MNIST stand-in). Deterministic z = mu at inference/QAT
+    (DESIGN.md §Substitutions); output = sigmoid reconstruction 28x28."""
+    g = GraphBuilder((28, 28, 1))
+    x = g.flatten(0)
+    h = g.relu(g.linear(x, "enc1", 784, 128))
+    mulv = g.linear(h, "enc2", 128, 64)  # [mu | logvar]
+    mu = g.slice_last(mulv, 0, 32)
+    d = g.relu(g.linear(mu, "dec1", 32, 128))
+    out = g.sigmoid(g.linear(d, "dec2", 128, 784))
+    g.reshape(out, (28, 28, 1))
+    return ModelDef(
+        "vae_mnist", "vae", "mnist_syn", (28, 28, 1), "f32",
+        g.nodes, g.param_specs, g.n_scales, 784, "vae", "pixel", True, "VAE-MNIST",
+    )
+
+
+def gan_fashion() -> ModelDef:
+    """GAN generator (Fashion-MNIST stand-in): z(64) -> 28x28 image.
+    Table-4 timing workload (forward-only, like the paper's GAN row)."""
+    g = GraphBuilder((64,))
+    h = g.relu(g.linear(0, "g1", 64, 128))
+    h = g.relu(g.linear(h, "g2", 128, 256))
+    out = g.tanh(g.linear(h, "g3", 256, 784))
+    g.reshape(out, (28, 28, 1))
+    return ModelDef(
+        "gan_fashion", "gan", "noise64", (64,), "f32",
+        g.nodes, g.param_specs, g.n_scales, 784, "none", "none", False, "Fashion-GAN",
+    )
+
+
+ZOO = {
+    m().name: m
+    for m in [
+        small_resnet, small_vgg, squeezenet_mini, densenet_mini,
+        inception_mini, shufflenet_mini, lstm_imdb, vae_mnist, gan_fashion,
+    ]
+}
+
+
+def build(name: str) -> ModelDef:
+    return ZOO[name]()
+
+
+def table2_models() -> List[str]:
+    return [n for n in ZOO if build(n).table2]
+
+
+def all_models() -> List[str]:
+    return list(ZOO)

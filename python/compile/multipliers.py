@@ -1,0 +1,304 @@
+"""Behavioral approximate-multiplier library (EvoApprox substitute).
+
+The paper evaluates ACUs from the EvoApprox8b library [Mrazek et al., DATE
+2017] — gate-level netlists we do not have. Per the substitution rule we
+implement a *behavioral* family of classic approximate multipliers covering
+the same error-profile space, characterize them (MAE/MRE/power-proxy), and
+pin two aliases to the paper's Table-2 operating points:
+
+  * ``mul8s_1l2h_like``  — 8-bit, high MRE (~4.4 %), low power
+  * ``mul12s_2km_like``  — 12-bit, tiny MRE (~5e-4 %), higher power
+
+Every multiplier here is **pure integer arithmetic** (shifts, masks, adds)
+on numpy int64 arrays. The Rust crate (``rust/src/mult``) mirrors these
+bit-for-bit; ``cargo test`` cross-checks the Rust models against the LUT
+binaries emitted by :func:`write_lut` at ``make artifacts`` time.
+
+Sign convention: operands are signed two's-complement ``bits``-wide values
+in ``[-2^(b-1), 2^(b-1)-1]``. All approximations act on magnitudes; the
+exact product sign is re-applied afterwards (standard for behavioral models
+of sign-magnitude approximate array multipliers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Callable, Dict
+
+import numpy as np
+
+# Fixed-point fraction bits for the Mitchell log multiplier. The Rust mirror
+# uses the same constant; both sides compute in 64-bit integers only.
+MITCHELL_FRAC_BITS = 16
+
+
+def _split_sign(a: np.ndarray, b: np.ndarray):
+    a = a.astype(np.int64)
+    b = b.astype(np.int64)
+    sign = np.sign(a) * np.sign(b)
+    return np.abs(a), np.abs(b), sign
+
+
+def _floor_log2(x: np.ndarray) -> np.ndarray:
+    """floor(log2(x)) for x >= 1, elementwise; 0 maps to 0 (callers mask)."""
+    out = np.zeros_like(x)
+    v = x.copy()
+    for shift in (32, 16, 8, 4, 2, 1):
+        ge = v >= (np.int64(1) << shift)
+        out = np.where(ge, out + shift, out)
+        v = np.where(ge, v >> shift, v)
+    return out
+
+
+def exact(a: np.ndarray, b: np.ndarray, bits: int = 8) -> np.ndarray:
+    """Exact signed multiplier (the accurate ACU)."""
+    return a.astype(np.int64) * b.astype(np.int64)
+
+
+def trunc_in(a: np.ndarray, b: np.ndarray, bits: int = 8, k: int = 2) -> np.ndarray:
+    """Input-truncation multiplier: zero the k magnitude LSBs of both operands."""
+    aa, ab, sign = _split_sign(a, b)
+    mask = ~np.int64((1 << k) - 1)
+    return sign * ((aa & mask) * (ab & mask))
+
+
+def perf_pp(a: np.ndarray, b: np.ndarray, bits: int = 8, k: int = 3) -> np.ndarray:
+    """Partial-product perforation: drop the k lowest partial-product rows
+    (equivalently, zero the k LSBs of the second operand's magnitude)."""
+    aa, ab, sign = _split_sign(a, b)
+    mask = ~np.int64((1 << k) - 1)
+    return sign * (aa * (ab & mask))
+
+
+def trunc_out(a: np.ndarray, b: np.ndarray, bits: int = 8, k: int = 3) -> np.ndarray:
+    """Fixed-width output truncation: exact product with k LSBs zeroed."""
+    aa, ab, sign = _split_sign(a, b)
+    mask = ~np.int64((1 << k) - 1)
+    return sign * ((aa * ab) & mask)
+
+
+def comp_trunc_out(a: np.ndarray, b: np.ndarray, bits: int = 8, k: int = 3) -> np.ndarray:
+    """Output truncation with midpoint error compensation (adds 2^(k-1) to
+    every nonzero truncated product — halves the mean error of trunc_out)."""
+    aa, ab, sign = _split_sign(a, b)
+    p = aa * ab
+    mask = ~np.int64((1 << k) - 1)
+    comp = np.where(p > 0, np.int64(1 << (k - 1)), np.int64(0))
+    return sign * ((p & mask) + comp)
+
+
+def mitchell(a: np.ndarray, b: np.ndarray, bits: int = 8) -> np.ndarray:
+    """Mitchell logarithmic multiplier (1962), integer fixed-point form.
+
+    log2(x) ~= k + frac where k = floor(log2 x) and frac = x/2^k - 1.
+    The product is reconstructed as 2^(ka+kb) * (1 + fa + fb), with the
+    classic wrap when fa+fb >= 1. All arithmetic is int64 shifts/adds with
+    MITCHELL_FRAC_BITS fraction bits — bit-exact across Python and Rust.
+    """
+    F = MITCHELL_FRAC_BITS
+    aa, ab, sign = _split_sign(a, b)
+    nz = (aa > 0) & (ab > 0)
+    sa = np.where(nz, aa, 1)  # avoid log(0); masked out at the end
+    sb = np.where(nz, ab, 1)
+    ka = _floor_log2(sa)
+    kb = _floor_log2(sb)
+    # fraction in F-bit fixed point: (x << F >> k) - (1 << F)
+    fa = ((sa << F) >> ka) - (np.int64(1) << F)
+    fb = ((sb << F) >> kb) - (np.int64(1) << F)
+    ksum = ka + kb
+    fsum = fa + fb
+    one = np.int64(1) << F
+    wrap = fsum >= one
+    # no wrap: p = (1 + fsum) << ksum ; wrap: p = (1 + (fsum - 1)/1... ) << (ksum+1)
+    mant = np.where(wrap, fsum, one + fsum)
+    kk = np.where(wrap, ksum + 1, ksum)
+    # p = mant * 2^kk / 2^F, computed with shifts (kk <= 2*(bits-1)+1 <= 23 for 12b)
+    p = np.where(kk >= F, mant << (kk - F), mant >> (F - kk))
+    return sign * np.where(nz, p, 0)
+
+
+def floor_trunc(a: np.ndarray, b: np.ndarray, bits: int = 8, k: int = 3) -> np.ndarray:
+    """Fixed-width array truncation on the two's-complement product:
+    ``floor(a*b / 2^k) * 2^k`` (arithmetic shift). Unlike the
+    sign-magnitude family this error is **asymmetric** — it always rounds
+    toward -inf, giving every product a negative bias that accumulates
+    across a dot product. This is the error mode that actually damages DNN
+    accuracy (gate-level EvoApprox units behave this way), and the one QAT
+    recovers by re-learning biases."""
+    p = a.astype(np.int64) * b.astype(np.int64)
+    return (p >> k) << k
+
+
+def drum(a: np.ndarray, b: np.ndarray, bits: int = 8, k: int = 4) -> np.ndarray:
+    """DRUM-k [Hashemi et al., ICCAD 2015]: keep the k leading magnitude bits
+    of each operand, set the bit below the kept window (unbiasing trick),
+    multiply exactly, shift back."""
+    aa, ab, sign = _split_sign(a, b)
+
+    def reduce_op(x):
+        nz = x > 0
+        sx = np.where(nz, x, 1)
+        lx = _floor_log2(sx)
+        t = np.maximum(lx - (k - 1), 0)  # bits to drop
+        kept = (sx >> t) << t
+        unbias = np.where(t > 0, np.int64(1) << (t - 1), np.int64(0))
+        return np.where(nz, kept | unbias, 0)
+
+    return sign * (reduce_op(aa) * reduce_op(ab))
+
+
+@dataclasses.dataclass(frozen=True)
+class Multiplier:
+    """A named approximate compute unit (ACU)."""
+
+    name: str
+    bits: int
+    fn: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    #: relative dynamic+static power proxy, normalized so exact8 == 1.0.
+    #: Modeled as (active partial-product bits)/(full array bits); see
+    #: DESIGN.md §Substitutions. Absolute mW figures in the paper are
+    #: netlist-specific and not reproducible behaviorally.
+    power: float
+    #: sign-magnitude models satisfy approx(-a,b) == -approx(a,b); the
+    #: two's-complement floor-truncation family does not.
+    symmetric: bool = True
+
+    def __call__(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return self.fn(a, b)
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+def _registry() -> Dict[str, Multiplier]:
+    m: Dict[str, Multiplier] = {}
+
+    def add(name, bits, fn, power, symmetric=True):
+        m[name] = Multiplier(name, bits, fn, power, symmetric)
+
+    # --- 8-bit family ---------------------------------------------------
+    add("exact8", 8, lambda a, b: exact(a, b, 8), 1.00)
+    add("trunc_in8_2", 8, lambda a, b: trunc_in(a, b, 8, 2), 0.62)
+    add("perf_pp8_3", 8, lambda a, b: perf_pp(a, b, 8, 3), 0.66)
+    add("perf_pp8_5", 8, lambda a, b: perf_pp(a, b, 8, 5), 0.45)
+    add("trunc_out8_4", 8, lambda a, b: trunc_out(a, b, 8, 4), 0.78)
+    add("comp_trunc_out8_6", 8, lambda a, b: comp_trunc_out(a, b, 8, 6), 0.70)
+    add("mitchell8", 8, lambda a, b: mitchell(a, b, 8), 0.40)
+    add("drum8_4", 8, lambda a, b: drum(a, b, 8, 4), 0.52)
+    add("drum8_6", 8, lambda a, b: drum(a, b, 8, 6), 0.74)
+    add("floor_trunc8_5", 8, lambda a, b: floor_trunc(a, b, 8, 5), 0.72, False)
+    add("floor_trunc8_6", 8, lambda a, b: floor_trunc(a, b, 8, 6), 0.65, False)
+    add("floor_trunc8_7", 8, lambda a, b: floor_trunc(a, b, 8, 7), 0.58, False)
+    # --- 12-bit family --------------------------------------------------
+    add("exact12", 12, lambda a, b: exact(a, b, 12), 2.25)
+    add("trunc_out12_4", 12, lambda a, b: trunc_out(a, b, 12, 4), 1.95)
+    add("comp_trunc_out12_4", 12, lambda a, b: comp_trunc_out(a, b, 12, 4), 1.97)
+    add("mitchell12", 12, lambda a, b: mitchell(a, b, 12), 0.90)
+    add("drum12_6", 12, lambda a, b: drum(a, b, 12, 6), 1.15)
+    # --- Table-2 operating-point aliases (see characterize()) -----------
+    # mul8s_1L2H:  MAE 0.081 %, MRE 4.41 %, power 0.301 mW -> floor_trunc8_6
+    #   (measured here: MAE 0.046 %, MRE 5.67 % — the closest family member
+    #    to the paper's high-MRE/low-power corner, and like the gate-level
+    #    unit its error is sign-asymmetric, which is what actually costs
+    #    DNN accuracy; the sign-magnitude models are benign).
+    # mul12s_2KM:  MAE 1.2e-6 %, MRE 4.7e-4 %, power 1.205 mW -> trunc_out12_4
+    #   (tiny relative error, near-exact power).
+    m["mul8s_1l2h_like"] = dataclasses.replace(
+        m["floor_trunc8_6"], name="mul8s_1l2h_like"
+    )
+    m["mul12s_2km_like"] = dataclasses.replace(
+        m["trunc_out12_4"], name="mul12s_2km_like"
+    )
+    return m
+
+
+MULTIPLIERS: Dict[str, Multiplier] = _registry()
+
+
+def get(name: str) -> Multiplier:
+    try:
+        return MULTIPLIERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown multiplier {name!r}; have {sorted(MULTIPLIERS)}"
+        ) from None
+
+
+def build_lut(name: str) -> np.ndarray:
+    """Materialize the full (2^b, 2^b) int32 product LUT for an ACU.
+
+    Row/col index ``i`` encodes operand value ``i - 2^(b-1)`` (i.e. the
+    two's-complement value biased to unsigned), matching the Rust loader
+    and the Pallas kernel's index arithmetic.
+    """
+    mul = get(name)
+    n = 1 << mul.bits
+    half = n // 2
+    vals = np.arange(-half, half, dtype=np.int64)
+    a = vals[:, None]
+    b = vals[None, :]
+    lut = mul.fn(np.broadcast_to(a, (n, n)), np.broadcast_to(b, (n, n)))
+    return lut.astype(np.int32)
+
+
+LUT_MAGIC = 0x4C55_5401  # "LUT\x01"
+
+
+def write_lut(name: str, path: str) -> None:
+    """Serialize a LUT to the simple binary format the Rust side reads:
+
+    header: magic u32 | bits u32 | n u32 | reserved u32   (little-endian)
+    body:   n*n int32 products, row-major, row/col biased-unsigned index.
+    """
+    mul = get(name)
+    lut = build_lut(name)
+    n = lut.shape[0]
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIII", LUT_MAGIC, mul.bits, n, 0))
+        f.write(lut.astype("<i4").tobytes())
+
+
+def characterize(name: str, sample: int | None = None, seed: int = 0) -> dict:
+    """MAE%% / MRE%% / worst-case error of an ACU vs the exact product.
+
+    MAE%% is normalized by the full output range 2^(2b) (the EvoApprox
+    convention the paper quotes); MRE%% averages |err|/|exact| over nonzero
+    exact products. 8-bit units are characterized exhaustively (65k pairs);
+    12-bit by a deterministic 4M-pair sample unless ``sample`` overrides.
+    """
+    mul = get(name)
+    half = 1 << (mul.bits - 1)
+    if mul.bits <= 8 and sample is None:
+        vals = np.arange(-half, half, dtype=np.int64)
+        a = np.broadcast_to(vals[:, None], (2 * half, 2 * half)).ravel()
+        b = np.broadcast_to(vals[None, :], (2 * half, 2 * half)).ravel()
+    else:
+        rng = np.random.RandomState(seed)
+        count = sample or 4_000_000
+        a = rng.randint(-half, half, size=count).astype(np.int64)
+        b = rng.randint(-half, half, size=count).astype(np.int64)
+    ex = a * b
+    ap = mul.fn(a, b)
+    err = np.abs(ap - ex).astype(np.float64)
+    out_range = float(1 << (2 * mul.bits))
+    nz = ex != 0
+    mre = float(np.mean(err[nz] / np.abs(ex[nz]).astype(np.float64))) * 100.0
+    return {
+        "name": name,
+        "bits": mul.bits,
+        "mae_pct": float(err.mean() / out_range) * 100.0,
+        "mre_pct": mre,
+        "wce": int(err.max()),
+        "power": mul.power,
+    }
+
+
+if __name__ == "__main__":  # quick characterization table
+    for nm in sorted(MULTIPLIERS):
+        c = characterize(nm, sample=200_000 if get(nm).bits > 8 else None)
+        print(
+            f"{c['name']:<20} {c['bits']:>2}b  MAE {c['mae_pct']:.5f}%  "
+            f"MRE {c['mre_pct']:.5f}%  WCE {c['wce']:>8}  P {c['power']:.2f}"
+        )

@@ -1,0 +1,573 @@
+"""L2 graph IR + JAX interpreter for the AdaPT-RS model zoo.
+
+A model is a flat SSA graph of typed nodes (dicts), plus a positional
+parameter list. The SAME graph is serialized into ``artifacts/manifest.json``
+and re-interpreted by the Rust baseline/optimized emulators
+(``rust/src/graph``, ``rust/src/emulator``) — one IR, three executors
+(JAX/XLA via AOT artifacts, Rust scalar baseline, Rust blocked engine),
+which is what makes the Table-4 three-way comparison apples-to-apples.
+
+Node schema::
+
+    {"id": int, "op": str, "inputs": [ids], "attrs": {...}, "params": [pidx]}
+
+Node 0 is the network input; the last node is the output. ``params`` holds
+indices into the positional param list (weights first, then bias).
+
+Execution modes (``Ctx.mode``):
+
+* ``fp32``    — plain float forward (the paper's "Native" column);
+* ``approx``  — quantize + route every inner product through the ACU
+  (LUT-gather at 8-bit, functional trunc at 12-bit). The paper's "8bit"
+  exact-quantized column is this same path fed the ``exact8`` LUT;
+* ``acts``    — fp32 forward that also collects every quantizable layer's
+  input tensor (the calibration taps of Fig. 1);
+* QAT: ``approx`` with ``ste=True`` wraps each ACU matmul in a
+  straight-through custom_vjp so gradients flow through fake-quantized
+  exact matmuls (§3.2.1) while the forward pass sees true ACU products.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize as Q
+from .kernels import approx_matmul as AK
+from .kernels import ref as KR
+
+# Route a matmul to the blocked Pallas kernel only when it is big enough to
+# amortize the grid machinery; tiny GEMMs (depthwise groups, gate slices)
+# take the plain-jnp gather, which lowers to the same HLO gather op.
+PALLAS_MIN_FLOPS = 1 << 19
+
+
+# --------------------------------------------------------------------------
+# Execution context
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-forward execution configuration."""
+
+    mode: str = "fp32"  # fp32 | approx | acts
+    bits: int = 8
+    acu: str = "lut"  # lut | func
+    trunc_k: int = 4  # functional-ACU truncation (12-bit path)
+    lut: Optional[jnp.ndarray] = None
+    act_scales: Optional[jnp.ndarray] = None  # f32[L]
+    ste: bool = False  # QAT straight-through backward
+    taps: Optional[List[jnp.ndarray]] = None  # filled in mode=="acts"
+
+    def scale(self, idx: int) -> jnp.ndarray:
+        assert self.act_scales is not None, "approx mode needs act_scales"
+        return self.act_scales[idx]
+
+
+# --------------------------------------------------------------------------
+# ACU matmul core (shared by conv / linear / lstm)
+# --------------------------------------------------------------------------
+
+
+def _acu_matmul_int(xq: jnp.ndarray, wq: jnp.ndarray, ctx: Ctx) -> jnp.ndarray:
+    """Integer ACU matmul dispatch: Pallas kernel for big GEMMs, jnp-gather
+    oracle path for small ones. Both produce identical integers."""
+    m, k = xq.shape
+    n = wq.shape[1]
+    big = m * k * n >= PALLAS_MIN_FLOPS
+    if ctx.acu == "lut":
+        assert ctx.lut is not None, "lut ACU needs ctx.lut"
+        if big:
+            return AK.lut_matmul(xq, wq, ctx.lut)
+        return KR.lut_matmul_ref(xq, wq, ctx.lut)
+    if big:
+        return AK.functional_matmul(xq, wq, trunc_k=ctx.trunc_k)
+    return KR.functional_matmul_ref(xq, wq, trunc_k=ctx.trunc_k)
+
+
+def _approx_matmul_fwd_val(
+    x2d: jnp.ndarray, w: jnp.ndarray, a_scale: jnp.ndarray, ctx: Ctx
+) -> jnp.ndarray:
+    """Dequantized ACU matmul value: dq( acu(q(x), q(w)) )."""
+    w_scale = Q.weight_scale_per_col(w, ctx.bits)
+    xq = Q.quantize(x2d, a_scale, ctx.bits)
+    wq = Q.quantize(w, w_scale[None, :], ctx.bits)
+    acc = _acu_matmul_int(xq, wq, ctx)
+    return acc.astype(jnp.float32) * (a_scale * w_scale)[None, :]
+
+
+@functools.lru_cache(maxsize=None)
+def _ste_matmul_for(bits: int, acu: str, trunc_k: int, use_lut: bool):
+    """Build a custom_vjp ACU matmul for a static (bits, acu, trunc_k) cfg.
+
+    Forward: true ACU products. Backward: gradients of the *exact* matmul
+    over fake-quantized operands with clipped-STE through the quantizers —
+    the paper's fake-quant training scheme.
+    """
+
+    def make_ctx(lut):
+        return Ctx(mode="approx", bits=bits, acu=acu, trunc_k=trunc_k, lut=lut)
+
+    @jax.custom_vjp
+    def ste_matmul(x2d, w, a_scale, lut):
+        return _approx_matmul_fwd_val(x2d, w, a_scale, make_ctx(lut))
+
+    def fwd(x2d, w, a_scale, lut):
+        out = _approx_matmul_fwd_val(x2d, w, a_scale, make_ctx(lut))
+        return out, (x2d, w, a_scale, lut)
+
+    def bwd(res, g):
+        x2d, w, a_scale, lut = res
+        w_scale = Q.weight_scale_per_col(w, bits)
+        fx = Q.fake_quant(x2d, a_scale, bits)
+        fw = Q.fake_quant(w, w_scale[None, :], bits)
+        # clipped STE masks
+        x_mask = (jnp.abs(x2d) <= a_scale * float(Q.qmax_for(bits))).astype(g.dtype)
+        dx = (g @ fw.T) * x_mask
+        dw = fx.T @ g
+        return dx, dw, jnp.zeros_like(a_scale), jnp.zeros_like(lut)
+
+    ste_matmul.defvjp(fwd, bwd)
+    if use_lut:
+        return ste_matmul
+    # functional variant has no LUT operand; close over a dummy.
+    dummy = jnp.zeros((2, 2), jnp.int32)
+    return lambda x2d, w, a_scale: ste_matmul(x2d, w, a_scale, dummy)
+
+
+def dense_core(
+    x2d: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    scale_idx: int,
+    ctx: Ctx,
+) -> jnp.ndarray:
+    """The one quantizable primitive: (M,K)@(K,N)+b under the active mode."""
+    if ctx.mode == "acts":
+        assert ctx.taps is not None
+        ctx.taps.append(x2d)
+    if ctx.mode in ("fp32", "acts"):
+        out = x2d @ w
+    else:
+        a_scale = ctx.scale(scale_idx)
+        if ctx.ste:
+            fn = _ste_matmul_for(ctx.bits, ctx.acu, ctx.trunc_k, ctx.acu == "lut")
+            out = fn(x2d, w, a_scale, ctx.lut) if ctx.acu == "lut" else fn(
+                x2d, w, a_scale
+            )
+        else:
+            out = _approx_matmul_fwd_val(x2d, w, a_scale, ctx)
+    if b is not None:
+        out = out + b[None, :]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Spatial helpers
+# --------------------------------------------------------------------------
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """NHWC -> (N, Ho, Wo, kh*kw*C) patches; feature order (dy, dx, c).
+
+    The Rust mirror (``tensor::im2col``) uses the identical ordering; the
+    weight tensor (kh, kw, cin, cout) flattens to (kh*kw*cin, cout) in the
+    same (dy, dx, c) order, so patches @ w_flat == conv2d.
+    """
+    n, h, w_, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_ + 2 * pad - kw) // stride + 1
+    cols = [
+        xp[:, dy : dy + ho * stride : stride, dx : dx + wo * stride : stride, :]
+        for dy in range(kh)
+        for dx in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_forward(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int,
+    pad: int,
+    groups: int,
+    scale_idx: int,
+    ctx: Ctx,
+) -> jnp.ndarray:
+    """Grouped 2-D convolution as im2col + ACU GEMM (paper §3.3.1/Fig. 3).
+
+    x (N,H,W,Cin), w (kh,kw,Cin/groups,Cout), b (Cout) -> (N,Ho,Wo,Cout).
+    All groups share the activation scale (one tensor, one scale); weight
+    scales are per output channel inside each group's GEMM.
+    """
+    n, _, _, cin = x.shape
+    kh, kw, cin_g, cout = w.shape
+    assert cin_g * groups == cin, (w.shape, cin, groups)
+    cout_g = cout // groups
+
+    # Collect the calibration tap / quantize ONCE on the conv input — the
+    # scale belongs to the layer input, not to each group's patch matrix.
+    if ctx.mode == "acts":
+        assert ctx.taps is not None
+        ctx.taps.append(x.reshape(-1, cin))
+
+    outs = []
+    for g in range(groups):
+        xg = x[..., g * cin_g : (g + 1) * cin_g]
+        wg = w[..., g * cout_g : (g + 1) * cout_g]
+        patches = im2col(xg, kh, kw, stride, pad)
+        nb, ho, wo, kf = patches.shape
+        p2 = patches.reshape(nb * ho * wo, kf)
+        w2 = wg.reshape(kh * kw * cin_g, cout_g)
+        bg = b[g * cout_g : (g + 1) * cout_g]
+        # dense_core in acts mode would tap p2; we already tapped x, so run
+        # the group GEMMs in plain fp32 when collecting.
+        if ctx.mode == "acts":
+            o2 = p2 @ w2 + bg[None, :]
+        else:
+            o2 = dense_core(p2, w2, bg, scale_idx, ctx)
+        outs.append(o2.reshape(nb, ho, wo, cout_g))
+    return outs[0] if groups == 1 else jnp.concatenate(outs, axis=-1)
+
+
+def avgpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 average pool, NHWC. Odd trailing rows/cols dropped."""
+    n, h, w, c = x.shape
+    ho, wo = h // 2, w // 2
+    x = x[:, : ho * 2, : wo * 2, :].reshape(n, ho, 2, wo, 2, c)
+    return jnp.mean(x, axis=(2, 4))
+
+
+def lstm_forward(
+    xs: jnp.ndarray,
+    wx: jnp.ndarray,
+    wh: jnp.ndarray,
+    b: jnp.ndarray,
+    scale_x: int,
+    scale_h: int,
+    ctx: Ctx,
+) -> jnp.ndarray:
+    """LSTM over (N, T, In) -> final hidden state (N, H). Gate order i,f,g,o.
+
+    Both the input and recurrent GEMMs route through the ACU (§3.3.4: the
+    RNN layers "utilize our custom Linear layer thus making [them]
+    approximation compatible"). In ``acts`` mode the taps are the
+    time-flattened x and h trajectories.
+    """
+    n, t, _ = xs.shape
+    hsz = wh.shape[0]
+
+    if ctx.mode == "acts":
+        # Tap x over all timesteps now; tap the fp32 h trajectory after the
+        # scan below (h depends on the forward itself, so calibrate on the
+        # fp32 trajectory, as the paper does with its fp32 histogram pass).
+        assert ctx.taps is not None
+        ctx.taps.append(xs.reshape(n * t, -1))
+        tap_h: List[jnp.ndarray] = []
+
+    def step(carry, x_t):
+        h, c = carry
+        if ctx.mode in ("fp32", "acts"):
+            gates = x_t @ wx + h @ wh + b[None, :]
+        else:
+            gx = dense_core(x_t, wx, None, scale_x, ctx)
+            gh = dense_core(h, wh, None, scale_h, ctx)
+            gates = gx + gh + b[None, :]
+        i = jax.nn.sigmoid(gates[:, 0 * hsz : 1 * hsz])
+        f = jax.nn.sigmoid(gates[:, 1 * hsz : 2 * hsz])
+        g = jnp.tanh(gates[:, 2 * hsz : 3 * hsz])
+        o = jax.nn.sigmoid(gates[:, 3 * hsz : 4 * hsz])
+        c2 = f * c + i * g
+        h2 = o * jnp.tanh(c2)
+        return (h2, c2), h2
+
+    h0 = jnp.zeros((n, hsz), jnp.float32)
+    c0 = jnp.zeros((n, hsz), jnp.float32)
+    if ctx.mode in ("fp32", "acts"):
+        (h, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xs, 0, 1))
+        if ctx.mode == "acts":
+            ctx.taps.append(jnp.swapaxes(hs, 0, 1).reshape(n * t, hsz))
+        return h
+    # approx path: python loop (T static) — pallas_call inside lax.scan
+    # would re-trace per step anyway under interpret mode.
+    h, c = h0, c0
+    for ti in range(t):
+        (h, c), _ = step((h, c), xs[:, ti, :])
+    return h
+
+
+# --------------------------------------------------------------------------
+# Graph interpreter
+# --------------------------------------------------------------------------
+
+
+def forward(
+    graph: List[Dict[str, Any]],
+    params: Sequence[jnp.ndarray],
+    x: jnp.ndarray,
+    ctx: Ctx,
+) -> jnp.ndarray:
+    """Execute the IR. Returns the last node's value."""
+    vals: Dict[int, jnp.ndarray] = {0: x}
+    for node in graph:
+        nid = node["id"]
+        if nid == 0:
+            continue
+        op = node["op"]
+        at = node.get("attrs", {})
+        ins = [vals[i] for i in node.get("inputs", [])]
+        ps = [params[i] for i in node.get("params", [])]
+        if op == "conv2d":
+            v = conv2d_forward(
+                ins[0], ps[0], ps[1], at["stride"], at["pad"], at["groups"],
+                at["scale_idx"], ctx,
+            )
+        elif op == "linear":
+            v = dense_core(ins[0], ps[0], ps[1], at["scale_idx"], ctx)
+        elif op == "lstm":
+            v = lstm_forward(
+                ins[0], ps[0], ps[1], ps[2], at["scale_idx"], at["scale_idx2"], ctx
+            )
+        elif op == "embedding":
+            v = ps[0][ins[0].astype(jnp.int32)]
+        elif op == "relu":
+            v = jax.nn.relu(ins[0])
+        elif op == "sigmoid":
+            v = jax.nn.sigmoid(ins[0])
+        elif op == "tanh":
+            v = jnp.tanh(ins[0])
+        elif op == "avgpool2":
+            v = avgpool2(ins[0])
+        elif op == "gap":
+            v = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "flatten":
+            v = ins[0].reshape(ins[0].shape[0], -1)
+        elif op == "add":
+            v = ins[0] + ins[1]
+        elif op == "concat":
+            v = jnp.concatenate(ins, axis=-1)
+        elif op == "channel_shuffle":
+            g = at["groups"]
+            n_, h_, w_, c_ = ins[0].shape
+            v = (
+                ins[0]
+                .reshape(n_, h_, w_, g, c_ // g)
+                .swapaxes(3, 4)
+                .reshape(n_, h_, w_, c_)
+            )
+        elif op == "slice_last":
+            v = ins[0][..., at["start"] : at["end"]]
+        elif op == "reshape":
+            v = ins[0].reshape((ins[0].shape[0],) + tuple(at["shape"]))
+        else:
+            raise ValueError(f"unknown op {op!r}")
+        vals[nid] = v
+    return vals[graph[-1]["id"]]
+
+
+# --------------------------------------------------------------------------
+# Graph builder
+# --------------------------------------------------------------------------
+
+
+class GraphBuilder:
+    """Tiny helper to author IR graphs + param specs + scale bookkeeping."""
+
+    def __init__(self, input_shape: Tuple[int, ...]):
+        self.nodes: List[Dict[str, Any]] = [
+            {"id": 0, "op": "input", "inputs": [], "attrs": {"shape": list(input_shape)}}
+        ]
+        self.param_specs: List[Dict[str, Any]] = []
+        self.n_scales = 0
+        self._next = 1
+
+    def _param(self, name: str, shape: Tuple[int, ...], init: str, fan_in: int) -> int:
+        self.param_specs.append(
+            {"name": name, "shape": list(shape), "init": init, "fan_in": fan_in}
+        )
+        return len(self.param_specs) - 1
+
+    def _node(self, op: str, inputs: List[int], attrs=None, params=None) -> int:
+        nid = self._next
+        self._next += 1
+        self.nodes.append(
+            {
+                "id": nid,
+                "op": op,
+                "inputs": inputs,
+                "attrs": attrs or {},
+                "params": params or [],
+            }
+        )
+        return nid
+
+    def conv2d(self, x, name, kh, kw, cin, cout, stride=1, pad=0, groups=1) -> int:
+        fan_in = kh * kw * cin // groups
+        wp = self._param(f"{name}.w", (kh, kw, cin // groups, cout), "he", fan_in)
+        bp = self._param(f"{name}.b", (cout,), "zeros", fan_in)
+        sidx = self.n_scales
+        self.n_scales += 1
+        return self._node(
+            "conv2d",
+            [x],
+            {
+                "kh": kh, "kw": kw, "cin": cin, "cout": cout,
+                "stride": stride, "pad": pad, "groups": groups,
+                "scale_idx": sidx, "name": name,
+            },
+            [wp, bp],
+        )
+
+    def linear(self, x, name, din, dout) -> int:
+        wp = self._param(f"{name}.w", (din, dout), "he", din)
+        bp = self._param(f"{name}.b", (dout,), "zeros", din)
+        sidx = self.n_scales
+        self.n_scales += 1
+        return self._node(
+            "linear", [x],
+            {"din": din, "dout": dout, "scale_idx": sidx, "name": name},
+            [wp, bp],
+        )
+
+    def lstm(self, x, name, din, hidden) -> int:
+        wxp = self._param(f"{name}.wx", (din, 4 * hidden), "glorot", din)
+        whp = self._param(f"{name}.wh", (hidden, 4 * hidden), "glorot", hidden)
+        bp = self._param(f"{name}.b", (4 * hidden,), "zeros", din)
+        sx = self.n_scales
+        sh = self.n_scales + 1
+        self.n_scales += 2
+        return self._node(
+            "lstm", [x],
+            {"din": din, "hidden": hidden, "scale_idx": sx, "scale_idx2": sh,
+             "name": name},
+            [wxp, whp, bp],
+        )
+
+    def embedding(self, x, name, vocab, dim) -> int:
+        tp = self._param(f"{name}.table", (vocab, dim), "embed", dim)
+        return self._node("embedding", [x], {"vocab": vocab, "dim": dim}, [tp])
+
+    def relu(self, x):
+        return self._node("relu", [x])
+
+    def sigmoid(self, x):
+        return self._node("sigmoid", [x])
+
+    def tanh(self, x):
+        return self._node("tanh", [x])
+
+    def avgpool2(self, x):
+        return self._node("avgpool2", [x])
+
+    def gap(self, x):
+        return self._node("gap", [x])
+
+    def flatten(self, x):
+        return self._node("flatten", [x])
+
+    def add(self, a, b):
+        return self._node("add", [a, b])
+
+    def concat(self, xs):
+        return self._node("concat", list(xs))
+
+    def channel_shuffle(self, x, groups):
+        return self._node("channel_shuffle", [x], {"groups": groups})
+
+    def slice_last(self, x, start, end):
+        return self._node("slice_last", [x], {"start": start, "end": end})
+
+    def reshape(self, x, shape):
+        return self._node("reshape", [x], {"shape": list(shape)})
+
+
+def init_params(specs: List[Dict[str, Any]], seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic param init from the spec list (he / glorot / zeros)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, sp in enumerate(specs):
+        k = jax.random.fold_in(key, i)
+        shape = tuple(sp["shape"])
+        fi = max(sp["fan_in"], 1)
+        if sp["init"] == "zeros":
+            v = jnp.zeros(shape, jnp.float32)
+        elif sp["init"] == "he":
+            v = jax.random.normal(k, shape, jnp.float32) * (2.0 / fi) ** 0.5
+        elif sp["init"] == "glorot":
+            v = jax.random.normal(k, shape, jnp.float32) * (1.0 / fi) ** 0.5
+        elif sp["init"] == "embed":
+            v = jax.random.normal(k, shape, jnp.float32) * 0.1
+        else:
+            raise ValueError(sp["init"])
+        out.append(v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Analytic specs (Table 1)
+# --------------------------------------------------------------------------
+
+
+def count_params(specs: List[Dict[str, Any]]) -> int:
+    total = 0
+    for sp in specs:
+        n = 1
+        for d in sp["shape"]:
+            n *= d
+        total += n
+    return total
+
+
+def count_macs(graph: List[Dict[str, Any]], input_shape: Tuple[int, ...]) -> int:
+    """MAC count per sample, walking the IR with shape propagation."""
+    shapes: Dict[int, Tuple[int, ...]] = {0: tuple(input_shape)}
+    macs = 0
+    for node in graph:
+        nid, op, at = node["id"], node["op"], node.get("attrs", {})
+        if nid == 0:
+            continue
+        ins = [shapes[i] for i in node["inputs"]]
+        if op == "conv2d":
+            h, w = ins[0][0], ins[0][1]
+            ho = (h + 2 * at["pad"] - at["kh"]) // at["stride"] + 1
+            wo = (w + 2 * at["pad"] - at["kw"]) // at["stride"] + 1
+            macs += (
+                ho * wo * at["cout"] * at["kh"] * at["kw"] * at["cin"] // at["groups"]
+            )
+            shapes[nid] = (ho, wo, at["cout"])
+        elif op == "linear":
+            macs += at["din"] * at["dout"]
+            shapes[nid] = ins[0][:-1] + (at["dout"],)
+        elif op == "lstm":
+            t = ins[0][0]
+            macs += t * 4 * at["hidden"] * (at["din"] + at["hidden"])
+            shapes[nid] = (at["hidden"],)
+        elif op == "embedding":
+            shapes[nid] = ins[0] + (at["dim"],)
+        elif op == "avgpool2":
+            h, w, c = ins[0]
+            shapes[nid] = (h // 2, w // 2, c)
+        elif op == "gap":
+            shapes[nid] = (ins[0][-1],)
+        elif op == "flatten":
+            n = 1
+            for d in ins[0]:
+                n *= d
+            shapes[nid] = (n,)
+        elif op == "concat":
+            c = sum(s[-1] for s in ins)
+            shapes[nid] = ins[0][:-1] + (c,)
+        elif op == "slice_last":
+            shapes[nid] = ins[0][:-1] + (at["end"] - at["start"],)
+        elif op == "reshape":
+            shapes[nid] = tuple(at["shape"])
+        else:  # elementwise / add / shuffle keep shape
+            shapes[nid] = ins[0]
+    return macs

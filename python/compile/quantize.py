@@ -1,0 +1,72 @@
+"""Affine quantization primitives shared by the L2 model zoo.
+
+Numeric contract (mirrored bit-for-bit by ``rust/src/quant``):
+
+* symmetric signed quantization, zero_point = 0 (paper eq. (1)/(2) with
+  B = 0; the calibrators still learn the range exactly as §3.2.1 does);
+* activations: per-tensor scale, learned offline by a histogram calibrator;
+* weights: per-output-channel scale, ``max|w_c| / qmax`` (§3.2.1: "weight
+  ranges are per channel while activation ranges are per tensor");
+* rounding: ``floor(x/s + 0.5)`` — round-half-up, chosen over
+  round-nearest-even because it is trivially bit-identical between XLA HLO
+  and the Rust emulator's f32 ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax_for(bits: int) -> int:
+    """Largest representable magnitude, e.g. 127 for 8-bit."""
+    return (1 << (bits - 1)) - 1
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Real -> int (int32 storage). ``scale`` broadcasts against ``x``."""
+    q = jnp.floor(x / scale + 0.5)
+    qm = float(qmax_for(bits))
+    return jnp.clip(q, -qm, qm).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def weight_scale_per_col(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-output-channel scale for a (K, N) weight matrix -> shape (N,).
+
+    Computed in-graph (not calibrated): the weight range is known exactly.
+    """
+    amax = jnp.max(jnp.abs(w), axis=0)
+    return jnp.maximum(amax, 1e-12) / float(qmax_for(bits))
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize (the paper's "fake quantization module")."""
+    return dequantize(quantize(x, scale, bits), scale)
+
+
+@jax.custom_vjp
+def fake_quant_ste(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quant with a straight-through estimator backward.
+
+    Forward: rounded/clipped quant-dequant. Backward: identity inside the
+    representable range, zero outside (the clipped-STE of QAT practice).
+    """
+    return fake_quant(x, scale, bits)
+
+
+def _fq_fwd(x, scale, bits):
+    return fake_quant(x, scale, bits), (x, scale, bits)
+
+
+def _fq_bwd(res, g):
+    x, scale, bits = res
+    lim = scale * float(qmax_for(bits))
+    mask = (jnp.abs(x) <= lim).astype(g.dtype)
+    return (g * mask, None, None)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)

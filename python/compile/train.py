@@ -1,0 +1,138 @@
+"""Loss functions and AOT train-step builders (fp32 + approximation-aware).
+
+The QAT step is the paper's §3.2.1: forward through the ACUs, backward
+through straight-through fake-quant (``nn._ste_matmul_for``), plain SGD —
+the paper retrains with SGD, lr 1e-4, for ~10 % of the schedule. The whole
+step (grads + update) is one XLA executable; the Rust coordinator owns the
+schedule (epochs, lr, subset) and just feeds batches.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .model import ModelDef
+
+
+def loss_value(mdef: ModelDef, out: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Scalar training loss for a model family."""
+    if mdef.loss == "ce":
+        logp = jax.nn.log_softmax(out, axis=-1)
+        n = out.shape[0]
+        return -jnp.mean(logp[jnp.arange(n), y])
+    if mdef.loss == "vae":
+        # Deterministic-AE objective (z = mu, DESIGN.md §Substitutions):
+        # mean binary cross-entropy between reconstruction and input.
+        r = jnp.clip(out, 1e-6, 1.0 - 1e-6)
+        t = jnp.clip(x, 0.0, 1.0)
+        return -jnp.mean(t * jnp.log(r) + (1.0 - t) * jnp.log(1.0 - r))
+    raise ValueError(f"model {mdef.name} has no trainable loss")
+
+
+def make_infer(mdef: ModelDef, ctx_fn: Callable[..., nn.Ctx], with_scales: bool, with_lut: bool):
+    """Build a flat-positional inference callable for AOT lowering.
+
+    Signature: (*params[, act_scales], x[, lut]) -> (out,)
+    """
+    np_ = len(mdef.param_specs)
+
+    def fn(*args):
+        params = list(args[:np_])
+        rest = list(args[np_:])
+        scales = rest.pop(0) if with_scales else None
+        x = rest.pop(0)
+        lut = rest.pop(0) if with_lut else None
+        ctx = ctx_fn(act_scales=scales, lut=lut)
+        return (nn.forward(mdef.graph, params, x, ctx),)
+
+    return fn
+
+
+def make_acts(mdef: ModelDef):
+    """Calibration-tap executable: (*params, x) -> tuple of L tap tensors.
+
+    Tap i is the (flattened-to-2D) fp32 input of the quantizable matmul
+    that consumes act_scales[i] — histogrammed by the Rust calibrators.
+    """
+    np_ = len(mdef.param_specs)
+
+    def fn(*args):
+        params = list(args[:np_])
+        x = args[np_]
+        ctx = nn.Ctx(mode="acts", taps=[])
+        out = nn.forward(mdef.graph, params, x, ctx)
+        assert len(ctx.taps) == mdef.n_scales, (len(ctx.taps), mdef.n_scales)
+        # Anchor the network output into tap 0 with zero weight so XLA
+        # cannot DCE the last layer's parameters (the Rust caller always
+        # supplies the full positional signature).
+        taps = list(ctx.taps)
+        taps[0] = taps[0] + 0.0 * jnp.sum(out).astype(taps[0].dtype)
+        return tuple(taps)
+
+    return fn
+
+
+#: Heavy-ball momentum baked into every train-step executable. The paper
+#: retrains with SGD; momentum is the standard stabilizer and is required
+#: for the small-init synthetic tasks to converge in a few hundred steps.
+MOMENTUM = 0.9
+
+
+def make_train_step(mdef: ModelDef, ctx_fn, with_scales: bool, with_lut: bool):
+    """One SGD-with-momentum step as a single executable.
+
+    Signature:
+        (*params, *velocities[, act_scales], x, y, lr[, lut])
+            -> (*new_params, *new_velocities, loss)
+
+    The Rust coordinator owns the velocity buffers (initialized to zero)
+    and round-trips them exactly like the parameters.
+    """
+    np_ = len(mdef.param_specs)
+
+    def fn(*args):
+        params = list(args[:np_])
+        vels = list(args[np_ : 2 * np_])
+        rest = list(args[2 * np_ :])
+        scales = rest.pop(0) if with_scales else None
+        x = rest.pop(0)
+        y = rest.pop(0)
+        lr = rest.pop(0)
+        lut = rest.pop(0) if with_lut else None
+
+        def loss_fn(plist: Sequence[jnp.ndarray]) -> jnp.ndarray:
+            ctx = ctx_fn(act_scales=scales, lut=lut, ste=True)
+            out = nn.forward(mdef.graph, list(plist), x, ctx)
+            return loss_value(mdef, out, x, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # Anchor every declared argument into the output: XLA would
+        # otherwise DCE unused parameters (e.g. labels in the VAE loss) and
+        # the Rust caller feeds the full uniform signature.
+        loss = loss + 0.0 * y.astype(jnp.float32).sum()
+        new_vels = [MOMENTUM * v + g for v, g in zip(vels, grads)]
+        new_params = [p - lr * v for p, v in zip(params, new_vels)]
+        return (*new_params, *new_vels, loss)
+
+    return fn
+
+
+def fp32_ctx(**kw) -> nn.Ctx:
+    return nn.Ctx(mode="fp32")
+
+
+def lut8_ctx(act_scales=None, lut=None, ste: bool = False) -> nn.Ctx:
+    return nn.Ctx(mode="approx", bits=8, acu="lut", lut=lut,
+                  act_scales=act_scales, ste=ste)
+
+
+def func12_ctx(trunc_k: int):
+    def make(act_scales=None, lut=None, ste: bool = False) -> nn.Ctx:
+        return nn.Ctx(mode="approx", bits=12, acu="func", trunc_k=trunc_k,
+                      act_scales=act_scales, ste=ste)
+
+    return make

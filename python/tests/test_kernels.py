@@ -1,0 +1,119 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal of the compile path: exact integer equality
+between the blocked Pallas kernels and the unblocked oracles across a
+hypothesis sweep of shapes, paddings and value ranges.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import multipliers as MU
+from compile.kernels import approx_matmul as AK
+from compile.kernels import ref as KR
+
+LUT8 = {name: jnp.asarray(MU.build_lut(name)) for name in ["exact8", "mitchell8"]}
+
+
+def rand_q(rng, shape, half):
+    return jnp.asarray(rng.randint(-half, half, size=shape).astype(np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_matmul_matches_oracle(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    xq = rand_q(rng, (m, k), 128)
+    wq = rand_q(rng, (k, n), 128)
+    got = AK.lut_matmul(xq, wq, LUT8["mitchell8"])
+    want = KR.lut_matmul_ref(xq, wq, LUT8["mitchell8"])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 50),
+    k=st.integers(1, 60),
+    n=st.integers(1, 30),
+    trunc_k=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_functional_matmul_matches_oracle(m, k, n, trunc_k, seed):
+    rng = np.random.RandomState(seed)
+    xq = rand_q(rng, (m, k), 2048)
+    wq = rand_q(rng, (k, n), 2048)
+    got = AK.functional_matmul(xq, wq, trunc_k=trunc_k)
+    want = KR.functional_matmul_ref(xq, wq, trunc_k=trunc_k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bk", [(8, 8), (16, 32), (32, 32), (64, 16)])
+def test_block_shape_invariance(bm, bk):
+    """The result must not depend on the BlockSpec tiling."""
+    rng = np.random.RandomState(0)
+    xq = rand_q(rng, (37, 53), 128)
+    wq = rand_q(rng, (53, 11), 128)
+    base = KR.lut_matmul_ref(xq, wq, LUT8["exact8"])
+    got = AK.lut_matmul(xq, wq, LUT8["exact8"], bm=bm, bk=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_exact_lut_equals_integer_matmul():
+    rng = np.random.RandomState(1)
+    xq = rand_q(rng, (20, 33), 128)
+    wq = rand_q(rng, (33, 9), 128)
+    got = AK.lut_matmul(xq, wq, LUT8["exact8"])
+    want = jnp.asarray(np.asarray(xq) @ np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_zero_padding_contributes_nothing():
+    """Padding rows/cols (the _pad_to path) must not leak into results:
+    compare a shape that forces padding against the unpadded oracle."""
+    rng = np.random.RandomState(2)
+    xq = rand_q(rng, (33, 35), 128)  # pads to 64 x 64 at bm=bk=32
+    wq = rand_q(rng, (35, 7), 128)
+    got = AK.lut_matmul(xq, wq, LUT8["mitchell8"])
+    want = KR.lut_matmul_ref(xq, wq, LUT8["mitchell8"])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_negative_extremes():
+    """-128 (the most negative int8) must index the LUT correctly."""
+    xq = jnp.full((4, 8), -128, jnp.int32)
+    wq = jnp.full((8, 3), -128, jnp.int32)
+    got = AK.lut_matmul(xq, wq, LUT8["exact8"])
+    assert int(np.asarray(got)[0, 0]) == 8 * 128 * 128
+
+
+def test_pick_blocks_respects_slab_budget(monkeypatch):
+    monkeypatch.setenv("ADAPT_SLAB_BUDGET", str(8 * 2**20))  # TPU profile
+    for m, k, n in [(32768, 288, 32), (256, 2048, 128), (32, 96, 256)]:
+        bm, bk = AK.pick_blocks(m, k, n)
+        slab = bm * bk * n * 4
+        assert slab <= 8 * 2**20, (m, k, n, bm, bk, slab)
+        assert bm >= 8 and bk >= 8
+
+
+def test_pick_blocks_defaults_to_cpu_profile(monkeypatch):
+    monkeypatch.delenv("ADAPT_SLAB_BUDGET", raising=False)
+    bm, bk = AK.pick_blocks(32768, 288, 32)
+    # CPU-emulation profile favours few grid steps.
+    assert bm >= 1024
+    assert bk >= 128
+
+
+def test_lut_matmul_auto_blocks_equal_explicit():
+    rng = np.random.RandomState(5)
+    xq = rand_q(rng, (100, 60), 128)
+    wq = rand_q(rng, (60, 10), 128)
+    auto = AK.lut_matmul(xq, wq, LUT8["mitchell8"])
+    explicit = AK.lut_matmul(xq, wq, LUT8["mitchell8"], bm=16, bk=16)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))

@@ -1,0 +1,127 @@
+"""L2 model-zoo shape/consistency tests + fp32-vs-approx sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as MZ
+from compile import multipliers as MU
+from compile import nn, train
+
+BATCH = 4  # small batch for tracing speed; AOT uses MZ.BATCH
+
+
+def make_input(mdef, rng):
+    shape = (BATCH,) + mdef.input_shape
+    if mdef.input_dtype == "i32":
+        return jnp.asarray(rng.randint(0, 500, size=shape).astype(np.int32))
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", MZ.all_models())
+def test_fp32_forward_shapes(name):
+    mdef = MZ.build(name)
+    params = nn.init_params(mdef.param_specs, seed=0)
+    x = make_input(mdef, np.random.RandomState(0))
+    out = nn.forward(mdef.graph, params, x, nn.Ctx(mode="fp32"))
+    assert out.shape[0] == BATCH
+    flat = int(np.prod(out.shape[1:]))
+    assert flat == mdef.out_dim, (out.shape, mdef.out_dim)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("name", MZ.table2_models())
+def test_acts_taps_match_scale_count(name):
+    mdef = MZ.build(name)
+    params = nn.init_params(mdef.param_specs, seed=0)
+    x = make_input(mdef, np.random.RandomState(1))
+    ctx = nn.Ctx(mode="acts", taps=[])
+    nn.forward(mdef.graph, params, x, ctx)
+    assert len(ctx.taps) == mdef.n_scales
+
+
+@pytest.mark.parametrize("name", ["small_vgg", "vae_mnist", "lstm_imdb"])
+def test_exact_lut_approx_close_to_fp32(name):
+    """Quantized-with-exact-multiplier must track fp32 within quant noise."""
+    mdef = MZ.build(name)
+    params = nn.init_params(mdef.param_specs, seed=0)
+    rng = np.random.RandomState(2)
+    x = make_input(mdef, rng)
+    fp = nn.forward(mdef.graph, params, x, nn.Ctx(mode="fp32"))
+    # crude per-layer scales from the fp32 taps (max calibration)
+    ctx = nn.Ctx(mode="acts", taps=[])
+    nn.forward(mdef.graph, params, x, ctx)
+    scales = jnp.asarray(
+        [float(jnp.max(jnp.abs(t))) / 127.0 + 1e-9 for t in ctx.taps], jnp.float32
+    )
+    lut = jnp.asarray(MU.build_lut("exact8"))
+    ap = nn.forward(
+        mdef.graph, params, x,
+        nn.Ctx(mode="approx", bits=8, acu="lut", lut=lut, act_scales=scales),
+    )
+    err = float(jnp.max(jnp.abs(ap - fp)))
+    ref = float(jnp.max(jnp.abs(fp))) + 1e-6
+    assert err / ref < 0.25, f"{name}: rel err {err / ref}"
+
+
+def test_macs_match_hand_count_small_vgg():
+    mdef = MZ.build("small_vgg")
+    # conv1a: 32*32*32*3*3*3, conv1b: 32*32*32*9*32, ...
+    expected = (
+        32 * 32 * 32 * 9 * 3
+        + 32 * 32 * 32 * 9 * 32
+        + 16 * 16 * 64 * 9 * 32
+        + 16 * 16 * 64 * 9 * 64
+        + 8 * 8 * 128 * 9 * 64
+        + 2048 * 128
+        + 128 * 10
+    )
+    assert mdef.macs == expected
+
+
+def test_param_count_matches_init():
+    for name in MZ.all_models():
+        mdef = MZ.build(name)
+        params = nn.init_params(mdef.param_specs, seed=0)
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == mdef.params_count
+
+
+def test_qat_step_decreases_loss_small_vgg():
+    mdef = MZ.build("small_vgg")
+    params = nn.init_params(mdef.param_specs, seed=0)
+    rng = np.random.RandomState(3)
+    x = make_input(mdef, rng)
+    y = jnp.asarray(rng.randint(0, 10, size=BATCH).astype(np.int32))
+    lut = jnp.asarray(MU.build_lut("exact8"))
+    scales = jnp.full((mdef.n_scales,), 0.05, jnp.float32)
+    step = train.make_train_step(mdef, train.lut8_ctx, True, True)
+    lr = jnp.float32(0.05)
+    vels = [jnp.zeros_like(p) for p in params]
+    np_ = len(params)
+    out = step(*params, *vels, scales, x, y, lr, lut)
+    loss0 = float(out[-1])
+    params2 = list(out[:np_])
+    vels2 = list(out[np_ : 2 * np_])
+    out2 = step(*params2, *vels2, scales, x, y, lr, lut)
+    loss1 = float(out2[-1])
+    assert np.isfinite(loss0) and np.isfinite(loss1)
+    assert loss1 < loss0, f"QAT step did not reduce loss: {loss0} -> {loss1}"
+
+
+def test_table2_flags():
+    assert set(MZ.table2_models()) == {
+        "small_resnet", "small_vgg", "squeezenet_mini", "lstm_imdb", "vae_mnist",
+    }
+
+
+def test_graph_is_ssa_and_topologically_ordered():
+    for name in MZ.all_models():
+        mdef = MZ.build(name)
+        seen = set()
+        for node in mdef.graph:
+            for i in node.get("inputs", []):
+                assert i in seen or i == 0, f"{name}: node {node['id']} uses future {i}"
+            assert node["id"] not in seen
+            seen.add(node["id"])

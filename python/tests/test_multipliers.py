@@ -1,0 +1,112 @@
+"""Behavioral multiplier properties + LUT serialization format."""
+
+import os
+import struct
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import multipliers as MU
+
+
+@pytest.mark.parametrize("name", sorted(MU.MULTIPLIERS))
+def test_zero_annihilates(name):
+    m = MU.get(name)
+    vals = np.array([-(1 << (m.bits - 1)), -3, 0, 1, 7, (1 << (m.bits - 1)) - 1])
+    zero = np.zeros_like(vals)
+    assert (m.fn(zero, vals) == 0).all()
+    assert (m.fn(vals, zero) == 0).all()
+
+
+@pytest.mark.parametrize(
+    "name", sorted(n for n in MU.MULTIPLIERS if MU.get(n).symmetric)
+)
+def test_sign_symmetry(name):
+    m = MU.get(name)
+    rng = np.random.RandomState(0)
+    half = 1 << (m.bits - 1)
+    a = rng.randint(1, half, 500)
+    b = rng.randint(1, half, 500)
+    p = m.fn(a, b)
+    assert (m.fn(-a, b) == -p).all()
+    assert (m.fn(a, -b) == -p).all()
+    assert (m.fn(-a, -b) == p).all()
+
+
+def test_mitchell_underestimates():
+    a = np.arange(1, 128)
+    aa, bb = np.meshgrid(a, a)
+    ap = MU.mitchell(aa.ravel(), bb.ravel())
+    ex = aa.ravel() * bb.ravel()
+    assert (ap <= ex).all()
+    rel = (ex - ap) / ex
+    # Continuous-domain Mitchell bound is ~8.6%; integer fixed-point adds a
+    # little at tiny operands (3*3 -> 8, 11.1%).
+    assert rel.max() <= 0.12
+
+
+def test_drum_exact_below_window():
+    a = np.arange(-15, 16)
+    aa, bb = np.meshgrid(a, a)
+    assert (MU.drum(aa.ravel(), bb.ravel(), 8, 4) == aa.ravel() * bb.ravel()).all()
+
+
+@given(st.integers(0, 6), st.integers(-2048, 2047), st.integers(-2048, 2047))
+@settings(max_examples=200, deadline=None)
+def test_trunc_out_error_bound(k, a, b):
+    err = abs(
+        int(MU.trunc_out(np.array([a]), np.array([b]), 12, k)[0]) - a * b
+    )
+    assert err < (1 << k)
+
+
+def test_characterization_registry_consistency():
+    """Aliases must characterize identically to their base ACU."""
+    c1 = MU.characterize("floor_trunc8_6")
+    c2 = MU.characterize("mul8s_1l2h_like")
+    assert c1["mre_pct"] == c2["mre_pct"]
+    assert c1["wce"] == c2["wce"]
+
+
+def test_floor_trunc_negative_bias():
+    """The asymmetric family must round toward -inf on every product."""
+    vals = np.arange(-128, 128, dtype=np.int64)
+    a = np.broadcast_to(vals[:, None], (256, 256)).ravel()
+    b = np.broadcast_to(vals[None, :], (256, 256)).ravel()
+    e = MU.floor_trunc(a, b, 8, 6) - a * b
+    assert (e <= 0).all()
+    assert e.min() > -64
+    assert -32.0 < e.mean() < -28.0
+
+
+def test_lut_format_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        MU.write_lut("drum8_4", path)
+        with open(path, "rb") as f:
+            magic, bits, n, _ = struct.unpack("<IIII", f.read(16))
+            body = np.frombuffer(f.read(), dtype="<i4")
+        assert magic == MU.LUT_MAGIC
+        assert bits == 8 and n == 256
+        lut = body.reshape(n, n)
+        ref = MU.build_lut("drum8_4")
+        assert (lut == ref).all()
+        # spot-check indexing convention: lut[a+128, b+128] == approx(a, b)
+        assert lut[0, 0] == MU.drum(np.array([-128]), np.array([-128]), 8, 4)[0]
+
+
+def test_lut_central_row_and_column_zero():
+    lut = MU.build_lut("mitchell8")
+    assert (lut[128, :] == 0).all()  # a = 0
+    assert (lut[:, 128] == 0).all()  # b = 0
+
+
+def test_error_profiles_are_ordered_sensibly():
+    """More aggressive truncation ⇒ strictly larger MRE."""
+    mre = lambda nm: MU.characterize(nm)["mre_pct"]
+    assert mre("exact8") == 0.0
+    assert mre("trunc_out8_4") < mre("comp_trunc_out8_6")
+    assert mre("perf_pp8_3") < mre("perf_pp8_5")
+    assert mre("drum8_6") < mre("drum8_4")

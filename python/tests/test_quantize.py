@@ -1,0 +1,59 @@
+"""Quantizer + STE properties (mirrors rust/src/quant tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+def test_qmax():
+    assert Q.qmax_for(8) == 127
+    assert Q.qmax_for(12) == 2047
+
+
+def test_round_half_up():
+    s = jnp.float32(1.0)
+    xs = jnp.array([0.5, -0.5, 1.5, -1.5, 0.49, -0.49], jnp.float32)
+    got = Q.quantize(xs, s, 8)
+    np.testing.assert_array_equal(np.asarray(got), [1, 0, 2, -1, 0, 0])
+
+
+@given(st.floats(-100.0, 100.0), st.floats(0.01, 2.0))
+@settings(max_examples=200, deadline=None)
+def test_quant_dequant_bounded(x, scale):
+    xs = jnp.float32(x)
+    q = Q.quantize(xs, jnp.float32(scale), 8)
+    r = Q.dequantize(q, jnp.float32(scale))
+    if abs(x) <= scale * 126.5:
+        assert abs(float(r) - x) <= scale * 0.5 + 1e-5
+    else:
+        assert abs(float(r)) <= scale * 127.0 + 1e-5
+
+
+def test_weight_scale_per_col():
+    w = jnp.array([[1.0, -5.0, 2.0], [-4.0, 3.0, 6.0]], jnp.float32)
+    s = Q.weight_scale_per_col(w, 8)
+    np.testing.assert_allclose(
+        np.asarray(s), [4 / 127, 5 / 127, 6 / 127], rtol=1e-6
+    )
+
+
+def test_ste_gradient_is_clipped_identity():
+    scale = jnp.float32(0.1)
+
+    def f(x):
+        return jnp.sum(Q.fake_quant_ste(x, scale, 8))
+
+    g = jax.grad(f)(jnp.array([0.05, 5.0, -0.3, -50.0], jnp.float32))
+    # inside range -> 1, outside (|x| > 12.7) -> 0
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 1.0, 0.0])
+
+
+def test_fake_quant_is_idempotent():
+    x = jnp.linspace(-1, 1, 101, dtype=jnp.float32)
+    s = jnp.float32(0.013)
+    once = Q.fake_quant(x, s, 8)
+    twice = Q.fake_quant(once, s, 8)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-7)

@@ -1,0 +1,63 @@
+//! Calibrator bench (§3.2.1): scale quality + cost for max / percentile /
+//! MSE / entropy over synthetic activation distributions, checking the
+//! paper's claim that two batches of percentile calibration land within
+//! ~0.1% of the achievable quantized accuracy (here: within a small
+//! relative error of the oracle 99.9-percentile clip).
+
+use adapt::quant::calib::{Calibrator, CalibratorKind, HistogramCalibrator, MaxCalibrator};
+use adapt::util::bench::{self, Config};
+use adapt::util::rng::Rng;
+
+fn main() {
+    let cfg = Config::default().from_env();
+    println!("Calibration bench: 2 batches x 128K activations (gaussian + 0.1% outliers)\n");
+
+    let mut rng = Rng::new(3);
+    let mut batches: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..2 {
+        let mut xs: Vec<f32> = (0..128 * 1024).map(|_| rng.next_gauss()).collect();
+        for _ in 0..128 {
+            xs.push(rng.next_gauss() * 40.0); // heavy tail
+        }
+        batches.push(xs);
+    }
+    // Oracle: exact 99.9th percentile of |x| over the stream.
+    let mut all: Vec<f32> = batches.iter().flatten().map(|v| v.abs()).collect();
+    all.sort_by(f32::total_cmp);
+    let oracle = all[(all.len() as f64 * 0.999) as usize];
+    println!("oracle 99.9-pct |x| = {oracle:.3}\n");
+
+    for kind in [
+        CalibratorKind::Max,
+        CalibratorKind::Percentile,
+        CalibratorKind::Mse,
+        CalibratorKind::Entropy,
+    ] {
+        let s = bench::run(&format!("{kind:?} calibrate (observe + scale)"), cfg, || {
+            let mut c = HistogramCalibrator::new(kind);
+            for b in &batches {
+                c.observe(b);
+            }
+            c.scale(8)
+        });
+        s.print();
+        let mut c = HistogramCalibrator::new(kind);
+        for b in &batches {
+            c.observe(b);
+        }
+        let clip = c.scale(8) * 127.0;
+        println!(
+            "  -> calib_max {clip:.3} ({:+.1}% vs oracle percentile)\n",
+            100.0 * (clip - oracle) / oracle
+        );
+    }
+
+    let s = bench::run("MaxCalibrator (streaming abs-max)", cfg, || {
+        let mut c = MaxCalibrator::default();
+        for b in &batches {
+            c.observe(b);
+        }
+        c.scale(8)
+    });
+    s.print();
+}

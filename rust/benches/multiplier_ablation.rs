@@ -1,0 +1,41 @@
+//! ACU ablation bench: accuracy vs MRE vs power proxy across the whole
+//! multiplier library on a trained CNN (ALWANN-style design-space sweep),
+//! plus characterization cost of the library itself.
+//!
+//! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench multiplier_ablation`
+
+use adapt::coordinator::experiments;
+use adapt::data::Sizes;
+use adapt::mult;
+use adapt::runtime::Runtime;
+use adapt::util::bench::{self, Config};
+
+fn main() {
+    let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = Config::default().from_env();
+
+    // Characterization cost (exhaustive 8-bit, 65k pairs per ACU).
+    let s = bench::run("characterize mitchell8 (exhaustive)", cfg, || {
+        mult::characterize(mult::get("mitchell8").unwrap(), 0, 0)
+    });
+    s.print();
+    let s = bench::run("characterize mul12s (200k sample)", cfg, || {
+        mult::characterize(mult::get("mul12s_2km_like").unwrap(), 200_000, 0)
+    });
+    s.print();
+    println!();
+
+    let mut rt = match Runtime::open(&adapt::artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("accuracy sweep needs artifacts/ (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let sizes = if fast { Sizes::small() } else { Sizes::default() };
+    let model = if fast { "vae_mnist" } else { "small_vgg" };
+    match experiments::ablation(&mut rt, model, &sizes, Some(if fast { 1 } else { 4 })) {
+        Ok(t) => println!("{t}"),
+        Err(e) => eprintln!("ablation failed: {e:#}"),
+    }
+}

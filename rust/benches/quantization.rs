@@ -1,0 +1,41 @@
+//! Quantization-path microbench: per-tensor activation quantization,
+//! per-channel weight quantization, dequantization — the §5.2 "10%
+//! overhead" claim is the end-to-end consequence of these loops.
+
+use adapt::quant;
+use adapt::util::bench::{self, Config};
+use adapt::util::rng::Rng;
+
+fn main() {
+    let cfg = Config::default().from_env();
+    let mut rng = Rng::new(7);
+    println!("Quantization microbench\n");
+
+    for n in [64 * 1024, 1024 * 1024] {
+        let xs: Vec<f32> = (0..n).map(|_| rng.next_gauss()).collect();
+        let mut q = vec![0i32; n];
+        let mut back = vec![0f32; n];
+        let s = bench::run(&format!("quantize {}K f32 (per-tensor)", n / 1024), cfg, || {
+            quant::quantize_slice(&xs, 0.031, 8, &mut q)
+        });
+        s.print();
+        let thr = n as f64 / s.median_secs() / 1e9;
+        let s2 = bench::run(&format!("dequantize {}K i32", n / 1024), cfg, || {
+            quant::dequantize_slice(&q, 0.031, &mut back)
+        });
+        s2.print();
+        println!("  -> quantize throughput {thr:.2} Gelem/s\n");
+    }
+
+    let (k, no) = (1152, 128);
+    let w: Vec<f32> = (0..k * no).map(|_| rng.next_gauss() * 0.1).collect();
+    let s = bench::run("weight scales per-channel (1152x128)", cfg, || {
+        quant::weight_scales_per_col(&w, k, no, 8)
+    });
+    s.print();
+    let scales = quant::weight_scales_per_col(&w, k, no, 8);
+    let s = bench::run("weight quantize per-channel (1152x128)", cfg, || {
+        quant::quantize_weights_per_col(&w, k, no, 8, &scales)
+    });
+    s.print();
+}

@@ -1,0 +1,73 @@
+//! Table 2 cost regeneration: per-step wall-clock of every training and
+//! inference variant per Table-2 model — the components behind the
+//! "re-train time" column. (The accuracy columns come from
+//! `adapt table2` / the end_to_end example, which train to convergence.)
+//!
+//! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench table2_retrain`
+
+use adapt::coordinator::ops::{self, InferVariant, TrainVariant};
+use adapt::data::{self, Sizes};
+use adapt::quant::calib::CalibratorKind;
+use adapt::runtime::Runtime;
+use adapt::util::bench::{self, Config};
+
+fn main() {
+    let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let mut rt = match Runtime::open(&adapt::artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("needs artifacts/ (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let cfg = Config::endtoend().from_env();
+    let models: Vec<String> = if fast {
+        vec!["vae_mnist".into()]
+    } else {
+        rt.manifest
+            .models
+            .iter()
+            .filter(|(_, m)| m.table2)
+            .map(|(n, _)| n.clone())
+            .collect()
+    };
+    let sizes = Sizes::small();
+    println!("Table 2 step costs (batch {})\n", rt.manifest.batch);
+
+    for name in &models {
+        let ds = data::load(&rt.manifest.model(name).unwrap().dataset.clone(), &sizes);
+        let mut st = ops::ModelState::load_best(&rt, name).unwrap();
+        ops::calibrate(&mut rt, &mut st, &ds, 1, CalibratorKind::Percentile, 0.999).unwrap();
+        let (_l, lut) = ops::load_lut(&rt, "mul8s_1l2h_like").unwrap();
+
+        println!("{name}:");
+        let x = ops::batch_input(&st.model, &ds.eval, 0, rt.manifest.batch).unwrap();
+        for (label, variant) in [
+            ("fp32_infer", InferVariant::Fp32),
+            ("approx_infer (LUT)", InferVariant::ApproxLut),
+            ("quant12_infer", InferVariant::Quant12),
+            ("approx12_infer", InferVariant::Approx12),
+        ] {
+            let lut_ref = (variant == InferVariant::ApproxLut).then_some(&lut);
+            rt.prepare(name, variant.artifact()).unwrap();
+            let s = bench::run(&format!("  {label}"), cfg, || {
+                ops::infer_batch(&mut rt, &st, variant, &x, lut_ref).unwrap()
+            });
+            s.print();
+        }
+        for (label, variant) in [
+            ("fp32_train step", TrainVariant::Fp32),
+            ("qat_train step (LUT STE)", TrainVariant::QatLut),
+            ("qat12_train step (functional)", TrainVariant::Qat12),
+        ] {
+            let lut_ref = matches!(variant, TrainVariant::QatLut).then_some(&lut);
+            let s = bench::run(&format!("  {label}"), cfg, || {
+                let mut st2 = ops::ModelState::load_best(&rt, name).unwrap();
+                st2.act_scales = st.act_scales.clone();
+                ops::train(&mut rt, &mut st2, variant, &ds, 1, 1e-4, lut_ref, 0).unwrap()
+            });
+            s.print();
+        }
+        println!();
+    }
+}

@@ -1,0 +1,39 @@
+//! Table 4 regeneration: emulation wall-clock per DNN across the four
+//! engines (native XLA fp32, baseline scalar LUT, AdaPT XLA approx path,
+//! optimized Rust engine) and the speedup column.
+//!
+//! Full run: `cargo bench --bench table4_inference`
+//! Smoke:    `ADAPT_BENCH_FAST=1 cargo bench --bench table4_inference`
+
+use adapt::coordinator::experiments::{self, Table4Config};
+use adapt::data::Sizes;
+use adapt::runtime::Runtime;
+
+fn main() {
+    let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let mut rt = match Runtime::open(&adapt::artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("table4 bench needs artifacts/ (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let cfg = Table4Config {
+        models: if fast {
+            vec!["vae_mnist".into(), "gan_fashion".into()]
+        } else {
+            vec![]
+        },
+        sizes: if fast { Sizes::small() } else { Sizes::default() },
+        eval_batches: if fast { 1 } else { 2 },
+        verbose: true,
+        ..Table4Config::default()
+    };
+    println!("Table 4 — inference emulation wall-clock ({} batches of {})\n",
+        cfg.eval_batches, rt.manifest.batch);
+    match experiments::table4(&mut rt, &cfg) {
+        Ok(t) => println!("{t}"),
+        Err(e) => eprintln!("table4 failed: {e:#}"),
+    }
+    println!("(executable compile time, excluded from rows: {:.1?})", rt.compile_time);
+}

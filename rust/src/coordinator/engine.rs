@@ -1,0 +1,224 @@
+//! Request-level inference engine: dynamic batching in front of the
+//! fixed-batch AOT executables.
+//!
+//! The AOT artifacts are lowered at a static batch size; user-facing
+//! inference arrives one sample at a time. The engine queues requests,
+//! forms a batch when either the batch fills or `max_wait` expires
+//! (classic dynamic batching), pads short batches by repeating the last
+//! sample, executes, and fans responses back out. The PJRT client is not
+//! `Send`, so the worker thread owns its *own* Runtime — requests and
+//! responses cross threads, the runtime never does.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ops::{self, InferVariant, ModelState};
+use crate::runtime::Runtime;
+
+/// One inference request: a flat f32 sample (image/latent).
+struct Request {
+    x: Vec<f32>,
+    resp: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Engine statistics (updated by the worker, fetched at shutdown).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    pub busy: Duration,
+}
+
+/// Configuration for [`InferenceEngine`].
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts: PathBuf,
+    pub model: String,
+    pub variant: InferVariant,
+    /// ACU name when `variant == ApproxLut`.
+    pub acu: Option<String>,
+    /// Max time to hold a partial batch before flushing.
+    pub max_wait: Duration,
+}
+
+/// Handle to the batching worker.
+pub struct InferenceEngine {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<Result<EngineStats>>>,
+    out_dim: usize,
+}
+
+impl InferenceEngine {
+    /// Start the worker (compiles the executable before accepting work).
+    pub fn start(cfg: EngineConfig) -> Result<InferenceEngine> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let worker = std::thread::spawn(move || worker_loop(cfg, rx, ready_tx));
+        let out_dim = ready_rx
+            .recv()
+            .context("engine worker died before ready")??;
+        Ok(InferenceEngine {
+            tx,
+            worker: Some(worker),
+            out_dim,
+        })
+    }
+
+    /// Output dimension per sample.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Submit one sample; returns a receiver for its output row.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request { x, resp }))
+            .context("engine is down")?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience wrapper around [`submit`].
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(x)?.recv().context("engine dropped request")?
+    }
+
+    /// Stop the worker and fetch stats.
+    pub fn shutdown(mut self) -> Result<EngineStats> {
+        let _ = self.tx.send(Msg::Shutdown);
+        let h = self.worker.take().expect("shutdown twice");
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?
+    }
+}
+
+impl Drop for InferenceEngine {
+    fn drop(&mut self) {
+        if self.worker.is_some() {
+            let _ = self.tx.send(Msg::Shutdown);
+            if let Some(h) = self.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: EngineConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<usize>>,
+) -> Result<EngineStats> {
+    // The runtime lives entirely on this thread (PJRT is not Send).
+    let setup = (|| -> Result<(Runtime, ModelState, Option<xla::Literal>, usize)> {
+        let mut rt = Runtime::open(&cfg.artifacts)?;
+        let mut st = ModelState::load_best(&rt, &cfg.model)?;
+        let lut_lit = match (&cfg.variant, &cfg.acu) {
+            (InferVariant::ApproxLut, Some(acu)) => Some(ops::load_lut(&rt, acu)?.1),
+            (InferVariant::ApproxLut, None) => {
+                anyhow::bail!("ApproxLut engine needs an ACU name")
+            }
+            _ => None,
+        };
+        if cfg.variant != InferVariant::Fp32 {
+            // Engine-side quick calibration on the model's dataset.
+            let ds = crate::data::load(&st.model.dataset, &crate::data::Sizes::small());
+            ops::calibrate(
+                &mut rt,
+                &mut st,
+                &ds,
+                2,
+                crate::quant::calib::CalibratorKind::Percentile,
+                0.999,
+            )?;
+        }
+        rt.prepare(&cfg.model, cfg.variant.artifact())?;
+        let out_dim = st.model.out_dim;
+        Ok((rt, st, lut_lit, out_dim))
+    })();
+
+    let (mut rt, st, lut_lit, out_dim) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(v.3));
+            (v.0, v.1, v.2, v.3)
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(EngineStats::default());
+        }
+    };
+    let _ = out_dim;
+
+    let bs = rt.manifest.batch;
+    let per: usize = st.model.input_shape.iter().product();
+    let mut stats = EngineStats::default();
+    let mut pending: Vec<Request> = Vec::with_capacity(bs);
+
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        pending.push(first);
+        let deadline = Instant::now() + cfg.max_wait;
+        // Gather until full or deadline.
+        while pending.len() < bs {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Shutdown) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Assemble the padded batch.
+        let t0 = Instant::now();
+        let mut flat = Vec::with_capacity(bs * per);
+        for r in &pending {
+            flat.extend_from_slice(&r.x);
+        }
+        let real = pending.len();
+        for _ in real..bs {
+            let last = &pending[real - 1].x;
+            flat.extend_from_slice(last);
+        }
+        stats.padded_slots += bs - real;
+        let mut shape = vec![bs];
+        shape.extend_from_slice(&st.model.input_shape);
+
+        let result = crate::runtime::lit_f32(&shape, &flat).and_then(|x| {
+            ops::infer_batch(&mut rt, &st, cfg.variant, &x, lut_lit.as_ref())
+        });
+        stats.busy += t0.elapsed();
+        stats.batches += 1;
+        stats.requests += real;
+
+        match result {
+            Ok(out) => {
+                let row = out.len() / bs;
+                for (i, r) in pending.drain(..).enumerate() {
+                    let _ = r.resp.send(Ok(out[i * row..(i + 1) * row].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in pending.drain(..) {
+                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+    Ok(stats)
+}

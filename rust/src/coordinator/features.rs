@@ -1,0 +1,125 @@
+//! Table 3: functionality matrix vs the state of the art.
+//!
+//! The paper's Table 3 is qualitative; we reproduce it as a feature
+//! registry where every AdaPT-RS "yes" links to the module that implements
+//! it, so the claim is checkable in-code.
+
+use crate::util::fmt;
+
+pub struct FeatureRow {
+    pub feature: &'static str,
+    pub adapt_rs: &'static str,
+    pub tfapprox: &'static str,
+    pub proxsim: &'static str,
+    pub alwann: &'static str,
+    pub typecnn: &'static str,
+    /// Where it lives in this repo.
+    pub evidence: &'static str,
+}
+
+pub const FEATURES: &[FeatureRow] = &[
+    FeatureRow {
+        feature: "Framework",
+        adapt_rs: "Rust+JAX/Pallas",
+        tfapprox: "TensorFlow",
+        proxsim: "TensorFlow",
+        alwann: "TensorFlow",
+        typecnn: "C++",
+        evidence: "three-layer stack (DESIGN.md)",
+    },
+    FeatureRow {
+        feature: "Backend",
+        adapt_rs: "CPU (PJRT)",
+        tfapprox: "GPU",
+        proxsim: "GPU",
+        alwann: "CPU",
+        typecnn: "CPU",
+        evidence: "rust/src/runtime",
+    },
+    FeatureRow {
+        feature: "Multi-DNN simulation (CNN, LSTM, ...)",
+        adapt_rs: "yes",
+        tfapprox: "no",
+        proxsim: "no",
+        alwann: "no",
+        typecnn: "no",
+        evidence: "9-model zoo: python/compile/model.py",
+    },
+    FeatureRow {
+        feature: "Arbitrary ACU",
+        adapt_rs: "yes",
+        tfapprox: "no",
+        proxsim: "no",
+        alwann: "no",
+        typecnn: "yes",
+        evidence: "rust/src/mult + LUT/functional paths",
+    },
+    FeatureRow {
+        feature: "Quantization calibration",
+        adapt_rs: "yes",
+        tfapprox: "no",
+        proxsim: "no",
+        alwann: "yes",
+        typecnn: "no",
+        evidence: "rust/src/quant/calib.rs (max/pct/MSE/KL)",
+    },
+    FeatureRow {
+        feature: "Approximate-aware re-training",
+        adapt_rs: "yes",
+        tfapprox: "no",
+        proxsim: "yes",
+        alwann: "yes",
+        typecnn: "yes",
+        evidence: "coordinator::ops::train (QAT/STE)",
+    },
+    FeatureRow {
+        feature: "Arbitrary bitwidth / mixed precision",
+        adapt_rs: "yes (8/12, per-layer)",
+        tfapprox: "8-bit only",
+        proxsim: "8-bit only",
+        alwann: "8-bit only",
+        typecnn: "yes",
+        evidence: "graph::retransform Policy overrides",
+    },
+];
+
+/// Render Table 3.
+pub fn table3() -> String {
+    let rows: Vec<Vec<String>> = FEATURES
+        .iter()
+        .map(|r| {
+            vec![
+                r.feature.to_string(),
+                r.adapt_rs.to_string(),
+                r.tfapprox.to_string(),
+                r.proxsim.to_string(),
+                r.alwann.to_string(),
+                r.typecnn.to_string(),
+                r.evidence.to_string(),
+            ]
+        })
+        .collect();
+    fmt::table(
+        &[
+            "Tool Support",
+            "AdaPT-RS",
+            "TFApprox",
+            "ProxSim",
+            "ALWANN",
+            "TypeCNN",
+            "evidence (this repo)",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table_renders_all_features() {
+        let t = super::table3();
+        assert!(t.contains("Arbitrary ACU"));
+        assert!(t.contains("re-training"));
+        assert_eq!(t.lines().count(), super::FEATURES.len() + 2);
+    }
+}

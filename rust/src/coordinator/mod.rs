@@ -1,0 +1,16 @@
+//! Layer-3 coordination: everything between the CLI and the runtime.
+//!
+//! * [`ops`] — model state + the primitive operations (inference, fp32
+//!   pre-training, calibration, QAT retraining) driving the AOT
+//!   executables. This is Fig. 1 + Fig. 2 as code.
+//! * [`engine`] — the request-level inference engine: a dynamic batcher in
+//!   front of the fixed-batch executables (the serving-style face of the
+//!   framework).
+//! * [`experiments`] — harnesses that regenerate every table in the
+//!   paper's evaluation (Tables 1–4) plus the ablations in DESIGN.md.
+//! * [`features`] — the Table-3 functionality matrix.
+
+pub mod engine;
+pub mod experiments;
+pub mod features;
+pub mod ops;

@@ -1,0 +1,371 @@
+//! Primitive coordinator operations over the AOT executables.
+//!
+//! The whole Fig.-1 flow lives here: fp32 pre-training (the Rust
+//! coordinator *is* the training loop — python only lowered the step),
+//! post-training calibration via the `acts` taps, approximate inference
+//! through the LUT / functional variants, and approximation-aware
+//! retraining (QAT).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Dataset, Split};
+use crate::graph::Model;
+use crate::lut::Lut;
+use crate::metrics;
+use crate::quant::calib::{Calibrator, CalibratorKind, HistogramCalibrator};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, weights, Runtime};
+use crate::tensor::Tensor;
+
+/// Mutable model state owned by the coordinator: current parameters (as
+/// literals, fed straight back into the next executable call) + scales.
+pub struct ModelState {
+    pub model: Model,
+    pub params: Vec<xla::Literal>,
+    pub act_scales: Option<Vec<f32>>,
+}
+
+impl ModelState {
+    /// Load state from a weights blob (initial or trained snapshot).
+    pub fn load(rt: &Runtime, name: &str, weights_path: &Path) -> Result<ModelState> {
+        let model = rt.manifest.model(name)?.clone();
+        let tensors = weights::load_params(&model, weights_path)?;
+        let params = tensors
+            .iter()
+            .map(|t| lit_f32(&t.shape, &t.data))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelState {
+            model,
+            params,
+            act_scales: None,
+        })
+    }
+
+    /// Load from initial weights, preferring a trained snapshot if present.
+    pub fn load_best(rt: &Runtime, name: &str) -> Result<ModelState> {
+        let model = rt.manifest.model(name)?;
+        let trained = weights::trained_path(&rt.manifest.root, model);
+        let path = if trained.exists() {
+            trained
+        } else {
+            weights::initial_path(&rt.manifest.root, model)
+        };
+        Self::load(rt, name, &path)
+    }
+
+    /// Export current params to CPU tensors (for the Rust emulators or a
+    /// weights snapshot).
+    pub fn params_tensors(&self) -> Result<Vec<Tensor>> {
+        self.model
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|(spec, lit)| Tensor::from_vec(&spec.shape, to_vec_f32(lit)?))
+            .collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        weights::save_params(&self.params_tensors()?, path)
+    }
+
+    /// Activation scales as a literal, rescaled from the calibrated 8-bit
+    /// scales to the requested bitwidth (calib_max / qmax(bits)).
+    fn scales_lit(&self, bits: u32) -> Result<xla::Literal> {
+        let s = self
+            .act_scales
+            .as_ref()
+            .context("model not calibrated (run calibrate first)")?;
+        let s = rescale_for_bits(s, bits);
+        lit_f32(&[s.len()], &s)
+    }
+}
+
+/// Load an ACU LUT artifact as both the in-memory table and a literal.
+pub fn load_lut(rt: &Runtime, acu: &str) -> Result<(Lut, xla::Literal)> {
+    let path = rt.manifest.lut_path(acu)?;
+    let lut = Lut::load(&path)?;
+    let lit = lit_i32(&[lut.n, lut.n], lut.data())?;
+    Ok((lut, lit))
+}
+
+/// Build the input literal for one batch of a split.
+pub fn batch_input(model: &Model, split: &Split, bi: usize, bs: usize) -> Result<xla::Literal> {
+    let mut shape = vec![bs];
+    shape.extend_from_slice(&model.input_shape);
+    if model.input_dtype == "i32" {
+        lit_i32(&shape, &split.batch_i(bi, bs))
+    } else {
+        lit_f32(&shape, &split.batch_f(bi, bs))
+    }
+}
+
+/// Inference variants (map to artifact names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferVariant {
+    Fp32,
+    /// 8-bit LUT path; the ACU is whatever LUT literal you pass.
+    ApproxLut,
+    /// 12-bit exact-quantized (functional k = 0).
+    Quant12,
+    /// 12-bit functional ACU (mul12s_2km_like).
+    Approx12,
+}
+
+impl InferVariant {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            InferVariant::Fp32 => "fp32_infer",
+            InferVariant::ApproxLut => "approx_infer",
+            InferVariant::Quant12 => "quant12_infer",
+            InferVariant::Approx12 => "approx12_infer",
+        }
+    }
+}
+
+/// Run one inference batch; returns the flat output.
+pub fn infer_batch(
+    rt: &mut Runtime,
+    st: &ModelState,
+    variant: InferVariant,
+    x: &xla::Literal,
+    lut: Option<&xla::Literal>,
+) -> Result<Vec<f32>> {
+    let mut inputs: Vec<&xla::Literal> = st.params.iter().collect();
+    let scales_lit;
+    match variant {
+        InferVariant::Fp32 => {}
+        InferVariant::ApproxLut => {
+            scales_lit = st.scales_lit(8)?;
+            inputs.push(&scales_lit);
+        }
+        InferVariant::Quant12 | InferVariant::Approx12 => {
+            scales_lit = st.scales_lit(12)?;
+            inputs.push(&scales_lit);
+        }
+    }
+    inputs.push(x);
+    if variant == InferVariant::ApproxLut {
+        inputs.push(lut.context("LUT variant needs a LUT literal")?);
+    }
+    let out = rt.run(&st.model.name, variant.artifact(), &inputs)?;
+    to_vec_f32(&out[0])
+}
+
+/// Evaluation outcome for one (model, variant) pair.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub wall: Duration,
+    pub batches: usize,
+    pub samples: usize,
+}
+
+/// Evaluate a variant over the eval split.
+pub fn evaluate(
+    rt: &mut Runtime,
+    st: &ModelState,
+    variant: InferVariant,
+    ds: &Dataset,
+    lut: Option<&xla::Literal>,
+    max_batches: Option<usize>,
+) -> Result<EvalResult> {
+    let bs = rt.manifest.batch;
+    let nb = ds
+        .eval
+        .n_batches(bs)
+        .min(max_batches.unwrap_or(usize::MAX))
+        .max(1);
+    // Pre-compile outside the timed region (the paper's timings exclude
+    // the one-off JIT/Ninja build as well).
+    rt.prepare(&st.model.name, variant.artifact())?;
+    let mut acc_sum = 0.0;
+    let mut samples = 0usize;
+    let t0 = Instant::now();
+    for bi in 0..nb {
+        let x = batch_input(&st.model, &ds.eval, bi, bs)?;
+        let out = infer_batch(rt, st, variant, &x, lut)?;
+        let labels = ds.eval.batch_labels(bi, bs);
+        let target = if st.model.metric == "pixel" {
+            ds.eval.batch_f(bi, bs)
+        } else {
+            vec![]
+        };
+        let out_dim_total = out.len() / bs;
+        acc_sum += metrics::compute(
+            &st.model.metric,
+            &out,
+            out_dim_total,
+            &labels,
+            &target,
+        ) * bs as f64;
+        samples += bs;
+    }
+    Ok(EvalResult {
+        accuracy: acc_sum / samples as f64,
+        wall: t0.elapsed(),
+        batches: nb,
+        samples,
+    })
+}
+
+/// Training mode for `train`.
+#[derive(Clone, Copy, Debug)]
+pub enum TrainVariant {
+    Fp32,
+    /// QAT on the 8-bit LUT ACU.
+    QatLut,
+    /// QAT on the 12-bit functional ACU.
+    Qat12,
+}
+
+impl TrainVariant {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            TrainVariant::Fp32 => "fp32_train",
+            TrainVariant::QatLut => "qat_train",
+            TrainVariant::Qat12 => "qat12_train",
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub steps: usize,
+    pub wall: Duration,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub losses: Vec<f32>,
+}
+
+/// Drive `steps` SGD-with-momentum steps through the AOT train-step
+/// executable. Parameters and velocity buffers round-trip as literals —
+/// outputs of step t are inputs of step t+1 with no host-side conversion.
+pub fn train(
+    rt: &mut Runtime,
+    st: &mut ModelState,
+    variant: TrainVariant,
+    ds: &Dataset,
+    steps: usize,
+    lr: f32,
+    lut: Option<&xla::Literal>,
+    log_every: usize,
+) -> Result<TrainResult> {
+    let bs = rt.manifest.batch;
+    let p = st.params.len();
+    rt.prepare(&st.model.name, variant.artifact())?;
+    let lr_lit = lit_scalar_f32(lr);
+    // Momentum state: zero-initialized, same shapes as the params.
+    let mut vels: Vec<xla::Literal> = st
+        .model
+        .params
+        .iter()
+        .map(|spec| lit_f32(&spec.shape, &vec![0.0f32; spec.numel()]))
+        .collect::<Result<Vec<_>>>()?;
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let x = batch_input(&st.model, &ds.train, step, bs)?;
+        let y = lit_i32(&[bs], &ds.train.batch_labels(step, bs))?;
+        let scales_lit;
+        let mut inputs: Vec<&xla::Literal> = st.params.iter().chain(vels.iter()).collect();
+        match variant {
+            TrainVariant::Fp32 => {
+                inputs.push(&x);
+                inputs.push(&y);
+                inputs.push(&lr_lit);
+            }
+            TrainVariant::QatLut => {
+                scales_lit = st.scales_lit(8)?;
+                inputs.push(&scales_lit);
+                inputs.push(&x);
+                inputs.push(&y);
+                inputs.push(&lr_lit);
+                inputs.push(lut.context("QatLut needs a LUT literal")?);
+            }
+            TrainVariant::Qat12 => {
+                scales_lit = st.scales_lit(12)?;
+                inputs.push(&scales_lit);
+                inputs.push(&x);
+                inputs.push(&y);
+                inputs.push(&lr_lit);
+            }
+        }
+        let mut out = rt.run(&st.model.name, variant.artifact(), &inputs)?;
+        if out.len() != 2 * p + 1 {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                out.len(),
+                2 * p + 1
+            );
+        }
+        let loss_lit = out.pop().unwrap();
+        let loss = to_vec_f32(&loss_lit)?[0];
+        if !loss.is_finite() {
+            bail!("{} diverged at step {step} (loss {loss})", st.model.name);
+        }
+        losses.push(loss);
+        vels = out.split_off(p);
+        st.params = out;
+        if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+            eprintln!(
+                "[train {}/{}] step {step:>4} loss {loss:.4}",
+                st.model.name,
+                variant.artifact()
+            );
+        }
+    }
+    Ok(TrainResult {
+        steps,
+        wall: t0.elapsed(),
+        first_loss: losses.first().copied().unwrap_or(f32::NAN),
+        last_loss: losses.last().copied().unwrap_or(f32::NAN),
+        losses,
+    })
+}
+
+/// Post-training calibration (§3.2.1): run the `acts` executable over
+/// `batches` calibration batches, stream every tap into a per-scale
+/// calibrator, and store the resulting scales on the state.
+///
+/// The paper's default is the 99.9 % percentile histogram over two batches.
+pub fn calibrate(
+    rt: &mut Runtime,
+    st: &mut ModelState,
+    ds: &Dataset,
+    batches: usize,
+    kind: CalibratorKind,
+    percentile: f64,
+) -> Result<Vec<f32>> {
+    let bs = rt.manifest.batch;
+    let n_scales = st.model.n_scales;
+    let mut calibs: Vec<HistogramCalibrator> = (0..n_scales)
+        .map(|_| HistogramCalibrator::new(kind).with_percentile(percentile))
+        .collect();
+    for bi in 0..batches.max(1) {
+        let x = batch_input(&st.model, &ds.train, bi, bs)?;
+        let mut inputs: Vec<&xla::Literal> = st.params.iter().collect();
+        inputs.push(&x);
+        let taps = rt.run(&st.model.name, "acts", &inputs)?;
+        if taps.len() != n_scales {
+            bail!("acts returned {} taps, expected {n_scales}", taps.len());
+        }
+        for (c, tap) in calibs.iter_mut().zip(&taps) {
+            c.observe(&to_vec_f32(tap)?);
+        }
+    }
+    let scales: Vec<f32> = calibs.iter().map(|c| c.scale(8)).collect();
+    st.act_scales = Some(scales.clone());
+    Ok(scales)
+}
+
+/// Calibrated scales, rescaled for a different bitwidth: the histogram
+/// learned calib_max; scale_b = calib_max / qmax(b). Converting from the
+/// 8-bit scales avoids a second calibration pass.
+pub fn rescale_for_bits(scales8: &[f32], bits: u32) -> Vec<f32> {
+    let q8 = crate::quant::qmax_for(8) as f32;
+    let qb = crate::quant::qmax_for(bits) as f32;
+    scales8.iter().map(|s| s * q8 / qb).collect()
+}

@@ -1,0 +1,367 @@
+//! Deterministic synthetic datasets (DESIGN.md §Substitutions).
+//!
+//! The paper's datasets (CIFAR10, ImageNet, IMDB, MNIST, Fashion-MNIST)
+//! are replaced by generators that preserve what the experiments actually
+//! measure: a *learnable* task with the same tensor shapes and class
+//! arity. Image classes are smooth random prototype fields + per-sample
+//! noise; text classes are token-motif mixtures; recon tasks use the image
+//! generator's samples.
+//!
+//! Everything is seeded through [`crate::util::rng`], so the Rust-driven
+//! training runs (Table 2) are exactly reproducible.
+
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::rng::Rng;
+
+/// A supervised split: inputs + integer labels.
+pub struct Split {
+    /// (num, *input_shape) f32, or empty when the input is tokens.
+    pub x_f: Vec<f32>,
+    /// (num, seq) i32 token inputs (text models), else empty.
+    pub x_i: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub num: usize,
+    pub sample_shape: Vec<usize>,
+    pub is_tokens: bool,
+}
+
+impl Split {
+    /// Copy batch `bi` (of size `bs`, padded by wrapping) as a flat buffer.
+    pub fn batch_f(&self, bi: usize, bs: usize) -> Vec<f32> {
+        let per: usize = self.sample_shape.iter().product();
+        let mut out = Vec::with_capacity(bs * per);
+        for i in 0..bs {
+            let idx = (bi * bs + i) % self.num;
+            out.extend_from_slice(&self.x_f[idx * per..(idx + 1) * per]);
+        }
+        out
+    }
+
+    pub fn batch_i(&self, bi: usize, bs: usize) -> Vec<i32> {
+        let per: usize = self.sample_shape.iter().product();
+        let mut out = Vec::with_capacity(bs * per);
+        for i in 0..bs {
+            let idx = (bi * bs + i) % self.num;
+            out.extend_from_slice(&self.x_i[idx * per..(idx + 1) * per]);
+        }
+        out
+    }
+
+    pub fn batch_labels(&self, bi: usize, bs: usize) -> Vec<i32> {
+        (0..bs)
+            .map(|i| self.labels[(bi * bs + i) % self.num])
+            .collect()
+    }
+
+    /// Batch as a Tensor (images) with batch dim prepended.
+    pub fn batch_tensor(&self, bi: usize, bs: usize) -> Tensor {
+        let mut shape = vec![bs];
+        shape.extend_from_slice(&self.sample_shape);
+        Tensor::from_vec(&shape, self.batch_f(bi, bs)).expect("batch shape")
+    }
+
+    pub fn batch_tensor_i(&self, bi: usize, bs: usize) -> TensorI32 {
+        let mut shape = vec![bs];
+        shape.extend_from_slice(&self.sample_shape);
+        TensorI32::from_vec(&shape, self.batch_i(bi, bs)).expect("batch shape")
+    }
+
+    pub fn n_batches(&self, bs: usize) -> usize {
+        self.num / bs
+    }
+}
+
+/// Train + eval pair.
+pub struct Dataset {
+    pub name: String,
+    pub train: Split,
+    pub eval: Split,
+    pub classes: usize,
+}
+
+/// Bilinear-upsample a coarse (gh, gw, c) grid to (h, w, c) — gives each
+/// class prototype large-scale spatial structure a CNN can key on.
+fn upsample_bilinear(grid: &[f32], gh: usize, gw: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let mut out = vec![0f32; h * w * c];
+    for y in 0..h {
+        let fy = y as f32 / h as f32 * (gh - 1) as f32;
+        let y0 = fy.floor() as usize;
+        let y1 = (y0 + 1).min(gh - 1);
+        let ty = fy - y0 as f32;
+        for x in 0..w {
+            let fx = x as f32 / w as f32 * (gw - 1) as f32;
+            let x0 = fx.floor() as usize;
+            let x1 = (x0 + 1).min(gw - 1);
+            let tx = fx - x0 as f32;
+            for ci in 0..c {
+                let g = |yy: usize, xx: usize| grid[(yy * gw + xx) * c + ci];
+                let top = g(y0, x0) * (1.0 - tx) + g(y0, x1) * tx;
+                let bot = g(y1, x0) * (1.0 - tx) + g(y1, x1) * tx;
+                out[(y * w + x) * c + ci] = top * (1.0 - ty) + bot * ty;
+            }
+        }
+    }
+    out
+}
+
+/// Smooth-prototype image classification generator.
+fn gen_images(
+    name: &str,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    n_train: usize,
+    n_eval: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut root = Rng::new(seed);
+    let mut protos: Vec<Vec<f32>> = Vec::with_capacity(classes);
+    for k in 0..classes {
+        let mut r = root.fork(k as u64 + 1);
+        let (gh, gw) = (6, 6);
+        let grid: Vec<f32> = (0..gh * gw * c).map(|_| r.next_gauss()).collect();
+        protos.push(upsample_bilinear(&grid, gh, gw, c, h, w));
+    }
+    let per = h * w * c;
+    // Samples are prototype *mixtures*: x = a*proto_label + (1-a)*proto_other
+    // + noise, a ~ U[MIX_LO, 1]. High-dimensional prototypes are otherwise
+    // linearly separable at any pixel noise (the aggregate SNR grows with
+    // sqrt(pixels)), which would pin every Table-2 column at 100%. The
+    // mixture puts a controllable fraction of samples near the decision
+    // boundary, landing fp32 accuracy in the paper's 80–95% band and making
+    // ACU error visible.
+    const MIX_LO: f32 = 0.44;
+    let mut make_split = |n: usize, tag: u64| -> Split {
+        let mut r = root.fork(1000 + tag);
+        let mut x = Vec::with_capacity(n * per);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let k = i % classes; // balanced
+            labels.push(k as i32);
+            let other = {
+                let o = r.below(classes as u64 - 1) as usize;
+                if o >= k {
+                    o + 1
+                } else {
+                    o
+                }
+            };
+            let a = MIX_LO + (1.0 - MIX_LO) * r.next_f32();
+            let p = &protos[k];
+            let q = &protos[other];
+            for j in 0..per {
+                x.push((a * p[j] + (1.0 - a) * q[j] + noise * r.next_gauss()).clamp(-3.0, 3.0));
+            }
+        }
+        Split {
+            x_f: x,
+            x_i: vec![],
+            labels,
+            num: n,
+            sample_shape: vec![h, w, c],
+            is_tokens: false,
+        }
+    };
+    Dataset {
+        name: name.to_string(),
+        train: make_split(n_train, 1),
+        eval: make_split(n_eval, 2),
+        classes,
+    }
+}
+
+/// Token-motif text classification (IMDB stand-in, binary).
+fn gen_text(
+    name: &str,
+    seq: usize,
+    vocab: usize,
+    n_train: usize,
+    n_eval: usize,
+    seed: u64,
+) -> Dataset {
+    let mut root = Rng::new(seed);
+    // Two sentiment lexicons; class = which lexicon *dominates*. Sentiment
+    // tokens are sparse (12% of positions) and noisy (25% drawn from the
+    // opposite lexicon), so a handful of ambiguous sequences per batch put
+    // accuracy in the paper's ~83% LSTM band instead of a trivial 100%.
+    let pos: Vec<i32> = (0..24).map(|i| 8 + i).collect();
+    let neg: Vec<i32> = (0..24).map(|i| 40 + i).collect();
+    let mut make_split = |n: usize, tag: u64| -> Split {
+        let mut r = root.fork(tag);
+        let mut x = Vec::with_capacity(n * seq);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let k = (i % 2) as i32;
+            labels.push(k);
+            for _ in 0..seq {
+                if r.next_f32() < 0.20 {
+                    let own = r.next_f32() >= 0.18;
+                    let lex = if (k == 1) == own { &pos } else { &neg };
+                    x.push(lex[r.below(lex.len() as u64) as usize]);
+                } else {
+                    x.push(r.range_i64(64, vocab as i64) as i32);
+                }
+            }
+        }
+        Split {
+            x_f: vec![],
+            x_i: x,
+            labels,
+            num: n,
+            sample_shape: vec![seq],
+            is_tokens: true,
+        }
+    };
+    Dataset {
+        name: name.to_string(),
+        train: make_split(n_train, 11),
+        eval: make_split(n_eval, 12),
+        classes: 2,
+    }
+}
+
+/// Latent-noise dataset for the GAN generator timing workload.
+fn gen_noise(name: &str, dim: usize, n: usize, seed: u64) -> Dataset {
+    let mut r = Rng::new(seed);
+    let mut make = |num: usize| -> Split {
+        let x: Vec<f32> = (0..num * dim).map(|_| r.next_gauss()).collect();
+        Split {
+            x_f: x,
+            x_i: vec![],
+            labels: vec![0; num],
+            num,
+            sample_shape: vec![dim],
+            is_tokens: false,
+        }
+    };
+    Dataset {
+        name: name.to_string(),
+        train: make(n),
+        eval: make(n),
+        classes: 1,
+    }
+}
+
+/// Dataset sizes: ~10x the paper's "10% retrain subset" spirit scaled to
+/// this testbed; eval sized so Table-2 accuracies have ~±1% resolution.
+#[derive(Clone, Copy, Debug)]
+pub struct Sizes {
+    pub n_train: usize,
+    pub n_eval: usize,
+}
+
+impl Default for Sizes {
+    fn default() -> Self {
+        Sizes {
+            n_train: 2048,
+            n_eval: 512,
+        }
+    }
+}
+
+impl Sizes {
+    pub fn small() -> Sizes {
+        Sizes {
+            n_train: 256,
+            n_eval: 128,
+        }
+    }
+}
+
+/// Build the dataset a manifest model binds to (by `dataset` name).
+pub fn load(dataset: &str, sizes: &Sizes) -> Dataset {
+    let (nt, ne) = (sizes.n_train, sizes.n_eval);
+    match dataset {
+        // Noise levels tuned so fp32 accuracy lands in the paper's 80–95%
+        // band — low enough to be learnable, high enough that approximate
+        // multiplication visibly costs accuracy (Table 2's middle columns).
+        "cifar_syn" => gen_images("cifar_syn", 32, 32, 3, 10, nt, ne, 0.8, 0xC1FA),
+        "imagenet_syn32" => gen_images("imagenet_syn32", 32, 32, 3, 10, nt, ne, 0.9, 0x1A6E),
+        "mnist_syn" => {
+            let mut d = gen_images("mnist_syn", 28, 28, 1, 10, nt, ne, 0.35, 0x3157);
+            // Reconstruction target wants near-binary [0,1] pixels (MNIST
+            // digits are mostly ink-or-background): sharp sigmoid squash.
+            for v in d.train.x_f.iter_mut().chain(d.eval.x_f.iter_mut()) {
+                *v = 1.0 / (1.0 + (-*v * 4.0).exp());
+            }
+            d
+        }
+        "imdb_syn" => gen_text("imdb_syn", 48, 512, nt, ne, 0x1DB0),
+        "noise64" => gen_noise("noise64", 64, ne.max(256), 0x6064),
+        other => panic!("unknown dataset {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let s = Sizes::small();
+        let a = load("cifar_syn", &s);
+        let b = load("cifar_syn", &s);
+        assert_eq!(a.train.x_f, b.train.x_f);
+        assert_eq!(a.train.labels, b.train.labels);
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let d = load("cifar_syn", &Sizes::small());
+        let mut counts = [0usize; 10];
+        for &l in &d.train.labels {
+            counts[l as usize] += 1;
+        }
+        let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_distance() {
+        // Same-class samples must be closer on average than cross-class.
+        let d = load("cifar_syn", &Sizes::small());
+        let per: usize = d.train.sample_shape.iter().product();
+        let sample = |i: usize| &d.train.x_f[i * per..(i + 1) * per];
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        // samples 0 and 10 share class 0; samples 0 and 1 differ.
+        let same = dist(sample(0), sample(10));
+        let diff = dist(sample(0), sample(1));
+        assert!(same < diff, "same {same} diff {diff}");
+    }
+
+    #[test]
+    fn mnist_pixels_are_unit_interval() {
+        let d = load("mnist_syn", &Sizes::small());
+        assert!(d.train.x_f.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn text_lexicons_differ_by_class() {
+        let d = load("imdb_syn", &Sizes::small());
+        let seq = 48;
+        let mut pos_hits = [0usize; 2];
+        for i in 0..d.train.num {
+            let label = d.train.labels[i] as usize;
+            for t in 0..seq {
+                let tok = d.train.x_i[i * seq + t];
+                if (8..32).contains(&tok) {
+                    pos_hits[label] += 1;
+                }
+            }
+        }
+        // 75/25 own/opposite lexicon draws => ~3x asymmetry expected.
+        assert!(pos_hits[1] > pos_hits[0] * 2, "{pos_hits:?}");
+    }
+
+    #[test]
+    fn batches_wrap() {
+        let d = load("noise64", &Sizes::small());
+        let n = d.eval.num;
+        let b = d.eval.batch_f(n, 4); // far past the end -> wraps
+        assert_eq!(b.len(), 4 * 64);
+    }
+}

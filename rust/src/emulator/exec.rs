@@ -1,0 +1,608 @@
+//! Graph executor: runs a manifest model on the Rust GEMM engines.
+//!
+//! Numeric contract: identical to the L2 JAX interpreter — symmetric
+//! quantization with `floor(x/s + .5)` rounding, per-tensor activation
+//! scales, per-output-channel weight scales computed from the weights
+//! themselves, i64 ACU accumulation, dequant `acc * (sa * sw[c]) + bias`.
+//! `rust/tests/emulator_vs_xla.rs` asserts the executor and the AOT
+//! artifacts agree on every model.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::{ExecutionPlan, LayerMode, Model, Node, Op};
+use crate::layers;
+use crate::lut::Lut;
+use crate::mult::MulFn;
+use crate::quant;
+use crate::tensor::{conv_out, im2col_f32, im2col_i32, Tensor, TensorI32};
+
+use super::gemm;
+
+/// Engine style (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Style {
+    Naive,
+    Optimized { threads: usize },
+}
+
+/// Network input (images/latents are F, token sequences are I).
+#[derive(Clone, Debug)]
+pub enum Value {
+    F(Tensor),
+    I(TensorI32),
+}
+
+impl Value {
+    fn as_f(&self) -> Result<&Tensor> {
+        match self {
+            Value::F(t) => Ok(t),
+            Value::I(_) => bail!("expected f32 value"),
+        }
+    }
+
+    fn as_i(&self) -> Result<&TensorI32> {
+        match self {
+            Value::I(t) => Ok(t),
+            Value::F(_) => bail!("expected i32 value"),
+        }
+    }
+}
+
+/// Functional-ACU wrappers at fixed truncation (fn-pointer friendly).
+fn func_for(trunc_k: u32) -> MulFn {
+    match trunc_k {
+        0 => |a, b| crate::mult::exact(a, b),
+        1 => |a, b| crate::mult::trunc_out(a, b, 1),
+        2 => |a, b| crate::mult::trunc_out(a, b, 2),
+        3 => |a, b| crate::mult::trunc_out(a, b, 3),
+        4 => |a, b| crate::mult::trunc_out(a, b, 4),
+        5 => |a, b| crate::mult::trunc_out(a, b, 5),
+        6 => |a, b| crate::mult::trunc_out(a, b, 6),
+        7 => |a, b| crate::mult::trunc_out(a, b, 7),
+        _ => |a, b| crate::mult::trunc_out(a, b, 8),
+    }
+}
+
+/// One pre-quantized weight matrix: (k, n) row-major + per-col scales.
+/// `wq_biased` is the §Perf representation for the optimized LUT engine:
+/// indices pre-offset by 2^(bits-1) so the hot loop is a bare gather.
+struct QuantMat {
+    wq: Vec<i32>,
+    wq_biased: Vec<u16>,
+    k: usize,
+    n: usize,
+    scales: Vec<f32>,
+}
+
+impl QuantMat {
+    fn build(w: &[f32], k: usize, n: usize, bits: u32) -> QuantMat {
+        let scales = quant::weight_scales_per_col(w, k, n, bits);
+        let wq = quant::quantize_weights_per_col(w, k, n, bits, &scales);
+        let half = 1i32 << (bits - 1);
+        let wq_biased = wq.iter().map(|&v| (v + half) as u16).collect();
+        QuantMat {
+            wq,
+            wq_biased,
+            k,
+            n,
+            scales,
+        }
+    }
+}
+
+/// Prepared state for one quantizable node.
+enum PreparedNode {
+    Fp32 {
+        /// Flattened (k, n) weight matrices, one per conv group.
+        mats: Vec<(Vec<f32>, usize, usize)>,
+        bias: Vec<f32>,
+    },
+    Quant {
+        mats: Vec<QuantMat>,
+        bias: Vec<f32>,
+        bits: u32,
+        func: Option<MulFn>, // None => LUT backend
+    },
+}
+
+/// The emulator: a model + plan + scales + engine, ready to run batches.
+///
+/// Buffers for patches/accumulators are allocated per layer call but
+/// weights are quantized exactly once at construction (§4.1's "tensors are
+/// re-used without the need to copy additional data").
+pub struct Executor<'m> {
+    pub model: &'m Model,
+    pub style: Style,
+    plan: ExecutionPlan,
+    act_scales: Vec<f32>,
+    lut: Option<Lut>,
+    params: Vec<Tensor>,
+    prepared: BTreeMap<usize, PreparedNode>,
+}
+
+impl<'m> Executor<'m> {
+    /// Build an executor.
+    ///
+    /// * `params` — fp32 parameters in manifest order.
+    /// * `act_scales` — per-scale-index activation scales (calibrated);
+    ///   may be empty when the plan is all-fp32.
+    /// * `lut` — the ACU table for `LayerMode::ApproxLut` nodes.
+    pub fn new(
+        model: &'m Model,
+        params: Vec<Tensor>,
+        plan: ExecutionPlan,
+        act_scales: Vec<f32>,
+        lut: Option<Lut>,
+        style: Style,
+    ) -> Result<Executor<'m>> {
+        if params.len() != model.params.len() {
+            bail!(
+                "model {} expects {} params, got {}",
+                model.name,
+                model.params.len(),
+                params.len()
+            );
+        }
+        let needs_scales = plan
+            .modes
+            .values()
+            .any(|m| !matches!(m, LayerMode::Fp32));
+        if needs_scales && act_scales.len() != model.n_scales {
+            bail!(
+                "model {} needs {} act scales, got {}",
+                model.name,
+                model.n_scales,
+                act_scales.len()
+            );
+        }
+        let mut ex = Executor {
+            model,
+            style,
+            plan,
+            act_scales,
+            lut,
+            params,
+            prepared: BTreeMap::new(),
+        };
+        ex.prepare()?;
+        Ok(ex)
+    }
+
+    /// Quantize / flatten weights per the plan (once).
+    fn prepare(&mut self) -> Result<()> {
+        for node in &self.model.nodes {
+            if !node.op.is_quantizable() {
+                continue;
+            }
+            let mode = *self
+                .plan
+                .modes
+                .get(&node.id)
+                .ok_or_else(|| anyhow!("plan missing node {}", node.id))?;
+            let prep = match &node.op {
+                Op::Conv2d {
+                    kh,
+                    kw,
+                    cin,
+                    cout,
+                    groups,
+                    ..
+                } => {
+                    let w = &self.params[node.params[0]];
+                    let b = &self.params[node.params[1]];
+                    let cin_g = cin / groups;
+                    let cout_g = cout / groups;
+                    let kf = kh * kw * cin_g;
+                    // Weight tensor layout is (kh, kw, cin_g, cout): slice
+                    // each group's output-channel columns.
+                    let mut flats: Vec<Vec<f32>> = vec![Vec::with_capacity(kf * cout_g); *groups];
+                    for row in 0..kf {
+                        for g in 0..*groups {
+                            let base = row * cout + g * cout_g;
+                            flats[g].extend_from_slice(&w.data[base..base + cout_g]);
+                        }
+                    }
+                    build_prepared(mode, flats, kf, cout_g, b.data.clone())
+                }
+                Op::Linear { din, dout, .. } => {
+                    let w = &self.params[node.params[0]];
+                    let b = &self.params[node.params[1]];
+                    build_prepared(mode, vec![w.data.clone()], *din, *dout, b.data.clone())
+                }
+                Op::Lstm { din, hidden, .. } => {
+                    let wx = &self.params[node.params[0]];
+                    let wh = &self.params[node.params[1]];
+                    let b = &self.params[node.params[2]];
+                    // Two mats: index 0 = input GEMM, 1 = recurrent GEMM.
+                    match mode {
+                        LayerMode::Fp32 => PreparedNode::Fp32 {
+                            mats: vec![
+                                (wx.data.clone(), *din, 4 * hidden),
+                                (wh.data.clone(), *hidden, 4 * hidden),
+                            ],
+                            bias: b.data.clone(),
+                        },
+                        LayerMode::ApproxLut => PreparedNode::Quant {
+                            mats: vec![
+                                QuantMat::build(&wx.data, *din, 4 * hidden, 8),
+                                QuantMat::build(&wh.data, *hidden, 4 * hidden, 8),
+                            ],
+                            bias: b.data.clone(),
+                            bits: 8,
+                            func: None,
+                        },
+                        LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
+                            mats: vec![
+                                QuantMat::build(&wx.data, *din, 4 * hidden, bits),
+                                QuantMat::build(&wh.data, *hidden, 4 * hidden, bits),
+                            ],
+                            bias: b.data.clone(),
+                            bits,
+                            func: Some(func_for(trunc_k)),
+                        },
+                    }
+                }
+                _ => unreachable!(),
+            };
+            self.prepared.insert(node.id, prep);
+        }
+        Ok(())
+    }
+
+    /// GEMM dispatch honouring style + backend. x is fp32 (M, k);
+    /// quantization of x happens here for quant nodes.
+    fn dense(
+        &self,
+        node_id: usize,
+        mat_idx: usize,
+        x: &[f32],
+        m: usize,
+        scale_idx: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let prep = &self.prepared[&node_id];
+        match prep {
+            PreparedNode::Fp32 { mats, .. } => {
+                let (w, k, n) = &mats[mat_idx];
+                match self.style {
+                    Style::Naive => gemm::fp32_naive(x, m, *k, w, *n, out),
+                    Style::Optimized { threads } => {
+                        gemm::fp32_opt(x, m, *k, w, *n, threads, out)
+                    }
+                }
+            }
+            PreparedNode::Quant {
+                mats, bits, func, ..
+            } => {
+                let mat = &mats[mat_idx];
+                // act_scales are calibrated for 8-bit; rescale the stored
+                // calib_max to this node's bitwidth (mixed precision).
+                let sa = self.act_scales[scale_idx]
+                    * (quant::qmax_for(8) as f32 / quant::qmax_for(*bits) as f32);
+                let mut xq = vec![0i32; x.len()];
+                quant::quantize_slice(x, sa, *bits, &mut xq);
+                self.dense_q(node_id, mat_idx, &xq, m, sa, out)?;
+                let _ = (bits, func, mat);
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantized-input GEMM + dequant. The §Perf hot path: the optimized
+    /// LUT engine takes the biased-u16/i32-accumulator kernel; everything
+    /// else goes through the generic i64 kernels.
+    fn dense_q(
+        &self,
+        node_id: usize,
+        mat_idx: usize,
+        xq: &[i32],
+        m: usize,
+        sa: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let PreparedNode::Quant { mats, func, .. } = &self.prepared[&node_id] else {
+            bail!("dense_q on a non-quant node");
+        };
+        let mat = &mats[mat_idx];
+        match (func, self.style) {
+            (None, Style::Optimized { threads }) => {
+                let lut = self.lut.as_ref().context("LUT mode without LUT")?;
+                let mut acc = vec![0i32; m * mat.n];
+                gemm::lut_opt_biased(
+                    xq, m, mat.k, &mat.wq_biased, mat.n, lut, threads, &mut acc,
+                );
+                for mi in 0..m {
+                    for ni in 0..mat.n {
+                        out[mi * mat.n + ni] =
+                            acc[mi * mat.n + ni] as f32 * (sa * mat.scales[ni]);
+                    }
+                }
+                return Ok(());
+            }
+            _ => {}
+        }
+        let mut acc = vec![0i64; m * mat.n];
+        match (func, self.style) {
+            (None, Style::Naive) => {
+                let lut = self.lut.as_ref().context("LUT mode without LUT")?;
+                gemm::lut_naive(xq, m, mat.k, &mat.wq, mat.n, lut, &mut acc)
+            }
+            (Some(f), Style::Naive) => {
+                gemm::func_naive(xq, m, mat.k, &mat.wq, mat.n, *f, &mut acc)
+            }
+            (Some(f), Style::Optimized { threads }) => {
+                gemm::func_opt(xq, m, mat.k, &mat.wq, mat.n, *f, threads, &mut acc)
+            }
+            (None, Style::Optimized { .. }) => unreachable!(),
+        }
+        for mi in 0..m {
+            for ni in 0..mat.n {
+                out[mi * mat.n + ni] = acc[mi * mat.n + ni] as f32 * (sa * mat.scales[ni]);
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_conv(&self, node: &Node, x: &Tensor) -> Result<Tensor> {
+        let (kh, kw, cin, cout, stride, pad, groups, scale_idx) = match &node.op {
+            Op::Conv2d {
+                kh,
+                kw,
+                cin,
+                cout,
+                stride,
+                pad,
+                groups,
+                scale_idx,
+                ..
+            } => (*kh, *kw, *cin, *cout, *stride, *pad, *groups, *scale_idx),
+            _ => unreachable!(),
+        };
+        let (n, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+        anyhow::ensure!(x.shape[3] == cin, "conv input channels");
+        let ho = conv_out(h, kh, stride, pad);
+        let wo = conv_out(w, kw, stride, pad);
+        let cin_g = cin / groups;
+        let cout_g = cout / groups;
+        let m = n * ho * wo;
+        let bias = match &self.prepared[&node.id] {
+            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
+        };
+        let mut out = Tensor::zeros(&[n, ho, wo, cout]);
+        let mut group_out = vec![0f32; m * cout_g];
+
+        // §Perf fast path (optimized engine, quantized node): quantize the
+        // conv input ONCE (kh*kw fewer quantize ops than quantizing the
+        // patch matrix) and run integer im2col. Numerically identical to
+        // patch-then-quantize because q(0) == 0 (§4.1 buffer-reuse spirit).
+        let quant_fast = matches!(self.style, Style::Optimized { .. })
+            && matches!(&self.prepared[&node.id], PreparedNode::Quant { .. });
+        if quant_fast {
+            let (sa, bits) = match &self.prepared[&node.id] {
+                PreparedNode::Quant { bits, .. } => (
+                    self.act_scales[scale_idx]
+                        * (quant::qmax_for(8) as f32 / quant::qmax_for(*bits) as f32),
+                    *bits,
+                ),
+                _ => unreachable!(),
+            };
+            let mut xq = crate::tensor::TensorI32::zeros(&x.shape);
+            quant::quantize_slice(&x.data, sa, bits, &mut xq.data);
+            for g in 0..groups {
+                let xg = if groups == 1 {
+                    // no copy needed: im2col reads directly
+                    im2col_i32(&xq, kh, kw, stride, pad)
+                } else {
+                    im2col_i32(&xq.slice_last(g * cin_g, (g + 1) * cin_g), kh, kw, stride, pad)
+                };
+                self.dense_q(node.id, g, &xg.data, m, sa, &mut group_out)?;
+                for mi in 0..m {
+                    let dst = mi * cout + g * cout_g;
+                    for ci in 0..cout_g {
+                        out.data[dst + ci] =
+                            group_out[mi * cout_g + ci] + bias[g * cout_g + ci];
+                    }
+                }
+            }
+            return Ok(out);
+        }
+
+        for g in 0..groups {
+            let xg = if groups == 1 {
+                x.clone()
+            } else {
+                x.slice_last(g * cin_g, (g + 1) * cin_g)
+            };
+            // Build the fp32 patch matrix; quantization (if any) happens in
+            // dense() with the layer's activation scale — numerically equal
+            // to quantize-then-patch because q(0) == 0.
+            let patches = im2col_f32(&xg, kh, kw, stride, pad);
+            self.dense(node.id, g, &patches.data, m, scale_idx, &mut group_out)?;
+            // Scatter group columns + bias into NHWC output.
+            for mi in 0..m {
+                let dst = mi * cout + g * cout_g;
+                for ci in 0..cout_g {
+                    out.data[dst + ci] = group_out[mi * cout_g + ci] + bias[g * cout_g + ci];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn exec_linear(&self, node: &Node, x: &Tensor) -> Result<Tensor> {
+        let (dout, scale_idx) = match &node.op {
+            Op::Linear {
+                dout, scale_idx, ..
+            } => (*dout, *scale_idx),
+            _ => unreachable!(),
+        };
+        let m = x.shape[0];
+        let bias = match &self.prepared[&node.id] {
+            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
+        };
+        let mut out = Tensor::zeros(&[m, dout]);
+        self.dense(node.id, 0, &x.data, m, scale_idx, &mut out.data)?;
+        for mi in 0..m {
+            for ni in 0..dout {
+                out.data[mi * dout + ni] += bias[ni];
+            }
+        }
+        Ok(out)
+    }
+
+    fn exec_lstm(&self, node: &Node, xs: &Tensor) -> Result<Tensor> {
+        let (din, hidden, scale_x, scale_h) = match &node.op {
+            Op::Lstm {
+                din,
+                hidden,
+                scale_idx,
+                scale_idx2,
+                ..
+            } => (*din, *hidden, *scale_idx, *scale_idx2),
+            _ => unreachable!(),
+        };
+        let (n, t) = (xs.shape[0], xs.shape[1]);
+        anyhow::ensure!(xs.shape[2] == din, "lstm input dim");
+        let bias = match &self.prepared[&node.id] {
+            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
+        };
+        let g4 = 4 * hidden;
+        let mut h = vec![0f32; n * hidden];
+        let mut c = vec![0f32; n * hidden];
+        let mut x_t = vec![0f32; n * din];
+        let mut gx = vec![0f32; n * g4];
+        let mut gh = vec![0f32; n * g4];
+        for ti in 0..t {
+            for ni in 0..n {
+                let src = (ni * t + ti) * din;
+                x_t[ni * din..(ni + 1) * din].copy_from_slice(&xs.data[src..src + din]);
+            }
+            self.dense(node.id, 0, &x_t, n, scale_x, &mut gx)?;
+            self.dense(node.id, 1, &h, n, scale_h, &mut gh)?;
+            for ni in 0..n {
+                for hi in 0..hidden {
+                    let base = ni * g4;
+                    let gi = gx[base + hi] + gh[base + hi] + bias[hi];
+                    let gf = gx[base + hidden + hi] + gh[base + hidden + hi] + bias[hidden + hi];
+                    let gg =
+                        gx[base + 2 * hidden + hi] + gh[base + 2 * hidden + hi] + bias[2 * hidden + hi];
+                    let go =
+                        gx[base + 3 * hidden + hi] + gh[base + 3 * hidden + hi] + bias[3 * hidden + hi];
+                    let i = sigmoid_s(gi);
+                    let f = sigmoid_s(gf);
+                    let g = gg.tanh();
+                    let o = sigmoid_s(go);
+                    let idx = ni * hidden + hi;
+                    c[idx] = f * c[idx] + i * g;
+                    h[idx] = o * c[idx].tanh();
+                }
+            }
+        }
+        Tensor::from_vec(&[n, hidden], h)
+    }
+
+    /// Run one batch through the network. Returns the output tensor.
+    pub fn forward(&self, input: Value) -> Result<Tensor> {
+        let mut vals: BTreeMap<usize, Value> = BTreeMap::new();
+        vals.insert(0, input);
+        let last = self.model.nodes.last().map(|n| n.id).unwrap_or(0);
+        for node in &self.model.nodes {
+            if node.id == 0 {
+                continue;
+            }
+            let v = self.exec_node(node, &vals)?;
+            // Free dead inputs eagerly? BTreeMap small; skip for clarity.
+            vals.insert(node.id, Value::F(v));
+        }
+        match vals.remove(&last) {
+            Some(Value::F(t)) => Ok(t),
+            _ => bail!("model output missing"),
+        }
+    }
+
+    fn exec_node(&self, node: &Node, vals: &BTreeMap<usize, Value>) -> Result<Tensor> {
+        let get_f = |i: usize| -> Result<&Tensor> {
+            vals.get(&node.inputs[i])
+                .ok_or_else(|| anyhow!("missing input {}", node.inputs[i]))?
+                .as_f()
+        };
+        Ok(match &node.op {
+            Op::Input => unreachable!(),
+            Op::Conv2d { .. } => self.exec_conv(node, get_f(0)?)?,
+            Op::Linear { .. } => self.exec_linear(node, get_f(0)?)?,
+            Op::Lstm { .. } => self.exec_lstm(node, get_f(0)?)?,
+            Op::Embedding { .. } => {
+                let toks = vals
+                    .get(&node.inputs[0])
+                    .ok_or_else(|| anyhow!("missing input"))?
+                    .as_i()?;
+                let table = &self.params[node.params[0]];
+                layers::embedding(toks, table)?
+            }
+            Op::Relu => layers::relu(get_f(0)?.clone()),
+            Op::Sigmoid => layers::sigmoid(get_f(0)?.clone()),
+            Op::Tanh => layers::tanh(get_f(0)?.clone()),
+            Op::AvgPool2 => layers::avgpool2(get_f(0)?),
+            Op::Gap => layers::gap(get_f(0)?),
+            Op::Flatten => layers::flatten(get_f(0)?.clone()),
+            Op::Add => get_f(0)?.add(get_f(1)?)?,
+            Op::Concat => {
+                let parts: Vec<&Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|i| vals[i].as_f())
+                    .collect::<Result<_>>()?;
+                Tensor::concat_last(&parts)?
+            }
+            Op::ChannelShuffle { groups } => layers::channel_shuffle(get_f(0)?, *groups),
+            Op::SliceLast { start, end } => get_f(0)?.slice_last(*start, *end),
+            Op::Reshape { shape } => {
+                let x = get_f(0)?.clone();
+                let n = x.shape[0];
+                let mut full = vec![n];
+                full.extend_from_slice(shape);
+                x.reshape(&full)?
+            }
+        })
+    }
+}
+
+fn build_prepared(
+    mode: LayerMode,
+    flats: Vec<Vec<f32>>,
+    k: usize,
+    n: usize,
+    bias: Vec<f32>,
+) -> PreparedNode {
+    match mode {
+        LayerMode::Fp32 => PreparedNode::Fp32 {
+            mats: flats.into_iter().map(|w| (w, k, n)).collect(),
+            bias,
+        },
+        LayerMode::ApproxLut => PreparedNode::Quant {
+            mats: flats
+                .into_iter()
+                .map(|w| QuantMat::build(&w, k, n, 8))
+                .collect(),
+            bias,
+            bits: 8,
+            func: None,
+        },
+        LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
+            mats: flats
+                .into_iter()
+                .map(|w| QuantMat::build(&w, k, n, bits))
+                .collect(),
+            bias,
+            bits,
+            func: Some(func_for(trunc_k)),
+        },
+    }
+}
+
+#[inline(always)]
+fn sigmoid_s(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}

@@ -1,0 +1,382 @@
+//! ACU GEMM kernels — the hot path of the emulation (§4).
+//!
+//! Three product backends (exact f32, LUT gather, functional multiplier) ×
+//! two engine styles:
+//!
+//! * **Naive** — the Table-4 "Baseline Approx." column: textbook
+//!   m/n/k loop nest, column-strided weight access, one scalar table
+//!   lookup per product, no threads. This is deliberately the
+//!   unoptimized LUT emulation the paper compares against.
+//! * **Optimized** — the paper's §4 design re-expressed for scalar Rust:
+//!   row-parallel over the threadpool (OpenMP analogue), loop order
+//!   m-k-n with the LUT *row for x[m,k] hoisted out of the inner loop*
+//!   (one add + one indexed load per product, unit-stride over both the
+//!   weight row and the accumulator — the shape the compiler can
+//!   auto-vectorize into gathers, standing in for AVX2 `vpgatherdd`).
+//!
+//! Accumulators are i64: at 8-bit they cannot overflow i32 for any model
+//! in the zoo, but the 12-bit functional ACUs can (|p|max ≈ 2^22, K up to
+//! ~1.2k ⇒ 2^32+), so the wide type is the correct shared contract.
+
+use crate::lut::Lut;
+use crate::mult::MulFn;
+use crate::util::threadpool;
+
+/// K-block size for the optimized engines: keeps the active x block and
+/// accumulator row in L1 while streaming weight rows.
+const BLOCK_K: usize = 64;
+
+// ---------------------------------------------------------------------------
+// fp32
+// ---------------------------------------------------------------------------
+
+/// Naive fp32 GEMM (reference / "native rust" path in tests).
+pub fn fp32_naive(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0.0f32;
+            for ki in 0..k {
+                acc += x[mi * k + ki] * w[ki * n + ni];
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+}
+
+/// Blocked + threaded fp32 GEMM.
+pub fn fp32_opt(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let rows: Vec<&mut [f32]> = out.chunks_mut(n).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
+        row.fill(0.0);
+        let xrow = &x[mi * k..(mi + 1) * k];
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for ki in k0..k1 {
+                let xv = xrow[ki];
+                let wrow = &w[ki * n..(ki + 1) * n];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// LUT gather
+// ---------------------------------------------------------------------------
+
+/// Baseline LUT GEMM: the unoptimized emulation (scalar `lut.mul` per
+/// product, n-inner loop ⇒ strided weight reads, single thread).
+pub fn lut_naive(xq: &[i32], m: usize, k: usize, wq: &[i32], n: usize, lut: &Lut, out: &mut [i64]) {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0i64;
+            for ki in 0..k {
+                acc += lut.mul(xq[mi * k + ki], wq[ki * n + ni]) as i64;
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+}
+
+/// Optimized LUT GEMM: threaded over rows, LUT row hoisted per (m,k), unit
+/// stride inner loop over weights + accumulators.
+pub fn lut_opt(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    lut: &Lut,
+    threads: usize,
+    out: &mut [i64],
+) {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let half = (lut.n / 2) as i32;
+    let rows: Vec<&mut [i64]> = out.chunks_mut(n).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
+        row.fill(0);
+        let xrow = &xq[mi * k..(mi + 1) * k];
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for ki in k0..k1 {
+                // One LUT row per (m, k): the gather base the paper keeps
+                // in a register for vpgatherdd.
+                let lrow = lut.row(xrow[ki]);
+                let wrow = &wq[ki * n..(ki + 1) * n];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += unsafe {
+                        // SAFETY: wv is a quantized value in [-half, half-1]
+                        // by construction (quantize_slice clamps), so
+                        // wv + half indexes inside the 2^bits row.
+                        *lrow.get_unchecked((wv + half) as usize)
+                    } as i64;
+                }
+            }
+        }
+    });
+}
+
+/// Fastest LUT GEMM: weights pre-converted to *biased* u16 LUT indices at
+/// plan-build time (one add removed from every product), i32 accumulators
+/// (safe: |product| <= 2^14 at 8-bit, K < 2^17 in the zoo), row-paired so
+/// each weight index is loaded once and used for two output rows.
+///
+/// This is the §Perf-pass kernel; `lut_opt` is kept for the generic i64
+/// path and as the before/after comparison point.
+pub fn lut_opt_biased(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq_biased: &[u16],
+    n: usize,
+    lut: &Lut,
+    threads: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq_biased.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    const ROWS: usize = 4; // m-rows sharing one weight-index stream
+    let blocks: Vec<&mut [i32]> = out.chunks_mut(ROWS * n).collect();
+    let mut blocks = blocks;
+    threadpool::parallel_map_into(&mut blocks, threads, |bi, chunk| {
+        chunk.fill(0);
+        let m0 = bi * ROWS;
+        let rows = chunk.len() / n;
+        if rows == ROWS {
+            let (r0, rest) = chunk.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            let x0 = &xq[m0 * k..(m0 + 1) * k];
+            let x1 = &xq[(m0 + 1) * k..(m0 + 2) * k];
+            let x2 = &xq[(m0 + 2) * k..(m0 + 3) * k];
+            let x3 = &xq[(m0 + 3) * k..(m0 + 4) * k];
+            for ki in 0..k {
+                // One LUT row per x value; the shared weight-index stream
+                // is loaded once and feeds four accumulator rows (ILP).
+                let l0 = lut.row(x0[ki]);
+                let l1 = lut.row(x1[ki]);
+                let l2 = lut.row(x2[ki]);
+                let l3 = lut.row(x3[ki]);
+                let wrow = &wq_biased[ki * n..(ki + 1) * n];
+                for (j, &wi) in wrow.iter().enumerate() {
+                    let wi = wi as usize;
+                    // SAFETY: wi < 2^bits by construction (quantize clamps
+                    // to ±qmax, bias adds 2^(bits-1)); j < n == row length.
+                    unsafe {
+                        *r0.get_unchecked_mut(j) += *l0.get_unchecked(wi);
+                        *r1.get_unchecked_mut(j) += *l1.get_unchecked(wi);
+                        *r2.get_unchecked_mut(j) += *l2.get_unchecked(wi);
+                        *r3.get_unchecked_mut(j) += *l3.get_unchecked(wi);
+                    }
+                }
+            }
+        } else {
+            // Tail block (< ROWS rows).
+            for r in 0..rows {
+                let xrow = &xq[(m0 + r) * k..(m0 + r + 1) * k];
+                let orow = &mut chunk[r * n..(r + 1) * n];
+                for ki in 0..k {
+                    let l0 = lut.row(xrow[ki]);
+                    let wrow = &wq_biased[ki * n..(ki + 1) * n];
+                    for (o0, &wi) in orow.iter_mut().zip(wrow) {
+                        unsafe {
+                            *o0 += *l0.get_unchecked(wi as usize);
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Functional ACU (large-bitwidth fallback, §3.4)
+// ---------------------------------------------------------------------------
+
+/// Baseline functional GEMM: scalar behavioral-multiplier call per product.
+pub fn func_naive(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    f: MulFn,
+    out: &mut [i64],
+) {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0i64;
+            for ki in 0..k {
+                acc += f(xq[mi * k + ki] as i64, wq[ki * n + ni] as i64);
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+}
+
+/// Optimized functional GEMM: threaded, k-blocked, unit-stride inner loop.
+pub fn func_opt(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    f: MulFn,
+    threads: usize,
+    out: &mut [i64],
+) {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let rows: Vec<&mut [i64]> = out.chunks_mut(n).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
+        row.fill(0);
+        let xrow = &xq[mi * k..(mi + 1) * k];
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for ki in k0..k1 {
+                let xv = xrow[ki] as i64;
+                let wrow = &wq[ki * n..(ki + 1) * n];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += f(xv, wv as i64);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult;
+    use crate::util::rng::Rng;
+
+    fn rand_q(rng: &mut Rng, len: usize, half: i64) -> Vec<i32> {
+        (0..len).map(|_| rng.range_i64(-half, half) as i32).collect()
+    }
+
+    #[test]
+    fn lut_naive_equals_opt() {
+        let lut = Lut::generate(mult::get("mitchell8").unwrap());
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (7, 33, 12);
+        let xq = rand_q(&mut rng, m * k, 128);
+        let wq = rand_q(&mut rng, k * n, 128);
+        let mut a = vec![0i64; m * n];
+        let mut b = vec![0i64; m * n];
+        lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
+        lut_opt(&xq, m, k, &wq, n, &lut, 3, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lut_exact_equals_integer_matmul() {
+        let lut = Lut::generate(mult::get("exact8").unwrap());
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (5, 17, 9);
+        let xq = rand_q(&mut rng, m * k, 128);
+        let wq = rand_q(&mut rng, k * n, 128);
+        let mut got = vec![0i64; m * n];
+        lut_opt(&xq, m, k, &wq, n, &lut, 2, &mut got);
+        for mi in 0..m {
+            for ni in 0..n {
+                let want: i64 = (0..k)
+                    .map(|ki| xq[mi * k + ki] as i64 * wq[ki * n + ni] as i64)
+                    .sum();
+                assert_eq!(got[mi * n + ni], want);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_opt_biased_matches_naive_over_shapes() {
+        let lut = Lut::generate(mult::get("mul8s_1l2h_like").unwrap());
+        let mut rng = Rng::new(77);
+        for _ in 0..12 {
+            let m = 1 + rng.below(33) as usize;
+            let k = 1 + rng.below(70) as usize;
+            let n = 1 + rng.below(40) as usize;
+            let xq = rand_q(&mut rng, m * k, 128);
+            let wq = rand_q(&mut rng, k * n, 128);
+            let wb: Vec<u16> = wq.iter().map(|&v| (v + 128) as u16).collect();
+            let mut a = vec![0i64; m * n];
+            let mut b = vec![0i32; m * n];
+            lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
+            lut_opt_biased(&xq, m, k, &wb, n, &lut, 2, &mut b);
+            assert_eq!(a, b.iter().map(|&v| v as i64).collect::<Vec<_>>(), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn func_naive_equals_opt_at_12bit() {
+        let f = mult::get("mul12s_2km_like").unwrap().fun;
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (4, 70, 6);
+        let xq = rand_q(&mut rng, m * k, 2048);
+        let wq = rand_q(&mut rng, k * n, 2048);
+        let mut a = vec![0i64; m * n];
+        let mut b = vec![0i64; m * n];
+        func_naive(&xq, m, k, &wq, n, f, &mut a);
+        func_opt(&xq, m, k, &wq, n, f, 2, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn func_matches_lut_at_8bit() {
+        // The LUT and functional paths of the same ACU must agree exactly.
+        let m8 = mult::get("drum8_4").unwrap();
+        let lut = Lut::generate(m8);
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (3, 21, 5);
+        let xq = rand_q(&mut rng, m * k, 128);
+        let wq = rand_q(&mut rng, k * n, 128);
+        let mut a = vec![0i64; m * n];
+        let mut b = vec![0i64; m * n];
+        lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
+        func_naive(&xq, m, k, &wq, n, m8.fun, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fp32_naive_equals_opt() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (6, 40, 11);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.next_gauss()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_gauss()).collect();
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        fp32_naive(&x, m, k, &w, n, &mut a);
+        fp32_opt(&x, m, k, &w, n, 2, &mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-4 * (1.0 + u.abs()), "{u} vs {v}");
+        }
+    }
+}

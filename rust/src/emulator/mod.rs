@@ -1,0 +1,18 @@
+//! The Rust emulation engines for Table 4.
+//!
+//! Two engine styles over the same shared IR:
+//!
+//! * [`Style::Naive`] — the paper's *baseline* approximate implementation:
+//!   scalar LUT lookups, no blocking, no threads.
+//! * [`Style::Optimized`] — the paper's AdaPT CPU design: threadpool
+//!   row-parallelism (§4.2) + hoisted-row LUT gathers with unit-stride
+//!   inner loops (§4.3) + buffer reuse (§4.1).
+//!
+//! The third Table-4 column ("AdaPT", ours via XLA) runs through
+//! [`crate::runtime`] instead: the same graph AOT-lowered with the Pallas
+//! LUT kernel and executed on PJRT.
+
+pub mod exec;
+pub mod gemm;
+
+pub use exec::{Executor, Style, Value};

@@ -1,0 +1,498 @@
+//! The shared model IR + manifest loader + the graph re-transform tool.
+//!
+//! `python/compile/nn.py` authors each model as a flat SSA graph; `aot.py`
+//! writes it verbatim into `artifacts/manifest.json`. This module parses it
+//! into typed Rust nodes so the emulators execute *exactly* the graph the
+//! XLA artifacts were lowered from.
+//!
+//! [`retransform`] is the paper's §3.4 "graph re-transform tool": it walks
+//! a model and swaps vanilla layers for their approximate equivalents
+//! according to a user policy (all layers, a name filter, per-layer
+//! bitwidths for mixed precision) producing an [`ExecutionPlan`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Typed IR operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Input,
+    Conv2d {
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        scale_idx: usize,
+        name: String,
+    },
+    Linear {
+        din: usize,
+        dout: usize,
+        scale_idx: usize,
+        name: String,
+    },
+    Lstm {
+        din: usize,
+        hidden: usize,
+        scale_idx: usize,
+        scale_idx2: usize,
+        name: String,
+    },
+    Embedding {
+        vocab: usize,
+        dim: usize,
+    },
+    Relu,
+    Sigmoid,
+    Tanh,
+    AvgPool2,
+    Gap,
+    Flatten,
+    Add,
+    Concat,
+    ChannelShuffle {
+        groups: usize,
+    },
+    SliceLast {
+        start: usize,
+        end: usize,
+    },
+    Reshape {
+        shape: Vec<usize>,
+    },
+}
+
+impl Op {
+    /// Does this node own quantizable GEMMs (i.e. can it be approximated)?
+    pub fn is_quantizable(&self) -> bool {
+        matches!(self, Op::Conv2d { .. } | Op::Linear { .. } | Op::Lstm { .. })
+    }
+
+    /// Layer name for quantizable ops (policy filters key on this).
+    pub fn layer_name(&self) -> Option<&str> {
+        match self {
+            Op::Conv2d { name, .. } | Op::Linear { name, .. } | Op::Lstm { name, .. } => {
+                Some(name)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One IR node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    pub params: Vec<usize>,
+}
+
+/// Parameter spec (positional, shapes as lowered).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A model as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub paper_row: String,
+    pub kind: String,
+    pub dataset: String,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    pub out_dim: usize,
+    pub loss: String,
+    pub metric: String,
+    pub table2: bool,
+    pub n_scales: usize,
+    pub params: Vec<ParamSpec>,
+    pub params_count: u64,
+    pub macs: u64,
+    pub nodes: Vec<Node>,
+    pub weights_file: String,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// LUT artifact metadata.
+#[derive(Clone, Debug)]
+pub struct LutMeta {
+    pub file: String,
+    pub bits: u32,
+    pub mae_pct: f64,
+    pub mre_pct: f64,
+    pub wce: i64,
+    pub power: f64,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch: usize,
+    pub trunc12_k: u32,
+    pub luts: BTreeMap<String, LutMeta>,
+    pub models: BTreeMap<String, Model>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let batch = j.get("batch")?.usize()?;
+        let trunc12_k = j.get("trunc12_k")?.usize()? as u32;
+
+        let mut luts = BTreeMap::new();
+        for (name, lm) in j.get("luts")?.obj()? {
+            luts.insert(
+                name.clone(),
+                LutMeta {
+                    file: lm.get("file")?.str()?.to_string(),
+                    bits: lm.get("bits")?.usize()? as u32,
+                    mae_pct: lm.get("mae_pct")?.f64()?,
+                    mre_pct: lm.get("mre_pct")?.f64()?,
+                    wce: lm.get("wce")?.i64()?,
+                    power: lm.get("power")?.f64()?,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.obj()? {
+            models.insert(name.clone(), parse_model(name, mj)?);
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            batch,
+            trunc12_k,
+            luts,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&Model> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, model: &str, variant: &str) -> Result<PathBuf> {
+        let m = self.model(model)?;
+        let rel = m
+            .artifacts
+            .get(variant)
+            .with_context(|| format!("model {model:?} has no variant {variant:?}"))?;
+        Ok(self.root.join(rel))
+    }
+
+    pub fn lut_path(&self, acu: &str) -> Result<PathBuf> {
+        let lm = self
+            .luts
+            .get(acu)
+            .with_context(|| format!("no LUT artifact for ACU {acu:?}"))?;
+        Ok(self.root.join(&lm.file))
+    }
+}
+
+fn parse_model(name: &str, mj: &Json) -> Result<Model> {
+    let params = mj
+        .get("params")?
+        .arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.get("name")?.str()?.to_string(),
+                shape: p.get("shape")?.usize_vec()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut nodes = Vec::new();
+    for nj in mj.get("graph")?.arr()? {
+        nodes.push(parse_node(nj).with_context(|| format!("in model {name}"))?);
+    }
+
+    let mut artifacts = BTreeMap::new();
+    for (k, v) in mj.get("artifacts")?.obj()? {
+        artifacts.insert(k.clone(), v.str()?.to_string());
+    }
+
+    Ok(Model {
+        name: name.to_string(),
+        paper_row: mj.get("paper_row")?.str()?.to_string(),
+        kind: mj.get("kind")?.str()?.to_string(),
+        dataset: mj.get("dataset")?.str()?.to_string(),
+        input_shape: mj.get("input_shape")?.usize_vec()?,
+        input_dtype: mj.get("input_dtype")?.str()?.to_string(),
+        out_dim: mj.get("out_dim")?.usize()?,
+        loss: mj.get("loss")?.str()?.to_string(),
+        metric: mj.get("metric")?.str()?.to_string(),
+        table2: mj.get("table2")?.bool()?,
+        n_scales: mj.get("n_scales")?.usize()?,
+        params,
+        params_count: mj.get("params_count")?.i64()? as u64,
+        macs: mj.get("macs")?.i64()? as u64,
+        nodes,
+        weights_file: mj.get("weights_file")?.str()?.to_string(),
+        artifacts,
+    })
+}
+
+fn parse_node(nj: &Json) -> Result<Node> {
+    let id = nj.get("id")?.usize()?;
+    let op_name = nj.get("op")?.str()?;
+    let at = nj.opt("attrs");
+    let ga = |k: &str| -> Result<usize> {
+        at.with_context(|| format!("op {op_name} missing attrs"))?
+            .get(k)?
+            .usize()
+    };
+    let gs = |k: &str| -> Result<String> {
+        Ok(at
+            .with_context(|| format!("op {op_name} missing attrs"))?
+            .get(k)?
+            .str()?
+            .to_string())
+    };
+    let op = match op_name {
+        "input" => Op::Input,
+        "conv2d" => Op::Conv2d {
+            kh: ga("kh")?,
+            kw: ga("kw")?,
+            cin: ga("cin")?,
+            cout: ga("cout")?,
+            stride: ga("stride")?,
+            pad: ga("pad")?,
+            groups: ga("groups")?,
+            scale_idx: ga("scale_idx")?,
+            name: gs("name")?,
+        },
+        "linear" => Op::Linear {
+            din: ga("din")?,
+            dout: ga("dout")?,
+            scale_idx: ga("scale_idx")?,
+            name: gs("name")?,
+        },
+        "lstm" => Op::Lstm {
+            din: ga("din")?,
+            hidden: ga("hidden")?,
+            scale_idx: ga("scale_idx")?,
+            scale_idx2: ga("scale_idx2")?,
+            name: gs("name")?,
+        },
+        "embedding" => Op::Embedding {
+            vocab: ga("vocab")?,
+            dim: ga("dim")?,
+        },
+        "relu" => Op::Relu,
+        "sigmoid" => Op::Sigmoid,
+        "tanh" => Op::Tanh,
+        "avgpool2" => Op::AvgPool2,
+        "gap" => Op::Gap,
+        "flatten" => Op::Flatten,
+        "add" => Op::Add,
+        "concat" => Op::Concat,
+        "channel_shuffle" => Op::ChannelShuffle {
+            groups: ga("groups")?,
+        },
+        "slice_last" => Op::SliceLast {
+            start: ga("start")?,
+            end: ga("end")?,
+        },
+        "reshape" => Op::Reshape {
+            shape: at
+                .with_context(|| "reshape missing attrs")?
+                .get("shape")?
+                .usize_vec()?,
+        },
+        other => bail!("unknown op {other:?}"),
+    };
+    let inputs = nj
+        .get("inputs")?
+        .arr()?
+        .iter()
+        .map(|v| v.usize())
+        .collect::<Result<Vec<_>>>()?;
+    let params = match nj.opt("params") {
+        Some(p) => p.arr()?.iter().map(|v| v.usize()).collect::<Result<Vec<_>>>()?,
+        None => vec![],
+    };
+    Ok(Node {
+        id,
+        op,
+        inputs,
+        params,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Re-transform tool (§3.4)
+// ---------------------------------------------------------------------------
+
+/// How one quantizable layer executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerMode {
+    /// Vanilla fp32 layer (approximation disabled).
+    Fp32,
+    /// Quantize + route products through the named LUT ACU (8-bit family).
+    ApproxLut,
+    /// Quantize + functional ACU at `bits` with output truncation `k`
+    /// (the large-bitwidth fallback; k = 0 means exact-quantized).
+    ApproxFunc { bits: u32, trunc_k: u32 },
+}
+
+/// Per-layer execution assignment produced by [`retransform`].
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    /// node id -> mode for every quantizable node.
+    pub modes: BTreeMap<usize, LayerMode>,
+}
+
+/// Layer-selection policy — the "easily enabled or disabled for the layers
+/// of the model" knob. Mixed precision = different modes per name.
+#[derive(Clone, Debug, Default)]
+pub struct Policy {
+    /// Default mode for quantizable layers not matched below.
+    pub default_mode: Option<LayerMode>,
+    /// Exact-name overrides (e.g. keep the classifier head fp32).
+    pub overrides: BTreeMap<String, LayerMode>,
+}
+
+impl Policy {
+    pub fn all(mode: LayerMode) -> Policy {
+        Policy {
+            default_mode: Some(mode),
+            overrides: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_override(mut self, layer: &str, mode: LayerMode) -> Policy {
+        self.overrides.insert(layer.to_string(), mode);
+        self
+    }
+}
+
+/// Walk the model and assign each quantizable node its execution mode —
+/// the recursive search-and-replace of the paper's re-transform tool.
+pub fn retransform(model: &Model, policy: &Policy) -> ExecutionPlan {
+    let mut modes = BTreeMap::new();
+    for node in &model.nodes {
+        if !node.op.is_quantizable() {
+            continue;
+        }
+        let name = node.op.layer_name().unwrap_or_default();
+        let mode = policy
+            .overrides
+            .get(name)
+            .copied()
+            .or(policy.default_mode)
+            .unwrap_or(LayerMode::Fp32);
+        modes.insert(node.id, mode);
+    }
+    ExecutionPlan { modes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> Model {
+        Model {
+            name: "t".into(),
+            paper_row: "t".into(),
+            kind: "cnn".into(),
+            dataset: "d".into(),
+            input_shape: vec![4, 4, 1],
+            input_dtype: "f32".into(),
+            out_dim: 2,
+            loss: "ce".into(),
+            metric: "top1".into(),
+            table2: false,
+            n_scales: 2,
+            params: vec![],
+            params_count: 0,
+            macs: 0,
+            nodes: vec![
+                Node {
+                    id: 0,
+                    op: Op::Input,
+                    inputs: vec![],
+                    params: vec![],
+                },
+                Node {
+                    id: 1,
+                    op: Op::Conv2d {
+                        kh: 3,
+                        kw: 3,
+                        cin: 1,
+                        cout: 4,
+                        stride: 1,
+                        pad: 1,
+                        groups: 1,
+                        scale_idx: 0,
+                        name: "c1".into(),
+                    },
+                    inputs: vec![0],
+                    params: vec![0, 1],
+                },
+                Node {
+                    id: 2,
+                    op: Op::Linear {
+                        din: 64,
+                        dout: 2,
+                        scale_idx: 1,
+                        name: "fc".into(),
+                    },
+                    inputs: vec![1],
+                    params: vec![2, 3],
+                },
+            ],
+            weights_file: String::new(),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn retransform_all_layers() {
+        let m = tiny_model();
+        let plan = retransform(&m, &Policy::all(LayerMode::ApproxLut));
+        assert_eq!(plan.modes.len(), 2);
+        assert!(plan.modes.values().all(|m| *m == LayerMode::ApproxLut));
+    }
+
+    #[test]
+    fn retransform_override_keeps_head_exact() {
+        let m = tiny_model();
+        let plan = retransform(
+            &m,
+            &Policy::all(LayerMode::ApproxLut).with_override("fc", LayerMode::Fp32),
+        );
+        assert_eq!(plan.modes[&1], LayerMode::ApproxLut);
+        assert_eq!(plan.modes[&2], LayerMode::Fp32);
+    }
+
+    #[test]
+    fn default_policy_is_fp32() {
+        let m = tiny_model();
+        let plan = retransform(&m, &Policy::default());
+        assert!(plan.modes.values().all(|m| *m == LayerMode::Fp32));
+    }
+}

@@ -1,0 +1,171 @@
+//! Layer kernels for the Rust emulators (§3.3): elementwise activations,
+//! pooling, shuffles, embedding — everything around the quantizable GEMMs
+//! (which live in [`crate::emulator::gemm`]).
+//!
+//! All functions are pure `Tensor -> Tensor`; shapes follow the NHWC
+//! conventions of the shared IR.
+
+use anyhow::Result;
+
+use crate::tensor::{Tensor, TensorI32};
+
+pub fn relu(x: Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+pub fn sigmoid(x: Tensor) -> Tensor {
+    x.map(|v| 1.0 / (1.0 + (-v).exp()))
+}
+
+pub fn tanh(x: Tensor) -> Tensor {
+    x.map(|v| v.tanh())
+}
+
+/// 2x2 stride-2 average pool over NHWC (odd tail rows/cols dropped,
+/// mirroring `nn.avgpool2`).
+pub fn avgpool2(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[n, ho, wo, c]);
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ci in 0..c {
+                    let mut s = 0.0f32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            s += x.data
+                                [((ni * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ci];
+                        }
+                    }
+                    out.data[((ni * ho + oy) * wo + ox) * c + ci] = s / 4.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: (N,H,W,C) -> (N,C).
+pub fn gap(x: &Tensor) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        for yi in 0..h {
+            for xi in 0..w {
+                for ci in 0..c {
+                    out.data[ni * c + ci] += x.data[((ni * h + yi) * w + xi) * c + ci];
+                }
+            }
+        }
+    }
+    for v in &mut out.data {
+        *v *= inv;
+    }
+    out
+}
+
+/// Flatten all trailing dims: (N, ...) -> (N, prod).
+pub fn flatten(x: Tensor) -> Tensor {
+    let n = x.shape[0];
+    let rest: usize = x.shape[1..].iter().product();
+    x.reshape(&[n, rest]).expect("flatten")
+}
+
+/// Channel shuffle for grouped convs: (N,H,W,g*cg) with channel c = g_i*cg + c_i
+/// remapped to c_i*g + g_i (transpose of the (g, cg) index pair).
+pub fn channel_shuffle(x: &Tensor, groups: usize) -> Tensor {
+    let c = *x.shape.last().unwrap();
+    assert_eq!(c % groups, 0);
+    let cg = c / groups;
+    let rows = x.data.len() / c;
+    let mut out = Tensor::zeros(&x.shape);
+    for r in 0..rows {
+        let src = &x.data[r * c..(r + 1) * c];
+        let dst = &mut out.data[r * c..(r + 1) * c];
+        for gi in 0..groups {
+            for ci in 0..cg {
+                dst[ci * groups + gi] = src[gi * cg + ci];
+            }
+        }
+    }
+    out
+}
+
+/// Embedding lookup: tokens (N,T) i32 -> (N,T,dim) f32.
+pub fn embedding(tokens: &TensorI32, table: &Tensor) -> Result<Tensor> {
+    let (n, t) = (tokens.shape[0], tokens.shape[1]);
+    let (vocab, dim) = (table.shape[0], table.shape[1]);
+    let mut out = Tensor::zeros(&[n, t, dim]);
+    for (i, &tok) in tokens.data.iter().enumerate() {
+        let tok = tok as usize;
+        anyhow::ensure!(tok < vocab, "token {tok} out of vocab {vocab}");
+        out.data[i * dim..(i + 1) * dim]
+            .copy_from_slice(&table.data[tok * dim..(tok + 1) * dim]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -0.5]).unwrap();
+        assert_eq!(relu(x).data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn sigmoid_midpoint_and_saturation() {
+        let x = Tensor::from_vec(&[3], vec![0.0, 10.0, -10.0]).unwrap();
+        let y = sigmoid(x);
+        assert!((y.data[0] - 0.5).abs() < 1e-7);
+        assert!(y.data[1] > 0.9999);
+        assert!(y.data[2] < 0.0001);
+    }
+
+    #[test]
+    fn avgpool_averages_quads() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let y = avgpool2(&x);
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![2.5]);
+    }
+
+    #[test]
+    fn gap_means_over_space() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.])
+            .unwrap();
+        let y = gap(&x);
+        assert_eq!(y.shape, vec![1, 2]);
+        assert_eq!(y.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn shuffle_transposes_groups() {
+        // c = 4, groups = 2: [a0 a1 b0 b1] -> [a0 b0 a1 b1]
+        let x = Tensor::from_vec(&[1, 1, 1, 4], vec![0., 1., 2., 3.]).unwrap();
+        let y = channel_shuffle(&x, 2);
+        assert_eq!(y.data, vec![0., 2., 1., 3.]);
+        // shuffling twice with g and c/g restores order
+        let z = channel_shuffle(&y, 2);
+        assert_eq!(z.data, vec![0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn embedding_rejects_oov() {
+        let toks = TensorI32::from_vec(&[1, 1], vec![5]).unwrap();
+        let table = Tensor::zeros(&[4, 2]);
+        assert!(embedding(&toks, &table).is_err());
+    }
+
+    #[test]
+    fn embedding_looks_up_rows() {
+        let toks = TensorI32::from_vec(&[1, 2], vec![1, 0]).unwrap();
+        let table = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let y = embedding(&toks, &table).unwrap();
+        assert_eq!(y.data, vec![3., 4., 1., 2.]);
+    }
+}

@@ -1,0 +1,55 @@
+//! # AdaPT-RS
+//!
+//! Production-grade reproduction of **"AdaPT: Fast Emulation of Approximate
+//! DNN Accelerators in PyTorch"** (Danopoulos et al., IEEE TCAD 2022) on the
+//! session's three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the Layer-3 coordinator: it loads the AOT-compiled XLA
+//! executables produced by `python/compile/aot.py` (HLO text via the PJRT C
+//! API), owns every experiment in the paper's evaluation (Tables 1–4), and
+//! implements the substrates the paper depends on — approximate-multiplier
+//! library, LUT engine, quantization + calibration, a scalar *baseline*
+//! emulator and an optimized blocked/threaded emulator, synthetic datasets,
+//! and the QAT retraining loop.
+//!
+//! ## Module map
+//!
+//! * [`util`] — dependency-free substrates: JSON, CLI, PRNG, threadpool,
+//!   micro-benchmark harness.
+//! * [`tensor`] — minimal NHWC ndarray + im2col (Fig. 3's GEMM reshape).
+//! * [`mult`] — behavioral approximate multipliers (EvoApprox substitute),
+//!   bit-exact mirrors of `python/compile/multipliers.py`.
+//! * [`lut`] — product look-up tables: binary loader, generator, layouts.
+//! * [`quant`] — affine quantizer + histogram calibrators (§3.2).
+//! * [`layers`] — fp32/approx layer kernels for the Rust emulators (§3.3).
+//! * [`graph`] — the shared model IR + the graph re-transform tool (§3.4).
+//! * [`emulator`] — the Table-4 engines: naive scalar *baseline* and the
+//!   blocked, threaded, LUT-gather *optimized* engine (§4).
+//! * [`data`] — deterministic synthetic datasets (CIFAR/MNIST/IMDB stand-ins).
+//! * [`runtime`] — PJRT artifact loading/execution (the AdaPT fast path).
+//! * [`coordinator`] — batching engine, calibration, QAT retraining,
+//!   experiment harnesses for every table in the paper.
+//! * [`metrics`] — accuracy/timing metrics.
+
+pub mod coordinator;
+pub mod data;
+pub mod emulator;
+pub mod graph;
+pub mod layers;
+pub mod lut;
+pub mod metrics;
+pub mod mult;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts directory (override with env `ADAPT_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("ADAPT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,188 @@
+//! Product look-up tables (§3.4 "LUT generator" + §4.3 table layout).
+//!
+//! A LUT materializes an ACU as a `(2^b, 2^b)` i32 table indexed by
+//! biased-unsigned operands (`value + 2^(b-1)`), so the emulator's inner
+//! loop is a pure gather — "we would compute any approximate unit without
+//! the need to implement the corresponding function directly" (§4).
+//!
+//! Tables are loaded from the binary artifacts Python emits (format below)
+//! or generated in-process from [`crate::mult`]; `cargo test` cross-checks
+//! the two sources entry-for-entry. Storage is 64-byte aligned, mirroring
+//! the paper's cache-line-aligned tables.
+//!
+//! Binary format (little-endian):
+//! `magic u32 | bits u32 | n u32 | reserved u32 | n*n i32 row-major`.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::mult::Multiplier;
+
+pub const LUT_MAGIC: u32 = 0x4C55_5401;
+
+/// 64-byte-aligned i32 buffer (one cache line on x86).
+#[repr(C, align(64))]
+struct AlignedBlock([i32; 16]);
+
+/// An in-memory product LUT.
+pub struct Lut {
+    pub bits: u32,
+    /// Side length (2^bits).
+    pub n: usize,
+    // Backing storage in aligned blocks; `data` indexes into it.
+    blocks: Vec<AlignedBlock>,
+}
+
+impl Lut {
+    /// Entries as a flat row-major slice of length n*n.
+    #[inline]
+    pub fn data(&self) -> &[i32] {
+        // Safety-free flattening: AlignedBlock is repr(C) over [i32; 16].
+        let ptr = self.blocks.as_ptr() as *const i32;
+        unsafe { std::slice::from_raw_parts(ptr, self.n * self.n) }
+    }
+
+    fn alloc(bits: u32) -> Lut {
+        let n = 1usize << bits;
+        let words = n * n;
+        let nblocks = words.div_ceil(16);
+        let mut blocks = Vec::with_capacity(nblocks);
+        blocks.resize_with(nblocks, || AlignedBlock([0; 16]));
+        Lut { bits, n, blocks }
+    }
+
+    fn data_mut(&mut self) -> &mut [i32] {
+        let ptr = self.blocks.as_mut_ptr() as *mut i32;
+        unsafe { std::slice::from_raw_parts_mut(ptr, self.n * self.n) }
+    }
+
+    /// Generate from a behavioral multiplier (the in-process LUT generator).
+    pub fn generate(m: &Multiplier) -> Lut {
+        let mut lut = Lut::alloc(m.bits);
+        let n = lut.n;
+        let half = (n / 2) as i64;
+        let data = lut.data_mut();
+        for (i, row) in data.chunks_mut(n).enumerate() {
+            let a = i as i64 - half;
+            for (j, slot) in row.iter_mut().enumerate() {
+                let b = j as i64 - half;
+                *slot = m.apply(a, b) as i32;
+            }
+        }
+        lut
+    }
+
+    /// Load from the Python-emitted artifact.
+    pub fn load(path: &Path) -> Result<Lut> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening LUT {}", path.display()))?;
+        let mut header = [0u8; 16];
+        f.read_exact(&mut header)?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let bits = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let n = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+        if magic != LUT_MAGIC {
+            bail!("bad LUT magic {magic:#x} in {}", path.display());
+        }
+        if n != (1usize << bits) {
+            bail!("LUT n {n} != 2^{bits}");
+        }
+        let mut lut = Lut::alloc(bits);
+        let mut bytes = vec![0u8; n * n * 4];
+        f.read_exact(&mut bytes)?;
+        let data = lut.data_mut();
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            data[i] = i32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(lut)
+    }
+
+    /// Scalar lookup of the signed product approx(a, b).
+    #[inline(always)]
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        let half = (self.n / 2) as i32;
+        let ia = (a + half) as usize;
+        let ib = (b + half) as usize;
+        debug_assert!(ia < self.n && ib < self.n, "operand out of range");
+        self.data()[ia * self.n + ib]
+    }
+
+    /// Row slice for operand `a` — hoisted out of inner GEMM loops so the
+    /// hot loop is `row[(b + half)]` with a single add.
+    #[inline(always)]
+    pub fn row(&self, a: i32) -> &[i32] {
+        let half = (self.n / 2) as i32;
+        let ia = (a + half) as usize;
+        &self.data()[ia * self.n..(ia + 1) * self.n]
+    }
+
+    /// Size in bytes (cache/VMEM footprint reporting).
+    pub fn size_bytes(&self) -> usize {
+        self.n * self.n * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult;
+
+    #[test]
+    fn generate_matches_behavioral() {
+        let m = mult::get("mitchell8").unwrap();
+        let lut = Lut::generate(m);
+        assert_eq!(lut.n, 256);
+        for &(a, b) in &[(0, 0), (-128, 127), (5, -7), (127, 127), (-1, -1)] {
+            assert_eq!(lut.mul(a, b) as i64, m.apply(a as i64, b as i64));
+        }
+    }
+
+    #[test]
+    fn alignment_is_64_bytes() {
+        let m = mult::get("exact8").unwrap();
+        let lut = Lut::generate(m);
+        assert_eq!(lut.data().as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn row_equals_mul() {
+        let m = mult::get("drum8_4").unwrap();
+        let lut = Lut::generate(m);
+        let row = lut.row(-3);
+        for b in -128..128 {
+            assert_eq!(row[(b + 128) as usize], lut.mul(-3, b));
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("adapt_lut_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 32]).unwrap();
+        assert!(Lut::load(&p).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let m = mult::get("trunc_out8_4").unwrap();
+        let lut = Lut::generate(m);
+        let dir = std::env::temp_dir().join("adapt_lut_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.bin");
+        // Write in the Python format.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&LUT_MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&8u32.to_le_bytes());
+        bytes.extend_from_slice(&256u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        for v in lut.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let re = Lut::load(&p).unwrap();
+        assert_eq!(re.data(), lut.data());
+    }
+}

@@ -1,0 +1,89 @@
+//! Evaluation metrics (Table 2's accuracy columns).
+
+/// Top-1 accuracy over (N, C) logits.
+pub fn top1(logits: &[f32], classes: usize, labels: &[i32]) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * classes);
+    let mut hits = 0usize;
+    for (i, &l) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == l as usize {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+/// Top-5 accuracy (the paper reports SqueezeNet at top-5).
+pub fn top5(logits: &[f32], classes: usize, labels: &[i32]) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * classes);
+    let k = 5.min(classes);
+    let mut hits = 0usize;
+    for (i, &l) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut idx: Vec<usize> = (0..classes).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        if idx[..k].contains(&(l as usize)) {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+/// Pixel accuracy for reconstruction: fraction of pixels whose binarized
+/// (>= 0.5) reconstruction matches the binarized target — the "accuracy"
+/// convention behind the paper's 99.9x% VAE numbers.
+pub fn pixel_accuracy(recon: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(recon.len(), target.len());
+    let hits = recon
+        .iter()
+        .zip(target)
+        .filter(|(r, t)| (**r >= 0.5) == (**t >= 0.5))
+        .count();
+    hits as f64 / recon.len() as f64
+}
+
+/// Metric dispatch by manifest name.
+pub fn compute(metric: &str, out: &[f32], out_dim: usize, labels: &[i32], target: &[f32]) -> f64 {
+    match metric {
+        "top1" => top1(out, out_dim, labels),
+        "top5" => top5(out, out_dim, labels),
+        "pixel" => pixel_accuracy(out, target),
+        _ => f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_counts_argmax() {
+        let logits = [0.1, 0.9, 0.8, 0.2];
+        assert_eq!(top1(&logits, 2, &[1, 0]), 1.0);
+        assert_eq!(top1(&logits, 2, &[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn top5_is_lenient() {
+        // 6 classes, correct label ranked 5th -> top5 hit, top1 miss.
+        let logits = [0.9, 0.8, 0.7, 0.6, 0.5, 0.4];
+        assert_eq!(top1(&logits, 6, &[4]), 0.0);
+        assert_eq!(top5(&logits, 6, &[4]), 1.0);
+        assert_eq!(top5(&logits, 6, &[5]), 0.0);
+    }
+
+    #[test]
+    fn pixel_accuracy_binarizes() {
+        let recon = [0.6, 0.4, 0.9, 0.1];
+        let target = [1.0, 0.0, 0.0, 0.0];
+        assert_eq!(pixel_accuracy(&recon, &target), 0.75);
+    }
+}

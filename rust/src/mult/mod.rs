@@ -1,0 +1,389 @@
+//! Behavioral approximate-multiplier library (EvoApprox substitute).
+//!
+//! Bit-exact Rust mirrors of `python/compile/multipliers.py` — the Python
+//! side generates the LUT artifacts at `make artifacts`, and `cargo test`
+//! cross-checks every entry of every shipped LUT against these models
+//! (`rust/tests/lut_cross_check.rs`), so the two languages can never drift.
+//!
+//! All models act on magnitudes with the exact product sign re-applied;
+//! operands are signed two's-complement `bits`-wide values.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Fixed-point fraction bits for the Mitchell multiplier (mirror of
+/// `multipliers.MITCHELL_FRAC_BITS`).
+pub const MITCHELL_FRAC_BITS: u32 = 16;
+
+/// The product function of one approximate compute unit.
+pub type MulFn = fn(i64, i64) -> i64;
+
+fn split_sign(a: i64, b: i64) -> (i64, i64, i64) {
+    let sign = a.signum() * b.signum();
+    (a.abs(), b.abs(), sign)
+}
+
+fn floor_log2(x: i64) -> u32 {
+    debug_assert!(x >= 1);
+    63 - (x as u64).leading_zeros()
+}
+
+/// Exact signed product.
+pub fn exact(a: i64, b: i64) -> i64 {
+    a * b
+}
+
+/// Input truncation: zero the k magnitude LSBs of both operands.
+pub fn trunc_in(a: i64, b: i64, k: u32) -> i64 {
+    let (aa, ab, sign) = split_sign(a, b);
+    let mask = !((1i64 << k) - 1);
+    sign * ((aa & mask) * (ab & mask))
+}
+
+/// Partial-product perforation: drop the k lowest rows (zero b's k LSBs).
+pub fn perf_pp(a: i64, b: i64, k: u32) -> i64 {
+    let (aa, ab, sign) = split_sign(a, b);
+    let mask = !((1i64 << k) - 1);
+    sign * (aa * (ab & mask))
+}
+
+/// Fixed-width output truncation: exact product with k LSBs zeroed.
+pub fn trunc_out(a: i64, b: i64, k: u32) -> i64 {
+    let (aa, ab, sign) = split_sign(a, b);
+    let mask = !((1i64 << k) - 1);
+    sign * ((aa * ab) & mask)
+}
+
+/// Output truncation with midpoint compensation on nonzero products.
+pub fn comp_trunc_out(a: i64, b: i64, k: u32) -> i64 {
+    let (aa, ab, sign) = split_sign(a, b);
+    let p = aa * ab;
+    let mask = !((1i64 << k) - 1);
+    let comp = if p > 0 { 1i64 << (k - 1) } else { 0 };
+    sign * ((p & mask) + comp)
+}
+
+/// Mitchell logarithmic multiplier, integer fixed-point form.
+/// See the Python mirror for the derivation; identical shift arithmetic.
+pub fn mitchell(a: i64, b: i64) -> i64 {
+    let f = MITCHELL_FRAC_BITS;
+    let (aa, ab, sign) = split_sign(a, b);
+    if aa == 0 || ab == 0 {
+        return 0;
+    }
+    let ka = floor_log2(aa);
+    let kb = floor_log2(ab);
+    let one = 1i64 << f;
+    let fa = ((aa << f) >> ka) - one;
+    let fb = ((ab << f) >> kb) - one;
+    let ksum = ka + kb;
+    let fsum = fa + fb;
+    let (mant, kk) = if fsum >= one {
+        (fsum, ksum + 1)
+    } else {
+        (one + fsum, ksum)
+    };
+    let p = if kk >= f {
+        mant << (kk - f)
+    } else {
+        mant >> (f - kk)
+    };
+    sign * p
+}
+
+/// Fixed-width array truncation on the two's-complement product:
+/// `floor(a*b / 2^k) * 2^k` (arithmetic shift). Sign-ASYMMETRIC: always
+/// rounds toward -inf, so every product carries a negative bias that
+/// accumulates across the dot product — the gate-level error mode that
+/// actually damages DNN accuracy (and that QAT recovers).
+pub fn floor_trunc(a: i64, b: i64, k: u32) -> i64 {
+    ((a * b) >> k) << k
+}
+
+/// DRUM-k: keep k leading magnitude bits (unbiased via the trailing-one
+/// trick), multiply exactly, shift back.
+pub fn drum(a: i64, b: i64, k: u32) -> i64 {
+    let (aa, ab, sign) = split_sign(a, b);
+    let reduce = |x: i64| -> i64 {
+        if x == 0 {
+            return 0;
+        }
+        let lx = floor_log2(x);
+        let t = lx.saturating_sub(k - 1);
+        if t == 0 {
+            x
+        } else {
+            ((x >> t) << t) | (1i64 << (t - 1))
+        }
+    };
+    sign * (reduce(aa) * reduce(ab))
+}
+
+/// A named ACU with its bitwidth and power proxy (mirrors the Python
+/// registry; power normalized to exact8 == 1.0).
+#[derive(Clone, Copy, Debug)]
+pub struct Multiplier {
+    pub name: &'static str,
+    pub bits: u32,
+    pub fun: MulFn,
+    pub power: f64,
+    /// Sign-magnitude models satisfy approx(-a,b) == -approx(a,b); the
+    /// two's-complement floor-truncation family does not.
+    pub symmetric: bool,
+}
+
+impl Multiplier {
+    pub fn qmax(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    pub fn apply(&self, a: i64, b: i64) -> i64 {
+        (self.fun)(a, b)
+    }
+}
+
+macro_rules! mul_entry {
+    ($name:literal, $bits:literal, $power:literal, $f:expr) => {
+        mul_entry!($name, $bits, $power, $f, true)
+    };
+    ($name:literal, $bits:literal, $power:literal, $f:expr, $sym:literal) => {
+        Multiplier {
+            name: $name,
+            bits: $bits,
+            fun: $f,
+            power: $power,
+            symmetric: $sym,
+        }
+    };
+}
+
+/// The full registry — order matches the Python `LUT_ACUS` superset.
+pub const REGISTRY: &[Multiplier] = &[
+    mul_entry!("exact8", 8, 1.00, |a, b| exact(a, b)),
+    mul_entry!("trunc_in8_2", 8, 0.62, |a, b| trunc_in(a, b, 2)),
+    mul_entry!("perf_pp8_3", 8, 0.66, |a, b| perf_pp(a, b, 3)),
+    mul_entry!("perf_pp8_5", 8, 0.45, |a, b| perf_pp(a, b, 5)),
+    mul_entry!("trunc_out8_4", 8, 0.78, |a, b| trunc_out(a, b, 4)),
+    mul_entry!("comp_trunc_out8_6", 8, 0.70, |a, b| comp_trunc_out(a, b, 6)),
+    mul_entry!("mitchell8", 8, 0.40, |a, b| mitchell(a, b)),
+    mul_entry!("drum8_4", 8, 0.52, |a, b| drum(a, b, 4)),
+    mul_entry!("drum8_6", 8, 0.74, |a, b| drum(a, b, 6)),
+    mul_entry!("floor_trunc8_5", 8, 0.72, |a, b| floor_trunc(a, b, 5), false),
+    mul_entry!("floor_trunc8_6", 8, 0.65, |a, b| floor_trunc(a, b, 6), false),
+    mul_entry!("floor_trunc8_7", 8, 0.58, |a, b| floor_trunc(a, b, 7), false),
+    mul_entry!("exact12", 12, 2.25, |a, b| exact(a, b)),
+    mul_entry!("trunc_out12_4", 12, 1.95, |a, b| trunc_out(a, b, 4)),
+    mul_entry!("comp_trunc_out12_4", 12, 1.97, |a, b| comp_trunc_out(a, b, 4)),
+    mul_entry!("mitchell12", 12, 0.90, |a, b| mitchell(a, b)),
+    mul_entry!("drum12_6", 12, 1.15, |a, b| drum(a, b, 6)),
+    // Table-2 operating-point aliases (same functions as in Python).
+    mul_entry!("mul8s_1l2h_like", 8, 0.65, |a, b| floor_trunc(a, b, 6), false),
+    mul_entry!("mul12s_2km_like", 12, 1.95, |a, b| trunc_out(a, b, 4)),
+];
+
+/// Look up an ACU by name.
+pub fn get(name: &str) -> Result<&'static Multiplier> {
+    REGISTRY
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow!("unknown multiplier {name:?}"))
+}
+
+/// All names at a given bitwidth.
+pub fn names_with_bits(bits: u32) -> Vec<&'static str> {
+    REGISTRY
+        .iter()
+        .filter(|m| m.bits == bits)
+        .map(|m| m.name)
+        .collect()
+}
+
+/// Error characterization of an ACU vs the exact product (Table-2 header
+/// metrics). 8-bit: exhaustive; wider: deterministic sampling.
+#[derive(Clone, Debug)]
+pub struct ErrorProfile {
+    pub name: String,
+    pub bits: u32,
+    /// Mean absolute error as % of the 2^(2b) output range (EvoApprox MAE%).
+    pub mae_pct: f64,
+    /// Mean relative error % over nonzero exact products.
+    pub mre_pct: f64,
+    /// Worst-case absolute error.
+    pub wce: i64,
+    pub power: f64,
+}
+
+pub fn characterize(m: &Multiplier, samples: usize, seed: u64) -> ErrorProfile {
+    let half = 1i64 << (m.bits - 1);
+    let mut abs_sum = 0.0f64;
+    let mut rel_sum = 0.0f64;
+    let mut rel_n = 0u64;
+    let mut wce = 0i64;
+    let mut n = 0u64;
+    let mut eval = |a: i64, b: i64| {
+        let ex = a * b;
+        let ap = m.apply(a, b);
+        let err = (ap - ex).abs();
+        abs_sum += err as f64;
+        wce = wce.max(err);
+        if ex != 0 {
+            rel_sum += err as f64 / ex.abs() as f64;
+            rel_n += 1;
+        }
+        n += 1;
+    };
+    if m.bits <= 8 {
+        for a in -half..half {
+            for b in -half..half {
+                eval(a, b);
+            }
+        }
+    } else {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        for _ in 0..samples.max(1) {
+            let a = rng.range_i64(-half, half);
+            let b = rng.range_i64(-half, half);
+            eval(a, b);
+        }
+    }
+    let out_range = (1u64 << (2 * m.bits)) as f64;
+    ErrorProfile {
+        name: m.name.to_string(),
+        bits: m.bits,
+        mae_pct: abs_sum / n as f64 / out_range * 100.0,
+        mre_pct: rel_sum / rel_n as f64 * 100.0,
+        wce,
+        power: m.power,
+    }
+}
+
+/// Characterize the whole registry (the `adapt multipliers` report).
+pub fn characterize_all(samples: usize) -> BTreeMap<String, ErrorProfile> {
+    REGISTRY
+        .iter()
+        .map(|m| (m.name.to_string(), characterize(m, samples, 0)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_annihilates_for_all() {
+        for m in REGISTRY {
+            let half = 1i64 << (m.bits - 1);
+            for v in [-half, -3, -1, 0, 1, 5, half - 1] {
+                assert_eq!(m.apply(0, v), 0, "{} 0*{v}", m.name);
+                assert_eq!(m.apply(v, 0), 0, "{} {v}*0", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn floor_trunc_is_negatively_biased() {
+        let mut bias = 0i64;
+        for a in -128i64..128 {
+            for b in -128i64..128 {
+                let e = floor_trunc(a, b, 6) - a * b;
+                assert!(e <= 0, "floor rounds toward -inf");
+                assert!(e > -64);
+                bias += e;
+            }
+        }
+        let mean = bias as f64 / 65536.0;
+        assert!((-32.0..-28.0).contains(&mean), "mean bias {mean}");
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        for m in REGISTRY.iter().filter(|m| m.symmetric) {
+            let half = 1i64 << (m.bits - 1);
+            let vals = [1, 2, 7, half / 2, half - 1];
+            for &a in &vals {
+                for &b in &vals {
+                    let p = m.apply(a, b);
+                    assert_eq!(m.apply(-a, b), -p, "{}", m.name);
+                    assert_eq!(m.apply(a, -b), -p, "{}", m.name);
+                    assert_eq!(m.apply(-a, -b), p, "{}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_is_exact() {
+        assert_eq!(exact(-128, 127), -16256);
+        assert_eq!(exact(2047, -2048), -4192256);
+    }
+
+    #[test]
+    fn mitchell_exact_on_powers_of_two() {
+        // log-domain addition is exact when both mantissa fractions are 0.
+        for &a in &[1i64, 2, 4, 8, 16, 32, 64] {
+            for &b in &[1i64, 2, 4, 8, 16, 32, 64] {
+                assert_eq!(mitchell(a, b), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mitchell_underestimates_within_bound() {
+        // Mitchell's classic property: approx <= exact, relative error
+        // bounded (~8.6% continuous; integer fixed-point reaches 11.1% at
+        // tiny operands, e.g. 3*3 -> 8).
+        for a in 1..128i64 {
+            for b in 1..128i64 {
+                let ap = mitchell(a, b);
+                let ex = a * b;
+                assert!(ap <= ex, "{a}*{b}: {ap} > {ex}");
+                let rel = (ex - ap) as f64 / ex as f64;
+                assert!(rel <= 0.12, "{a}*{b}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn drum_keeps_small_operands_exact() {
+        for a in -15i64..16 {
+            for b in -15i64..16 {
+                assert_eq!(drum(a, b, 4), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn trunc_out_bounded_error() {
+        for a in -128i64..128 {
+            for b in -128i64..128 {
+                let err = (trunc_out(a, b, 4) - a * b).abs();
+                assert!(err < 16, "{a}*{b} err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn characterization_matches_python_numbers() {
+        // Values printed by `python compile/multipliers.py` (exhaustive).
+        let m = get("mitchell8").unwrap();
+        let p = characterize(m, 0, 0);
+        assert!((p.mre_pct - 3.69941).abs() < 0.01, "MRE {}", p.mre_pct);
+        assert_eq!(p.wce, 1024);
+        let m = get("trunc_out8_4").unwrap();
+        let p = characterize(m, 0, 0);
+        assert!((p.mre_pct - 1.18521).abs() < 0.01);
+        assert_eq!(p.wce, 15);
+        let m = get("mul8s_1l2h_like").unwrap();
+        let p = characterize(m, 0, 0);
+        assert!((p.mre_pct - 5.673).abs() < 0.01, "MRE {}", p.mre_pct);
+        assert_eq!(p.wce, 63);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(get("mul8s_1l2h_like").is_ok());
+        assert!(get("nope").is_err());
+        assert_eq!(names_with_bits(8).len(), 13);
+    }
+}

@@ -1,0 +1,354 @@
+//! Activation-range calibrators (§3.2.1).
+//!
+//! The paper uses TensorRT's calibrator classes; this module is that
+//! substrate, built from scratch: a streaming |x| histogram with dynamic
+//! range growth (bin-merging, the TensorRT scheme) and four scale-selection
+//! rules — max, percentile (paper default, 99.9 %), MSE, and KL/entropy.
+
+use super::qmax_for;
+
+/// Scale-selection rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibratorKind {
+    Max,
+    /// Percentile in permille-of-one form, e.g. 0.999.
+    Percentile,
+    Mse,
+    Entropy,
+}
+
+impl CalibratorKind {
+    pub fn parse(s: &str) -> Option<CalibratorKind> {
+        Some(match s {
+            "max" => CalibratorKind::Max,
+            "percentile" => CalibratorKind::Percentile,
+            "mse" => CalibratorKind::Mse,
+            "entropy" => CalibratorKind::Entropy,
+            _ => return None,
+        })
+    }
+}
+
+/// Common interface: stream activation tensors, then compute a scale.
+pub trait Calibrator {
+    fn observe(&mut self, xs: &[f32]);
+    fn scale(&self, bits: u32) -> f32;
+}
+
+/// Plain abs-max calibration ("simply finding the max absolute number").
+#[derive(Default, Debug)]
+pub struct MaxCalibrator {
+    amax: f32,
+}
+
+impl Calibrator for MaxCalibrator {
+    fn observe(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.amax = self.amax.max(x.abs());
+        }
+    }
+
+    fn scale(&self, bits: u32) -> f32 {
+        (self.amax.max(1e-12)) / qmax_for(bits) as f32
+    }
+}
+
+/// Streaming |x| histogram with TensorRT-style dynamic growth: when a new
+/// maximum arrives the bin width doubles and existing counts merge 2->1,
+/// so earlier observations are never discarded.
+#[derive(Debug)]
+pub struct HistogramCalibrator {
+    pub kind: CalibratorKind,
+    /// Percentile level for `CalibratorKind::Percentile` (paper: 0.999).
+    pub percentile: f64,
+    bins: Vec<u64>,
+    bin_width: f32,
+    total: u64,
+}
+
+pub const HIST_BINS: usize = 2048;
+
+impl HistogramCalibrator {
+    pub fn new(kind: CalibratorKind) -> Self {
+        Self {
+            kind,
+            percentile: 0.999,
+            bins: vec![0; HIST_BINS],
+            bin_width: 0.0,
+            total: 0,
+        }
+    }
+
+    pub fn with_percentile(mut self, p: f64) -> Self {
+        self.percentile = p;
+        self
+    }
+
+    fn grow_to(&mut self, amax: f32) {
+        if self.bin_width == 0.0 {
+            self.bin_width = amax / HIST_BINS as f32;
+            return;
+        }
+        while amax > self.bin_width * HIST_BINS as f32 {
+            // Double the width: merge bin pairs into the lower half.
+            for i in 0..HIST_BINS / 2 {
+                self.bins[i] = self.bins[2 * i] + self.bins[2 * i + 1];
+            }
+            for b in self.bins[HIST_BINS / 2..].iter_mut() {
+                *b = 0;
+            }
+            self.bin_width *= 2.0;
+        }
+    }
+
+    /// The |x| value at the right edge of bin i.
+    fn edge(&self, i: usize) -> f32 {
+        (i + 1) as f32 * self.bin_width
+    }
+
+    fn cdf_value(&self, q: f64) -> f32 {
+        let target = (self.total as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.edge(i);
+            }
+        }
+        self.edge(HIST_BINS - 1)
+    }
+
+    /// Expected quantization MSE if the range is clipped at `clip`,
+    /// approximating in-bin mass at bin centers.
+    fn mse_at(&self, clip: f32, bits: u32) -> f64 {
+        let step = clip / qmax_for(bits) as f32;
+        let mut err = 0.0f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let center = (i as f32 + 0.5) * self.bin_width;
+            let e = if center > clip {
+                (center - clip) as f64 // clipped mass
+            } else {
+                // uniform rounding error inside a quant step: std = step/sqrt(12)
+                (step as f64) / 12f64.sqrt()
+            };
+            err += c as f64 * e * e;
+        }
+        err / self.total.max(1) as f64
+    }
+
+    /// KL divergence between the clipped/requantized distribution and the
+    /// original histogram (TensorRT's entropy calibrator, simplified to
+    /// symmetric ranges).
+    fn kl_at(&self, clip_bin: usize, bits: u32) -> f64 {
+        let levels = qmax_for(bits) as usize + 1;
+        let nb = clip_bin + 1;
+        if nb < levels {
+            return f64::INFINITY;
+        }
+        // Reference distribution: bins 0..nb with the clipped tail folded
+        // into the last bin.
+        let tail: u64 = self.bins[nb..].iter().sum();
+        let mut p: Vec<f64> = self.bins[..nb].iter().map(|&c| c as f64).collect();
+        *p.last_mut().unwrap() += tail as f64;
+        // Quantized distribution: nb bins squeezed into `levels` buckets,
+        // then re-expanded uniformly over the nonzero source bins.
+        let mut q = vec![0.0f64; nb];
+        let per = nb as f64 / levels as f64;
+        for l in 0..levels {
+            let lo = (l as f64 * per) as usize;
+            let hi = (((l + 1) as f64 * per) as usize).min(nb).max(lo + 1);
+            let mass: f64 = p[lo..hi].iter().sum();
+            let nz = p[lo..hi].iter().filter(|&&v| v > 0.0).count();
+            if nz > 0 {
+                let share = mass / nz as f64;
+                for (i, slot) in q[lo..hi].iter_mut().enumerate() {
+                    if p[lo + i] > 0.0 {
+                        *slot = share;
+                    }
+                }
+            }
+        }
+        let psum: f64 = p.iter().sum();
+        let qsum: f64 = q.iter().sum();
+        if psum == 0.0 || qsum == 0.0 {
+            return f64::INFINITY;
+        }
+        let mut kl = 0.0;
+        for (pi, qi) in p.iter().zip(&q) {
+            if *pi > 0.0 && *qi > 0.0 {
+                let pn = pi / psum;
+                let qn = qi / qsum;
+                kl += pn * (pn / qn).ln();
+            }
+        }
+        kl
+    }
+}
+
+impl Calibrator for HistogramCalibrator {
+    fn observe(&mut self, xs: &[f32]) {
+        let mut amax = 0.0f32;
+        for &x in xs {
+            amax = amax.max(x.abs());
+        }
+        if amax > 0.0 {
+            self.grow_to(amax);
+        }
+        if self.bin_width == 0.0 {
+            return; // all zeros so far
+        }
+        let inv = 1.0 / self.bin_width;
+        for &x in xs {
+            let b = ((x.abs() * inv) as usize).min(HIST_BINS - 1);
+            self.bins[b] += 1;
+        }
+        self.total += xs.len() as u64;
+    }
+
+    fn scale(&self, bits: u32) -> f32 {
+        let qmax = qmax_for(bits) as f32;
+        if self.total == 0 || self.bin_width == 0.0 {
+            return 1e-12;
+        }
+        let calib_max = match self.kind {
+            CalibratorKind::Max => self.edge(
+                self.bins
+                    .iter()
+                    .rposition(|&c| c > 0)
+                    .unwrap_or(HIST_BINS - 1),
+            ),
+            CalibratorKind::Percentile => self.cdf_value(self.percentile),
+            CalibratorKind::Mse => {
+                // Sweep 128 candidate clips across the occupied range.
+                let top = self.edge(
+                    self.bins
+                        .iter()
+                        .rposition(|&c| c > 0)
+                        .unwrap_or(HIST_BINS - 1),
+                );
+                let mut best = (f64::INFINITY, top);
+                for i in 1..=128 {
+                    let clip = top * i as f32 / 128.0;
+                    let e = self.mse_at(clip, bits);
+                    if e < best.0 {
+                        best = (e, clip);
+                    }
+                }
+                best.1
+            }
+            CalibratorKind::Entropy => {
+                let top_bin = self
+                    .bins
+                    .iter()
+                    .rposition(|&c| c > 0)
+                    .unwrap_or(HIST_BINS - 1);
+                let start = (qmax_for(bits) as usize + 1).min(top_bin);
+                let mut best = (f64::INFINITY, self.edge(top_bin));
+                let step = ((top_bin - start) / 64).max(1);
+                let mut cb = start;
+                while cb <= top_bin {
+                    let kl = self.kl_at(cb, bits);
+                    if kl < best.0 {
+                        best = (kl, self.edge(cb));
+                    }
+                    cb += step;
+                }
+                best.1
+            }
+        };
+        calib_max.max(1e-12) / qmax
+    }
+}
+
+/// Construct the calibrator the paper defaults to (99.9 % percentile).
+pub fn default_calibrator() -> HistogramCalibrator {
+    HistogramCalibrator::new(CalibratorKind::Percentile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gauss_samples(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.next_gauss()).collect()
+    }
+
+    #[test]
+    fn max_calibrator_tracks_abs_max() {
+        let mut c = MaxCalibrator::default();
+        c.observe(&[0.5, -3.0, 1.0]);
+        c.observe(&[2.0]);
+        assert!((c.scale(8) - 3.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        // 10k gaussians plus one huge outlier: percentile scale must stay
+        // near the gaussian range, max scale must chase the outlier.
+        let mut xs = gauss_samples(10_000, 1);
+        xs.push(1000.0);
+        let mut hist = HistogramCalibrator::new(CalibratorKind::Percentile);
+        hist.observe(&xs);
+        let mut mx = MaxCalibrator::default();
+        mx.observe(&xs);
+        let s_h = hist.scale(8);
+        let s_m = mx.scale(8);
+        assert!(s_m > 5.0 / 127.0, "max should see the outlier: {s_m}");
+        assert!(s_h < 8.0 / 127.0, "percentile should clip it: {s_h}");
+        assert!(s_h > 2.0 / 127.0, "but keep the gaussian mass: {s_h}");
+    }
+
+    #[test]
+    fn histogram_growth_preserves_counts() {
+        let mut hist = HistogramCalibrator::new(CalibratorKind::Max);
+        hist.observe(&[0.1; 100]);
+        hist.observe(&[50.0]); // forces several doublings
+        let total: u64 = hist.bins.iter().sum();
+        assert_eq!(total, 101);
+        assert_eq!(hist.total, 101);
+    }
+
+    #[test]
+    fn mse_beats_max_on_outliers_at_low_bitwidth() {
+        // At 8 bits the rounding error is so small that MSE correctly keeps
+        // the outliers in range; at 4 bits (15 levels) clipping wins — the
+        // classic MSE-calibration trade-off.
+        let mut xs = gauss_samples(20_000, 2);
+        for i in 0..3 {
+            xs.push(15.0 + i as f32);
+        }
+        let mut mse = HistogramCalibrator::new(CalibratorKind::Mse);
+        mse.observe(&xs);
+        let clip4 = mse.scale(4) * qmax_for(4) as f32;
+        assert!(clip4 < 10.0, "4-bit MSE clip {clip4} should drop outliers");
+        let clip8 = mse.scale(8) * qmax_for(8) as f32;
+        assert!(clip8 > clip4, "8-bit clip {clip8} should be wider");
+    }
+
+    #[test]
+    fn entropy_produces_finite_reasonable_scale() {
+        let xs = gauss_samples(30_000, 3);
+        let mut ent = HistogramCalibrator::new(CalibratorKind::Entropy);
+        ent.observe(&xs);
+        let s = ent.scale(8);
+        let clip = s * 127.0;
+        assert!(clip > 1.0 && clip < 6.0, "clip {clip}");
+    }
+
+    #[test]
+    fn zero_stream_yields_tiny_scale() {
+        let hist = HistogramCalibrator::new(CalibratorKind::Percentile);
+        assert!(hist.scale(8) <= 1e-11);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(CalibratorKind::parse("mse"), Some(CalibratorKind::Mse));
+        assert_eq!(CalibratorKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,134 @@
+//! Quantization + calibration (§3.2).
+//!
+//! Symmetric affine quantizer (zero_point = 0) mirroring
+//! `python/compile/quantize.py` bit-for-bit: `q = clip(floor(x/s + .5))`,
+//! per-tensor activation scales, per-output-channel weight scales.
+//!
+//! Calibrators learn the activation `calib_max` offline from the fp32
+//! activation taps (the `acts` AOT executable): the paper's default is a
+//! 99.9-percentile histogram calibrator ("we saw it performed the best
+//! overall"), with max / MSE / entropy "transparently" selectable — all
+//! four are implemented here and swept by `cargo bench --bench calibration`.
+
+pub mod calib;
+
+pub use calib::{Calibrator, CalibratorKind, HistogramCalibrator, MaxCalibrator};
+
+/// Largest representable magnitude at a bitwidth (127 at 8-bit).
+pub fn qmax_for(bits: u32) -> i32 {
+    (1i32 << (bits - 1)) - 1
+}
+
+/// Quantize one value: round-half-up, clip to the symmetric range.
+///
+/// NOTE: true division, not multiply-by-reciprocal — the XLA artifacts
+/// compute `floor(x / s + 0.5)` and a 1-ulp reciprocal difference flips
+/// boundary values, breaking the bit-exact emulator/XLA cross-check.
+#[inline(always)]
+pub fn quantize_one(x: f32, scale: f32, qmax: i32) -> i32 {
+    let q = (x / scale + 0.5).floor();
+    (q as i32).clamp(-qmax, qmax)
+}
+
+/// Quantize a slice with one scale (per-tensor activations).
+pub fn quantize_slice(xs: &[f32], scale: f32, bits: u32, out: &mut [i32]) {
+    let qmax = qmax_for(bits);
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = quantize_one(x, scale, qmax);
+    }
+}
+
+/// Dequantize: q * scale.
+pub fn dequantize_slice(qs: &[i32], scale: f32, out: &mut [f32]) {
+    for (o, &q) in out.iter_mut().zip(qs) {
+        *o = q as f32 * scale;
+    }
+}
+
+/// Per-output-channel weight scales for a (K, N) row-major weight matrix:
+/// `scale[n] = max_k |w[k,n]| / qmax` (mirror of `weight_scale_per_col`).
+pub fn weight_scales_per_col(w: &[f32], k: usize, n: usize, bits: u32) -> Vec<f32> {
+    assert_eq!(w.len(), k * n);
+    let qmax = qmax_for(bits) as f32;
+    let mut amax = vec![0.0f32; n];
+    for row in w.chunks_exact(n) {
+        for (m, &v) in amax.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    amax.iter().map(|&m| m.max(1e-12) / qmax).collect()
+}
+
+/// Quantize a (K, N) weight matrix with per-column scales.
+pub fn quantize_weights_per_col(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    bits: u32,
+    scales: &[f32],
+) -> Vec<i32> {
+    let qmax = qmax_for(bits);
+    let mut out = vec![0i32; k * n];
+    for ki in 0..k {
+        for ni in 0..n {
+            out[ki * n + ni] = quantize_one(w[ki * n + ni], scales[ni], qmax);
+        }
+    }
+    out
+}
+
+/// Fake-quantize (quant-dequant) — used by tests to mirror the QAT forward.
+pub fn fake_quant(x: f32, scale: f32, bits: u32) -> f32 {
+    quantize_one(x, scale, qmax_for(bits)) as f32 * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax_for(8), 127);
+        assert_eq!(qmax_for(12), 2047);
+    }
+
+    #[test]
+    fn round_half_up_matches_python_floor_form() {
+        // floor(x/s + 0.5): 0.5 rounds to 1, -0.5 rounds to 0, 1.5 -> 2.
+        assert_eq!(quantize_one(0.5, 1.0, 127), 1);
+        assert_eq!(quantize_one(-0.5, 1.0, 127), 0);
+        assert_eq!(quantize_one(1.5, 1.0, 127), 2);
+        assert_eq!(quantize_one(-1.5, 1.0, 127), -1);
+    }
+
+    #[test]
+    fn clipping_is_symmetric() {
+        assert_eq!(quantize_one(1e9, 1.0, 127), 127);
+        assert_eq!(quantize_one(-1e9, 1.0, 127), -127);
+    }
+
+    #[test]
+    fn quant_dequant_error_bounded_by_half_scale() {
+        let scale = 0.031;
+        for i in -100..100 {
+            let x = i as f32 * 0.017;
+            if x.abs() < scale * 126.0 {
+                let r = fake_quant(x, scale, 8);
+                assert!((r - x).abs() <= scale * 0.5 + 1e-6, "{x} -> {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_scales_per_column() {
+        // 2x3 matrix; column abs-maxes are 4, 5, 6.
+        let w = [1.0f32, -5.0, 2.0, -4.0, 3.0, 6.0];
+        let s = weight_scales_per_col(&w, 2, 3, 8);
+        assert!((s[0] - 4.0 / 127.0).abs() < 1e-7);
+        assert!((s[1] - 5.0 / 127.0).abs() < 1e-7);
+        assert!((s[2] - 6.0 / 127.0).abs() < 1e-7);
+        let q = quantize_weights_per_col(&w, 2, 3, 8, &s);
+        assert_eq!(q[1], -127); // -5 is the max of its column
+        assert_eq!(q[5], 127);
+    }
+}

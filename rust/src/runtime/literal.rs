@@ -1,0 +1,30 @@
+//! Literal marshalling between the Rust tensors and PJRT.
+
+use anyhow::Result;
+
+/// f32 literal with the given dims.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar f32 literal (shape ()).
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Copy a literal out as f32.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Copy a literal out as i32.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}

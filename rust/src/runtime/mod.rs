@@ -1,0 +1,93 @@
+//! PJRT runtime: loads the AOT artifacts and runs them (the AdaPT fast path).
+//!
+//! Python lowers every model variant to HLO *text* once (`make artifacts`);
+//! this module is the only bridge back: parse text → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled lazily and
+//! cached for the life of the process; parameters can be kept resident as
+//! device buffers across train steps (see [`coordinator::retrain`]).
+//!
+//! Python is never on this path — the `adapt` binary is self-contained
+//! given `artifacts/`.
+
+pub mod literal;
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::graph::Manifest;
+
+pub use literal::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, to_vec_i32};
+
+/// Compiled-executable cache keyed by `model/variant`.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative compile time (reported by `adapt table4 --verbose`).
+    pub compile_time: Duration,
+}
+
+impl Runtime {
+    /// Open the artifacts directory and start a CPU PJRT client.
+    pub fn open(root: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(root)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            compile_time: Duration::ZERO,
+        })
+    }
+
+    /// Compile (or fetch) the executable for a model variant.
+    pub fn prepare(&mut self, model: &str, variant: &str) -> Result<()> {
+        let key = format!("{model}/{variant}");
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(model, variant)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        self.compile_time += t0.elapsed();
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute a prepared variant on literals; returns the decomposed
+    /// output tuple (all variants lower with `return_tuple=True`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        model: &str,
+        variant: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.prepare(model, variant)?;
+        let key = format!("{model}/{variant}");
+        let exe = self.cache.get(&key).expect("prepared above");
+        let out = exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {key}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,67 @@
+//! Parameter I/O: flat little-endian f32 blobs + the manifest param specs.
+//!
+//! `aot.py` writes the deterministic initial weights; the Rust training
+//! loops (fp32 pre-training, QAT retraining) write snapshots back under
+//! `artifacts/trained/` so experiments can resume without retraining.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Model;
+use crate::tensor::Tensor;
+
+/// Load a parameter list for `model` from a flat f32 blob.
+pub fn load_params(model: &Model, path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening weights {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let total: usize = model.params.iter().map(|p| p.numel()).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "weights {}: {} bytes != {} params * 4",
+            path.display(),
+            bytes.len(),
+            total
+        );
+    }
+    let mut out = Vec::with_capacity(model.params.len());
+    let mut off = 0usize;
+    for spec in &model.params {
+        let n = spec.numel();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+            data.push(f32::from_le_bytes(b.try_into().unwrap()));
+        }
+        off += n;
+        out.push(Tensor::from_vec(&spec.shape, data)?);
+    }
+    Ok(out)
+}
+
+/// Save a parameter list as a flat f32 blob (inverse of [`load_params`]).
+pub fn save_params(params: &[Tensor], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bytes = Vec::new();
+    for p in params {
+        for &v in &p.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Initial-weights path for a model (as written by aot.py).
+pub fn initial_path(root: &Path, model: &Model) -> std::path::PathBuf {
+    root.join(&model.weights_file)
+}
+
+/// Snapshot path for trained weights (written by the Rust training loop).
+pub fn trained_path(root: &Path, model: &Model) -> std::path::PathBuf {
+    root.join("trained").join(format!("{}.bin", model.name))
+}

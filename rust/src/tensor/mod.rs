@@ -1,0 +1,331 @@
+//! Minimal dense tensors (f32 / i32) + the conv-to-GEMM reshape (Fig. 3).
+//!
+//! Row-major, NHWC layout for images. Deliberately small: the Rust
+//! emulators need exactly shaped storage, im2col, and a handful of
+//! elementwise ops — everything heavier runs through the GEMM engines in
+//! [`crate::emulator`] or through XLA via [`crate::runtime`].
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Dense row-major i32 tensor (quantized activations / LUT indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; numel(shape)],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        if numel(shape) != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Leading dimension (batch).
+    pub fn dim0(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Max |x| over the whole tensor (per-tensor calibration "max" method).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Elementwise add (same shape).
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data,
+        })
+    }
+
+    /// Concatenate along the last axis (channel concat for fire/dense/
+    /// inception blocks).
+    pub fn concat_last(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts.first().copied().expect("concat of nothing");
+        let lead = &first.shape[..first.shape.len() - 1];
+        let mut c_total = 0;
+        for p in parts {
+            if &p.shape[..p.shape.len() - 1] != lead {
+                bail!("concat leading dims differ");
+            }
+            c_total += *p.shape.last().unwrap();
+        }
+        let rows: usize = lead.iter().product();
+        let mut shape = lead.to_vec();
+        shape.push(c_total);
+        let mut data = Vec::with_capacity(rows * c_total);
+        for r in 0..rows {
+            for p in parts {
+                let c = *p.shape.last().unwrap();
+                data.extend_from_slice(&p.data[r * c..(r + 1) * c]);
+            }
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Slice the last axis [start, end).
+    pub fn slice_last(&self, start: usize, end: usize) -> Tensor {
+        let c = *self.shape.last().unwrap();
+        assert!(start < end && end <= c);
+        let rows = self.data.len() / c;
+        let w = end - start;
+        let mut data = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            data.extend_from_slice(&self.data[r * c + start..r * c + end]);
+        }
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = w;
+        Tensor { shape, data }
+    }
+}
+
+impl TensorI32 {
+    /// Slice the last axis [start, end) (grouped-conv channel split).
+    pub fn slice_last(&self, start: usize, end: usize) -> TensorI32 {
+        let c = *self.shape.last().unwrap();
+        assert!(start < end && end <= c);
+        let rows = self.data.len() / c;
+        let w = end - start;
+        let mut data = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            data.extend_from_slice(&self.data[r * c + start..r * c + end]);
+        }
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = w;
+        TensorI32 { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> TensorI32 {
+        TensorI32 {
+            shape: shape.to_vec(),
+            data: vec![0; numel(shape)],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<TensorI32> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(TensorI32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+}
+
+/// Output spatial size of a convolution dimension.
+pub fn conv_out(size: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (size + 2 * pad - k) / stride + 1
+}
+
+/// im2col over quantized NHWC activations: (N,H,W,C) i32 -> patch matrix
+/// (N*Ho*Wo, kh*kw*C) with feature order **(dy, dx, c)** — identical to
+/// `python/compile/nn.py::im2col`, so the GEMM below reproduces conv2d
+/// given the weight tensor flattened (kh, kw, cin, cout) -> (kh*kw*cin, cout).
+///
+/// Out-of-image taps contribute 0, which every ACU maps to a 0 product, so
+/// zero padding is exact (same argument as the Pallas kernel's padding).
+pub fn im2col_i32(
+    x: &TensorI32,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> TensorI32 {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = conv_out(h, kh, stride, pad);
+    let wo = conv_out(w, kw, stride, pad);
+    let kf = kh * kw * c;
+    let mut out = vec![0i32; n * ho * wo * kf];
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((ni * ho + oy) * wo + ox) * kf;
+                for dy in 0..kh {
+                    let iy = (oy * stride + dy) as isize - pad as isize;
+                    for dx in 0..kw {
+                        let ix = (ox * stride + dx) as isize - pad as isize;
+                        let dst = row + (dy * kw + dx) * c;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((ni * h + iy as usize) * w + ix as usize) * c;
+                            out[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                        }
+                        // else: zeros already in place
+                    }
+                }
+            }
+        }
+    }
+    TensorI32 {
+        shape: vec![n * ho * wo, kf],
+        data: out,
+    }
+}
+
+/// f32 variant used by the fp32 reference path of the Rust emulator.
+pub fn im2col_f32(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = conv_out(h, kh, stride, pad);
+    let wo = conv_out(w, kw, stride, pad);
+    let kf = kh * kw * c;
+    let mut out = vec![0f32; n * ho * wo * kf];
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((ni * ho + oy) * wo + ox) * kf;
+                for dy in 0..kh {
+                    let iy = (oy * stride + dy) as isize - pad as isize;
+                    for dx in 0..kw {
+                        let ix = (ox * stride + dx) as isize - pad as isize;
+                        let dst = row + (dy * kw + dx) * c;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = ((ni * h + iy as usize) * w + ix as usize) * c;
+                            out[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor {
+        shape: vec![n * ho * wo, kf],
+        data: out,
+    }
+}
+
+/// Slice channels [c0, c1) of an NHWC tensor (grouped convolution).
+pub fn channel_slice(x: &Tensor, c0: usize, c1: usize) -> Tensor {
+    x.slice_last(c0, c1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_sizes() {
+        assert_eq!(conv_out(32, 3, 1, 1), 32);
+        assert_eq!(conv_out(32, 3, 2, 1), 16);
+        assert_eq!(conv_out(28, 1, 1, 0), 28);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: patches == flattened input.
+        let x = TensorI32::from_vec(&[1, 2, 2, 3], (0..12).collect()).unwrap();
+        let p = im2col_i32(&x, 1, 1, 1, 0);
+        assert_eq!(p.shape, vec![4, 3]);
+        assert_eq!(p.data, (0..12).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn im2col_3x3_center_of_padded() {
+        // Single pixel 1 at center of 3x3 image; 3x3 kernel pad 1:
+        // the center output row sees the pixel at patch position (1,1).
+        let mut data = vec![0i32; 9];
+        data[4] = 7; // (y=1, x=1)
+        let x = TensorI32::from_vec(&[1, 3, 3, 1], data).unwrap();
+        let p = im2col_i32(&x, 3, 3, 1, 1);
+        assert_eq!(p.shape, vec![9, 9]);
+        // output row 4 (center) has the pixel at feature index dy=1,dx=1 -> 4
+        assert_eq!(p.data[4 * 9 + 4], 7);
+        // output row 0 (top-left) sees it at dy=2,dx=2 -> 8
+        assert_eq!(p.data[8], 7);
+    }
+
+    #[test]
+    fn im2col_feature_order_is_dy_dx_c() {
+        // 2 channels, 2x2 kernel: feature layout must be
+        // [(0,0,c0),(0,0,c1),(0,1,c0),(0,1,c1),(1,0,c0),...]
+        let x = TensorI32::from_vec(&[1, 2, 2, 2], vec![10, 11, 20, 21, 30, 31, 40, 41])
+            .unwrap();
+        let p = im2col_i32(&x, 2, 2, 1, 0);
+        assert_eq!(p.shape, vec![1, 8]);
+        assert_eq!(p.data, vec![10, 11, 20, 21, 30, 31, 40, 41]);
+    }
+
+    #[test]
+    fn concat_and_slice_roundtrip() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2, 3], vec![5., 6., 7., 8., 9., 10.]).unwrap();
+        let c = Tensor::concat_last(&[&a, &b]).unwrap();
+        assert_eq!(c.shape, vec![2, 5]);
+        assert_eq!(c.data, vec![1., 2., 5., 6., 7., 3., 4., 8., 9., 10.]);
+        assert_eq!(c.slice_last(0, 2).data, a.data);
+        assert_eq!(c.slice_last(2, 5).data, b.data);
+    }
+
+    #[test]
+    fn stride_two() {
+        let x = TensorI32::from_vec(&[1, 4, 4, 1], (0..16).collect()).unwrap();
+        let p = im2col_i32(&x, 2, 2, 2, 0);
+        assert_eq!(p.shape, vec![4, 4]);
+        // windows at (0,0), (0,2), (2,0), (2,2)
+        assert_eq!(&p.data[0..4], &[0, 1, 4, 5]);
+        assert_eq!(&p.data[4..8], &[2, 3, 6, 7]);
+        assert_eq!(&p.data[8..12], &[8, 9, 12, 13]);
+        assert_eq!(&p.data[12..16], &[10, 11, 14, 15]);
+    }
+
+    #[test]
+    fn abs_max() {
+        let t = Tensor::from_vec(&[3], vec![-2.5, 1.0, 2.0]).unwrap();
+        assert_eq!(t.abs_max(), 2.5);
+    }
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmark harness (criterion substitute for `cargo bench`).
+//!
+//! Warms up, then runs timed iterations until both a minimum iteration
+//! count and a minimum wall-clock budget are met; reports median, mean,
+//! MAD and throughput. Deliberately small: deterministic workloads + a
+//! single core mean simple robust statistics beat criterion's resampling.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: Duration,
+    pub total: Duration,
+}
+
+impl Stats {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} median  {:>12} mean  ±{:>10}  ({} iters)",
+            self.name,
+            super::fmt::dur(self.median),
+            super::fmt::dur(self.mean),
+            super::fmt::dur(self.mad),
+            self.iters
+        );
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 1000,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+impl Config {
+    /// Config for expensive end-to-end cases (seconds per iteration).
+    pub fn endtoend() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            min_time: Duration::from_millis(500),
+        }
+    }
+
+    /// Honour `ADAPT_BENCH_FAST=1` for smoke runs (CI / tests).
+    pub fn from_env(self) -> Self {
+        if std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1") {
+            Self {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 3,
+                min_time: Duration::from_millis(1),
+            }
+        } else {
+            self
+        }
+    }
+}
+
+/// Time `f` under `cfg`; the closure's return value is black-boxed.
+pub fn run<T, F: FnMut() -> T>(name: &str, cfg: Config, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        let done_iters = samples.len() >= cfg.min_iters;
+        let done_time = start.elapsed() >= cfg.min_time;
+        if (done_iters && done_time) || samples.len() >= cfg.max_iters {
+            break;
+        }
+    }
+    let total: Duration = samples.iter().sum();
+    let mut sorted = samples.clone();
+    sorted.sort_unstable();
+    let median = sorted[sorted.len() / 2];
+    let mean = total / samples.len() as u32;
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|s| {
+            if *s > median {
+                *s - median
+            } else {
+                median - *s
+            }
+        })
+        .collect();
+    devs.sort_unstable();
+    let mad = devs[devs.len() / 2];
+    Stats {
+        name: name.to_string(),
+        iters: samples.len(),
+        median,
+        mean,
+        mad,
+        total,
+    }
+}
+
+/// Optimizer fence (std::hint::black_box stabilized in 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = Config {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            min_time: Duration::from_millis(1),
+        };
+        let s = run("spin", cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.median > Duration::ZERO);
+        assert!(s.iters >= 3 && s.iters <= 5);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let cfg = Config {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 2,
+            min_time: Duration::from_secs(60),
+        };
+        let s = run("fast", cfg, || 1 + 1);
+        assert_eq!(s.iters, 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! Small formatting helpers for reports and benches.
+
+use std::time::Duration;
+
+/// Human duration: ns/µs/ms/s/min with 3 significant-ish digits.
+pub fn dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns < 60_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else {
+        format!("{:.2} min", ns as f64 / 60e9)
+    }
+}
+
+/// Counts with M/G suffixes (params, MACs — Table 1 style).
+pub fn count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}G", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.2}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Percentage with 2 decimals.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+/// Render a simple aligned table (the report format for Tables 1–4).
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str("| ");
+            out.push_str(c);
+            out.push_str(&" ".repeat(widths[i].saturating_sub(c.len()) + 1));
+        }
+        out.push_str("|\n");
+    };
+    line(
+        &mut out,
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    );
+    let mut sep = String::new();
+    for w in &widths {
+        sep.push_str(&format!("|{}", "-".repeat(w + 2)));
+    }
+    sep.push_str("|\n");
+    out.push_str(&sep);
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(dur(Duration::from_micros(1500)), "1.50 ms");
+        assert_eq!(dur(Duration::from_secs(90)), "1.50 min");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(count(950), "950");
+        assert_eq!(count(23_520_000), "23.52M");
+        assert_eq!(count(2_850_000_000), "2.85G");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = table(
+            &["DNN", "acc"],
+            &[vec!["resnet".into(), "93.4%".into()]],
+        );
+        assert!(t.contains("| DNN"));
+        assert!(t.contains("| resnet"));
+        assert!(t.lines().count() == 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dependency-free substrates.
+//!
+//! The build environment vendors only `xla`/`anyhow`-tier crates, so the
+//! conveniences a framework normally pulls from crates.io are implemented
+//! here: a JSON parser/writer ([`json`]), a CLI argument parser ([`cli`]),
+//! deterministic PRNGs ([`rng`]), a scoped threadpool ([`threadpool`] —
+//! the OpenMP stand-in of §4.2), a micro-benchmark harness ([`bench`] —
+//! the criterion stand-in used by `cargo bench`), and tiny formatting
+//! helpers ([`fmt`]).
+
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod threadpool;

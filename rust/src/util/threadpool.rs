@@ -1,0 +1,122 @@
+//! Scoped threadpool — the stand-in for the paper's OpenMP layer (§4.2).
+//!
+//! `parallel_for` splits an index range into contiguous chunks, one per
+//! worker, exactly like `#pragma omp parallel for schedule(static)` over
+//! the batch/row dimension of the im2col GEMM. Workers are spawned per
+//! call via `std::thread::scope`; for the long-running inference engine the
+//! pool amortizes nothing anyway (each layer GEMM is milliseconds), and
+//! scoped spawning keeps borrows simple and the code free of unsafe.
+
+/// Number of workers to use: `ADAPT_THREADS` env or available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ADAPT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `body(start, end)` over disjoint chunks of `0..n` on `threads`
+/// workers. `body` must be `Sync` (immutable captures) — mutation goes
+/// through the per-chunk output slices the callers split beforehand.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        body(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            scope.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+/// Map `0..n` through `f` in parallel, writing into the provided output
+/// slice (one element per index). This is the mutable-output variant used
+/// by the emulator's row-parallel GEMM.
+pub fn parallel_map_into<T, F>(out: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = out.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            f(i, slot);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut base = 0usize;
+        let f = &f;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            scope.spawn(move || {
+                for (i, slot) in head.iter_mut().enumerate() {
+                    f(base + i, slot);
+                }
+            });
+            rest = tail;
+            base += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_once() {
+        let hits = AtomicUsize::new(0);
+        parallel_for_chunks(1000, 4, |lo, hi| {
+            hits.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn map_into_writes_every_slot() {
+        let mut out = vec![0usize; 257];
+        parallel_map_into(&mut out, 4, |i, slot| *slot = i * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut out = vec![0u32; 5];
+        parallel_map_into(&mut out, 1, |i, slot| *slot = i as u32);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        parallel_for_chunks(0, 8, |_, _| panic!("must not run"));
+        let mut out: Vec<u8> = vec![];
+        parallel_map_into(&mut out, 8, |_, _| {});
+    }
+}

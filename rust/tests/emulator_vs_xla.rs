@@ -1,0 +1,122 @@
+//! End-to-end cross-validation: the Rust emulators (both styles) against
+//! the XLA approx artifacts for representative models, plus calibration +
+//! train-step integration through the PJRT runtime.
+//!
+//! Requires artifacts/ — tests self-skip otherwise (CI without `make
+//! artifacts`). PJRT CPU client creation is process-global, so all
+//! checks run inside one #[test] to avoid client churn.
+
+use std::path::PathBuf;
+
+use adapt::coordinator::ops::{self, InferVariant, ModelState, TrainVariant};
+use adapt::data::{self, Sizes};
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, LayerMode, Policy};
+use adapt::lut::Lut;
+use adapt::quant::calib::CalibratorKind;
+use adapt::runtime::{weights, Runtime};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = adapt::artifacts_dir();
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn emulators_match_xla_and_training_converges() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let mut rt = Runtime::open(&root).unwrap();
+    let sizes = Sizes::small();
+    let bs = rt.manifest.batch;
+
+    // --- emulator vs XLA on three structurally distinct models ----------
+    for name in ["vae_mnist", "squeezenet_mini", "lstm_imdb"] {
+        let model = rt.manifest.model(name).unwrap().clone();
+        let ds = data::load(&model.dataset, &sizes);
+        let mut st =
+            ModelState::load(&rt, name, &weights::initial_path(&root, &model)).unwrap();
+        ops::calibrate(&mut rt, &mut st, &ds, 1, CalibratorKind::Percentile, 0.999)
+            .unwrap();
+        let (_l, lut_lit) = ops::load_lut(&rt, "mul8s_1l2h_like").unwrap();
+        let x = ops::batch_input(&model, &ds.eval, 0, bs).unwrap();
+        let xla = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&lut_lit))
+            .unwrap();
+
+        let plan = retransform(&model, &Policy::all(LayerMode::ApproxLut));
+        let params = st.params_tensors().unwrap();
+        let scales = st.act_scales.clone().unwrap();
+        let input = if model.input_dtype == "i32" {
+            Value::I(ds.eval.batch_tensor_i(0, bs))
+        } else {
+            Value::F(ds.eval.batch_tensor(0, bs))
+        };
+        for style in [Style::Naive, Style::Optimized { threads: 2 }] {
+            let lut = Lut::load(&rt.manifest.lut_path("mul8s_1l2h_like").unwrap()).unwrap();
+            let exec = Executor::new(
+                &model,
+                params.clone(),
+                plan.clone(),
+                scales.clone(),
+                Some(lut),
+                style,
+            )
+            .unwrap();
+            let out = exec.forward(input.clone()).unwrap();
+            assert_eq!(out.data.len(), xla.len(), "{name} output size");
+            // behavioral agreement: per-sample argmax
+            let rows = model.out_dim;
+            let mut agree = 0;
+            for s in 0..bs {
+                let a = &out.data[s * rows..(s + 1) * rows];
+                let b = &xla[s * rows..(s + 1) * rows];
+                let am = (0..rows).max_by(|&i, &j| a[i].total_cmp(&a[j])).unwrap();
+                let bm = (0..rows).max_by(|&i, &j| b[i].total_cmp(&b[j])).unwrap();
+                agree += (am == bm) as usize;
+            }
+            assert!(
+                agree * 100 >= bs * 95,
+                "{name} {style:?}: argmax agreement {agree}/{bs}"
+            );
+        }
+    }
+
+    // --- training integration: a few fp32 + QAT steps reduce the loss ---
+    let model = rt.manifest.model("vae_mnist").unwrap().clone();
+    let ds = data::load(&model.dataset, &sizes);
+    let mut st =
+        ModelState::load(&rt, "vae_mnist", &weights::initial_path(&root, &model)).unwrap();
+    let tr = ops::train(&mut rt, &mut st, TrainVariant::Fp32, &ds, 30, 0.9, None, 0).unwrap();
+    assert!(
+        tr.last_loss < tr.first_loss,
+        "fp32 training must descend: {} -> {}",
+        tr.first_loss,
+        tr.last_loss
+    );
+    ops::calibrate(&mut rt, &mut st, &ds, 1, CalibratorKind::Percentile, 0.999).unwrap();
+    let (_l, lut_lit) = ops::load_lut(&rt, "mul8s_1l2h_like").unwrap();
+    let tr2 = ops::train(
+        &mut rt,
+        &mut st,
+        TrainVariant::QatLut,
+        &ds,
+        10,
+        0.1,
+        Some(&lut_lit),
+        0,
+    )
+    .unwrap();
+    assert!(tr2.last_loss.is_finite());
+    assert!(
+        tr2.last_loss <= tr2.first_loss * 1.05,
+        "QAT must not diverge: {} -> {}",
+        tr2.first_loss,
+        tr2.last_loss
+    );
+
+    // --- 12-bit functional variants execute and track the 8-bit path ----
+    let q12 = ops::evaluate(&mut rt, &st, InferVariant::Quant12, &ds, None, Some(1)).unwrap();
+    let a12 = ops::evaluate(&mut rt, &st, InferVariant::Approx12, &ds, None, Some(1)).unwrap();
+    assert!((q12.accuracy - a12.accuracy).abs() < 0.05, "12-bit trunc is near-exact");
+}

