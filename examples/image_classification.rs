@@ -58,10 +58,10 @@ fn main() -> anyhow::Result<()> {
     ops::calibrate(&mut rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
 
     // 3. Quantized + approximate accuracy.
-    let (_e, exact_lut) = ops::load_lut(&rt, "exact8")?;
+    let exact_lut = ops::load_lut_lit(&rt, "exact8")?;
     let q = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&exact_lut), None)?;
     println!("8-bit (exact mult): {}", fmt::pct(q.accuracy));
-    let (_a, acu_lut) = ops::load_lut(&rt, acu)?;
+    let acu_lut = ops::load_lut_lit(&rt, acu)?;
     let ap = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&acu_lut), None)?;
     println!("8-bit via {acu}: {}  (drop {:.2} pts)",
         fmt::pct(ap.accuracy), 100.0 * (q.accuracy - ap.accuracy));

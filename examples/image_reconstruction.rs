@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     let x = ops::batch_input(&st.model, &ds.eval, 0, bs)?;
     let target = ds.eval.batch_f(0, bs);
 
-    let (_l, acu_lut) = ops::load_lut(&rt, "mul8s_1l2h_like")?;
+    let acu_lut = ops::load_lut_lit(&rt, "mul8s_1l2h_like")?;
     let fp = ops::infer_batch(&mut rt, &st, InferVariant::Fp32, &x, None)?;
     let ap = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&acu_lut))?;
 

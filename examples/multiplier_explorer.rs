@@ -11,7 +11,7 @@ use adapt::coordinator::ops::{self, InferVariant};
 use adapt::data::{self, Sizes};
 use adapt::emulator::{Executor, Style, Value};
 use adapt::graph::{retransform, LayerMode, Policy};
-use adapt::lut::Lut;
+use adapt::lut::LutRegistry;
 use adapt::metrics;
 use adapt::quant::calib::CalibratorKind;
 use adapt::runtime::Runtime;
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let acus: Vec<String> = rt.manifest.luts.keys().cloned().collect();
     for acu in &acus {
         let meta = rt.manifest.luts[acu].clone();
-        let (_l, lit) = ops::load_lut(&rt, acu)?;
+        let lit = ops::load_lut_lit(&rt, acu)?;
         let ev = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&lit), Some(4))?;
         rows.push(vec![
             acu.clone(),
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     let m = rt.manifest.model(&model)?.clone();
     let params = st.params_tensors()?;
     let scales = st.act_scales.clone().unwrap();
-    let lut = Lut::load(&rt.manifest.lut_path("mul8s_1l2h_like")?)?;
+    let luts = LutRegistry::from_manifest(&rt.manifest);
 
     let quantizable: Vec<String> = m
         .nodes
@@ -61,17 +61,24 @@ fn main() -> anyhow::Result<()> {
     let first = quantizable.first().cloned().unwrap_or_default();
     let last = quantizable.last().cloned().unwrap_or_default();
 
+    let acu = "mul8s_1l2h_like";
     let policies = [
-        ("all approx", Policy::all(LayerMode::ApproxLut)),
+        ("all approx", Policy::all(LayerMode::lut(acu))),
         (
             "stem+head exact",
-            Policy::all(LayerMode::ApproxLut)
+            Policy::all(LayerMode::lut(acu))
                 .with_override(&first, LayerMode::Fp32)
                 .with_override(&last, LayerMode::Fp32),
         ),
         (
+            "stem exact8, head DRUM (heterogeneous)",
+            Policy::all(LayerMode::lut(acu))
+                .with_acu(&first, "exact8")
+                .with_acu(&last, "drum8_6"),
+        ),
+        (
             "head 12-bit functional",
-            Policy::all(LayerMode::ApproxLut).with_override(
+            Policy::all(LayerMode::lut(acu)).with_override(
                 &last,
                 LayerMode::ApproxFunc { bits: 12, trunc_k: 4 },
             ),
@@ -86,10 +93,9 @@ fn main() -> anyhow::Result<()> {
             params.clone(),
             plan,
             adapt::coordinator::ops::rescale_for_bits(&scales, 8),
-            Some(Lut::generate(adapt::mult::get("mul8s_1l2h_like")?)),
+            &luts,
             Style::Optimized { threads: 2 },
         )?;
-        let _ = &lut;
         let mut hits = 0.0;
         let nb = 2;
         for bi in 0..nb {

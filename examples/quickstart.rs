@@ -34,9 +34,9 @@ fn main() -> anyhow::Result<()> {
     let labels = ds.eval.batch_labels(0, bs);
 
     let fp32 = ops::infer_batch(&mut rt, &st, InferVariant::Fp32, &x, None)?;
-    let (_l, exact_lut) = ops::load_lut(&rt, "exact8")?;
+    let exact_lut = ops::load_lut_lit(&rt, "exact8")?;
     let q8 = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&exact_lut))?;
-    let (_l, acu_lut) = ops::load_lut(&rt, "mul8s_1l2h_like")?;
+    let acu_lut = ops::load_lut_lit(&rt, "mul8s_1l2h_like")?;
     let a8 = ops::infer_batch(&mut rt, &st, InferVariant::ApproxLut, &x, Some(&acu_lut))?;
 
     let dim = st.model.out_dim;

@@ -30,9 +30,9 @@ fn main() -> anyhow::Result<()> {
     let fp32 = ops::evaluate(&mut rt, &st, InferVariant::Fp32, &ds, None, None)?;
     ops::calibrate(&mut rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
 
-    let (_e, exact_lut) = ops::load_lut(&rt, "exact8")?;
+    let exact_lut = ops::load_lut_lit(&rt, "exact8")?;
     let q = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&exact_lut), None)?;
-    let (_a, acu_lut) = ops::load_lut(&rt, "mul8s_1l2h_like")?;
+    let acu_lut = ops::load_lut_lit(&rt, "mul8s_1l2h_like")?;
     let ap = ops::evaluate(&mut rt, &st, InferVariant::ApproxLut, &ds, Some(&acu_lut), None)?;
 
     let tr2 = ops::train(&mut rt, &mut st, TrainVariant::QatLut, &ds,

@@ -1,14 +1,190 @@
 //! ACU ablation bench: accuracy vs MRE vs power proxy across the whole
 //! multiplier library on a trained CNN (ALWANN-style design-space sweep),
-//! plus characterization cost of the library itself.
+//! characterization cost of the library itself, plus — artifact-free —
+//! heterogeneous per-layer plan throughput and the scratch-arena A/B
+//! (reuse vs the seed's alloc-per-call executor), emitted as
+//! `artifacts/results/BENCH_mixed_acu.json`.
 //!
 //! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench multiplier_ablation`
 
+use std::collections::BTreeMap;
+
 use adapt::coordinator::experiments;
 use adapt::data::Sizes;
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, LayerMode, Model, Node, Op, ParamSpec, Policy};
+use adapt::lut::LutRegistry;
 use adapt::mult;
 use adapt::runtime::Runtime;
+use adapt::tensor::Tensor;
 use adapt::util::bench::{self, Config};
+use adapt::util::json::Json;
+use adapt::util::rng::Rng;
+
+/// Synthetic CNN big enough for the GEMM hot path to dominate:
+/// conv(3->16) -> relu -> conv(16->32, s2) -> relu -> conv(32->32) ->
+/// relu -> gap -> linear(32->10) on 16x16x3 inputs.
+fn bench_model() -> Model {
+    let conv = |id, cin, cout, stride, scale_idx, name: &str, input, p0| Node {
+        id,
+        op: Op::Conv2d {
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride,
+            pad: 1,
+            groups: 1,
+            scale_idx,
+            name: name.into(),
+        },
+        inputs: vec![input],
+        params: vec![p0, p0 + 1],
+    };
+    let p = |name: &str, shape: &[usize]| ParamSpec {
+        name: name.into(),
+        shape: shape.to_vec(),
+    };
+    Model {
+        name: "bench_cnn".into(),
+        paper_row: "-".into(),
+        kind: "cnn".into(),
+        dataset: "none".into(),
+        input_shape: vec![16, 16, 3],
+        input_dtype: "f32".into(),
+        out_dim: 10,
+        loss: "ce".into(),
+        metric: "top1".into(),
+        table2: false,
+        n_scales: 4,
+        params: vec![
+            p("w1", &[3, 3, 3, 16]),
+            p("b1", &[16]),
+            p("w2", &[3, 3, 16, 32]),
+            p("b2", &[32]),
+            p("w3", &[3, 3, 32, 32]),
+            p("b3", &[32]),
+            p("w4", &[32, 10]),
+            p("b4", &[10]),
+        ],
+        params_count: 0,
+        macs: 0,
+        nodes: vec![
+            Node { id: 0, op: Op::Input, inputs: vec![], params: vec![] },
+            conv(1, 3, 16, 1, 0, "stem", 0, 0),
+            Node { id: 2, op: Op::Relu, inputs: vec![1], params: vec![] },
+            conv(3, 16, 32, 2, 1, "mid1", 2, 2),
+            Node { id: 4, op: Op::Relu, inputs: vec![3], params: vec![] },
+            conv(5, 32, 32, 1, 2, "mid2", 4, 4),
+            Node { id: 6, op: Op::Relu, inputs: vec![5], params: vec![] },
+            Node { id: 7, op: Op::Gap, inputs: vec![6], params: vec![] },
+            Node {
+                id: 8,
+                op: Op::Linear { din: 32, dout: 10, scale_idx: 3, name: "head".into() },
+                inputs: vec![7],
+                params: vec![6, 7],
+            },
+        ],
+        weights_file: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn mixed_acu_section(cfg: Config, fast: bool) {
+    let model = bench_model();
+    let mut rng = Rng::new(0xBE9C);
+    let params: Vec<Tensor> = model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.3).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect();
+    let scales = vec![1.5 / 127.0, 3.0 / 127.0, 3.0 / 127.0, 3.0 / 127.0];
+    let bs = if fast { 4 } else { 16 };
+    let x: Vec<f32> = (0..bs * 16 * 16 * 3).map(|_| rng.next_gauss()).collect();
+    let input = Tensor::from_vec(&[bs, 16, 16, 3], x).unwrap();
+    let threads = adapt::util::threadpool::default_threads();
+    let luts = LutRegistry::in_memory();
+
+    // First/last layers exact, middle layers on two cheaper ACUs — the
+    // canonical mixed-precision assignment (3 distinct ACUs in one pass).
+    let homo = retransform(&model, &Policy::all(LayerMode::lut("exact8")));
+    let hetero = retransform(
+        &model,
+        &Policy::all(LayerMode::lut("exact8"))
+            .with_acu("mid1", "mul8s_1l2h_like")
+            .with_acu("mid2", "drum8_6"),
+    );
+    assert_eq!(hetero.acus().len(), 3);
+
+    let build = |plan: &adapt::graph::ExecutionPlan, reuse: bool| {
+        let mut exec = Executor::new(
+            &model,
+            params.clone(),
+            plan.clone(),
+            scales.clone(),
+            &luts,
+            Style::Optimized { threads },
+        )
+        .unwrap();
+        exec.set_scratch_reuse(reuse);
+        exec
+    };
+
+    println!("Heterogeneous plan + scratch arena (batch {bs}, {threads} threads):");
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let cases: [(&str, &adapt::graph::ExecutionPlan, bool); 4] = [
+        ("homogeneous exact8, scratch reuse", &homo, true),
+        ("heterogeneous 3-ACU, scratch reuse", &hetero, true),
+        ("homogeneous exact8, alloc-per-call", &homo, false),
+        ("heterogeneous 3-ACU, alloc-per-call", &hetero, false),
+    ];
+    let mut medians = BTreeMap::new();
+    for (label, plan, reuse) in cases {
+        let exec = build(plan, reuse);
+        let s = bench::run(&format!("  {label}"), cfg, || {
+            exec.forward(Value::F(input.clone())).unwrap()
+        });
+        s.print();
+        medians.insert(label.to_string(), s.median_secs());
+        let mut entry = BTreeMap::new();
+        entry.insert("median_s".to_string(), Json::Num(s.median_secs()));
+        entry.insert(
+            "samples_per_s".to_string(),
+            Json::Num(bs as f64 / s.median_secs().max(1e-12)),
+        );
+        entry.insert("iters".to_string(), Json::Num(s.iters as f64));
+        results.insert(label.to_string(), Json::Obj(entry));
+    }
+    let speedup = |a: &str, b: &str| medians[b] / medians[a].max(1e-12);
+    let arena_speedup = speedup(
+        "heterogeneous 3-ACU, scratch reuse",
+        "heterogeneous 3-ACU, alloc-per-call",
+    );
+    println!(
+        "  scratch arena vs alloc-per-call (hetero): {arena_speedup:.2}x  \
+         (>= 1.0 expected: zero steady-state allocations)"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("batch".to_string(), Json::Num(bs as f64));
+    doc.insert("threads".to_string(), Json::Num(threads as f64));
+    doc.insert("acus".to_string(), Json::Arr(
+        hetero.acus().into_iter().map(Json::Str).collect(),
+    ));
+    doc.insert("arena_speedup".to_string(), Json::Num(arena_speedup));
+    doc.insert("results".to_string(), Json::Obj(results));
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_mixed_acu.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("  written {}", path.display());
+        }
+    }
+    println!();
+}
 
 fn main() {
     let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
@@ -24,6 +200,9 @@ fn main() {
     });
     s.print();
     println!();
+
+    // Heterogeneous-plan + scratch-arena section (no artifacts needed).
+    mixed_acu_section(cfg, fast);
 
     let mut rt = match Runtime::open(&adapt::artifacts_dir()) {
         Ok(rt) => rt,

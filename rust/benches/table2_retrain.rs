@@ -38,7 +38,7 @@ fn main() {
         let ds = data::load(&rt.manifest.model(name).unwrap().dataset.clone(), &sizes);
         let mut st = ops::ModelState::load_best(&rt, name).unwrap();
         ops::calibrate(&mut rt, &mut st, &ds, 1, CalibratorKind::Percentile, 0.999).unwrap();
-        let (_l, lut) = ops::load_lut(&rt, "mul8s_1l2h_like").unwrap();
+        let lut = ops::load_lut_lit(&rt, "mul8s_1l2h_like").unwrap();
 
         println!("{name}:");
         let x = ops::batch_input(&st.model, &ds.eval, 0, rt.manifest.batch).unwrap();

@@ -121,7 +121,7 @@ fn worker_loop(
         let mut rt = Runtime::open(&cfg.artifacts)?;
         let mut st = ModelState::load_best(&rt, &cfg.model)?;
         let lut_lit = match (&cfg.variant, &cfg.acu) {
-            (InferVariant::ApproxLut, Some(acu)) => Some(ops::load_lut(&rt, acu)?.1),
+            (InferVariant::ApproxLut, Some(acu)) => Some(ops::load_lut_lit(&rt, acu)?),
             (InferVariant::ApproxLut, None) => {
                 anyhow::bail!("ApproxLut engine needs an ACU name")
             }
@@ -161,6 +161,12 @@ fn worker_loop(
     let mut stats = EngineStats::default();
     let mut pending: Vec<Request> = Vec::with_capacity(bs);
 
+    // A Shutdown received while gathering a batch must still flush that
+    // batch *and then stop*: without the flag the inner `break` only ended
+    // the gather loop and the worker re-blocked on `rx.recv()` forever,
+    // deadlocking `shutdown()`'s join.
+    let mut shutting_down = false;
+
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -169,7 +175,7 @@ fn worker_loop(
         };
         pending.push(first);
         let deadline = Instant::now() + cfg.max_wait;
-        // Gather until full or deadline.
+        // Gather until full, deadline, or shutdown (flush first).
         while pending.len() < bs {
             let now = Instant::now();
             if now >= deadline {
@@ -177,9 +183,15 @@ fn worker_loop(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => pending.push(r),
-                Ok(Msg::Shutdown) => break,
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
             }
         }
 
@@ -218,6 +230,9 @@ fn worker_loop(
                     let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
                 }
             }
+        }
+        if shutting_down {
+            break;
         }
     }
     Ok(stats)

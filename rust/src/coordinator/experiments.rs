@@ -8,6 +8,10 @@
 //!   optimized Rust engine; speedups vs baseline.
 //! * [`ablation`] — accuracy/MRE/power sweep over the whole ACU library
 //!   (ALWANN-style operating-point exploration).
+//! * [`layer_sensitivity`] — per-layer ACU sensitivity sweep + greedy
+//!   mixed-ACU search under an accuracy budget, producing a heterogeneous
+//!   [`ExecutionPlan`] artifact (the MAx-DNN-style layer-wise assignment
+//!   only the Rust engine can execute).
 //!
 //! Results are printed as aligned tables and appended to
 //! `artifacts/results/*.txt` so EXPERIMENTS.md can quote runs verbatim.
@@ -18,11 +22,14 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::ops::{self, InferVariant, ModelState, TrainVariant};
-use crate::data::{self, Sizes};
+use crate::data::{self, Dataset, Sizes};
 use crate::emulator::{Executor, Style, Value};
-use crate::graph::{retransform, LayerMode, Policy};
+use crate::graph::{retransform, ExecutionPlan, LayerMode, Model, Policy};
+use crate::lut::LutRegistry;
+use crate::metrics;
 use crate::quant::calib::CalibratorKind;
 use crate::runtime::{weights, Runtime};
+use crate::tensor::Tensor;
 use crate::util::fmt;
 
 /// Per-model training hyper-parameters for the synthetic tasks.
@@ -54,6 +61,7 @@ pub fn hyper_for(model: &str) -> Hyper {
     h
 }
 
+#[rustfmt::skip]
 fn hyper_defaults(model: &str) -> Hyper {
     match model {
         "small_resnet" => Hyper { pretrain_steps: 360, pretrain_lr: 0.002, qat_steps: 48, qat_lr: 0.0005 },
@@ -203,9 +211,9 @@ pub fn table2_row(
         let a = ops::evaluate(rt, &st, InferVariant::Approx12, &ds, None, cfg.eval_batches)?;
         (q, a, None)
     } else {
-        let (_lut, exact_lit) = ops::load_lut(rt, "exact8")?;
+        let exact_lit = ops::load_lut_lit(rt, "exact8")?;
         let q = ops::evaluate(rt, &st, InferVariant::ApproxLut, &ds, Some(&exact_lit), cfg.eval_batches)?;
-        let (_l2, acu_lit) = ops::load_lut(rt, &cfg.acu8)?;
+        let acu_lit = ops::load_lut_lit(rt, &cfg.acu8)?;
         let a = ops::evaluate(rt, &st, InferVariant::ApproxLut, &ds, Some(&acu_lit), cfg.eval_batches)?;
         (q, a, Some(acu_lit))
     };
@@ -342,9 +350,10 @@ pub fn table4_row(rt: &mut Runtime, cfg: &Table4Config, name: &str) -> Result<Ta
     if model.loss != "none" || model.n_scales > 0 {
         ops::calibrate(rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
     }
-    let (lut, lut_lit) = ops::load_lut(rt, &cfg.acu)?;
+    let lut_lit = ops::load_lut_lit(rt, &cfg.acu)?;
     let scales = st.act_scales.clone().unwrap_or_default();
     let params = st.params_tensors()?;
+    let luts = LutRegistry::from_manifest(&rt.manifest);
 
     let make_input = |bi: usize| -> Result<Value> {
         Ok(if model.input_dtype == "i32" {
@@ -373,8 +382,7 @@ pub fn table4_row(rt: &mut Runtime, cfg: &Table4Config, name: &str) -> Result<Ta
     let adapt_xla = t0.elapsed();
 
     // --- baseline: naive scalar LUT emulation (Rust) --------------------
-    let plan = retransform(&model, &Policy::all(LayerMode::ApproxLut));
-    let lut_for_base = crate::lut::Lut::load(&rt.manifest.lut_path(&cfg.acu)?)?;
+    let plan = retransform(&model, &Policy::all(LayerMode::lut(cfg.acu.as_str())));
     let baseline = if cfg.skip_baseline {
         Duration::ZERO
     } else {
@@ -383,7 +391,7 @@ pub fn table4_row(rt: &mut Runtime, cfg: &Table4Config, name: &str) -> Result<Ta
             params.clone(),
             plan.clone(),
             scales.clone(),
-            Some(lut_for_base),
+            &luts,
             Style::Naive,
         )?;
         let t0 = Instant::now();
@@ -399,7 +407,7 @@ pub fn table4_row(rt: &mut Runtime, cfg: &Table4Config, name: &str) -> Result<Ta
         params,
         plan,
         scales,
-        Some(lut),
+        &luts,
         Style::Optimized {
             threads: cfg.threads,
         },
@@ -487,7 +495,7 @@ pub fn ablation(rt: &mut Runtime, model_name: &str, sizes: &Sizes, eval_batches:
     let acus: Vec<String> = rt.manifest.luts.keys().cloned().collect();
     for acu in acus {
         let meta = rt.manifest.luts[&acu].clone();
-        let (_lut, lit) = ops::load_lut(rt, &acu)?;
+        let lit = ops::load_lut_lit(rt, &acu)?;
         let ev = ops::evaluate(rt, &st, InferVariant::ApproxLut, &ds, Some(&lit), eval_batches)?;
         rows.push(vec![
             acu.clone(),
@@ -502,5 +510,228 @@ pub fn ablation(rt: &mut Runtime, model_name: &str, sizes: &Sizes, eval_batches:
         &rows,
     );
     append_results(&rt.manifest.root, "ablation", &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Layer sensitivity + greedy mixed-ACU search (heterogeneous plans)
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`layer_sensitivity`].
+pub struct SensitivityConfig {
+    pub model: String,
+    pub sizes: Sizes,
+    /// Eval batches per plan evaluation (the sweep runs many plans).
+    pub eval_batches: usize,
+    /// Candidate ACUs tried per layer.
+    pub acus: Vec<String>,
+    /// Reference ACU every layer starts from (the exact-quantized point).
+    pub reference: String,
+    /// Allowed absolute accuracy drop vs the reference plan (e.g. 0.02).
+    pub budget: f64,
+    pub threads: usize,
+    pub verbose: bool,
+}
+
+impl Default for SensitivityConfig {
+    fn default() -> Self {
+        SensitivityConfig {
+            model: "small_vgg".to_string(),
+            sizes: Sizes::default(),
+            eval_batches: 2,
+            acus: vec![
+                "mul8s_1l2h_like".to_string(),
+                "drum8_6".to_string(),
+                "trunc_out8_4".to_string(),
+            ],
+            reference: "exact8".to_string(),
+            budget: 0.02,
+            threads: crate::util::threadpool::default_threads(),
+            verbose: false,
+        }
+    }
+}
+
+/// Evaluate one heterogeneous plan on the Rust optimized engine.
+#[allow(clippy::too_many_arguments)]
+fn eval_plan(
+    model: &Model,
+    params: &[Tensor],
+    scales: &[f32],
+    plan: ExecutionPlan,
+    luts: &LutRegistry,
+    threads: usize,
+    ds: &Dataset,
+    bs: usize,
+    nb: usize,
+) -> Result<f64> {
+    let exec = Executor::new(
+        model,
+        params.to_vec(),
+        plan,
+        scales.to_vec(),
+        luts,
+        Style::Optimized { threads },
+    )?;
+    let mut acc = 0.0;
+    let mut samples = 0usize;
+    for bi in 0..nb {
+        let input = if model.input_dtype == "i32" {
+            Value::I(ds.eval.batch_tensor_i(bi, bs))
+        } else {
+            Value::F(ds.eval.batch_tensor(bi, bs))
+        };
+        let out = exec.forward(input)?;
+        let labels = ds.eval.batch_labels(bi, bs);
+        let target = if model.metric == "pixel" {
+            ds.eval.batch_f(bi, bs)
+        } else {
+            vec![]
+        };
+        let out_dim = out.data.len() / bs;
+        acc += metrics::compute(&model.metric, &out.data, out_dim, &labels, &target) * bs as f64;
+        samples += bs;
+    }
+    Ok(acc / samples as f64)
+}
+
+/// Per-layer ACU sensitivity sweep + greedy mixed-ACU search.
+///
+/// 1. Evaluate the homogeneous reference plan (every layer on
+///    `cfg.reference`).
+/// 2. For each quantizable layer × candidate ACU, evaluate the plan with
+///    only that layer swapped; record the accuracy drop (the layer's
+///    sensitivity to that ACU).
+/// 3. Rank layers by their worst drop, then greedily assign each layer —
+///    most tolerant first — the lowest-power candidate that keeps the
+///    *cumulative* mixed plan within `cfg.budget` of the reference.
+///
+/// The chosen plan is saved as `artifacts/results/plan_<model>.json`, a
+/// first-class artifact `adapt plan --plan-file` / the executor can reload.
+pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<String> {
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    let ds = data::load(&model.dataset, &cfg.sizes);
+    let mut st = ensure_pretrained(rt, &cfg.model, &cfg.sizes, 1.0, cfg.verbose)?;
+    ops::calibrate(rt, &mut st, &ds, 2, CalibratorKind::Percentile, 0.999)?;
+    let params = st.params_tensors()?;
+    let scales = st
+        .act_scales
+        .clone()
+        .context("calibration produced no scales")?;
+    let luts = LutRegistry::from_manifest(&rt.manifest);
+    let bs = rt.manifest.batch;
+    let nb = cfg.eval_batches.max(1).min(ds.eval.n_batches(bs).max(1));
+    let power = |acu: &str| crate::mult::get(acu).map(|m| m.power).unwrap_or(1.0);
+
+    let layers: Vec<(usize, String)> = model
+        .nodes
+        .iter()
+        .filter(|n| n.op.is_quantizable())
+        .map(|n| {
+            (
+                n.id,
+                n.op.layer_name().unwrap_or_default().to_string(),
+            )
+        })
+        .collect();
+
+    let reference = retransform(&model, &Policy::all(LayerMode::lut(cfg.reference.as_str())));
+    let base_acc = eval_plan(
+        &model, &params, &scales, reference.clone(), &luts, cfg.threads, &ds, bs, nb,
+    )?;
+
+    // --- per-layer sweep: one plan per (layer, ACU) ----------------------
+    let mut worst_drop = vec![0.0f64; layers.len()];
+    let mut rows = Vec::new();
+    for (li, (id, name)) in layers.iter().enumerate() {
+        let mut row = vec![name.clone()];
+        for acu in &cfg.acus {
+            let mut plan = reference.clone();
+            plan.modes.insert(*id, LayerMode::lut(acu.as_str()));
+            let acc = eval_plan(
+                &model, &params, &scales, plan, &luts, cfg.threads, &ds, bs, nb,
+            )?;
+            let drop = base_acc - acc;
+            worst_drop[li] = worst_drop[li].max(drop);
+            row.push(format!("{:+.2}", -100.0 * drop));
+        }
+        row.push(format!("{:.2}", 100.0 * worst_drop[li]));
+        if cfg.verbose {
+            eprintln!("[sensitivity {}] {name}: worst drop {:.2} pts", cfg.model, 100.0 * worst_drop[li]);
+        }
+        rows.push(row);
+    }
+
+    // --- greedy mixed search, most tolerant layers first -----------------
+    let mut order: Vec<usize> = (0..layers.len()).collect();
+    order.sort_by(|&a, &b| worst_drop[a].total_cmp(&worst_drop[b]));
+    let mut candidates = cfg.acus.clone();
+    candidates.sort_by(|a, b| power(a).total_cmp(&power(b)));
+    let mut plan = reference.clone();
+    let mut mixed_acc = base_acc;
+    for &li in &order {
+        let (id, _) = &layers[li];
+        for acu in &candidates {
+            if power(acu) >= power(&cfg.reference) {
+                continue; // only cheaper-than-reference ACUs are wins
+            }
+            let mut trial = plan.clone();
+            trial.modes.insert(*id, LayerMode::lut(acu.as_str()));
+            let acc = eval_plan(
+                &model, &params, &scales, trial.clone(), &luts, cfg.threads, &ds, bs, nb,
+            )?;
+            if base_acc - acc <= cfg.budget {
+                plan = trial;
+                mixed_acc = acc;
+                break; // candidates are power-sorted: first fit is cheapest
+            }
+        }
+    }
+
+    let plan_power = |p: &ExecutionPlan| -> f64 {
+        let vals: Vec<f64> = p
+            .modes
+            .values()
+            .map(|m| match m {
+                LayerMode::ApproxLut { acu } => power(acu),
+                _ => 1.0,
+            })
+            .collect();
+        vals.iter().sum::<f64>() / vals.len().max(1) as f64
+    };
+
+    // --- report + plan artifact ------------------------------------------
+    let mut headers: Vec<&str> = vec!["layer"];
+    for acu in &cfg.acus {
+        headers.push(acu.as_str());
+    }
+    headers.push("worst drop (pts)");
+    let mut out = format!(
+        "Layer sensitivity on {} (reference {}, {} eval batches, budget {:.1} pts)\n\
+         reference accuracy: {}\n\n",
+        cfg.model,
+        cfg.reference,
+        nb,
+        100.0 * cfg.budget,
+        fmt::pct(base_acc),
+    );
+    out.push_str(&fmt::table(&headers, &rows));
+    out.push_str(&format!(
+        "\nGreedy mixed-ACU plan (accuracy {}, {:+.2} pts vs reference, \
+         mean power {:.2}x -> {:.2}x):\n{}",
+        fmt::pct(mixed_acc),
+        100.0 * (mixed_acc - base_acc),
+        plan_power(&reference),
+        plan_power(&plan),
+        plan.describe(&model),
+    ));
+
+    let dir = rt.manifest.root.join("results");
+    std::fs::create_dir_all(&dir)?;
+    let plan_path = dir.join(format!("plan_{}.json", cfg.model));
+    std::fs::write(&plan_path, plan.to_json(&model))?;
+    out.push_str(&format!("\nplan saved to {}\n", plan_path.display()));
+
+    append_results(&rt.manifest.root, "sensitivity", &out)?;
     Ok(out)
 }

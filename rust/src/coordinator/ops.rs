@@ -82,12 +82,14 @@ impl ModelState {
     }
 }
 
-/// Load an ACU LUT artifact as both the in-memory table and a literal.
-pub fn load_lut(rt: &Runtime, acu: &str) -> Result<(Lut, xla::Literal)> {
+/// Load an ACU LUT artifact as a PJRT literal (the XLA approx path's
+/// operand). The Rust engines don't take this — they resolve shared
+/// in-memory tables through [`crate::lut::LutRegistry`] instead, so the
+/// artifact is read at most once per consumer.
+pub fn load_lut_lit(rt: &Runtime, acu: &str) -> Result<xla::Literal> {
     let path = rt.manifest.lut_path(acu)?;
     let lut = Lut::load(&path)?;
-    let lit = lit_i32(&[lut.n, lut.n], lut.data())?;
-    Ok((lut, lit))
+    lit_i32(&[lut.n, lut.n], lut.data())
 }
 
 /// Build the input literal for one batch of a split.

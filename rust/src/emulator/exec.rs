@@ -6,17 +6,43 @@
 //! themselves, i64 ACU accumulation, dequant `acc * (sa * sw[c]) + bias`.
 //! `rust/tests/emulator_vs_xla.rs` asserts the executor and the AOT
 //! artifacts agree on every model.
+//!
+//! ## Heterogeneous plans
+//!
+//! Every quantizable node carries its own backend identity
+//! ([`LayerMode::ApproxLut`] names an ACU, [`LayerMode::ApproxFunc`] a
+//! behavioral function), resolved once at construction through a shared
+//! [`LutRegistry`] — so one forward pass can route different layers
+//! through different approximate multipliers, and twenty layers on the
+//! same ACU share one `Arc<Lut>` table.
+//!
+//! ## Scratch arena (§Perf)
+//!
+//! The seed executor allocated im2col patch matrices, quantized-activation
+//! buffers and accumulators on every layer call. All of those now live in
+//! a grow-only [`Scratch`] arena owned by the executor: the first forward
+//! sizes each buffer to the model's largest layer, and every later layer
+//! and batch reuses the same allocations. Node *output* tensors recycle
+//! through a small free-list driven by static liveness (a value's storage
+//! is returned to the pool right after its last consumer runs). Steady
+//! state performs zero per-layer heap allocations on the GEMM hot path;
+//! `benches/multiplier_ablation.rs` A/B-checks this against the seed's
+//! alloc-per-call behavior via [`Executor::set_scratch_reuse`].
 
+use std::cell::{RefCell, RefMut};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::graph::{ExecutionPlan, LayerMode, Model, Node, Op};
 use crate::layers;
-use crate::lut::Lut;
+use crate::lut::{Lut, LutRegistry};
 use crate::mult::MulFn;
 use crate::quant;
-use crate::tensor::{conv_out, im2col_f32, im2col_i32, Tensor, TensorI32};
+use crate::tensor::{
+    conv_out, im2col_f32_range_into, im2col_i32_range_into, numel, Tensor, TensorI32,
+};
 
 use super::gemm;
 
@@ -32,22 +58,6 @@ pub enum Style {
 pub enum Value {
     F(Tensor),
     I(TensorI32),
-}
-
-impl Value {
-    fn as_f(&self) -> Result<&Tensor> {
-        match self {
-            Value::F(t) => Ok(t),
-            Value::I(_) => bail!("expected f32 value"),
-        }
-    }
-
-    fn as_i(&self) -> Result<&TensorI32> {
-        match self {
-            Value::I(t) => Ok(t),
-            Value::F(_) => bail!("expected i32 value"),
-        }
-    }
 }
 
 /// Functional-ACU wrappers at fixed truncation (fn-pointer friendly).
@@ -92,6 +102,14 @@ impl QuantMat {
     }
 }
 
+/// Resolved product backend for one quantized node.
+enum Backend {
+    /// Shared ACU table (resolved from the plan's ACU name).
+    Lut(Arc<Lut>),
+    /// Behavioral multiplier function (large-bitwidth fallback).
+    Func(MulFn),
+}
+
 /// Prepared state for one quantizable node.
 enum PreparedNode {
     Fp32 {
@@ -103,23 +121,124 @@ enum PreparedNode {
         mats: Vec<QuantMat>,
         bias: Vec<f32>,
         bits: u32,
-        func: Option<MulFn>, // None => LUT backend
+        backend: Backend,
     },
+}
+
+impl PreparedNode {
+    fn bias(&self) -> &[f32] {
+        match self {
+            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
+        }
+    }
+}
+
+/// A grow-only scratch buffer with interior mutability. Distinct buffers
+/// are distinct fields of [`Scratch`], so borrows never overlap.
+struct Buf<T>(RefCell<Vec<T>>);
+
+impl<T: Default + Clone> Buf<T> {
+    fn new() -> Buf<T> {
+        Buf(RefCell::new(Vec::new()))
+    }
+
+    /// Borrow at least `len` elements. With `reuse = false` the buffer is
+    /// reallocated fresh every call — the seed's alloc-per-call behavior,
+    /// kept selectable for the ablation bench's A/B comparison.
+    fn grab(&self, len: usize, reuse: bool) -> RefMut<'_, Vec<T>> {
+        let mut v = self.0.borrow_mut();
+        if !reuse {
+            *v = vec![T::default(); len];
+        } else if v.len() < len {
+            let grow = len - v.len();
+            v.reserve(grow);
+            v.resize(len, T::default());
+        }
+        v
+    }
+}
+
+/// Max pooled output buffers retained between layers.
+const POOL_CAP: usize = 32;
+
+/// The executor's reusable buffers (see module docs).
+struct Scratch {
+    /// Quantized activations (conv fast path and dense quantization).
+    xq: Buf<i32>,
+    /// Integer im2col patch matrix (optimized quant conv).
+    patches_i: Buf<i32>,
+    /// f32 im2col patch matrix (fp32 / naive conv).
+    patches_f: Buf<f32>,
+    /// i32 accumulators (optimized biased-LUT kernel).
+    acc32: Buf<i32>,
+    /// i64 accumulators (generic kernels).
+    acc64: Buf<i64>,
+    /// Per-group conv output staging.
+    group_out: Buf<f32>,
+    // LSTM per-step state and gate buffers.
+    lstm_h: Buf<f32>,
+    lstm_c: Buf<f32>,
+    lstm_x: Buf<f32>,
+    lstm_gx: Buf<f32>,
+    lstm_gh: Buf<f32>,
+    /// Free-list of recycled node-output storage.
+    pool: RefCell<Vec<Vec<f32>>>,
+    /// Dense value table reused across forwards (indexed by node id).
+    vals: RefCell<Vec<Option<Value>>>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch {
+            xq: Buf::new(),
+            patches_i: Buf::new(),
+            patches_f: Buf::new(),
+            acc32: Buf::new(),
+            acc64: Buf::new(),
+            group_out: Buf::new(),
+            lstm_h: Buf::new(),
+            lstm_c: Buf::new(),
+            lstm_x: Buf::new(),
+            lstm_gx: Buf::new(),
+            lstm_gh: Buf::new(),
+            pool: RefCell::new(Vec::new()),
+            vals: RefCell::new(Vec::new()),
+        }
+    }
+}
+
+fn get_f(vals: &[Option<Value>], id: usize) -> Result<&Tensor> {
+    match vals.get(id).and_then(|v| v.as_ref()) {
+        Some(Value::F(t)) => Ok(t),
+        Some(Value::I(_)) => bail!("expected f32 value for input {id}"),
+        None => bail!("missing input {id}"),
+    }
+}
+
+fn get_i(vals: &[Option<Value>], id: usize) -> Result<&TensorI32> {
+    match vals.get(id).and_then(|v| v.as_ref()) {
+        Some(Value::I(t)) => Ok(t),
+        Some(Value::F(_)) => bail!("expected i32 value for input {id}"),
+        None => bail!("missing input {id}"),
+    }
 }
 
 /// The emulator: a model + plan + scales + engine, ready to run batches.
 ///
-/// Buffers for patches/accumulators are allocated per layer call but
-/// weights are quantized exactly once at construction (§4.1's "tensors are
-/// re-used without the need to copy additional data").
+/// Weights are quantized exactly once at construction (§4.1's "tensors are
+/// re-used without the need to copy additional data"); activations, patch
+/// matrices and accumulators live in the scratch arena.
 pub struct Executor<'m> {
     pub model: &'m Model,
     pub style: Style,
     plan: ExecutionPlan,
     act_scales: Vec<f32>,
-    lut: Option<Lut>,
     params: Vec<Tensor>,
     prepared: BTreeMap<usize, PreparedNode>,
+    /// value id -> index (into `model.nodes`) of its last consumer.
+    last_use: BTreeMap<usize, usize>,
+    scratch: Scratch,
+    reuse_scratch: bool,
 }
 
 impl<'m> Executor<'m> {
@@ -128,13 +247,14 @@ impl<'m> Executor<'m> {
     /// * `params` — fp32 parameters in manifest order.
     /// * `act_scales` — per-scale-index activation scales (calibrated);
     ///   may be empty when the plan is all-fp32.
-    /// * `lut` — the ACU table for `LayerMode::ApproxLut` nodes.
+    /// * `luts` — the shared ACU registry; every `ApproxLut` node's ACU
+    ///   name is resolved through it exactly once, here.
     pub fn new(
         model: &'m Model,
         params: Vec<Tensor>,
         plan: ExecutionPlan,
         act_scales: Vec<f32>,
-        lut: Option<Lut>,
+        luts: &LutRegistry,
         style: Style,
     ) -> Result<Executor<'m>> {
         if params.len() != model.params.len() {
@@ -145,10 +265,7 @@ impl<'m> Executor<'m> {
                 params.len()
             );
         }
-        let needs_scales = plan
-            .modes
-            .values()
-            .any(|m| !matches!(m, LayerMode::Fp32));
+        let needs_scales = plan.modes.values().any(|m| !matches!(m, LayerMode::Fp32));
         if needs_scales && act_scales.len() != model.n_scales {
             bail!(
                 "model {} needs {} act scales, got {}",
@@ -157,30 +274,55 @@ impl<'m> Executor<'m> {
                 act_scales.len()
             );
         }
+        let mut last_use = BTreeMap::new();
+        for (idx, node) in model.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                last_use.insert(inp, idx);
+            }
+        }
         let mut ex = Executor {
             model,
             style,
             plan,
             act_scales,
-            lut,
             params,
             prepared: BTreeMap::new(),
+            last_use,
+            scratch: Scratch::new(),
+            reuse_scratch: true,
         };
-        ex.prepare()?;
+        ex.prepare(luts)?;
         Ok(ex)
     }
 
-    /// Quantize / flatten weights per the plan (once).
-    fn prepare(&mut self) -> Result<()> {
+    /// The plan this executor was built from.
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Toggle scratch reuse. `false` restores the seed's alloc-per-call
+    /// behavior (every buffer reallocated fresh) — only useful for the
+    /// ablation bench's before/after comparison. Default: `true`.
+    pub fn set_scratch_reuse(&mut self, reuse: bool) {
+        self.reuse_scratch = reuse;
+        if !reuse {
+            self.scratch.pool.borrow_mut().clear();
+        }
+    }
+
+    /// Quantize / flatten weights per the plan and resolve every node's
+    /// ACU backend (once).
+    fn prepare(&mut self, luts: &LutRegistry) -> Result<()> {
         for node in &self.model.nodes {
             if !node.op.is_quantizable() {
                 continue;
             }
-            let mode = *self
+            let mode = self
                 .plan
                 .modes
                 .get(&node.id)
-                .ok_or_else(|| anyhow!("plan missing node {}", node.id))?;
+                .ok_or_else(|| anyhow!("plan missing node {}", node.id))?
+                .clone();
             let prep = match &node.op {
                 Op::Conv2d {
                     kh,
@@ -204,19 +346,19 @@ impl<'m> Executor<'m> {
                             flats[g].extend_from_slice(&w.data[base..base + cout_g]);
                         }
                     }
-                    build_prepared(mode, flats, kf, cout_g, b.data.clone())
+                    build_prepared(&mode, luts, flats, kf, cout_g, b.data.clone())?
                 }
                 Op::Linear { din, dout, .. } => {
                     let w = &self.params[node.params[0]];
                     let b = &self.params[node.params[1]];
-                    build_prepared(mode, vec![w.data.clone()], *din, *dout, b.data.clone())
+                    build_prepared(&mode, luts, vec![w.data.clone()], *din, *dout, b.data.clone())?
                 }
                 Op::Lstm { din, hidden, .. } => {
                     let wx = &self.params[node.params[0]];
                     let wh = &self.params[node.params[1]];
                     let b = &self.params[node.params[2]];
                     // Two mats: index 0 = input GEMM, 1 = recurrent GEMM.
-                    match mode {
+                    match &mode {
                         LayerMode::Fp32 => PreparedNode::Fp32 {
                             mats: vec![
                                 (wx.data.clone(), *din, 4 * hidden),
@@ -224,23 +366,27 @@ impl<'m> Executor<'m> {
                             ],
                             bias: b.data.clone(),
                         },
-                        LayerMode::ApproxLut => PreparedNode::Quant {
-                            mats: vec![
-                                QuantMat::build(&wx.data, *din, 4 * hidden, 8),
-                                QuantMat::build(&wh.data, *hidden, 4 * hidden, 8),
-                            ],
-                            bias: b.data.clone(),
-                            bits: 8,
-                            func: None,
-                        },
+                        LayerMode::ApproxLut { acu } => {
+                            let lut = luts.get(acu)?;
+                            let bits = lut.bits;
+                            PreparedNode::Quant {
+                                mats: vec![
+                                    QuantMat::build(&wx.data, *din, 4 * hidden, bits),
+                                    QuantMat::build(&wh.data, *hidden, 4 * hidden, bits),
+                                ],
+                                bias: b.data.clone(),
+                                bits,
+                                backend: Backend::Lut(lut),
+                            }
+                        }
                         LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
                             mats: vec![
-                                QuantMat::build(&wx.data, *din, 4 * hidden, bits),
-                                QuantMat::build(&wh.data, *hidden, 4 * hidden, bits),
+                                QuantMat::build(&wx.data, *din, 4 * hidden, *bits),
+                                QuantMat::build(&wh.data, *hidden, 4 * hidden, *bits),
                             ],
                             bias: b.data.clone(),
-                            bits,
-                            func: Some(func_for(trunc_k)),
+                            bits: *bits,
+                            backend: Backend::Func(func_for(*trunc_k)),
                         },
                     }
                 }
@@ -249,6 +395,90 @@ impl<'m> Executor<'m> {
             self.prepared.insert(node.id, prep);
         }
         Ok(())
+    }
+
+    /// Pop a cleared pool buffer with capacity >= `len` (best fit), if any.
+    fn pool_take(&self, len: usize) -> Option<Vec<f32>> {
+        if !self.reuse_scratch {
+            return None;
+        }
+        let mut pool = self.scratch.pool.borrow_mut();
+        let best = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= len)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i)?;
+        let mut v = pool.swap_remove(best);
+        v.clear();
+        Some(v)
+    }
+
+    /// Take a pooled f32 buffer of exactly `len` (zero-initialized).
+    fn pooled_vec(&self, len: usize) -> Vec<f32> {
+        match self.pool_take(len) {
+            Some(mut v) => {
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Take a pooled buffer initialized as a copy of `src` (no zero pass).
+    fn pooled_vec_copy(&self, src: &[f32]) -> Vec<f32> {
+        match self.pool_take(src.len()) {
+            Some(mut v) => {
+                v.extend_from_slice(src);
+                v
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Node-output tensor backed by the recycle pool.
+    fn pooled_tensor(&self, shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: self.pooled_vec(numel(shape)),
+        }
+    }
+
+    /// Return dead value storage to the pool.
+    fn recycle(&self, data: Vec<f32>) {
+        if !self.reuse_scratch || data.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.scratch.pool.borrow_mut();
+        if pool.len() < POOL_CAP {
+            pool.push(data);
+        }
+    }
+
+    /// Move the input out of the value table when this node is its last
+    /// consumer (elementwise ops then run in place, alloc- and copy-free);
+    /// otherwise copy it into a pooled tensor.
+    fn take_or_copy_f(
+        &self,
+        idx: usize,
+        id: usize,
+        vals: &mut [Option<Value>],
+    ) -> Result<Tensor> {
+        if self.last_use.get(&id) == Some(&idx) {
+            match vals[id].take() {
+                Some(Value::F(t)) => return Ok(t),
+                Some(v) => {
+                    vals[id] = Some(v);
+                    bail!("expected f32 value for input {id}");
+                }
+                None => bail!("missing input {id}"),
+            }
+        }
+        let src = get_f(vals, id)?;
+        Ok(Tensor {
+            shape: src.shape.clone(),
+            data: self.pooled_vec_copy(&src.data),
+        })
     }
 
     /// GEMM dispatch honouring style + backend. x is fp32 (M, k);
@@ -262,29 +492,24 @@ impl<'m> Executor<'m> {
         scale_idx: usize,
         out: &mut [f32],
     ) -> Result<()> {
-        let prep = &self.prepared[&node_id];
-        match prep {
+        match &self.prepared[&node_id] {
             PreparedNode::Fp32 { mats, .. } => {
                 let (w, k, n) = &mats[mat_idx];
                 match self.style {
                     Style::Naive => gemm::fp32_naive(x, m, *k, w, *n, out),
-                    Style::Optimized { threads } => {
-                        gemm::fp32_opt(x, m, *k, w, *n, threads, out)
-                    }
+                    Style::Optimized { threads } => gemm::fp32_opt(x, m, *k, w, *n, threads, out),
                 }
             }
-            PreparedNode::Quant {
-                mats, bits, func, ..
-            } => {
-                let mat = &mats[mat_idx];
+            PreparedNode::Quant { bits, .. } => {
                 // act_scales are calibrated for 8-bit; rescale the stored
                 // calib_max to this node's bitwidth (mixed precision).
                 let sa = self.act_scales[scale_idx]
                     * (quant::qmax_for(8) as f32 / quant::qmax_for(*bits) as f32);
-                let mut xq = vec![0i32; x.len()];
-                quant::quantize_slice(x, sa, *bits, &mut xq);
-                self.dense_q(node_id, mat_idx, &xq, m, sa, out)?;
-                let _ = (bits, func, mat);
+                let bits = *bits;
+                let mut xq = self.scratch.xq.grab(x.len(), self.reuse_scratch);
+                let xq = &mut xq[..x.len()];
+                quant::quantize_slice(x, sa, bits, xq);
+                self.dense_q(node_id, mat_idx, xq, m, sa, out)?;
             }
         }
         Ok(())
@@ -292,7 +517,8 @@ impl<'m> Executor<'m> {
 
     /// Quantized-input GEMM + dequant. The §Perf hot path: the optimized
     /// LUT engine takes the biased-u16/i32-accumulator kernel; everything
-    /// else goes through the generic i64 kernels.
+    /// else goes through the generic i64 kernels. The LUT is the *node's
+    /// own* table — different nodes may gather from different ACUs.
     fn dense_q(
         &self,
         node_id: usize,
@@ -302,40 +528,34 @@ impl<'m> Executor<'m> {
         sa: f32,
         out: &mut [f32],
     ) -> Result<()> {
-        let PreparedNode::Quant { mats, func, .. } = &self.prepared[&node_id] else {
+        let PreparedNode::Quant { mats, backend, .. } = &self.prepared[&node_id] else {
             bail!("dense_q on a non-quant node");
         };
         let mat = &mats[mat_idx];
-        match (func, self.style) {
-            (None, Style::Optimized { threads }) => {
-                let lut = self.lut.as_ref().context("LUT mode without LUT")?;
-                let mut acc = vec![0i32; m * mat.n];
-                gemm::lut_opt_biased(
-                    xq, m, mat.k, &mat.wq_biased, mat.n, lut, threads, &mut acc,
-                );
-                for mi in 0..m {
-                    for ni in 0..mat.n {
-                        out[mi * mat.n + ni] =
-                            acc[mi * mat.n + ni] as f32 * (sa * mat.scales[ni]);
-                    }
+        if let (Backend::Lut(lut), Style::Optimized { threads }) = (backend, self.style) {
+            let mut acc = self.scratch.acc32.grab(m * mat.n, self.reuse_scratch);
+            let acc = &mut acc[..m * mat.n];
+            gemm::lut_opt_biased(xq, m, mat.k, &mat.wq_biased, mat.n, lut, threads, acc);
+            for mi in 0..m {
+                for ni in 0..mat.n {
+                    out[mi * mat.n + ni] = acc[mi * mat.n + ni] as f32 * (sa * mat.scales[ni]);
                 }
-                return Ok(());
             }
-            _ => {}
+            return Ok(());
         }
-        let mut acc = vec![0i64; m * mat.n];
-        match (func, self.style) {
-            (None, Style::Naive) => {
-                let lut = self.lut.as_ref().context("LUT mode without LUT")?;
-                gemm::lut_naive(xq, m, mat.k, &mat.wq, mat.n, lut, &mut acc)
+        let mut acc = self.scratch.acc64.grab(m * mat.n, self.reuse_scratch);
+        let acc = &mut acc[..m * mat.n];
+        match (backend, self.style) {
+            (Backend::Lut(lut), Style::Naive) => {
+                gemm::lut_naive(xq, m, mat.k, &mat.wq, mat.n, lut, acc)
             }
-            (Some(f), Style::Naive) => {
-                gemm::func_naive(xq, m, mat.k, &mat.wq, mat.n, *f, &mut acc)
+            (Backend::Func(f), Style::Naive) => {
+                gemm::func_naive(xq, m, mat.k, &mat.wq, mat.n, *f, acc)
             }
-            (Some(f), Style::Optimized { threads }) => {
-                gemm::func_opt(xq, m, mat.k, &mat.wq, mat.n, *f, threads, &mut acc)
+            (Backend::Func(f), Style::Optimized { threads }) => {
+                gemm::func_opt(xq, m, mat.k, &mat.wq, mat.n, *f, threads, acc)
             }
-            (None, Style::Optimized { .. }) => unreachable!(),
+            (Backend::Lut(_), Style::Optimized { .. }) => unreachable!(),
         }
         for mi in 0..m {
             for ni in 0..mat.n {
@@ -366,60 +586,73 @@ impl<'m> Executor<'m> {
         let wo = conv_out(w, kw, stride, pad);
         let cin_g = cin / groups;
         let cout_g = cout / groups;
+        let kf = kh * kw * cin_g;
         let m = n * ho * wo;
-        let bias = match &self.prepared[&node.id] {
-            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
-        };
-        let mut out = Tensor::zeros(&[n, ho, wo, cout]);
-        let mut group_out = vec![0f32; m * cout_g];
+        let reuse = self.reuse_scratch;
+        let prep = &self.prepared[&node.id];
+        let bias = prep.bias();
+        let mut out = self.pooled_tensor(&[n, ho, wo, cout]);
+        let mut group_out = self.scratch.group_out.grab(m * cout_g, reuse);
+        let group_out = &mut group_out[..m * cout_g];
 
         // §Perf fast path (optimized engine, quantized node): quantize the
         // conv input ONCE (kh*kw fewer quantize ops than quantizing the
         // patch matrix) and run integer im2col. Numerically identical to
         // patch-then-quantize because q(0) == 0 (§4.1 buffer-reuse spirit).
         let quant_fast = matches!(self.style, Style::Optimized { .. })
-            && matches!(&self.prepared[&node.id], PreparedNode::Quant { .. });
+            && matches!(prep, PreparedNode::Quant { .. });
         if quant_fast {
-            let (sa, bits) = match &self.prepared[&node.id] {
-                PreparedNode::Quant { bits, .. } => (
-                    self.act_scales[scale_idx]
-                        * (quant::qmax_for(8) as f32 / quant::qmax_for(*bits) as f32),
-                    *bits,
-                ),
-                _ => unreachable!(),
+            let PreparedNode::Quant { bits, .. } = prep else {
+                unreachable!()
             };
-            let mut xq = crate::tensor::TensorI32::zeros(&x.shape);
-            quant::quantize_slice(&x.data, sa, bits, &mut xq.data);
+            let sa = self.act_scales[scale_idx]
+                * (quant::qmax_for(8) as f32 / quant::qmax_for(*bits) as f32);
+            let mut xq = self.scratch.xq.grab(x.data.len(), reuse);
+            let xq = &mut xq[..x.data.len()];
+            quant::quantize_slice(&x.data, sa, *bits, xq);
+            let mut patches = self.scratch.patches_i.grab(m * kf, reuse);
+            let patches = &mut patches[..m * kf];
             for g in 0..groups {
-                let xg = if groups == 1 {
-                    // no copy needed: im2col reads directly
-                    im2col_i32(&xq, kh, kw, stride, pad)
-                } else {
-                    im2col_i32(&xq.slice_last(g * cin_g, (g + 1) * cin_g), kh, kw, stride, pad)
-                };
-                self.dense_q(node.id, g, &xg.data, m, sa, &mut group_out)?;
+                im2col_i32_range_into(
+                    xq,
+                    &x.shape,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    g * cin_g,
+                    (g + 1) * cin_g,
+                    patches,
+                );
+                self.dense_q(node.id, g, patches, m, sa, group_out)?;
                 for mi in 0..m {
                     let dst = mi * cout + g * cout_g;
                     for ci in 0..cout_g {
-                        out.data[dst + ci] =
-                            group_out[mi * cout_g + ci] + bias[g * cout_g + ci];
+                        out.data[dst + ci] = group_out[mi * cout_g + ci] + bias[g * cout_g + ci];
                     }
                 }
             }
             return Ok(out);
         }
 
+        // Build the fp32 patch matrix per group; quantization (if any)
+        // happens in dense() with the layer's activation scale —
+        // numerically equal to quantize-then-patch because q(0) == 0.
+        let mut patches = self.scratch.patches_f.grab(m * kf, reuse);
+        let patches = &mut patches[..m * kf];
         for g in 0..groups {
-            let xg = if groups == 1 {
-                x.clone()
-            } else {
-                x.slice_last(g * cin_g, (g + 1) * cin_g)
-            };
-            // Build the fp32 patch matrix; quantization (if any) happens in
-            // dense() with the layer's activation scale — numerically equal
-            // to quantize-then-patch because q(0) == 0.
-            let patches = im2col_f32(&xg, kh, kw, stride, pad);
-            self.dense(node.id, g, &patches.data, m, scale_idx, &mut group_out)?;
+            im2col_f32_range_into(
+                &x.data,
+                &x.shape,
+                kh,
+                kw,
+                stride,
+                pad,
+                g * cin_g,
+                (g + 1) * cin_g,
+                patches,
+            );
+            self.dense(node.id, g, patches, m, scale_idx, group_out)?;
             // Scatter group columns + bias into NHWC output.
             for mi in 0..m {
                 let dst = mi * cout + g * cout_g;
@@ -439,10 +672,8 @@ impl<'m> Executor<'m> {
             _ => unreachable!(),
         };
         let m = x.shape[0];
-        let bias = match &self.prepared[&node.id] {
-            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
-        };
-        let mut out = Tensor::zeros(&[m, dout]);
+        let bias = self.prepared[&node.id].bias();
+        let mut out = self.pooled_tensor(&[m, dout]);
         self.dense(node.id, 0, &x.data, m, scale_idx, &mut out.data)?;
         for mi in 0..m {
             for ni in 0..dout {
@@ -465,31 +696,39 @@ impl<'m> Executor<'m> {
         };
         let (n, t) = (xs.shape[0], xs.shape[1]);
         anyhow::ensure!(xs.shape[2] == din, "lstm input dim");
-        let bias = match &self.prepared[&node.id] {
-            PreparedNode::Fp32 { bias, .. } | PreparedNode::Quant { bias, .. } => bias,
-        };
+        let bias = self.prepared[&node.id].bias();
         let g4 = 4 * hidden;
-        let mut h = vec![0f32; n * hidden];
-        let mut c = vec![0f32; n * hidden];
-        let mut x_t = vec![0f32; n * din];
-        let mut gx = vec![0f32; n * g4];
-        let mut gh = vec![0f32; n * g4];
+        let reuse = self.reuse_scratch;
+        let mut h = self.scratch.lstm_h.grab(n * hidden, reuse);
+        let h = &mut h[..n * hidden];
+        let mut c = self.scratch.lstm_c.grab(n * hidden, reuse);
+        let c = &mut c[..n * hidden];
+        h.fill(0.0);
+        c.fill(0.0);
+        let mut x_t = self.scratch.lstm_x.grab(n * din, reuse);
+        let x_t = &mut x_t[..n * din];
+        let mut gx = self.scratch.lstm_gx.grab(n * g4, reuse);
+        let gx = &mut gx[..n * g4];
+        let mut gh = self.scratch.lstm_gh.grab(n * g4, reuse);
+        let gh = &mut gh[..n * g4];
         for ti in 0..t {
             for ni in 0..n {
                 let src = (ni * t + ti) * din;
                 x_t[ni * din..(ni + 1) * din].copy_from_slice(&xs.data[src..src + din]);
             }
-            self.dense(node.id, 0, &x_t, n, scale_x, &mut gx)?;
-            self.dense(node.id, 1, &h, n, scale_h, &mut gh)?;
+            self.dense(node.id, 0, x_t, n, scale_x, gx)?;
+            self.dense(node.id, 1, h, n, scale_h, gh)?;
             for ni in 0..n {
                 for hi in 0..hidden {
                     let base = ni * g4;
                     let gi = gx[base + hi] + gh[base + hi] + bias[hi];
                     let gf = gx[base + hidden + hi] + gh[base + hidden + hi] + bias[hidden + hi];
-                    let gg =
-                        gx[base + 2 * hidden + hi] + gh[base + 2 * hidden + hi] + bias[2 * hidden + hi];
-                    let go =
-                        gx[base + 3 * hidden + hi] + gh[base + 3 * hidden + hi] + bias[3 * hidden + hi];
+                    let gg = gx[base + 2 * hidden + hi]
+                        + gh[base + 2 * hidden + hi]
+                        + bias[2 * hidden + hi];
+                    let go = gx[base + 3 * hidden + hi]
+                        + gh[base + 3 * hidden + hi]
+                        + bias[3 * hidden + hi];
                     let i = sigmoid_s(gi);
                     let f = sigmoid_s(gf);
                     let g = gg.tanh();
@@ -500,66 +739,88 @@ impl<'m> Executor<'m> {
                 }
             }
         }
-        Tensor::from_vec(&[n, hidden], h)
+        let mut out = self.pooled_tensor(&[n, hidden]);
+        out.data.copy_from_slice(h);
+        Ok(out)
     }
 
     /// Run one batch through the network. Returns the output tensor.
     pub fn forward(&self, input: Value) -> Result<Tensor> {
-        let mut vals: BTreeMap<usize, Value> = BTreeMap::new();
-        vals.insert(0, input);
+        let nvals = self.model.nodes.iter().map(|n| n.id).max().unwrap_or(0) + 1;
+        let mut vals = self.scratch.vals.borrow_mut();
+        vals.clear();
+        vals.resize_with(nvals, || None);
+        vals[0] = Some(input);
         let last = self.model.nodes.last().map(|n| n.id).unwrap_or(0);
-        for node in &self.model.nodes {
+        for (idx, node) in self.model.nodes.iter().enumerate() {
             if node.id == 0 {
                 continue;
             }
-            let v = self.exec_node(node, &vals)?;
-            // Free dead inputs eagerly? BTreeMap small; skip for clarity.
-            vals.insert(node.id, Value::F(v));
+            let v = self.exec_node(idx, node, &mut vals[..])?;
+            // Recycle inputs whose last consumer just ran: their storage
+            // backs later layers' outputs instead of hitting the allocator.
+            for &inp in &node.inputs {
+                if self.last_use.get(&inp) == Some(&idx) {
+                    if let Some(Value::F(t)) = vals[inp].take() {
+                        self.recycle(t.data);
+                    }
+                }
+            }
+            vals[node.id] = Some(Value::F(v));
         }
-        match vals.remove(&last) {
+        match vals[last].take() {
             Some(Value::F(t)) => Ok(t),
             _ => bail!("model output missing"),
         }
     }
 
-    fn exec_node(&self, node: &Node, vals: &BTreeMap<usize, Value>) -> Result<Tensor> {
-        let get_f = |i: usize| -> Result<&Tensor> {
-            vals.get(&node.inputs[i])
-                .ok_or_else(|| anyhow!("missing input {}", node.inputs[i]))?
-                .as_f()
-        };
+    fn exec_node(
+        &self,
+        idx: usize,
+        node: &Node,
+        vals: &mut [Option<Value>],
+    ) -> Result<Tensor> {
         Ok(match &node.op {
             Op::Input => unreachable!(),
-            Op::Conv2d { .. } => self.exec_conv(node, get_f(0)?)?,
-            Op::Linear { .. } => self.exec_linear(node, get_f(0)?)?,
-            Op::Lstm { .. } => self.exec_lstm(node, get_f(0)?)?,
+            Op::Conv2d { .. } => self.exec_conv(node, get_f(vals, node.inputs[0])?)?,
+            Op::Linear { .. } => self.exec_linear(node, get_f(vals, node.inputs[0])?)?,
+            Op::Lstm { .. } => self.exec_lstm(node, get_f(vals, node.inputs[0])?)?,
             Op::Embedding { .. } => {
-                let toks = vals
-                    .get(&node.inputs[0])
-                    .ok_or_else(|| anyhow!("missing input"))?
-                    .as_i()?;
+                let toks = get_i(vals, node.inputs[0])?;
                 let table = &self.params[node.params[0]];
                 layers::embedding(toks, table)?
             }
-            Op::Relu => layers::relu(get_f(0)?.clone()),
-            Op::Sigmoid => layers::sigmoid(get_f(0)?.clone()),
-            Op::Tanh => layers::tanh(get_f(0)?.clone()),
-            Op::AvgPool2 => layers::avgpool2(get_f(0)?),
-            Op::Gap => layers::gap(get_f(0)?),
-            Op::Flatten => layers::flatten(get_f(0)?.clone()),
-            Op::Add => get_f(0)?.add(get_f(1)?)?,
+            Op::Relu => layers::relu(self.take_or_copy_f(idx, node.inputs[0], vals)?),
+            Op::Sigmoid => layers::sigmoid(self.take_or_copy_f(idx, node.inputs[0], vals)?),
+            Op::Tanh => layers::tanh(self.take_or_copy_f(idx, node.inputs[0], vals)?),
+            Op::AvgPool2 => layers::avgpool2(get_f(vals, node.inputs[0])?),
+            Op::Gap => layers::gap(get_f(vals, node.inputs[0])?),
+            Op::Flatten => layers::flatten(self.take_or_copy_f(idx, node.inputs[0], vals)?),
+            Op::Add => {
+                let a = get_f(vals, node.inputs[0])?;
+                let b = get_f(vals, node.inputs[1])?;
+                anyhow::ensure!(a.shape == b.shape, "add shape mismatch");
+                let mut out = self.pooled_tensor(&a.shape);
+                for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+                    *o = x + y;
+                }
+                out
+            }
             Op::Concat => {
+                let vr: &[Option<Value>] = vals;
                 let parts: Vec<&Tensor> = node
                     .inputs
                     .iter()
-                    .map(|i| vals[i].as_f())
+                    .map(|&i| get_f(vr, i))
                     .collect::<Result<_>>()?;
                 Tensor::concat_last(&parts)?
             }
-            Op::ChannelShuffle { groups } => layers::channel_shuffle(get_f(0)?, *groups),
-            Op::SliceLast { start, end } => get_f(0)?.slice_last(*start, *end),
+            Op::ChannelShuffle { groups } => {
+                layers::channel_shuffle(get_f(vals, node.inputs[0])?, *groups)
+            }
+            Op::SliceLast { start, end } => get_f(vals, node.inputs[0])?.slice_last(*start, *end),
             Op::Reshape { shape } => {
-                let x = get_f(0)?.clone();
+                let x = self.take_or_copy_f(idx, node.inputs[0], vals)?;
                 let n = x.shape[0];
                 let mut full = vec![n];
                 full.extend_from_slice(shape);
@@ -570,36 +831,41 @@ impl<'m> Executor<'m> {
 }
 
 fn build_prepared(
-    mode: LayerMode,
+    mode: &LayerMode,
+    luts: &LutRegistry,
     flats: Vec<Vec<f32>>,
     k: usize,
     n: usize,
     bias: Vec<f32>,
-) -> PreparedNode {
-    match mode {
+) -> Result<PreparedNode> {
+    Ok(match mode {
         LayerMode::Fp32 => PreparedNode::Fp32 {
             mats: flats.into_iter().map(|w| (w, k, n)).collect(),
             bias,
         },
-        LayerMode::ApproxLut => PreparedNode::Quant {
-            mats: flats
-                .into_iter()
-                .map(|w| QuantMat::build(&w, k, n, 8))
-                .collect(),
-            bias,
-            bits: 8,
-            func: None,
-        },
+        LayerMode::ApproxLut { acu } => {
+            let lut = luts.get(acu)?;
+            let bits = lut.bits;
+            PreparedNode::Quant {
+                mats: flats
+                    .into_iter()
+                    .map(|w| QuantMat::build(&w, k, n, bits))
+                    .collect(),
+                bias,
+                bits,
+                backend: Backend::Lut(lut),
+            }
+        }
         LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
             mats: flats
                 .into_iter()
-                .map(|w| QuantMat::build(&w, k, n, bits))
+                .map(|w| QuantMat::build(&w, k, n, *bits))
                 .collect(),
             bias,
-            bits,
-            func: Some(func_for(trunc_k)),
+            bits: *bits,
+            backend: Backend::Func(func_for(*trunc_k)),
         },
-    }
+    })
 }
 
 #[inline(always)]

@@ -11,6 +11,12 @@
 //! The third Table-4 column ("AdaPT", ours via XLA) runs through
 //! [`crate::runtime`] instead: the same graph AOT-lowered with the Pallas
 //! LUT kernel and executed on PJRT.
+//!
+//! Unlike the XLA path (one LUT literal per call), the Rust engines
+//! execute *heterogeneous* plans: each quantizable node resolves its own
+//! ACU through [`crate::lut::LutRegistry`], so one forward pass can mix
+//! approximate multipliers per layer. All per-layer buffers live in a
+//! grow-only scratch arena (see [`exec`]).
 
 pub mod exec;
 pub mod gemm;

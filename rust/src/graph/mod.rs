@@ -347,27 +347,199 @@ fn parse_node(nj: &Json) -> Result<Node> {
 // Re-transform tool (§3.4)
 // ---------------------------------------------------------------------------
 
-/// How one quantizable layer executes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// How one quantizable layer executes. Each approximated layer carries its
+/// own ACU identity, so a single plan can mix accelerators per layer
+/// (MAx-DNN-style heterogeneous assignment).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum LayerMode {
     /// Vanilla fp32 layer (approximation disabled).
     Fp32,
     /// Quantize + route products through the named LUT ACU (8-bit family).
-    ApproxLut,
+    ApproxLut { acu: String },
     /// Quantize + functional ACU at `bits` with output truncation `k`
     /// (the large-bitwidth fallback; k = 0 means exact-quantized).
     ApproxFunc { bits: u32, trunc_k: u32 },
 }
 
-/// Per-layer execution assignment produced by [`retransform`].
-#[derive(Clone, Debug)]
+impl LayerMode {
+    /// LUT mode for a named ACU.
+    pub fn lut(acu: impl Into<String>) -> LayerMode {
+        LayerMode::ApproxLut { acu: acu.into() }
+    }
+
+    /// Parse the CLI/plan-file spelling: `fp32`, `func:<bits>:<trunc_k>`,
+    /// or a LUT ACU name (e.g. `mul8s_1l2h_like`).
+    pub fn parse(s: &str) -> Result<LayerMode> {
+        if s.eq_ignore_ascii_case("fp32") {
+            return Ok(LayerMode::Fp32);
+        }
+        if let Some(rest) = s.strip_prefix("func:") {
+            let (bits, k) = rest
+                .split_once(':')
+                .with_context(|| format!("bad func mode {s:?} (want func:<bits>:<k>)"))?;
+            return Ok(LayerMode::ApproxFunc {
+                bits: bits.parse().with_context(|| format!("bad bits in {s:?}"))?,
+                trunc_k: k.parse().with_context(|| format!("bad trunc_k in {s:?}"))?,
+            });
+        }
+        Ok(LayerMode::lut(s))
+    }
+
+    /// Compact human/JSON-free label (inverse of [`LayerMode::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            LayerMode::Fp32 => "fp32".to_string(),
+            LayerMode::ApproxLut { acu } => acu.clone(),
+            LayerMode::ApproxFunc { bits, trunc_k } => format!("func:{bits}:{trunc_k}"),
+        }
+    }
+}
+
+/// Per-layer execution assignment produced by [`retransform`] (or loaded
+/// from a plan JSON) — the first-class mixed-precision artifact.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExecutionPlan {
     /// node id -> mode for every quantizable node.
     pub modes: BTreeMap<usize, LayerMode>,
 }
 
+impl ExecutionPlan {
+    /// Distinct LUT ACU names this plan needs (for registry preloading).
+    pub fn acus(&self) -> Vec<String> {
+        let mut set = std::collections::BTreeSet::new();
+        for mode in self.modes.values() {
+            if let LayerMode::ApproxLut { acu } = mode {
+                set.insert(acu.clone());
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Mode for one node (Fp32 for nodes the plan does not cover).
+    pub fn mode_of(&self, node_id: usize) -> LayerMode {
+        self.modes
+            .get(&node_id)
+            .cloned()
+            .unwrap_or(LayerMode::Fp32)
+    }
+
+    /// Serialize as a plan JSON document:
+    ///
+    /// ```json
+    /// {"model": "small_vgg", "version": 1, "layers": [
+    ///   {"node": 1, "name": "c1", "mode": "lut", "acu": "exact8"},
+    ///   {"node": 5, "name": "fc", "mode": "fp32"}]}
+    /// ```
+    pub fn to_json(&self, model: &Model) -> String {
+        let mut layers = Vec::new();
+        for node in &model.nodes {
+            let Some(mode) = self.modes.get(&node.id) else {
+                continue;
+            };
+            let mut entry = BTreeMap::new();
+            entry.insert("node".to_string(), Json::Num(node.id as f64));
+            if let Some(name) = node.op.layer_name() {
+                entry.insert("name".to_string(), Json::Str(name.to_string()));
+            }
+            match mode {
+                LayerMode::Fp32 => {
+                    entry.insert("mode".to_string(), Json::Str("fp32".into()));
+                }
+                LayerMode::ApproxLut { acu } => {
+                    entry.insert("mode".to_string(), Json::Str("lut".into()));
+                    entry.insert("acu".to_string(), Json::Str(acu.clone()));
+                }
+                LayerMode::ApproxFunc { bits, trunc_k } => {
+                    entry.insert("mode".to_string(), Json::Str("func".into()));
+                    entry.insert("bits".to_string(), Json::Num(*bits as f64));
+                    entry.insert("trunc_k".to_string(), Json::Num(*trunc_k as f64));
+                }
+            }
+            layers.push(Json::Obj(entry));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("model".to_string(), Json::Str(model.name.clone()));
+        doc.insert("version".to_string(), Json::Num(1.0));
+        doc.insert("layers".to_string(), Json::Arr(layers));
+        Json::Obj(doc).to_string()
+    }
+
+    /// Parse a plan JSON document against `model`, validating that every
+    /// referenced node exists and is quantizable and that the plan covers
+    /// every quantizable node.
+    pub fn from_json(text: &str, model: &Model) -> Result<ExecutionPlan> {
+        let j = Json::parse(text).context("parsing plan JSON")?;
+        if let Some(m) = j.opt("model") {
+            let name = m.str()?;
+            if name != model.name {
+                bail!("plan was written for model {name:?}, not {:?}", model.name);
+            }
+        }
+        let mut modes = BTreeMap::new();
+        for entry in j.get("layers")?.arr()? {
+            let id = entry.get("node")?.usize()?;
+            let node = model
+                .nodes
+                .iter()
+                .find(|n| n.id == id)
+                .with_context(|| format!("plan references unknown node {id}"))?;
+            if !node.op.is_quantizable() {
+                bail!("plan assigns a mode to non-quantizable node {id}");
+            }
+            if let Some(name) = entry.opt("name") {
+                let name = name.str()?;
+                if node.op.layer_name() != Some(name) {
+                    bail!(
+                        "plan node {id} is named {name:?} but the model calls it {:?}",
+                        node.op.layer_name().unwrap_or("<unnamed>")
+                    );
+                }
+            }
+            let mode = match entry.get("mode")?.str()? {
+                "fp32" => LayerMode::Fp32,
+                "lut" => LayerMode::lut(entry.get("acu")?.str()?),
+                "func" => LayerMode::ApproxFunc {
+                    bits: entry.get("bits")?.usize()? as u32,
+                    trunc_k: entry.get("trunc_k")?.usize()? as u32,
+                },
+                other => bail!("unknown plan mode {other:?} for node {id}"),
+            };
+            if modes.insert(id, mode).is_some() {
+                bail!("plan assigns node {id} twice");
+            }
+        }
+        for node in &model.nodes {
+            if node.op.is_quantizable() && !modes.contains_key(&node.id) {
+                bail!(
+                    "plan misses quantizable node {} ({:?})",
+                    node.id,
+                    node.op.layer_name().unwrap_or("<unnamed>")
+                );
+            }
+        }
+        Ok(ExecutionPlan { modes })
+    }
+
+    /// One line per layer (reports / `adapt plan`).
+    pub fn describe(&self, model: &Model) -> String {
+        let mut out = String::new();
+        for node in &model.nodes {
+            if let Some(mode) = self.modes.get(&node.id) {
+                out.push_str(&format!(
+                    "  node {:>3}  {:<24} {}\n",
+                    node.id,
+                    node.op.layer_name().unwrap_or("<unnamed>"),
+                    mode.label()
+                ));
+            }
+        }
+        out
+    }
+}
+
 /// Layer-selection policy — the "easily enabled or disabled for the layers
-/// of the model" knob. Mixed precision = different modes per name.
+/// of the model" knob. Mixed precision = different modes (and different
+/// ACUs) per layer name.
 #[derive(Clone, Debug, Default)]
 pub struct Policy {
     /// Default mode for quantizable layers not matched below.
@@ -388,6 +560,48 @@ impl Policy {
         self.overrides.insert(layer.to_string(), mode);
         self
     }
+
+    /// Assign a specific LUT ACU to one layer by name.
+    pub fn with_acu(self, layer: &str, acu: &str) -> Policy {
+        self.with_override(layer, LayerMode::lut(acu))
+    }
+
+    /// Override keys that name no quantizable layer of `model` — the typo
+    /// guard for user-authored specs. `retransform` silently skips
+    /// unmatched names (a policy may be shared across models), so
+    /// user-facing paths should check this and error loudly.
+    pub fn unmatched_overrides(&self, model: &Model) -> Vec<String> {
+        let names: std::collections::BTreeSet<&str> = model
+            .nodes
+            .iter()
+            .filter_map(|n| n.op.layer_name())
+            .collect();
+        self.overrides
+            .keys()
+            .filter(|k| !names.contains(k.as_str()))
+            .cloned()
+            .collect()
+    }
+
+    /// Parse a CLI spec: comma-separated `key=mode` pairs where `key` is a
+    /// layer name or the word `default`, and `mode` follows
+    /// [`LayerMode::parse`]. Example:
+    /// `default=mul8s_1l2h_like,conv1=exact8,fc=fp32,head=func:12:4`.
+    pub fn parse_spec(spec: &str) -> Result<Policy> {
+        let mut policy = Policy::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .with_context(|| format!("bad policy entry {part:?} (want key=mode)"))?;
+            let mode = LayerMode::parse(val.trim())?;
+            if key.trim() == "default" {
+                policy.default_mode = Some(mode);
+            } else {
+                policy.overrides.insert(key.trim().to_string(), mode);
+            }
+        }
+        Ok(policy)
+    }
 }
 
 /// Walk the model and assign each quantizable node its execution mode —
@@ -402,8 +616,8 @@ pub fn retransform(model: &Model, policy: &Policy) -> ExecutionPlan {
         let mode = policy
             .overrides
             .get(name)
-            .copied()
-            .or(policy.default_mode)
+            .or(policy.default_mode.as_ref())
+            .cloned()
             .unwrap_or(LayerMode::Fp32);
         modes.insert(node.id, mode);
     }
@@ -473,9 +687,13 @@ mod tests {
     #[test]
     fn retransform_all_layers() {
         let m = tiny_model();
-        let plan = retransform(&m, &Policy::all(LayerMode::ApproxLut));
+        let plan = retransform(&m, &Policy::all(LayerMode::lut("exact8")));
         assert_eq!(plan.modes.len(), 2);
-        assert!(plan.modes.values().all(|m| *m == LayerMode::ApproxLut));
+        assert!(plan
+            .modes
+            .values()
+            .all(|m| *m == LayerMode::lut("exact8")));
+        assert_eq!(plan.acus(), vec!["exact8".to_string()]);
     }
 
     #[test]
@@ -483,10 +701,28 @@ mod tests {
         let m = tiny_model();
         let plan = retransform(
             &m,
-            &Policy::all(LayerMode::ApproxLut).with_override("fc", LayerMode::Fp32),
+            &Policy::all(LayerMode::lut("exact8")).with_override("fc", LayerMode::Fp32),
         );
-        assert_eq!(plan.modes[&1], LayerMode::ApproxLut);
+        assert_eq!(plan.modes[&1], LayerMode::lut("exact8"));
         assert_eq!(plan.modes[&2], LayerMode::Fp32);
+    }
+
+    #[test]
+    fn retransform_per_layer_acus() {
+        // Heterogeneous assignment: each layer gets its own ACU.
+        let m = tiny_model();
+        let plan = retransform(
+            &m,
+            &Policy::all(LayerMode::lut("mul8s_1l2h_like"))
+                .with_acu("c1", "drum8_4")
+                .with_override("fc", LayerMode::ApproxFunc { bits: 12, trunc_k: 4 }),
+        );
+        assert_eq!(plan.modes[&1], LayerMode::lut("drum8_4"));
+        assert_eq!(
+            plan.modes[&2],
+            LayerMode::ApproxFunc { bits: 12, trunc_k: 4 }
+        );
+        assert_eq!(plan.acus(), vec!["drum8_4".to_string()]);
     }
 
     #[test]
@@ -494,5 +730,68 @@ mod tests {
         let m = tiny_model();
         let plan = retransform(&m, &Policy::default());
         assert!(plan.modes.values().all(|m| *m == LayerMode::Fp32));
+    }
+
+    #[test]
+    fn layer_mode_parse_roundtrip() {
+        for mode in [
+            LayerMode::Fp32,
+            LayerMode::lut("mitchell8"),
+            LayerMode::ApproxFunc { bits: 12, trunc_k: 4 },
+        ] {
+            assert_eq!(LayerMode::parse(&mode.label()).unwrap(), mode);
+        }
+        assert!(LayerMode::parse("func:12").is_err());
+    }
+
+    #[test]
+    fn policy_spec_parsing() {
+        let p = Policy::parse_spec("default=mul8s_1l2h_like,c1=exact8,fc=fp32").unwrap();
+        assert_eq!(p.default_mode, Some(LayerMode::lut("mul8s_1l2h_like")));
+        assert_eq!(p.overrides["c1"], LayerMode::lut("exact8"));
+        assert_eq!(p.overrides["fc"], LayerMode::Fp32);
+        assert!(Policy::parse_spec("no-equals-sign").is_err());
+    }
+
+    #[test]
+    fn unmatched_overrides_are_reported() {
+        let m = tiny_model();
+        let p = Policy::parse_spec("default=exact8,c1=drum8_4,classifier=fp32").unwrap();
+        assert_eq!(p.unmatched_overrides(&m), vec!["classifier".to_string()]);
+        let ok = Policy::parse_spec("c1=exact8,fc=fp32").unwrap();
+        assert!(ok.unmatched_overrides(&m).is_empty());
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let m = tiny_model();
+        let plan = retransform(
+            &m,
+            &Policy::all(LayerMode::lut("mul8s_1l2h_like"))
+                .with_acu("c1", "drum8_4")
+                .with_override("fc", LayerMode::ApproxFunc { bits: 12, trunc_k: 4 }),
+        );
+        let text = plan.to_json(&m);
+        let re = ExecutionPlan::from_json(&text, &m).unwrap();
+        assert_eq!(re, plan);
+    }
+
+    #[test]
+    fn plan_json_validation() {
+        let m = tiny_model();
+        // Unknown node id.
+        let bad = r#"{"layers": [{"node": 99, "mode": "fp32"}]}"#;
+        assert!(ExecutionPlan::from_json(bad, &m).is_err());
+        // Missing coverage of node 2.
+        let partial = r#"{"layers": [{"node": 1, "mode": "lut", "acu": "exact8"}]}"#;
+        assert!(ExecutionPlan::from_json(partial, &m).is_err());
+        // Wrong model name.
+        let wrong = r#"{"model": "other", "layers": []}"#;
+        assert!(ExecutionPlan::from_json(wrong, &m).is_err());
+        // Name mismatch on a node.
+        let misnamed = r#"{"layers": [
+            {"node": 1, "name": "nope", "mode": "fp32"},
+            {"node": 2, "mode": "fp32"}]}"#;
+        assert!(ExecutionPlan::from_json(misnamed, &m).is_err());
     }
 }

@@ -16,19 +16,31 @@
 //!
 //! * [`util`] — dependency-free substrates: JSON, CLI, PRNG, threadpool,
 //!   micro-benchmark harness.
-//! * [`tensor`] — minimal NHWC ndarray + im2col (Fig. 3's GEMM reshape).
+//! * [`tensor`] — minimal NHWC ndarray + im2col (Fig. 3's GEMM reshape),
+//!   including the allocation-free channel-range variants the executor's
+//!   scratch arena feeds.
 //! * [`mult`] — behavioral approximate multipliers (EvoApprox substitute),
 //!   bit-exact mirrors of `python/compile/multipliers.py`.
-//! * [`lut`] — product look-up tables: binary loader, generator, layouts.
+//! * [`lut`] — product look-up tables: binary loader, generator, layouts,
+//!   and the shared [`lut::LutRegistry`] resolving ACU *names* to
+//!   `Arc<Lut>` tables exactly once per process.
 //! * [`quant`] — affine quantizer + histogram calibrators (§3.2).
 //! * [`layers`] — fp32/approx layer kernels for the Rust emulators (§3.3).
 //! * [`graph`] — the shared model IR + the graph re-transform tool (§3.4).
+//!   [`graph::LayerMode`] carries per-layer ACU identity;
+//!   [`graph::ExecutionPlan`] serializes to/from plan JSON, making
+//!   mixed-precision configurations first-class artifacts.
 //! * [`emulator`] — the Table-4 engines: naive scalar *baseline* and the
-//!   blocked, threaded, LUT-gather *optimized* engine (§4).
+//!   blocked, threaded, LUT-gather *optimized* engine (§4). Executes
+//!   heterogeneous per-layer ACU plans with a grow-only scratch arena
+//!   (zero per-layer heap allocations in steady state).
 //! * [`data`] — deterministic synthetic datasets (CIFAR/MNIST/IMDB stand-ins).
-//! * [`runtime`] — PJRT artifact loading/execution (the AdaPT fast path).
+//! * [`runtime`] — PJRT artifact loading/execution (the AdaPT fast path;
+//!   stubbed by `rust/vendor/xla` in offline builds).
 //! * [`coordinator`] — batching engine, calibration, QAT retraining,
-//!   experiment harnesses for every table in the paper.
+//!   experiment harnesses for every table in the paper plus the
+//!   per-layer ACU sensitivity sweep / greedy mixed-precision search
+//!   (`coordinator::experiments::layer_sensitivity`).
 //! * [`metrics`] — accuracy/timing metrics.
 
 pub mod coordinator;

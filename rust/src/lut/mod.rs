@@ -13,12 +13,16 @@
 //! Binary format (little-endian):
 //! `magic u32 | bits u32 | n u32 | reserved u32 | n*n i32 row-major`.
 
+pub mod registry;
+
 use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::mult::Multiplier;
+
+pub use registry::LutRegistry;
 
 pub const LUT_MAGIC: u32 = 0x4C55_5401;
 

@@ -1,0 +1,115 @@
+//! Shared ACU table registry: resolves ACU *names* to `Arc<Lut>` exactly
+//! once per process, so a heterogeneous per-layer plan that uses the same
+//! ACU in twenty layers (or twenty executors serving the same model)
+//! shares one 256 KiB table instead of twenty.
+//!
+//! Resolution order:
+//! 1. the in-memory cache,
+//! 2. the LUT artifact file named by the manifest (bit-exact with the
+//!    Python generator — `rust/tests/lut_cross_check.rs`),
+//! 3. in-process generation from [`crate::mult`] (artifact-free runs:
+//!    tests, benches, `adapt plan`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::Lut;
+use crate::graph::Manifest;
+use crate::mult;
+
+/// Thread-safe name -> `Arc<Lut>` resolver.
+pub struct LutRegistry {
+    /// ACU name -> artifact path (from the manifest; may be empty).
+    files: BTreeMap<String, PathBuf>,
+    cache: Mutex<BTreeMap<String, Arc<Lut>>>,
+}
+
+impl LutRegistry {
+    /// Registry with no artifact files: every table is generated from the
+    /// behavioral multiplier library on first use.
+    pub fn in_memory() -> LutRegistry {
+        LutRegistry {
+            files: BTreeMap::new(),
+            cache: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Registry backed by the manifest's LUT artifacts, falling back to
+    /// in-process generation for ACUs the artifacts don't cover.
+    pub fn from_manifest(manifest: &Manifest) -> LutRegistry {
+        let files = manifest
+            .luts
+            .iter()
+            .map(|(name, meta)| (name.clone(), manifest.root.join(&meta.file)))
+            .collect();
+        LutRegistry {
+            files,
+            cache: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Resolve an ACU name to its shared table.
+    pub fn get(&self, acu: &str) -> Result<Arc<Lut>> {
+        let mut cache = self.cache.lock().expect("lut registry poisoned");
+        if let Some(lut) = cache.get(acu) {
+            return Ok(lut.clone());
+        }
+        let lut = match self.files.get(acu).filter(|p| p.exists()) {
+            Some(path) => Lut::load(path)
+                .with_context(|| format!("loading LUT artifact for ACU {acu:?}"))?,
+            None => {
+                let m = mult::get(acu)
+                    .with_context(|| format!("ACU {acu:?}: no LUT artifact and no behavioral model"))?;
+                Lut::generate(m)
+            }
+        };
+        let lut = Arc::new(lut);
+        cache.insert(acu.to_string(), lut.clone());
+        Ok(lut)
+    }
+
+    /// Resolve a whole plan's worth of names up front (fail fast at
+    /// executor construction instead of mid-forward).
+    pub fn preload(&self, acus: &[String]) -> Result<()> {
+        for acu in acus {
+            self.get(acu)?;
+        }
+        Ok(())
+    }
+
+    /// Number of resolved tables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().expect("lut registry poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_and_caches() {
+        let reg = LutRegistry::in_memory();
+        let a = reg.get("drum8_4").unwrap();
+        let b = reg.get("drum8_4").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same Arc shared across lookups");
+        assert_eq!(reg.cached(), 1);
+        assert_eq!(a.mul(-3, 5), mult::get("drum8_4").unwrap().apply(-3, 5) as i32);
+    }
+
+    #[test]
+    fn unknown_acu_errors() {
+        let reg = LutRegistry::in_memory();
+        assert!(reg.get("no_such_acu").is_err());
+    }
+
+    #[test]
+    fn preload_resolves_all() {
+        let reg = LutRegistry::in_memory();
+        reg.preload(&["exact8".to_string(), "mitchell8".to_string()]).unwrap();
+        assert_eq!(reg.cached(), 2);
+    }
+}

@@ -9,6 +9,10 @@
 //! adapt table2 [--models a,b] [--steps-scale S] [--acu NAME]
 //! adapt table4 [--models a,b] [--eval-batches N] [--skip-baseline]
 //! adapt ablation [--model NAME]       ACU accuracy/power sweep
+//! adapt sensitivity --model NAME [--acus a,b] [--budget PTS] per-layer
+//!       ACU sweep + greedy mixed-precision search (heterogeneous plans)
+//! adapt plan --model NAME [--spec "default=ACU,layer=ACU,head=fp32"]
+//!       [--out FILE]                  build/inspect a per-layer plan JSON
 //! adapt calibrate --model NAME [--calibrator max|percentile|mse|entropy]
 //! adapt serve --model NAME [--requests N]   dynamic-batching engine demo
 //! adapt selftest                      emulator vs XLA cross-check
@@ -23,12 +27,13 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use adapt::coordinator::engine::{EngineConfig, InferenceEngine};
-use adapt::coordinator::experiments::{self, Table2Config, Table4Config};
-use adapt::coordinator::ops::{self, InferVariant};
+use adapt::coordinator::experiments::{self, SensitivityConfig, Table2Config, Table4Config};
 use adapt::coordinator::features;
+use adapt::coordinator::ops::{self, InferVariant};
 use adapt::data::Sizes;
 use adapt::emulator::{Executor, Style, Value};
-use adapt::graph::{retransform, LayerMode, Policy};
+use adapt::graph::{retransform, ExecutionPlan, LayerMode, Manifest, Policy};
+use adapt::lut::LutRegistry;
 use adapt::mult;
 use adapt::quant::calib::CalibratorKind;
 use adapt::runtime::Runtime;
@@ -128,6 +133,75 @@ fn run() -> Result<()> {
                 experiments::ablation(&mut rt, &model, &sizes_from(&args)?, eval_batches)?
             );
         }
+        "sensitivity" => {
+            let mut rt = Runtime::open(&artifacts_from(&args))?;
+            let defaults = SensitivityConfig::default();
+            let cfg = SensitivityConfig {
+                model: args.get_or("model", "small_vgg").to_string(),
+                sizes: sizes_from(&args)?,
+                eval_batches: args.get_usize("eval-batches", defaults.eval_batches)?,
+                acus: {
+                    let list = args.get_list("acus");
+                    if list.is_empty() {
+                        defaults.acus
+                    } else {
+                        list
+                    }
+                },
+                reference: args.get_or("reference", "exact8").to_string(),
+                // --budget is in accuracy points (e.g. 2.0 = two points).
+                budget: args.get_f64("budget", 100.0 * defaults.budget)? / 100.0,
+                threads: args.get_usize("threads", defaults.threads)?,
+                verbose: args.flag("verbose"),
+            };
+            println!(
+                "Per-layer ACU sensitivity + greedy mixed-precision search\n"
+            );
+            println!("{}", experiments::layer_sensitivity(&mut rt, &cfg)?);
+        }
+        "plan" => {
+            // Pure re-transform tooling: needs the manifest, not PJRT.
+            let manifest = Manifest::load(&artifacts_from(&args))?;
+            let name = args.get_or("model", "small_vgg").to_string();
+            let model = manifest.model(&name)?;
+            let plan = match args.get("plan-file") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .with_context(|| format!("reading plan {path}"))?;
+                    ExecutionPlan::from_json(&text, model)?
+                }
+                None => {
+                    let spec = args.get_or("spec", "default=mul8s_1l2h_like");
+                    let policy = Policy::parse_spec(spec)?;
+                    // Typo guard: an override naming no layer would be
+                    // silently dropped by retransform — fail loudly instead.
+                    let unmatched = policy.unmatched_overrides(model);
+                    if !unmatched.is_empty() {
+                        let layers: Vec<&str> = model
+                            .nodes
+                            .iter()
+                            .filter_map(|n| n.op.layer_name())
+                            .collect();
+                        bail!(
+                            "--spec overrides match no layer of {name}: {unmatched:?} \
+                             (quantizable layers: {})",
+                            layers.join(", ")
+                        );
+                    }
+                    retransform(model, &policy)
+                }
+            };
+            // Validate every named ACU resolves (artifact or behavioral).
+            let luts = LutRegistry::from_manifest(&manifest);
+            luts.preload(&plan.acus())?;
+            println!("plan for {name}:");
+            print!("{}", plan.describe(model));
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, plan.to_json(model))
+                    .with_context(|| format!("writing {out}"))?;
+                println!("written to {out}");
+            }
+        }
         "calibrate" => {
             let mut rt = Runtime::open(&artifacts_from(&args))?;
             let model = args.get("model").context("--model required")?.to_string();
@@ -199,9 +273,10 @@ fn run() -> Result<()> {
             let model = args.get_or("model", "small_vgg").to_string();
             selftest(&mut rt, &model)?;
         }
-        "help" | _ => {
+        _ => {
             println!("adapt — AdaPT-RS coordinator. See `rust/src/main.rs` docs for subcommands.");
             println!("  specs | features | multipliers | table2 | table4 | ablation");
+            println!("  sensitivity --model M [--acus a,b] [--budget PTS] | plan --model M [--spec S]");
             println!("  calibrate --model M | serve --model M | selftest [--model M]");
         }
     }
@@ -216,13 +291,14 @@ fn selftest(rt: &mut Runtime, name: &str) -> Result<()> {
     let ds = adapt::data::load(&model.dataset, &sizes);
     let mut st = experiments::ensure_pretrained(rt, name, &sizes, 0.1, false)?;
     ops::calibrate(&mut *rt, &mut st, &ds, 1, CalibratorKind::Percentile, 0.999)?;
-    let (lut, lut_lit) = ops::load_lut(rt, "mul8s_1l2h_like")?;
+    let lut_lit = ops::load_lut_lit(rt, "mul8s_1l2h_like")?;
     let bs = rt.manifest.batch;
 
     let x = ops::batch_input(&model, &ds.eval, 0, bs)?;
     let xla_out = ops::infer_batch(rt, &st, InferVariant::ApproxLut, &x, Some(&lut_lit))?;
 
-    let plan = retransform(&model, &Policy::all(LayerMode::ApproxLut));
+    let plan = retransform(&model, &Policy::all(LayerMode::lut("mul8s_1l2h_like")));
+    let luts = LutRegistry::from_manifest(&rt.manifest);
     let params = st.params_tensors()?;
     let scales = st.act_scales.clone().unwrap();
     let input = if model.input_dtype == "i32" {
@@ -236,7 +312,7 @@ fn selftest(rt: &mut Runtime, name: &str) -> Result<()> {
             params.clone(),
             plan.clone(),
             scales.clone(),
-            Some(adapt::lut::Lut::load(&rt.manifest.lut_path("mul8s_1l2h_like")?)?),
+            &luts,
             style,
         )?;
         let out = exec.forward(input.clone())?;
@@ -278,7 +354,6 @@ fn selftest(rt: &mut Runtime, name: &str) -> Result<()> {
             "behavioral disagreement: {argmax_agree}/{nsamples}"
         );
     }
-    let _ = lut;
     println!("selftest {name}: OK");
     Ok(())
 }

@@ -193,6 +193,41 @@ pub fn im2col_i32(
     let wo = conv_out(w, kw, stride, pad);
     let kf = kh * kw * c;
     let mut out = vec![0i32; n * ho * wo * kf];
+    im2col_i32_range_into(&x.data, &x.shape, kh, kw, stride, pad, 0, c, &mut out);
+    TensorI32 {
+        shape: vec![n * ho * wo, kf],
+        data: out,
+    }
+}
+
+/// Allocation-free im2col over a channel range `[c0, c1)` of a quantized
+/// NHWC tensor (given as raw data + shape so scratch buffers qualify),
+/// writing the `(N*Ho*Wo, kh*kw*(c1-c0))` patch matrix into a
+/// caller-provided buffer (the executor's scratch arena). The channel
+/// range *is* grouped convolution's input split, so groups never need a
+/// sliced copy of the activation tensor.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_i32_range_into(
+    x: &[i32],
+    shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [i32],
+) {
+    let (n, h, w, ct) = (shape[0], shape[1], shape[2], shape[3]);
+    assert!(c0 < c1 && c1 <= ct);
+    let ho = conv_out(h, kh, stride, pad);
+    let wo = conv_out(w, kw, stride, pad);
+    let c = c1 - c0;
+    let kf = kh * kw * c;
+    assert_eq!(out.len(), n * ho * wo * kf);
+    // Scratch buffers are reused across layers: stale values must become
+    // the zero padding the kernels rely on.
+    out.fill(0);
     for ni in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -203,18 +238,14 @@ pub fn im2col_i32(
                         let ix = (ox * stride + dx) as isize - pad as isize;
                         let dst = row + (dy * kw + dx) * c;
                         if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            let src = ((ni * h + iy as usize) * w + ix as usize) * c;
-                            out[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                            let src = ((ni * h + iy as usize) * w + ix as usize) * ct + c0;
+                            out[dst..dst + c].copy_from_slice(&x[src..src + c]);
                         }
                         // else: zeros already in place
                     }
                 }
             }
         }
-    }
-    TensorI32 {
-        shape: vec![n * ho * wo, kf],
-        data: out,
     }
 }
 
@@ -225,6 +256,34 @@ pub fn im2col_f32(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -
     let wo = conv_out(w, kw, stride, pad);
     let kf = kh * kw * c;
     let mut out = vec![0f32; n * ho * wo * kf];
+    im2col_f32_range_into(&x.data, &x.shape, kh, kw, stride, pad, 0, c, &mut out);
+    Tensor {
+        shape: vec![n * ho * wo, kf],
+        data: out,
+    }
+}
+
+/// f32 twin of [`im2col_i32_range_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_f32_range_into(
+    x: &[f32],
+    shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [f32],
+) {
+    let (n, h, w, ct) = (shape[0], shape[1], shape[2], shape[3]);
+    assert!(c0 < c1 && c1 <= ct);
+    let ho = conv_out(h, kh, stride, pad);
+    let wo = conv_out(w, kw, stride, pad);
+    let c = c1 - c0;
+    let kf = kh * kw * c;
+    assert_eq!(out.len(), n * ho * wo * kf);
+    out.fill(0.0);
     for ni in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -235,17 +294,13 @@ pub fn im2col_f32(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -
                         let ix = (ox * stride + dx) as isize - pad as isize;
                         let dst = row + (dy * kw + dx) * c;
                         if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            let src = ((ni * h + iy as usize) * w + ix as usize) * c;
-                            out[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                            let src = ((ni * h + iy as usize) * w + ix as usize) * ct + c0;
+                            out[dst..dst + c].copy_from_slice(&x[src..src + c]);
                         }
                     }
                 }
             }
         }
-    }
-    Tensor {
-        shape: vec![n * ho * wo, kf],
-        data: out,
     }
 }
 
@@ -321,6 +376,19 @@ mod tests {
         assert_eq!(&p.data[4..8], &[2, 3, 6, 7]);
         assert_eq!(&p.data[8..12], &[8, 9, 12, 13]);
         assert_eq!(&p.data[12..16], &[10, 11, 14, 15]);
+    }
+
+    #[test]
+    fn im2col_range_matches_slice_then_im2col() {
+        // Channel-range im2col must equal slicing the channels first —
+        // the grouped-conv equivalence the executor's scratch path uses.
+        let x = TensorI32::from_vec(&[2, 3, 3, 4], (0..72).collect()).unwrap();
+        for (c0, c1) in [(0, 2), (2, 4), (1, 3), (0, 4)] {
+            let sliced = im2col_i32(&x.slice_last(c0, c1), 2, 2, 1, 1);
+            let mut out = vec![7i32; sliced.data.len()]; // stale garbage
+            im2col_i32_range_into(&x.data, &x.shape, 2, 2, 1, 1, c0, c1, &mut out);
+            assert_eq!(out, sliced.data, "range {c0}..{c1}");
+        }
     }
 
     #[test]

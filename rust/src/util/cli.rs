@@ -77,6 +77,13 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
     /// Comma-separated list option.
     pub fn get_list(&self, name: &str) -> Vec<String> {
         self.get(name)
@@ -128,5 +135,13 @@ mod tests {
         let a = parse("run --fast");
         assert!(a.flag("fast"));
         assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn f64_option() {
+        let a = parse("sensitivity --budget 2.5");
+        assert_eq!(a.get_f64("budget", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        assert!(parse("x --budget nope").get_f64("budget", 0.0).is_err());
     }
 }

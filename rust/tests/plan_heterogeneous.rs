@@ -1,0 +1,274 @@
+//! Heterogeneous per-layer ACU plans, artifact-free: a synthetic in-memory
+//! CNN proves
+//!
+//! 1. a heterogeneous plan where every layer is assigned the *same* ACU is
+//!    bit-identical to the seed's single-global-LUT execution semantics
+//!    (reproduced here as a hand-rolled reference),
+//! 2. three distinct ACUs can serve different layers in one `Executor`
+//!    pass, with the naive and optimized engines agreeing bit-for-bit,
+//! 3. the scratch arena is behavior-neutral: reuse on/off and repeated
+//!    forwards produce identical outputs.
+
+use std::collections::BTreeMap;
+
+use adapt::emulator::{gemm, Executor, Style, Value};
+use adapt::graph::{retransform, LayerMode, Model, Node, Op, ParamSpec, Policy};
+use adapt::lut::{Lut, LutRegistry};
+use adapt::mult;
+use adapt::quant;
+use adapt::tensor::{im2col_i32, Tensor, TensorI32};
+use adapt::util::rng::Rng;
+
+/// conv(3x3, 1->4, pad 1) -> relu -> conv(3x3, 4->4, pad 1) -> relu ->
+/// flatten -> linear(64 -> 3), on 4x4x1 inputs.
+fn synth_model() -> Model {
+    let conv = |id, cin, cout, scale_idx, name: &str, input, p0| Node {
+        id,
+        op: Op::Conv2d {
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            scale_idx,
+            name: name.into(),
+        },
+        inputs: vec![input],
+        params: vec![p0, p0 + 1],
+    };
+    Model {
+        name: "synth_cnn".into(),
+        paper_row: "-".into(),
+        kind: "cnn".into(),
+        dataset: "none".into(),
+        input_shape: vec![4, 4, 1],
+        input_dtype: "f32".into(),
+        out_dim: 3,
+        loss: "ce".into(),
+        metric: "top1".into(),
+        table2: false,
+        n_scales: 3,
+        params: vec![
+            ParamSpec { name: "w1".into(), shape: vec![3, 3, 1, 4] },
+            ParamSpec { name: "b1".into(), shape: vec![4] },
+            ParamSpec { name: "w2".into(), shape: vec![3, 3, 4, 4] },
+            ParamSpec { name: "b2".into(), shape: vec![4] },
+            ParamSpec { name: "w3".into(), shape: vec![64, 3] },
+            ParamSpec { name: "b3".into(), shape: vec![3] },
+        ],
+        params_count: 0,
+        macs: 0,
+        nodes: vec![
+            Node { id: 0, op: Op::Input, inputs: vec![], params: vec![] },
+            conv(1, 1, 4, 0, "c1", 0, 0),
+            Node { id: 2, op: Op::Relu, inputs: vec![1], params: vec![] },
+            conv(3, 4, 4, 1, "c2", 2, 2),
+            Node { id: 4, op: Op::Relu, inputs: vec![3], params: vec![] },
+            Node { id: 5, op: Op::Flatten, inputs: vec![4], params: vec![] },
+            Node {
+                id: 6,
+                op: Op::Linear { din: 64, dout: 3, scale_idx: 2, name: "fc".into() },
+                inputs: vec![5],
+                params: vec![4, 5],
+            },
+        ],
+        weights_file: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn synth_params(model: &Model, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.5).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect()
+}
+
+fn synth_input(seed: u64, n: usize) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data = (0..n * 16).map(|_| rng.next_gauss()).collect();
+    Tensor::from_vec(&[n, 4, 4, 1], data).unwrap()
+}
+
+fn scales() -> Vec<f32> {
+    vec![1.5 / 127.0, 4.0 / 127.0, 4.0 / 127.0]
+}
+
+// --- hand-rolled single-LUT reference (the seed executor's semantics) ----
+
+fn ref_conv(x: &Tensor, w: &Tensor, b: &Tensor, cout: usize, sa: f32, lut: &Lut) -> Tensor {
+    let (n, h, wd) = (x.shape[0], x.shape[1], x.shape[2]);
+    let mut xq = TensorI32::zeros(&x.shape);
+    quant::quantize_slice(&x.data, sa, 8, &mut xq.data);
+    let patches = im2col_i32(&xq, 3, 3, 1, 1);
+    let (m, kf) = (patches.shape[0], patches.shape[1]);
+    let ws = quant::weight_scales_per_col(&w.data, kf, cout, 8);
+    let wq = quant::quantize_weights_per_col(&w.data, kf, cout, 8, &ws);
+    let mut acc = vec![0i64; m * cout];
+    gemm::lut_naive(&patches.data, m, kf, &wq, cout, lut, &mut acc);
+    let mut out = Tensor::zeros(&[n, h, wd, cout]);
+    for mi in 0..m {
+        for co in 0..cout {
+            out.data[mi * cout + co] = acc[mi * cout + co] as f32 * (sa * ws[co]) + b.data[co];
+        }
+    }
+    out
+}
+
+fn ref_linear(x: &Tensor, w: &Tensor, b: &Tensor, dout: usize, sa: f32, lut: &Lut) -> Tensor {
+    let (m, din) = (x.shape[0], x.shape[1]);
+    let mut xq = vec![0i32; x.data.len()];
+    quant::quantize_slice(&x.data, sa, 8, &mut xq);
+    let ws = quant::weight_scales_per_col(&w.data, din, dout, 8);
+    let wq = quant::quantize_weights_per_col(&w.data, din, dout, 8, &ws);
+    let mut acc = vec![0i64; m * dout];
+    gemm::lut_naive(&xq, m, din, &wq, dout, lut, &mut acc);
+    let mut out = Tensor::zeros(&[m, dout]);
+    for mi in 0..m {
+        for co in 0..dout {
+            out.data[mi * dout + co] = acc[mi * dout + co] as f32 * (sa * ws[co]) + b.data[co];
+        }
+    }
+    out
+}
+
+/// Full reference forward with one LUT per quantizable layer.
+fn ref_forward(params: &[Tensor], x: &Tensor, luts: [&Lut; 3], s: &[f32]) -> Tensor {
+    let n = x.shape[0];
+    let relu = |t: Tensor| t.map(|v| v.max(0.0));
+    let h1 = relu(ref_conv(x, &params[0], &params[1], 4, s[0], luts[0]));
+    let h2 = relu(ref_conv(&h1, &params[2], &params[3], 4, s[1], luts[1]));
+    let flat = h2.reshape(&[n, 64]).unwrap();
+    ref_linear(&flat, &params[4], &params[5], 3, s[2], luts[2])
+}
+
+fn run_plan(model: &Model, params: &[Tensor], plan: &adapt::graph::ExecutionPlan, style: Style, x: &Tensor) -> Tensor {
+    let luts = LutRegistry::in_memory();
+    let exec = Executor::new(
+        model,
+        params.to_vec(),
+        plan.clone(),
+        scales(),
+        &luts,
+        style,
+    )
+    .unwrap();
+    exec.forward(Value::F(x.clone())).unwrap()
+}
+
+#[test]
+fn homogeneous_plan_is_bit_identical_to_single_lut_path() {
+    // PROPERTY: assigning every layer the same ACU in a heterogeneous plan
+    // reproduces the seed's single-global-LUT executor bit-for-bit.
+    let model = synth_model();
+    for (seed, acu) in [(7u64, "drum8_4"), (8, "mul8s_1l2h_like"), (9, "mitchell8")] {
+        let params = synth_params(&model, seed);
+        let x = synth_input(seed + 100, 2);
+        let lut = Lut::generate(mult::get(acu).unwrap());
+        let want = ref_forward(&params, &x, [&lut, &lut, &lut], &scales());
+        let plan = retransform(&model, &Policy::all(LayerMode::lut(acu)));
+        for style in [Style::Naive, Style::Optimized { threads: 2 }] {
+            let got = run_plan(&model, &params, &plan, style, &x);
+            assert_eq!(got.shape, want.shape);
+            assert_eq!(got.data, want.data, "{acu} {style:?} diverged from reference");
+        }
+    }
+}
+
+#[test]
+fn three_distinct_acus_execute_in_one_pass() {
+    let model = synth_model();
+    let params = synth_params(&model, 42);
+    let x = synth_input(43, 2);
+
+    let plan = retransform(
+        &model,
+        &Policy::all(LayerMode::lut("mitchell8"))
+            .with_acu("c2", "drum8_4")
+            .with_acu("fc", "trunc_out8_4"),
+    );
+    assert_eq!(plan.acus().len(), 3, "three distinct ACUs in the plan");
+
+    let l1 = Lut::generate(mult::get("mitchell8").unwrap());
+    let l2 = Lut::generate(mult::get("drum8_4").unwrap());
+    let l3 = Lut::generate(mult::get("trunc_out8_4").unwrap());
+    let want = ref_forward(&params, &x, [&l1, &l2, &l3], &scales());
+
+    let naive = run_plan(&model, &params, &plan, Style::Naive, &x);
+    let opt = run_plan(&model, &params, &plan, Style::Optimized { threads: 3 }, &x);
+    assert_eq!(naive.data, want.data, "naive vs per-layer reference");
+    assert_eq!(opt.data, want.data, "optimized vs per-layer reference");
+
+    // Sanity: the heterogeneous plan is actually different from exact8.
+    let exact = retransform(&model, &Policy::all(LayerMode::lut("exact8")));
+    let exact_out = run_plan(&model, &params, &exact, Style::Naive, &x);
+    assert_ne!(exact_out.data, want.data, "approximation must be visible");
+}
+
+#[test]
+fn mixed_fp32_func_lut_modes_agree_across_styles() {
+    let model = synth_model();
+    let params = synth_params(&model, 77);
+    let x = synth_input(78, 2);
+    let plan = retransform(
+        &model,
+        &Policy::all(LayerMode::lut("exact8"))
+            .with_override("c1", LayerMode::Fp32)
+            .with_override("c2", LayerMode::ApproxFunc { bits: 8, trunc_k: 4 }),
+    );
+    let naive = run_plan(&model, &params, &plan, Style::Naive, &x);
+    let opt = run_plan(&model, &params, &plan, Style::Optimized { threads: 2 }, &x);
+    assert_eq!(naive.shape, opt.shape);
+    for (a, b) in naive.data.iter().zip(&opt.data) {
+        assert!((a - b).abs() < 1e-5, "styles diverged: {a} vs {b}");
+    }
+}
+
+#[test]
+fn scratch_arena_is_behavior_neutral() {
+    let model = synth_model();
+    let params = synth_params(&model, 5);
+    let plan = retransform(
+        &model,
+        &Policy::all(LayerMode::lut("mul8s_1l2h_like")).with_acu("c1", "exact8"),
+    );
+    let luts = LutRegistry::in_memory();
+    let mut per_call = Executor::new(
+        &model,
+        params.clone(),
+        plan.clone(),
+        scales(),
+        &luts,
+        Style::Optimized { threads: 2 },
+    )
+    .unwrap();
+    per_call.set_scratch_reuse(false);
+    let reuse = Executor::new(
+        &model,
+        params.clone(),
+        plan.clone(),
+        scales(),
+        &luts,
+        Style::Optimized { threads: 2 },
+    )
+    .unwrap();
+
+    let xa = synth_input(500, 2);
+    let xb = synth_input(501, 3); // different batch size exercises regrow
+    let a1 = reuse.forward(Value::F(xa.clone())).unwrap();
+    let b1 = reuse.forward(Value::F(xb.clone())).unwrap();
+    let a2 = reuse.forward(Value::F(xa.clone())).unwrap();
+    assert_eq!(a1.data, a2.data, "scratch reuse must not leak state across batches");
+
+    let a_ref = per_call.forward(Value::F(xa)).unwrap();
+    let b_ref = per_call.forward(Value::F(xb)).unwrap();
+    assert_eq!(a1.data, a_ref.data, "reuse vs alloc-per-call (batch A)");
+    assert_eq!(b1.data, b_ref.data, "reuse vs alloc-per-call (batch B)");
+}
