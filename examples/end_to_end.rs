@@ -64,17 +64,19 @@ fn main() -> anyhow::Result<()> {
     // ---- Table 3 ---------------------------------------------------------
     println!("--- Table 3: functionality matrix ---\n{}", features::table3());
 
-    // ---- Dynamic batching engine ----------------------------------------
-    println!("--- inference engine (dynamic batching) ---");
+    // ---- Engine pool (dynamic batching) ---------------------------------
+    println!("--- inference engine pool (dynamic batching) ---");
     let ds = adapt::data::load("cifar_syn", &Sizes::small());
-    drop(rt); // the engine thread opens its own runtime
-    let engine = InferenceEngine::start(EngineConfig {
-        artifacts: artifacts.clone(),
-        model: "small_vgg".into(),
-        variant: InferVariant::ApproxLut,
-        acu: Some("mul8s_1l2h_like".into()),
-        max_wait: Duration::from_millis(10),
-    })?;
+    drop(rt); // every engine worker opens its own runtime
+    let mut engine_cfg = EngineConfig::pjrt(
+        artifacts.clone(),
+        "small_vgg",
+        InferVariant::ApproxLut,
+        Some("mul8s_1l2h_like".into()),
+    );
+    engine_cfg.max_wait = Duration::from_millis(10);
+    engine_cfg.workers = if quick { 2 } else { engine_cfg.workers };
+    let engine = InferenceEngine::start(engine_cfg)?;
     let n = if quick { 48 } else { 96 };
     let per = 32 * 32 * 3;
     let t0 = std::time::Instant::now();
@@ -83,9 +85,16 @@ fn main() -> anyhow::Result<()> {
         .collect::<Result<_, _>>()?;
     let ok = pending.into_iter().filter(|rx| matches!(rx.recv(), Ok(Ok(_)))).count();
     let wall = t0.elapsed();
+    let workers = engine.workers();
     let stats = engine.shutdown()?;
-    println!("{ok}/{n} requests in {} ({:.0} req/s), {} batches, {} padded slots\n",
-        fmt::dur(wall), n as f64 / wall.as_secs_f64(), stats.batches, stats.padded_slots);
+    println!(
+        "{ok}/{n} requests in {} ({:.0} req/s), {workers} workers, {} batches, \
+         {} padded slots, queue wait {}\n",
+        fmt::dur(wall),
+        n as f64 / wall.as_secs_f64(),
+        stats.total.batches,
+        stats.total.padded_slots,
+        fmt::dur(stats.total.queue_wait));
 
     println!("== end-to-end validation complete in {} ==", fmt::dur(t_start.elapsed()));
     println!("results appended under {}/results/", artifacts.display());

@@ -1,13 +1,17 @@
 //! ACU ablation bench: accuracy vs MRE vs power proxy across the whole
 //! multiplier library on a trained CNN (ALWANN-style design-space sweep),
 //! characterization cost of the library itself, plus — artifact-free —
-//! heterogeneous per-layer plan throughput and the scratch-arena A/B
+//! heterogeneous per-layer plan throughput, the scratch-arena A/B
 //! (reuse vs the seed's alloc-per-call executor), emitted as
-//! `artifacts/results/BENCH_mixed_acu.json`.
+//! `artifacts/results/BENCH_mixed_acu.json`, and the sequential-vs-pool
+//! sensitivity-sweep comparison at 1/2/4 workers, emitted as
+//! `artifacts/results/BENCH_parallel_sweep.json` (which also asserts the
+//! parallel sweep's plan JSON is byte-identical to the sequential one).
 //!
 //! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench multiplier_ablation`
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use adapt::coordinator::experiments;
 use adapt::data::Sizes;
@@ -20,6 +24,7 @@ use adapt::tensor::Tensor;
 use adapt::util::bench::{self, Config};
 use adapt::util::json::Json;
 use adapt::util::rng::Rng;
+use adapt::util::threadpool::ThreadPool;
 
 /// Synthetic CNN big enough for the GEMM hot path to dominate:
 /// conv(3->16) -> relu -> conv(16->32, s2) -> relu -> conv(32->32) ->
@@ -186,6 +191,138 @@ fn mixed_acu_section(cfg: Config, fast: bool) {
     println!();
 }
 
+/// Sequential vs pool-parallel sensitivity sweep on the synthetic CNN:
+/// wall-clock at 1/2/4 workers plus a byte-level plan-JSON determinism
+/// check, emitted as `BENCH_parallel_sweep.json`.
+fn parallel_sweep_section(fast: bool) {
+    let model = bench_model();
+    let mut rng = Rng::new(0x51EE9);
+    let params: Vec<Tensor> = model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.3).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect();
+    let bs = if fast { 4 } else { 16 };
+    let nb = if fast { 2 } else { 4 };
+    let batches: Vec<experiments::EvalBatch> = (0..nb)
+        .map(|bi| {
+            let x: Vec<f32> = (0..bs * 16 * 16 * 3).map(|_| rng.next_gauss()).collect();
+            experiments::EvalBatch {
+                input: Value::F(Tensor::from_vec(&[bs, 16, 16, 3], x).unwrap()),
+                labels: (0..bs).map(|i| ((bi + i) % 10) as i32).collect(),
+                target: vec![],
+            }
+        })
+        .collect();
+    // gemm_threads 1: the sweep workers are the parallelism axis here.
+    let ctx = Arc::new(experiments::SweepCtx {
+        model,
+        params,
+        scales: vec![1.5 / 127.0, 3.0 / 127.0, 3.0 / 127.0, 3.0 / 127.0],
+        luts: LutRegistry::in_memory(),
+        batches,
+        bs,
+        gemm_threads: 1,
+    });
+    let layers = ctx.layers();
+    let acus: Vec<String> = ["mul8s_1l2h_like", "drum8_6", "trunc_out8_4", "mitchell8"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let reference = retransform(&ctx.model, &Policy::all(LayerMode::lut("exact8")));
+    let base_acc = ctx.eval_plan(reference.clone()).unwrap();
+    let budget = 0.05;
+
+    let worst_drop =
+        |accs: &[f64]| experiments::worst_drops(base_acc, accs, layers.len(), acus.len());
+
+    println!(
+        "Parallel sensitivity sweep ({} pairs, batch {bs} x {nb} eval batches):",
+        layers.len() * acus.len()
+    );
+    let cfg = Config::endtoend().from_env();
+
+    let mut seq_accs: Vec<f64> = Vec::new();
+    let s_seq = bench::run("  sweep sequential", cfg, || {
+        seq_accs = experiments::sweep_pairs(&ctx, &reference, &layers, &acus, None).unwrap();
+    });
+    s_seq.print();
+    let (seq_plan, _) = experiments::greedy_mixed(
+        &ctx,
+        &reference,
+        "exact8",
+        base_acc,
+        &layers,
+        &worst_drop(&seq_accs),
+        &acus,
+        budget,
+    )
+    .unwrap();
+    let seq_json = seq_plan.to_json(&ctx.model);
+
+    let mut medians: BTreeMap<String, Json> = BTreeMap::new();
+    medians.insert("sequential".to_string(), Json::Num(s_seq.median_secs()));
+    let mut plan_match = true;
+    let mut speedup_4w = 0.0;
+    for workers in [1usize, 2, 4] {
+        let pool = ThreadPool::new(workers);
+        let mut par_accs: Vec<f64> = Vec::new();
+        let s = bench::run(&format!("  sweep pool, {workers} workers"), cfg, || {
+            par_accs =
+                experiments::sweep_pairs(&ctx, &reference, &layers, &acus, Some(&pool)).unwrap();
+        });
+        s.print();
+        assert_eq!(par_accs, seq_accs, "parallel sweep accuracies diverged from sequential");
+        let (par_plan, _) = experiments::greedy_mixed(
+            &ctx,
+            &reference,
+            "exact8",
+            base_acc,
+            &layers,
+            &worst_drop(&par_accs),
+            &acus,
+            budget,
+        )
+        .unwrap();
+        plan_match &= par_plan.to_json(&ctx.model) == seq_json;
+        medians.insert(format!("workers_{workers}"), Json::Num(s.median_secs()));
+        if workers == 4 {
+            speedup_4w = s_seq.median_secs() / s.median_secs().max(1e-12);
+        }
+    }
+    assert!(plan_match, "parallel sweep plan JSON diverged from sequential");
+    println!(
+        "  pool @4 workers: {speedup_4w:.2}x vs sequential (plan JSON byte-identical: {plan_match})"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "pairs".to_string(),
+        Json::Num((layers.len() * acus.len()) as f64),
+    );
+    doc.insert("batch".to_string(), Json::Num(bs as f64));
+    doc.insert("eval_batches".to_string(), Json::Num(nb as f64));
+    doc.insert("gemm_threads".to_string(), Json::Num(1.0));
+    doc.insert(
+        "acus".to_string(),
+        Json::Arr(acus.iter().cloned().map(Json::Str).collect()),
+    );
+    doc.insert("median_s".to_string(), Json::Obj(medians));
+    doc.insert("speedup_4_workers".to_string(), Json::Num(speedup_4w));
+    doc.insert("plan_json_identical".to_string(), Json::Bool(plan_match));
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_parallel_sweep.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("  written {}", path.display());
+        }
+    }
+    println!();
+}
+
 fn main() {
     let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
     let cfg = Config::default().from_env();
@@ -203,6 +340,9 @@ fn main() {
 
     // Heterogeneous-plan + scratch-arena section (no artifacts needed).
     mixed_acu_section(cfg, fast);
+
+    // Sequential vs pool-parallel sweep section (no artifacts needed).
+    parallel_sweep_section(fast);
 
     let mut rt = match Runtime::open(&adapt::artifacts_dir()) {
         Ok(rt) => rt,

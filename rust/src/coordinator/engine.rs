@@ -1,74 +1,336 @@
-//! Request-level inference engine: dynamic batching in front of the
-//! fixed-batch AOT executables.
+//! Request-level inference engine: a pool of dynamic-batching workers in
+//! front of a shared bounded request queue.
 //!
-//! The AOT artifacts are lowered at a static batch size; user-facing
-//! inference arrives one sample at a time. The engine queues requests,
-//! forms a batch when either the batch fills or `max_wait` expires
-//! (classic dynamic batching), pads short batches by repeating the last
-//! sample, executes, and fans responses back out. The PJRT client is not
-//! `Send`, so the worker thread owns its *own* Runtime — requests and
-//! responses cross threads, the runtime never does.
+//! User-facing inference arrives one sample at a time; execution wants
+//! fixed-size batches. The engine queues requests in a *bounded* queue
+//! (submitters block when it fills — backpressure instead of unbounded
+//! memory growth) and runs `workers` batching loops against it. Each
+//! worker owns its backend outright — a PJRT [`Runtime`] (not `Send`, so
+//! it can never be shared) or a Rust [`Executor`] with its own scratch
+//! arena — forms a batch when either the batch fills or `max_wait`
+//! expires (classic dynamic batching), pads short batches by repeating
+//! the last sample, executes, and fans responses back out.
+//!
+//! With `workers == 1` the batching semantics are exactly the old
+//! single-worker engine's: one blocking gather loop, same padding, same
+//! flush-on-shutdown. More workers add throughput, not new semantics —
+//! requests and responses cross threads, backends never do.
+//!
+//! Shutdown drains: `shutdown()` closes the queue (new submits fail),
+//! workers keep popping until the queue is empty, flush their final
+//! partial batches, and report per-worker [`EngineStats`] which are
+//! aggregated into [`PoolStats`].
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::ops::{self, InferVariant, ModelState};
+use crate::emulator::{Executor, Style, Value};
+use crate::graph::{ExecutionPlan, Model};
+use crate::lut::LutRegistry;
 use crate::runtime::Runtime;
+use crate::tensor::Tensor;
 
 /// One inference request: a flat f32 sample (image/latent).
 struct Request {
     x: Vec<f32>,
     resp: mpsc::Sender<Result<Vec<f32>>>,
+    /// When the request entered the queue (for `queue_wait`).
+    enqueued: Instant,
 }
 
-enum Msg {
-    Req(Request),
-    Shutdown,
-}
-
-/// Engine statistics (updated by the worker, fetched at shutdown).
+/// Per-worker (and aggregated) engine statistics.
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub requests: usize,
     pub batches: usize,
     pub padded_slots: usize,
+    /// Total time requests spent queued before a worker picked them up.
+    pub queue_wait: Duration,
+    /// Time spent assembling + executing batches.
     pub busy: Duration,
 }
 
-/// Configuration for [`InferenceEngine`].
-#[derive(Clone, Debug)]
-pub struct EngineConfig {
-    pub artifacts: PathBuf,
-    pub model: String,
-    pub variant: InferVariant,
-    /// ACU name when `variant == ApproxLut`.
-    pub acu: Option<String>,
-    /// Max time to hold a partial batch before flushing.
-    pub max_wait: Duration,
+impl EngineStats {
+    fn merge(&mut self, other: &EngineStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.padded_slots += other.padded_slots;
+        self.queue_wait += other.queue_wait;
+        self.busy += other.busy;
+    }
 }
 
-/// Handle to the batching worker.
+/// Aggregate + per-worker stats returned by [`InferenceEngine::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Sums over all workers.
+    pub total: EngineStats,
+    /// One entry per pool worker, in spawn order.
+    pub per_worker: Vec<EngineStats>,
+}
+
+/// What each pool worker runs batches on. PJRT state is not `Send`, so a
+/// worker *constructs* its backend on its own thread from this spec.
+#[derive(Clone)]
+pub enum BackendSpec {
+    /// The AOT executables through a per-worker PJRT [`Runtime`].
+    Pjrt {
+        artifacts: PathBuf,
+        model: String,
+        variant: InferVariant,
+        /// ACU name when `variant == ApproxLut`.
+        acu: Option<String>,
+    },
+    /// The in-process Rust emulator (artifact-free): every worker owns its
+    /// own [`Executor`] + scratch arena over this shared spec.
+    Emulator(Arc<EmulatorSpec>),
+}
+
+/// Spec for [`BackendSpec::Emulator`] workers. Shared read-only (`Arc`);
+/// each worker quantizes its own weight copies at startup.
+pub struct EmulatorSpec {
+    pub model: Model,
+    pub params: Vec<Tensor>,
+    pub plan: ExecutionPlan,
+    pub act_scales: Vec<f32>,
+    pub luts: LutRegistry,
+    /// Engine batch size (the PJRT backend takes it from the manifest).
+    pub batch: usize,
+    /// GEMM threads inside one worker's forward pass.
+    pub gemm_threads: usize,
+}
+
+/// Configuration for [`InferenceEngine`].
+pub struct EngineConfig {
+    pub backend: BackendSpec,
+    /// Max time a worker holds a partial batch before flushing.
+    pub max_wait: Duration,
+    /// Pool size. Default [`default_threads`](crate::util::threadpool::default_threads)
+    /// (`ADAPT_THREADS` env); 1 reproduces the old single-worker engine.
+    pub workers: usize,
+    /// Bounded request-queue depth; [`InferenceEngine::submit`] blocks
+    /// while the queue is full (backpressure).
+    pub queue_depth: usize,
+}
+
+/// Default bounded queue depth (requests, not batches).
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+impl EngineConfig {
+    /// PJRT-backed engine with default pool sizing.
+    pub fn pjrt(
+        artifacts: PathBuf,
+        model: impl Into<String>,
+        variant: InferVariant,
+        acu: Option<String>,
+    ) -> EngineConfig {
+        EngineConfig {
+            backend: BackendSpec::Pjrt {
+                artifacts,
+                model: model.into(),
+                variant,
+                acu,
+            },
+            max_wait: Duration::from_millis(20),
+            workers: crate::util::threadpool::default_threads(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+        }
+    }
+
+    /// Emulator-backed engine with default pool sizing.
+    pub fn emulator(spec: EmulatorSpec) -> EngineConfig {
+        EngineConfig {
+            backend: BackendSpec::Emulator(Arc::new(spec)),
+            max_wait: Duration::from_millis(20),
+            workers: crate::util::threadpool::default_threads(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared bounded request queue
+// ---------------------------------------------------------------------------
+
+struct QueueState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// MPMC bounded queue: submitters block on `not_full` (backpressure),
+/// workers block on `not_empty`. Closing wakes everyone; workers drain
+/// whatever is left before exiting.
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+/// Outcome of a deadline-bounded pop (the batch-gathering wait).
+enum Popped {
+    Item(Request),
+    TimedOut,
+    /// Queue closed and fully drained.
+    Drained,
+}
+
+impl SharedQueue {
+    fn new(cap: usize) -> SharedQueue {
+        SharedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; applies backpressure while full. Errors once closed.
+    fn push(&self, req: Request) -> Result<()> {
+        let mut st = self.state.lock().expect("engine queue poisoned");
+        loop {
+            if st.closed {
+                anyhow::bail!("engine is shut down");
+            }
+            if st.items.len() < self.cap {
+                break;
+            }
+            st = self.not_full.wait(st).expect("engine queue poisoned");
+        }
+        st.items.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop for the first request of a batch. `None` only when the
+    /// queue is closed *and* drained.
+    fn pop_blocking(&self) -> Option<Request> {
+        let mut st = self.state.lock().expect("engine queue poisoned");
+        loop {
+            if let Some(r) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("engine queue poisoned");
+        }
+    }
+
+    /// Pop one more request for the current batch, waiting at most until
+    /// `deadline`.
+    fn pop_until(&self, deadline: Instant) -> Popped {
+        let mut st = self.state.lock().expect("engine queue poisoned");
+        loop {
+            if let Some(r) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Popped::Item(r);
+            }
+            if st.closed {
+                return Popped::Drained;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            let (guard, _timeout) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .expect("engine queue poisoned");
+            st = guard;
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().expect("engine queue poisoned");
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine pool
+// ---------------------------------------------------------------------------
+
+/// Handle to the worker pool.
 pub struct InferenceEngine {
-    tx: mpsc::Sender<Msg>,
-    worker: Option<std::thread::JoinHandle<Result<EngineStats>>>,
+    queue: Arc<SharedQueue>,
+    workers: Vec<std::thread::JoinHandle<EngineStats>>,
     out_dim: usize,
 }
 
 impl InferenceEngine {
-    /// Start the worker (compiles the executable before accepting work).
+    /// Start the pool. Every worker compiles/prepares its backend before
+    /// the call returns; the first setup failure aborts the whole pool.
     pub fn start(cfg: EngineConfig) -> Result<InferenceEngine> {
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let n_workers = cfg.workers.max(1);
+        let queue = Arc::new(SharedQueue::new(cfg.queue_depth));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
-        let worker = std::thread::spawn(move || worker_loop(cfg, rx, ready_tx));
-        let out_dim = ready_rx
-            .recv()
-            .context("engine worker died before ready")??;
+        let mut workers = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let queue = Arc::clone(&queue);
+            let ready = ready_tx.clone();
+            let backend = cfg.backend.clone();
+            let max_wait = cfg.max_wait;
+            let handle = std::thread::Builder::new()
+                .name(format!("adapt-engine-{wi}"))
+                .spawn(move || match backend {
+                    BackendSpec::Pjrt {
+                        artifacts,
+                        model,
+                        variant,
+                        acu,
+                    } => pjrt_worker(&artifacts, &model, variant, acu, &queue, max_wait, &ready),
+                    BackendSpec::Emulator(spec) => {
+                        emulator_worker(&spec, &queue, max_wait, &ready)
+                    }
+                })
+                .context("spawning engine worker")?;
+            workers.push(handle);
+        }
+        drop(ready_tx);
+
+        let mut out_dim = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok(d)) => out_dim = d,
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("engine worker died before ready"));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            queue.close();
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
         Ok(InferenceEngine {
-            tx,
-            worker: Some(worker),
+            queue,
+            workers,
             out_dim,
         })
     }
@@ -78,141 +340,133 @@ impl InferenceEngine {
         self.out_dim
     }
 
-    /// Submit one sample; returns a receiver for its output row.
+    /// Number of pool workers.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit one sample; returns a receiver for its output row. Blocks
+    /// while the request queue is full (backpressure).
     pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Req(Request { x, resp }))
-            .context("engine is down")?;
+        self.queue.push(Request {
+            x,
+            resp,
+            enqueued: Instant::now(),
+        })?;
         Ok(rx)
     }
 
-    /// Blocking convenience wrapper around [`submit`].
+    /// Blocking convenience wrapper around [`submit`](Self::submit).
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
         self.submit(x)?.recv().context("engine dropped request")?
     }
 
-    /// Stop the worker and fetch stats.
-    pub fn shutdown(mut self) -> Result<EngineStats> {
-        let _ = self.tx.send(Msg::Shutdown);
-        let h = self.worker.take().expect("shutdown twice");
-        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?
+    /// Stop the pool: close the queue, let every worker drain + flush, and
+    /// aggregate their stats.
+    pub fn shutdown(mut self) -> Result<PoolStats> {
+        self.queue.close();
+        let mut per_worker = Vec::with_capacity(self.workers.len());
+        for h in self.workers.drain(..) {
+            let s = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("engine worker panicked"))?;
+            per_worker.push(s);
+        }
+        let mut total = EngineStats::default();
+        for s in &per_worker {
+            total.merge(s);
+        }
+        Ok(PoolStats { total, per_worker })
     }
 }
 
 impl Drop for InferenceEngine {
     fn drop(&mut self) {
-        if self.worker.is_some() {
-            let _ = self.tx.send(Msg::Shutdown);
-            if let Some(h) = self.worker.take() {
+        if !self.workers.is_empty() {
+            self.queue.close();
+            for h in self.workers.drain(..) {
                 let _ = h.join();
             }
         }
     }
 }
 
-fn worker_loop(
-    cfg: EngineConfig,
-    rx: mpsc::Receiver<Msg>,
-    ready: mpsc::Sender<Result<usize>>,
-) -> Result<EngineStats> {
-    // The runtime lives entirely on this thread (PJRT is not Send).
-    let setup = (|| -> Result<(Runtime, ModelState, Option<xla::Literal>, usize)> {
-        let mut rt = Runtime::open(&cfg.artifacts)?;
-        let mut st = ModelState::load_best(&rt, &cfg.model)?;
-        let lut_lit = match (&cfg.variant, &cfg.acu) {
-            (InferVariant::ApproxLut, Some(acu)) => Some(ops::load_lut_lit(&rt, acu)?),
-            (InferVariant::ApproxLut, None) => {
-                anyhow::bail!("ApproxLut engine needs an ACU name")
-            }
-            _ => None,
-        };
-        if cfg.variant != InferVariant::Fp32 {
-            // Engine-side quick calibration on the model's dataset.
-            let ds = crate::data::load(&st.model.dataset, &crate::data::Sizes::small());
-            ops::calibrate(
-                &mut rt,
-                &mut st,
-                &ds,
-                2,
-                crate::quant::calib::CalibratorKind::Percentile,
-                0.999,
-            )?;
-        }
-        rt.prepare(&cfg.model, cfg.variant.artifact())?;
-        let out_dim = st.model.out_dim;
-        Ok((rt, st, lut_lit, out_dim))
-    })();
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
 
-    let (mut rt, st, lut_lit, out_dim) = match setup {
-        Ok(v) => {
-            let _ = ready.send(Ok(v.3));
-            (v.0, v.1, v.2, v.3)
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return Ok(EngineStats::default());
-        }
-    };
-    let _ = out_dim;
-
-    let bs = rt.manifest.batch;
-    let per: usize = st.model.input_shape.iter().product();
+/// The shared dynamic-batching loop: gather up to `bs` requests (first one
+/// blocking, the rest until `max_wait`), pad, run `infer`, fan out.
+/// `per` is the flat per-sample input length.
+fn batching_loop<F>(
+    queue: &SharedQueue,
+    bs: usize,
+    per: usize,
+    max_wait: Duration,
+    mut infer: F,
+) -> EngineStats
+where
+    F: FnMut(&[f32]) -> Result<Vec<f32>>,
+{
     let mut stats = EngineStats::default();
     let mut pending: Vec<Request> = Vec::with_capacity(bs);
-
-    // A Shutdown received while gathering a batch must still flush that
-    // batch *and then stop*: without the flag the inner `break` only ended
-    // the gather loop and the worker re-blocked on `rx.recv()` forever,
-    // deadlocking `shutdown()`'s join.
-    let mut shutting_down = false;
-
+    let mut flat: Vec<f32> = Vec::with_capacity(bs * per);
+    // A malformed request must never take down the worker (or the rest of
+    // its batch): answer it with an error and keep it out of the batch.
+    let admit = |r: Request, pending: &mut Vec<Request>, stats: &mut EngineStats| {
+        stats.queue_wait += r.enqueued.elapsed();
+        if r.x.len() == per {
+            pending.push(r);
+        } else {
+            let _ = r.resp.send(Err(anyhow::anyhow!(
+                "request input length {} != expected {per}",
+                r.x.len()
+            )));
+        }
+    };
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Shutdown) | Err(_) => break,
+        // Block for the first request of a batch (or drained shutdown).
+        let Some(first) = queue.pop_blocking() else {
+            break;
         };
-        pending.push(first);
-        let deadline = Instant::now() + cfg.max_wait;
-        // Gather until full, deadline, or shutdown (flush first).
+        admit(first, &mut pending, &mut stats);
+        let deadline = Instant::now() + max_wait;
+        // A close() during the gather must still flush this batch *and
+        // then* let the outer loop observe the drained queue and stop.
+        let mut drained = false;
         while pending.len() < bs {
-            let now = Instant::now();
-            if now >= deadline {
+            match queue.pop_until(deadline) {
+                Popped::Item(r) => admit(r, &mut pending, &mut stats),
+                Popped::TimedOut => break,
+                Popped::Drained => {
+                    drained = true;
+                    break;
+                }
+            }
+        }
+        if pending.is_empty() {
+            // Every gathered request was malformed; nothing to execute.
+            if drained {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => pending.push(r),
-                Ok(Msg::Shutdown) => {
-                    shutting_down = true;
-                    break;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    shutting_down = true;
-                    break;
-                }
-            }
+            continue;
         }
 
         // Assemble the padded batch.
         let t0 = Instant::now();
-        let mut flat = Vec::with_capacity(bs * per);
+        flat.clear();
         for r in &pending {
             flat.extend_from_slice(&r.x);
         }
         let real = pending.len();
         for _ in real..bs {
-            let last = &pending[real - 1].x;
-            flat.extend_from_slice(last);
+            let last_start = (real - 1) * per;
+            flat.extend_from_within(last_start..last_start + per);
         }
         stats.padded_slots += bs - real;
-        let mut shape = vec![bs];
-        shape.extend_from_slice(&st.model.input_shape);
 
-        let result = crate::runtime::lit_f32(&shape, &flat).and_then(|x| {
-            ops::infer_batch(&mut rt, &st, cfg.variant, &x, lut_lit.as_ref())
-        });
+        let result = infer(&flat);
         stats.busy += t0.elapsed();
         stats.batches += 1;
         stats.requests += real;
@@ -231,9 +485,115 @@ fn worker_loop(
                 }
             }
         }
-        if shutting_down {
+        if drained {
             break;
         }
     }
-    Ok(stats)
+    stats
+}
+
+/// PJRT-backed worker: owns its own `Runtime` (PJRT is not `Send`),
+/// compiles the executable, then serves the shared queue.
+fn pjrt_worker(
+    artifacts: &std::path::Path,
+    model: &str,
+    variant: InferVariant,
+    acu: Option<String>,
+    queue: &SharedQueue,
+    max_wait: Duration,
+    ready: &mpsc::Sender<Result<usize>>,
+) -> EngineStats {
+    let setup = (|| -> Result<(Runtime, ModelState, Option<xla::Literal>)> {
+        let mut rt = Runtime::open(artifacts)?;
+        let mut st = ModelState::load_best(&rt, model)?;
+        let lut_lit = match (variant, &acu) {
+            (InferVariant::ApproxLut, Some(acu)) => Some(ops::load_lut_lit(&rt, acu)?),
+            (InferVariant::ApproxLut, None) => {
+                anyhow::bail!("ApproxLut engine needs an ACU name")
+            }
+            _ => None,
+        };
+        if variant != InferVariant::Fp32 {
+            // Engine-side quick calibration on the model's dataset.
+            let ds = crate::data::load(&st.model.dataset, &crate::data::Sizes::small());
+            ops::calibrate(
+                &mut rt,
+                &mut st,
+                &ds,
+                2,
+                crate::quant::calib::CalibratorKind::Percentile,
+                0.999,
+            )?;
+        }
+        rt.prepare(model, variant.artifact())?;
+        Ok((rt, st, lut_lit))
+    })();
+
+    let (mut rt, st, lut_lit) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(v.1.model.out_dim));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return EngineStats::default();
+        }
+    };
+
+    let bs = rt.manifest.batch;
+    let per: usize = st.model.input_shape.iter().product();
+    let mut shape = vec![bs];
+    shape.extend_from_slice(&st.model.input_shape);
+    batching_loop(queue, bs, per, max_wait, |flat| {
+        let x = crate::runtime::lit_f32(&shape, flat)?;
+        ops::infer_batch(&mut rt, &st, variant, &x, lut_lit.as_ref())
+    })
+}
+
+fn emulator_setup(spec: &EmulatorSpec) -> Result<Executor<'_>> {
+    anyhow::ensure!(
+        spec.model.input_dtype == "f32",
+        "emulator engine serves f32-input models (got {})",
+        spec.model.input_dtype
+    );
+    Executor::new(
+        &spec.model,
+        spec.params.clone(),
+        spec.plan.clone(),
+        spec.act_scales.clone(),
+        &spec.luts,
+        Style::Optimized {
+            threads: spec.gemm_threads.max(1),
+        },
+    )
+}
+
+/// Emulator-backed worker: builds its own `Executor` (own quantized
+/// weights, own scratch arena) over the shared spec, then serves the
+/// queue. Artifact-free — this is what the concurrency tests run on.
+fn emulator_worker(
+    spec: &EmulatorSpec,
+    queue: &SharedQueue,
+    max_wait: Duration,
+    ready: &mpsc::Sender<Result<usize>>,
+) -> EngineStats {
+    let exec = match emulator_setup(spec) {
+        Ok(exec) => {
+            let _ = ready.send(Ok(spec.model.out_dim));
+            exec
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return EngineStats::default();
+        }
+    };
+
+    let bs = spec.batch.max(1);
+    let per: usize = spec.model.input_shape.iter().product();
+    let mut shape = vec![bs];
+    shape.extend_from_slice(&spec.model.input_shape);
+    batching_loop(queue, bs, per, max_wait, |flat| {
+        let x = Tensor::from_vec(&shape, flat.to_vec())?;
+        Ok(exec.forward(Value::F(x))?.data)
+    })
 }

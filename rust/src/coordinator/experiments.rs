@@ -11,19 +11,24 @@
 //! * [`layer_sensitivity`] — per-layer ACU sensitivity sweep + greedy
 //!   mixed-ACU search under an accuracy budget, producing a heterogeneous
 //!   [`ExecutionPlan`] artifact (the MAx-DNN-style layer-wise assignment
-//!   only the Rust engine can execute).
+//!   only the Rust engine can execute). The sweep's (layer, ACU) pair
+//!   evaluations run on a persistent [`ThreadPool`] with deterministic
+//!   result ordering (see [`sweep_pairs`]); the artifact-free core
+//!   ([`SweepCtx`]) is shared with the benches and tests.
 //!
 //! Results are printed as aligned tables and appended to
 //! `artifacts/results/*.txt` so EXPERIMENTS.md can quote runs verbatim.
 
+use std::cell::RefCell;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::ops::{self, InferVariant, ModelState, TrainVariant};
-use crate::data::{self, Dataset, Sizes};
-use crate::emulator::{Executor, Style, Value};
+use crate::data::{self, Sizes, Split};
+use crate::emulator::{Executor, ScratchArena, Style, Value};
 use crate::graph::{retransform, ExecutionPlan, LayerMode, Model, Policy};
 use crate::lut::LutRegistry;
 use crate::metrics;
@@ -31,6 +36,7 @@ use crate::quant::calib::CalibratorKind;
 use crate::runtime::{weights, Runtime};
 use crate::tensor::Tensor;
 use crate::util::fmt;
+use crate::util::threadpool::ThreadPool;
 
 /// Per-model training hyper-parameters for the synthetic tasks.
 /// (The paper trains on the real datasets; pre-training here replaces
@@ -529,7 +535,12 @@ pub struct SensitivityConfig {
     pub reference: String,
     /// Allowed absolute accuracy drop vs the reference plan (e.g. 0.02).
     pub budget: f64,
+    /// Total GEMM thread budget, split across the sweep workers.
     pub threads: usize,
+    /// Sweep pool workers evaluating (layer, ACU) pairs concurrently
+    /// (1 = sequential; default `ADAPT_THREADS`). The emitted plan is
+    /// byte-identical at every worker count.
+    pub sweep_workers: usize,
     pub verbose: bool,
 }
 
@@ -547,52 +558,214 @@ impl Default for SensitivityConfig {
             reference: "exact8".to_string(),
             budget: 0.02,
             threads: crate::util::threadpool::default_threads(),
+            sweep_workers: crate::util::threadpool::default_threads(),
             verbose: false,
         }
     }
 }
 
-/// Evaluate one heterogeneous plan on the Rust optimized engine.
-#[allow(clippy::too_many_arguments)]
-fn eval_plan(
-    model: &Model,
-    params: &[Tensor],
-    scales: &[f32],
-    plan: ExecutionPlan,
-    luts: &LutRegistry,
-    threads: usize,
-    ds: &Dataset,
-    bs: usize,
-    nb: usize,
-) -> Result<f64> {
-    let exec = Executor::new(
-        model,
-        params.to_vec(),
-        plan,
-        scales.to_vec(),
-        luts,
-        Style::Optimized { threads },
-    )?;
-    let mut acc = 0.0;
-    let mut samples = 0usize;
-    for bi in 0..nb {
+/// One pre-extracted evaluation batch (inputs + supervision), so the
+/// sweep core runs anywhere the Rust engines do — no `Runtime`, no
+/// `Dataset` (benches and tests feed synthetic batches directly).
+pub struct EvalBatch {
+    pub input: Value,
+    pub labels: Vec<i32>,
+    /// Reconstruction target (metric == "pixel"), else empty.
+    pub target: Vec<f32>,
+}
+
+impl EvalBatch {
+    /// Extract batch `bi` of a split in the model's input dtype.
+    pub fn from_split(model: &Model, split: &Split, bi: usize, bs: usize) -> EvalBatch {
         let input = if model.input_dtype == "i32" {
-            Value::I(ds.eval.batch_tensor_i(bi, bs))
+            Value::I(split.batch_tensor_i(bi, bs))
         } else {
-            Value::F(ds.eval.batch_tensor(bi, bs))
+            Value::F(split.batch_tensor(bi, bs))
         };
-        let out = exec.forward(input)?;
-        let labels = ds.eval.batch_labels(bi, bs);
         let target = if model.metric == "pixel" {
-            ds.eval.batch_f(bi, bs)
+            split.batch_f(bi, bs)
         } else {
             vec![]
         };
-        let out_dim = out.data.len() / bs;
-        acc += metrics::compute(&model.metric, &out.data, out_dim, &labels, &target) * bs as f64;
-        samples += bs;
+        EvalBatch {
+            input,
+            labels: split.batch_labels(bi, bs),
+            target,
+        }
     }
-    Ok(acc / samples as f64)
+}
+
+/// Shared immutable context for plan evaluations: everything a sweep
+/// worker needs, crossing into pool jobs behind one `Arc`.
+pub struct SweepCtx {
+    pub model: Model,
+    pub params: Vec<Tensor>,
+    pub scales: Vec<f32>,
+    pub luts: LutRegistry,
+    pub batches: Vec<EvalBatch>,
+    pub bs: usize,
+    /// GEMM thread budget for ONE plan evaluation run inline (the base
+    /// accuracy, the greedy search, the sequential sweep). The pooled
+    /// sweep divides this budget by the pool size per job so concurrent
+    /// workers never oversubscribe the cores.
+    pub gemm_threads: usize,
+}
+
+thread_local! {
+    /// Per-worker warm scratch arena: a persistent pool worker threads one
+    /// arena through every plan it evaluates ([`Executor::with_arena`]).
+    static SWEEP_ARENA: RefCell<Option<ScratchArena>> = const { RefCell::new(None) };
+}
+
+impl SweepCtx {
+    /// Evaluate one heterogeneous plan on the Rust optimized engine with
+    /// the context's full GEMM thread budget.
+    pub fn eval_plan(&self, plan: ExecutionPlan) -> Result<f64> {
+        self.eval_plan_threads(plan, self.gemm_threads)
+    }
+
+    /// [`eval_plan`](Self::eval_plan) at an explicit GEMM thread count
+    /// (the pooled sweep runs each job at `gemm_threads / pool size`).
+    /// Bit-deterministic: the result depends only on the plan and the
+    /// context, never on thread count or which worker runs it (row
+    /// chunks are disjoint and each row is computed sequentially).
+    pub fn eval_plan_threads(&self, plan: ExecutionPlan, threads: usize) -> Result<f64> {
+        let arena = SWEEP_ARENA.with(|slot| slot.borrow_mut().take()).unwrap_or_default();
+        let exec = Executor::with_arena(
+            &self.model,
+            self.params.clone(),
+            plan,
+            self.scales.clone(),
+            &self.luts,
+            Style::Optimized {
+                threads: threads.max(1),
+            },
+            arena,
+        )?;
+        let mut acc = 0.0;
+        let mut samples = 0usize;
+        for b in &self.batches {
+            let out = exec.forward(b.input.clone())?;
+            let out_dim = out.data.len() / self.bs;
+            acc += metrics::compute(&self.model.metric, &out.data, out_dim, &b.labels, &b.target)
+                * self.bs as f64;
+            samples += self.bs;
+        }
+        SWEEP_ARENA.with(|slot| *slot.borrow_mut() = Some(exec.into_arena()));
+        Ok(acc / samples.max(1) as f64)
+    }
+
+    /// Quantizable (node id, layer name) pairs of the model, sweep order.
+    pub fn layers(&self) -> Vec<(usize, String)> {
+        self.model
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_quantizable())
+            .map(|n| (n.id, n.op.layer_name().unwrap_or_default().to_string()))
+            .collect()
+    }
+}
+
+/// Power proxy for an ACU name (1.0 when unknown).
+fn acu_power(acu: &str) -> f64 {
+    crate::mult::get(acu).map(|m| m.power).unwrap_or(1.0)
+}
+
+/// Per-layer worst accuracy drop from [`sweep_pairs`] output (layer-major,
+/// ACU-minor — the one place that indexing contract is interpreted).
+pub fn worst_drops(base_acc: f64, accs: &[f64], n_layers: usize, n_acus: usize) -> Vec<f64> {
+    let mut wd = vec![0.0f64; n_layers];
+    for li in 0..n_layers {
+        for ai in 0..n_acus {
+            wd[li] = wd[li].max(base_acc - accs[li * n_acus + ai]);
+        }
+    }
+    wd
+}
+
+/// Evaluate every (layer, ACU) single-swap plan against `reference`.
+///
+/// Returns accuracies in layer-major, ACU-minor order — identical whether
+/// the pairs run sequentially (`pool == None`) or on a persistent worker
+/// pool ([`ThreadPool::run_ordered`] restores submission order, and each
+/// evaluation is bit-deterministic).
+pub fn sweep_pairs(
+    ctx: &Arc<SweepCtx>,
+    reference: &ExecutionPlan,
+    layers: &[(usize, String)],
+    acus: &[String],
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<f64>> {
+    let plan_for = |id: usize, acu: &str| {
+        let mut plan = reference.clone();
+        plan.modes.insert(id, LayerMode::lut(acu));
+        plan
+    };
+    match pool {
+        Some(pool) if pool.threads() > 1 => {
+            // Split the GEMM thread budget across the concurrent workers;
+            // inline evaluations elsewhere keep the full budget.
+            let per_job = (ctx.gemm_threads / pool.threads()).max(1);
+            let mut jobs = Vec::with_capacity(layers.len() * acus.len());
+            for (id, _) in layers {
+                for acu in acus {
+                    let ctx = Arc::clone(ctx);
+                    let plan = plan_for(*id, acu);
+                    jobs.push(move || ctx.eval_plan_threads(plan, per_job));
+                }
+            }
+            pool.run_ordered(jobs).into_iter().collect()
+        }
+        _ => {
+            let mut out = Vec::with_capacity(layers.len() * acus.len());
+            for (id, _) in layers {
+                for acu in acus {
+                    out.push(ctx.eval_plan(plan_for(*id, acu))?);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Greedy mixed-ACU search: most tolerant layers first, each assigned the
+/// cheapest candidate that keeps the cumulative plan within `budget` of
+/// `base_acc`. Inherently sequential (every step depends on the plan so
+/// far), so it is byte-identical after a sequential or a parallel sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_mixed(
+    ctx: &SweepCtx,
+    reference: &ExecutionPlan,
+    reference_acu: &str,
+    base_acc: f64,
+    layers: &[(usize, String)],
+    worst_drop: &[f64],
+    acus: &[String],
+    budget: f64,
+) -> Result<(ExecutionPlan, f64)> {
+    let mut order: Vec<usize> = (0..layers.len()).collect();
+    order.sort_by(|&a, &b| worst_drop[a].total_cmp(&worst_drop[b]));
+    let mut candidates = acus.to_vec();
+    candidates.sort_by(|a, b| acu_power(a).total_cmp(&acu_power(b)));
+    let mut plan = reference.clone();
+    let mut mixed_acc = base_acc;
+    for &li in &order {
+        let (id, _) = &layers[li];
+        for acu in &candidates {
+            if acu_power(acu) >= acu_power(reference_acu) {
+                continue; // only cheaper-than-reference ACUs are wins
+            }
+            let mut trial = plan.clone();
+            trial.modes.insert(*id, LayerMode::lut(acu.as_str()));
+            let acc = ctx.eval_plan(trial.clone())?;
+            if base_acc - acc <= budget {
+                plan = trial;
+                mixed_acc = acc;
+                break; // candidates are power-sorted: first fit is cheapest
+            }
+        }
+    }
+    Ok((plan, mixed_acc))
 }
 
 /// Per-layer ACU sensitivity sweep + greedy mixed-ACU search.
@@ -608,6 +781,11 @@ fn eval_plan(
 ///
 /// The chosen plan is saved as `artifacts/results/plan_<model>.json`, a
 /// first-class artifact `adapt plan --plan-file` / the executor can reload.
+///
+/// The sweep's (layer, ACU) pair evaluations run on a persistent
+/// [`ThreadPool`] of `cfg.sweep_workers` workers; results are re-ordered
+/// deterministically, so the report, the greedy selection and the saved
+/// plan JSON are byte-identical at every worker count.
 pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<String> {
     let model = rt.manifest.model(&cfg.model)?.clone();
     let ds = data::load(&model.dataset, &cfg.sizes);
@@ -621,79 +799,74 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
     let luts = LutRegistry::from_manifest(&rt.manifest);
     let bs = rt.manifest.batch;
     let nb = cfg.eval_batches.max(1).min(ds.eval.n_batches(bs).max(1));
-    let power = |acu: &str| crate::mult::get(acu).map(|m| m.power).unwrap_or(1.0);
-
-    let layers: Vec<(usize, String)> = model
-        .nodes
-        .iter()
-        .filter(|n| n.op.is_quantizable())
-        .map(|n| {
-            (
-                n.id,
-                n.op.layer_name().unwrap_or_default().to_string(),
-            )
-        })
+    let sweep_workers = cfg.sweep_workers.max(1);
+    let batches: Vec<EvalBatch> = (0..nb)
+        .map(|bi| EvalBatch::from_split(&model, &ds.eval, bi, bs))
         .collect();
+    // Inline evaluations (base accuracy, greedy search) get the full GEMM
+    // thread budget; sweep_pairs divides it per pooled job itself.
+    let ctx = Arc::new(SweepCtx {
+        model,
+        params,
+        scales,
+        luts,
+        batches,
+        bs,
+        gemm_threads: cfg.threads.max(1),
+    });
+    let layers = ctx.layers();
 
-    let reference = retransform(&model, &Policy::all(LayerMode::lut(cfg.reference.as_str())));
-    let base_acc = eval_plan(
-        &model, &params, &scales, reference.clone(), &luts, cfg.threads, &ds, bs, nb,
-    )?;
+    let reference = retransform(
+        &ctx.model,
+        &Policy::all(LayerMode::lut(cfg.reference.as_str())),
+    );
+    let base_acc = ctx.eval_plan(reference.clone())?;
 
-    // --- per-layer sweep: one plan per (layer, ACU) ----------------------
-    let mut worst_drop = vec![0.0f64; layers.len()];
+    // --- per-layer sweep: one plan per (layer, ACU), pool-parallel -------
+    let pool = if sweep_workers > 1 {
+        Some(ThreadPool::new(sweep_workers))
+    } else {
+        None
+    };
+    let pair_accs = sweep_pairs(&ctx, &reference, &layers, &cfg.acus, pool.as_ref())?;
+
+    let worst_drop = worst_drops(base_acc, &pair_accs, layers.len(), cfg.acus.len());
     let mut rows = Vec::new();
-    for (li, (id, name)) in layers.iter().enumerate() {
+    for (li, (_, name)) in layers.iter().enumerate() {
         let mut row = vec![name.clone()];
-        for acu in &cfg.acus {
-            let mut plan = reference.clone();
-            plan.modes.insert(*id, LayerMode::lut(acu.as_str()));
-            let acc = eval_plan(
-                &model, &params, &scales, plan, &luts, cfg.threads, &ds, bs, nb,
-            )?;
-            let drop = base_acc - acc;
-            worst_drop[li] = worst_drop[li].max(drop);
+        for ai in 0..cfg.acus.len() {
+            let drop = base_acc - pair_accs[li * cfg.acus.len() + ai];
             row.push(format!("{:+.2}", -100.0 * drop));
         }
         row.push(format!("{:.2}", 100.0 * worst_drop[li]));
         if cfg.verbose {
-            eprintln!("[sensitivity {}] {name}: worst drop {:.2} pts", cfg.model, 100.0 * worst_drop[li]);
+            eprintln!(
+                "[sensitivity {}] {name}: worst drop {:.2} pts",
+                cfg.model,
+                100.0 * worst_drop[li]
+            );
         }
         rows.push(row);
     }
 
     // --- greedy mixed search, most tolerant layers first -----------------
-    let mut order: Vec<usize> = (0..layers.len()).collect();
-    order.sort_by(|&a, &b| worst_drop[a].total_cmp(&worst_drop[b]));
-    let mut candidates = cfg.acus.clone();
-    candidates.sort_by(|a, b| power(a).total_cmp(&power(b)));
-    let mut plan = reference.clone();
-    let mut mixed_acc = base_acc;
-    for &li in &order {
-        let (id, _) = &layers[li];
-        for acu in &candidates {
-            if power(acu) >= power(&cfg.reference) {
-                continue; // only cheaper-than-reference ACUs are wins
-            }
-            let mut trial = plan.clone();
-            trial.modes.insert(*id, LayerMode::lut(acu.as_str()));
-            let acc = eval_plan(
-                &model, &params, &scales, trial.clone(), &luts, cfg.threads, &ds, bs, nb,
-            )?;
-            if base_acc - acc <= cfg.budget {
-                plan = trial;
-                mixed_acc = acc;
-                break; // candidates are power-sorted: first fit is cheapest
-            }
-        }
-    }
+    let (plan, mixed_acc) = greedy_mixed(
+        &ctx,
+        &reference,
+        &cfg.reference,
+        base_acc,
+        &layers,
+        &worst_drop,
+        &cfg.acus,
+        cfg.budget,
+    )?;
 
     let plan_power = |p: &ExecutionPlan| -> f64 {
         let vals: Vec<f64> = p
             .modes
             .values()
             .map(|m| match m {
-                LayerMode::ApproxLut { acu } => power(acu),
+                LayerMode::ApproxLut { acu } => acu_power(acu),
                 _ => 1.0,
             })
             .collect();
@@ -706,13 +879,22 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
         headers.push(acu.as_str());
     }
     headers.push("worst drop (pts)");
+    // Mirror sweep_pairs' per-job thread split in the report header.
+    let per_job_threads = if sweep_workers > 1 {
+        (ctx.gemm_threads / sweep_workers).max(1)
+    } else {
+        ctx.gemm_threads
+    };
     let mut out = format!(
-        "Layer sensitivity on {} (reference {}, {} eval batches, budget {:.1} pts)\n\
+        "Layer sensitivity on {} (reference {}, {} eval batches, budget {:.1} pts, \
+         {} sweep workers x {} gemm threads)\n\
          reference accuracy: {}\n\n",
         cfg.model,
         cfg.reference,
         nb,
         100.0 * cfg.budget,
+        sweep_workers,
+        per_job_threads,
         fmt::pct(base_acc),
     );
     out.push_str(&fmt::table(&headers, &rows));
@@ -723,13 +905,13 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
         100.0 * (mixed_acc - base_acc),
         plan_power(&reference),
         plan_power(&plan),
-        plan.describe(&model),
+        plan.describe(&ctx.model),
     ));
 
     let dir = rt.manifest.root.join("results");
     std::fs::create_dir_all(&dir)?;
     let plan_path = dir.join(format!("plan_{}.json", cfg.model));
-    std::fs::write(&plan_path, plan.to_json(&model))?;
+    std::fs::write(&plan_path, plan.to_json(&ctx.model))?;
     out.push_str(&format!("\nplan saved to {}\n", plan_path.display()));
 
     append_results(&rt.manifest.root, "sensitivity", &out)?;

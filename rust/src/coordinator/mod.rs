@@ -3,11 +3,13 @@
 //! * [`ops`] — model state + the primitive operations (inference, fp32
 //!   pre-training, calibration, QAT retraining) driving the AOT
 //!   executables. This is Fig. 1 + Fig. 2 as code.
-//! * [`engine`] — the request-level inference engine: a dynamic batcher in
-//!   front of the fixed-batch executables (the serving-style face of the
-//!   framework).
+//! * [`engine`] — the request-level inference engine: a pool of dynamic
+//!   batchers over a shared bounded request queue (the serving-style face
+//!   of the framework; each worker owns its PJRT runtime or Rust
+//!   executor outright).
 //! * [`experiments`] — harnesses that regenerate every table in the
-//!   paper's evaluation (Tables 1–4) plus the ablations in DESIGN.md.
+//!   paper's evaluation (Tables 1–4) plus the ablations in DESIGN.md,
+//!   including the pool-parallel per-layer ACU sensitivity sweep.
 //! * [`features`] — the Table-3 functionality matrix.
 
 pub mod engine;

@@ -28,6 +28,12 @@
 //! state performs zero per-layer heap allocations on the GEMM hot path;
 //! `benches/multiplier_ablation.rs` A/B-checks this against the seed's
 //! alloc-per-call behavior via [`Executor::set_scratch_reuse`].
+//!
+//! The arena is also *detachable* ([`ScratchArena`]): a pool worker that
+//! evaluates many plans builds one executor per plan but threads the same
+//! warm arena through all of them ([`Executor::with_arena`] /
+//! [`Executor::into_arena`]), so the parallel sensitivity sweep allocates
+//! per worker, not per (layer, ACU) candidate.
 
 use std::cell::{RefCell, RefMut};
 use std::collections::BTreeMap;
@@ -187,6 +193,29 @@ struct Scratch {
     vals: RefCell<Vec<Option<Value>>>,
 }
 
+/// An executor's scratch arena as a detachable handle.
+///
+/// A long-lived worker (engine-pool worker, sensitivity-sweep pool worker)
+/// builds many short-lived executors — one per plan — but wants the warm
+/// grow-only buffers to survive from one executor to the next. Construct
+/// with [`Executor::with_arena`] and reclaim with [`Executor::into_arena`];
+/// buffer reuse across executors is behavior-neutral for the same reason
+/// reuse across batches is (every buffer is fully (re)written or cleared
+/// before use).
+pub struct ScratchArena(Scratch);
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena(Scratch::new())
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> ScratchArena {
+        ScratchArena::new()
+    }
+}
+
 impl Scratch {
     fn new() -> Scratch {
         Scratch {
@@ -257,6 +286,30 @@ impl<'m> Executor<'m> {
         luts: &LutRegistry,
         style: Style,
     ) -> Result<Executor<'m>> {
+        Executor::with_arena(
+            model,
+            params,
+            plan,
+            act_scales,
+            luts,
+            style,
+            ScratchArena::new(),
+        )
+    }
+
+    /// [`Executor::new`], but adopting an existing scratch arena (e.g. one
+    /// reclaimed via [`Executor::into_arena`] from a previous plan's
+    /// executor on the same worker thread).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_arena(
+        model: &'m Model,
+        params: Vec<Tensor>,
+        plan: ExecutionPlan,
+        act_scales: Vec<f32>,
+        luts: &LutRegistry,
+        style: Style,
+        arena: ScratchArena,
+    ) -> Result<Executor<'m>> {
         if params.len() != model.params.len() {
             bail!(
                 "model {} expects {} params, got {}",
@@ -288,7 +341,7 @@ impl<'m> Executor<'m> {
             params,
             prepared: BTreeMap::new(),
             last_use,
-            scratch: Scratch::new(),
+            scratch: arena.0,
             reuse_scratch: true,
         };
         ex.prepare(luts)?;
@@ -298,6 +351,12 @@ impl<'m> Executor<'m> {
     /// The plan this executor was built from.
     pub fn plan(&self) -> &ExecutionPlan {
         &self.plan
+    }
+
+    /// Tear down the executor, reclaiming its (warm) scratch arena for the
+    /// next executor on this worker.
+    pub fn into_arena(self) -> ScratchArena {
+        ScratchArena(self.scratch)
     }
 
     /// Toggle scratch reuse. `false` restores the seed's alloc-per-call

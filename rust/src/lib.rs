@@ -14,8 +14,9 @@
 //!
 //! ## Module map
 //!
-//! * [`util`] — dependency-free substrates: JSON, CLI, PRNG, threadpool,
-//!   micro-benchmark harness.
+//! * [`util`] — dependency-free substrates: JSON, CLI, PRNG, thread pools
+//!   (scoped GEMM helpers + the persistent [`util::threadpool::ThreadPool`]
+//!   behind the parallel sweep), micro-benchmark harness.
 //! * [`tensor`] — minimal NHWC ndarray + im2col (Fig. 3's GEMM reshape),
 //!   including the allocation-free channel-range variants the executor's
 //!   scratch arena feeds.
@@ -37,9 +38,11 @@
 //! * [`data`] — deterministic synthetic datasets (CIFAR/MNIST/IMDB stand-ins).
 //! * [`runtime`] — PJRT artifact loading/execution (the AdaPT fast path;
 //!   stubbed by `rust/vendor/xla` in offline builds).
-//! * [`coordinator`] — batching engine, calibration, QAT retraining,
-//!   experiment harnesses for every table in the paper plus the
-//!   per-layer ACU sensitivity sweep / greedy mixed-precision search
+//! * [`coordinator`] — the engine pool (N dynamic-batching workers over a
+//!   bounded request queue with backpressure), calibration, QAT
+//!   retraining, experiment harnesses for every table in the paper plus
+//!   the pool-parallel per-layer ACU sensitivity sweep / greedy
+//!   mixed-precision search
 //!   (`coordinator::experiments::layer_sensitivity`).
 //! * [`metrics`] — accuracy/timing metrics.
 

@@ -9,24 +9,30 @@
 //! adapt table2 [--models a,b] [--steps-scale S] [--acu NAME]
 //! adapt table4 [--models a,b] [--eval-batches N] [--skip-baseline]
 //! adapt ablation [--model NAME]       ACU accuracy/power sweep
-//! adapt sensitivity --model NAME [--acus a,b] [--budget PTS] per-layer
-//!       ACU sweep + greedy mixed-precision search (heterogeneous plans)
+//! adapt sensitivity --model NAME [--acus a,b] [--budget PTS] [--workers N]
+//!       per-layer ACU sweep + greedy mixed-precision search
+//!       (heterogeneous plans); the sweep runs on a persistent pool of
+//!       `--workers` threads with a byte-identical plan at any count
 //! adapt plan --model NAME [--spec "default=ACU,layer=ACU,head=fp32"]
 //!       [--out FILE]                  build/inspect a per-layer plan JSON
 //! adapt calibrate --model NAME [--calibrator max|percentile|mse|entropy]
-//! adapt serve --model NAME [--requests N]   dynamic-batching engine demo
+//! adapt serve --model NAME [--requests N] [--workers N] [--queue-depth D]
+//!       engine-pool demo: N dynamic-batching workers over one bounded
+//!       request queue (submitters block when it fills)
 //! adapt selftest                      emulator vs XLA cross-check
 //! ```
 //!
 //! Artifacts are searched in `./artifacts` (override: `--artifacts PATH`
-//! or env `ADAPT_ARTIFACTS`).
+//! or env `ADAPT_ARTIFACTS`). Thread defaults (`--workers`, `--threads`)
+//! come from env `ADAPT_THREADS`, falling back to the machine's available
+//! parallelism.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use adapt::coordinator::engine::{EngineConfig, InferenceEngine};
+use adapt::coordinator::engine::{EngineConfig, InferenceEngine, DEFAULT_QUEUE_DEPTH};
 use adapt::coordinator::experiments::{self, SensitivityConfig, Table2Config, Table4Config};
 use adapt::coordinator::features;
 use adapt::coordinator::ops::{self, InferVariant};
@@ -152,6 +158,7 @@ fn run() -> Result<()> {
                 // --budget is in accuracy points (e.g. 2.0 = two points).
                 budget: args.get_f64("budget", 100.0 * defaults.budget)? / 100.0,
                 threads: args.get_usize("threads", defaults.threads)?,
+                sweep_workers: args.get_usize("workers", defaults.sweep_workers)?,
                 verbose: args.flag("verbose"),
             };
             println!(
@@ -227,15 +234,18 @@ fn run() -> Result<()> {
         "serve" => {
             let model = args.get_or("model", "small_vgg").to_string();
             let n = args.get_usize("requests", 64)?;
-            let cfg = EngineConfig {
-                artifacts: artifacts_from(&args),
-                model: model.clone(),
-                variant: InferVariant::ApproxLut,
-                acu: Some(args.get_or("acu", "mul8s_1l2h_like").to_string()),
-                max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 20)? as u64),
-            };
+            let mut cfg = EngineConfig::pjrt(
+                artifacts_from(&args),
+                model.clone(),
+                InferVariant::ApproxLut,
+                Some(args.get_or("acu", "mul8s_1l2h_like").to_string()),
+            );
+            cfg.max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20)? as u64);
+            cfg.workers = args.get_usize("workers", cfg.workers)?;
+            cfg.queue_depth = args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?;
+            let (workers, queue_depth) = (cfg.workers, cfg.queue_depth);
             // Feed the engine single-sample requests from the eval split.
-            let rt = Runtime::open(&cfg.artifacts)?;
+            let rt = Runtime::open(&artifacts_from(&args))?;
             let m = rt.manifest.model(&model)?;
             if m.input_dtype != "f32" {
                 bail!("serve demo supports f32-input models");
@@ -243,7 +253,10 @@ fn run() -> Result<()> {
             let ds = adapt::data::load(&m.dataset, &Sizes::small());
             let per: usize = m.input_shape.iter().product();
             drop(rt);
-            println!("starting batching engine for {model} ({n} requests)...");
+            println!(
+                "starting engine pool for {model} \
+                 ({workers} workers, queue depth {queue_depth}, {n} requests)..."
+            );
             let engine = InferenceEngine::start(cfg)?;
             let t0 = std::time::Instant::now();
             let mut pending = Vec::new();
@@ -260,13 +273,24 @@ fn run() -> Result<()> {
             let wall = t0.elapsed();
             let stats = engine.shutdown()?;
             println!(
-                "{ok}/{n} ok in {} ({:.1} req/s) — {} batches, {} padded slots, busy {}",
+                "{ok}/{n} ok in {} ({:.1} req/s) — {} batches, {} padded slots, \
+                 queue wait {}, busy {}",
                 fmt::dur(wall),
                 n as f64 / wall.as_secs_f64(),
-                stats.batches,
-                stats.padded_slots,
-                fmt::dur(stats.busy),
+                stats.total.batches,
+                stats.total.padded_slots,
+                fmt::dur(stats.total.queue_wait),
+                fmt::dur(stats.total.busy),
             );
+            for (i, w) in stats.per_worker.iter().enumerate() {
+                println!(
+                    "  worker {i}: {} requests, {} batches, {} padded, busy {}",
+                    w.requests,
+                    w.batches,
+                    w.padded_slots,
+                    fmt::dur(w.busy),
+                );
+            }
         }
         "selftest" => {
             let mut rt = Runtime::open(&artifacts_from(&args))?;
@@ -276,8 +300,10 @@ fn run() -> Result<()> {
         _ => {
             println!("adapt — AdaPT-RS coordinator. See `rust/src/main.rs` docs for subcommands.");
             println!("  specs | features | multipliers | table2 | table4 | ablation");
-            println!("  sensitivity --model M [--acus a,b] [--budget PTS] | plan --model M [--spec S]");
-            println!("  calibrate --model M | serve --model M | selftest [--model M]");
+            println!("  sensitivity --model M [--acus a,b] [--budget PTS] [--workers N]");
+            println!("  plan --model M [--spec S] | calibrate --model M");
+            println!("  serve --model M [--workers N] [--queue-depth D] | selftest [--model M]");
+            println!("  thread defaults: env ADAPT_THREADS (else available parallelism)");
         }
     }
     Ok(())

@@ -138,6 +138,18 @@ mod tests {
     }
 
     #[test]
+    fn pool_flags_parse_in_both_spellings() {
+        // The engine-pool / sweep flags: `--workers N` and `--queue-depth D`
+        // (space or `=` form), defaults applying when absent.
+        let a = parse("serve --model small_vgg --workers 4 --queue-depth=128");
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 4);
+        assert_eq!(a.get_usize("queue-depth", 256).unwrap(), 128);
+        let b = parse("sensitivity --model small_vgg");
+        assert_eq!(b.get_usize("workers", 8).unwrap(), 8);
+        assert!(parse("serve --workers nope").get_usize("workers", 1).is_err());
+    }
+
+    #[test]
     fn f64_option() {
         let a = parse("sensitivity --budget 2.5");
         assert_eq!(a.get_f64("budget", 0.0).unwrap(), 2.5);

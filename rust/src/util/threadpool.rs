@@ -1,11 +1,26 @@
-//! Scoped threadpool — the stand-in for the paper's OpenMP layer (§4.2).
+//! Thread pools — the stand-in for the paper's OpenMP layer (§4.2).
 //!
-//! `parallel_for` splits an index range into contiguous chunks, one per
-//! worker, exactly like `#pragma omp parallel for schedule(static)` over
-//! the batch/row dimension of the im2col GEMM. Workers are spawned per
-//! call via `std::thread::scope`; for the long-running inference engine the
-//! pool amortizes nothing anyway (each layer GEMM is milliseconds), and
-//! scoped spawning keeps borrows simple and the code free of unsafe.
+//! Two tiers of parallelism live here:
+//!
+//! * **Scoped helpers** ([`parallel_for_chunks`], [`parallel_map_into`])
+//!   split an index range into contiguous chunks, one per worker, exactly
+//!   like `#pragma omp parallel for schedule(static)` over the batch/row
+//!   dimension of the im2col GEMM. Workers are spawned per call via
+//!   `std::thread::scope`: each layer GEMM borrows stack-local slices, and
+//!   scoped spawning keeps those borrows simple and the code free of
+//!   unsafe. They are also safe to call from *inside* a [`ThreadPool`]
+//!   job (no shared queue, so no nested-parallelism deadlock).
+//!
+//! * **[`ThreadPool`]** is the persistent pool for coarse-grained work:
+//!   long sweeps submit many independent jobs (one per (layer, ACU) pair)
+//!   and the same workers serve all of them, so per-worker state (e.g. an
+//!   executor scratch arena in a `thread_local`) survives from job to job.
+//!   [`ThreadPool::run_ordered`] returns results in submission order no
+//!   matter which worker finished first — the property the deterministic
+//!   sensitivity sweep is built on.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// Number of workers to use: `ADAPT_THREADS` env or available parallelism.
 pub fn default_threads() -> usize {
@@ -17,6 +32,137 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    /// Signalled on every submit and on close.
+    available: Condvar,
+}
+
+/// A persistent worker pool with job submission.
+///
+/// Workers live for the life of the pool (dropped => queue closes, workers
+/// drain remaining jobs and join). Jobs are `'static` + `Send`; shared
+/// read-only context crosses into jobs via `Arc`.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            available: Condvar::new(),
+        });
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("adapt-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool with [`default_threads`] workers (`ADAPT_THREADS` env).
+    pub fn with_default_threads() -> ThreadPool {
+        ThreadPool::new(default_threads())
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+        q.jobs.push_back(Box::new(f));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Run a batch of jobs and return their results **in submission
+    /// order**, regardless of which worker finished first. A panicking job
+    /// is re-raised on the caller once all results are in flight.
+    pub fn run_ordered<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.submit(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("pool worker died mid-batch");
+            match r {
+                Ok(v) => slots[i] = Some(v),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        slots
+            .into_iter()
+            .map(|v| v.expect("every job reports exactly once"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue poisoned");
+            q.closed = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break Some(j);
+                }
+                if q.closed {
+                    break None;
+                }
+                q = shared.available.wait(q).expect("pool queue poisoned");
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
 }
 
 /// Run `body(start, end)` over disjoint chunks of `0..n` on `threads`
@@ -118,5 +264,64 @@ mod tests {
         parallel_for_chunks(0, 8, |_, _| panic!("must not run"));
         let mut out: Vec<u8> = vec![];
         parallel_map_into(&mut out, 8, |_, _| {});
+    }
+
+    #[test]
+    fn pool_run_ordered_preserves_submission_order() {
+        let pool = ThreadPool::new(4);
+        // Reverse sleep times so late submissions finish first.
+        let jobs: Vec<_> = (0..16u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis((16 - i) % 4));
+                    i * 3
+                }
+            })
+            .collect();
+        let out = pool.run_ordered(jobs);
+        assert_eq!(out, (0..16u64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_workers_persist_across_batches() {
+        // Worker-local state (thread ids) must repeat across run_ordered
+        // calls: the whole point of a persistent pool.
+        let pool = ThreadPool::new(2);
+        let ids = |pool: &ThreadPool| -> std::collections::BTreeSet<String> {
+            let jobs: Vec<_> = (0..8)
+                .map(|_| {
+                    move || {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        format!("{:?}", std::thread::current().id())
+                    }
+                })
+                .collect();
+            pool.run_ordered(jobs).into_iter().collect()
+        };
+        let first = ids(&pool);
+        let second = ids(&pool);
+        assert!(!first.is_empty() && first.len() <= 2);
+        assert!(second.is_subset(&first), "workers were respawned");
+    }
+
+    #[test]
+    fn pool_submit_runs_fire_and_forget_jobs() {
+        let pool = ThreadPool::new(3);
+        let hits = std::sync::Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let hits = std::sync::Arc::clone(&hits);
+            pool.submit(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // close + join drains the queue
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn pool_clamps_zero_threads() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.run_ordered(vec![|| 7usize]), vec![7]);
     }
 }

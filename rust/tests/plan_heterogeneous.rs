@@ -10,7 +10,9 @@
 //!    forwards produce identical outputs.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
+use adapt::coordinator::experiments::{self, EvalBatch, SweepCtx};
 use adapt::emulator::{gemm, Executor, Style, Value};
 use adapt::graph::{retransform, LayerMode, Model, Node, Op, ParamSpec, Policy};
 use adapt::lut::{Lut, LutRegistry};
@@ -18,6 +20,7 @@ use adapt::mult;
 use adapt::quant;
 use adapt::tensor::{im2col_i32, Tensor, TensorI32};
 use adapt::util::rng::Rng;
+use adapt::util::threadpool::ThreadPool;
 
 /// conv(3x3, 1->4, pad 1) -> relu -> conv(3x3, 4->4, pad 1) -> relu ->
 /// flatten -> linear(64 -> 3), on 4x4x1 inputs.
@@ -228,6 +231,101 @@ fn mixed_fp32_func_lut_modes_agree_across_styles() {
     assert_eq!(naive.shape, opt.shape);
     for (a, b) in naive.data.iter().zip(&opt.data) {
         assert!((a - b).abs() < 1e-5, "styles diverged: {a} vs {b}");
+    }
+}
+
+#[test]
+fn parallel_sweep_matches_sequential_bit_for_bit() {
+    // PROPERTY: the (layer, ACU) sensitivity sweep returns the same
+    // accuracies in the same order — and the greedy mixed-ACU search
+    // built on them emits byte-identical plan JSON — whether the pairs
+    // run sequentially or on a persistent worker pool of any size.
+    let model = synth_model();
+    let params = synth_params(&model, 21);
+    let bs = 4;
+    let mut rng = Rng::new(99);
+    let batches: Vec<EvalBatch> = (0..3)
+        .map(|bi| {
+            let x: Vec<f32> = (0..bs * 16).map(|_| rng.next_gauss()).collect();
+            EvalBatch {
+                input: Value::F(Tensor::from_vec(&[bs, 4, 4, 1], x).unwrap()),
+                labels: (0..bs).map(|i| ((i + bi) % 3) as i32).collect(),
+                target: vec![],
+            }
+        })
+        .collect();
+    let ctx = Arc::new(SweepCtx {
+        model,
+        params,
+        scales: scales(),
+        luts: LutRegistry::in_memory(),
+        batches,
+        bs,
+        gemm_threads: 1,
+    });
+    let layers = ctx.layers();
+    assert_eq!(layers.len(), 3, "c1, c2, fc");
+    let acus = vec![
+        "mul8s_1l2h_like".to_string(),
+        "drum8_4".to_string(),
+        "trunc_out8_4".to_string(),
+    ];
+    let reference = retransform(&ctx.model, &Policy::all(LayerMode::lut("exact8")));
+    let base_acc = ctx.eval_plan(reference.clone()).unwrap();
+    let budget = 0.5; // generous: the greedy search must actually assign
+
+    let worst_drop =
+        |accs: &[f64]| experiments::worst_drops(base_acc, accs, layers.len(), acus.len());
+
+    let seq = experiments::sweep_pairs(&ctx, &reference, &layers, &acus, None).unwrap();
+    assert_eq!(seq.len(), layers.len() * acus.len());
+    let (seq_plan, seq_acc) = experiments::greedy_mixed(
+        &ctx,
+        &reference,
+        "exact8",
+        base_acc,
+        &layers,
+        &worst_drop(&seq),
+        &acus,
+        budget,
+    )
+    .unwrap();
+    let seq_json = seq_plan.to_json(&ctx.model);
+    assert_ne!(
+        seq_json,
+        reference.to_json(&ctx.model),
+        "greedy search must have assigned cheaper ACUs"
+    );
+
+    for workers in [2usize, 3] {
+        let pool = ThreadPool::new(workers);
+        // Two rounds on the same pool: persistent workers reuse their warm
+        // scratch arenas, which must stay behavior-neutral.
+        for round in 0..2 {
+            let par =
+                experiments::sweep_pairs(&ctx, &reference, &layers, &acus, Some(&pool)).unwrap();
+            assert_eq!(
+                par, seq,
+                "{workers}-worker sweep round {round} diverged from sequential"
+            );
+            let (par_plan, par_acc) = experiments::greedy_mixed(
+                &ctx,
+                &reference,
+                "exact8",
+                base_acc,
+                &layers,
+                &worst_drop(&par),
+                &acus,
+                budget,
+            )
+            .unwrap();
+            assert_eq!(
+                par_plan.to_json(&ctx.model),
+                seq_json,
+                "plan JSON must be byte-identical at {workers} workers"
+            );
+            assert_eq!(par_acc, seq_acc);
+        }
     }
 }
 
