@@ -3,24 +3,160 @@
 //! "re-train time" column. (The accuracy columns come from
 //! `adapt table2` / the end_to_end example, which train to convergence.)
 //!
+//! Two sections:
+//!
+//! * **Emulator trainer (artifact-free)** — step costs of the Rust QAT
+//!   path on the bundled tiny model (inference forward vs taped forward
+//!   vs STE backward vs a full fit step), emitted as
+//!   `artifacts/results/BENCH_retrain.json`. Runs anywhere (CI
+//!   bench-smoke included) — no PJRT, no artifacts directory needed.
+//! * **PJRT variants (artifact-gated)** — the original per-variant rows,
+//!   plus an emulator-trainer A/B epoch row (`ops::train_emulator`) so
+//!   the two QAT paths can be compared on the same model.
+//!
 //! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench table2_retrain`
+
+use std::collections::BTreeMap;
 
 use adapt::coordinator::ops::{self, InferVariant, TrainVariant};
 use adapt::data::{self, Sizes};
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, LayerMode, Op, Policy};
+use adapt::lut::LutRegistry;
 use adapt::quant::calib::CalibratorKind;
 use adapt::runtime::Runtime;
+use adapt::trainer::{self, synth};
 use adapt::util::bench::{self, Config};
+use adapt::util::json::Json;
+
+/// Artifact-free emulator-trainer step costs on the tiny model; emits
+/// `BENCH_retrain.json` for the CI bench-smoke job.
+fn emulator_section(cfg: Config) {
+    let model = synth::tiny_cnn();
+    let params = synth::tiny_params(&model, 0x7EA1);
+    let ds = synth::tiny_dataset(256, 128);
+    let luts = LutRegistry::in_memory();
+    let threads = adapt::util::threadpool::default_threads();
+    let bs = 32;
+    let scales = trainer::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        bs,
+        2,
+        CalibratorKind::Percentile,
+        0.999,
+        threads,
+    )
+    .unwrap();
+    let plan = synth::tiny_mixed_plan(&model);
+    let x = ds.train.batch_tensor(0, bs);
+    let labels = ds.train.batch_labels(0, bs);
+    let exec = Executor::new(
+        &model,
+        params.clone(),
+        plan.clone(),
+        scales.clone(),
+        &luts,
+        Style::Optimized { threads },
+    )
+    .unwrap();
+
+    println!("Emulator QAT step costs (tiny_cnn, batch {bs}, {threads} threads, mixed-ACU plan):");
+    let s_fwd = bench::run("  emu fwd (inference)", cfg, || {
+        exec.forward(Value::F(x.clone())).unwrap()
+    });
+    s_fwd.print();
+    let s_taped = bench::run("  emu fwd (taped)", cfg, || {
+        exec.forward_taped(Value::F(x.clone())).unwrap()
+    });
+    s_taped.print();
+
+    let tape = exec.forward_taped(Value::F(x.clone())).unwrap();
+    let last = model.nodes.last().unwrap().id;
+    let out = match tape[last].as_ref().unwrap() {
+        Value::F(t) => t.clone(),
+        _ => unreachable!("tiny_cnn output is f32"),
+    };
+    let mut ws = trainer::Workspace::default();
+    let s_bwd = bench::run("  emu bwd (clipped STE)", cfg, || {
+        let (_, d_out) =
+            trainer::loss_and_grad(trainer::LossKind::CrossEntropy, &out, &labels, &[]).unwrap();
+        trainer::backward(&exec, &tape, d_out, threads, &mut ws).unwrap()
+    });
+    s_bwd.print();
+
+    let step_cfg = trainer::TrainConfig {
+        epochs: 1,
+        lr: 1e-3,
+        momentum: 0.9,
+        batch: bs,
+        seed: 1,
+        threads,
+        max_batches: Some(1),
+        log_every: 0,
+    };
+    let s_step = bench::run("  emu train step (fit 1x1)", cfg, || {
+        trainer::fit(
+            &model,
+            params.clone(),
+            &plan,
+            &scales,
+            &luts,
+            &ds.train,
+            &step_cfg,
+        )
+        .unwrap()
+    });
+    s_step.print();
+    println!();
+
+    let mut doc = BTreeMap::new();
+    doc.insert("model".to_string(), Json::Str("tiny_cnn".into()));
+    doc.insert("batch".to_string(), Json::Num(bs as f64));
+    doc.insert("threads".to_string(), Json::Num(threads as f64));
+    doc.insert(
+        "acus".to_string(),
+        Json::Arr(plan.acus().into_iter().map(Json::Str).collect()),
+    );
+    let mut rows = BTreeMap::new();
+    for (key, s) in [
+        ("fwd_infer_s", &s_fwd),
+        ("fwd_taped_s", &s_taped),
+        ("bwd_ste_s", &s_bwd),
+        ("train_step_s", &s_step),
+    ] {
+        rows.insert(key.to_string(), Json::Num(s.median_secs()));
+    }
+    doc.insert("median_s".to_string(), Json::Obj(rows));
+    doc.insert(
+        "bwd_over_fwd".to_string(),
+        Json::Num(s_bwd.median_secs() / s_fwd.median_secs().max(1e-12)),
+    );
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_retrain.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("  written {}", path.display());
+        }
+    }
+    println!();
+}
 
 fn main() {
     let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let cfg = Config::endtoend().from_env();
+
+    // Artifact-free section first: runs everywhere, including CI.
+    emulator_section(cfg);
+
     let mut rt = match Runtime::open(&adapt::artifacts_dir()) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("needs artifacts/ (run `make artifacts`): {e:#}");
+            eprintln!("PJRT section needs artifacts/ (run `make artifacts`): {e:#}");
             return;
         }
     };
-    let cfg = Config::endtoend().from_env();
     let models: Vec<String> = if fast {
         vec!["vae_mnist".into()]
     } else {
@@ -32,6 +168,7 @@ fn main() {
             .collect()
     };
     let sizes = Sizes::small();
+    let threads = adapt::util::threadpool::default_threads();
     println!("Table 2 step costs (batch {})\n", rt.manifest.batch);
 
     for name in &models {
@@ -65,6 +202,29 @@ fn main() {
                 let mut st2 = ops::ModelState::load_best(&rt, name).unwrap();
                 st2.act_scales = st.act_scales.clone();
                 ops::train(&mut rt, &mut st2, variant, &ds, 1, 1e-4, lut_ref, 0).unwrap()
+            });
+            s.print();
+        }
+        // Emulator-trainer A/B: the same QAT semantics on the Rust
+        // engines (ops::train_emulator), one epoch over the small split.
+        // LSTM/text models stay PJRT-only.
+        let trainable = st
+            .model
+            .nodes
+            .iter()
+            .all(|n| !matches!(n.op, Op::Lstm { .. } | Op::Embedding { .. }));
+        if trainable {
+            let plan = retransform(
+                &st.model,
+                &Policy::all(LayerMode::lut("mul8s_1l2h_like")),
+            );
+            let luts = LutRegistry::from_manifest(&rt.manifest);
+            let batch = rt.manifest.batch;
+            let s = bench::run("  emu qat epoch (trainer::fit)", cfg, || {
+                let mut st2 = ops::ModelState::load_best(&rt, name).unwrap();
+                st2.act_scales = st.act_scales.clone();
+                ops::train_emulator(&mut st2, &plan, &luts, &ds, 1, 1e-4, batch, 1, threads)
+                    .unwrap()
             });
             s.print();
         }

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::ops::{self, InferVariant, ModelState};
-use crate::emulator::{Executor, Style, Value};
+use crate::emulator::{Executor, PreparedWeights, ScratchArena, Style, Value};
 use crate::graph::{ExecutionPlan, Model};
 use crate::lut::LutRegistry;
 use crate::runtime::Runtime;
@@ -92,7 +92,8 @@ pub enum BackendSpec {
 }
 
 /// Spec for [`BackendSpec::Emulator`] workers. Shared read-only (`Arc`);
-/// each worker quantizes its own weight copies at startup.
+/// the pool quantizes the weights once at [`InferenceEngine::start`] and
+/// every worker adopts the shared [`PreparedWeights`].
 pub struct EmulatorSpec {
     pub model: Model,
     pub params: Vec<Tensor>,
@@ -276,15 +277,33 @@ pub struct InferenceEngine {
 impl InferenceEngine {
     /// Start the pool. Every worker compiles/prepares its backend before
     /// the call returns; the first setup failure aborts the whole pool.
+    ///
+    /// Emulator backends quantize the model's weights exactly **once**
+    /// here ([`Executor::prepare_weights`]); every worker adopts the same
+    /// shared tables behind an `Arc` instead of re-quantizing its own
+    /// copy — the shared quantized-weight cache for pool workers.
     pub fn start(cfg: EngineConfig) -> Result<InferenceEngine> {
         let n_workers = cfg.workers.max(1);
         let queue = Arc::new(SharedQueue::new(cfg.queue_depth));
+        // Shared quantized-weight cache (emulator backends only). Failing
+        // here (e.g. an unknown ACU in the plan) aborts the start just
+        // like a per-worker setup failure used to.
+        let emu_prepared = match &cfg.backend {
+            BackendSpec::Emulator(spec) => Some(Executor::prepare_weights(
+                &spec.model,
+                &spec.params,
+                &spec.plan,
+                &spec.luts,
+            )?),
+            _ => None,
+        };
         let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
         let mut workers = Vec::with_capacity(n_workers);
         for wi in 0..n_workers {
             let queue = Arc::clone(&queue);
             let ready = ready_tx.clone();
             let backend = cfg.backend.clone();
+            let prepared = emu_prepared.clone();
             let max_wait = cfg.max_wait;
             let handle = std::thread::Builder::new()
                 .name(format!("adapt-engine-{wi}"))
@@ -296,7 +315,8 @@ impl InferenceEngine {
                         acu,
                     } => pjrt_worker(&artifacts, &model, variant, acu, &queue, max_wait, &ready),
                     BackendSpec::Emulator(spec) => {
-                        emulator_worker(&spec, &queue, max_wait, &ready)
+                        let prepared = prepared.expect("emulator backend prepared above");
+                        emulator_worker(&spec, prepared, &queue, max_wait, &ready)
                     }
                 })
                 .context("spawning engine worker")?;
@@ -550,34 +570,37 @@ fn pjrt_worker(
     })
 }
 
-fn emulator_setup(spec: &EmulatorSpec) -> Result<Executor<'_>> {
+fn emulator_setup(spec: &EmulatorSpec, prepared: PreparedWeights) -> Result<Executor<'_>> {
     anyhow::ensure!(
         spec.model.input_dtype == "f32",
         "emulator engine serves f32-input models (got {})",
         spec.model.input_dtype
     );
-    Executor::new(
+    Executor::with_prepared(
         &spec.model,
         spec.params.clone(),
         spec.plan.clone(),
         spec.act_scales.clone(),
-        &spec.luts,
         Style::Optimized {
             threads: spec.gemm_threads.max(1),
         },
+        prepared,
+        ScratchArena::new(),
     )
 }
 
-/// Emulator-backed worker: builds its own `Executor` (own quantized
-/// weights, own scratch arena) over the shared spec, then serves the
-/// queue. Artifact-free — this is what the concurrency tests run on.
+/// Emulator-backed worker: adopts the pool's shared quantized weights
+/// (one `Arc` clone, no re-quantization) and owns its own scratch arena
+/// over the shared spec, then serves the queue. Artifact-free — this is
+/// what the concurrency tests run on.
 fn emulator_worker(
     spec: &EmulatorSpec,
+    prepared: PreparedWeights,
     queue: &SharedQueue,
     max_wait: Duration,
     ready: &mpsc::Sender<Result<usize>>,
 ) -> EngineStats {
-    let exec = match emulator_setup(spec) {
+    let exec = match emulator_setup(spec, prepared) {
         Ok(exec) => {
             let _ = ready.send(Ok(spec.model.out_dim));
             exec

@@ -29,12 +29,13 @@ use anyhow::{Context, Result};
 use crate::coordinator::ops::{self, InferVariant, ModelState, TrainVariant};
 use crate::data::{self, Sizes, Split};
 use crate::emulator::{Executor, ScratchArena, Style, Value};
-use crate::graph::{retransform, ExecutionPlan, LayerMode, Model, Policy};
+use crate::graph::{retransform, ExecutionPlan, LayerMode, Manifest, Model, Policy};
 use crate::lut::LutRegistry;
 use crate::metrics;
 use crate::quant::calib::CalibratorKind;
 use crate::runtime::{weights, Runtime};
 use crate::tensor::Tensor;
+use crate::trainer;
 use crate::util::fmt;
 use crate::util::threadpool::ThreadPool;
 
@@ -541,6 +542,14 @@ pub struct SensitivityConfig {
     /// (1 = sequential; default `ADAPT_THREADS`). The emitted plan is
     /// byte-identical at every worker count.
     pub sweep_workers: usize,
+    /// QAT-retrain the greedy mixed plan on the emulator for this many
+    /// epochs after the search (0 = off) — the plan → retrain loop in one
+    /// command (`adapt sensitivity … --retrain-epochs N`).
+    pub retrain_epochs: usize,
+    /// Learning rate for the post-search retraining.
+    pub retrain_lr: f32,
+    /// Shuffle seed for the post-search retraining.
+    pub seed: u64,
     pub verbose: bool,
 }
 
@@ -559,6 +568,9 @@ impl Default for SensitivityConfig {
             budget: 0.02,
             threads: crate::util::threadpool::default_threads(),
             sweep_workers: crate::util::threadpool::default_threads(),
+            retrain_epochs: 0,
+            retrain_lr: 0.002,
+            seed: 0x5EED,
             verbose: false,
         }
     }
@@ -914,6 +926,161 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
     std::fs::write(&plan_path, plan.to_json(&ctx.model))?;
     out.push_str(&format!("\nplan saved to {}\n", plan_path.display()));
 
+    // --- optional: QAT-retrain the mixed plan in the same command -------
+    if cfg.retrain_epochs > 0 {
+        let tcfg = trainer::TrainConfig {
+            epochs: cfg.retrain_epochs,
+            lr: cfg.retrain_lr,
+            momentum: 0.9,
+            batch: bs,
+            seed: cfg.seed,
+            threads: ctx.gemm_threads,
+            max_batches: None,
+            log_every: if cfg.verbose { 10 } else { 0 },
+        };
+        let fit = trainer::fit(
+            &ctx.model,
+            ctx.params.clone(),
+            &plan,
+            &ctx.scales,
+            &ctx.luts,
+            &ds.train,
+            &tcfg,
+        )?;
+        let retrained = trainer::evaluate(
+            &ctx.model,
+            fit.params.clone(),
+            &plan,
+            &ctx.scales,
+            &ctx.luts,
+            &ds.eval,
+            bs,
+            nb,
+            ctx.gemm_threads,
+        )?;
+        let (l0, l1) = fit.improvement();
+        out.push_str(&format!(
+            "\nQAT retrain of the mixed plan ({} epochs x {} steps, lr {}): \
+             accuracy {} -> {} ({:+.2} pts vs reference), loss {l0:.4} -> {l1:.4}\n",
+            cfg.retrain_epochs,
+            fit.steps / cfg.retrain_epochs.max(1),
+            cfg.retrain_lr,
+            fmt::pct(mixed_acc),
+            fmt::pct(retrained),
+            100.0 * (retrained - base_acc),
+        ));
+        let wpath = dir.join(format!("retrained_{}.bin", cfg.model));
+        weights::save_params(&fit.params, &wpath)?;
+        out.push_str(&format!("retrained weights saved to {}\n", wpath.display()));
+    }
+
     append_results(&rt.manifest.root, "sensitivity", &out)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Emulator-native QAT retraining (adapt retrain) — artifact-free
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`retrain_plan`] (the `adapt retrain` subcommand).
+pub struct RetrainConfig {
+    pub model: String,
+    pub sizes: Sizes,
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Training/eval batch size (`None` = the manifest batch).
+    pub batch: Option<usize>,
+    pub seed: u64,
+    pub threads: usize,
+    pub eval_batches: usize,
+    /// Snapshot the retrained weights to `trained/<model>_qat.bin`.
+    pub save: bool,
+    pub verbose: bool,
+}
+
+/// QAT-retrain `plan` on the Rust emulator — artifact-free: needs the
+/// manifest + a weights blob + the Rust engines, but **no PJRT / HLO
+/// artifacts** (calibration runs on the emulator's own fp32 taps via
+/// [`trainer::calibrate_emulator`]). Any [`ExecutionPlan`] works,
+/// including the heterogeneous mixed-ACU plans `adapt sensitivity`
+/// saves. Deterministic for a fixed seed at any `ADAPT_THREADS`.
+pub fn retrain_plan(manifest: &Manifest, plan: &ExecutionPlan, cfg: &RetrainConfig) -> Result<String> {
+    let model = manifest.model(&cfg.model)?.clone();
+    let ds = data::load(&model.dataset, &cfg.sizes);
+    let trained = weights::trained_path(&manifest.root, &model);
+    let wpath = if trained.exists() {
+        trained
+    } else {
+        weights::initial_path(&manifest.root, &model)
+    };
+    let params = weights::load_params(&model, &wpath)?;
+    let bs = cfg.batch.unwrap_or(manifest.batch).max(1);
+    let threads = cfg.threads.max(1);
+    let eval_batches = cfg.eval_batches.max(1);
+
+    let scales = trainer::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        bs,
+        2,
+        CalibratorKind::Percentile,
+        0.999,
+        threads,
+    )?;
+    let luts = LutRegistry::from_manifest(manifest);
+    luts.preload(&plan.acus())?;
+
+    let before = trainer::evaluate(
+        &model, params.clone(), plan, &scales, &luts, &ds.eval, bs, eval_batches, threads,
+    )?;
+    let tcfg = trainer::TrainConfig {
+        epochs: cfg.epochs,
+        lr: cfg.lr,
+        momentum: cfg.momentum,
+        batch: bs,
+        seed: cfg.seed,
+        threads,
+        max_batches: None,
+        log_every: if cfg.verbose { 10 } else { 0 },
+    };
+    let fit = trainer::fit(&model, params, plan, &scales, &luts, &ds.train, &tcfg)?;
+    let after = trainer::evaluate(
+        &model, fit.params.clone(), plan, &scales, &luts, &ds.eval, bs, eval_batches, threads,
+    )?;
+
+    let (l0, l1) = fit.improvement();
+    let epoch_means: Vec<String> = fit
+        .epoch_losses
+        .iter()
+        .map(|l| format!("{l:.4}"))
+        .collect();
+    let mut out = format!(
+        "Emulator QAT retrain of {} ({} epochs x {} steps, lr {}, batch {bs}, seed {:#x})\n\
+         weights: {}\n\
+         plan:\n{}\
+         accuracy: {} -> {}  ({:+.2} pts)\n\
+         loss (per-epoch means): {}   ({l0:.4} -> {l1:.4})\n\
+         wall: {}\n",
+        cfg.model,
+        cfg.epochs,
+        fit.steps / cfg.epochs.max(1),
+        cfg.lr,
+        cfg.seed,
+        wpath.display(),
+        plan.describe(&model),
+        fmt::pct(before),
+        fmt::pct(after),
+        100.0 * (after - before),
+        epoch_means.join(", "),
+        fmt::dur(fit.wall),
+    );
+    if cfg.save {
+        let path = weights::retrained_path(&manifest.root, &model);
+        weights::save_params(&fit.params, &path)?;
+        out.push_str(&format!("retrained weights saved to {}\n", path.display()));
+    }
+    append_results(&manifest.root, "retrain", &out)?;
     Ok(out)
 }

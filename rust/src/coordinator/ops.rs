@@ -12,8 +12,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::data::{Dataset, Split};
-use crate::graph::Model;
-use crate::lut::Lut;
+use crate::graph::{ExecutionPlan, Model};
+use crate::lut::{Lut, LutRegistry};
 use crate::metrics;
 use crate::quant::calib::{Calibrator, CalibratorKind, HistogramCalibrator};
 use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, weights, Runtime};
@@ -68,6 +68,25 @@ impl ModelState {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         weights::save_params(&self.params_tensors()?, path)
+    }
+
+    /// Replace the state's parameters from CPU tensors (inverse of
+    /// [`params_tensors`](Self::params_tensors) — how the emulator
+    /// trainer hands updated weights back to the literal-based flow).
+    pub fn set_params_tensors(&mut self, tensors: &[Tensor]) -> Result<()> {
+        if tensors.len() != self.model.params.len() {
+            bail!(
+                "model {} expects {} params, got {}",
+                self.model.name,
+                self.model.params.len(),
+                tensors.len()
+            );
+        }
+        self.params = tensors
+            .iter()
+            .map(|t| lit_f32(&t.shape, &t.data))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
     }
 
     /// Activation scales as a literal, rescaled from the calibrated 8-bit
@@ -325,6 +344,52 @@ pub fn train(
         first_loss: losses.first().copied().unwrap_or(f32::NAN),
         last_loss: losses.last().copied().unwrap_or(f32::NAN),
         losses,
+    })
+}
+
+/// Emulator-native counterpart of [`train`] — the `TrainVariant`-parallel
+/// entry: the same QAT semantics (approximate forward, STE backward,
+/// SGD-with-momentum) driven by [`crate::trainer::fit`] on the Rust
+/// engines over an arbitrary [`ExecutionPlan`] — heterogeneous mixed-ACU
+/// plans included — with no PJRT executable in the loop. Parameters
+/// round-trip through the state exactly like [`train`]'s literals do, so
+/// Table-2 harnesses (`benches/table2_retrain.rs`) can A/B the two QAT
+/// paths row for row.
+#[allow(clippy::too_many_arguments)]
+pub fn train_emulator(
+    st: &mut ModelState,
+    plan: &ExecutionPlan,
+    luts: &LutRegistry,
+    ds: &Dataset,
+    epochs: usize,
+    lr: f32,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<TrainResult> {
+    let scales = st
+        .act_scales
+        .clone()
+        .context("model not calibrated (run calibrate first)")?;
+    let params = st.params_tensors()?;
+    let cfg = crate::trainer::TrainConfig {
+        epochs,
+        lr,
+        momentum: 0.9,
+        batch,
+        seed,
+        threads,
+        max_batches: None,
+        log_every: 0,
+    };
+    let fit = crate::trainer::fit(&st.model, params, plan, &scales, luts, &ds.train, &cfg)?;
+    st.set_params_tensors(&fit.params)?;
+    Ok(TrainResult {
+        steps: fit.steps,
+        wall: fit.wall,
+        first_loss: fit.first_loss,
+        last_loss: fit.last_loss,
+        losses: fit.losses,
     })
 }
 

@@ -289,6 +289,9 @@ pub fn load(dataset: &str, sizes: &Sizes) -> Dataset {
             d
         }
         "imdb_syn" => gen_text("imdb_syn", 48, 512, nt, ne, 0x1DB0),
+        // Tiny 4-class task bound to `trainer::synth::tiny_cnn` (the
+        // artifact-free retraining smoke / bench workload).
+        "tiny_syn" => gen_images("tiny_syn", 8, 8, 3, 4, nt, ne, 0.45, 0x7119),
         "noise64" => gen_noise("noise64", 64, ne.max(256), 0x6064),
         other => panic!("unknown dataset {other:?}"),
     }

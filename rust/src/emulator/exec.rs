@@ -116,6 +116,14 @@ enum Backend {
     Func(MulFn),
 }
 
+/// A model's weights quantized/flattened for one plan, shareable across
+/// executors behind an `Arc`: an engine pool quantizes once
+/// ([`Executor::prepare_weights`]) and every worker adopts the same
+/// tables via [`Executor::with_prepared`] instead of re-quantizing its
+/// own copy. Cheap to clone (one atomic increment).
+#[derive(Clone)]
+pub struct PreparedWeights(Arc<BTreeMap<usize, PreparedNode>>);
+
 /// Prepared state for one quantizable node.
 enum PreparedNode {
     Fp32 {
@@ -263,7 +271,7 @@ pub struct Executor<'m> {
     plan: ExecutionPlan,
     act_scales: Vec<f32>,
     params: Vec<Tensor>,
-    prepared: BTreeMap<usize, PreparedNode>,
+    prepared: Arc<BTreeMap<usize, PreparedNode>>,
     /// value id -> index (into `model.nodes`) of its last consumer.
     last_use: BTreeMap<usize, usize>,
     scratch: Scratch,
@@ -310,6 +318,48 @@ impl<'m> Executor<'m> {
         style: Style,
         arena: ScratchArena,
     ) -> Result<Executor<'m>> {
+        let prepared = Executor::prepare_weights(model, &params, &plan, luts)?;
+        Executor::with_prepared(model, params, plan, act_scales, style, prepared, arena)
+    }
+
+    /// Quantize / flatten `params` per `plan` and resolve every node's ACU
+    /// backend — once — into a shareable [`PreparedWeights`]. An engine
+    /// pool calls this a single time and hands the same `Arc` to every
+    /// worker's [`Executor::with_prepared`].
+    pub fn prepare_weights(
+        model: &Model,
+        params: &[Tensor],
+        plan: &ExecutionPlan,
+        luts: &LutRegistry,
+    ) -> Result<PreparedWeights> {
+        if params.len() != model.params.len() {
+            bail!(
+                "model {} expects {} params, got {}",
+                model.name,
+                model.params.len(),
+                params.len()
+            );
+        }
+        Ok(PreparedWeights(Arc::new(prepare_nodes(
+            model, params, plan, luts,
+        )?)))
+    }
+
+    /// [`Executor::with_arena`], but adopting weights already quantized by
+    /// [`Executor::prepare_weights`] instead of re-quantizing. `prepared`
+    /// must have been built from the same (model, params, plan) triple —
+    /// node coverage is re-validated here, content equality is the
+    /// caller's contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_prepared(
+        model: &'m Model,
+        params: Vec<Tensor>,
+        plan: ExecutionPlan,
+        act_scales: Vec<f32>,
+        style: Style,
+        prepared: PreparedWeights,
+        arena: ScratchArena,
+    ) -> Result<Executor<'m>> {
         if params.len() != model.params.len() {
             bail!(
                 "model {} expects {} params, got {}",
@@ -327,25 +377,28 @@ impl<'m> Executor<'m> {
                 act_scales.len()
             );
         }
+        for node in &model.nodes {
+            if node.op.is_quantizable() && !prepared.0.contains_key(&node.id) {
+                bail!("prepared weights miss quantizable node {}", node.id);
+            }
+        }
         let mut last_use = BTreeMap::new();
         for (idx, node) in model.nodes.iter().enumerate() {
             for &inp in &node.inputs {
                 last_use.insert(inp, idx);
             }
         }
-        let mut ex = Executor {
+        Ok(Executor {
             model,
             style,
             plan,
             act_scales,
             params,
-            prepared: BTreeMap::new(),
+            prepared: prepared.0,
             last_use,
             scratch: arena.0,
             reuse_scratch: true,
-        };
-        ex.prepare(luts)?;
-        Ok(ex)
+        })
     }
 
     /// The plan this executor was built from.
@@ -367,93 +420,6 @@ impl<'m> Executor<'m> {
         if !reuse {
             self.scratch.pool.borrow_mut().clear();
         }
-    }
-
-    /// Quantize / flatten weights per the plan and resolve every node's
-    /// ACU backend (once).
-    fn prepare(&mut self, luts: &LutRegistry) -> Result<()> {
-        for node in &self.model.nodes {
-            if !node.op.is_quantizable() {
-                continue;
-            }
-            let mode = self
-                .plan
-                .modes
-                .get(&node.id)
-                .ok_or_else(|| anyhow!("plan missing node {}", node.id))?
-                .clone();
-            let prep = match &node.op {
-                Op::Conv2d {
-                    kh,
-                    kw,
-                    cin,
-                    cout,
-                    groups,
-                    ..
-                } => {
-                    let w = &self.params[node.params[0]];
-                    let b = &self.params[node.params[1]];
-                    let cin_g = cin / groups;
-                    let cout_g = cout / groups;
-                    let kf = kh * kw * cin_g;
-                    // Weight tensor layout is (kh, kw, cin_g, cout): slice
-                    // each group's output-channel columns.
-                    let mut flats: Vec<Vec<f32>> = vec![Vec::with_capacity(kf * cout_g); *groups];
-                    for row in 0..kf {
-                        for g in 0..*groups {
-                            let base = row * cout + g * cout_g;
-                            flats[g].extend_from_slice(&w.data[base..base + cout_g]);
-                        }
-                    }
-                    build_prepared(&mode, luts, flats, kf, cout_g, b.data.clone())?
-                }
-                Op::Linear { din, dout, .. } => {
-                    let w = &self.params[node.params[0]];
-                    let b = &self.params[node.params[1]];
-                    build_prepared(&mode, luts, vec![w.data.clone()], *din, *dout, b.data.clone())?
-                }
-                Op::Lstm { din, hidden, .. } => {
-                    let wx = &self.params[node.params[0]];
-                    let wh = &self.params[node.params[1]];
-                    let b = &self.params[node.params[2]];
-                    // Two mats: index 0 = input GEMM, 1 = recurrent GEMM.
-                    match &mode {
-                        LayerMode::Fp32 => PreparedNode::Fp32 {
-                            mats: vec![
-                                (wx.data.clone(), *din, 4 * hidden),
-                                (wh.data.clone(), *hidden, 4 * hidden),
-                            ],
-                            bias: b.data.clone(),
-                        },
-                        LayerMode::ApproxLut { acu } => {
-                            let lut = luts.get(acu)?;
-                            let bits = lut.bits;
-                            PreparedNode::Quant {
-                                mats: vec![
-                                    QuantMat::build(&wx.data, *din, 4 * hidden, bits),
-                                    QuantMat::build(&wh.data, *hidden, 4 * hidden, bits),
-                                ],
-                                bias: b.data.clone(),
-                                bits,
-                                backend: Backend::Lut(lut),
-                            }
-                        }
-                        LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
-                            mats: vec![
-                                QuantMat::build(&wx.data, *din, 4 * hidden, *bits),
-                                QuantMat::build(&wh.data, *hidden, 4 * hidden, *bits),
-                            ],
-                            bias: b.data.clone(),
-                            bits: *bits,
-                            backend: Backend::Func(func_for(*trunc_k)),
-                        },
-                    }
-                }
-                _ => unreachable!(),
-            };
-            self.prepared.insert(node.id, prep);
-        }
-        Ok(())
     }
 
     /// Pop a cleared pool buffer with capacity >= `len` (best fit), if any.
@@ -516,14 +482,16 @@ impl<'m> Executor<'m> {
 
     /// Move the input out of the value table when this node is its last
     /// consumer (elementwise ops then run in place, alloc- and copy-free);
-    /// otherwise copy it into a pooled tensor.
+    /// otherwise copy it into a pooled tensor. Taped forwards always copy —
+    /// every intermediate must survive for the backward pass.
     fn take_or_copy_f(
         &self,
         idx: usize,
         id: usize,
         vals: &mut [Option<Value>],
+        taped: bool,
     ) -> Result<Tensor> {
-        if self.last_use.get(&id) == Some(&idx) {
+        if !taped && self.last_use.get(&id) == Some(&idx) {
             match vals[id].take() {
                 Some(Value::F(t)) => return Ok(t),
                 Some(v) => {
@@ -815,7 +783,7 @@ impl<'m> Executor<'m> {
             if node.id == 0 {
                 continue;
             }
-            let v = self.exec_node(idx, node, &mut vals[..])?;
+            let v = self.exec_node(idx, node, &mut vals[..], false)?;
             // Recycle inputs whose last consumer just ran: their storage
             // backs later layers' outputs instead of hitting the allocator.
             for &inp in &node.inputs {
@@ -833,11 +801,75 @@ impl<'m> Executor<'m> {
         }
     }
 
+    /// Training-mode forward: node-by-node identical to [`forward`] (same
+    /// kernels, same quantization, same scratch buffers), but every node's
+    /// output is retained — no in-place moves, no output recycling — and
+    /// the whole value table is returned as the backward pass's tape
+    /// (index = node id; see [`crate::trainer::grad::backward`]).
+    pub fn forward_taped(&self, input: Value) -> Result<Vec<Option<Value>>> {
+        let nvals = self.model.nodes.iter().map(|n| n.id).max().unwrap_or(0) + 1;
+        let mut vals: Vec<Option<Value>> = Vec::new();
+        vals.resize_with(nvals, || None);
+        vals[0] = Some(input);
+        for (idx, node) in self.model.nodes.iter().enumerate() {
+            if node.id == 0 {
+                continue;
+            }
+            let v = self.exec_node(idx, node, &mut vals[..], true)?;
+            vals[node.id] = Some(Value::F(v));
+        }
+        Ok(vals)
+    }
+
+    /// The STE backward surface of one prepared quantizable node: per-mat
+    /// `(weights, k, n)` as the straight-through estimator sees them — the
+    /// raw fp32 mats for `Fp32` nodes, the *dequantized* quantized mats
+    /// (`wq * per-col scale`, i.e. fake-quant weights) for quant nodes —
+    /// plus the node's activation bitwidth (`None` for fp32).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn ste_mats(
+        &self,
+        node_id: usize,
+    ) -> Option<(Vec<(Vec<f32>, usize, usize)>, Option<u32>)> {
+        match self.prepared.get(&node_id)? {
+            PreparedNode::Fp32 { mats, .. } => Some((mats.clone(), None)),
+            PreparedNode::Quant { mats, bits, .. } => {
+                let dq = mats
+                    .iter()
+                    .map(|m| {
+                        let mut w = vec![0f32; m.k * m.n];
+                        for ki in 0..m.k {
+                            for (ni, o) in w[ki * m.n..(ki + 1) * m.n].iter_mut().enumerate() {
+                                *o = m.wq[ki * m.n + ni] as f32 * m.scales[ni];
+                            }
+                        }
+                        (w, m.k, m.n)
+                    })
+                    .collect();
+                Some((dq, Some(*bits)))
+            }
+        }
+    }
+
+    /// The effective activation scale a quant node's forward used for
+    /// `scale_idx` (calibrated 8-bit scale rescaled to the node's
+    /// bitwidth); `None` for fp32 nodes.
+    pub(crate) fn ste_act_scale(&self, node_id: usize, scale_idx: usize) -> Option<f32> {
+        match self.prepared.get(&node_id)? {
+            PreparedNode::Fp32 { .. } => None,
+            PreparedNode::Quant { bits, .. } => Some(
+                self.act_scales[scale_idx]
+                    * (quant::qmax_for(8) as f32 / quant::qmax_for(*bits) as f32),
+            ),
+        }
+    }
+
     fn exec_node(
         &self,
         idx: usize,
         node: &Node,
         vals: &mut [Option<Value>],
+        taped: bool,
     ) -> Result<Tensor> {
         Ok(match &node.op {
             Op::Input => unreachable!(),
@@ -849,12 +881,16 @@ impl<'m> Executor<'m> {
                 let table = &self.params[node.params[0]];
                 layers::embedding(toks, table)?
             }
-            Op::Relu => layers::relu(self.take_or_copy_f(idx, node.inputs[0], vals)?),
-            Op::Sigmoid => layers::sigmoid(self.take_or_copy_f(idx, node.inputs[0], vals)?),
-            Op::Tanh => layers::tanh(self.take_or_copy_f(idx, node.inputs[0], vals)?),
+            Op::Relu => layers::relu(self.take_or_copy_f(idx, node.inputs[0], vals, taped)?),
+            Op::Sigmoid => {
+                layers::sigmoid(self.take_or_copy_f(idx, node.inputs[0], vals, taped)?)
+            }
+            Op::Tanh => layers::tanh(self.take_or_copy_f(idx, node.inputs[0], vals, taped)?),
             Op::AvgPool2 => layers::avgpool2(get_f(vals, node.inputs[0])?),
             Op::Gap => layers::gap(get_f(vals, node.inputs[0])?),
-            Op::Flatten => layers::flatten(self.take_or_copy_f(idx, node.inputs[0], vals)?),
+            Op::Flatten => {
+                layers::flatten(self.take_or_copy_f(idx, node.inputs[0], vals, taped)?)
+            }
             Op::Add => {
                 let a = get_f(vals, node.inputs[0])?;
                 let b = get_f(vals, node.inputs[1])?;
@@ -879,7 +915,7 @@ impl<'m> Executor<'m> {
             }
             Op::SliceLast { start, end } => get_f(vals, node.inputs[0])?.slice_last(*start, *end),
             Op::Reshape { shape } => {
-                let x = self.take_or_copy_f(idx, node.inputs[0], vals)?;
+                let x = self.take_or_copy_f(idx, node.inputs[0], vals, taped)?;
                 let n = x.shape[0];
                 let mut full = vec![n];
                 full.extend_from_slice(shape);
@@ -887,6 +923,99 @@ impl<'m> Executor<'m> {
             }
         })
     }
+}
+
+/// Quantize / flatten weights per the plan and resolve every node's ACU
+/// backend — the once-per-(model, plan, params) construction behind
+/// [`Executor::prepare_weights`].
+fn prepare_nodes(
+    model: &Model,
+    params: &[Tensor],
+    plan: &ExecutionPlan,
+    luts: &LutRegistry,
+) -> Result<BTreeMap<usize, PreparedNode>> {
+    let mut prepared = BTreeMap::new();
+    for node in &model.nodes {
+        if !node.op.is_quantizable() {
+            continue;
+        }
+        let mode = plan
+            .modes
+            .get(&node.id)
+            .ok_or_else(|| anyhow!("plan missing node {}", node.id))?
+            .clone();
+        let prep = match &node.op {
+            Op::Conv2d {
+                kh,
+                kw,
+                cin,
+                cout,
+                groups,
+                ..
+            } => {
+                let w = &params[node.params[0]];
+                let b = &params[node.params[1]];
+                let cin_g = cin / groups;
+                let cout_g = cout / groups;
+                let kf = kh * kw * cin_g;
+                // Weight tensor layout is (kh, kw, cin_g, cout): slice
+                // each group's output-channel columns.
+                let mut flats: Vec<Vec<f32>> = vec![Vec::with_capacity(kf * cout_g); *groups];
+                for row in 0..kf {
+                    for g in 0..*groups {
+                        let base = row * cout + g * cout_g;
+                        flats[g].extend_from_slice(&w.data[base..base + cout_g]);
+                    }
+                }
+                build_prepared(&mode, luts, flats, kf, cout_g, b.data.clone())?
+            }
+            Op::Linear { din, dout, .. } => {
+                let w = &params[node.params[0]];
+                let b = &params[node.params[1]];
+                build_prepared(&mode, luts, vec![w.data.clone()], *din, *dout, b.data.clone())?
+            }
+            Op::Lstm { din, hidden, .. } => {
+                let wx = &params[node.params[0]];
+                let wh = &params[node.params[1]];
+                let b = &params[node.params[2]];
+                // Two mats: index 0 = input GEMM, 1 = recurrent GEMM.
+                match &mode {
+                    LayerMode::Fp32 => PreparedNode::Fp32 {
+                        mats: vec![
+                            (wx.data.clone(), *din, 4 * hidden),
+                            (wh.data.clone(), *hidden, 4 * hidden),
+                        ],
+                        bias: b.data.clone(),
+                    },
+                    LayerMode::ApproxLut { acu } => {
+                        let lut = luts.get(acu)?;
+                        let bits = lut.bits;
+                        PreparedNode::Quant {
+                            mats: vec![
+                                QuantMat::build(&wx.data, *din, 4 * hidden, bits),
+                                QuantMat::build(&wh.data, *hidden, 4 * hidden, bits),
+                            ],
+                            bias: b.data.clone(),
+                            bits,
+                            backend: Backend::Lut(lut),
+                        }
+                    }
+                    LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
+                        mats: vec![
+                            QuantMat::build(&wx.data, *din, 4 * hidden, *bits),
+                            QuantMat::build(&wh.data, *hidden, 4 * hidden, *bits),
+                        ],
+                        bias: b.data.clone(),
+                        bits: *bits,
+                        backend: Backend::Func(func_for(*trunc_k)),
+                    },
+                }
+            }
+            _ => unreachable!(),
+        };
+        prepared.insert(node.id, prep);
+    }
+    Ok(prepared)
 }
 
 fn build_prepared(

@@ -214,6 +214,72 @@ pub fn lut_opt_biased(
 }
 
 // ---------------------------------------------------------------------------
+// Backward (STE retraining) fp32 kernels
+// ---------------------------------------------------------------------------
+
+/// C (m, k) = A (m, n) @ Bᵀ where B is (k, n) row-major — the input-grad
+/// GEMM of the STE backward (`dX = dY @ Ŵᵀ`) without materializing the
+/// transpose. Both inner operands stream with unit stride. Row-parallel
+/// over m; bit-deterministic at any thread count (each output row is one
+/// worker's sequential dot products).
+pub fn fp32_a_bt(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    b: &[f32],
+    k: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * k);
+    let rows: Vec<&mut [f32]> = out.chunks_mut(k).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
+        let arow = &a[mi * n..(mi + 1) * n];
+        for (ki, o) in row.iter_mut().enumerate() {
+            let brow = &b[ki * n..(ki + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    });
+}
+
+/// C (k, n) = Aᵀ @ B where A is (m, k) and B is (m, n), both row-major —
+/// the weight-grad GEMM of the STE backward (`dW = X̂ᵀ @ dY`) without
+/// materializing the transpose. Row-parallel over k (each worker owns
+/// whole output rows), deterministic at any thread count.
+pub fn fp32_at_b(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    let rows: Vec<&mut [f32]> = out.chunks_mut(n).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |ki, row| {
+        row.fill(0.0);
+        for mi in 0..m {
+            let av = a[mi * k + ki];
+            let brow = &b[mi * n..(mi + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Functional ACU (large-bitwidth fallback, §3.4)
 // ---------------------------------------------------------------------------
 
@@ -363,6 +429,73 @@ mod tests {
         lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
         func_naive(&xq, m, k, &wq, n, m8.fun, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn a_bt_matches_materialized_transpose() {
+        let mut rng = Rng::new(21);
+        let (m, n, k) = (5, 9, 13);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.next_gauss()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_gauss()).collect();
+        // Reference: materialize Bᵀ (n, k) and run the naive GEMM.
+        let mut bt = vec![0f32; n * k];
+        for ki in 0..k {
+            for ni in 0..n {
+                bt[ni * k + ki] = b[ki * n + ni];
+            }
+        }
+        let mut want = vec![0f32; m * k];
+        fp32_naive(&a, m, n, &bt, k, &mut want);
+        for threads in [1usize, 3] {
+            let mut got = vec![0f32; m * k];
+            fp32_a_bt(&a, m, n, &b, k, threads, &mut got);
+            for (u, v) in want.iter().zip(&got) {
+                assert!((u - v).abs() < 1e-4 * (1.0 + u.abs()), "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn at_b_matches_materialized_transpose() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (7, 6, 11);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_gauss()).collect();
+        let b: Vec<f32> = (0..m * n).map(|_| rng.next_gauss()).collect();
+        let mut at = vec![0f32; k * m];
+        for mi in 0..m {
+            for ki in 0..k {
+                at[ki * m + mi] = a[mi * k + ki];
+            }
+        }
+        let mut want = vec![0f32; k * n];
+        fp32_naive(&at, k, m, &b, n, &mut want);
+        for threads in [1usize, 4] {
+            let mut got = vec![0f32; k * n];
+            fp32_at_b(&a, m, k, &b, n, threads, &mut got);
+            for (u, v) in want.iter().zip(&got) {
+                assert!((u - v).abs() < 1e-4 * (1.0 + u.abs()), "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_kernels_deterministic_across_threads() {
+        let mut rng = Rng::new(23);
+        let (m, k, n) = (13, 10, 8);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_gauss()).collect();
+        let b: Vec<f32> = (0..m * n).map(|_| rng.next_gauss()).collect();
+        let mut one = vec![0f32; k * n];
+        fp32_at_b(&a, m, k, &b, n, 1, &mut one);
+        let mut four = vec![0f32; k * n];
+        fp32_at_b(&a, m, k, &b, n, 4, &mut four);
+        assert_eq!(one, four, "at_b must be bit-identical at any thread count");
+        let g: Vec<f32> = (0..m * n).map(|_| rng.next_gauss()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_gauss()).collect();
+        let mut one = vec![0f32; m * k];
+        fp32_a_bt(&g, m, n, &w, k, 1, &mut one);
+        let mut four = vec![0f32; m * k];
+        fp32_a_bt(&g, m, n, &w, k, 4, &mut four);
+        assert_eq!(one, four, "a_bt must be bit-identical at any thread count");
     }
 
     #[test]

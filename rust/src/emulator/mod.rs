@@ -21,4 +21,4 @@
 pub mod exec;
 pub mod gemm;
 
-pub use exec::{Executor, ScratchArena, Style, Value};
+pub use exec::{Executor, PreparedWeights, ScratchArena, Style, Value};

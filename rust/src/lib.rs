@@ -44,6 +44,11 @@
 //!   the pool-parallel per-layer ACU sensitivity sweep / greedy
 //!   mixed-precision search
 //!   (`coordinator::experiments::layer_sensitivity`).
+//! * [`trainer`] — emulator-native approximation-aware retraining (QAT):
+//!   clipped-STE backward through the quantized/LUT forward
+//!   ([`emulator::Executor::forward_taped`]), SGD-with-momentum, and the
+//!   plan-aware [`trainer::fit`] loop — artifact-free, heterogeneous
+//!   mixed-ACU plans included (`adapt retrain`).
 //! * [`metrics`] — accuracy/timing metrics.
 
 pub mod coordinator;
@@ -57,6 +62,7 @@ pub mod mult;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod trainer;
 pub mod util;
 
 /// Crate-wide result type.

@@ -10,9 +10,17 @@
 //! adapt table4 [--models a,b] [--eval-batches N] [--skip-baseline]
 //! adapt ablation [--model NAME]       ACU accuracy/power sweep
 //! adapt sensitivity --model NAME [--acus a,b] [--budget PTS] [--workers N]
+//!       [--retrain-epochs N]
 //!       per-layer ACU sweep + greedy mixed-precision search
 //!       (heterogeneous plans); the sweep runs on a persistent pool of
-//!       `--workers` threads with a byte-identical plan at any count
+//!       `--workers` threads with a byte-identical plan at any count;
+//!       --retrain-epochs QAT-retrains the found plan in the same command
+//! adapt retrain --model NAME (--plan-file F | --spec S) [--epochs N]
+//!       [--lr LR] [--seed S] [--save]
+//!       emulator-native QAT retraining of any per-layer plan —
+//!       artifact-free (no PJRT), deterministic at any ADAPT_THREADS;
+//!       `--synthetic [--check-improved]` runs the bundled tiny-model
+//!       demo end to end (the CI smoke)
 //! adapt plan --model NAME [--spec "default=ACU,layer=ACU,head=fp32"]
 //!       [--out FILE]                  build/inspect a per-layer plan JSON
 //! adapt calibrate --model NAME [--calibrator max|percentile|mse|entropy]
@@ -159,12 +167,75 @@ fn run() -> Result<()> {
                 budget: args.get_f64("budget", 100.0 * defaults.budget)? / 100.0,
                 threads: args.get_usize("threads", defaults.threads)?,
                 sweep_workers: args.get_usize("workers", defaults.sweep_workers)?,
+                retrain_epochs: args.get_usize("retrain-epochs", defaults.retrain_epochs)?,
+                retrain_lr: args.get_f32("retrain-lr", defaults.retrain_lr)?,
+                seed: args.get_usize("seed", defaults.seed as usize)? as u64,
                 verbose: args.flag("verbose"),
             };
             println!(
                 "Per-layer ACU sensitivity + greedy mixed-precision search\n"
             );
             println!("{}", experiments::layer_sensitivity(&mut rt, &cfg)?);
+        }
+        "retrain" => {
+            let epochs = args.get_usize("epochs", 2)?;
+            let threads =
+                args.get_usize("threads", adapt::util::threadpool::default_threads())?;
+            let seed = args.get_usize("seed", 0x5EED)? as u64;
+            if args.flag("synthetic") {
+                // Bundled tiny-model demo: pre-train -> calibrate ->
+                // damage with a mixed-ACU plan -> QAT-retrain. Fully
+                // in-memory (no artifacts dir at all) — the CI smoke.
+                let lr = args.get_f32("lr", 0.004)?;
+                let demo = adapt::trainer::synth::demo_retrain(epochs, lr, seed, threads)?;
+                println!("{}", demo.report);
+                if args.flag("check-improved") {
+                    let (first, last) = demo.fit.improvement();
+                    if !last.is_finite() || last >= first {
+                        bail!(
+                            "retrain smoke: loss did not decrease ({first:.4} -> {last:.4})"
+                        );
+                    }
+                    println!("retrain smoke OK: loss {first:.4} -> {last:.4}");
+                }
+            } else {
+                // Artifact-free path: manifest + weights blob + the Rust
+                // engines; calibration runs on the emulator's fp32 taps.
+                let manifest = Manifest::load(&artifacts_from(&args))?;
+                let name = args.get_or("model", "small_vgg").to_string();
+                let model = manifest.model(&name)?;
+                let plan = match args.get("plan-file") {
+                    Some(path) => {
+                        let text = std::fs::read_to_string(path)
+                            .with_context(|| format!("reading plan {path}"))?;
+                        ExecutionPlan::from_json(&text, model)?
+                    }
+                    None => {
+                        let spec = args.get_or("spec", "default=mul8s_1l2h_like");
+                        let policy = Policy::parse_spec(spec)?;
+                        let unmatched = policy.unmatched_overrides(model);
+                        if !unmatched.is_empty() {
+                            bail!("--spec overrides match no layer of {name}: {unmatched:?}");
+                        }
+                        retransform(model, &policy)
+                    }
+                };
+                let cfg = experiments::RetrainConfig {
+                    model: name,
+                    sizes: sizes_from(&args)?,
+                    epochs,
+                    lr: args.get_f32("lr", 0.001)?,
+                    momentum: args.get_f32("momentum", 0.9)?,
+                    batch: args.get("batch").map(|s| s.parse()).transpose()?,
+                    seed,
+                    threads,
+                    eval_batches: args.get_usize("eval-batches", 4)?,
+                    save: args.flag("save"),
+                    verbose: args.flag("verbose"),
+                };
+                println!("Emulator-native QAT retraining (artifact-free)\n");
+                println!("{}", experiments::retrain_plan(&manifest, &plan, &cfg)?);
+            }
         }
         "plan" => {
             // Pure re-transform tooling: needs the manifest, not PJRT.
@@ -300,7 +371,9 @@ fn run() -> Result<()> {
         _ => {
             println!("adapt — AdaPT-RS coordinator. See `rust/src/main.rs` docs for subcommands.");
             println!("  specs | features | multipliers | table2 | table4 | ablation");
-            println!("  sensitivity --model M [--acus a,b] [--budget PTS] [--workers N]");
+            println!("  sensitivity --model M [--acus a,b] [--budget PTS] [--workers N] [--retrain-epochs N]");
+            println!("  retrain --model M (--plan-file F | --spec S) [--epochs N] [--lr LR] [--save]");
+            println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke)");
             println!("  plan --model M [--spec S] | calibrate --model M");
             println!("  serve --model M [--workers N] [--queue-depth D] | selftest [--model M]");
             println!("  thread defaults: env ADAPT_THREADS (else available parallelism)");

@@ -65,3 +65,9 @@ pub fn initial_path(root: &Path, model: &Model) -> std::path::PathBuf {
 pub fn trained_path(root: &Path, model: &Model) -> std::path::PathBuf {
     root.join("trained").join(format!("{}.bin", model.name))
 }
+
+/// Snapshot path for QAT-retrained weights (written by `adapt retrain` —
+/// plan-specific, so kept separate from the fp32 [`trained_path`]).
+pub fn retrained_path(root: &Path, model: &Model) -> std::path::PathBuf {
+    root.join("trained").join(format!("{}_qat.bin", model.name))
+}

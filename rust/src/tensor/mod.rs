@@ -309,6 +309,57 @@ pub fn channel_slice(x: &Tensor, c0: usize, c1: usize) -> Tensor {
     x.slice_last(c0, c1)
 }
 
+/// Adjoint of [`im2col_f32_range_into`]: scatter-**add** a patch-matrix
+/// gradient `(N*Ho*Wo, kh*kw*(c1-c0))` back onto the NHWC input gradient
+/// buffer over channels `[c0, c1)` (the conv-backward `dX` accumulation).
+/// Taps that fell on zero padding in the forward are dropped. Unlike the
+/// forward variant this *adds* into `out`, so grouped convolutions can
+/// scatter each group's patches into the same gradient buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_f32_range_add(
+    patches: &[f32],
+    shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [f32],
+) {
+    let (n, h, w, ct) = (shape[0], shape[1], shape[2], shape[3]);
+    assert!(c0 < c1 && c1 <= ct);
+    let ho = conv_out(h, kh, stride, pad);
+    let wo = conv_out(w, kw, stride, pad);
+    let c = c1 - c0;
+    let kf = kh * kw * c;
+    assert_eq!(patches.len(), n * ho * wo * kf);
+    assert_eq!(out.len(), n * h * w * ct);
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((ni * ho + oy) * wo + ox) * kf;
+                for dy in 0..kh {
+                    let iy = (oy * stride + dy) as isize - pad as isize;
+                    for dx in 0..kw {
+                        let ix = (ox * stride + dx) as isize - pad as isize;
+                        let src = row + (dy * kw + dx) * c;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let dst = ((ni * h + iy as usize) * w + ix as usize) * ct + c0;
+                            for (o, &p) in out[dst..dst + c]
+                                .iter_mut()
+                                .zip(&patches[src..src + c])
+                            {
+                                *o += p;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +439,45 @@ mod tests {
             let mut out = vec![7i32; sliced.data.len()]; // stale garbage
             im2col_i32_range_into(&x.data, &x.shape, 2, 2, 1, 1, c0, c1, &mut out);
             assert_eq!(out, sliced.data, "range {c0}..{c1}");
+        }
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // PROPERTY: <im2col(x), y> == <x, col2im(y)> for every channel
+        // range — the defining identity of the conv-backward scatter.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        let shape = [2usize, 5, 4, 3];
+        let x: Vec<f32> = (0..shape.iter().product::<usize>())
+            .map(|_| rng.next_gauss())
+            .collect();
+        for (c0, c1, kh, kw, stride, pad) in
+            [(0, 3, 3, 3, 1, 1), (1, 3, 2, 2, 2, 0), (0, 2, 3, 2, 1, 1)]
+        {
+            let c = c1 - c0;
+            let ho = conv_out(shape[1], kh, stride, pad);
+            let wo = conv_out(shape[2], kw, stride, pad);
+            let np = shape[0] * ho * wo * kh * kw * c;
+            let mut patches = vec![0f32; np];
+            im2col_f32_range_into(&x, &shape, kh, kw, stride, pad, c0, c1, &mut patches);
+            let y: Vec<f32> = (0..np).map(|_| rng.next_gauss()).collect();
+            let mut back = vec![0f32; x.len()];
+            col2im_f32_range_add(&y, &shape, kh, kw, stride, pad, c0, c1, &mut back);
+            let lhs: f64 = patches
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let rhs: f64 = x
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()),
+                "adjoint mismatch: {lhs} vs {rhs} ({c0}..{c1} k{kh}x{kw} s{stride} p{pad})"
+            );
         }
     }
 

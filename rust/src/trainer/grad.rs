@@ -1,0 +1,439 @@
+//! Clipped-STE backward pass through the emulator's approximate forward.
+//!
+//! The forward ran real ACU products ([`Executor::forward_taped`]); the
+//! backward differentiates the *exact* GEMM over the fake-quantized
+//! operands with straight-through estimators through both quantizers —
+//! the paper's fake-quant training scheme, mirroring the Python
+//! `nn._ste_matmul_for` custom VJP:
+//!
+//! ```text
+//! dX = (dY @ Ŵᵀ) · 1[|x| ≤ s_a · qmax]      (clipped STE over activations)
+//! dW = X̂ᵀ @ dY                              (per-col weight scales never clip)
+//! ```
+//!
+//! where `X̂ = dequant(quant(X))` and `Ŵ` is read straight off the
+//! executor's prepared tables ([`Executor::ste_mats`]) so the backward
+//! surface is exactly the forward's quantization. The transpose GEMMs are
+//! the [`gemm::fp32_a_bt`] / [`gemm::fp32_at_b`] kernels; conv gradients
+//! flow through im2col / [`col2im_f32_range_add`]. All workspaces live in
+//! a grow-only [`Workspace`] (the trainer's scratch arena).
+//!
+//! Determinism: every kernel computes each output row sequentially on one
+//! worker, so gradients are bit-identical at any thread count.
+
+use anyhow::{Context, Result};
+
+use crate::emulator::{gemm, Executor, Value};
+use crate::graph::{Node, Op};
+use crate::quant;
+use crate::tensor::{col2im_f32_range_add, conv_out, im2col_f32_range_into, Tensor};
+
+/// Grow-only backward workspaces: sized by the largest layer on first
+/// use, reused by every later layer, batch and epoch (same grow-only
+/// contract as the executor's scratch arena).
+#[derive(Default)]
+pub struct Workspace {
+    patches: Vec<f32>,
+    dyg: Vec<f32>,
+    dwg: Vec<f32>,
+    dpatch: Vec<f32>,
+}
+
+fn grab(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
+}
+
+fn tape_f(tape: &[Option<Value>], id: usize) -> Result<&Tensor> {
+    match tape.get(id).and_then(|v| v.as_ref()) {
+        Some(Value::F(t)) => Ok(t),
+        _ => anyhow::bail!("tape missing f32 value {id}"),
+    }
+}
+
+/// Add `t` into a gradient slot (first write moves, later writes sum —
+/// the fan-out rule for values consumed by several nodes).
+fn accum(slot: &mut Option<Tensor>, t: Tensor) -> Result<()> {
+    match slot {
+        None => *slot = Some(t),
+        Some(prev) => {
+            anyhow::ensure!(
+                prev.shape == t.shape,
+                "gradient shape mismatch: {:?} vs {:?}",
+                prev.shape,
+                t.shape
+            );
+            for (a, &b) in prev.data.iter_mut().zip(&t.data) {
+                *a += b;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `x̂ = dequant(quant(x))` for quant nodes; `x` itself for fp32 nodes.
+fn fake_quant_tensor(x: &Tensor, sa: Option<f32>, bits: Option<u32>) -> Tensor {
+    match (sa, bits) {
+        (Some(sa), Some(bits)) => {
+            let mut t = x.clone();
+            for v in &mut t.data {
+                *v = quant::fake_quant(*v, sa, bits);
+            }
+            t
+        }
+        _ => x.clone(),
+    }
+}
+
+/// Clipped-STE mask: gradients stop where the activation quantizer
+/// saturated (|x| beyond the representable range). No-op for fp32 nodes.
+fn apply_clip_mask(dx: &mut Tensor, x: &Tensor, sa: Option<f32>, bits: Option<u32>) {
+    if let (Some(sa), Some(bits)) = (sa, bits) {
+        let lim = sa * quant::qmax_for(bits) as f32;
+        for (g, &v) in dx.data.iter_mut().zip(&x.data) {
+            if v.abs() > lim {
+                *g = 0.0;
+            }
+        }
+    }
+}
+
+/// Gradients of one backward pass.
+pub struct Gradients {
+    /// One gradient tensor per model parameter (manifest order).
+    pub params: Vec<Tensor>,
+    /// dL/d(network input) — `None` when no gradient reached the input
+    /// node (e.g. the first consumer is an embedding).
+    pub input: Option<Tensor>,
+}
+
+/// Run the clipped-STE backward over one taped forward.
+///
+/// * `exec` — the executor that produced `tape`; its prepared (quantized)
+///   weights are the fake-quant surface the STE differentiates through.
+/// * `tape` — value table from [`Executor::forward_taped`].
+/// * `d_out` — dL/d(output) from [`super::loss_and_grad`].
+///
+/// LSTM and embedding nodes are rejected — those models retrain on the
+/// PJRT path.
+pub fn backward(
+    exec: &Executor,
+    tape: &[Option<Value>],
+    d_out: Tensor,
+    threads: usize,
+    ws: &mut Workspace,
+) -> Result<Gradients> {
+    let model = exec.model;
+    let threads = threads.max(1);
+    let mut grads: Vec<Option<Tensor>> = Vec::new();
+    grads.resize_with(tape.len(), || None);
+    let last = model.nodes.last().context("empty model")?.id;
+    grads[last] = Some(d_out);
+    let mut pgrads: Vec<Tensor> = model
+        .params
+        .iter()
+        .map(|s| Tensor::zeros(&s.shape))
+        .collect();
+
+    for node in model.nodes.iter().rev() {
+        if matches!(node.op, Op::Input) {
+            continue;
+        }
+        let Some(dy) = grads[node.id].take() else {
+            continue; // this branch never reaches the loss
+        };
+        match &node.op {
+            Op::Conv2d { .. } => {
+                let x = tape_f(tape, node.inputs[0])?;
+                let dx = conv_backward(exec, node, x, &dy, &mut pgrads, threads, ws)?;
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Linear { .. } => {
+                let x = tape_f(tape, node.inputs[0])?;
+                let dx = linear_backward(exec, node, x, &dy, &mut pgrads, threads, ws)?;
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Relu => {
+                let y = tape_f(tape, node.id)?;
+                let mut dx = dy;
+                for (g, &v) in dx.data.iter_mut().zip(&y.data) {
+                    if v <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Sigmoid => {
+                let y = tape_f(tape, node.id)?;
+                let mut dx = dy;
+                for (g, &v) in dx.data.iter_mut().zip(&y.data) {
+                    *g *= v * (1.0 - v);
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Tanh => {
+                let y = tape_f(tape, node.id)?;
+                let mut dx = dy;
+                for (g, &v) in dx.data.iter_mut().zip(&y.data) {
+                    *g *= 1.0 - v * v;
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::AvgPool2 => {
+                let x = tape_f(tape, node.inputs[0])?;
+                let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+                let (ho, wo) = (h / 2, w / 2);
+                let mut dx = Tensor::zeros(&x.shape);
+                for ni in 0..n {
+                    for oy in 0..ho {
+                        for ox in 0..wo {
+                            for ci in 0..c {
+                                let g = dy.data[((ni * ho + oy) * wo + ox) * c + ci] * 0.25;
+                                for py in 0..2 {
+                                    for px in 0..2 {
+                                        dx.data[((ni * h + oy * 2 + py) * w + ox * 2 + px) * c
+                                            + ci] += g;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Gap => {
+                let x = tape_f(tape, node.inputs[0])?;
+                let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+                let inv = 1.0 / (h * w) as f32;
+                let mut dx = Tensor::zeros(&x.shape);
+                for ni in 0..n {
+                    for yi in 0..h {
+                        for xi in 0..w {
+                            for ci in 0..c {
+                                dx.data[((ni * h + yi) * w + xi) * c + ci] =
+                                    dy.data[ni * c + ci] * inv;
+                            }
+                        }
+                    }
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Flatten | Op::Reshape { .. } => {
+                let x = tape_f(tape, node.inputs[0])?;
+                accum(&mut grads[node.inputs[0]], dy.reshape(&x.shape)?)?;
+            }
+            Op::Add => {
+                accum(&mut grads[node.inputs[0]], dy.clone())?;
+                accum(&mut grads[node.inputs[1]], dy)?;
+            }
+            Op::Concat => {
+                let mut start = 0usize;
+                for &inp in &node.inputs {
+                    let ci = *tape_f(tape, inp)?.shape.last().context("concat input rank")?;
+                    accum(&mut grads[inp], dy.slice_last(start, start + ci))?;
+                    start += ci;
+                }
+            }
+            Op::ChannelShuffle { groups } => {
+                // Forward maps src[gi*cg + ci] -> dst[ci*g + gi]; the
+                // adjoint applies the inverse permutation to dY.
+                let c = *dy.shape.last().context("shuffle rank")?;
+                let cg = c / groups;
+                let rows = dy.data.len() / c;
+                let mut dx = Tensor::zeros(&dy.shape);
+                for r in 0..rows {
+                    let src = &dy.data[r * c..(r + 1) * c];
+                    let dst = &mut dx.data[r * c..(r + 1) * c];
+                    for gi in 0..*groups {
+                        for ci in 0..cg {
+                            dst[gi * cg + ci] = src[ci * groups + gi];
+                        }
+                    }
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::SliceLast { start, end } => {
+                let x = tape_f(tape, node.inputs[0])?;
+                let c = *x.shape.last().context("slice rank")?;
+                let width = end - start;
+                let rows = x.data.len() / c;
+                let mut dx = Tensor::zeros(&x.shape);
+                for r in 0..rows {
+                    dx.data[r * c + start..r * c + end]
+                        .copy_from_slice(&dy.data[r * width..(r + 1) * width]);
+                }
+                accum(&mut grads[node.inputs[0]], dx)?;
+            }
+            Op::Lstm { .. } | Op::Embedding { .. } => anyhow::bail!(
+                "node {} ({:?}-family) is not supported by the emulator trainer; \
+                 LSTM/text models retrain on the PJRT QAT path",
+                node.id,
+                node.op
+            ),
+            Op::Input => unreachable!(),
+        }
+    }
+    let input = grads.first_mut().and_then(|slot| slot.take());
+    Ok(Gradients {
+        params: pgrads,
+        input,
+    })
+}
+
+/// STE backward of one conv node: per group, `dW = patchesᵀ @ dY_g`,
+/// `dPatches = dY_g @ Ŵᵀ` scattered back through col2im, bias = column
+/// sums of `dY_g`.
+#[allow(clippy::too_many_arguments)]
+fn conv_backward(
+    exec: &Executor,
+    node: &Node,
+    x: &Tensor,
+    dy: &Tensor,
+    pgrads: &mut [Tensor],
+    threads: usize,
+    ws: &mut Workspace,
+) -> Result<Tensor> {
+    let (kh, kw, cin, cout, stride, pad, groups, scale_idx) = match &node.op {
+        Op::Conv2d {
+            kh,
+            kw,
+            cin,
+            cout,
+            stride,
+            pad,
+            groups,
+            scale_idx,
+            ..
+        } => (*kh, *kw, *cin, *cout, *stride, *pad, *groups, *scale_idx),
+        _ => unreachable!(),
+    };
+    let (n, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    anyhow::ensure!(x.shape[3] == cin, "conv-backward input channels");
+    let ho = conv_out(h, kh, stride, pad);
+    let wo = conv_out(w, kw, stride, pad);
+    let cin_g = cin / groups;
+    let cout_g = cout / groups;
+    let kf = kh * kw * cin_g;
+    let m = n * ho * wo;
+    anyhow::ensure!(dy.data.len() == m * cout, "conv-backward dY size");
+
+    let (mats, bits) = exec.ste_mats(node.id).context("conv node not prepared")?;
+    let sa = exec.ste_act_scale(node.id, scale_idx);
+    let xhat = fake_quant_tensor(x, sa, bits);
+
+    let mut dx = Tensor::zeros(&x.shape);
+    for g in 0..groups {
+        let (wg, wk, wn) = &mats[g];
+        anyhow::ensure!(
+            *wk == kf && *wn == cout_g,
+            "conv-backward weight mat shape"
+        );
+        let patches = grab(&mut ws.patches, m * kf);
+        im2col_f32_range_into(
+            &xhat.data,
+            &x.shape,
+            kh,
+            kw,
+            stride,
+            pad,
+            g * cin_g,
+            (g + 1) * cin_g,
+            patches,
+        );
+        // Gather this group's dY columns into a dense (m, cout_g) block.
+        let dyg = grab(&mut ws.dyg, m * cout_g);
+        for mi in 0..m {
+            let src = mi * cout + g * cout_g;
+            dyg[mi * cout_g..(mi + 1) * cout_g].copy_from_slice(&dy.data[src..src + cout_g]);
+        }
+        // dW_g = patchesᵀ @ dY_g, scattered into the (kh*kw*cin_g, cout)
+        // weight-parameter layout (inverse of the prepare-time flatten).
+        let dwg = grab(&mut ws.dwg, kf * cout_g);
+        gemm::fp32_at_b(patches, m, kf, dyg, cout_g, threads, dwg);
+        let pw = &mut pgrads[node.params[0]];
+        for row in 0..kf {
+            let dst = row * cout + g * cout_g;
+            let src = row * cout_g;
+            for ci in 0..cout_g {
+                pw.data[dst + ci] += dwg[src + ci];
+            }
+        }
+        // Bias grads: column sums of dY_g.
+        let pb = &mut pgrads[node.params[1]];
+        for mi in 0..m {
+            let src = mi * cout_g;
+            for ci in 0..cout_g {
+                pb.data[g * cout_g + ci] += dyg[src + ci];
+            }
+        }
+        // dPatches = dY_g @ Ŵᵀ, scatter-added back onto dX.
+        let dpatch = grab(&mut ws.dpatch, m * kf);
+        gemm::fp32_a_bt(dyg, m, cout_g, wg, kf, threads, dpatch);
+        col2im_f32_range_add(
+            dpatch,
+            &x.shape,
+            kh,
+            kw,
+            stride,
+            pad,
+            g * cin_g,
+            (g + 1) * cin_g,
+            &mut dx.data,
+        );
+    }
+    apply_clip_mask(&mut dx, x, sa, bits);
+    Ok(dx)
+}
+
+/// STE backward of one linear node.
+#[allow(clippy::too_many_arguments)]
+fn linear_backward(
+    exec: &Executor,
+    node: &Node,
+    x: &Tensor,
+    dy: &Tensor,
+    pgrads: &mut [Tensor],
+    threads: usize,
+    ws: &mut Workspace,
+) -> Result<Tensor> {
+    let (din, dout, scale_idx) = match &node.op {
+        Op::Linear {
+            din,
+            dout,
+            scale_idx,
+            ..
+        } => (*din, *dout, *scale_idx),
+        _ => unreachable!(),
+    };
+    let m = x.shape[0];
+    anyhow::ensure!(x.data.len() == m * din, "linear-backward input shape");
+    anyhow::ensure!(dy.data.len() == m * dout, "linear-backward dY shape");
+
+    let (mats, bits) = exec.ste_mats(node.id).context("linear node not prepared")?;
+    let sa = exec.ste_act_scale(node.id, scale_idx);
+    let xhat = fake_quant_tensor(x, sa, bits);
+    let (wg, _, _) = &mats[0];
+
+    // dW = X̂ᵀ @ dY.
+    let dwg = grab(&mut ws.dwg, din * dout);
+    gemm::fp32_at_b(&xhat.data, m, din, &dy.data, dout, threads, dwg);
+    let pw = &mut pgrads[node.params[0]];
+    for (o, &g) in pw.data.iter_mut().zip(dwg.iter()) {
+        *o += g;
+    }
+    // Bias grads: column sums of dY.
+    let pb = &mut pgrads[node.params[1]];
+    for mi in 0..m {
+        let row = &dy.data[mi * dout..(mi + 1) * dout];
+        for (o, &g) in pb.data.iter_mut().zip(row) {
+            *o += g;
+        }
+    }
+    // dX = dY @ Ŵᵀ, clipped-STE-masked.
+    let mut dx = Tensor::zeros(&x.shape);
+    gemm::fp32_a_bt(&dy.data, m, dout, wg, din, threads, &mut dx.data);
+    apply_clip_mask(&mut dx, x, sa, bits);
+    Ok(dx)
+}

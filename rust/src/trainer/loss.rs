@@ -1,0 +1,160 @@
+//! Training losses + their gradients (mirrors `python/compile/train.py`'s
+//! `loss_value` exactly, including the VAE clip behavior).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Trainable loss families (the manifest's `loss` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// Softmax cross-entropy over logits (classifiers): `-mean(logp[y])`.
+    CrossEntropy,
+    /// Mean binary cross-entropy of the reconstruction vs the (clipped)
+    /// input (the deterministic-AE objective of the VAE models).
+    Vae,
+}
+
+impl LossKind {
+    pub fn parse(loss: &str) -> Result<LossKind> {
+        match loss {
+            "ce" => Ok(LossKind::CrossEntropy),
+            "vae" => Ok(LossKind::Vae),
+            other => bail!("model loss {other:?} is not trainable by the emulator trainer"),
+        }
+    }
+}
+
+/// Scalar loss + `dL/d(out)`. `labels` drive cross-entropy; `target` (the
+/// flat input batch) drives the VAE reconstruction loss and is ignored by
+/// CE (pass `&[]`).
+pub fn loss_and_grad(
+    kind: LossKind,
+    out: &Tensor,
+    labels: &[i32],
+    target: &[f32],
+) -> Result<(f32, Tensor)> {
+    match kind {
+        LossKind::CrossEntropy => {
+            let n = labels.len();
+            anyhow::ensure!(n > 0 && out.data.len() % n == 0, "bad logits shape");
+            let c = out.data.len() / n;
+            let mut grad = Tensor::zeros(&out.shape);
+            let mut loss = 0.0f64;
+            let inv = 1.0 / n as f32;
+            for (i, &label) in labels.iter().enumerate() {
+                let row = &out.data[i * c..(i + 1) * c];
+                let y = label as usize;
+                anyhow::ensure!(y < c, "label {y} out of range {c}");
+                let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                let mut se = 0.0f32;
+                for &v in row {
+                    se += (v - mx).exp();
+                }
+                let lse = mx + se.ln();
+                loss += (lse - row[y]) as f64;
+                let grow = &mut grad.data[i * c..(i + 1) * c];
+                for (g, &v) in grow.iter_mut().zip(row) {
+                    *g = ((v - mx).exp() / se) * inv;
+                }
+                grow[y] -= inv;
+            }
+            Ok(((loss / n as f64) as f32, grad))
+        }
+        LossKind::Vae => {
+            anyhow::ensure!(
+                out.data.len() == target.len(),
+                "reconstruction/target length mismatch: {} vs {}",
+                out.data.len(),
+                target.len()
+            );
+            let n_tot = out.data.len().max(1);
+            let inv = 1.0 / n_tot as f32;
+            let mut grad = Tensor::zeros(&out.shape);
+            let mut loss = 0.0f64;
+            for ((g, &o), &t0) in grad.data.iter_mut().zip(&out.data).zip(target) {
+                let t = t0.clamp(0.0, 1.0);
+                let r = o.clamp(1e-6, 1.0 - 1e-6);
+                loss -= (t * r.ln() + (1.0 - t) * (1.0 - r).ln()) as f64;
+                // Clip STE: the forward clamped `out` into (1e-6, 1-1e-6);
+                // gradients vanish where that clamp saturated.
+                *g = if o > 1e-6 && o < 1.0 - 1e-6 {
+                    (r - t) / (r * (1.0 - r)) * inv
+                } else {
+                    0.0
+                };
+            }
+            Ok(((loss / n_tot as f64) as f32, grad))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_loss_and_grad_against_finite_differences() {
+        let out = Tensor::from_vec(&[2, 3], vec![0.2, -0.4, 1.1, -0.8, 0.3, 0.05]).unwrap();
+        let labels = [2i32, 1];
+        let (loss, grad) = loss_and_grad(LossKind::CrossEntropy, &out, &labels, &[]).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        // Grad rows sum to zero (softmax minus one-hot, both mass 1/n).
+        for i in 0..2 {
+            let s: f32 = grad.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "row {i} grad sum {s}");
+        }
+        let eps = 1e-3f32;
+        for j in 0..6 {
+            let mut plus = out.clone();
+            plus.data[j] += eps;
+            let mut minus = out.clone();
+            minus.data[j] -= eps;
+            let (lp, _) = loss_and_grad(LossKind::CrossEntropy, &plus, &labels, &[]).unwrap();
+            let (lm, _) = loss_and_grad(LossKind::CrossEntropy, &minus, &labels, &[]).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad.data[j]).abs() < 1e-3 + 0.02 * fd.abs(),
+                "d[{j}]: fd {fd} vs analytic {}",
+                grad.data[j]
+            );
+        }
+    }
+
+    #[test]
+    fn vae_loss_and_grad_against_finite_differences() {
+        let out = Tensor::from_vec(&[1, 4], vec![0.3, 0.7, 0.5, 0.9]).unwrap();
+        let target = [0.0f32, 1.0, 0.5, 1.0];
+        let (loss, grad) = loss_and_grad(LossKind::Vae, &out, &[], &target).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        let eps = 1e-3f32;
+        for j in 0..4 {
+            let mut plus = out.clone();
+            plus.data[j] += eps;
+            let mut minus = out.clone();
+            minus.data[j] -= eps;
+            let (lp, _) = loss_and_grad(LossKind::Vae, &plus, &[], &target).unwrap();
+            let (lm, _) = loss_and_grad(LossKind::Vae, &minus, &[], &target).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad.data[j]).abs() < 2e-3 + 0.02 * fd.abs(),
+                "d[{j}]: fd {fd} vs analytic {}",
+                grad.data[j]
+            );
+        }
+    }
+
+    #[test]
+    fn vae_grad_vanishes_where_clipped() {
+        let out = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]).unwrap();
+        let target = [1.0f32, 0.0];
+        let (_, grad) = loss_and_grad(LossKind::Vae, &out, &[], &target).unwrap();
+        assert_eq!(grad.data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn unknown_loss_is_rejected() {
+        assert!(LossKind::parse("none").is_err());
+        assert_eq!(LossKind::parse("ce").unwrap(), LossKind::CrossEntropy);
+    }
+}

@@ -1,0 +1,336 @@
+//! Emulator-native approximation-aware retraining (QAT) — §3.2.1 without
+//! the PJRT artifact path.
+//!
+//! The paper's second headline claim is error *recovery*: after swapping
+//! exact multipliers for approximate ones, a short retraining run under
+//! the approximate forward wins back most of the lost accuracy. The AOT
+//! train-step executables implement that on XLA, but they are dead in
+//! offline builds (the vendored `xla` stub cannot create a PJRT client)
+//! and they only know the single-global-LUT plan. This subsystem makes
+//! retraining a first-class citizen of the Rust emulator instead:
+//!
+//! * **Forward** — exactly what [`Executor::forward`] computes (the same
+//!   kernels run, via [`Executor::forward_taped`], which retains every
+//!   node output as the tape). Heterogeneous mixed-ACU plans train as-is.
+//! * **Backward** — clipped straight-through estimators through the
+//!   quantizers and exact fp32 GEMM transposes over the *fake-quantized*
+//!   operands ([`grad::backward`]), mirroring the Python
+//!   `nn._ste_matmul_for` custom-VJP formula bit for bit in structure:
+//!   `dX = (dY @ Ŵᵀ) · 1[|x| ≤ s·qmax]`, `dW = X̂ᵀ @ dY`.
+//! * **Optimizer** — SGD with momentum ([`sgd::SgdMomentum`]), the same
+//!   `v ← μv + g; p ← p − lr·v` update the train-step artifacts bake in.
+//! * **Loop** — [`fit`]: seeded epoch shuffles ([`crate::util::rng`]),
+//!   plan-aware re-quantization of the weights every step (that is what
+//!   QAT means here), per-epoch loss means. Deterministic for a fixed
+//!   seed at *any* thread count: every GEMM kernel (forward and backward)
+//!   computes each output row sequentially on one worker.
+//!
+//! Everything here is artifact-free: tests, benches and the
+//! `adapt retrain --synthetic` CI smoke run it with in-memory models
+//! ([`synth`]); `adapt retrain` proper needs only the manifest + a
+//! weights blob (no HLO artifacts, no PJRT). LSTM/text models keep using
+//! the PJRT QAT path — their backward is not implemented here.
+
+pub mod grad;
+pub mod loss;
+pub mod sgd;
+pub mod synth;
+
+pub use grad::{backward, Gradients, Workspace};
+pub use loss::{loss_and_grad, LossKind};
+pub use sgd::SgdMomentum;
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::Split;
+use crate::emulator::{Executor, ScratchArena, Style, Value};
+use crate::graph::{retransform, ExecutionPlan, LayerMode, Model, Op, Policy};
+use crate::lut::LutRegistry;
+use crate::metrics;
+use crate::quant::calib::{Calibrator, CalibratorKind, HistogramCalibrator};
+use crate::tensor::{im2col_f32, Tensor};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters of [`fit`].
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub batch: usize,
+    /// Seed for the per-epoch shuffles (fixed seed ⇒ bit-identical run).
+    pub seed: u64,
+    /// GEMM threads (forward + backward kernels).
+    pub threads: usize,
+    /// Cap on batches per epoch (`None` = the full split).
+    pub max_batches: Option<usize>,
+    /// Progress line every N steps on stderr (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            epochs: 2,
+            lr: 1e-3,
+            momentum: 0.9,
+            batch: 32,
+            seed: 0x5EED,
+            threads: crate::util::threadpool::default_threads(),
+            max_batches: None,
+            log_every: 0,
+        }
+    }
+}
+
+/// Outcome of a [`fit`] run.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    /// Updated parameters (manifest order).
+    pub params: Vec<Tensor>,
+    pub steps: usize,
+    pub wall: Duration,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    /// Per-step training losses.
+    pub losses: Vec<f32>,
+    /// Mean training loss per epoch.
+    pub epoch_losses: Vec<f32>,
+}
+
+impl FitResult {
+    /// `(first, last)` epoch-mean losses — the pair smoke checks assert
+    /// decreased. Falls back to the first/last *step* losses when fewer
+    /// than two epochs ran.
+    pub fn improvement(&self) -> (f32, f32) {
+        if self.epoch_losses.len() >= 2 {
+            (
+                self.epoch_losses[0],
+                *self.epoch_losses.last().expect("non-empty"),
+            )
+        } else {
+            (self.first_loss, self.last_loss)
+        }
+    }
+}
+
+/// Plan-aware QAT training loop: SGD-with-momentum through the emulator's
+/// approximate forward and the clipped-STE backward, over any
+/// [`ExecutionPlan`] — heterogeneous mixed-ACU plans included.
+///
+/// Weights are re-quantized from the fp32 master copy every step (the
+/// executor rebuild threads one warm [`ScratchArena`] through the whole
+/// run). `act_scales` may be empty iff the plan is all-fp32, which makes
+/// this double as the plain fp32 pre-training loop.
+pub fn fit(
+    model: &Model,
+    params: Vec<Tensor>,
+    plan: &ExecutionPlan,
+    act_scales: &[f32],
+    luts: &LutRegistry,
+    train: &Split,
+    cfg: &TrainConfig,
+) -> Result<FitResult> {
+    let kind = LossKind::parse(&model.loss)?;
+    anyhow::ensure!(
+        !train.is_tokens,
+        "emulator trainer supports f32-input models (use the PJRT QAT path for token models)"
+    );
+    anyhow::ensure!(cfg.epochs > 0, "fit needs at least one epoch");
+    anyhow::ensure!(train.num > 0, "fit needs a non-empty training split");
+    let bs = cfg.batch.max(1);
+    let per: usize = train.sample_shape.iter().product();
+    let nb_full = (train.num / bs).max(1);
+    let nb = cfg.max_batches.map_or(nb_full, |m| m.min(nb_full)).max(1);
+    let threads = cfg.threads.max(1);
+    let needs_target = matches!(kind, LossKind::Vae);
+    let last = model.nodes.last().context("empty model")?.id;
+
+    let mut params = params;
+    let mut opt = SgdMomentum::new(cfg.lr, cfg.momentum, &params);
+    let mut ws = Workspace::default();
+    let mut arena = ScratchArena::new();
+    let mut rng = Rng::new(cfg.seed);
+    let mut order: Vec<usize> = (0..train.num).collect();
+
+    let mut shape = vec![bs];
+    shape.extend_from_slice(&train.sample_shape);
+
+    let mut losses = Vec::with_capacity(cfg.epochs * nb);
+    let mut epoch_losses = Vec::with_capacity(cfg.epochs);
+    let t0 = Instant::now();
+    for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut esum = 0.0f64;
+        for bi in 0..nb {
+            // Gather the shuffled batch.
+            let mut flat = Vec::with_capacity(bs * per);
+            let mut labels = Vec::with_capacity(bs);
+            for i in 0..bs {
+                let idx = order[(bi * bs + i) % train.num];
+                flat.extend_from_slice(&train.x_f[idx * per..(idx + 1) * per]);
+                labels.push(train.labels[idx]);
+            }
+            let x = Tensor::from_vec(&shape, flat)?;
+            let target: &[f32] = if needs_target { &x.data } else { &[] };
+
+            // QAT step: re-quantize the current weights, run the
+            // approximate forward with a tape, STE backward, SGD update.
+            let exec = Executor::with_arena(
+                model,
+                params.clone(),
+                plan.clone(),
+                act_scales.to_vec(),
+                luts,
+                Style::Optimized { threads },
+                arena,
+            )?;
+            let tape = exec.forward_taped(Value::F(x.clone()))?;
+            let out = match tape.get(last).and_then(|v| v.as_ref()) {
+                Some(Value::F(t)) => t,
+                _ => anyhow::bail!("model output missing from tape"),
+            };
+            let (loss, d_out) = loss_and_grad(kind, out, &labels, target)?;
+            anyhow::ensure!(
+                loss.is_finite(),
+                "{} diverged at epoch {epoch} step {bi} (loss {loss})",
+                model.name
+            );
+            let pgrads = backward(&exec, &tape, d_out, threads, &mut ws)?;
+            drop(tape);
+            arena = exec.into_arena();
+            opt.step(&mut params, &pgrads.params);
+
+            losses.push(loss);
+            esum += loss as f64;
+            if cfg.log_every > 0 && losses.len() % cfg.log_every == 0 {
+                eprintln!("[fit {}] epoch {epoch} step {bi} loss {loss:.4}", model.name);
+            }
+        }
+        epoch_losses.push((esum / nb as f64) as f32);
+    }
+    Ok(FitResult {
+        params,
+        steps: losses.len(),
+        wall: t0.elapsed(),
+        first_loss: losses.first().copied().unwrap_or(f32::NAN),
+        last_loss: losses.last().copied().unwrap_or(f32::NAN),
+        losses,
+        epoch_losses,
+    })
+}
+
+/// Accuracy of `(params, plan)` over up to `max_batches` of a split — the
+/// trainer-side evaluation loop (same metric dispatch as the sweep core).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate(
+    model: &Model,
+    params: Vec<Tensor>,
+    plan: &ExecutionPlan,
+    act_scales: &[f32],
+    luts: &LutRegistry,
+    split: &Split,
+    batch: usize,
+    max_batches: usize,
+    threads: usize,
+) -> Result<f64> {
+    let bs = batch.max(1);
+    let nb = split.n_batches(bs).max(1).min(max_batches.max(1));
+    let exec = Executor::new(
+        model,
+        params,
+        plan.clone(),
+        act_scales.to_vec(),
+        luts,
+        Style::Optimized {
+            threads: threads.max(1),
+        },
+    )?;
+    let mut acc = 0.0f64;
+    let mut samples = 0usize;
+    for bi in 0..nb {
+        let x = split.batch_tensor(bi, bs);
+        let out = exec.forward(Value::F(x))?;
+        let labels = split.batch_labels(bi, bs);
+        let target = if model.metric == "pixel" {
+            split.batch_f(bi, bs)
+        } else {
+            vec![]
+        };
+        let od = out.data.len() / bs;
+        acc += metrics::compute(&model.metric, &out.data, od, &labels, &target) * bs as f64;
+        samples += bs;
+    }
+    Ok(acc / samples.max(1) as f64)
+}
+
+/// Artifact-free post-training calibration: run the *fp32* forward on the
+/// Rust executor and stream every quantizable GEMM's input (the im2col
+/// patch matrix for convs, the activation matrix for linears) into a
+/// per-scale histogram calibrator — the emulator-side mirror of the PJRT
+/// `acts` tap path ([`crate::coordinator::ops::calibrate`]).
+#[allow(clippy::too_many_arguments)]
+pub fn calibrate_emulator(
+    model: &Model,
+    params: &[Tensor],
+    split: &Split,
+    batch: usize,
+    batches: usize,
+    kind: CalibratorKind,
+    percentile: f64,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let plan = retransform(model, &Policy::all(LayerMode::Fp32));
+    let luts = LutRegistry::in_memory();
+    let exec = Executor::new(
+        model,
+        params.to_vec(),
+        plan,
+        vec![],
+        &luts,
+        Style::Optimized {
+            threads: threads.max(1),
+        },
+    )?;
+    let mut calibs: Vec<HistogramCalibrator> = (0..model.n_scales)
+        .map(|_| HistogramCalibrator::new(kind).with_percentile(percentile))
+        .collect();
+    let bs = batch.max(1);
+    let tape_f = |tape: &[Option<Value>], id: usize| -> Result<Tensor> {
+        match tape.get(id).and_then(|v| v.as_ref()) {
+            Some(Value::F(t)) => Ok(t.clone()),
+            _ => anyhow::bail!("calibration tape missing f32 value {id}"),
+        }
+    };
+    for bi in 0..batches.max(1) {
+        let tape = exec.forward_taped(Value::F(split.batch_tensor(bi, bs)))?;
+        for node in &model.nodes {
+            match &node.op {
+                Op::Conv2d {
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    scale_idx,
+                    ..
+                } => {
+                    let xin = tape_f(&tape, node.inputs[0])?;
+                    let patches = im2col_f32(&xin, *kh, *kw, *stride, *pad);
+                    calibs[*scale_idx].observe(&patches.data);
+                }
+                Op::Linear { scale_idx, .. } => {
+                    let xin = tape_f(&tape, node.inputs[0])?;
+                    calibs[*scale_idx].observe(&xin.data);
+                }
+                Op::Lstm { .. } => anyhow::bail!(
+                    "LSTM models are not supported by the emulator calibration \
+                     (use the PJRT `acts` path)"
+                ),
+                _ => {}
+            }
+        }
+    }
+    Ok(calibs.iter().map(|c| c.scale(8)).collect())
+}

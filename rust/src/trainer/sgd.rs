@@ -1,0 +1,65 @@
+//! SGD with momentum over `runtime::weights`-style fp32 parameter lists —
+//! the exact update the AOT train-step executables bake in
+//! (`python/compile/train.py`): `v ← μ·v + g ; p ← p − lr·v`.
+
+use crate::tensor::Tensor;
+
+/// SGD-with-momentum state: one velocity buffer per parameter tensor.
+pub struct SgdMomentum {
+    pub lr: f32,
+    pub momentum: f32,
+    vel: Vec<Vec<f32>>,
+}
+
+impl SgdMomentum {
+    /// Zero-initialized velocities shaped like `params`.
+    pub fn new(lr: f32, momentum: f32, params: &[Tensor]) -> SgdMomentum {
+        SgdMomentum {
+            lr,
+            momentum,
+            vel: params.iter().map(|p| vec![0.0; p.data.len()]).collect(),
+        }
+    }
+
+    /// One update step. `grads` must align with `params` (same order and
+    /// shapes — the `backward` contract).
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.vel.iter_mut()) {
+            debug_assert_eq!(p.data.len(), g.data.len());
+            for ((pv, &gv), vv) in p.data.iter_mut().zip(&g.data).zip(v.iter_mut()) {
+                *vv = self.momentum * *vv + gv;
+                *pv -= self.lr * *vv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_python_update_rule() {
+        let mut params = vec![Tensor::from_vec(&[2], vec![1.0, -2.0]).unwrap()];
+        let grads = vec![Tensor::from_vec(&[2], vec![0.5, -1.0]).unwrap()];
+        let mut opt = SgdMomentum::new(0.1, 0.9, &params);
+        opt.step(&mut params, &grads);
+        // v1 = g, p1 = p0 - lr*g
+        assert!((params[0].data[0] - (1.0 - 0.05)).abs() < 1e-7);
+        assert!((params[0].data[1] - (-2.0 + 0.1)).abs() < 1e-7);
+        opt.step(&mut params, &grads);
+        // v2 = 0.9*g + g = 1.9*g
+        assert!((params[0].data[0] - (0.95 - 0.1 * 1.9 * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut params = vec![Tensor::from_vec(&[1], vec![0.0]).unwrap()];
+        let grads = vec![Tensor::from_vec(&[1], vec![1.0]).unwrap()];
+        let mut opt = SgdMomentum::new(0.5, 0.0, &params);
+        for _ in 0..3 {
+            opt.step(&mut params, &grads);
+        }
+        assert!((params[0].data[0] + 1.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,247 @@
+//! Bundled tiny model + dataset for artifact-free retraining: the
+//! `adapt retrain --synthetic` CI smoke, the `table2_retrain` bench's
+//! emulator rows and the trainer tests all share this one setup, so the
+//! flow they exercise (pre-train → calibrate → damage with a mixed-ACU
+//! plan → QAT-retrain) is identical everywhere.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::data::Dataset;
+use crate::graph::{retransform, ExecutionPlan, LayerMode, Model, Node, Op, ParamSpec, Policy};
+use crate::lut::LutRegistry;
+use crate::quant::calib::CalibratorKind;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Tiny CNN: conv(3x3, 3→8, pad 1) → relu → avgpool2 → conv(3x3, 8→8,
+/// pad 1) → relu → gap → linear(8 → 4) on 8x8x3 inputs — small enough for
+/// a CI-time retrain, deep enough to exercise conv / pool / gap / linear
+/// backward and heterogeneous plans.
+pub fn tiny_cnn() -> Model {
+    let conv = |id, cin, cout, scale_idx, name: &str, input, p0| Node {
+        id,
+        op: Op::Conv2d {
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            scale_idx,
+            name: name.into(),
+        },
+        inputs: vec![input],
+        params: vec![p0, p0 + 1],
+    };
+    let p = |name: &str, shape: &[usize]| ParamSpec {
+        name: name.into(),
+        shape: shape.to_vec(),
+    };
+    Model {
+        name: "tiny_cnn".into(),
+        paper_row: "-".into(),
+        kind: "cnn".into(),
+        dataset: "tiny_syn".into(),
+        input_shape: vec![8, 8, 3],
+        input_dtype: "f32".into(),
+        out_dim: 4,
+        loss: "ce".into(),
+        metric: "top1".into(),
+        table2: false,
+        n_scales: 3,
+        params: vec![
+            p("w1", &[3, 3, 3, 8]),
+            p("b1", &[8]),
+            p("w2", &[3, 3, 8, 8]),
+            p("b2", &[8]),
+            p("w3", &[8, 4]),
+            p("b3", &[4]),
+        ],
+        params_count: 0,
+        macs: 0,
+        nodes: vec![
+            Node {
+                id: 0,
+                op: Op::Input,
+                inputs: vec![],
+                params: vec![],
+            },
+            conv(1, 3, 8, 0, "c1", 0, 0),
+            Node {
+                id: 2,
+                op: Op::Relu,
+                inputs: vec![1],
+                params: vec![],
+            },
+            Node {
+                id: 3,
+                op: Op::AvgPool2,
+                inputs: vec![2],
+                params: vec![],
+            },
+            conv(4, 8, 8, 1, "c2", 3, 2),
+            Node {
+                id: 5,
+                op: Op::Relu,
+                inputs: vec![4],
+                params: vec![],
+            },
+            Node {
+                id: 6,
+                op: Op::Gap,
+                inputs: vec![5],
+                params: vec![],
+            },
+            Node {
+                id: 7,
+                op: Op::Linear {
+                    din: 8,
+                    dout: 4,
+                    scale_idx: 2,
+                    name: "head".into(),
+                },
+                inputs: vec![6],
+                params: vec![4, 5],
+            },
+        ],
+        weights_file: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// Seeded gaussian init for [`tiny_cnn`] (or any in-memory model).
+pub fn tiny_params(model: &Model, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.35).collect();
+            Tensor::from_vec(&spec.shape, data).expect("tiny param shape")
+        })
+        .collect()
+}
+
+/// The canonical damaged plan for the demo: every layer on a lossy ACU —
+/// the shape `adapt sensitivity`'s greedy search emits.
+pub fn tiny_mixed_plan(model: &Model) -> ExecutionPlan {
+    retransform(
+        model,
+        &Policy::all(LayerMode::lut("mitchell8")).with_acu("c2", "trunc_out8_4"),
+    )
+}
+
+/// Dataset bound to [`tiny_cnn`] (`data::load("tiny_syn", ..)`).
+pub fn tiny_dataset(n_train: usize, n_eval: usize) -> Dataset {
+    crate::data::load(
+        "tiny_syn",
+        &crate::data::Sizes {
+            n_train,
+            n_eval,
+        },
+    )
+}
+
+/// Outcome of [`demo_retrain`].
+pub struct DemoOutcome {
+    /// fp32 eval accuracy after pre-training.
+    pub fp32_acc: f64,
+    /// Mixed-ACU plan accuracy before retraining (the damage).
+    pub approx_acc: f64,
+    /// Mixed-ACU plan accuracy after QAT retraining (the recovery).
+    pub retrained_acc: f64,
+    pub fit: super::FitResult,
+    pub report: String,
+}
+
+/// End-to-end artifact-free retraining demo: pre-train fp32 → calibrate
+/// (emulator taps) → damage with [`tiny_mixed_plan`] → QAT-retrain on
+/// that plan. Deterministic for a fixed seed at any thread count.
+pub fn demo_retrain(epochs: usize, lr: f32, seed: u64, threads: usize) -> Result<DemoOutcome> {
+    let model = tiny_cnn();
+    let ds = tiny_dataset(512, 256);
+    let luts = LutRegistry::in_memory();
+    let bs = 32;
+    let eval_batches = 8;
+    let fp32_plan = retransform(&model, &Policy::all(LayerMode::Fp32));
+
+    // fp32 pre-training (the "download a pretrained model" stand-in).
+    let pre_cfg = super::TrainConfig {
+        epochs: 6,
+        lr: 0.012,
+        momentum: 0.9,
+        batch: bs,
+        seed,
+        threads,
+        max_batches: None,
+        log_every: 0,
+    };
+    let pre = super::fit(&model, tiny_params(&model, seed), &fp32_plan, &[], &luts, &ds.train, &pre_cfg)?;
+    let params = pre.params;
+
+    // Post-training calibration on the emulator's own fp32 taps.
+    let scales = super::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        bs,
+        2,
+        CalibratorKind::Percentile,
+        0.999,
+        threads,
+    )?;
+
+    let fp32_acc = super::evaluate(
+        &model, params.clone(), &fp32_plan, &[], &luts, &ds.eval, bs, eval_batches, threads,
+    )?;
+    let plan = tiny_mixed_plan(&model);
+    let approx_acc = super::evaluate(
+        &model, params.clone(), &plan, &scales, &luts, &ds.eval, bs, eval_batches, threads,
+    )?;
+
+    // Approximation-aware retraining on the damaged plan.
+    let qat_cfg = super::TrainConfig {
+        epochs: epochs.max(1),
+        lr,
+        momentum: 0.9,
+        batch: bs,
+        seed: seed ^ 0x9A7,
+        threads,
+        max_batches: None,
+        log_every: 0,
+    };
+    let fit = super::fit(&model, params, &plan, &scales, &luts, &ds.train, &qat_cfg)?;
+    let retrained_acc = super::evaluate(
+        &model, fit.params.clone(), &plan, &scales, &luts, &ds.eval, bs, eval_batches, threads,
+    )?;
+
+    let (l0, l1) = fit.improvement();
+    let epoch_means: Vec<String> = fit.epoch_losses.iter().map(|l| format!("{l:.4}")).collect();
+    let report = format!(
+        "tiny_cnn emulator QAT demo (seed {seed:#x}, {} QAT epochs x {} steps, lr {lr}, batch {bs})\n\
+         plan:\n{}\
+         fp32 accuracy:      {:.2}%\n\
+         approx (no QAT):    {:.2}%\n\
+         approx (retrained): {:.2}%   ({:+.2} pts recovered)\n\
+         qat loss per epoch: {}   ({:.4} -> {:.4})\n",
+        qat_cfg.epochs,
+        fit.steps / qat_cfg.epochs,
+        plan.describe(&model),
+        100.0 * fp32_acc,
+        100.0 * approx_acc,
+        100.0 * retrained_acc,
+        100.0 * (retrained_acc - approx_acc),
+        epoch_means.join(", "),
+        l0,
+        l1,
+    );
+    Ok(DemoOutcome {
+        fp32_acc,
+        approx_acc,
+        retrained_acc,
+        fit,
+        report,
+    })
+}
