@@ -1,0 +1,157 @@
+//! HTTP serving bench: the whole submit → measure → swap plan → measure
+//! loop over the wire, artifact-free. Starts an in-process
+//! `AdaptService` + HTTP front-end on an ephemeral port, drives it with
+//! the `adapt client` load generator (keep-alive connections,
+//! deterministic payloads), hot-swaps the plan between phases, and
+//! emits `artifacts/results/BENCH_serve_http.json` with per-phase
+//! throughput + client latency and the server-side queue-wait /
+//! compute percentiles.
+//!
+//! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench serve_http`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use adapt::coordinator::engine::{EmulatorSpec, EngineConfig};
+use adapt::graph::{retransform, LayerMode, Policy};
+use adapt::lut::LutRegistry;
+use adapt::service::client::{self, LoadConfig};
+use adapt::service::http::HttpServer;
+use adapt::service::AdaptService;
+use adapt::trainer::synth;
+use adapt::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let (requests, concurrency, workers) = if fast { (64, 2, 2) } else { (512, 4, 4) };
+    println!(
+        "== HTTP serving: {requests} requests x {concurrency} connections, {workers} workers =="
+    );
+
+    // Bundled tiny model on the emulator backend (no artifacts at all).
+    let model = synth::tiny_cnn();
+    let input_len: usize = model.input_shape.iter().product();
+    let params = synth::tiny_params(&model, 0xBE5E);
+    let plan = retransform(&model, &Policy::all(LayerMode::lut("mul8s_1l2h_like")));
+    let ds = synth::tiny_dataset(128, 32);
+    let scales = adapt::trainer::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        32,
+        2,
+        adapt::quant::calib::CalibratorKind::Percentile,
+        0.999,
+        1,
+    )
+    .expect("calibration");
+    let spec = EmulatorSpec {
+        model,
+        params,
+        plan,
+        act_scales: scales,
+        luts: LutRegistry::in_memory(),
+        batch: 8,
+        gemm_threads: 1,
+    };
+    let mut cfg = EngineConfig::emulator(spec);
+    cfg.workers = workers;
+    cfg.queue_depth = 128;
+    cfg.max_wait = Duration::from_millis(2);
+    let service = Arc::new(AdaptService::start(cfg).expect("service start"));
+    let server = HttpServer::start(Arc::clone(&service), "127.0.0.1:0").expect("server start");
+    let addr = server.addr().to_string();
+
+    let load = LoadConfig {
+        addr: addr.clone(),
+        requests,
+        concurrency,
+        input_len,
+        top_k: Some(1),
+        deadline_ms: None,
+        seed: 0x10AD,
+    };
+
+    // Phase 1: the mixed-ACU starting plan.
+    let phase1 = client::run_load(&load).expect("phase 1");
+    println!(
+        "  plan gen 0 (mul8s_1l2h_like): {}/{} ok, {:.1} req/s, client p50 {} µs",
+        phase1.ok,
+        requests,
+        phase1.requests_per_sec(),
+        phase1.percentile_us(0.50),
+    );
+    assert_eq!(phase1.errors, 0, "phase 1 must be clean");
+
+    // Hot-swap to exact8 over the wire, then phase 2.
+    let (status, body) = client::http_call(
+        &addr,
+        "POST",
+        "/v1/plan",
+        Some(r#"{"spec": "default=exact8"}"#),
+    )
+    .expect("plan swap call");
+    assert_eq!(status, 200, "plan swap must succeed: {body}");
+    let generation = Json::parse(&body)
+        .unwrap()
+        .get("generation")
+        .unwrap()
+        .usize()
+        .unwrap();
+    let phase2 = client::run_load(&LoadConfig {
+        seed: 0x10AD ^ 0xFF,
+        ..load.clone()
+    })
+    .expect("phase 2");
+    println!(
+        "  plan gen {generation} (exact8):          {}/{} ok, {:.1} req/s, client p50 {} µs",
+        phase2.ok,
+        requests,
+        phase2.requests_per_sec(),
+        phase2.percentile_us(0.50),
+    );
+    assert_eq!(phase2.errors, 0, "phase 2 must be clean");
+    assert_eq!(
+        phase2.by_generation.keys().copied().collect::<Vec<_>>(),
+        vec![generation as u64],
+        "every post-swap response must carry the new generation"
+    );
+
+    // Server-side view: totals + tail latency.
+    let stats = service.stats();
+    let (qp50, qp95, qp99) = stats.pool.queue_wait_percentiles_us();
+    let (cp50, cp95, cp99) = stats.pool.compute_percentiles_us();
+    println!(
+        "  server: {} requests, {} batches, queue wait p50/p95/p99 = {qp50}/{qp95}/{qp99} µs, \
+         compute p50/p95/p99 = {cp50}/{cp95}/{cp99} µs",
+        stats.pool.total.requests, stats.pool.total.batches,
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("requests".to_string(), Json::Num(requests as f64));
+    doc.insert("concurrency".to_string(), Json::Num(concurrency as f64));
+    doc.insert("workers".to_string(), Json::Num(workers as f64));
+    doc.insert("phase1_mixed".to_string(), phase1.to_json());
+    doc.insert("phase2_exact8".to_string(), phase2.to_json());
+    doc.insert("generation_after_swap".to_string(), Json::Num(generation as f64));
+    doc.insert("server_stats".to_string(), stats.to_json());
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_serve_http.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("  written {}", path.display());
+        }
+    }
+
+    server.stop();
+    let final_stats = Arc::try_unwrap(service)
+        .map(|s| s.shutdown().expect("shutdown"))
+        .unwrap_or_else(|arc| arc.engine().stats_snapshot());
+    assert_eq!(
+        final_stats.total.requests,
+        2 * requests,
+        "every wire request must be served exactly once"
+    );
+    println!("== serve_http bench OK ==");
+}

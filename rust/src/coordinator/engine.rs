@@ -11,18 +11,32 @@
 //! expires (classic dynamic batching), pads short batches by repeating
 //! the last sample, executes, and fans responses back out.
 //!
-//! With `workers == 1` the batching semantics are exactly the old
-//! single-worker engine's: one blocking gather loop, same padding, same
-//! flush-on-shutdown. More workers add throughput, not new semantics —
-//! requests and responses cross threads, backends never do.
+//! The typed path ([`submit_raw`](InferenceEngine::submit_raw)) speaks
+//! [`RawResponse`] / [`ServiceError`](crate::service::ServiceError): each
+//! response reports its queue wait, batch compute time, serving worker
+//! and plan generation, and every rejection (wrong length, expired
+//! deadline, unsupported dtype, backend failure) is a typed variant. The
+//! original `Vec<f32>`-in/`Result<Vec<f32>>`-out methods
+//! ([`submit`](InferenceEngine::submit) / [`infer`](InferenceEngine::infer))
+//! are thin shims over it.
 //!
-//! Shutdown drains: `shutdown()` closes the queue (new submits fail),
-//! workers keep popping until the queue is empty, flush their final
-//! partial batches, and report per-worker [`EngineStats`] which are
-//! aggregated into [`PoolStats`].
+//! The pool is observable and retargetable while it runs:
+//! [`stats_snapshot`](InferenceEngine::stats_snapshot) reads per-worker
+//! counters and log-scale latency histograms mid-flight (workers publish
+//! through atomics), and [`swap_plan`](InferenceEngine::swap_plan) moves
+//! every emulator worker onto a new [`ExecutionPlan`] at its next batch
+//! boundary — weights re-quantized once, adopted via `Arc`, generation
+//! counter bumped, no restart, and no batch ever mixes generations.
+//!
+//! With `workers == 1` the batching semantics are exactly the old
+//! single-worker engine's. Shutdown drains: `shutdown()` closes the queue
+//! (new submits fail), workers keep popping until the queue is empty,
+//! flush their final partial batches, and the per-worker [`EngineStats`]
+//! are aggregated into [`PoolStats`].
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -33,14 +47,176 @@ use crate::emulator::{Executor, PreparedWeights, ScratchArena, Style, Value};
 use crate::graph::{ExecutionPlan, Model};
 use crate::lut::LutRegistry;
 use crate::runtime::Runtime;
-use crate::tensor::Tensor;
+use crate::service::ServiceError;
+use crate::tensor::{Tensor, TensorI32};
 
-/// One inference request: a flat f32 sample (image/latent).
+/// Engine-level outcome of one request on the typed path: the output row
+/// plus per-request observability. The service layer wraps this into an
+/// [`InferResponse`](crate::service::InferResponse) (adding id / top-k).
+#[derive(Clone, Debug)]
+pub struct RawResponse {
+    pub output: Vec<f32>,
+    /// Time the request spent queued before a worker picked it up.
+    pub queue_wait: Duration,
+    /// Wall-clock of the batch that computed it.
+    pub compute: Duration,
+    /// Pool worker that served it.
+    pub worker: usize,
+    /// Plan generation it was computed under.
+    pub generation: u64,
+}
+
+/// What [`InferenceEngine::submit_raw`] hands back: the receiving end of
+/// one request's typed response channel.
+pub type RawReceiver = mpsc::Receiver<std::result::Result<RawResponse, ServiceError>>;
+
+/// Where a finished request's answer goes. `Raw` is the typed path;
+/// `Flat` backs the legacy `submit`/`infer` shims.
+enum Responder {
+    Raw(mpsc::Sender<std::result::Result<RawResponse, ServiceError>>),
+    Flat(mpsc::Sender<Result<Vec<f32>>>),
+}
+
+impl Responder {
+    fn send(self, r: std::result::Result<RawResponse, ServiceError>) {
+        match self {
+            Responder::Raw(tx) => {
+                let _ = tx.send(r);
+            }
+            Responder::Flat(tx) => {
+                let _ = tx.send(r.map(|ok| ok.output).map_err(|e| anyhow::anyhow!("{e}")));
+            }
+        }
+    }
+}
+
+/// One queued inference request: a flat f32 sample (image/latent/tokens).
 struct Request {
     x: Vec<f32>,
-    resp: mpsc::Sender<Result<Vec<f32>>>,
+    /// Max queue wait before the request is rejected (typed path).
+    deadline: Option<Duration>,
+    resp: Responder,
     /// When the request entered the queue (for `queue_wait`).
     enqueued: Instant,
+}
+
+// ---------------------------------------------------------------------------
+// Stats: atomic cells workers publish through + POD snapshots
+// ---------------------------------------------------------------------------
+
+/// Log-scale latency histogram buckets: bucket 0 is `< 1 µs`, bucket i
+/// covers `[2^(i-1), 2^i) µs`, the last bucket is open-ended (~67 s+).
+pub const LAT_BUCKETS: usize = 28;
+
+/// Fixed log2-bucket latency histogram (µs resolution). Cheap enough to
+/// record per request on the hot path; coarse enough that p50/p95/p99
+/// stay meaningful across nine decades.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHist {
+    pub buckets: Vec<u64>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: vec![0; LAT_BUCKETS],
+        }
+    }
+}
+
+impl LatencyHist {
+    /// Bucket index for a duration.
+    pub fn bucket_of(d: Duration) -> usize {
+        let us = d.as_micros() as u64;
+        if us == 0 {
+            0
+        } else {
+            ((64 - us.leading_zeros()) as usize).min(LAT_BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge of bucket `i` in µs (the percentile estimate returned
+    /// for samples landing in it).
+    pub fn upper_edge_us(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Percentile estimate in µs (upper bucket edge), 0 for an empty
+    /// histogram. `p` in (0, 1], e.g. 0.5 / 0.95 / 0.99.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::upper_edge_us(i);
+            }
+        }
+        Self::upper_edge_us(LAT_BUCKETS - 1)
+    }
+}
+
+/// Shared per-worker counters: the worker publishes through these atomics
+/// so [`InferenceEngine::stats_snapshot`] can read a consistent-enough
+/// view mid-run without stopping anything.
+#[derive(Default)]
+struct StatsCell {
+    requests: AtomicUsize,
+    batches: AtomicUsize,
+    padded_slots: AtomicUsize,
+    queue_wait_ns: AtomicU64,
+    busy_ns: AtomicU64,
+    queue_hist: [AtomicU64; LAT_BUCKETS],
+    compute_hist: [AtomicU64; LAT_BUCKETS],
+}
+
+impl StatsCell {
+    fn record_wait(&self, d: Duration) {
+        self.queue_wait_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.queue_hist[LatencyHist::bucket_of(d)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_batch(&self, real: usize, padded: usize, compute: Duration) {
+        self.requests.fetch_add(real, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots.fetch_add(padded, Ordering::Relaxed);
+        self.busy_ns
+            .fetch_add(compute.as_nanos() as u64, Ordering::Relaxed);
+        // Per-request compute: every request in the batch paid the full
+        // batch wall-clock, so each records one sample.
+        self.compute_hist[LatencyHist::bucket_of(compute)]
+            .fetch_add(real as u64, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> EngineStats {
+        let hist = |cells: &[AtomicU64; LAT_BUCKETS]| LatencyHist {
+            buckets: cells.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        };
+        EngineStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            queue_wait: Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed)),
+            busy: Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed)),
+            queue_hist: hist(&self.queue_hist),
+            compute_hist: hist(&self.compute_hist),
+        }
+    }
 }
 
 /// Per-worker (and aggregated) engine statistics.
@@ -53,6 +229,10 @@ pub struct EngineStats {
     pub queue_wait: Duration,
     /// Time spent assembling + executing batches.
     pub busy: Duration,
+    /// Per-request queue-wait distribution (log-scale buckets).
+    pub queue_hist: LatencyHist,
+    /// Per-request batch-compute distribution (log-scale buckets).
+    pub compute_hist: LatencyHist,
 }
 
 impl EngineStats {
@@ -62,17 +242,48 @@ impl EngineStats {
         self.padded_slots += other.padded_slots;
         self.queue_wait += other.queue_wait;
         self.busy += other.busy;
+        self.queue_hist.merge(&other.queue_hist);
+        self.compute_hist.merge(&other.compute_hist);
     }
 }
 
-/// Aggregate + per-worker stats returned by [`InferenceEngine::shutdown`].
+/// Aggregate + per-worker stats, from [`InferenceEngine::shutdown`] (final)
+/// or [`InferenceEngine::stats_snapshot`] (live, mid-run).
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
     /// Sums over all workers.
     pub total: EngineStats,
     /// One entry per pool worker, in spawn order.
     pub per_worker: Vec<EngineStats>,
+    /// Current plan generation (0 until the first successful hot-swap).
+    pub generation: u64,
 }
+
+impl PoolStats {
+    /// (p50, p95, p99) of per-request queue wait, in µs.
+    pub fn queue_wait_percentiles_us(&self) -> (u64, u64, u64) {
+        let h = &self.total.queue_hist;
+        (
+            h.percentile_us(0.50),
+            h.percentile_us(0.95),
+            h.percentile_us(0.99),
+        )
+    }
+
+    /// (p50, p95, p99) of per-request batch compute, in µs.
+    pub fn compute_percentiles_us(&self) -> (u64, u64, u64) {
+        let h = &self.total.compute_hist;
+        (
+            h.percentile_us(0.50),
+            h.percentile_us(0.95),
+            h.percentile_us(0.99),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend specs + config
+// ---------------------------------------------------------------------------
 
 /// What each pool worker runs batches on. PJRT state is not `Send`, so a
 /// worker *constructs* its backend on its own thread from this spec.
@@ -195,11 +406,11 @@ impl SharedQueue {
     }
 
     /// Blocking push; applies backpressure while full. Errors once closed.
-    fn push(&self, req: Request) -> Result<()> {
+    fn push(&self, req: Request) -> std::result::Result<(), ServiceError> {
         let mut st = self.state.lock().expect("engine queue poisoned");
         loop {
             if st.closed {
-                anyhow::bail!("engine is shut down");
+                return Err(ServiceError::ShuttingDown);
             }
             if st.items.len() < self.cap {
                 break;
@@ -210,6 +421,11 @@ impl SharedQueue {
         drop(st);
         self.not_empty.notify_one();
         Ok(())
+    }
+
+    /// Requests currently queued (for health / stats reporting).
+    fn len(&self) -> usize {
+        self.state.lock().expect("engine queue poisoned").items.len()
     }
 
     /// Blocking pop for the first request of a batch. `None` only when the
@@ -264,14 +480,40 @@ impl SharedQueue {
 }
 
 // ---------------------------------------------------------------------------
+// Plan hot-swap state
+// ---------------------------------------------------------------------------
+
+/// One published plan generation: the plan plus its shared pre-quantized
+/// weight tables. Workers clone the `Arc`-backed fields, never re-quantize.
+#[derive(Clone)]
+struct GenPlan {
+    gen_no: u64,
+    plan: ExecutionPlan,
+    prepared: PreparedWeights,
+}
+
+/// Shared swap cell: `gen` is the cheap per-batch check; `current` holds
+/// the published generation. [`InferenceEngine::swap_plan`] validates and
+/// publishes; every emulator worker adopts at its next batch boundary.
+struct SwapState {
+    gen: AtomicU64,
+    current: Mutex<GenPlan>,
+}
+
+// ---------------------------------------------------------------------------
 // Engine pool
 // ---------------------------------------------------------------------------
 
 /// Handle to the worker pool.
 pub struct InferenceEngine {
     queue: Arc<SharedQueue>,
-    workers: Vec<std::thread::JoinHandle<EngineStats>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    cells: Vec<Arc<StatsCell>>,
+    /// Present for emulator backends (the swappable ones).
+    swap: Option<Arc<SwapState>>,
+    emu_spec: Option<Arc<EmulatorSpec>>,
     out_dim: usize,
+    in_len: usize,
 }
 
 impl InferenceEngine {
@@ -285,25 +527,40 @@ impl InferenceEngine {
     pub fn start(cfg: EngineConfig) -> Result<InferenceEngine> {
         let n_workers = cfg.workers.max(1);
         let queue = Arc::new(SharedQueue::new(cfg.queue_depth));
-        // Shared quantized-weight cache (emulator backends only). Failing
-        // here (e.g. an unknown ACU in the plan) aborts the start just
-        // like a per-worker setup failure used to.
-        let emu_prepared = match &cfg.backend {
-            BackendSpec::Emulator(spec) => Some(Executor::prepare_weights(
-                &spec.model,
-                &spec.params,
-                &spec.plan,
-                &spec.luts,
-            )?),
-            _ => None,
+        // Shared quantized-weight cache + swap cell (emulator backends
+        // only). Failing here (e.g. an unknown ACU in the plan) aborts the
+        // start just like a per-worker setup failure used to.
+        let (swap, emu_spec) = match &cfg.backend {
+            BackendSpec::Emulator(spec) => {
+                let prepared = Executor::prepare_weights(
+                    &spec.model,
+                    &spec.params,
+                    &spec.plan,
+                    &spec.luts,
+                )?;
+                let swap = Arc::new(SwapState {
+                    gen: AtomicU64::new(0),
+                    current: Mutex::new(GenPlan {
+                        gen_no: 0,
+                        plan: spec.plan.clone(),
+                        prepared,
+                    }),
+                });
+                (Some(swap), Some(Arc::clone(spec)))
+            }
+            BackendSpec::Pjrt { .. } => (None, None),
         };
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let cells: Vec<Arc<StatsCell>> = (0..n_workers)
+            .map(|_| Arc::new(StatsCell::default()))
+            .collect();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
         let mut workers = Vec::with_capacity(n_workers);
-        for wi in 0..n_workers {
+        for (wi, cell) in cells.iter().enumerate() {
             let queue = Arc::clone(&queue);
             let ready = ready_tx.clone();
             let backend = cfg.backend.clone();
-            let prepared = emu_prepared.clone();
+            let swap = swap.clone();
+            let cell = Arc::clone(cell);
             let max_wait = cfg.max_wait;
             let handle = std::thread::Builder::new()
                 .name(format!("adapt-engine-{wi}"))
@@ -313,10 +570,12 @@ impl InferenceEngine {
                         model,
                         variant,
                         acu,
-                    } => pjrt_worker(&artifacts, &model, variant, acu, &queue, max_wait, &ready),
+                    } => pjrt_worker(
+                        &artifacts, &model, variant, acu, &queue, max_wait, wi, &cell, &ready,
+                    ),
                     BackendSpec::Emulator(spec) => {
-                        let prepared = prepared.expect("emulator backend prepared above");
-                        emulator_worker(&spec, prepared, &queue, max_wait, &ready)
+                        let swap = swap.expect("emulator swap state built above");
+                        emulator_worker(&spec, &swap, &queue, max_wait, wi, &cell, &ready)
                     }
                 })
                 .context("spawning engine worker")?;
@@ -324,11 +583,14 @@ impl InferenceEngine {
         }
         drop(ready_tx);
 
-        let mut out_dim = 0usize;
+        let (mut out_dim, mut in_len) = (0usize, 0usize);
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..n_workers {
             match ready_rx.recv() {
-                Ok(Ok(d)) => out_dim = d,
+                Ok(Ok((d, p))) => {
+                    out_dim = d;
+                    in_len = p;
+                }
                 Ok(Err(e)) => {
                     if first_err.is_none() {
                         first_err = Some(e);
@@ -351,7 +613,11 @@ impl InferenceEngine {
         Ok(InferenceEngine {
             queue,
             workers,
+            cells,
+            swap,
+            emu_spec,
             out_dim,
+            in_len,
         })
     }
 
@@ -360,20 +626,74 @@ impl InferenceEngine {
         self.out_dim
     }
 
+    /// Flat per-sample input length.
+    pub fn input_len(&self) -> usize {
+        self.in_len
+    }
+
     /// Number of pool workers.
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
 
-    /// Submit one sample; returns a receiver for its output row. Blocks
-    /// while the request queue is full (backpressure).
-    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+    /// Workers whose threads are still running (a worker only exits when
+    /// the queue closes or it panics — fewer alive than configured on an
+    /// open queue means the pool is degraded).
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|h| !h.is_finished()).count()
+    }
+
+    /// Requests currently waiting in the shared queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Current plan generation (0 until the first successful hot-swap).
+    pub fn generation(&self) -> u64 {
+        self.swap
+            .as_ref()
+            .map(|s| s.gen.load(Ordering::Acquire))
+            .unwrap_or(0)
+    }
+
+    /// The shared emulator spec, when this pool runs the emulator backend
+    /// (the service layer needs the [`Model`] to validate incoming plans).
+    pub fn emulator_spec(&self) -> Option<&Arc<EmulatorSpec>> {
+        self.emu_spec.as_ref()
+    }
+
+    /// Typed submit: returns a receiver for the request's [`RawResponse`].
+    /// Blocks while the request queue is full (backpressure).
+    pub fn submit_raw(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<RawReceiver, ServiceError> {
         let (resp, rx) = mpsc::channel();
         self.queue.push(Request {
             x,
-            resp,
+            deadline,
+            resp: Responder::Raw(resp),
             enqueued: Instant::now(),
         })?;
+        Ok(rx)
+    }
+
+    /// Submit one sample; returns a receiver for its output row. Blocks
+    /// while the request queue is full (backpressure).
+    ///
+    /// Legacy shim over the typed path: drops the per-request metadata and
+    /// flattens [`ServiceError`] into `anyhow::Error`.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let (resp, rx) = mpsc::channel();
+        self.queue
+            .push(Request {
+                x,
+                deadline: None,
+                resp: Responder::Flat(resp),
+                enqueued: Instant::now(),
+            })
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(rx)
     }
 
@@ -382,22 +702,60 @@ impl InferenceEngine {
         self.submit(x)?.recv().context("engine dropped request")?
     }
 
-    /// Stop the pool: close the queue, let every worker drain + flush, and
-    /// aggregate their stats.
-    pub fn shutdown(mut self) -> Result<PoolStats> {
-        self.queue.close();
-        let mut per_worker = Vec::with_capacity(self.workers.len());
-        for h in self.workers.drain(..) {
-            let s = h
-                .join()
-                .map_err(|_| anyhow::anyhow!("engine worker panicked"))?;
-            per_worker.push(s);
-        }
+    /// Live stats: per-worker counters + latency histograms read through
+    /// the workers' atomics, without stopping or draining anything.
+    /// [`shutdown`](Self::shutdown) returns the same shape, final.
+    pub fn stats_snapshot(&self) -> PoolStats {
+        let per_worker: Vec<EngineStats> = self.cells.iter().map(|c| c.snapshot()).collect();
         let mut total = EngineStats::default();
         for s in &per_worker {
             total.merge(s);
         }
-        Ok(PoolStats { total, per_worker })
+        PoolStats {
+            total,
+            per_worker,
+            generation: self.generation(),
+        }
+    }
+
+    /// Hot-swap the execution plan on a live pool (emulator backends).
+    ///
+    /// Validates the plan by re-quantizing the weights **once** (same
+    /// shared-`Arc` cache as startup), then publishes it; every worker
+    /// adopts at its next batch boundary, so no batch mixes generations.
+    /// In-flight and already-queued requests may still be served by the
+    /// previous generation. Returns the new generation number.
+    pub fn swap_plan(&self, plan: ExecutionPlan) -> std::result::Result<u64, ServiceError> {
+        let (Some(swap), Some(spec)) = (&self.swap, &self.emu_spec) else {
+            return Err(ServiceError::PlanRejected(
+                "plan hot-swap requires the emulator backend (PJRT executables bake their plan in)"
+                    .into(),
+            ));
+        };
+        let prepared = Executor::prepare_weights(&spec.model, &spec.params, &plan, &spec.luts)
+            .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?;
+        let mut cur = swap.current.lock().expect("swap state poisoned");
+        let gen_no = cur.gen_no + 1;
+        *cur = GenPlan {
+            gen_no,
+            plan,
+            prepared,
+        };
+        // Publish after the guarded update: a worker that sees the new
+        // counter always finds the new GenPlan under the lock.
+        swap.gen.store(gen_no, Ordering::Release);
+        Ok(gen_no)
+    }
+
+    /// Stop the pool: close the queue, let every worker drain + flush, and
+    /// aggregate their stats.
+    pub fn shutdown(mut self) -> Result<PoolStats> {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("engine worker panicked"))?;
+        }
+        Ok(self.stats_snapshot())
     }
 }
 
@@ -418,46 +776,57 @@ impl Drop for InferenceEngine {
 
 /// The shared dynamic-batching loop: gather up to `bs` requests (first one
 /// blocking, the rest until `max_wait`), pad, run `infer`, fan out.
-/// `per` is the flat per-sample input length.
+/// `per` is the flat per-sample input length. `infer` returns the flat
+/// output plus the plan generation it computed under.
 fn batching_loop<F>(
     queue: &SharedQueue,
     bs: usize,
     per: usize,
     max_wait: Duration,
+    worker: usize,
+    cell: &StatsCell,
     mut infer: F,
-) -> EngineStats
-where
-    F: FnMut(&[f32]) -> Result<Vec<f32>>,
+) where
+    F: FnMut(&[f32]) -> std::result::Result<(Vec<f32>, u64), ServiceError>,
 {
-    let mut stats = EngineStats::default();
-    let mut pending: Vec<Request> = Vec::with_capacity(bs);
+    let mut pending: Vec<(Request, Duration)> = Vec::with_capacity(bs);
     let mut flat: Vec<f32> = Vec::with_capacity(bs * per);
-    // A malformed request must never take down the worker (or the rest of
-    // its batch): answer it with an error and keep it out of the batch.
-    let admit = |r: Request, pending: &mut Vec<Request>, stats: &mut EngineStats| {
-        stats.queue_wait += r.enqueued.elapsed();
-        if r.x.len() == per {
-            pending.push(r);
-        } else {
-            let _ = r.resp.send(Err(anyhow::anyhow!(
-                "request input length {} != expected {per}",
-                r.x.len()
-            )));
+    // A malformed or expired request must never take down the worker (or
+    // the rest of its batch): answer it with a typed error and keep it
+    // out of the batch.
+    let admit = |r: Request, pending: &mut Vec<(Request, Duration)>| {
+        let waited = r.enqueued.elapsed();
+        cell.record_wait(waited);
+        if r.x.len() != per {
+            r.resp.send(Err(ServiceError::WrongInputLength {
+                got: r.x.len(),
+                expected: per,
+            }));
+            return;
         }
+        if let Some(d) = r.deadline {
+            if waited >= d {
+                r.resp.send(Err(ServiceError::DeadlineExceeded {
+                    waited_ms: waited.as_millis() as u64,
+                }));
+                return;
+            }
+        }
+        pending.push((r, waited));
     };
     loop {
         // Block for the first request of a batch (or drained shutdown).
         let Some(first) = queue.pop_blocking() else {
             break;
         };
-        admit(first, &mut pending, &mut stats);
+        admit(first, &mut pending);
         let deadline = Instant::now() + max_wait;
         // A close() during the gather must still flush this batch *and
         // then* let the outer loop observe the drained queue and stop.
         let mut drained = false;
         while pending.len() < bs {
             match queue.pop_until(deadline) {
-                Popped::Item(r) => admit(r, &mut pending, &mut stats),
+                Popped::Item(r) => admit(r, &mut pending),
                 Popped::TimedOut => break,
                 Popped::Drained => {
                     drained = true;
@@ -476,7 +845,7 @@ where
         // Assemble the padded batch.
         let t0 = Instant::now();
         flat.clear();
-        for r in &pending {
+        for (r, _) in &pending {
             flat.extend_from_slice(&r.x);
         }
         let real = pending.len();
@@ -484,24 +853,27 @@ where
             let last_start = (real - 1) * per;
             flat.extend_from_within(last_start..last_start + per);
         }
-        stats.padded_slots += bs - real;
 
         let result = infer(&flat);
-        stats.busy += t0.elapsed();
-        stats.batches += 1;
-        stats.requests += real;
+        let compute = t0.elapsed();
+        cell.record_batch(real, bs - real, compute);
 
         match result {
-            Ok(out) => {
+            Ok((out, generation)) => {
                 let row = out.len() / bs;
-                for (i, r) in pending.drain(..).enumerate() {
-                    let _ = r.resp.send(Ok(out[i * row..(i + 1) * row].to_vec()));
+                for (i, (r, waited)) in pending.drain(..).enumerate() {
+                    r.resp.send(Ok(RawResponse {
+                        output: out[i * row..(i + 1) * row].to_vec(),
+                        queue_wait: waited,
+                        compute,
+                        worker,
+                        generation,
+                    }));
                 }
             }
             Err(e) => {
-                let msg = format!("{e:#}");
-                for r in pending.drain(..) {
-                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+                for (r, _) in pending.drain(..) {
+                    r.resp.send(Err(e.clone()));
                 }
             }
         }
@@ -509,11 +881,11 @@ where
             break;
         }
     }
-    stats
 }
 
 /// PJRT-backed worker: owns its own `Runtime` (PJRT is not `Send`),
 /// compiles the executable, then serves the shared queue.
+#[allow(clippy::too_many_arguments)]
 fn pjrt_worker(
     artifacts: &std::path::Path,
     model: &str,
@@ -521,8 +893,10 @@ fn pjrt_worker(
     acu: Option<String>,
     queue: &SharedQueue,
     max_wait: Duration,
-    ready: &mpsc::Sender<Result<usize>>,
-) -> EngineStats {
+    worker: usize,
+    cell: &StatsCell,
+    ready: &mpsc::Sender<Result<(usize, usize)>>,
+) {
     let setup = (|| -> Result<(Runtime, ModelState, Option<xla::Literal>)> {
         let mut rt = Runtime::open(artifacts)?;
         let mut st = ModelState::load_best(&rt, model)?;
@@ -551,40 +925,40 @@ fn pjrt_worker(
 
     let (mut rt, st, lut_lit) = match setup {
         Ok(v) => {
-            let _ = ready.send(Ok(v.1.model.out_dim));
+            let per: usize = v.1.model.input_shape.iter().product();
+            let _ = ready.send(Ok((v.1.model.out_dim, per)));
             v
         }
         Err(e) => {
             let _ = ready.send(Err(e));
-            return EngineStats::default();
+            return;
         }
     };
 
     let bs = rt.manifest.batch;
     let per: usize = st.model.input_shape.iter().product();
-    let mut shape = vec![bs];
-    shape.extend_from_slice(&st.model.input_shape);
-    batching_loop(queue, bs, per, max_wait, |flat| {
-        let x = crate::runtime::lit_f32(&shape, flat)?;
-        ops::infer_batch(&mut rt, &st, variant, &x, lut_lit.as_ref())
-    })
+    batching_loop(queue, bs, per, max_wait, worker, cell, |flat| {
+        // PJRT executables bake their plan in: always generation 0.
+        (|| -> Result<Vec<f32>> {
+            let x = ops::flat_batch_input(&st.model, bs, flat)?;
+            ops::infer_batch(&mut rt, &st, variant, &x, lut_lit.as_ref())
+        })()
+        .map(|out| (out, 0u64))
+        .map_err(|e| ServiceError::Backend(format!("{e:#}")))
+    });
 }
 
-fn emulator_setup(spec: &EmulatorSpec, prepared: PreparedWeights) -> Result<Executor<'_>> {
-    anyhow::ensure!(
-        spec.model.input_dtype == "f32",
-        "emulator engine serves f32-input models (got {})",
-        spec.model.input_dtype
-    );
+/// Build one emulator executor for a generation's plan + shared weights.
+fn emulator_executor<'m>(spec: &'m EmulatorSpec, gp: &GenPlan) -> Result<Executor<'m>> {
     Executor::with_prepared(
         &spec.model,
         spec.params.clone(),
-        spec.plan.clone(),
+        gp.plan.clone(),
         spec.act_scales.clone(),
         Style::Optimized {
             threads: spec.gemm_threads.max(1),
         },
-        prepared,
+        gp.prepared.clone(),
         ScratchArena::new(),
     )
 }
@@ -592,31 +966,122 @@ fn emulator_setup(spec: &EmulatorSpec, prepared: PreparedWeights) -> Result<Exec
 /// Emulator-backed worker: adopts the pool's shared quantized weights
 /// (one `Arc` clone, no re-quantization) and owns its own scratch arena
 /// over the shared spec, then serves the queue. Artifact-free — this is
-/// what the concurrency tests run on.
+/// what the concurrency tests and the HTTP front-end run on.
+///
+/// At every batch boundary the worker compares its local generation with
+/// the swap cell; on a mismatch it rebuilds its executor from the newly
+/// published plan + shared weights before executing, so a single batch
+/// never mixes generations.
 fn emulator_worker(
     spec: &EmulatorSpec,
-    prepared: PreparedWeights,
+    swap: &SwapState,
     queue: &SharedQueue,
     max_wait: Duration,
-    ready: &mpsc::Sender<Result<usize>>,
-) -> EngineStats {
-    let exec = match emulator_setup(spec, prepared) {
+    worker: usize,
+    cell: &StatsCell,
+    ready: &mpsc::Sender<Result<(usize, usize)>>,
+) {
+    let per: usize = spec.model.input_shape.iter().product();
+    let gp0 = swap.current.lock().expect("swap state poisoned").clone();
+    let mut local_gen = gp0.gen_no;
+    let mut exec = match emulator_executor(spec, &gp0) {
         Ok(exec) => {
-            let _ = ready.send(Ok(spec.model.out_dim));
+            let _ = ready.send(Ok((spec.model.out_dim, per)));
             exec
         }
         Err(e) => {
             let _ = ready.send(Err(e));
-            return EngineStats::default();
+            return;
         }
     };
 
+    // Token-sequence models take rounded ids; anything else is rejected
+    // per-request with a typed error (not a refused start).
+    let dtype = spec.model.input_dtype.clone();
     let bs = spec.batch.max(1);
-    let per: usize = spec.model.input_shape.iter().product();
     let mut shape = vec![bs];
     shape.extend_from_slice(&spec.model.input_shape);
-    batching_loop(queue, bs, per, max_wait, |flat| {
-        let x = Tensor::from_vec(&shape, flat.to_vec())?;
-        Ok(exec.forward(Value::F(x))?.data)
-    })
+    batching_loop(queue, bs, per, max_wait, worker, cell, |flat| {
+        // Batch boundary: adopt a newly published plan generation before
+        // touching this batch. Swap failures keep the old executor (the
+        // publish path validated the plan, so this is belt-and-braces).
+        let cur = swap.gen.load(Ordering::Acquire);
+        if cur != local_gen {
+            let gp = swap.current.lock().expect("swap state poisoned").clone();
+            if let Ok(e) = emulator_executor(spec, &gp) {
+                exec = e;
+                local_gen = gp.gen_no;
+            }
+        }
+        let input = match dtype.as_str() {
+            "f32" => Value::F(
+                Tensor::from_vec(&shape, flat.to_vec())
+                    .map_err(|e| ServiceError::Backend(format!("{e:#}")))?,
+            ),
+            "i32" => Value::I(
+                TensorI32::from_vec(&shape, flat.iter().map(|v| v.round() as i32).collect())
+                    .map_err(|e| ServiceError::Backend(format!("{e:#}")))?,
+            ),
+            other => return Err(ServiceError::UnsupportedDtype(other.to_string())),
+        };
+        exec.forward(input)
+            .map(|out| (out.data, local_gen))
+            .map_err(|e| ServiceError::Backend(format!("{e:#}")))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_bucket_edges() {
+        assert_eq!(LatencyHist::bucket_of(Duration::from_nanos(300)), 0);
+        assert_eq!(LatencyHist::bucket_of(Duration::from_micros(1)), 1);
+        assert_eq!(LatencyHist::bucket_of(Duration::from_micros(2)), 2);
+        assert_eq!(LatencyHist::bucket_of(Duration::from_micros(3)), 2);
+        assert_eq!(LatencyHist::bucket_of(Duration::from_micros(4)), 3);
+        assert_eq!(LatencyHist::bucket_of(Duration::from_millis(1)), 10);
+        // The top bucket is open-ended: nothing can index past it.
+        assert_eq!(
+            LatencyHist::bucket_of(Duration::from_secs(3600)),
+            LAT_BUCKETS - 1
+        );
+    }
+
+    #[test]
+    fn hist_percentiles() {
+        let mut h = LatencyHist::default();
+        assert_eq!(h.percentile_us(0.99), 0, "empty hist reports 0");
+        // 90 samples at ~1 ms (bucket 10), 10 at ~32 ms (bucket 15).
+        h.buckets[10] = 90;
+        h.buckets[15] = 10;
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.percentile_us(0.50), LatencyHist::upper_edge_us(10));
+        assert_eq!(h.percentile_us(0.90), LatencyHist::upper_edge_us(10));
+        assert_eq!(h.percentile_us(0.95), LatencyHist::upper_edge_us(15));
+        assert_eq!(h.percentile_us(0.99), LatencyHist::upper_edge_us(15));
+        let mut other = LatencyHist::default();
+        other.buckets[15] = 5;
+        h.merge(&other);
+        assert_eq!(h.count(), 105);
+    }
+
+    #[test]
+    fn stats_merge_includes_hists() {
+        let mk = |requests: usize, bucket: usize, n: u64| {
+            let mut queue_hist = LatencyHist::default();
+            queue_hist.buckets[bucket] = n;
+            EngineStats {
+                requests,
+                queue_hist,
+                ..EngineStats::default()
+            }
+        };
+        let mut a = mk(3, 2, 3);
+        let b = mk(4, 4, 4);
+        a.merge(&b);
+        assert_eq!(a.requests, 7);
+        assert_eq!(a.queue_hist.count(), 7);
+    }
 }

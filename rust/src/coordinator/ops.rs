@@ -122,6 +122,22 @@ pub fn batch_input(model: &Model, split: &Split, bi: usize, bs: usize) -> Result
     }
 }
 
+/// Input literal for one already-flattened f32 batch — the serving path's
+/// counterpart of [`batch_input`]. Dtype-aware: i32-input models (token
+/// sequences) take the values as rounded ids, the same dequant-free route
+/// the eval harness uses, so the engine pool serves them too instead of
+/// bailing at startup.
+pub fn flat_batch_input(model: &Model, bs: usize, flat: &[f32]) -> Result<xla::Literal> {
+    let mut shape = vec![bs];
+    shape.extend_from_slice(&model.input_shape);
+    if model.input_dtype == "i32" {
+        let ids: Vec<i32> = flat.iter().map(|v| v.round() as i32).collect();
+        lit_i32(&shape, &ids)
+    } else {
+        lit_f32(&shape, flat)
+    }
+}
+
 /// Inference variants (map to artifact names).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum InferVariant {

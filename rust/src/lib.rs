@@ -44,6 +44,13 @@
 //!   the pool-parallel per-layer ACU sensitivity sweep / greedy
 //!   mixed-precision search
 //!   (`coordinator::experiments::layer_sensitivity`).
+//! * [`service`] — the versioned serving API over the engine pool:
+//!   typed [`service::InferRequest`]/[`service::InferResponse`] +
+//!   structured [`service::ServiceError`], the [`service::AdaptService`]
+//!   control plane (plan hot-swap, live stats, health), a dependency-free
+//!   HTTP/1.1 front-end (`POST /v1/infer`, `POST /v1/plan`,
+//!   `GET /v1/stats`, `GET /v1/healthz`) and the load-generating client
+//!   behind `adapt serve --listen` / `adapt client`.
 //! * [`trainer`] — emulator-native approximation-aware retraining (QAT):
 //!   clipped-STE backward through the quantized/LUT forward
 //!   ([`emulator::Executor::forward_taped`]), SGD-with-momentum, and the
@@ -61,6 +68,7 @@ pub mod metrics;
 pub mod mult;
 pub mod quant;
 pub mod runtime;
+pub mod service;
 pub mod tensor;
 pub mod trainer;
 pub mod util;

@@ -25,8 +25,22 @@
 //!       [--out FILE]                  build/inspect a per-layer plan JSON
 //! adapt calibrate --model NAME [--calibrator max|percentile|mse|entropy]
 //! adapt serve --model NAME [--requests N] [--workers N] [--queue-depth D]
-//!       engine-pool demo: N dynamic-batching workers over one bounded
-//!       request queue (submitters block when it fills)
+//!       [--listen ADDR] [--synthetic] [--addr-file PATH]
+//!       engine-pool serving: N dynamic-batching workers over one bounded
+//!       request queue (submitters block when it fills). Without
+//!       --listen, the self-feeding demo; with --listen HOST:PORT (port 0
+//!       = ephemeral), the HTTP/1.1 front-end (POST /v1/infer,
+//!       POST /v1/plan hot-swap, GET /v1/stats, GET /v1/healthz) until
+//!       killed. --synthetic serves the bundled tiny model on the
+//!       artifact-free emulator backend (the CI smoke); --addr-file
+//!       writes the bound address for scripts.
+//! adapt client --addr HOST:PORT [--requests N] [--concurrency C]
+//!       [--top-k K] [--deadline-ms D] [--swap-spec S | --swap-plan F]
+//!       [--bench-out FILE]
+//!       load generator against a running `adapt serve --listen`:
+//!       submit -> measure -> (optional plan hot-swap) -> measure -> show
+//!       /v1/stats; exits non-zero on any failed response or a swap that
+//!       doesn't take
 //! adapt selftest                      emulator vs XLA cross-check
 //! ```
 //!
@@ -40,7 +54,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use adapt::coordinator::engine::{EngineConfig, InferenceEngine, DEFAULT_QUEUE_DEPTH};
+use adapt::coordinator::engine::{EmulatorSpec, EngineConfig, InferenceEngine, DEFAULT_QUEUE_DEPTH};
 use adapt::coordinator::experiments::{self, SensitivityConfig, Table2Config, Table4Config};
 use adapt::coordinator::features;
 use adapt::coordinator::ops::{self, InferVariant};
@@ -51,8 +65,10 @@ use adapt::lut::LutRegistry;
 use adapt::mult;
 use adapt::quant::calib::CalibratorKind;
 use adapt::runtime::Runtime;
+use adapt::service::{client, http::HttpServer, AdaptService};
 use adapt::util::cli::Args;
 use adapt::util::fmt;
+use adapt::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -302,67 +318,8 @@ fn run() -> Result<()> {
                 println!("  scale[{i:>2}] = {s:.6}  (calib_max = {:.4})", s * 127.0);
             }
         }
-        "serve" => {
-            let model = args.get_or("model", "small_vgg").to_string();
-            let n = args.get_usize("requests", 64)?;
-            let mut cfg = EngineConfig::pjrt(
-                artifacts_from(&args),
-                model.clone(),
-                InferVariant::ApproxLut,
-                Some(args.get_or("acu", "mul8s_1l2h_like").to_string()),
-            );
-            cfg.max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20)? as u64);
-            cfg.workers = args.get_usize("workers", cfg.workers)?;
-            cfg.queue_depth = args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?;
-            let (workers, queue_depth) = (cfg.workers, cfg.queue_depth);
-            // Feed the engine single-sample requests from the eval split.
-            let rt = Runtime::open(&artifacts_from(&args))?;
-            let m = rt.manifest.model(&model)?;
-            if m.input_dtype != "f32" {
-                bail!("serve demo supports f32-input models");
-            }
-            let ds = adapt::data::load(&m.dataset, &Sizes::small());
-            let per: usize = m.input_shape.iter().product();
-            drop(rt);
-            println!(
-                "starting engine pool for {model} \
-                 ({workers} workers, queue depth {queue_depth}, {n} requests)..."
-            );
-            let engine = InferenceEngine::start(cfg)?;
-            let t0 = std::time::Instant::now();
-            let mut pending = Vec::new();
-            for i in 0..n {
-                let x = ds.eval.x_f[(i % ds.eval.num) * per..][..per].to_vec();
-                pending.push(engine.submit(x)?);
-            }
-            let mut ok = 0usize;
-            for rx in pending {
-                if rx.recv()?.is_ok() {
-                    ok += 1;
-                }
-            }
-            let wall = t0.elapsed();
-            let stats = engine.shutdown()?;
-            println!(
-                "{ok}/{n} ok in {} ({:.1} req/s) — {} batches, {} padded slots, \
-                 queue wait {}, busy {}",
-                fmt::dur(wall),
-                n as f64 / wall.as_secs_f64(),
-                stats.total.batches,
-                stats.total.padded_slots,
-                fmt::dur(stats.total.queue_wait),
-                fmt::dur(stats.total.busy),
-            );
-            for (i, w) in stats.per_worker.iter().enumerate() {
-                println!(
-                    "  worker {i}: {} requests, {} batches, {} padded, busy {}",
-                    w.requests,
-                    w.batches,
-                    w.padded_slots,
-                    fmt::dur(w.busy),
-                );
-            }
-        }
+        "serve" => serve(&args)?,
+        "client" => client_cmd(&args)?,
         "selftest" => {
             let mut rt = Runtime::open(&artifacts_from(&args))?;
             let model = args.get_or("model", "small_vgg").to_string();
@@ -375,9 +332,292 @@ fn run() -> Result<()> {
             println!("  retrain --model M (--plan-file F | --spec S) [--epochs N] [--lr LR] [--save]");
             println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke)");
             println!("  plan --model M [--spec S] | calibrate --model M");
-            println!("  serve --model M [--workers N] [--queue-depth D] | selftest [--model M]");
+            println!("  serve --model M [--workers N] [--queue-depth D] [--listen ADDR] [--synthetic]");
+            println!("        (--listen = HTTP/1.1 front-end: /v1/infer /v1/plan /v1/stats /v1/healthz)");
+            println!("  client --addr HOST:PORT [--requests N] [--concurrency C] [--swap-spec S]");
+            println!("  selftest [--model M]");
             println!("  thread defaults: env ADAPT_THREADS (else available parallelism)");
         }
+    }
+    Ok(())
+}
+
+/// `adapt serve`: start the engine pool and either run the self-feeding
+/// demo (no `--listen`) or expose the HTTP/1.1 front-end until killed.
+fn serve(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 64)?;
+    let workers = args.get_usize("workers", adapt::util::threadpool::default_threads())?;
+    let queue_depth = args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?;
+    let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20)? as u64);
+    let acu = args.get_or("acu", "mul8s_1l2h_like").to_string();
+    let synthetic = args.flag("synthetic");
+
+    let (mut cfg, model_name) = if synthetic {
+        // Bundled tiny model on the artifact-free emulator backend: no
+        // artifacts dir at all (the CI serve smoke).
+        let seed = args.get_usize("seed", 0x5EED)? as u64;
+        let model = adapt::trainer::synth::tiny_cnn();
+        let name = model.name.clone();
+        let params = adapt::trainer::synth::tiny_params(&model, seed);
+        let ds = adapt::trainer::synth::tiny_dataset(256, 64);
+        let scales = adapt::trainer::calibrate_emulator(
+            &model,
+            &params,
+            &ds.train,
+            32,
+            2,
+            CalibratorKind::Percentile,
+            0.999,
+            workers.max(1),
+        )?;
+        let plan = retransform(&model, &Policy::all(LayerMode::lut(acu.as_str())));
+        let spec = EmulatorSpec {
+            model,
+            params,
+            plan,
+            act_scales: scales,
+            luts: LutRegistry::in_memory(),
+            batch: args.get_usize("batch", 8)?,
+            gemm_threads: 1,
+        };
+        (EngineConfig::emulator(spec), name)
+    } else {
+        let model = args.get_or("model", "small_vgg").to_string();
+        let cfg = EngineConfig::pjrt(
+            artifacts_from(args),
+            model.clone(),
+            InferVariant::ApproxLut,
+            Some(acu.clone()),
+        );
+        (cfg, model)
+    };
+    cfg.max_wait = max_wait;
+    cfg.workers = workers;
+    cfg.queue_depth = queue_depth;
+
+    if let Some(addr) = args.get("listen") {
+        // Network front-end: serve /v1 until the process is killed.
+        let service = std::sync::Arc::new(AdaptService::start(cfg)?);
+        let server = HttpServer::start(std::sync::Arc::clone(&service), addr)?;
+        let bound = server.addr();
+        println!(
+            "adapt service for {model_name} listening on http://{bound} \
+             ({workers} workers, queue depth {queue_depth})"
+        );
+        println!("  POST /v1/infer   POST /v1/plan   GET /v1/stats   GET /v1/healthz");
+        if let Some(path) = args.get("addr-file") {
+            std::fs::write(path, bound.to_string())
+                .with_context(|| format!("writing {path}"))?;
+        }
+        loop {
+            std::thread::park();
+        }
+    }
+
+    // Self-feeding demo: build the request feed from the eval split (the
+    // HTTP path above never needs it). i32-input models (token sequences)
+    // ride along as rounded ids instead of refusing to start.
+    let samples: Vec<Vec<f32>> = if synthetic {
+        let ds = adapt::trainer::synth::tiny_dataset(64, 64);
+        let per: usize = adapt::trainer::synth::tiny_cnn()
+            .input_shape
+            .iter()
+            .product();
+        (0..n.max(1))
+            .map(|i| ds.eval.x_f[(i % ds.eval.num) * per..][..per].to_vec())
+            .collect()
+    } else {
+        let rt = Runtime::open(&artifacts_from(args))?;
+        let m = rt.manifest.model(&model_name)?;
+        let ds = adapt::data::load(&m.dataset, &Sizes::small());
+        let per: usize = m.input_shape.iter().product();
+        let is_i32 = m.input_dtype == "i32";
+        drop(rt);
+        (0..n.max(1))
+            .map(|i| {
+                let at = (i % ds.eval.num) * per;
+                if is_i32 {
+                    ds.eval.x_i[at..at + per].iter().map(|&v| v as f32).collect()
+                } else {
+                    ds.eval.x_f[at..at + per].to_vec()
+                }
+            })
+            .collect()
+    };
+
+    // The demo drives the legacy shim surface (`submit`/`infer` keep
+    // working unchanged on top of the typed path).
+    println!(
+        "starting engine pool for {model_name} \
+         ({workers} workers, queue depth {queue_depth}, {n} requests)..."
+    );
+    let engine = InferenceEngine::start(cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for x in samples.into_iter().take(n) {
+        pending.push(engine.submit(x)?);
+    }
+    // Mid-run visibility: the pool reports progress *before* shutdown now.
+    let snap = engine.stats_snapshot();
+    println!(
+        "mid-run snapshot: {} requests across {} batches so far (queue depth {})",
+        snap.total.requests,
+        snap.total.batches,
+        engine.queue_len(),
+    );
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = engine.shutdown()?;
+    let (qp50, qp95, qp99) = stats.queue_wait_percentiles_us();
+    let (cp50, cp95, cp99) = stats.compute_percentiles_us();
+    println!(
+        "{ok}/{n} ok in {} ({:.1} req/s) — {} batches, {} padded slots, \
+         queue wait {}, busy {}",
+        fmt::dur(wall),
+        n as f64 / wall.as_secs_f64(),
+        stats.total.batches,
+        stats.total.padded_slots,
+        fmt::dur(stats.total.queue_wait),
+        fmt::dur(stats.total.busy),
+    );
+    println!(
+        "latency (µs): queue wait p50/p95/p99 = {qp50}/{qp95}/{qp99}, \
+         compute p50/p95/p99 = {cp50}/{cp95}/{cp99}"
+    );
+    for (i, w) in stats.per_worker.iter().enumerate() {
+        println!(
+            "  worker {i}: {} requests, {} batches, {} padded, busy {}",
+            w.requests,
+            w.batches,
+            w.padded_slots,
+            fmt::dur(w.busy),
+        );
+    }
+    Ok(())
+}
+
+/// `adapt client`: load-generate against a running `adapt serve --listen`,
+/// optionally hot-swapping the plan between two measured phases.
+fn client_cmd(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("--addr required (host:port)")?.to_string();
+    let requests = args.get_usize("requests", 128)?;
+    let concurrency = args.get_usize("concurrency", 4)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let input_len = match args.get_usize("input-len", 0)? {
+        0 => client::discover_input_len(&addr)?,
+        n => n,
+    };
+    let cfg = client::LoadConfig {
+        addr: addr.clone(),
+        requests,
+        concurrency,
+        input_len,
+        top_k: args.get("top-k").map(|s| s.parse()).transpose()?,
+        deadline_ms: args.get("deadline-ms").map(|s| s.parse()).transpose()?,
+        seed,
+    };
+    println!(
+        "load: {requests} requests x {concurrency} connections against http://{addr} \
+         (input_len {input_len})"
+    );
+    let print_report = |label: &str, r: &client::LoadReport| {
+        let gens: Vec<String> = r
+            .by_generation
+            .iter()
+            .map(|(g, n)| format!("gen {g}: {n}"))
+            .collect();
+        println!(
+            "{label}: {}/{} ok in {} ({:.1} req/s), latency p50/p95 = {}/{} µs [{}]",
+            r.ok,
+            r.ok + r.errors,
+            fmt::dur(r.wall),
+            r.requests_per_sec(),
+            r.percentile_us(0.50),
+            r.percentile_us(0.95),
+            gens.join(", "),
+        );
+    };
+    let phase1 = client::run_load(&cfg)?;
+    print_report("phase 1", &phase1);
+    if phase1.errors > 0 {
+        bail!("{} failed responses in phase 1", phase1.errors);
+    }
+
+    // Optional live plan swap between the two measured phases.
+    let swap_body = if let Some(spec) = args.get("swap-spec") {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("spec".to_string(), Json::Str(spec.to_string()));
+        Some(Json::Obj(m).to_string())
+    } else {
+        args.get("swap-plan")
+            .map(|path| {
+                std::fs::read_to_string(path).with_context(|| format!("reading plan {path}"))
+            })
+            .transpose()?
+    };
+    let mut phase2 = None;
+    if let Some(body) = swap_body {
+        let (status, resp) = client::http_call(&addr, "POST", "/v1/plan", Some(&body))?;
+        if status != 200 {
+            bail!("plan swap failed ({status}): {resp}");
+        }
+        let generation = Json::parse(&resp)?.get("generation")?.i64()? as u64;
+        println!("plan swapped: now serving generation {generation}");
+        let cfg2 = client::LoadConfig {
+            seed: seed ^ 0xA5A5,
+            ..cfg.clone()
+        };
+        let r = client::run_load(&cfg2)?;
+        print_report("phase 2", &r);
+        if r.errors > 0 {
+            bail!("{} failed responses in phase 2", r.errors);
+        }
+        // Every phase-2 response was submitted after the swap returned, so
+        // all of them must carry the new generation.
+        if r.by_generation.keys().any(|&g| g != generation) {
+            bail!(
+                "phase 2 saw generations {:?}, expected only {generation}",
+                r.by_generation.keys().collect::<Vec<_>>()
+            );
+        }
+        phase2 = Some((generation, r));
+    }
+
+    let (status, stats) = client::http_call(&addr, "GET", "/v1/stats", None)?;
+    if status != 200 {
+        bail!("/v1/stats failed ({status}): {stats}");
+    }
+    let j = Json::parse(&stats)?;
+    let total = j.get("total")?;
+    println!(
+        "server stats: {} requests, {} batches, generation {}, \
+         queue wait p50/p95/p99 = {}/{}/{} µs",
+        total.get("requests")?.i64()?,
+        total.get("batches")?.i64()?,
+        j.get("generation")?.i64()?,
+        total.get("queue_wait_p50_us")?.i64()?,
+        total.get("queue_wait_p95_us")?.i64()?,
+        total.get("queue_wait_p99_us")?.i64()?,
+    );
+
+    if let Some(out) = args.get("bench-out") {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("requests".to_string(), Json::Num(requests as f64));
+        doc.insert("concurrency".to_string(), Json::Num(concurrency as f64));
+        doc.insert("phase1".to_string(), phase1.to_json());
+        if let Some((generation, r)) = &phase2 {
+            doc.insert("phase2".to_string(), r.to_json());
+            doc.insert("generation".to_string(), Json::Num(*generation as f64));
+        }
+        doc.insert("server_stats".to_string(), j);
+        std::fs::write(out, Json::Obj(doc).to_string())
+            .with_context(|| format!("writing {out}"))?;
+        println!("written {out}");
     }
     Ok(())
 }

@@ -1,0 +1,360 @@
+//! The versioned request/response types of the serving API (`/v1`).
+//!
+//! [`InferRequest`] / [`InferResponse`] replace the engine's original bare
+//! `Vec<f32>`-in / `Result<Vec<f32>>`-out surface: requests carry an id,
+//! an optional top-k ask and an optional queueing deadline; responses
+//! carry the output row plus per-request observability (queue wait,
+//! compute time, serving worker, plan generation). [`ServiceError`] is
+//! the structured error enum every layer speaks — the engine rejects
+//! malformed or expired requests with it, the control plane rejects bad
+//! plans with it, and the HTTP front-end maps each variant onto a status
+//! code and a stable machine-readable `code` string.
+//!
+//! Everything (de)serializes through [`util::json`](crate::util::json);
+//! f32 payloads survive the trip bit-for-bit (f32 → f64 is exact and the
+//! writer emits a shortest round-tripping decimal).
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// One typed inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    /// Client-chosen id echoed in the response; auto-assigned when `None`.
+    pub id: Option<u64>,
+    /// Flat per-sample input (the model's `input_shape` product). Integer
+    /// input models (token sequences) take the ids as f32 values.
+    pub input: Vec<f32>,
+    /// Return the k largest (index, score) pairs alongside the output.
+    pub top_k: Option<usize>,
+    /// Max time the request may wait in the engine queue before it is
+    /// rejected with [`ServiceError::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+}
+
+impl InferRequest {
+    pub fn new(input: Vec<f32>) -> InferRequest {
+        InferRequest {
+            id: None,
+            input,
+            top_k: None,
+            deadline: None,
+        }
+    }
+
+    /// Parse the `POST /v1/infer` body:
+    /// `{"input": [..], "id": 7, "top_k": 3, "deadline_ms": 50}`.
+    pub fn from_json(j: &Json) -> Result<InferRequest, ServiceError> {
+        let bad = ServiceError::BadRequest;
+        let input = j
+            .get("input")
+            .map_err(|e| bad(format!("{e}")))?
+            .arr()
+            .map_err(|e| bad(format!("input: {e}")))?
+            .iter()
+            .map(|v| v.f64().map(|n| n as f32))
+            .collect::<anyhow::Result<Vec<f32>>>()
+            .map_err(|e| bad(format!("input: {e}")))?;
+        let id = match j.opt("id") {
+            Some(v) => Some(
+                v.i64()
+                    .ok()
+                    .and_then(|n| u64::try_from(n).ok())
+                    // Ids transit JSON as f64: above 2^53 the echo would
+                    // come back mangled, so reject instead of corrupting.
+                    .filter(|&n| n <= (1u64 << 53))
+                    .ok_or_else(|| {
+                        bad("id must be an integer in [0, 2^53] (it is echoed through JSON)"
+                            .into())
+                    })?,
+            ),
+            None => None,
+        };
+        let top_k = match j.opt("top_k") {
+            Some(v) => Some(v.usize().map_err(|e| bad(format!("top_k: {e}")))?),
+            None => None,
+        };
+        let deadline = match j.opt("deadline_ms") {
+            Some(v) => Some(Duration::from_millis(
+                v.i64()
+                    .ok()
+                    .and_then(|n| u64::try_from(n).ok())
+                    .ok_or_else(|| bad("deadline_ms must be a non-negative integer".into()))?,
+            )),
+            None => None,
+        };
+        Ok(InferRequest {
+            id,
+            input,
+            top_k,
+            deadline,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("input".into(), Json::from_f32s(&self.input));
+        if let Some(id) = self.id {
+            m.insert("id".into(), Json::Num(id as f64));
+        }
+        if let Some(k) = self.top_k {
+            m.insert("top_k".into(), Json::Num(k as f64));
+        }
+        if let Some(d) = self.deadline {
+            m.insert("deadline_ms".into(), Json::Num(d.as_millis() as f64));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// One typed inference response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferResponse {
+    /// Echo of the request id (client-chosen or auto-assigned).
+    pub id: u64,
+    /// Flat output row.
+    pub output: Vec<f32>,
+    /// The k largest (index, score) pairs, when the request asked.
+    pub top_k: Option<Vec<(usize, f32)>>,
+    /// Time the request spent queued before a worker picked it up.
+    pub queue_wait: Duration,
+    /// Wall-clock of the batch that computed this response.
+    pub compute: Duration,
+    /// Pool worker that served the request.
+    pub worker: usize,
+    /// Plan generation the response was computed under (bumped by every
+    /// successful plan hot-swap).
+    pub generation: u64,
+}
+
+impl InferResponse {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert("output".into(), Json::from_f32s(&self.output));
+        if let Some(tk) = &self.top_k {
+            m.insert(
+                "top_k".into(),
+                Json::Arr(
+                    tk.iter()
+                        .map(|(i, s)| {
+                            Json::Arr(vec![Json::Num(*i as f64), Json::Num(*s as f64)])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        m.insert(
+            "queue_wait_us".into(),
+            Json::Num(self.queue_wait.as_micros() as f64),
+        );
+        m.insert(
+            "compute_us".into(),
+            Json::Num(self.compute.as_micros() as f64),
+        );
+        m.insert("worker".into(), Json::Num(self.worker as f64));
+        m.insert("generation".into(), Json::Num(self.generation as f64));
+        Json::Obj(m)
+    }
+
+    /// Parse a `/v1/infer` response body (the client side of the wire).
+    pub fn from_json(j: &Json) -> anyhow::Result<InferResponse> {
+        let top_k = match j.opt("top_k") {
+            Some(v) => Some(
+                v.arr()?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair.arr()?;
+                        anyhow::ensure!(p.len() == 2, "top_k pair must be [index, score]");
+                        Ok((p[0].usize()?, p[1].f64()? as f32))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        Ok(InferResponse {
+            id: j.get("id")?.i64()? as u64,
+            output: j.get("output")?.f32_vec()?,
+            top_k,
+            queue_wait: Duration::from_micros(j.get("queue_wait_us")?.i64()? as u64),
+            compute: Duration::from_micros(j.get("compute_us")?.i64()? as u64),
+            worker: j.get("worker")?.usize()?,
+            generation: j.get("generation")?.i64()? as u64,
+        })
+    }
+}
+
+/// Structured service error: every failure mode of the serving path, each
+/// with a stable machine-readable code and an HTTP status.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceError {
+    /// Malformed request (bad JSON, missing/mistyped fields).
+    BadRequest(String),
+    /// Input length does not match the model's flat input size.
+    WrongInputLength { got: usize, expected: usize },
+    /// The model's input dtype is not servable by this backend.
+    UnsupportedDtype(String),
+    /// The request out-waited its queueing deadline.
+    DeadlineExceeded { waited_ms: u64 },
+    /// Request body exceeded the server's size cap.
+    BodyTooLarge { got: usize, max: usize },
+    /// No such route.
+    NotFound(String),
+    /// Known route, wrong HTTP method.
+    MethodNotAllowed(String),
+    /// Plan hot-swap rejected (validation failed or backend can't swap).
+    PlanRejected(String),
+    /// The engine is shutting down; no new requests.
+    ShuttingDown,
+    /// Backend execution failure.
+    Backend(String),
+    /// Anything else (a bug).
+    Internal(String),
+}
+
+impl ServiceError {
+    /// Stable machine-readable code (the `error` field on the wire).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServiceError::BadRequest(_) => "bad_request",
+            ServiceError::WrongInputLength { .. } => "wrong_input_length",
+            ServiceError::UnsupportedDtype(_) => "unsupported_dtype",
+            ServiceError::DeadlineExceeded { .. } => "deadline_exceeded",
+            ServiceError::BodyTooLarge { .. } => "body_too_large",
+            ServiceError::NotFound(_) => "not_found",
+            ServiceError::MethodNotAllowed(_) => "method_not_allowed",
+            ServiceError::PlanRejected(_) => "plan_rejected",
+            ServiceError::ShuttingDown => "shutting_down",
+            ServiceError::Backend(_) => "backend",
+            ServiceError::Internal(_) => "internal",
+        }
+    }
+
+    /// HTTP status the front-end answers with.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServiceError::BadRequest(_) | ServiceError::WrongInputLength { .. } => 400,
+            ServiceError::NotFound(_) => 404,
+            ServiceError::MethodNotAllowed(_) => 405,
+            ServiceError::BodyTooLarge { .. } => 413,
+            ServiceError::UnsupportedDtype(_) | ServiceError::PlanRejected(_) => 422,
+            ServiceError::ShuttingDown => 503,
+            ServiceError::DeadlineExceeded { .. } => 504,
+            ServiceError::Backend(_) | ServiceError::Internal(_) => 500,
+        }
+    }
+
+    /// Wire form: `{"error": "<code>", "message": "<detail>"}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("error".into(), Json::Str(self.code().into()));
+        m.insert("message".into(), Json::Str(self.to_string()));
+        Json::Obj(m)
+    }
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServiceError::WrongInputLength { got, expected } => {
+                write!(f, "input length {got} != expected {expected}")
+            }
+            ServiceError::UnsupportedDtype(d) => {
+                write!(f, "model input dtype {d:?} is not servable on this backend")
+            }
+            ServiceError::DeadlineExceeded { waited_ms } => {
+                write!(f, "request out-waited its deadline ({waited_ms} ms in queue)")
+            }
+            ServiceError::BodyTooLarge { got, max } => {
+                write!(f, "request body {got} bytes exceeds cap {max}")
+            }
+            ServiceError::NotFound(p) => write!(f, "no such route: {p}"),
+            ServiceError::MethodNotAllowed(m) => write!(f, "method not allowed: {m}"),
+            ServiceError::PlanRejected(m) => write!(f, "plan rejected: {m}"),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::Backend(m) => write!(f, "backend failure: {m}"),
+            ServiceError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// The k largest (index, score) pairs of an output row, scores descending
+/// (ties broken by lower index — deterministic).
+pub fn top_k_of(output: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..output.len()).collect();
+    idx.sort_by(|&a, &b| output[b].total_cmp(&output[a]).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx.into_iter().map(|i| (i, output[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = InferRequest {
+            id: Some(9),
+            input: vec![0.125, -3.5, 1.0e-7],
+            top_k: Some(2),
+            deadline: Some(Duration::from_millis(50)),
+        };
+        let j = Json::parse(&req.to_json().to_string()).unwrap();
+        assert_eq!(InferRequest::from_json(&j).unwrap(), req);
+    }
+
+    #[test]
+    fn response_roundtrip_is_bit_exact() {
+        let resp = InferResponse {
+            id: 3,
+            output: vec![1.0f32 / 3.0, f32::MIN_POSITIVE, -0.0, 7.25],
+            top_k: Some(vec![(3, 7.25), (0, 1.0 / 3.0)]),
+            queue_wait: Duration::from_micros(15),
+            compute: Duration::from_micros(420),
+            worker: 1,
+            generation: 2,
+        };
+        let j = Json::parse(&resp.to_json().to_string()).unwrap();
+        let back = InferResponse::from_json(&j).unwrap();
+        for (a, b) in back.output.iter().zip(&resp.output) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 must survive the wire");
+        }
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.generation, resp.generation);
+    }
+
+    #[test]
+    fn malformed_requests_are_typed() {
+        let j = Json::parse(r#"{"id": 1}"#).unwrap();
+        let e = InferRequest::from_json(&j).unwrap_err();
+        assert_eq!(e.code(), "bad_request");
+        let j = Json::parse(r#"{"input": "nope"}"#).unwrap();
+        assert!(InferRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"input": [1], "id": -4}"#).unwrap();
+        assert!(InferRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn error_codes_and_statuses() {
+        let e = ServiceError::WrongInputLength { got: 3, expected: 16 };
+        assert_eq!(e.http_status(), 400);
+        let j = e.to_json();
+        assert_eq!(j.get("error").unwrap().str().unwrap(), "wrong_input_length");
+        assert_eq!(ServiceError::NotFound("/x".into()).http_status(), 404);
+        assert_eq!(ServiceError::BodyTooLarge { got: 9, max: 1 }.http_status(), 413);
+        assert_eq!(
+            ServiceError::DeadlineExceeded { waited_ms: 1 }.http_status(),
+            504
+        );
+    }
+
+    #[test]
+    fn top_k_deterministic_on_ties() {
+        let out = vec![0.5, 2.0, 2.0, -1.0];
+        assert_eq!(top_k_of(&out, 3), vec![(1, 2.0), (2, 2.0), (0, 0.5)]);
+    }
+}

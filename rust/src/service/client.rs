@@ -1,0 +1,247 @@
+//! Minimal HTTP/1.1 client + load generator for the serving front-end.
+//!
+//! Two layers: [`http_call`] is a one-shot request/response helper (used
+//! for `/v1/plan`, `/v1/stats`, `/v1/healthz` control calls and tests);
+//! [`run_load`] is the `adapt client` load generator — N client threads,
+//! each holding one keep-alive connection, pushing deterministic
+//! inference requests and checking id echo, so the whole
+//! submit → measure → swap plan → measure bench loop runs over the wire.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::api::InferResponse;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One HTTP request over a fresh connection; returns (status, body).
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    write_request(&mut stream, addr, method, path, body, false)?;
+    read_response(&mut stream)
+}
+
+/// Write one request on an existing connection.
+fn write_request(
+    stream: &mut TcpStream,
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    keep_alive: bool,
+) -> Result<()> {
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one response; returns (status, body). Requires Content-Length
+/// framing (which the server always emits).
+fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-response");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("non-UTF-8 response head")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line {status_line:?}"))?;
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((status, String::from_utf8(body).context("non-UTF-8 body")?))
+}
+
+/// Load-generator configuration (`adapt client`).
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Total requests across all client threads.
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub concurrency: usize,
+    /// Flat input length (discover via `/v1/healthz` when in doubt).
+    pub input_len: usize,
+    /// Ask the server for top-k alongside each output.
+    pub top_k: Option<usize>,
+    /// Per-request queueing deadline forwarded to the server.
+    pub deadline_ms: Option<u64>,
+    /// Seed for the deterministic request payloads.
+    pub seed: u64,
+}
+
+/// Outcome of one [`run_load`] phase.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub ok: usize,
+    pub errors: usize,
+    pub wall: Duration,
+    /// Responses per plan generation (hot-swap visibility).
+    pub by_generation: BTreeMap<u64, usize>,
+    /// Client-observed end-to-end latency, sorted ascending (µs).
+    pub latencies_us: Vec<u64>,
+}
+
+impl LoadReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        (self.ok + self.errors) as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Client-side latency percentile in µs (0 when empty).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let rank = ((p * self.latencies_us.len() as f64).ceil() as usize)
+            .clamp(1, self.latencies_us.len());
+        self.latencies_us[rank - 1]
+    }
+
+    /// The canonical JSON shape for one load phase — shared by
+    /// `adapt client --bench-out` and `benches/serve_http.rs` so the
+    /// tracked `BENCH_*.json` phase records never drift apart.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("ok".to_string(), Json::Num(self.ok as f64));
+        m.insert("errors".to_string(), Json::Num(self.errors as f64));
+        m.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
+        m.insert("req_per_s".to_string(), Json::Num(self.requests_per_sec()));
+        m.insert("p50_us".to_string(), Json::Num(self.percentile_us(0.50) as f64));
+        m.insert("p95_us".to_string(), Json::Num(self.percentile_us(0.95) as f64));
+        m.insert("p99_us".to_string(), Json::Num(self.percentile_us(0.99) as f64));
+        m.insert(
+            "by_generation".to_string(),
+            Json::Obj(
+                self.by_generation
+                    .iter()
+                    .map(|(g, n)| (g.to_string(), Json::Num(*n as f64)))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Discover the served model's flat input length from `/v1/healthz`.
+pub fn discover_input_len(addr: &str) -> Result<usize> {
+    let (status, body) = http_call(addr, "GET", "/v1/healthz", None)?;
+    if status != 200 {
+        bail!("healthz returned {status}: {body}");
+    }
+    Json::parse(&body)?.get("input_len")?.usize()
+}
+
+/// Drive `cfg.requests` inference calls over `cfg.concurrency` keep-alive
+/// connections. Inputs are deterministic per (thread, sequence) so a
+/// given config always sends the same traffic; ids are checked for echo
+/// (a swapped response fails loudly).
+pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
+    let threads = cfg.concurrency.max(1);
+    let per_thread = cfg.requests.div_ceil(threads);
+    let t0 = Instant::now();
+    let results: Vec<Result<LoadReport>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let cfg = cfg.clone();
+                let n = per_thread.min(cfg.requests.saturating_sub(t * per_thread));
+                s.spawn(move || client_thread(&cfg, t, n))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    let mut report = LoadReport::default();
+    for r in results {
+        let r = r?;
+        report.ok += r.ok;
+        report.errors += r.errors;
+        for (g, n) in r.by_generation {
+            *report.by_generation.entry(g).or_insert(0) += n;
+        }
+        report.latencies_us.extend(r.latencies_us);
+    }
+    report.latencies_us.sort_unstable();
+    report.wall = t0.elapsed();
+    Ok(report)
+}
+
+/// One client connection's share of the load.
+fn client_thread(cfg: &LoadConfig, thread: usize, n: usize) -> Result<LoadReport> {
+    let mut report = LoadReport::default();
+    if n == 0 {
+        return Ok(report);
+    }
+    let mut stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to {}", cfg.addr))?;
+    stream.set_nodelay(true).ok();
+    let mut rng = Rng::new(cfg.seed ^ ((thread as u64 + 1) * 0x9E37_79B9));
+    for i in 0..n {
+        let input: Vec<f32> = (0..cfg.input_len).map(|_| rng.next_gauss()).collect();
+        let id = (thread * 1_000_000 + i) as u64;
+        let mut req = super::InferRequest::new(input);
+        req.id = Some(id);
+        req.top_k = cfg.top_k;
+        req.deadline = cfg.deadline_ms.map(Duration::from_millis);
+        let body = req.to_json().to_string();
+        let sent = Instant::now();
+        write_request(&mut stream, &cfg.addr, "POST", "/v1/infer", Some(&body), true)?;
+        let (status, resp_body) = read_response(&mut stream)?;
+        let latency = sent.elapsed();
+        if status == 200 {
+            let resp = InferResponse::from_json(&Json::parse(&resp_body)?)?;
+            if resp.id != id {
+                bail!("response id {} for request id {id}: swapped response", resp.id);
+            }
+            report.ok += 1;
+            *report.by_generation.entry(resp.generation).or_insert(0) += 1;
+            report.latencies_us.push(latency.as_micros() as u64);
+        } else {
+            report.errors += 1;
+        }
+    }
+    Ok(report)
+}

@@ -1,0 +1,414 @@
+//! Dependency-free HTTP/1.1 front-end for [`AdaptService`].
+//!
+//! The build is offline, so the framing is hand-rolled over
+//! `std::net::TcpListener` (the same spirit as the vendored stand-ins):
+//! request-line + headers, `Content-Length` bodies, `keep-alive`
+//! connections, JSON in / JSON out. Exactly four routes:
+//!
+//! ```text
+//! POST /v1/infer    InferRequest body  -> InferResponse | error
+//! POST /v1/plan     plan JSON or {"spec": "..."} -> {"generation": n}
+//! GET  /v1/stats    live pool stats (totals, per-worker, p50/p95/p99)
+//! GET  /v1/healthz  liveness summary
+//! ```
+//!
+//! Every error is a [`ServiceError`] rendered as
+//! `{"error": code, "message": ...}` with that variant's status code.
+//! Bodies above [`ServeOptions::max_body`] are refused with 413 before
+//! being read; malformed framing gets 400; unknown routes 404; known
+//! routes with the wrong method 405.
+//!
+//! One thread per connection, each with a short read timeout so `stop()`
+//! can join everything promptly. Serving threads only share the
+//! `Arc<AdaptService>`; all request-level concurrency control (bounded
+//! queue, backpressure) stays in the engine pool underneath.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::api::ServiceError;
+use super::AdaptService;
+use crate::util::json::Json;
+
+/// Server tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Max request-body size in bytes; larger gets 413 without a read.
+    pub max_body: usize,
+    /// Per-read socket timeout: the granularity at which connection
+    /// threads notice `stop()`.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_body: 8 << 20,
+            read_timeout: Duration::from_millis(100),
+        }
+    }
+}
+
+/// One parsed request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// Connection-level outcome of trying to read a request.
+enum ReadOutcome {
+    Request(HttpRequest),
+    /// Peer closed (or idle + server stopping): drop the connection.
+    Closed,
+    /// Framing error worth answering before closing.
+    Bad(ServiceError),
+}
+
+/// The serving front-end: accept loop + per-connection threads.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
+    /// serve `service` until [`stop`](Self::stop).
+    pub fn start(service: Arc<AdaptService>, addr: &str) -> Result<HttpServer> {
+        Self::start_with(service, addr, ServeOptions::default())
+    }
+
+    pub fn start_with(
+        service: Arc<AdaptService>,
+        addr: &str,
+        opts: ServeOptions,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("adapt-http-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let service = Arc::clone(&service);
+                        let stop = Arc::clone(&stop);
+                        let handle = std::thread::Builder::new()
+                            .name("adapt-http-conn".into())
+                            .spawn(move || serve_conn(stream, &service, &stop, opts));
+                        if let Ok(h) = handle {
+                            let mut guard = conns.lock().expect("conn list poisoned");
+                            // Reap finished threads so a long-lived server
+                            // doesn't accumulate handles.
+                            guard.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
+                            guard.push(h);
+                        }
+                    }
+                })
+                .context("spawning accept loop")?
+        };
+        Ok(HttpServer {
+            addr,
+            stop,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake the accept loop, and join every connection
+    /// thread (each notices the flag within one read timeout).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = {
+            let mut guard = self.conns.lock().expect("conn list poisoned");
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::Release);
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve one connection: a keep-alive loop of read → route → respond.
+fn serve_conn(
+    mut stream: TcpStream,
+    service: &AdaptService,
+    stop: &AtomicBool,
+    opts: ServeOptions,
+) {
+    let _ = stream.set_read_timeout(Some(opts.read_timeout));
+    let _ = stream.set_nodelay(true);
+    // Bytes read past the previous request's body (HTTP/1.1 pipelining):
+    // they are the start of the next request, not garbage.
+    let mut carry: Vec<u8> = Vec::new();
+    loop {
+        match read_request(&mut stream, &mut carry, stop, opts.max_body) {
+            ReadOutcome::Closed => return,
+            ReadOutcome::Bad(e) => {
+                // Drain what the peer already sent (bounded) before the
+                // error response + close: closing with unread data makes
+                // some TCP stacks RST and discard the response in flight.
+                drain(&mut stream, 1 << 20);
+                let _ = write_response(&mut stream, e.http_status(), &e.to_json(), false);
+                return;
+            }
+            ReadOutcome::Request(req) => {
+                let (status, body) = route(service, &req);
+                if write_response(&mut stream, status, &body, req.keep_alive).is_err()
+                    || !req.keep_alive
+                {
+                    return;
+                }
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+    }
+}
+
+/// Dispatch one request to the service. Always returns a JSON body.
+fn route(service: &AdaptService, req: &HttpRequest) -> (u16, Json) {
+    let err = |e: ServiceError| (e.http_status(), e.to_json());
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/infer") => {
+            let body = match std::str::from_utf8(&req.body) {
+                Ok(s) => s,
+                Err(_) => return err(ServiceError::BadRequest("body is not UTF-8".into())),
+            };
+            let parsed = match Json::parse(body) {
+                Ok(j) => j,
+                Err(e) => return err(ServiceError::BadRequest(format!("{e:#}"))),
+            };
+            let infer_req = match super::InferRequest::from_json(&parsed) {
+                Ok(r) => r,
+                Err(e) => return err(e),
+            };
+            match service.infer(infer_req) {
+                Ok(resp) => (200, resp.to_json()),
+                Err(e) => err(e),
+            }
+        }
+        ("POST", "/v1/plan") => {
+            let body = match std::str::from_utf8(&req.body) {
+                Ok(s) => s,
+                Err(_) => return err(ServiceError::BadRequest("body is not UTF-8".into())),
+            };
+            match service.swap_plan_body(body) {
+                Ok(generation) => {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("generation".into(), Json::Num(generation as f64));
+                    (200, Json::Obj(m))
+                }
+                Err(e) => err(e),
+            }
+        }
+        ("GET", "/v1/stats") => (200, service.stats().to_json()),
+        ("GET", "/v1/healthz") => (200, service.health().to_json()),
+        (_, "/v1/infer") | (_, "/v1/plan") | (_, "/v1/stats") | (_, "/v1/healthz") => err(
+            ServiceError::MethodNotAllowed(format!("{} {}", req.method, req.path)),
+        ),
+        _ => err(ServiceError::NotFound(req.path.clone())),
+    }
+}
+
+/// Read one request (request line + headers + Content-Length body).
+/// `carry` holds bytes already read past the previous request's body
+/// (pipelining); on return it holds whatever follows *this* request.
+fn read_request(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    stop: &AtomicBool,
+    max_body: usize,
+) -> ReadOutcome {
+    const MAX_HEAD: usize = 16 << 10;
+    let mut buf: Vec<u8> = std::mem::take(carry);
+    let mut chunk = [0u8; 4096];
+    // --- head: read until \r\n\r\n -------------------------------------
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return ReadOutcome::Bad(ServiceError::BadRequest("header block too large".into()));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle timeout: keep waiting unless the server is
+                // stopping (a half-received request is dropped then —
+                // its sender gets a reset, not a hang).
+                if stop.load(Ordering::Acquire) {
+                    return ReadOutcome::Closed;
+                }
+                continue;
+            }
+            Err(_) => return ReadOutcome::Closed,
+        }
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(s) => s.to_string(),
+        Err(_) => return ReadOutcome::Bad(ServiceError::BadRequest("non-UTF-8 header".into())),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+        _ => {
+            return ReadOutcome::Bad(ServiceError::BadRequest(format!(
+                "malformed request line {request_line:?}"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return ReadOutcome::Bad(ServiceError::BadRequest(format!(
+            "unsupported version {version:?}"
+        )));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else {
+            continue;
+        };
+        let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
+        if k == "content-length" {
+            content_length = match v.parse() {
+                Ok(n) => n,
+                Err(_) => {
+                    return ReadOutcome::Bad(ServiceError::BadRequest(format!(
+                        "bad content-length {v:?}"
+                    )))
+                }
+            };
+        } else if k == "connection" {
+            keep_alive = !v.eq_ignore_ascii_case("close");
+        }
+    }
+    if content_length > max_body {
+        return ReadOutcome::Bad(ServiceError::BodyTooLarge {
+            got: content_length,
+            max: max_body,
+        });
+    }
+    // --- body: exactly content_length bytes past the head ----------------
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    return ReadOutcome::Closed;
+                }
+                continue;
+            }
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+    // Anything past this request's body is the next pipelined request.
+    if body.len() > content_length {
+        *carry = body.split_off(content_length);
+    }
+    ReadOutcome::Request(HttpRequest {
+        method,
+        path,
+        body,
+        keep_alive,
+    })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read and discard up to `cap` already-sent bytes (stops at the first
+/// read timeout — the peer has gone quiet — or EOF).
+fn drain(stream: &mut TcpStream, cap: usize) {
+    let mut chunk = [0u8; 4096];
+    let mut total = 0usize;
+    while total < cap {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => total += n,
+            Err(_) => break,
+        }
+    }
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+/// Write one JSON response with correct framing.
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status_text(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

@@ -1,0 +1,298 @@
+//! AdaptService: the versioned serving API + network front-end over the
+//! engine pool.
+//!
+//! Three layers, bottom up:
+//!
+//! * [`api`] — the `/v1` wire types: [`InferRequest`] / [`InferResponse`]
+//!   with per-request metadata (id, top-k, deadline) and the structured
+//!   [`ServiceError`] enum every layer speaks.
+//! * [`AdaptService`] (this module) — the runtime control plane wrapping
+//!   [`InferenceEngine`]: typed submit/infer, [`AdaptService::swap_plan`]
+//!   (workers adopt a new plan + `Arc`-shared quantized weights at a
+//!   batch boundary — no restart), live [`stats`](AdaptService::stats)
+//!   without shutdown, and [`health`](AdaptService::health).
+//! * [`http`] / [`client`] — a dependency-free HTTP/1.1 server over
+//!   `std::net::TcpListener` exposing `POST /v1/infer`, `POST /v1/plan`,
+//!   `GET /v1/stats`, `GET /v1/healthz` (JSON bodies via
+//!   [`util::json`](crate::util::json)), plus the matching minimal client
+//!   and load generator behind `adapt client`.
+//!
+//! The old `InferenceEngine::submit`/`infer` surface still works — it is
+//! a shim over the same typed path — so in-process consumers (benches,
+//! the sweep, tests) did not have to move.
+
+pub mod api;
+pub mod client;
+pub mod http;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{BackendSpec, EngineConfig, InferenceEngine, PoolStats};
+use crate::graph::{retransform, ExecutionPlan, Policy};
+use crate::util::json::Json;
+
+pub use api::{top_k_of, InferRequest, InferResponse, ServiceError};
+
+/// The serving control plane: an [`InferenceEngine`] pool plus the typed
+/// request/response surface, plan hot-swap, live stats and health.
+pub struct AdaptService {
+    engine: InferenceEngine,
+    model_name: String,
+    started: Instant,
+    next_id: AtomicU64,
+}
+
+/// In-flight typed request: resolves to the full [`InferResponse`].
+pub struct InferHandle {
+    id: u64,
+    top_k: Option<usize>,
+    rx: crate::coordinator::engine::RawReceiver,
+}
+
+impl InferHandle {
+    /// The id the response will carry (client-chosen or auto-assigned).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the engine answers.
+    pub fn wait(self) -> Result<InferResponse, ServiceError> {
+        let raw = self
+            .rx
+            .recv()
+            .map_err(|_| ServiceError::Internal("engine dropped request".into()))??;
+        let top_k = self.top_k.map(|k| top_k_of(&raw.output, k));
+        Ok(InferResponse {
+            id: self.id,
+            output: raw.output,
+            top_k,
+            queue_wait: raw.queue_wait,
+            compute: raw.compute,
+            worker: raw.worker,
+            generation: raw.generation,
+        })
+    }
+}
+
+/// Live service statistics (a [`PoolStats`] snapshot plus service-level
+/// context) — available any time, not only at shutdown.
+pub struct ServiceStats {
+    pub model: String,
+    pub uptime: std::time::Duration,
+    pub generation: u64,
+    pub queue_len: usize,
+    pub workers: usize,
+    pub pool: PoolStats,
+}
+
+impl ServiceStats {
+    /// The `GET /v1/stats` body.
+    pub fn to_json(&self) -> Json {
+        let engine_stats = |s: &crate::coordinator::engine::EngineStats| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("requests".into(), Json::Num(s.requests as f64));
+            m.insert("batches".into(), Json::Num(s.batches as f64));
+            m.insert("padded_slots".into(), Json::Num(s.padded_slots as f64));
+            m.insert(
+                "queue_wait_us".into(),
+                Json::Num(s.queue_wait.as_micros() as f64),
+            );
+            m.insert("busy_us".into(), Json::Num(s.busy.as_micros() as f64));
+            for (label, hist) in [("queue_wait", &s.queue_hist), ("compute", &s.compute_hist)] {
+                for (p, tag) in [(0.50, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                    m.insert(
+                        format!("{label}_{tag}_us"),
+                        Json::Num(hist.percentile_us(p) as f64),
+                    );
+                }
+            }
+            Json::Obj(m)
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("uptime_s".into(), Json::Num(self.uptime.as_secs_f64()));
+        m.insert("generation".into(), Json::Num(self.generation as f64));
+        m.insert("queue_len".into(), Json::Num(self.queue_len as f64));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("total".into(), engine_stats(&self.pool.total));
+        m.insert(
+            "per_worker".into(),
+            Json::Arr(self.pool.per_worker.iter().map(engine_stats).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Liveness/readiness summary (the `GET /v1/healthz` body).
+pub struct Health {
+    /// Every configured worker thread is still serving.
+    pub ok: bool,
+    pub model: String,
+    pub input_len: usize,
+    pub out_dim: usize,
+    pub workers: usize,
+    /// Worker threads still running; `< workers` means degraded.
+    pub workers_alive: usize,
+    pub generation: u64,
+    pub queue_len: usize,
+    pub uptime: std::time::Duration,
+}
+
+impl Health {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "status".into(),
+            Json::Str(if self.ok { "ok" } else { "degraded" }.into()),
+        );
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("input_len".into(), Json::Num(self.input_len as f64));
+        m.insert("out_dim".into(), Json::Num(self.out_dim as f64));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("workers_alive".into(), Json::Num(self.workers_alive as f64));
+        m.insert("generation".into(), Json::Num(self.generation as f64));
+        m.insert("queue_len".into(), Json::Num(self.queue_len as f64));
+        m.insert("uptime_s".into(), Json::Num(self.uptime.as_secs_f64()));
+        Json::Obj(m)
+    }
+}
+
+impl AdaptService {
+    /// Start the engine pool and wrap it in the serving control plane.
+    pub fn start(cfg: EngineConfig) -> Result<AdaptService> {
+        let model_name = match &cfg.backend {
+            BackendSpec::Pjrt { model, .. } => model.clone(),
+            BackendSpec::Emulator(spec) => spec.model.name.clone(),
+        };
+        let engine = InferenceEngine::start(cfg)?;
+        Ok(AdaptService {
+            engine,
+            model_name,
+            started: Instant::now(),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.engine.input_len()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.engine.out_dim()
+    }
+
+    /// The wrapped engine (for shim-path consumers and tests).
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
+    /// Typed submit: validates the input length up front (fail fast,
+    /// before the request occupies a queue slot), assigns an id when the
+    /// client didn't, and returns a handle resolving to the response.
+    pub fn submit(&self, req: InferRequest) -> Result<InferHandle, ServiceError> {
+        let expected = self.engine.input_len();
+        if req.input.len() != expected {
+            return Err(ServiceError::WrongInputLength {
+                got: req.input.len(),
+                expected,
+            });
+        }
+        let id = req
+            .id
+            .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        let rx = self.engine.submit_raw(req.input, req.deadline)?;
+        Ok(InferHandle {
+            id,
+            top_k: req.top_k,
+            rx,
+        })
+    }
+
+    /// Blocking convenience wrapper around [`submit`](Self::submit).
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse, ServiceError> {
+        self.submit(req)?.wait()
+    }
+
+    /// Hot-swap the execution plan on the live pool. Returns the new
+    /// generation number (see [`InferenceEngine::swap_plan`]).
+    pub fn swap_plan(&self, plan: ExecutionPlan) -> Result<u64, ServiceError> {
+        self.engine.swap_plan(plan)
+    }
+
+    /// Parse and hot-swap a plan from a `POST /v1/plan` body: either a
+    /// plan JSON document (what `adapt plan --out` writes) or a policy
+    /// spec `{"spec": "default=mul8s_1l2h_like,c1=exact8"}` resolved
+    /// against the served model.
+    pub fn swap_plan_body(&self, body: &str) -> Result<u64, ServiceError> {
+        let spec = self.engine.emulator_spec().ok_or_else(|| {
+            ServiceError::PlanRejected(
+                "plan hot-swap requires the emulator backend (PJRT executables bake their plan in)"
+                    .into(),
+            )
+        })?;
+        let j = Json::parse(body).map_err(|e| ServiceError::BadRequest(format!("{e:#}")))?;
+        let plan = match j.opt("spec") {
+            Some(s) => {
+                let text = s
+                    .str()
+                    .map_err(|e| ServiceError::BadRequest(format!("spec: {e}")))?;
+                let policy = Policy::parse_spec(text)
+                    .map_err(|e| ServiceError::BadRequest(format!("{e:#}")))?;
+                let unmatched = policy.unmatched_overrides(&spec.model);
+                if !unmatched.is_empty() {
+                    return Err(ServiceError::PlanRejected(format!(
+                        "spec overrides match no layer of {}: {unmatched:?}",
+                        spec.model.name
+                    )));
+                }
+                retransform(&spec.model, &policy)
+            }
+            None => ExecutionPlan::from_json(body, &spec.model)
+                .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?,
+        };
+        self.swap_plan(plan)
+    }
+
+    /// Live stats snapshot — mid-run, no shutdown required.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            model: self.model_name.clone(),
+            uptime: self.started.elapsed(),
+            generation: self.engine.generation(),
+            queue_len: self.engine.queue_len(),
+            workers: self.engine.workers(),
+            pool: self.engine.stats_snapshot(),
+        }
+    }
+
+    /// Liveness summary. `ok` is derived from worker-thread liveness: a
+    /// worker only exits when the queue closes or it panics, so fewer
+    /// alive than configured on a serving pool means degraded.
+    pub fn health(&self) -> Health {
+        let workers = self.engine.workers();
+        let workers_alive = self.engine.alive_workers();
+        Health {
+            ok: workers_alive == workers && workers > 0,
+            model: self.model_name.clone(),
+            input_len: self.engine.input_len(),
+            out_dim: self.engine.out_dim(),
+            workers,
+            workers_alive,
+            generation: self.engine.generation(),
+            queue_len: self.engine.queue_len(),
+            uptime: self.started.elapsed(),
+        }
+    }
+
+    /// Stop the pool: drain, join, final stats.
+    pub fn shutdown(self) -> Result<PoolStats> {
+        self.engine.shutdown()
+    }
+}

@@ -105,6 +105,19 @@ impl Json {
         self.arr()?.iter().map(|v| v.usize()).collect()
     }
 
+    /// Array of numbers as f32 (inference payloads). f64 → f32 is exact
+    /// for values that entered as f32 (see [`from_f32s`](Self::from_f32s)).
+    pub fn f32_vec(&self) -> Result<Vec<f32>> {
+        self.arr()?.iter().map(|v| Ok(v.f64()? as f32)).collect()
+    }
+
+    /// JSON array from an f32 slice. f32 → f64 is exact, and the writer
+    /// prints a round-tripping decimal, so the payload is bit-identical
+    /// after parse + `as f32` on the other end.
+    pub fn from_f32s(v: &[f32]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
     // ----- writer --------------------------------------------------------
 
     pub fn to_string(&self) -> String {
@@ -118,7 +131,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                // -0.0 must keep its sign bit (inference payloads promise
+                // bit-exact f32 round-trips), so it takes the float path.
+                if n.fract() == 0.0 && n.abs() < 9.0e15 && (*n != 0.0 || n.is_sign_positive()) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -407,6 +422,23 @@ mod tests {
         assert_eq!(Json::parse("-3.25e2").unwrap().f64().unwrap(), -325.0);
         assert_eq!(Json::parse("42").unwrap().i64().unwrap(), 42);
         assert!(Json::parse("1.5").unwrap().i64().is_err());
+    }
+
+    #[test]
+    fn f32_payloads_roundtrip_bit_exact() {
+        let xs = vec![
+            0.1f32,
+            -0.0,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            3.402_823_3e38,
+            -7.25,
+        ];
+        let text = Json::from_f32s(&xs).to_string();
+        let back = Json::parse(&text).unwrap().f32_vec().unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} mangled to {b}");
+        }
     }
 
     #[test]

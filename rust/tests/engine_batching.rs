@@ -301,6 +301,105 @@ fn worker_setup_failure_aborts_start() {
     assert!(InferenceEngine::start(cfg).is_err(), "bad ACU must fail start");
 }
 
+#[test]
+fn stats_snapshot_works_mid_run() {
+    let mut cfg = EngineConfig::emulator(make_spec(4));
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_millis(1);
+    let engine = InferenceEngine::start(cfg).unwrap();
+    // Before any traffic: a clean zero snapshot, no shutdown required.
+    let empty = engine.stats_snapshot();
+    assert_eq!(empty.total.requests, 0);
+    assert_eq!(empty.per_worker.len(), 2);
+    assert_eq!(empty.generation, 0);
+
+    for i in 0..10 {
+        engine.infer(sample(4, i)).unwrap();
+    }
+    // Mid-run: everything answered so far is visible while the pool is
+    // still serving, and the histograms counted every request.
+    let snap = engine.stats_snapshot();
+    assert_eq!(snap.total.requests, 10);
+    assert!(snap.total.batches >= 1);
+    assert_eq!(snap.total.queue_hist.count(), 10);
+    assert_eq!(snap.total.compute_hist.count(), 10);
+    let (p50, p95, p99) = snap.queue_wait_percentiles_us();
+    assert!(p50 <= p95 && p95 <= p99, "percentiles must be ordered");
+
+    // The engine still serves after snapshotting, and the final stats
+    // from shutdown() agree with a last live snapshot.
+    engine.infer(sample(4, 99)).unwrap();
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.total.requests, 11);
+    assert_eq!(stats.total.compute_hist.count(), 11);
+}
+
+#[test]
+fn swap_plan_responses_match_fresh_engines_per_generation() {
+    let mut cfg = EngineConfig::emulator(make_spec(4));
+    cfg.workers = 2;
+    cfg.max_wait = Duration::from_millis(1);
+    let engine = InferenceEngine::start(cfg).unwrap();
+    let model = synth_model();
+    let plan_b = retransform(&model, &Policy::all(LayerMode::lut("exact8")));
+    let inputs: Vec<Vec<f32>> = (0..8).map(|i| sample(5, i)).collect();
+
+    // Reference outputs from fresh engines started on each plan.
+    let reference = |plan: &adapt::graph::ExecutionPlan| -> Vec<Vec<f32>> {
+        let params = synth_params(&model, 42);
+        let luts = LutRegistry::in_memory();
+        let exec = Executor::new(
+            &model,
+            params,
+            plan.clone(),
+            scales(),
+            &luts,
+            Style::Optimized { threads: 1 },
+        )
+        .unwrap();
+        inputs
+            .iter()
+            .map(|x| {
+                let t = Tensor::from_vec(&[1, 4, 4, 1], x.clone()).unwrap();
+                exec.forward(Value::F(t)).unwrap().data
+            })
+            .collect()
+    };
+    let expect_a = reference(&synth_plan(&model));
+    let expect_b = reference(&plan_b);
+    assert_ne!(expect_a, expect_b, "the two plans must disagree somewhere");
+
+    for (i, x) in inputs.iter().enumerate() {
+        let rx = engine.submit_raw(x.clone(), None).unwrap();
+        let raw = rx.recv().unwrap().unwrap();
+        assert_eq!(raw.output, expect_a[i], "generation 0 must serve plan A");
+        assert_eq!(raw.generation, 0);
+    }
+    assert_eq!(engine.generation(), 0);
+    assert_eq!(engine.swap_plan(plan_b).unwrap(), 1);
+    assert_eq!(engine.generation(), 1);
+    for (i, x) in inputs.iter().enumerate() {
+        let rx = engine.submit_raw(x.clone(), None).unwrap();
+        let raw = rx.recv().unwrap().unwrap();
+        assert_eq!(
+            raw.output, expect_b[i],
+            "post-swap responses must be bit-identical to a fresh plan-B engine"
+        );
+        assert_eq!(raw.generation, 1, "no response may straddle generations");
+    }
+
+    // Swapping to a broken plan is rejected and leaves serving intact.
+    let bad = retransform(&model, &Policy::all(LayerMode::lut("no_such_acu")));
+    assert!(engine.swap_plan(bad).is_err());
+    assert_eq!(engine.generation(), 1);
+    let rx = engine.submit_raw(inputs[0].clone(), None).unwrap();
+    assert_eq!(rx.recv().unwrap().unwrap().output, expect_b[0]);
+
+    let stats = engine.shutdown().unwrap();
+    assert_eq!(stats.generation, 1);
+    assert_eq!(stats.total.requests, 17);
+}
+
 // ---------------------------------------------------------------------------
 // PJRT backend (artifact-gated)
 // ---------------------------------------------------------------------------

@@ -1,0 +1,467 @@
+//! Wire-path tests for the `/v1` serving API: typed error responses with
+//! correct status codes, exactly-once concurrent round-trips matching
+//! `infer()` reference outputs bit-for-bit, live plan hot-swap with
+//! generation integrity, and mid-run stats — all artifact-free on the
+//! emulator backend over real TCP connections.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use adapt::coordinator::engine::{EmulatorSpec, EngineConfig};
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, ExecutionPlan, LayerMode, Model, Node, Op, ParamSpec, Policy};
+use adapt::lut::LutRegistry;
+use adapt::service::client::{self, http_call};
+use adapt::service::http::{HttpServer, ServeOptions};
+use adapt::service::{AdaptService, InferRequest, ServiceError};
+use adapt::tensor::Tensor;
+use adapt::util::json::Json;
+use adapt::util::rng::Rng;
+
+/// conv(3x3, 1->4, pad 1) -> relu -> flatten -> linear(64 -> 3), on
+/// 4x4x1 inputs (the same shape `engine_batching.rs` exercises).
+fn synth_model() -> Model {
+    Model {
+        name: "service_cnn".into(),
+        paper_row: "-".into(),
+        kind: "cnn".into(),
+        dataset: "none".into(),
+        input_shape: vec![4, 4, 1],
+        input_dtype: "f32".into(),
+        out_dim: 3,
+        loss: "ce".into(),
+        metric: "top1".into(),
+        table2: false,
+        n_scales: 2,
+        params: vec![
+            ParamSpec { name: "w1".into(), shape: vec![3, 3, 1, 4] },
+            ParamSpec { name: "b1".into(), shape: vec![4] },
+            ParamSpec { name: "w2".into(), shape: vec![64, 3] },
+            ParamSpec { name: "b2".into(), shape: vec![3] },
+        ],
+        params_count: 0,
+        macs: 0,
+        nodes: vec![
+            Node { id: 0, op: Op::Input, inputs: vec![], params: vec![] },
+            Node {
+                id: 1,
+                op: Op::Conv2d {
+                    kh: 3,
+                    kw: 3,
+                    cin: 1,
+                    cout: 4,
+                    stride: 1,
+                    pad: 1,
+                    groups: 1,
+                    scale_idx: 0,
+                    name: "c1".into(),
+                },
+                inputs: vec![0],
+                params: vec![0, 1],
+            },
+            Node { id: 2, op: Op::Relu, inputs: vec![1], params: vec![] },
+            Node { id: 3, op: Op::Flatten, inputs: vec![2], params: vec![] },
+            Node {
+                id: 4,
+                op: Op::Linear { din: 64, dout: 3, scale_idx: 1, name: "fc".into() },
+                inputs: vec![3],
+                params: vec![2, 3],
+            },
+        ],
+        weights_file: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn synth_params(model: &Model, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.5).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect()
+}
+
+fn scales() -> Vec<f32> {
+    vec![1.5 / 127.0, 4.0 / 127.0]
+}
+
+/// Generation-0 plan: mixed (c1 on exact8, fc on mul8s_1l2h_like).
+fn plan_a(model: &Model) -> ExecutionPlan {
+    retransform(
+        model,
+        &Policy::all(LayerMode::lut("mul8s_1l2h_like")).with_acu("c1", "exact8"),
+    )
+}
+
+/// Swap target: everything on exact8 (visibly different arithmetic).
+fn plan_b(model: &Model) -> ExecutionPlan {
+    retransform(model, &Policy::all(LayerMode::lut("exact8")))
+}
+
+fn make_spec(batch: usize) -> EmulatorSpec {
+    let model = synth_model();
+    let params = synth_params(&model, 42);
+    let plan = plan_a(&model);
+    EmulatorSpec {
+        model,
+        params,
+        plan,
+        act_scales: scales(),
+        luts: LutRegistry::in_memory(),
+        batch,
+        gemm_threads: 1,
+    }
+}
+
+/// Deterministic per-(client, request) input sample.
+fn sample(c: usize, i: usize) -> Vec<f32> {
+    let mut rng = Rng::new((c * 1000 + i) as u64 + 7);
+    (0..16).map(|_| rng.next_gauss()).collect()
+}
+
+/// Reference outputs from a plain single-threaded executor on `plan`.
+fn reference_outputs(plan: &ExecutionPlan, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let model = synth_model();
+    let params = synth_params(&model, 42);
+    let luts = LutRegistry::in_memory();
+    let exec = Executor::new(
+        &model,
+        params,
+        plan.clone(),
+        scales(),
+        &luts,
+        Style::Optimized { threads: 1 },
+    )
+    .unwrap();
+    inputs
+        .iter()
+        .map(|x| {
+            let t = Tensor::from_vec(&[1, 4, 4, 1], x.clone()).unwrap();
+            exec.forward(Value::F(t)).unwrap().data
+        })
+        .collect()
+}
+
+fn start_server(
+    workers: usize,
+    batch: usize,
+    opts: ServeOptions,
+) -> (Arc<AdaptService>, HttpServer) {
+    let mut cfg = EngineConfig::emulator(make_spec(batch));
+    cfg.workers = workers;
+    cfg.queue_depth = 64;
+    cfg.max_wait = Duration::from_millis(2);
+    let service = Arc::new(AdaptService::start(cfg).unwrap());
+    let server = HttpServer::start_with(Arc::clone(&service), "127.0.0.1:0", opts).unwrap();
+    (service, server)
+}
+
+fn post_infer(addr: &str, body: &str) -> (u16, Json) {
+    let (status, text) = http_call(addr, "POST", "/v1/infer", Some(body)).unwrap();
+    (status, Json::parse(&text).expect("every response body is JSON"))
+}
+
+#[test]
+fn error_paths_have_typed_bodies_and_status_codes() {
+    let opts = ServeOptions {
+        max_body: 1024,
+        ..ServeOptions::default()
+    };
+    let (_service, server) = start_server(1, 4, opts);
+    let addr = server.addr().to_string();
+
+    // Malformed JSON body -> 400 bad_request.
+    let (status, j) = post_infer(&addr, "this is not json {");
+    assert_eq!(status, 400);
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "bad_request");
+
+    // Well-formed JSON, missing the input field -> 400 bad_request.
+    let (status, j) = post_infer(&addr, r#"{"id": 3}"#);
+    assert_eq!(status, 400);
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "bad_request");
+
+    // Wrong input length -> 400 wrong_input_length, and the message names
+    // both lengths.
+    let (status, j) = post_infer(&addr, r#"{"input": [1, 2, 3]}"#);
+    assert_eq!(status, 400);
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "wrong_input_length");
+    assert!(j.get("message").unwrap().str().unwrap().contains("16"));
+
+    // Oversized body -> 413 before the request is even parsed.
+    let huge = format!(r#"{{"input": [{}]}}"#, "1.0, ".repeat(400) + "1.0");
+    assert!(huge.len() > 1024);
+    let (status, j) = post_infer(&addr, &huge);
+    assert_eq!(status, 413);
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "body_too_large");
+
+    // Unknown route -> 404 not_found.
+    let (status, text) = http_call(&addr, "POST", "/v1/nope", Some("{}")).unwrap();
+    assert_eq!(status, 404);
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "not_found");
+
+    // Known route, wrong method -> 405.
+    let (status, text) = http_call(&addr, "GET", "/v1/infer", None).unwrap();
+    assert_eq!(status, 405);
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "method_not_allowed");
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_get_exactly_once_reference_outputs() {
+    let (_service, server) = start_server(2, 4, ServeOptions::default());
+    let addr = server.addr().to_string();
+    let (n_clients, per_client) = (4, 12);
+    let model = synth_model();
+    let expected: Vec<Vec<Vec<f32>>> = (0..n_clients)
+        .map(|c| {
+            let inputs: Vec<Vec<f32>> = (0..per_client).map(|i| sample(c, i)).collect();
+            reference_outputs(&plan_a(&model), &inputs)
+        })
+        .collect();
+
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let addr = &addr;
+            let expected = &expected;
+            s.spawn(move || {
+                for i in 0..per_client {
+                    let mut req = InferRequest::new(sample(c, i));
+                    let id = (c * 1000 + i) as u64;
+                    req.id = Some(id);
+                    req.top_k = Some(1);
+                    let (status, j) = post_infer(addr, &req.to_json().to_string());
+                    assert_eq!(status, 200, "client {c} request {i}");
+                    let resp = adapt::service::InferResponse::from_json(&j).unwrap();
+                    assert_eq!(resp.id, id, "swapped response");
+                    // Batch rows are independent in every GEMM and f32
+                    // survives JSON bit-for-bit, so the wire output must
+                    // equal the local reference exactly.
+                    assert_eq!(
+                        resp.output, expected[c][i],
+                        "client {c} request {i}: wrong output over the wire"
+                    );
+                    let tk = resp.top_k.unwrap();
+                    assert_eq!(tk.len(), 1);
+                    assert_eq!(tk[0].1, resp.output[tk[0].0]);
+                    assert_eq!(resp.generation, 0);
+                }
+            });
+        }
+    });
+
+    // Live stats report everything served, while the pool is still up.
+    let (status, text) = http_call(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&text).unwrap();
+    let total = j.get("total").unwrap();
+    assert_eq!(
+        total.get("requests").unwrap().usize().unwrap(),
+        n_clients * per_client
+    );
+    assert!(total.get("batches").unwrap().usize().unwrap() >= 1);
+    assert_eq!(
+        j.get("per_worker").unwrap().arr().unwrap().len(),
+        2,
+        "stats must be per-worker"
+    );
+    // Histogram percentiles are present and ordered.
+    let p50 = total.get("queue_wait_p50_us").unwrap().usize().unwrap();
+    let p99 = total.get("queue_wait_p99_us").unwrap().usize().unwrap();
+    assert!(p50 <= p99, "p50 {p50} must not exceed p99 {p99}");
+
+    server.stop();
+}
+
+#[test]
+fn healthz_reports_service_shape() {
+    let (_service, server) = start_server(2, 4, ServeOptions::default());
+    let addr = server.addr().to_string();
+    let (status, text) = http_call(&addr, "GET", "/v1/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("status").unwrap().str().unwrap(), "ok");
+    assert_eq!(j.get("model").unwrap().str().unwrap(), "service_cnn");
+    assert_eq!(j.get("input_len").unwrap().usize().unwrap(), 16);
+    assert_eq!(j.get("out_dim").unwrap().usize().unwrap(), 3);
+    assert_eq!(j.get("workers").unwrap().usize().unwrap(), 2);
+    assert_eq!(j.get("workers_alive").unwrap().usize().unwrap(), 2);
+    assert_eq!(j.get("generation").unwrap().usize().unwrap(), 0);
+    assert_eq!(client::discover_input_len(&addr).unwrap(), 16);
+    server.stop();
+}
+
+#[test]
+fn plan_hot_swap_is_bit_identical_to_fresh_engines() {
+    let (_service, server) = start_server(2, 4, ServeOptions::default());
+    let addr = server.addr().to_string();
+    let model = synth_model();
+    let inputs: Vec<Vec<f32>> = (0..10).map(|i| sample(7, i)).collect();
+    let expect_a = reference_outputs(&plan_a(&model), &inputs);
+    let expect_b = reference_outputs(&plan_b(&model), &inputs);
+    // The two plans must actually disagree somewhere, or the swap check
+    // below is vacuous.
+    assert_ne!(expect_a, expect_b, "plans must differ on these inputs");
+
+    let run_inputs = |tag: u64| -> Vec<(Vec<f32>, u64)> {
+        inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let mut req = InferRequest::new(x.clone());
+                req.id = Some(tag * 100 + i as u64);
+                let (status, j) = post_infer(&addr, &req.to_json().to_string());
+                assert_eq!(status, 200);
+                let resp = adapt::service::InferResponse::from_json(&j).unwrap();
+                (resp.output, resp.generation)
+            })
+            .collect()
+    };
+
+    // Generation 0 serves plan A.
+    for (i, (out, generation)) in run_inputs(1).into_iter().enumerate() {
+        assert_eq!(out, expect_a[i], "generation 0 must serve plan A");
+        assert_eq!(generation, 0);
+    }
+
+    // Hot-swap to plan B via a policy-spec body.
+    let (status, text) =
+        http_call(&addr, "POST", "/v1/plan", Some(r#"{"spec": "default=exact8"}"#)).unwrap();
+    assert_eq!(status, 200, "swap rejected: {text}");
+    let generation = Json::parse(&text)
+        .unwrap()
+        .get("generation")
+        .unwrap()
+        .usize()
+        .unwrap();
+    assert_eq!(generation, 1);
+
+    // Every post-swap response must be plan B, bit-identical to a fresh
+    // engine started on plan B, and must carry the new generation — no
+    // batch may mix generations.
+    for (i, (out, generation)) in run_inputs(2).into_iter().enumerate() {
+        assert_eq!(out, expect_b[i], "generation 1 must serve plan B");
+        assert_eq!(generation, 1);
+    }
+
+    // A plan JSON document body (what `adapt plan --out` writes) works
+    // too, and bumps the generation again — back to plan A.
+    let body = plan_a(&model).to_json(&model);
+    let (status, text) = http_call(&addr, "POST", "/v1/plan", Some(&body)).unwrap();
+    assert_eq!(status, 200, "plan-document swap rejected: {text}");
+    for (i, (out, generation)) in run_inputs(3).into_iter().enumerate() {
+        assert_eq!(out, expect_a[i], "generation 2 must serve plan A again");
+        assert_eq!(generation, 2);
+    }
+
+    // Bad plans are rejected with a typed error and do NOT disturb the
+    // serving generation.
+    let (status, text) =
+        http_call(&addr, "POST", "/v1/plan", Some(r#"{"spec": "default=no_such_acu"}"#)).unwrap();
+    assert_eq!(status, 422);
+    assert_eq!(
+        Json::parse(&text).unwrap().get("error").unwrap().str().unwrap(),
+        "plan_rejected"
+    );
+    let (status, text) =
+        http_call(&addr, "POST", "/v1/plan", Some(r#"{"spec": "nope=exact8"}"#)).unwrap();
+    assert_eq!(status, 422, "spec matching no layer must be rejected: {text}");
+    for (i, (out, generation)) in run_inputs(4).into_iter().enumerate() {
+        assert_eq!(out, expect_a[i], "rejected swaps must not change the plan");
+        assert_eq!(generation, 2);
+    }
+
+    server.stop();
+}
+
+#[test]
+fn load_generator_roundtrips_and_sees_the_swap() {
+    let (service, server) = start_server(2, 4, ServeOptions::default());
+    let addr = server.addr().to_string();
+    let cfg = client::LoadConfig {
+        addr: addr.clone(),
+        requests: 40,
+        concurrency: 3,
+        input_len: 16,
+        top_k: Some(2),
+        deadline_ms: None,
+        seed: 11,
+    };
+    let phase1 = client::run_load(&cfg).unwrap();
+    assert_eq!(phase1.ok, 40);
+    assert_eq!(phase1.errors, 0);
+    assert_eq!(phase1.by_generation.keys().copied().collect::<Vec<_>>(), vec![0]);
+    assert_eq!(phase1.latencies_us.len(), 40);
+
+    let (status, _) =
+        http_call(&addr, "POST", "/v1/plan", Some(r#"{"spec": "default=exact8"}"#)).unwrap();
+    assert_eq!(status, 200);
+    let phase2 = client::run_load(&cfg).unwrap();
+    assert_eq!(phase2.ok, 40);
+    assert_eq!(
+        phase2.by_generation.keys().copied().collect::<Vec<_>>(),
+        vec![1],
+        "all post-swap responses must carry the new generation"
+    );
+
+    // The service-level totals agree with both phases.
+    let stats = service.stats();
+    assert_eq!(stats.pool.total.requests, 80);
+    assert_eq!(stats.generation, 1);
+    server.stop();
+}
+
+#[test]
+fn typed_service_layer_without_http() {
+    // The control plane works in-process too (no sockets): typed
+    // submit/infer, deadline rejection, mid-run stats, engine shims.
+    let mut cfg = EngineConfig::emulator(make_spec(4));
+    cfg.workers = 1;
+    cfg.max_wait = Duration::from_millis(1);
+    let service = AdaptService::start(cfg).unwrap();
+
+    // Typed round-trip with auto-assigned id + top-k.
+    let mut req = InferRequest::new(sample(0, 0));
+    req.top_k = Some(3);
+    let resp = service.infer(req).unwrap();
+    assert_eq!(resp.output.len(), 3);
+    assert_eq!(resp.top_k.as_ref().unwrap().len(), 3);
+    assert_eq!(resp.worker, 0);
+
+    // Wrong input length is rejected before it occupies a queue slot.
+    match service.infer(InferRequest::new(vec![0.0; 5])) {
+        Err(ServiceError::WrongInputLength { got: 5, expected: 16 }) => {}
+        other => panic!("expected WrongInputLength, got {other:?}"),
+    }
+
+    // A zero deadline always expires in-queue -> typed rejection.
+    let mut req = InferRequest::new(sample(0, 1));
+    req.deadline = Some(Duration::ZERO);
+    match service.infer(req) {
+        Err(ServiceError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+
+    // The legacy engine shim still works on the same pool.
+    let out = service.engine().infer(sample(0, 2)).unwrap();
+    assert_eq!(out.len(), 3);
+
+    // Mid-run stats: the expired request is not counted as served.
+    let stats = service.stats();
+    assert_eq!(stats.pool.total.requests, 2);
+    assert_eq!(stats.workers, 1);
+    // Queue-wait histogram saw every popped request (incl. the expired
+    // one); compute histogram only the two served.
+    assert_eq!(stats.pool.total.queue_hist.count(), 3);
+    assert_eq!(stats.pool.total.compute_hist.count(), 2);
+
+    let final_stats = service.shutdown().unwrap();
+    assert_eq!(final_stats.total.requests, 2);
+}
