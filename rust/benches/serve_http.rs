@@ -1,11 +1,13 @@
 //! HTTP serving bench: the whole submit → measure → swap plan → measure
-//! loop over the wire, artifact-free. Starts an in-process
-//! `AdaptService` + HTTP front-end on an ephemeral port, drives it with
-//! the `adapt client` load generator (keep-alive connections,
-//! deterministic payloads), hot-swaps the plan between phases, and
-//! emits `artifacts/results/BENCH_serve_http.json` with per-phase
-//! throughput + client latency and the server-side queue-wait /
-//! compute percentiles.
+//! → shadow → measure loop over the wire, artifact-free. Starts an
+//! in-process `AdaptService` + HTTP front-end on an ephemeral port,
+//! drives it with the `adapt client` load generator (keep-alive
+//! connections, deterministic payloads), hot-swaps the plan between
+//! phases, then turns on shadow mirroring of a candidate version and
+//! measures the mirrored-traffic overhead vs plain serving. Emits
+//! `artifacts/results/BENCH_serve_http.json` with per-phase throughput +
+//! client latency, the server-side queue-wait / compute percentiles, the
+//! live shadow disagreement report and the shadow overhead percentage.
 //!
 //! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench serve_http`
 
@@ -118,6 +120,68 @@ fn main() {
         "every post-swap response must carry the new generation"
     );
 
+    // Phase 3: shadow mode — create a candidate version (back to the
+    // mixed plan, so the comparison has real disagreement) and mirror
+    // every request to it while measuring throughput. The mirrored
+    // traffic doubles the pool's work; the row quantifies that overhead.
+    let model_name = "tiny_cnn";
+    let (status, body) = client::http_call(
+        &addr,
+        "POST",
+        &format!("/v2/models/{model_name}/plans"),
+        Some(r#"{"spec": "default=mul8s_1l2h_like"}"#),
+    )
+    .expect("create candidate version");
+    assert_eq!(status, 200, "candidate creation must succeed: {body}");
+    let candidate = Json::parse(&body)
+        .unwrap()
+        .get("version")
+        .unwrap()
+        .usize()
+        .unwrap();
+    let (status, body) = client::http_call(
+        &addr,
+        "POST",
+        &format!("/v2/models/{model_name}/plans/{candidate}/shadow"),
+        Some("{}"),
+    )
+    .expect("start shadow");
+    assert_eq!(status, 200, "shadow start must succeed: {body}");
+    let phase3 = client::run_load(&LoadConfig {
+        seed: 0x10AD ^ 0xF0F0,
+        ..load.clone()
+    })
+    .expect("phase 3");
+    assert_eq!(phase3.errors, 0, "phase 3 must be clean");
+    let overhead_pct =
+        (phase2.requests_per_sec() / phase3.requests_per_sec() - 1.0) * 100.0;
+    println!(
+        "  shadow v{candidate} (mirrored):        {}/{} ok, {:.1} req/s, client p50 {} µs \
+         ({overhead_pct:+.1}% vs plain)",
+        phase3.ok,
+        requests,
+        phase3.requests_per_sec(),
+        phase3.percentile_us(0.50),
+    );
+
+    // Wait for the shadow collector to fold in every mirror, then read
+    // the live disagreement report.
+    let shadow_report = client::wait_shadow_report(
+        &addr,
+        model_name,
+        candidate as u64,
+        requests,
+        Duration::from_secs(60),
+    )
+    .expect("shadow collector must catch up");
+    let mirrored = shadow_report.get("mirrored").unwrap().usize().unwrap();
+    println!(
+        "  shadow report: {mirrored} mirrored, disagreement {:.1}%, top-1 flips {:.1}%, max |Δ| {:.3e}",
+        shadow_report.get("disagreement_rate").unwrap().f64().unwrap() * 100.0,
+        shadow_report.get("top1_flip_rate").unwrap().f64().unwrap() * 100.0,
+        shadow_report.get("max_abs_delta").unwrap().f64().unwrap(),
+    );
+
     // Server-side view: totals + tail latency.
     let stats = service.stats();
     let (qp50, qp95, qp99) = stats.pool.queue_wait_percentiles_us();
@@ -134,6 +198,10 @@ fn main() {
     doc.insert("workers".to_string(), Json::Num(workers as f64));
     doc.insert("phase1_mixed".to_string(), phase1.to_json());
     doc.insert("phase2_exact8".to_string(), phase2.to_json());
+    doc.insert("phase3_shadow".to_string(), phase3.to_json());
+    doc.insert("shadow_candidate".to_string(), Json::Num(candidate as f64));
+    doc.insert("shadow_overhead_pct".to_string(), Json::Num(overhead_pct));
+    doc.insert("shadow_report".to_string(), shadow_report);
     doc.insert("generation_after_swap".to_string(), Json::Num(generation as f64));
     doc.insert("server_stats".to_string(), stats.to_json());
     let dir = adapt::artifacts_dir().join("results");
@@ -150,8 +218,8 @@ fn main() {
         .unwrap_or_else(|arc| arc.engine().stats_snapshot());
     assert_eq!(
         final_stats.total.requests,
-        2 * requests,
-        "every wire request must be served exactly once"
+        3 * requests + mirrored,
+        "3 measured phases + every completed mirror, exactly once each"
     );
     println!("== serve_http bench OK ==");
 }

@@ -23,10 +23,19 @@
 //! The pool is observable and retargetable while it runs:
 //! [`stats_snapshot`](InferenceEngine::stats_snapshot) reads per-worker
 //! counters and log-scale latency histograms mid-flight (workers publish
-//! through atomics), and [`swap_plan`](InferenceEngine::swap_plan) moves
-//! every emulator worker onto a new [`ExecutionPlan`] at its next batch
-//! boundary — weights re-quantized once, adopted via `Arc`, generation
-//! counter bumped, no restart, and no batch ever mixes generations.
+//! through atomics). Emulator pools serve a **version table** of
+//! installed [`ExecutionPlan`]s rather than one global plan:
+//! [`install_version`](InferenceEngine::install_version) publishes an
+//! immutable numbered version (weights re-quantized once, adopted via
+//! `Arc`), [`activate_version`](InferenceEngine::activate_version) picks
+//! which one untagged requests route to, and
+//! [`submit_raw_to`](InferenceEngine::submit_raw_to) pins a request to an
+//! explicit version — the mechanism under the registry's canary and
+//! shadow rollouts. Workers adopt table changes at batch boundaries and
+//! partition every gathered batch by version, so no executed batch ever
+//! mixes plan versions (or generations).
+//! [`swap_plan`](InferenceEngine::swap_plan) remains the one-call
+//! install-and-activate shim behind `POST /v1/plan`.
 //!
 //! With `workers == 1` the batching semantics are exactly the old
 //! single-worker engine's. Shutdown drains: `shutdown()` closes the queue
@@ -34,7 +43,7 @@
 //! flush their final partial batches, and the per-worker [`EngineStats`]
 //! are aggregated into [`PoolStats`].
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -64,6 +73,8 @@ pub struct RawResponse {
     pub worker: usize,
     /// Plan generation it was computed under.
     pub generation: u64,
+    /// Plan version it was computed under (0 on unversioned backends).
+    pub version: u64,
 }
 
 /// What [`InferenceEngine::submit_raw`] hands back: the receiving end of
@@ -95,6 +106,8 @@ struct Request {
     x: Vec<f32>,
     /// Max queue wait before the request is rejected (typed path).
     deadline: Option<Duration>,
+    /// Pin to an installed plan version; `None` routes to the active one.
+    version: Option<u64>,
     resp: Responder,
     /// When the request entered the queue (for `queue_wait`).
     enqueued: Instant,
@@ -423,6 +436,22 @@ impl SharedQueue {
         Ok(())
     }
 
+    /// Non-blocking push: `Ok(false)` when the queue is full (instead of
+    /// backpressure). Errors once closed.
+    fn try_push(&self, req: Request) -> std::result::Result<bool, ServiceError> {
+        let mut st = self.state.lock().expect("engine queue poisoned");
+        if st.closed {
+            return Err(ServiceError::ShuttingDown);
+        }
+        if st.items.len() >= self.cap {
+            return Ok(false);
+        }
+        st.items.push_back(req);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(true)
+    }
+
     /// Requests currently queued (for health / stats reporting).
     fn len(&self) -> usize {
         self.state.lock().expect("engine queue poisoned").items.len()
@@ -480,24 +509,40 @@ impl SharedQueue {
 }
 
 // ---------------------------------------------------------------------------
-// Plan hot-swap state
+// Plan version table (hot-swap, canary and shadow routing)
 // ---------------------------------------------------------------------------
 
-/// One published plan generation: the plan plus its shared pre-quantized
-/// weight tables. Workers clone the `Arc`-backed fields, never re-quantize.
-#[derive(Clone)]
-struct GenPlan {
+/// Version number the starting plan is installed under.
+pub const INITIAL_VERSION: u64 = 1;
+
+/// One installed, immutable plan version: the plan, its shared
+/// pre-quantized weight tables (workers clone the `Arc`-backed fields,
+/// never re-quantize), and the generation number assigned at install
+/// time — the `generation` every response computed under this version
+/// carries (the v1 hot-swap counter).
+struct VersionPlan {
+    version: u64,
     gen_no: u64,
     plan: ExecutionPlan,
     prepared: PreparedWeights,
 }
 
-/// Shared swap cell: `gen` is the cheap per-batch check; `current` holds
-/// the published generation. [`InferenceEngine::swap_plan`] validates and
-/// publishes; every emulator worker adopts at its next batch boundary.
+/// The servable version set a pool publishes to its workers. Entries are
+/// immutable once inserted; only membership and `active` ever change.
+struct VersionTable {
+    entries: BTreeMap<u64, Arc<VersionPlan>>,
+    /// Version untagged requests route to.
+    active: u64,
+}
+
+/// Shared swap cell: `epoch` is the cheap per-batch staleness check
+/// (bumped on every install / activate / retire); `table` holds the
+/// published set; `installs` hands out generation numbers. Every
+/// emulator worker adopts table changes at its next batch boundary.
 struct SwapState {
-    gen: AtomicU64,
-    current: Mutex<GenPlan>,
+    epoch: AtomicU64,
+    installs: AtomicU64,
+    table: Mutex<VersionTable>,
 }
 
 // ---------------------------------------------------------------------------
@@ -538,12 +583,22 @@ impl InferenceEngine {
                     &spec.plan,
                     &spec.luts,
                 )?;
-                let swap = Arc::new(SwapState {
-                    gen: AtomicU64::new(0),
-                    current: Mutex::new(GenPlan {
+                let mut entries = BTreeMap::new();
+                entries.insert(
+                    INITIAL_VERSION,
+                    Arc::new(VersionPlan {
+                        version: INITIAL_VERSION,
                         gen_no: 0,
                         plan: spec.plan.clone(),
                         prepared,
+                    }),
+                );
+                let swap = Arc::new(SwapState {
+                    epoch: AtomicU64::new(0),
+                    installs: AtomicU64::new(1),
+                    table: Mutex::new(VersionTable {
+                        entries,
+                        active: INITIAL_VERSION,
                     }),
                 });
                 (Some(swap), Some(Arc::clone(spec)))
@@ -648,12 +703,160 @@ impl InferenceEngine {
         self.queue.len()
     }
 
-    /// Current plan generation (0 until the first successful hot-swap).
+    /// Current plan generation: the active version's install number
+    /// (0 until the first successful hot-swap or activation of a newer
+    /// version — the v1 counter semantics).
     pub fn generation(&self) -> u64 {
         self.swap
             .as_ref()
-            .map(|s| s.gen.load(Ordering::Acquire))
+            .map(|s| {
+                let t = s.table.lock().expect("swap state poisoned");
+                t.entries.get(&t.active).map(|vp| vp.gen_no).unwrap_or(0)
+            })
             .unwrap_or(0)
+    }
+
+    /// The plan version untagged requests currently route to (0 on
+    /// unversioned backends — PJRT executables bake their plan in).
+    pub fn active_version(&self) -> u64 {
+        self.swap
+            .as_ref()
+            .map(|s| s.table.lock().expect("swap state poisoned").active)
+            .unwrap_or(0)
+    }
+
+    /// Whether a plan version is currently installed (allocation-free —
+    /// routing-path check).
+    pub fn has_version(&self, version: u64) -> bool {
+        self.swap
+            .as_ref()
+            .map(|s| {
+                s.table
+                    .lock()
+                    .expect("swap state poisoned")
+                    .entries
+                    .contains_key(&version)
+            })
+            .unwrap_or(false)
+    }
+
+    /// Every installed (servable) plan version, ascending.
+    pub fn installed_versions(&self) -> Vec<u64> {
+        self.swap
+            .as_ref()
+            .map(|s| {
+                s.table
+                    .lock()
+                    .expect("swap state poisoned")
+                    .entries
+                    .keys()
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// The swap cell + emulator spec, or the typed "can't version PJRT"
+    /// rejection every version operation shares.
+    fn versioned(
+        &self,
+    ) -> std::result::Result<(&Arc<SwapState>, &Arc<EmulatorSpec>), ServiceError> {
+        match (&self.swap, &self.emu_spec) {
+            (Some(s), Some(e)) => Ok((s, e)),
+            _ => Err(ServiceError::PlanRejected(
+                "plan versioning requires the emulator backend (PJRT executables bake their plan in)"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Install `plan` as immutable version `version`: validate it by
+    /// re-quantizing the weights **once** (same shared-`Arc` cache as
+    /// startup) and publish it to the workers *without* routing any
+    /// traffic to it. Returns the generation number assigned to the
+    /// version. Re-installing an existing version with the same plan is
+    /// an idempotent no-op; a different plan under a taken number is
+    /// rejected (versions are immutable).
+    pub fn install_version(
+        &self,
+        version: u64,
+        plan: ExecutionPlan,
+    ) -> std::result::Result<u64, ServiceError> {
+        let (swap, spec) = self.versioned()?;
+        if let Some(vp) = swap
+            .table
+            .lock()
+            .expect("swap state poisoned")
+            .entries
+            .get(&version)
+        {
+            if vp.plan != plan {
+                return Err(ServiceError::PlanRejected(format!(
+                    "version {version} is already installed with a different plan (versions are immutable)"
+                )));
+            }
+            return Ok(vp.gen_no);
+        }
+        let prepared = Executor::prepare_weights(&spec.model, &spec.params, &plan, &spec.luts)
+            .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?;
+        let mut table = swap.table.lock().expect("swap state poisoned");
+        if let Some(vp) = table.entries.get(&version) {
+            // Raced with another installer of the same number.
+            if vp.plan != plan {
+                return Err(ServiceError::PlanRejected(format!(
+                    "version {version} is already installed with a different plan (versions are immutable)"
+                )));
+            }
+            return Ok(vp.gen_no);
+        }
+        let gen_no = swap.installs.fetch_add(1, Ordering::Relaxed);
+        table.entries.insert(
+            version,
+            Arc::new(VersionPlan {
+                version,
+                gen_no,
+                plan,
+                prepared,
+            }),
+        );
+        drop(table);
+        swap.epoch.fetch_add(1, Ordering::Release);
+        Ok(gen_no)
+    }
+
+    /// Route untagged traffic to installed version `version` from the
+    /// next batch boundary on. Returns its generation number. In-flight
+    /// and already-queued requests may still be served by the previous
+    /// active version; no batch mixes the two.
+    pub fn activate_version(&self, version: u64) -> std::result::Result<u64, ServiceError> {
+        let (swap, _) = self.versioned()?;
+        let mut table = swap.table.lock().expect("swap state poisoned");
+        let Some(vp) = table.entries.get(&version) else {
+            return Err(ServiceError::NoSuchVersion { version });
+        };
+        let gen_no = vp.gen_no;
+        table.active = version;
+        drop(table);
+        swap.epoch.fetch_add(1, Ordering::Release);
+        Ok(gen_no)
+    }
+
+    /// Drop an installed version (workers release its executors and
+    /// prepared weights at their next batch boundary). The active
+    /// version cannot be retired; in-flight requests pinned to the
+    /// retired version get a typed `no_such_version` rejection.
+    pub fn retire_version(&self, version: u64) -> std::result::Result<(), ServiceError> {
+        let (swap, _) = self.versioned()?;
+        let mut table = swap.table.lock().expect("swap state poisoned");
+        if table.active == version {
+            return Err(ServiceError::PlanRejected(format!(
+                "cannot retire the active version {version}"
+            )));
+        }
+        table.entries.remove(&version);
+        drop(table);
+        swap.epoch.fetch_add(1, Ordering::Release);
+        Ok(())
     }
 
     /// The shared emulator spec, when this pool runs the emulator backend
@@ -669,14 +872,73 @@ impl InferenceEngine {
         x: Vec<f32>,
         deadline: Option<Duration>,
     ) -> std::result::Result<RawReceiver, ServiceError> {
+        self.submit_raw_to(x, deadline, None)
+    }
+
+    /// Typed submit pinned to an installed plan version (`None` routes to
+    /// the active one) — the primitive under canary and shadow rollouts.
+    /// Unknown versions fail fast here; the worker re-checks at execution
+    /// time in case the version is retired while the request queues.
+    pub fn submit_raw_to(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+        version: Option<u64>,
+    ) -> std::result::Result<RawReceiver, ServiceError> {
+        if let Some(v) = version {
+            let (swap, _) = self.versioned()?;
+            if !swap
+                .table
+                .lock()
+                .expect("swap state poisoned")
+                .entries
+                .contains_key(&v)
+            {
+                return Err(ServiceError::NoSuchVersion { version: v });
+            }
+        }
         let (resp, rx) = mpsc::channel();
         self.queue.push(Request {
             x,
             deadline,
+            version,
             resp: Responder::Raw(resp),
             enqueued: Instant::now(),
         })?;
         Ok(rx)
+    }
+
+    /// Non-blocking variant of [`submit_raw_to`](Self::submit_raw_to):
+    /// returns `Ok(None)` when the bounded queue is full instead of
+    /// applying backpressure — best-effort traffic (shadow mirrors) uses
+    /// it so it can never stall a serving thread.
+    pub fn try_submit_raw_to(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+        version: Option<u64>,
+    ) -> std::result::Result<Option<RawReceiver>, ServiceError> {
+        if let Some(v) = version {
+            let (swap, _) = self.versioned()?;
+            if !swap
+                .table
+                .lock()
+                .expect("swap state poisoned")
+                .entries
+                .contains_key(&v)
+            {
+                return Err(ServiceError::NoSuchVersion { version: v });
+            }
+        }
+        let (resp, rx) = mpsc::channel();
+        let accepted = self.queue.try_push(Request {
+            x,
+            deadline,
+            version,
+            resp: Responder::Raw(resp),
+            enqueued: Instant::now(),
+        })?;
+        Ok(accepted.then_some(rx))
     }
 
     /// Submit one sample; returns a receiver for its output row. Blocks
@@ -690,6 +952,7 @@ impl InferenceEngine {
             .push(Request {
                 x,
                 deadline: None,
+                version: None,
                 resp: Responder::Flat(resp),
                 enqueued: Instant::now(),
             })
@@ -718,32 +981,38 @@ impl InferenceEngine {
         }
     }
 
-    /// Hot-swap the execution plan on a live pool (emulator backends).
-    ///
-    /// Validates the plan by re-quantizing the weights **once** (same
-    /// shared-`Arc` cache as startup), then publishes it; every worker
-    /// adopts at its next batch boundary, so no batch mixes generations.
-    /// In-flight and already-queued requests may still be served by the
-    /// previous generation. Returns the new generation number.
+    /// Hot-swap the execution plan on a live pool (emulator backends):
+    /// install `plan` under the next free version number, activate it,
+    /// and retire every other version in one atomic table update — the
+    /// `POST /v1/plan` semantics, keeping exactly one live plan like the
+    /// pre-registry engine did (no unbounded growth across repeated
+    /// swaps; registry-managed rollouts use install/activate/retire
+    /// directly and keep their own rollback target). Every worker adopts
+    /// at its next batch boundary, so no batch mixes generations;
+    /// in-flight and already-queued requests may still be served by the
+    /// previous generation. Returns the new generation.
     pub fn swap_plan(&self, plan: ExecutionPlan) -> std::result::Result<u64, ServiceError> {
-        let (Some(swap), Some(spec)) = (&self.swap, &self.emu_spec) else {
-            return Err(ServiceError::PlanRejected(
-                "plan hot-swap requires the emulator backend (PJRT executables bake their plan in)"
-                    .into(),
-            ));
-        };
+        let (swap, spec) = self.versioned()?;
         let prepared = Executor::prepare_weights(&spec.model, &spec.params, &plan, &spec.luts)
             .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?;
-        let mut cur = swap.current.lock().expect("swap state poisoned");
-        let gen_no = cur.gen_no + 1;
-        *cur = GenPlan {
-            gen_no,
-            plan,
-            prepared,
-        };
+        let mut table = swap.table.lock().expect("swap state poisoned");
+        let version = table.entries.keys().next_back().copied().unwrap_or(0) + 1;
+        let gen_no = swap.installs.fetch_add(1, Ordering::Relaxed);
+        table.entries.clear();
+        table.entries.insert(
+            version,
+            Arc::new(VersionPlan {
+                version,
+                gen_no,
+                plan,
+                prepared,
+            }),
+        );
+        table.active = version;
+        drop(table);
         // Publish after the guarded update: a worker that sees the new
-        // counter always finds the new GenPlan under the lock.
-        swap.gen.store(gen_no, Ordering::Release);
+        // epoch always finds the new table under the lock.
+        swap.epoch.fetch_add(1, Ordering::Release);
         Ok(gen_no)
     }
 
@@ -775,9 +1044,12 @@ impl Drop for InferenceEngine {
 // ---------------------------------------------------------------------------
 
 /// The shared dynamic-batching loop: gather up to `bs` requests (first one
-/// blocking, the rest until `max_wait`), pad, run `infer`, fan out.
-/// `per` is the flat per-sample input length. `infer` returns the flat
-/// output plus the plan generation it computed under.
+/// blocking, the rest until `max_wait`), partition by requested plan
+/// version, pad + run `infer` per version group, fan out. `per` is the
+/// flat per-sample input length. `infer` takes the group's version pin
+/// (`None` = active) and returns the flat output plus the (generation,
+/// version) it actually computed under — so no executed batch ever mixes
+/// plan versions.
 fn batching_loop<F>(
     queue: &SharedQueue,
     bs: usize,
@@ -787,9 +1059,10 @@ fn batching_loop<F>(
     cell: &StatsCell,
     mut infer: F,
 ) where
-    F: FnMut(&[f32]) -> std::result::Result<(Vec<f32>, u64), ServiceError>,
+    F: FnMut(Option<u64>, &[f32]) -> std::result::Result<(Vec<f32>, u64, u64), ServiceError>,
 {
     let mut pending: Vec<(Request, Duration)> = Vec::with_capacity(bs);
+    let mut group: Vec<(Request, Duration)> = Vec::with_capacity(bs);
     let mut flat: Vec<f32> = Vec::with_capacity(bs * per);
     // A malformed or expired request must never take down the worker (or
     // the rest of its batch): answer it with a typed error and keep it
@@ -842,38 +1115,60 @@ fn batching_loop<F>(
             continue;
         }
 
-        // Assemble the padded batch.
-        let t0 = Instant::now();
-        flat.clear();
-        for (r, _) in &pending {
-            flat.extend_from_slice(&r.x);
-        }
-        let real = pending.len();
-        for _ in real..bs {
-            let last_start = (real - 1) * per;
-            flat.extend_from_within(last_start..last_start + per);
-        }
-
-        let result = infer(&flat);
-        let compute = t0.elapsed();
-        cell.record_batch(real, bs - real, compute);
-
-        match result {
-            Ok((out, generation)) => {
-                let row = out.len() / bs;
-                for (i, (r, waited)) in pending.drain(..).enumerate() {
-                    r.resp.send(Ok(RawResponse {
-                        output: out[i * row..(i + 1) * row].to_vec(),
-                        queue_wait: waited,
-                        compute,
-                        worker,
-                        generation,
-                    }));
+        // Execute the gathered requests in per-version groups (arrival
+        // order preserved), so no executed batch ever mixes plan
+        // versions. The dominant case — every request on the same
+        // version — is a zero-allocation buffer swap; only a genuinely
+        // mixed gather (a live canary/shadow split) pays a partition.
+        while !pending.is_empty() {
+            let key = pending[0].0.version;
+            if pending.iter().all(|(r, _)| r.version == key) {
+                std::mem::swap(&mut pending, &mut group);
+            } else {
+                let mut rest: Vec<(Request, Duration)> = Vec::with_capacity(pending.len());
+                for p in pending.drain(..) {
+                    if p.0.version == key {
+                        group.push(p);
+                    } else {
+                        rest.push(p);
+                    }
                 }
+                pending = rest;
             }
-            Err(e) => {
-                for (r, _) in pending.drain(..) {
-                    r.resp.send(Err(e.clone()));
+
+            let t0 = Instant::now();
+            flat.clear();
+            for (r, _) in &group {
+                flat.extend_from_slice(&r.x);
+            }
+            let real = group.len();
+            for _ in real..bs {
+                let last_start = (real - 1) * per;
+                flat.extend_from_within(last_start..last_start + per);
+            }
+
+            let result = infer(key, &flat);
+            let compute = t0.elapsed();
+            cell.record_batch(real, bs - real, compute);
+
+            match result {
+                Ok((out, generation, version)) => {
+                    let row = out.len() / bs;
+                    for (i, (r, waited)) in group.drain(..).enumerate() {
+                        r.resp.send(Ok(RawResponse {
+                            output: out[i * row..(i + 1) * row].to_vec(),
+                            queue_wait: waited,
+                            compute,
+                            worker,
+                            generation,
+                            version,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    for (r, _) in group.drain(..) {
+                        r.resp.send(Err(e.clone()));
+                    }
                 }
             }
         }
@@ -937,41 +1232,48 @@ fn pjrt_worker(
 
     let bs = rt.manifest.batch;
     let per: usize = st.model.input_shape.iter().product();
-    batching_loop(queue, bs, per, max_wait, worker, cell, |flat| {
-        // PJRT executables bake their plan in: always generation 0.
+    batching_loop(queue, bs, per, max_wait, worker, cell, |version, flat| {
+        // PJRT executables bake their plan in: always generation 0 and
+        // unversioned; version-pinned requests are rejected per-request.
+        if let Some(v) = version {
+            return Err(ServiceError::NoSuchVersion { version: v });
+        }
         (|| -> Result<Vec<f32>> {
             let x = ops::flat_batch_input(&st.model, bs, flat)?;
             ops::infer_batch(&mut rt, &st, variant, &x, lut_lit.as_ref())
         })()
-        .map(|out| (out, 0u64))
+        .map(|out| (out, 0u64, 0u64))
         .map_err(|e| ServiceError::Backend(format!("{e:#}")))
     });
 }
 
-/// Build one emulator executor for a generation's plan + shared weights.
-fn emulator_executor<'m>(spec: &'m EmulatorSpec, gp: &GenPlan) -> Result<Executor<'m>> {
+/// Build one emulator executor for a version's plan + shared weights.
+fn emulator_executor<'m>(spec: &'m EmulatorSpec, vp: &VersionPlan) -> Result<Executor<'m>> {
     Executor::with_prepared(
         &spec.model,
         spec.params.clone(),
-        gp.plan.clone(),
+        vp.plan.clone(),
         spec.act_scales.clone(),
         Style::Optimized {
             threads: spec.gemm_threads.max(1),
         },
-        gp.prepared.clone(),
+        vp.prepared.clone(),
         ScratchArena::new(),
     )
 }
 
 /// Emulator-backed worker: adopts the pool's shared quantized weights
-/// (one `Arc` clone, no re-quantization) and owns its own scratch arena
-/// over the shared spec, then serves the queue. Artifact-free — this is
-/// what the concurrency tests and the HTTP front-end run on.
+/// (one `Arc` clone per version, no re-quantization) and owns one
+/// executor + scratch arena per installed version it has actually
+/// served, over the shared spec. Artifact-free — this is what the
+/// concurrency tests and the HTTP front-end run on.
 ///
-/// At every batch boundary the worker compares its local generation with
-/// the swap cell; on a mismatch it rebuilds its executor from the newly
-/// published plan + shared weights before executing, so a single batch
-/// never mixes generations.
+/// At every batch boundary the worker compares its local epoch with the
+/// swap cell; on a mismatch it re-snapshots the version table (dropping
+/// executors of retired versions) before executing, so a single batch
+/// never mixes plan versions. Executors for versions beyond the active
+/// one (canary / shadow candidates) build lazily on first use and stay
+/// cached until the version is retired.
 fn emulator_worker(
     spec: &EmulatorSpec,
     swap: &SwapState,
@@ -982,18 +1284,28 @@ fn emulator_worker(
     ready: &mpsc::Sender<Result<(usize, usize)>>,
 ) {
     let per: usize = spec.model.input_shape.iter().product();
-    let gp0 = swap.current.lock().expect("swap state poisoned").clone();
-    let mut local_gen = gp0.gen_no;
-    let mut exec = match emulator_executor(spec, &gp0) {
+    let mut local_epoch = swap.epoch.load(Ordering::Acquire);
+    let (mut entries, mut active) = {
+        let t = swap.table.lock().expect("swap state poisoned");
+        (t.entries.clone(), t.active)
+    };
+    let mut execs: BTreeMap<u64, Executor> = BTreeMap::new();
+    // Build the active version's executor up front: it validates the
+    // backend before the pool reports ready.
+    let setup = match entries.get(&active) {
+        Some(vp) => emulator_executor(spec, vp),
+        None => Err(anyhow::anyhow!("no active plan version")),
+    };
+    match setup {
         Ok(exec) => {
+            execs.insert(active, exec);
             let _ = ready.send(Ok((spec.model.out_dim, per)));
-            exec
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
-    };
+    }
 
     // Token-sequence models take rounded ids; anything else is rejected
     // per-request with a typed error (not a refused start).
@@ -1001,18 +1313,30 @@ fn emulator_worker(
     let bs = spec.batch.max(1);
     let mut shape = vec![bs];
     shape.extend_from_slice(&spec.model.input_shape);
-    batching_loop(queue, bs, per, max_wait, worker, cell, |flat| {
-        // Batch boundary: adopt a newly published plan generation before
-        // touching this batch. Swap failures keep the old executor (the
-        // publish path validated the plan, so this is belt-and-braces).
-        let cur = swap.gen.load(Ordering::Acquire);
-        if cur != local_gen {
-            let gp = swap.current.lock().expect("swap state poisoned").clone();
-            if let Ok(e) = emulator_executor(spec, &gp) {
-                exec = e;
-                local_gen = gp.gen_no;
-            }
+    batching_loop(queue, bs, per, max_wait, worker, cell, |version, flat| {
+        // Batch boundary: adopt newly published table changes before
+        // touching this group; executors of retired versions go with it.
+        let cur = swap.epoch.load(Ordering::Acquire);
+        if cur != local_epoch {
+            let t = swap.table.lock().expect("swap state poisoned");
+            entries = t.entries.clone();
+            active = t.active;
+            drop(t);
+            execs.retain(|v, _| entries.contains_key(v));
+            local_epoch = cur;
         }
+        let v = version.unwrap_or(active);
+        let Some(vp) = entries.get(&v) else {
+            // Pinned to a version retired while the request queued.
+            return Err(ServiceError::NoSuchVersion { version: v });
+        };
+        if let std::collections::btree_map::Entry::Vacant(slot) = execs.entry(v) {
+            slot.insert(
+                emulator_executor(spec, vp)
+                    .map_err(|e| ServiceError::Backend(format!("{e:#}")))?,
+            );
+        }
+        let exec = execs.get(&v).expect("executor cached above");
         let input = match dtype.as_str() {
             "f32" => Value::F(
                 Tensor::from_vec(&shape, flat.to_vec())
@@ -1025,7 +1349,7 @@ fn emulator_worker(
             other => return Err(ServiceError::UnsupportedDtype(other.to_string())),
         };
         exec.forward(input)
-            .map(|out| (out.data, local_gen))
+            .map(|out| (out.data, vp.gen_no, vp.version))
             .map_err(|e| ServiceError::Backend(format!("{e:#}")))
     });
 }

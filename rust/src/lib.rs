@@ -44,13 +44,16 @@
 //!   the pool-parallel per-layer ACU sensitivity sweep / greedy
 //!   mixed-precision search
 //!   (`coordinator::experiments::layer_sensitivity`).
-//! * [`service`] — the versioned serving API over the engine pool:
+//! * [`service`] — the versioned serving API over the engine pools:
 //!   typed [`service::InferRequest`]/[`service::InferResponse`] +
 //!   structured [`service::ServiceError`], the [`service::AdaptService`]
-//!   control plane (plan hot-swap, live stats, health), a dependency-free
-//!   HTTP/1.1 front-end (`POST /v1/infer`, `POST /v1/plan`,
-//!   `GET /v1/stats`, `GET /v1/healthz`) and the load-generating client
-//!   behind `adapt serve --listen` / `adapt client`.
+//!   control plane per model, the [`service::ModelRegistry`] (N named
+//!   models, immutable plan versions, canary rollout, live shadow
+//!   evaluation, activate/rollback), a dependency-free HTTP/1.1
+//!   front-end (the `/v1` single-model shim + the `/v2/models/...`
+//!   registry routes, idle-timeout + connection-cap hardened) and the
+//!   load-generating client behind `adapt serve --listen` /
+//!   `adapt client`.
 //! * [`trainer`] — emulator-native approximation-aware retraining (QAT):
 //!   clipped-STE backward through the quantized/LUT forward
 //!   ([`emulator::Executor::forward_taped`]), SGD-with-momentum, and the

@@ -24,23 +24,36 @@
 //! adapt plan --model NAME [--spec "default=ACU,layer=ACU,head=fp32"]
 //!       [--out FILE]                  build/inspect a per-layer plan JSON
 //! adapt calibrate --model NAME [--calibrator max|percentile|mse|entropy]
-//! adapt serve --model NAME [--requests N] [--workers N] [--queue-depth D]
-//!       [--listen ADDR] [--synthetic] [--addr-file PATH]
+//! adapt serve [--model NAME]... [--requests N] [--workers N]
+//!       [--queue-depth D] [--listen ADDR] [--synthetic]
+//!       [--addr-file PATH] [--max-conns N] [--idle-timeout-ms MS]
 //!       engine-pool serving: N dynamic-batching workers over one bounded
-//!       request queue (submitters block when it fills). Without
-//!       --listen, the self-feeding demo; with --listen HOST:PORT (port 0
-//!       = ephemeral), the HTTP/1.1 front-end (POST /v1/infer,
-//!       POST /v1/plan hot-swap, GET /v1/stats, GET /v1/healthz) until
-//!       killed. --synthetic serves the bundled tiny model on the
-//!       artifact-free emulator backend (the CI smoke); --addr-file
-//!       writes the bound address for scripts.
-//! adapt client --addr HOST:PORT [--requests N] [--concurrency C]
-//!       [--top-k K] [--deadline-ms D] [--swap-spec S | --swap-plan F]
-//!       [--bench-out FILE]
+//!       request queue per model (submitters block when it fills).
+//!       Without --listen, the self-feeding demo; with --listen HOST:PORT
+//!       (port 0 = ephemeral), the HTTP/1.1 front-end until killed: the
+//!       /v1 single-model routes (a shim over the registry's default
+//!       model) plus the /v2 registry routes (GET /v2/models,
+//!       per-model infer/stats, immutable plan versions, canary, shadow,
+//!       activate/rollback). --model may repeat: every name becomes a
+//!       registry model with its own engine pool (the first is the /v1
+//!       default). --synthetic serves bundled tiny models on the
+//!       artifact-free emulator backend, one per name with distinct
+//!       weights (the CI smoke); --addr-file writes the bound address
+//!       for scripts.
+//! adapt client --addr HOST:PORT [--model NAME] [--requests N]
+//!       [--concurrency C] [--top-k K] [--deadline-ms D]
+//!       [--swap-spec S | --swap-plan F] [--canary FRACTION] [--shadow]
+//!       [--promote] [--bench-out FILE] [--json]
 //!       load generator against a running `adapt serve --listen`:
-//!       submit -> measure -> (optional plan hot-swap) -> measure -> show
-//!       /v1/stats; exits non-zero on any failed response or a swap that
-//!       doesn't take
+//!       submit -> measure -> (optional plan rollout) -> measure -> show
+//!       stats. Default rollout is the v1-style create-and-activate
+//!       swap; --canary F creates the version and routes fraction F to
+//!       it instead (asserting the split), --shadow mirrors traffic to
+//!       it and prints live disagreement stats, --promote activates the
+//!       candidate after phase 2. --model targets a registry model
+//!       (/v2 routes); --json emits the machine-readable report to
+//!       stdout. Exits non-zero on any failed response or a rollout
+//!       that doesn't take.
 //! adapt selftest                      emulator vs XLA cross-check
 //! ```
 //!
@@ -65,7 +78,8 @@ use adapt::lut::LutRegistry;
 use adapt::mult;
 use adapt::quant::calib::CalibratorKind;
 use adapt::runtime::Runtime;
-use adapt::service::{client, http::HttpServer, AdaptService};
+use adapt::service::http::{HttpServer, ServeOptions};
+use adapt::service::{client, AdaptService, ModelRegistry};
 use adapt::util::cli::Args;
 use adapt::util::fmt;
 use adapt::util::json::Json;
@@ -332,9 +346,11 @@ fn run() -> Result<()> {
             println!("  retrain --model M (--plan-file F | --spec S) [--epochs N] [--lr LR] [--save]");
             println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke)");
             println!("  plan --model M [--spec S] | calibrate --model M");
-            println!("  serve --model M [--workers N] [--queue-depth D] [--listen ADDR] [--synthetic]");
-            println!("        (--listen = HTTP/1.1 front-end: /v1/infer /v1/plan /v1/stats /v1/healthz)");
-            println!("  client --addr HOST:PORT [--requests N] [--concurrency C] [--swap-spec S]");
+            println!("  serve [--model M]... [--workers N] [--queue-depth D] [--listen ADDR] [--synthetic]");
+            println!("        (--listen = HTTP/1.1 front-end: /v1 shim + /v2 registry routes;");
+            println!("         repeat --model to serve several models, first = /v1 default)");
+            println!("  client --addr HOST:PORT [--model M] [--requests N] [--concurrency C]");
+            println!("         [--swap-spec S] [--canary F] [--shadow] [--promote] [--json]");
             println!("  selftest [--model M]");
             println!("  thread defaults: env ADAPT_THREADS (else available parallelism)");
         }
@@ -342,8 +358,19 @@ fn run() -> Result<()> {
     Ok(())
 }
 
-/// `adapt serve`: start the engine pool and either run the self-feeding
-/// demo (no `--listen`) or expose the HTTP/1.1 front-end until killed.
+/// Deterministic per-name seed perturbation, so every named synthetic
+/// model gets visibly distinct weights (FNV-1a over the name).
+fn name_seed(base: u64, name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    base ^ h
+}
+
+/// `adapt serve`: start one engine pool per `--model` and either run the
+/// self-feeding demo (no `--listen`) or expose the HTTP/1.1 front-end
+/// (the /v1 shim + /v2 registry routes) until killed.
 fn serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 64)?;
     let workers = args.get_usize("workers", adapt::util::threadpool::default_threads())?;
@@ -351,60 +378,103 @@ fn serve(args: &Args) -> Result<()> {
     let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20)? as u64);
     let acu = args.get_or("acu", "mul8s_1l2h_like").to_string();
     let synthetic = args.flag("synthetic");
+    let base_seed = args.get_usize("seed", 0x5EED)? as u64;
+    let batch = args.get_usize("batch", 8)?;
 
-    let (mut cfg, model_name) = if synthetic {
-        // Bundled tiny model on the artifact-free emulator backend: no
-        // artifacts dir at all (the CI serve smoke).
-        let seed = args.get_usize("seed", 0x5EED)? as u64;
-        let model = adapt::trainer::synth::tiny_cnn();
-        let name = model.name.clone();
-        let params = adapt::trainer::synth::tiny_params(&model, seed);
-        let ds = adapt::trainer::synth::tiny_dataset(256, 64);
-        let scales = adapt::trainer::calibrate_emulator(
-            &model,
-            &params,
-            &ds.train,
-            32,
-            2,
-            CalibratorKind::Percentile,
-            0.999,
-            workers.max(1),
-        )?;
-        let plan = retransform(&model, &Policy::all(LayerMode::lut(acu.as_str())));
-        let spec = EmulatorSpec {
-            model,
-            params,
-            plan,
-            act_scales: scales,
-            luts: LutRegistry::in_memory(),
-            batch: args.get_usize("batch", 8)?,
-            gemm_threads: 1,
+    // Engine config for one served name (`None` = the historical
+    // single-model defaults, byte-compatible with the old CLI).
+    let build_cfg = |name: Option<&str>| -> Result<(EngineConfig, String)> {
+        let mut cfg = if synthetic {
+            // Bundled tiny model on the artifact-free emulator backend:
+            // no artifacts dir at all (the CI serve smoke). Named models
+            // get name-perturbed weights so two registry models disagree.
+            let mut model = adapt::trainer::synth::tiny_cnn();
+            let seed = match name {
+                Some(n) => {
+                    model.name = n.to_string();
+                    name_seed(base_seed, n)
+                }
+                None => base_seed,
+            };
+            let params = adapt::trainer::synth::tiny_params(&model, seed);
+            let ds = adapt::trainer::synth::tiny_dataset(256, 64);
+            let scales = adapt::trainer::calibrate_emulator(
+                &model,
+                &params,
+                &ds.train,
+                32,
+                2,
+                CalibratorKind::Percentile,
+                0.999,
+                workers.max(1),
+            )?;
+            let plan = retransform(&model, &Policy::all(LayerMode::lut(acu.as_str())));
+            let spec = EmulatorSpec {
+                model,
+                params,
+                plan,
+                act_scales: scales,
+                luts: LutRegistry::in_memory(),
+                batch,
+                gemm_threads: 1,
+            };
+            EngineConfig::emulator(spec)
+        } else {
+            let model = name.unwrap_or("small_vgg").to_string();
+            EngineConfig::pjrt(
+                artifacts_from(args),
+                model,
+                InferVariant::ApproxLut,
+                Some(acu.clone()),
+            )
         };
-        (EngineConfig::emulator(spec), name)
-    } else {
-        let model = args.get_or("model", "small_vgg").to_string();
-        let cfg = EngineConfig::pjrt(
-            artifacts_from(args),
-            model.clone(),
-            InferVariant::ApproxLut,
-            Some(acu.clone()),
-        );
-        (cfg, model)
+        cfg.max_wait = max_wait;
+        cfg.workers = workers;
+        cfg.queue_depth = queue_depth;
+        let model_name = match &cfg.backend {
+            adapt::coordinator::engine::BackendSpec::Pjrt { model, .. } => model.clone(),
+            adapt::coordinator::engine::BackendSpec::Emulator(spec) => spec.model.name.clone(),
+        };
+        Ok((cfg, model_name))
     };
-    cfg.max_wait = max_wait;
-    cfg.workers = workers;
-    cfg.queue_depth = queue_depth;
+
+    let names: Vec<Option<String>> = {
+        let given = args.get_all("model");
+        if given.is_empty() {
+            vec![None]
+        } else {
+            given.into_iter().map(Some).collect()
+        }
+    };
 
     if let Some(addr) = args.get("listen") {
-        // Network front-end: serve /v1 until the process is killed.
-        let service = std::sync::Arc::new(AdaptService::start(cfg)?);
-        let server = HttpServer::start(std::sync::Arc::clone(&service), addr)?;
+        // Network front-end: one engine pool per model, one registry,
+        // served until the process is killed.
+        let mut entries = Vec::with_capacity(names.len());
+        for name in &names {
+            let (cfg, model_name) = build_cfg(name.as_deref())?;
+            entries.push((model_name, std::sync::Arc::new(AdaptService::start(cfg)?)));
+        }
+        let served: Vec<String> = entries.iter().map(|(n, _)| n.clone()).collect();
+        let registry = std::sync::Arc::new(ModelRegistry::new(entries)?);
+        let opts = ServeOptions {
+            max_conns: args.get_usize("max-conns", ServeOptions::default().max_conns)?,
+            idle_timeout: Duration::from_millis(args.get_usize(
+                "idle-timeout-ms",
+                ServeOptions::default().idle_timeout.as_millis() as usize,
+            )? as u64),
+            ..ServeOptions::default()
+        };
+        let server = HttpServer::start_registry(registry, addr, opts)?;
         let bound = server.addr();
         println!(
-            "adapt service for {model_name} listening on http://{bound} \
-             ({workers} workers, queue depth {queue_depth})"
+            "adapt registry [{}] listening on http://{bound} \
+             ({workers} workers/model, queue depth {queue_depth})",
+            served.join(", "),
         );
         println!("  POST /v1/infer   POST /v1/plan   GET /v1/stats   GET /v1/healthz");
+        println!("  GET /v2/models   /v2/models/{{m}}/infer|stats|plans|rollback");
+        println!("  /v2/models/{{m}}/plans/{{v}}/activate|canary|shadow");
         if let Some(path) = args.get("addr-file") {
             std::fs::write(path, bound.to_string())
                 .with_context(|| format!("writing {path}"))?;
@@ -413,6 +483,13 @@ fn serve(args: &Args) -> Result<()> {
             std::thread::park();
         }
     }
+
+    // The self-feeding demo drives exactly one engine pool; serving
+    // several models needs the HTTP registry.
+    if names.len() > 1 {
+        bail!("multiple --model flags need --listen (the registry front-end)");
+    }
+    let (cfg, model_name) = build_cfg(names[0].as_deref())?;
 
     // Self-feeding demo: build the request feed from the eval split (the
     // HTTP path above never needs it). i32-input models (token sequences)
@@ -501,15 +578,42 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// How `adapt client` rolls the candidate plan out between its two
+/// measured phases.
+enum RolloutMode {
+    /// v1-style create-and-activate swap (the default).
+    Swap,
+    /// Create the version and canary `fraction` of traffic to it.
+    Canary(f64),
+    /// Create the version and mirror traffic to it (shadow evaluation).
+    Shadow,
+}
+
 /// `adapt client`: load-generate against a running `adapt serve --listen`,
-/// optionally hot-swapping the plan between two measured phases.
+/// optionally rolling a candidate plan out between two measured phases
+/// (activate / canary / shadow, with `--promote` afterwards).
 fn client_cmd(args: &Args) -> Result<()> {
     let addr = args.get("addr").context("--addr required (host:port)")?.to_string();
     let requests = args.get_usize("requests", 128)?;
     let concurrency = args.get_usize("concurrency", 4)?;
     let seed = args.get_usize("seed", 7)? as u64;
+    let model = args.get("model").map(|s| s.to_string());
+    let json_mode = args.flag("json");
+    // With --json, stdout carries exactly one JSON document; the human
+    // narration moves to stderr.
+    let say = |line: String| {
+        if json_mode {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    let path = client::infer_path(model.as_deref());
     let input_len = match args.get_usize("input-len", 0)? {
-        0 => client::discover_input_len(&addr)?,
+        0 => match &model {
+            Some(m) => client::discover_model_input_len(&addr, m)?,
+            None => client::discover_input_len(&addr)?,
+        },
         n => n,
     };
     let cfg = client::LoadConfig {
@@ -521,34 +625,49 @@ fn client_cmd(args: &Args) -> Result<()> {
         deadline_ms: args.get("deadline-ms").map(|s| s.parse()).transpose()?,
         seed,
     };
-    println!(
-        "load: {requests} requests x {concurrency} connections against http://{addr} \
+    say(format!(
+        "load: {requests} requests x {concurrency} connections against http://{addr}{path} \
          (input_len {input_len})"
-    );
+    ));
     let print_report = |label: &str, r: &client::LoadReport| {
         let gens: Vec<String> = r
             .by_generation
             .iter()
             .map(|(g, n)| format!("gen {g}: {n}"))
             .collect();
-        println!(
-            "{label}: {}/{} ok in {} ({:.1} req/s), latency p50/p95 = {}/{} µs [{}]",
+        let vers: Vec<String> = r
+            .by_version
+            .iter()
+            .map(|(v, n)| format!("v{v}: {n}"))
+            .collect();
+        say(format!(
+            "{label}: {}/{} ok in {} ({:.1} req/s), latency p50/p95/p99 = {}/{}/{} µs \
+             [{}] [{}]",
             r.ok,
             r.ok + r.errors,
             fmt::dur(r.wall),
             r.requests_per_sec(),
             r.percentile_us(0.50),
             r.percentile_us(0.95),
+            r.percentile_us(0.99),
             gens.join(", "),
-        );
+            vers.join(", "),
+        ));
     };
-    let phase1 = client::run_load(&cfg)?;
+    let phase1 = client::run_load_on(&cfg, &path)?;
     print_report("phase 1", &phase1);
     if phase1.errors > 0 {
         bail!("{} failed responses in phase 1", phase1.errors);
     }
 
-    // Optional live plan swap between the two measured phases.
+    // Optional rollout of a candidate plan between the two phases.
+    let rollout = if let Some(f) = args.get("canary") {
+        RolloutMode::Canary(f.parse().context("--canary takes a fraction in [0, 1]")?)
+    } else if args.flag("shadow") {
+        RolloutMode::Shadow
+    } else {
+        RolloutMode::Swap
+    };
     let swap_body = if let Some(spec) = args.get("swap-spec") {
         let mut m = std::collections::BTreeMap::new();
         m.insert("spec".to_string(), Json::Str(spec.to_string()));
@@ -560,41 +679,190 @@ fn client_cmd(args: &Args) -> Result<()> {
             })
             .transpose()?
     };
-    let mut phase2 = None;
-    if let Some(body) = swap_body {
-        let (status, resp) = client::http_call(&addr, "POST", "/v1/plan", Some(&body))?;
-        if status != 200 {
-            bail!("plan swap failed ({status}): {resp}");
+
+    // A rollout mode without a candidate plan would silently measure
+    // nothing — refuse instead.
+    if swap_body.is_none() && !matches!(rollout, RolloutMode::Swap) {
+        bail!("--canary/--shadow need a candidate plan (use --swap-spec or --swap-plan)");
+    }
+
+    // The /v2 routes need a model name; resolve the registry default
+    // when the rollout needs them and --model wasn't given.
+    let v2_target = |needed: bool| -> Result<Option<String>> {
+        if let Some(m) = &model {
+            return Ok(Some(m.clone()));
         }
-        let generation = Json::parse(&resp)?.get("generation")?.i64()? as u64;
-        println!("plan swapped: now serving generation {generation}");
+        if !needed {
+            return Ok(None);
+        }
+        let (status, body) = client::http_call(&addr, "GET", "/v2/models", None)?;
+        if status != 200 {
+            bail!("/v2/models failed ({status}): {body}");
+        }
+        Ok(Some(Json::parse(&body)?.get("default")?.str()?.to_string()))
+    };
+
+    let mut phase2: Option<(String, client::LoadReport)> = None;
+    let mut candidate: Option<(String, u64)> = None; // (target model, version)
+    if let Some(body) = swap_body {
+        let (label, expect_generation, expect_canary) = match &rollout {
+            RolloutMode::Swap => {
+                let generation = match &model {
+                    // v1-compatible path: one call creates + activates
+                    // on the default model.
+                    None => {
+                        let (status, resp) =
+                            client::http_call(&addr, "POST", "/v1/plan", Some(&body))?;
+                        if status != 200 {
+                            bail!("plan swap failed ({status}): {resp}");
+                        }
+                        Json::parse(&resp)?.get("generation")?.i64()? as u64
+                    }
+                    // Targeted model: create the version, then activate.
+                    Some(_) => {
+                        let target = v2_target(true)?.expect("model given");
+                        let version = create_candidate(&addr, &target, &body)?;
+                        let (status, resp) = client::http_call(
+                            &addr,
+                            "POST",
+                            &format!("/v2/models/{target}/plans/{version}/activate"),
+                            Some("{}"),
+                        )?;
+                        if status != 200 {
+                            bail!("activate failed ({status}): {resp}");
+                        }
+                        candidate = Some((target, version));
+                        Json::parse(&resp)?.get("generation")?.i64()? as u64
+                    }
+                };
+                say(format!("plan swapped: now serving generation {generation}"));
+                ("phase 2 (swapped)", Some(generation), None)
+            }
+            RolloutMode::Canary(f) => {
+                let fraction = *f;
+                let target = v2_target(true)?.expect("resolved above");
+                let version = create_candidate(&addr, &target, &body)?;
+                let (status, resp) = client::http_call(
+                    &addr,
+                    "POST",
+                    &format!("/v2/models/{target}/plans/{version}/canary"),
+                    Some(&format!("{{\"fraction\": {fraction}}}")),
+                )?;
+                if status != 200 {
+                    bail!("canary start failed ({status}): {resp}");
+                }
+                say(format!(
+                    "canary: version {version} takes {:.1}% of {target} traffic",
+                    fraction * 100.0
+                ));
+                candidate = Some((target, version));
+                ("phase 2 (canary)", None, Some((version, fraction)))
+            }
+            RolloutMode::Shadow => {
+                let target = v2_target(true)?.expect("resolved above");
+                let version = create_candidate(&addr, &target, &body)?;
+                let (status, resp) = client::http_call(
+                    &addr,
+                    "POST",
+                    &format!("/v2/models/{target}/plans/{version}/shadow"),
+                    Some("{}"),
+                )?;
+                if status != 200 {
+                    bail!("shadow start failed ({status}): {resp}");
+                }
+                say(format!("shadow: mirroring {target} traffic to version {version}"));
+                candidate = Some((target, version));
+                ("phase 2 (shadowed)", None, None)
+            }
+        };
+
         let cfg2 = client::LoadConfig {
             seed: seed ^ 0xA5A5,
             ..cfg.clone()
         };
-        let r = client::run_load(&cfg2)?;
-        print_report("phase 2", &r);
+        let r = client::run_load_on(&cfg2, &path)?;
+        print_report(label, &r);
         if r.errors > 0 {
             bail!("{} failed responses in phase 2", r.errors);
         }
-        // Every phase-2 response was submitted after the swap returned, so
-        // all of them must carry the new generation.
-        if r.by_generation.keys().any(|&g| g != generation) {
-            bail!(
-                "phase 2 saw generations {:?}, expected only {generation}",
-                r.by_generation.keys().collect::<Vec<_>>()
-            );
+        if let Some(generation) = expect_generation {
+            // Every phase-2 response was submitted after the swap
+            // returned, so all of them must carry the new generation.
+            if r.by_generation.keys().any(|&g| g != generation) {
+                bail!(
+                    "phase 2 saw generations {:?}, expected only {generation}",
+                    r.by_generation.keys().collect::<Vec<_>>()
+                );
+            }
         }
-        phase2 = Some((generation, r));
+        if let Some((version, fraction)) = expect_canary {
+            // The counter-based split is deterministic: exactly
+            // ⌊n·fraction⌋ of the n phase-2 requests hit the candidate.
+            let got = r.by_version.get(&version).copied().unwrap_or(0);
+            let want = (requests as f64 * fraction).floor() as usize;
+            if got != want {
+                bail!(
+                    "canary split off: {got}/{requests} responses on version {version}, \
+                     expected exactly {want}"
+                );
+            }
+            say(format!(
+                "canary split exact: {got}/{requests} responses on version {version}"
+            ));
+        }
+        if matches!(rollout, RolloutMode::Shadow) {
+            let (target, version) = candidate.clone().expect("shadow set candidate");
+            let report = client::wait_shadow_report(
+                &addr,
+                &target,
+                version,
+                requests,
+                Duration::from_secs(30),
+            )?;
+            say(format!(
+                "shadow report v{version}: {} mirrored, disagreement {:.1}%, \
+                 top-1 flips {:.1}%, max |Δ| {:.3e}",
+                report.get("mirrored")?.i64()?,
+                report.get("disagreement_rate")?.f64()? * 100.0,
+                report.get("top1_flip_rate")?.f64()? * 100.0,
+                report.get("max_abs_delta")?.f64()?,
+            ));
+        }
+        phase2 = Some((label.to_string(), r));
     }
 
-    let (status, stats) = client::http_call(&addr, "GET", "/v1/stats", None)?;
+    // Promote the candidate after the measured phases, if asked.
+    if args.flag("promote") {
+        let (target, version) = candidate
+            .clone()
+            .context("--promote needs a candidate (use --swap-spec/--swap-plan)")?;
+        let (status, resp) = client::http_call(
+            &addr,
+            "POST",
+            &format!("/v2/models/{target}/plans/{version}/activate"),
+            Some("{}"),
+        )?;
+        if status != 200 {
+            bail!("promote failed ({status}): {resp}");
+        }
+        say(format!(
+            "promoted: {target} now serves version {version} (generation {})",
+            Json::parse(&resp)?.get("generation")?.i64()?,
+        ));
+    }
+
+    // Server-side stats: the targeted model's /v2 view, or /v1.
+    let stats_path = match &model {
+        Some(m) => format!("/v2/models/{m}/stats"),
+        None => "/v1/stats".to_string(),
+    };
+    let (status, stats) = client::http_call(&addr, "GET", &stats_path, None)?;
     if status != 200 {
-        bail!("/v1/stats failed ({status}): {stats}");
+        bail!("{stats_path} failed ({status}): {stats}");
     }
     let j = Json::parse(&stats)?;
     let total = j.get("total")?;
-    println!(
+    say(format!(
         "server stats: {} requests, {} batches, generation {}, \
          queue wait p50/p95/p99 = {}/{}/{} µs",
         total.get("requests")?.i64()?,
@@ -603,23 +871,51 @@ fn client_cmd(args: &Args) -> Result<()> {
         total.get("queue_wait_p50_us")?.i64()?,
         total.get("queue_wait_p95_us")?.i64()?,
         total.get("queue_wait_p99_us")?.i64()?,
-    );
+    ));
 
-    if let Some(out) = args.get("bench-out") {
+    // The machine-readable report: --bench-out writes it, --json prints
+    // it to stdout (same shape, so scripts can use either).
+    if args.get("bench-out").is_some() || json_mode {
         let mut doc = std::collections::BTreeMap::new();
         doc.insert("requests".to_string(), Json::Num(requests as f64));
         doc.insert("concurrency".to_string(), Json::Num(concurrency as f64));
+        if let Some(m) = &model {
+            doc.insert("model".to_string(), Json::Str(m.clone()));
+        }
         doc.insert("phase1".to_string(), phase1.to_json());
-        if let Some((generation, r)) = &phase2 {
+        if let Some((label, r)) = &phase2 {
             doc.insert("phase2".to_string(), r.to_json());
-            doc.insert("generation".to_string(), Json::Num(*generation as f64));
+            doc.insert("phase2_label".to_string(), Json::Str(label.clone()));
+        }
+        if let Some((target, version)) = &candidate {
+            doc.insert("candidate_model".to_string(), Json::Str(target.clone()));
+            doc.insert("candidate_version".to_string(), Json::Num(*version as f64));
         }
         doc.insert("server_stats".to_string(), j);
-        std::fs::write(out, Json::Obj(doc).to_string())
-            .with_context(|| format!("writing {out}"))?;
-        println!("written {out}");
+        let text = Json::Obj(doc).to_string();
+        if let Some(out) = args.get("bench-out") {
+            std::fs::write(out, &text).with_context(|| format!("writing {out}"))?;
+            say(format!("written {out}"));
+        }
+        if json_mode {
+            println!("{text}");
+        }
     }
     Ok(())
+}
+
+/// Create a plan version on a registry model; returns its number.
+fn create_candidate(addr: &str, model: &str, body: &str) -> Result<u64> {
+    let (status, resp) = client::http_call(
+        addr,
+        "POST",
+        &format!("/v2/models/{model}/plans"),
+        Some(body),
+    )?;
+    if status != 200 {
+        bail!("creating plan version failed ({status}): {resp}");
+    }
+    Ok(Json::parse(&resp)?.get("version")?.i64()? as u64)
 }
 
 /// Cross-check: Rust emulator (both styles) vs the XLA approx artifact on

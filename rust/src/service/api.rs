@@ -1,4 +1,4 @@
-//! The versioned request/response types of the serving API (`/v1`).
+//! The versioned request/response types of the serving API (`/v1` + `/v2`).
 //!
 //! [`InferRequest`] / [`InferResponse`] replace the engine's original bare
 //! `Vec<f32>`-in / `Result<Vec<f32>>`-out surface: requests carry an id,
@@ -53,7 +53,14 @@ impl InferRequest {
             .arr()
             .map_err(|e| bad(format!("input: {e}")))?
             .iter()
-            .map(|v| v.f64().map(|n| n as f32))
+            .map(|v| {
+                let x = v.f64()? as f32;
+                // Non-finite inputs (incl. f64 values that overflow f32)
+                // would propagate inf/NaN into the output row; reject at
+                // the door instead.
+                anyhow::ensure!(x.is_finite(), "input values must be finite f32 ({x})");
+                Ok(x)
+            })
             .collect::<anyhow::Result<Vec<f32>>>()
             .map_err(|e| bad(format!("input: {e}")))?;
         let id = match j.opt("id") {
@@ -126,6 +133,11 @@ pub struct InferResponse {
     /// Plan generation the response was computed under (bumped by every
     /// successful plan hot-swap).
     pub generation: u64,
+    /// Plan version the response was computed under (a [`PlanStore`]
+    /// version number on registry-served models; 1 for the initial plan).
+    ///
+    /// [`PlanStore`]: crate::service::registry::PlanStore
+    pub version: u64,
 }
 
 impl InferResponse {
@@ -155,6 +167,7 @@ impl InferResponse {
         );
         m.insert("worker".into(), Json::Num(self.worker as f64));
         m.insert("generation".into(), Json::Num(self.generation as f64));
+        m.insert("version".into(), Json::Num(self.version as f64));
         Json::Obj(m)
     }
 
@@ -181,6 +194,11 @@ impl InferResponse {
             compute: Duration::from_micros(j.get("compute_us")?.i64()? as u64),
             worker: j.get("worker")?.usize()?,
             generation: j.get("generation")?.i64()? as u64,
+            // Absent on pre-registry peers: treat as the initial version.
+            version: match j.opt("version") {
+                Some(v) => v.i64()? as u64,
+                None => 1,
+            },
         })
     }
 }
@@ -201,6 +219,12 @@ pub enum ServiceError {
     BodyTooLarge { got: usize, max: usize },
     /// No such route.
     NotFound(String),
+    /// No model by that name in the registry.
+    ModelNotFound(String),
+    /// No plan version by that number in the model's store.
+    NoSuchVersion { version: u64 },
+    /// The server is at its connection cap.
+    Overloaded { conns: usize },
     /// Known route, wrong HTTP method.
     MethodNotAllowed(String),
     /// Plan hot-swap rejected (validation failed or backend can't swap).
@@ -223,6 +247,9 @@ impl ServiceError {
             ServiceError::DeadlineExceeded { .. } => "deadline_exceeded",
             ServiceError::BodyTooLarge { .. } => "body_too_large",
             ServiceError::NotFound(_) => "not_found",
+            ServiceError::ModelNotFound(_) => "model_not_found",
+            ServiceError::NoSuchVersion { .. } => "no_such_version",
+            ServiceError::Overloaded { .. } => "overloaded",
             ServiceError::MethodNotAllowed(_) => "method_not_allowed",
             ServiceError::PlanRejected(_) => "plan_rejected",
             ServiceError::ShuttingDown => "shutting_down",
@@ -235,11 +262,13 @@ impl ServiceError {
     pub fn http_status(&self) -> u16 {
         match self {
             ServiceError::BadRequest(_) | ServiceError::WrongInputLength { .. } => 400,
-            ServiceError::NotFound(_) => 404,
+            ServiceError::NotFound(_)
+            | ServiceError::ModelNotFound(_)
+            | ServiceError::NoSuchVersion { .. } => 404,
             ServiceError::MethodNotAllowed(_) => 405,
             ServiceError::BodyTooLarge { .. } => 413,
             ServiceError::UnsupportedDtype(_) | ServiceError::PlanRejected(_) => 422,
-            ServiceError::ShuttingDown => 503,
+            ServiceError::ShuttingDown | ServiceError::Overloaded { .. } => 503,
             ServiceError::DeadlineExceeded { .. } => 504,
             ServiceError::Backend(_) | ServiceError::Internal(_) => 500,
         }
@@ -271,6 +300,13 @@ impl std::fmt::Display for ServiceError {
                 write!(f, "request body {got} bytes exceeds cap {max}")
             }
             ServiceError::NotFound(p) => write!(f, "no such route: {p}"),
+            ServiceError::ModelNotFound(m) => write!(f, "no such model: {m}"),
+            ServiceError::NoSuchVersion { version } => {
+                write!(f, "no such plan version: {version}")
+            }
+            ServiceError::Overloaded { conns } => {
+                write!(f, "server at its connection cap ({conns} open)")
+            }
             ServiceError::MethodNotAllowed(m) => write!(f, "method not allowed: {m}"),
             ServiceError::PlanRejected(m) => write!(f, "plan rejected: {m}"),
             ServiceError::ShuttingDown => write!(f, "service is shutting down"),
@@ -317,6 +353,7 @@ mod tests {
             compute: Duration::from_micros(420),
             worker: 1,
             generation: 2,
+            version: 3,
         };
         let j = Json::parse(&resp.to_json().to_string()).unwrap();
         let back = InferResponse::from_json(&j).unwrap();
@@ -325,6 +362,7 @@ mod tests {
         }
         assert_eq!(back.id, resp.id);
         assert_eq!(back.generation, resp.generation);
+        assert_eq!(back.version, resp.version);
     }
 
     #[test]
@@ -336,6 +374,12 @@ mod tests {
         assert!(InferRequest::from_json(&j).is_err());
         let j = Json::parse(r#"{"input": [1], "id": -4}"#).unwrap();
         assert!(InferRequest::from_json(&j).is_err());
+        // Non-finite inputs (incl. f64 overflow of f32) are rejected —
+        // they would otherwise propagate inf/NaN into the output row.
+        let j = Json::parse(r#"{"input": [1e400]}"#).unwrap();
+        assert!(InferRequest::from_json(&j).is_err());
+        let j = Json::parse(r#"{"input": [1e39]}"#).unwrap();
+        assert!(InferRequest::from_json(&j).is_err(), "f32 overflow");
     }
 
     #[test]
@@ -345,6 +389,12 @@ mod tests {
         let j = e.to_json();
         assert_eq!(j.get("error").unwrap().str().unwrap(), "wrong_input_length");
         assert_eq!(ServiceError::NotFound("/x".into()).http_status(), 404);
+        assert_eq!(ServiceError::ModelNotFound("m".into()).http_status(), 404);
+        assert_eq!(
+            ServiceError::NoSuchVersion { version: 9 }.http_status(),
+            404
+        );
+        assert_eq!(ServiceError::Overloaded { conns: 4 }.http_status(), 503);
         assert_eq!(ServiceError::BodyTooLarge { got: 9, max: 1 }.http_status(), 413);
         assert_eq!(
             ServiceError::DeadlineExceeded { waited_ms: 1 }.http_status(),

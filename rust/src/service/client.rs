@@ -123,6 +123,8 @@ pub struct LoadReport {
     pub wall: Duration,
     /// Responses per plan generation (hot-swap visibility).
     pub by_generation: BTreeMap<u64, usize>,
+    /// Responses per plan version (canary-split visibility).
+    pub by_version: BTreeMap<u64, usize>,
     /// Client-observed end-to-end latency, sorted ascending (µs).
     pub latencies_us: Vec<u64>,
 }
@@ -163,6 +165,15 @@ impl LoadReport {
                     .collect(),
             ),
         );
+        m.insert(
+            "by_version".to_string(),
+            Json::Obj(
+                self.by_version
+                    .iter()
+                    .map(|(v, n)| (v.to_string(), Json::Num(*n as f64)))
+                    .collect(),
+            ),
+        );
         Json::Obj(m)
     }
 }
@@ -176,11 +187,71 @@ pub fn discover_input_len(addr: &str) -> Result<usize> {
     Json::parse(&body)?.get("input_len")?.usize()
 }
 
+/// Discover a registry model's flat input length from `GET /v2/models`.
+pub fn discover_model_input_len(addr: &str, model: &str) -> Result<usize> {
+    let (status, body) = http_call(addr, "GET", "/v2/models", None)?;
+    if status != 200 {
+        bail!("/v2/models returned {status}: {body}");
+    }
+    for entry in Json::parse(&body)?.get("models")?.arr()? {
+        if entry.get("name")?.str()? == model {
+            return entry.get("input_len")?.usize();
+        }
+    }
+    bail!("model {model:?} not in the registry listing");
+}
+
+/// Poll a registry model's stats until the shadow collector has folded
+/// in (or errored) `expect` mirrored comparisons for `version`, then
+/// return the candidate's report object (the comparison runs
+/// asynchronously on the server). Errors if `timeout` passes first.
+pub fn wait_shadow_report(
+    addr: &str,
+    model: &str,
+    version: u64,
+    expect: usize,
+    timeout: Duration,
+) -> Result<Json> {
+    let path = format!("/v2/models/{model}/stats");
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (status, body) = http_call(addr, "GET", &path, None)?;
+        if status != 200 {
+            bail!("{path} failed ({status}): {body}");
+        }
+        let j = Json::parse(&body)?;
+        if let Some(report) = j.get("shadow_reports")?.opt(&version.to_string()) {
+            let done = report.get("mirrored")?.i64()? + report.get("errors")?.i64()?;
+            if done >= expect as i64 {
+                return Ok(report.clone());
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!("shadow collector did not catch up within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The infer route for a target model (`None` = the `/v1` default).
+pub fn infer_path(model: Option<&str>) -> String {
+    match model {
+        Some(m) => format!("/v2/models/{m}/infer"),
+        None => "/v1/infer".to_string(),
+    }
+}
+
 /// Drive `cfg.requests` inference calls over `cfg.concurrency` keep-alive
-/// connections. Inputs are deterministic per (thread, sequence) so a
-/// given config always sends the same traffic; ids are checked for echo
-/// (a swapped response fails loudly).
+/// connections against `POST /v1/infer`. Inputs are deterministic per
+/// (thread, sequence) so a given config always sends the same traffic;
+/// ids are checked for echo (a swapped response fails loudly).
 pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
+    run_load_on(cfg, &infer_path(None))
+}
+
+/// [`run_load`] against an arbitrary infer route (see [`infer_path`] for
+/// the `/v2/models/{name}/infer` form).
+pub fn run_load_on(cfg: &LoadConfig, path: &str) -> Result<LoadReport> {
     let threads = cfg.concurrency.max(1);
     let per_thread = cfg.requests.div_ceil(threads);
     let t0 = Instant::now();
@@ -189,7 +260,7 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
             .map(|t| {
                 let cfg = cfg.clone();
                 let n = per_thread.min(cfg.requests.saturating_sub(t * per_thread));
-                s.spawn(move || client_thread(&cfg, t, n))
+                s.spawn(move || client_thread(&cfg, path, t, n))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
@@ -202,6 +273,9 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
         for (g, n) in r.by_generation {
             *report.by_generation.entry(g).or_insert(0) += n;
         }
+        for (v, n) in r.by_version {
+            *report.by_version.entry(v).or_insert(0) += n;
+        }
         report.latencies_us.extend(r.latencies_us);
     }
     report.latencies_us.sort_unstable();
@@ -210,7 +284,7 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
 }
 
 /// One client connection's share of the load.
-fn client_thread(cfg: &LoadConfig, thread: usize, n: usize) -> Result<LoadReport> {
+fn client_thread(cfg: &LoadConfig, path: &str, thread: usize, n: usize) -> Result<LoadReport> {
     let mut report = LoadReport::default();
     if n == 0 {
         return Ok(report);
@@ -228,7 +302,7 @@ fn client_thread(cfg: &LoadConfig, thread: usize, n: usize) -> Result<LoadReport
         req.deadline = cfg.deadline_ms.map(Duration::from_millis);
         let body = req.to_json().to_string();
         let sent = Instant::now();
-        write_request(&mut stream, &cfg.addr, "POST", "/v1/infer", Some(&body), true)?;
+        write_request(&mut stream, &cfg.addr, "POST", path, Some(&body), true)?;
         let (status, resp_body) = read_response(&mut stream)?;
         let latency = sent.elapsed();
         if status == 200 {
@@ -238,6 +312,7 @@ fn client_thread(cfg: &LoadConfig, thread: usize, n: usize) -> Result<LoadReport
             }
             report.ok += 1;
             *report.by_generation.entry(resp.generation).or_insert(0) += 1;
+            *report.by_version.entry(resp.version).or_insert(0) += 1;
             report.latencies_us.push(latency.as_micros() as u64);
         } else {
             report.errors += 1;

@@ -1,15 +1,33 @@
-//! Dependency-free HTTP/1.1 front-end for [`AdaptService`].
+//! Dependency-free HTTP/1.1 front-end for the model registry.
 //!
 //! The build is offline, so the framing is hand-rolled over
 //! `std::net::TcpListener` (the same spirit as the vendored stand-ins):
 //! request-line + headers, `Content-Length` bodies, `keep-alive`
-//! connections, JSON in / JSON out. Exactly four routes:
+//! connections, JSON in / JSON out.
+//!
+//! The `/v1` routes are a wire-compatible shim over the registry's
+//! **default model**: every pre-registry field and status code is
+//! unchanged; responses additionally carry the (additive) `version`
+//! field, and non-finite inference inputs are now rejected with 400
+//! instead of computing inf/NaN. The `/v2` routes expose the whole
+//! [`ModelRegistry`] — models, immutable plan versions, canary rollout
+//! and shadow evaluation:
 //!
 //! ```text
-//! POST /v1/infer    InferRequest body  -> InferResponse | error
-//! POST /v1/plan     plan JSON or {"spec": "..."} -> {"generation": n}
-//! GET  /v1/stats    live pool stats (totals, per-worker, p50/p95/p99)
-//! GET  /v1/healthz  liveness summary
+//! POST /v1/infer                      InferRequest -> InferResponse | error
+//! POST /v1/plan                       plan JSON or {"spec": "..."} -> {"generation": n}
+//! GET  /v1/stats                      live pool stats (totals, per-worker, p50/p95/p99)
+//! GET  /v1/healthz                    liveness summary
+//!
+//! GET  /v2/models                     registry listing (default + per-model summary)
+//! POST /v2/models/{m}/infer           as /v1/infer, on model {m} (canary/shadow aware)
+//! GET  /v2/models/{m}/stats           pool stats + rollout state + shadow reports
+//! GET  /v2/models/{m}/plans           enumerate plan versions (metadata)
+//! POST /v2/models/{m}/plans           create an immutable version -> {"version": v, ...}
+//! POST /v2/models/{m}/plans/{v}/activate   route traffic to v -> {"version", "generation"}
+//! POST /v2/models/{m}/plans/{v}/canary     {"fraction": 0.25} -> route that share to v
+//! POST /v2/models/{m}/plans/{v}/shadow     mirror traffic to v, compare online
+//! POST /v2/models/{m}/rollback        revert to the previous active version
 //! ```
 //!
 //! Every error is a [`ServiceError`] rendered as
@@ -18,20 +36,25 @@
 //! being read; malformed framing gets 400; unknown routes 404; known
 //! routes with the wrong method 405.
 //!
-//! One thread per connection, each with a short read timeout so `stop()`
-//! can join everything promptly. Serving threads only share the
-//! `Arc<AdaptService>`; all request-level concurrency control (bounded
-//! queue, backpressure) stays in the engine pool underneath.
+//! One thread per connection, hardened against stalls: each read loop
+//! checks a per-request idle deadline ([`ServeOptions::idle_timeout`]) so
+//! a silent keep-alive peer cannot pin its thread forever, and the accept
+//! loop refuses connections beyond [`ServeOptions::max_conns`] with a 503
+//! `overloaded` body instead of spawning an unbounded thread set. Serving
+//! threads only share the `Arc<ModelRegistry>`; all request-level
+//! concurrency control (bounded queue, backpressure) stays in the engine
+//! pools underneath.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::api::ServiceError;
+use super::registry::{ModelHandle, ModelRegistry};
 use super::AdaptService;
 use crate::util::json::Json;
 
@@ -41,8 +64,15 @@ pub struct ServeOptions {
     /// Max request-body size in bytes; larger gets 413 without a read.
     pub max_body: usize,
     /// Per-read socket timeout: the granularity at which connection
-    /// threads notice `stop()`.
+    /// threads notice `stop()` and the idle deadline.
     pub read_timeout: Duration,
+    /// Max time a connection may sit without completing a request before
+    /// it is closed (counted from the start of each request read, so an
+    /// *active* keep-alive connection lives indefinitely).
+    pub idle_timeout: Duration,
+    /// Max concurrently served connections; beyond it, new connections
+    /// get an immediate 503 `overloaded` and are closed.
+    pub max_conns: usize,
 }
 
 impl Default for ServeOptions {
@@ -50,6 +80,8 @@ impl Default for ServeOptions {
         ServeOptions {
             max_body: 8 << 20,
             read_timeout: Duration::from_millis(100),
+            idle_timeout: Duration::from_secs(60),
+            max_conns: 1024,
         }
     }
 }
@@ -65,10 +97,19 @@ struct HttpRequest {
 /// Connection-level outcome of trying to read a request.
 enum ReadOutcome {
     Request(HttpRequest),
-    /// Peer closed (or idle + server stopping): drop the connection.
+    /// Peer closed, idle deadline hit, or server stopping: drop it.
     Closed,
     /// Framing error worth answering before closing.
     Bad(ServiceError),
+}
+
+/// Decrements the live-connection count when a connection thread exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 /// The serving front-end: accept loop + per-connection threads.
@@ -81,13 +122,27 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
-    /// serve `service` until [`stop`](Self::stop).
+    /// serve `service` as a single-model registry until
+    /// [`stop`](Self::stop).
     pub fn start(service: Arc<AdaptService>, addr: &str) -> Result<HttpServer> {
         Self::start_with(service, addr, ServeOptions::default())
     }
 
+    /// Single-model variant of [`start_registry`](Self::start_registry):
+    /// the service registers under its own model name and becomes the
+    /// `/v1` default.
     pub fn start_with(
         service: Arc<AdaptService>,
+        addr: &str,
+        opts: ServeOptions,
+    ) -> Result<HttpServer> {
+        Self::start_registry(Arc::new(ModelRegistry::single(service)), addr, opts)
+    }
+
+    /// Bind `addr` and serve the whole registry (`/v1` shim over its
+    /// default model + the `/v2/models/...` routes).
+    pub fn start_registry(
+        registry: Arc<ModelRegistry>,
         addr: &str,
         opts: ServeOptions,
     ) -> Result<HttpServer> {
@@ -98,6 +153,7 @@ impl HttpServer {
         let accept = {
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
+            let live = Arc::new(AtomicUsize::new(0));
             std::thread::Builder::new()
                 .name("adapt-http-accept".into())
                 .spawn(move || {
@@ -105,12 +161,34 @@ impl HttpServer {
                         if stop.load(Ordering::Acquire) {
                             break;
                         }
-                        let Ok(stream) = stream else { continue };
-                        let service = Arc::clone(&service);
+                        let Ok(mut stream) = stream else { continue };
+                        // Connection cap: refuse with one short blocking
+                        // write instead of spawning a thread.
+                        let n = live.fetch_add(1, Ordering::AcqRel) + 1;
+                        if n > opts.max_conns {
+                            live.fetch_sub(1, Ordering::AcqRel);
+                            let e = ServiceError::Overloaded {
+                                conns: opts.max_conns,
+                            };
+                            let _ = stream
+                                .set_write_timeout(Some(Duration::from_millis(200)));
+                            let _ = write_response(
+                                &mut stream,
+                                e.http_status(),
+                                &e.to_json(),
+                                false,
+                            );
+                            continue;
+                        }
+                        let guard = ConnGuard(Arc::clone(&live));
+                        let registry = Arc::clone(&registry);
                         let stop = Arc::clone(&stop);
                         let handle = std::thread::Builder::new()
                             .name("adapt-http-conn".into())
-                            .spawn(move || serve_conn(stream, &service, &stop, opts));
+                            .spawn(move || {
+                                let _guard = guard;
+                                serve_conn(stream, &registry, &stop, opts);
+                            });
                         if let Ok(h) = handle {
                             let mut guard = conns.lock().expect("conn list poisoned");
                             // Reap finished threads so a long-lived server
@@ -167,7 +245,7 @@ impl Drop for HttpServer {
 /// Serve one connection: a keep-alive loop of read → route → respond.
 fn serve_conn(
     mut stream: TcpStream,
-    service: &AdaptService,
+    registry: &ModelRegistry,
     stop: &AtomicBool,
     opts: ServeOptions,
 ) {
@@ -177,7 +255,10 @@ fn serve_conn(
     // they are the start of the next request, not garbage.
     let mut carry: Vec<u8> = Vec::new();
     loop {
-        match read_request(&mut stream, &mut carry, stop, opts.max_body) {
+        // Idle deadline restarts per request: a connection stalls out
+        // only by *not completing* a request within the window.
+        let idle_deadline = Instant::now() + opts.idle_timeout;
+        match read_request(&mut stream, &mut carry, stop, opts.max_body, idle_deadline) {
             ReadOutcome::Closed => return,
             ReadOutcome::Bad(e) => {
                 // Drain what the peer already sent (bounded) before the
@@ -188,7 +269,7 @@ fn serve_conn(
                 return;
             }
             ReadOutcome::Request(req) => {
-                let (status, body) = route(service, &req);
+                let (status, body) = route(registry, &req);
                 if write_response(&mut stream, status, &body, req.keep_alive).is_err()
                     || !req.keep_alive
                 {
@@ -202,59 +283,215 @@ fn serve_conn(
     }
 }
 
-/// Dispatch one request to the service. Always returns a JSON body.
-fn route(service: &AdaptService, req: &HttpRequest) -> (u16, Json) {
+/// Parse a request body as UTF-8 JSON, mapping failures onto the typed
+/// 400s every route shares.
+fn parse_body(body: &[u8]) -> std::result::Result<Json, ServiceError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ServiceError::BadRequest("body is not UTF-8".into()))?;
+    Json::parse(text).map_err(|e| ServiceError::BadRequest(format!("{e:#}")))
+}
+
+/// `POST .../infer` on one model (shared by `/v1` and `/v2`).
+fn infer_route(handle: &ModelHandle, body: &[u8]) -> (u16, Json) {
     let err = |e: ServiceError| (e.http_status(), e.to_json());
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/infer") => {
-            let body = match std::str::from_utf8(&req.body) {
-                Ok(s) => s,
-                Err(_) => return err(ServiceError::BadRequest("body is not UTF-8".into())),
-            };
-            let parsed = match Json::parse(body) {
-                Ok(j) => j,
-                Err(e) => return err(ServiceError::BadRequest(format!("{e:#}"))),
-            };
-            let infer_req = match super::InferRequest::from_json(&parsed) {
-                Ok(r) => r,
-                Err(e) => return err(e),
-            };
-            match service.infer(infer_req) {
-                Ok(resp) => (200, resp.to_json()),
-                Err(e) => err(e),
-            }
-        }
+    let parsed = match parse_body(body) {
+        Ok(j) => j,
+        Err(e) => return err(e),
+    };
+    let infer_req = match super::InferRequest::from_json(&parsed) {
+        Ok(r) => r,
+        Err(e) => return err(e),
+    };
+    match handle.infer(infer_req) {
+        Ok(resp) => (200, resp.to_json()),
+        Err(e) => err(e),
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Dispatch one request. Always returns a JSON body.
+fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
+    let err = |e: ServiceError| (e.http_status(), e.to_json());
+    let method = req.method.as_str();
+    let path = req.path.as_str();
+
+    // ----- /v1: bit-compatible shim over the registry's default model ----
+    match (method, path) {
+        ("POST", "/v1/infer") => return infer_route(registry.default_model(), &req.body),
         ("POST", "/v1/plan") => {
             let body = match std::str::from_utf8(&req.body) {
                 Ok(s) => s,
                 Err(_) => return err(ServiceError::BadRequest("body is not UTF-8".into())),
             };
-            match service.swap_plan_body(body) {
-                Ok(generation) => {
-                    let mut m = std::collections::BTreeMap::new();
-                    m.insert("generation".into(), Json::Num(generation as f64));
-                    (200, Json::Obj(m))
-                }
+            return match registry.default_model().create_and_activate(body) {
+                Ok(generation) => (200, obj(vec![("generation", Json::Num(generation as f64))])),
                 Err(e) => err(e),
+            };
+        }
+        ("GET", "/v1/stats") => return (200, registry.default_model().service().stats().to_json()),
+        ("GET", "/v1/healthz") => {
+            return (200, registry.default_model().service().health().to_json())
+        }
+        (_, "/v1/infer") | (_, "/v1/plan") | (_, "/v1/stats") | (_, "/v1/healthz") => {
+            return err(ServiceError::MethodNotAllowed(format!("{method} {path}")))
+        }
+        _ => {}
+    }
+
+    // ----- /v2: the registry surface --------------------------------------
+    let Some(rest) = path.strip_prefix("/v2/") else {
+        return err(ServiceError::NotFound(path.to_string()));
+    };
+    let segs: Vec<&str> = rest.split('/').filter(|s| !s.is_empty()).collect();
+    match segs.as_slice() {
+        ["models"] => match method {
+            "GET" => (200, registry.list_json()),
+            _ => err(ServiceError::MethodNotAllowed(format!("{method} {path}"))),
+        },
+        ["models", name, tail @ ..] => {
+            let handle = match registry.get(name) {
+                Ok(h) => h,
+                Err(e) => return err(e),
+            };
+            route_model(handle, method, path, tail, &req.body)
+        }
+        _ => err(ServiceError::NotFound(path.to_string())),
+    }
+}
+
+/// Routes under `/v2/models/{name}/...`.
+fn route_model(
+    handle: &ModelHandle,
+    method: &str,
+    path: &str,
+    tail: &[&str],
+    body: &[u8],
+) -> (u16, Json) {
+    let err = |e: ServiceError| (e.http_status(), e.to_json());
+    let wrong_method = || {
+        (
+            405,
+            ServiceError::MethodNotAllowed(format!("{method} {path}")).to_json(),
+        )
+    };
+    match tail {
+        ["infer"] => match method {
+            "POST" => infer_route(handle, body),
+            _ => wrong_method(),
+        },
+        ["stats"] => match method {
+            "GET" => (200, handle.stats_json()),
+            _ => wrong_method(),
+        },
+        ["plans"] => match method {
+            "GET" => (
+                200,
+                Json::Arr(
+                    handle
+                        .list_versions()
+                        .iter()
+                        .map(|p| p.meta_json())
+                        .collect(),
+                ),
+            ),
+            "POST" => {
+                let text = match std::str::from_utf8(body) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        return err(ServiceError::BadRequest("body is not UTF-8".into()))
+                    }
+                };
+                match handle.create_version(text) {
+                    Ok(pv) => (200, pv.meta_json()),
+                    Err(e) => err(e),
+                }
+            }
+            _ => wrong_method(),
+        },
+        ["rollback"] => match method {
+            "POST" => match handle.rollback() {
+                Ok((version, generation)) => (
+                    200,
+                    obj(vec![
+                        ("version", Json::Num(version as f64)),
+                        ("generation", Json::Num(generation as f64)),
+                    ]),
+                ),
+                Err(e) => err(e),
+            },
+            _ => wrong_method(),
+        },
+        ["plans", v, action] => {
+            let Ok(version) = v.parse::<u64>() else {
+                return err(ServiceError::BadRequest(format!(
+                    "plan version must be an integer, got {v:?}"
+                )));
+            };
+            match *action {
+                // Unknown actions are 404 regardless of method (the
+                // resource does not exist); known ones take POST only.
+                "activate" | "canary" | "shadow" if method != "POST" => wrong_method(),
+                "activate" => match handle.activate(version) {
+                    Ok(generation) => (
+                        200,
+                        obj(vec![
+                            ("version", Json::Num(version as f64)),
+                            ("generation", Json::Num(generation as f64)),
+                        ]),
+                    ),
+                    Err(e) => err(e),
+                },
+                "canary" => {
+                    let fraction = match parse_body(body).and_then(|j| {
+                        j.get("fraction")
+                            .and_then(|f| f.f64())
+                            .map_err(|e| ServiceError::BadRequest(format!("fraction: {e}")))
+                    }) {
+                        Ok(f) => f,
+                        Err(e) => return err(e),
+                    };
+                    match handle.start_canary(version, fraction) {
+                        Ok(()) => (
+                            200,
+                            obj(vec![
+                                ("version", Json::Num(version as f64)),
+                                ("fraction", Json::Num(fraction)),
+                            ]),
+                        ),
+                        Err(e) => err(e),
+                    }
+                }
+                "shadow" => match handle.start_shadow(version) {
+                    Ok(()) => (
+                        200,
+                        obj(vec![
+                            ("version", Json::Num(version as f64)),
+                            ("shadow", Json::Bool(true)),
+                        ]),
+                    ),
+                    Err(e) => err(e),
+                },
+                _ => err(ServiceError::NotFound(path.to_string())),
             }
         }
-        ("GET", "/v1/stats") => (200, service.stats().to_json()),
-        ("GET", "/v1/healthz") => (200, service.health().to_json()),
-        (_, "/v1/infer") | (_, "/v1/plan") | (_, "/v1/stats") | (_, "/v1/healthz") => err(
-            ServiceError::MethodNotAllowed(format!("{} {}", req.method, req.path)),
-        ),
-        _ => err(ServiceError::NotFound(req.path.clone())),
+        _ => err(ServiceError::NotFound(path.to_string())),
     }
 }
 
 /// Read one request (request line + headers + Content-Length body).
 /// `carry` holds bytes already read past the previous request's body
 /// (pipelining); on return it holds whatever follows *this* request.
+/// `idle_deadline` bounds how long the peer may stall before the
+/// connection is dropped.
 fn read_request(
     stream: &mut TcpStream,
     carry: &mut Vec<u8>,
     stop: &AtomicBool,
     max_body: usize,
+    idle_deadline: Instant,
 ) -> ReadOutcome {
     const MAX_HEAD: usize = 16 << 10;
     let mut buf: Vec<u8> = std::mem::take(carry);
@@ -267,6 +504,12 @@ fn read_request(
         if buf.len() > MAX_HEAD {
             return ReadOutcome::Bad(ServiceError::BadRequest("header block too large".into()));
         }
+        // The deadline binds whether the peer is silent *or* trickling
+        // bytes (slow-loris): a request that hasn't completed by it is
+        // dropped, not a pinned thread.
+        if stop.load(Ordering::Acquire) || Instant::now() >= idle_deadline {
+            return ReadOutcome::Closed;
+        }
         match stream.read(&mut chunk) {
             Ok(0) => return ReadOutcome::Closed,
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
@@ -274,12 +517,6 @@ fn read_request(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // Idle timeout: keep waiting unless the server is
-                // stopping (a half-received request is dropped then —
-                // its sender gets a reset, not a hang).
-                if stop.load(Ordering::Acquire) {
-                    return ReadOutcome::Closed;
-                }
                 continue;
             }
             Err(_) => return ReadOutcome::Closed,
@@ -334,6 +571,9 @@ fn read_request(
     // --- body: exactly content_length bytes past the head ----------------
     let mut body = buf[head_end + 4..].to_vec();
     while body.len() < content_length {
+        if stop.load(Ordering::Acquire) || Instant::now() >= idle_deadline {
+            return ReadOutcome::Closed;
+        }
         match stream.read(&mut chunk) {
             Ok(0) => return ReadOutcome::Closed,
             Ok(n) => body.extend_from_slice(&chunk[..n]),
@@ -341,9 +581,6 @@ fn read_request(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if stop.load(Ordering::Acquire) {
-                    return ReadOutcome::Closed;
-                }
                 continue;
             }
             Err(_) => return ReadOutcome::Closed,

@@ -11,11 +11,19 @@
 //!   (workers adopt a new plan + `Arc`-shared quantized weights at a
 //!   batch boundary — no restart), live [`stats`](AdaptService::stats)
 //!   without shutdown, and [`health`](AdaptService::health).
+//! * [`registry`] — the multi-model control plane: [`ModelRegistry`]
+//!   owns N named models, each a [`ModelHandle`] wrapping its own
+//!   engine pool plus a [`registry::PlanStore`] of immutable numbered
+//!   plan versions, with canary-fraction routing, shadow mirroring
+//!   (live disagreement stats against the active plan) and
+//!   activate/rollback lifecycle.
 //! * [`http`] / [`client`] — a dependency-free HTTP/1.1 server over
-//!   `std::net::TcpListener` exposing `POST /v1/infer`, `POST /v1/plan`,
-//!   `GET /v1/stats`, `GET /v1/healthz` (JSON bodies via
-//!   [`util::json`](crate::util::json)), plus the matching minimal client
-//!   and load generator behind `adapt client`.
+//!   `std::net::TcpListener` exposing the `/v1` single-model routes
+//!   (`POST /v1/infer`, `POST /v1/plan`, `GET /v1/stats`,
+//!   `GET /v1/healthz` — a bit-compatible shim over the registry's
+//!   default model) and the `/v2/models/...` registry routes (JSON
+//!   bodies via [`util::json`](crate::util::json)), plus the matching
+//!   minimal client and load generator behind `adapt client`.
 //!
 //! The old `InferenceEngine::submit`/`infer` surface still works — it is
 //! a shim over the same typed path — so in-process consumers (benches,
@@ -24,6 +32,7 @@
 pub mod api;
 pub mod client;
 pub mod http;
+pub mod registry;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -31,10 +40,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::engine::{BackendSpec, EngineConfig, InferenceEngine, PoolStats};
-use crate::graph::{retransform, ExecutionPlan, Policy};
+use crate::graph::ExecutionPlan;
 use crate::util::json::Json;
 
 pub use api::{top_k_of, InferRequest, InferResponse, ServiceError};
+pub use registry::{ModelHandle, ModelRegistry};
 
 /// The serving control plane: an [`InferenceEngine`] pool plus the typed
 /// request/response surface, plan hot-swap, live stats and health.
@@ -73,6 +83,7 @@ impl InferHandle {
             compute: raw.compute,
             worker: raw.worker,
             generation: raw.generation,
+            version: raw.version,
         })
     }
 }
@@ -83,6 +94,8 @@ pub struct ServiceStats {
     pub model: String,
     pub uptime: std::time::Duration,
     pub generation: u64,
+    /// Plan version untagged requests route to (0 on PJRT backends).
+    pub active_version: u64,
     pub queue_len: usize,
     pub workers: usize,
     pub pool: PoolStats,
@@ -115,6 +128,10 @@ impl ServiceStats {
         m.insert("model".into(), Json::Str(self.model.clone()));
         m.insert("uptime_s".into(), Json::Num(self.uptime.as_secs_f64()));
         m.insert("generation".into(), Json::Num(self.generation as f64));
+        m.insert(
+            "active_version".into(),
+            Json::Num(self.active_version as f64),
+        );
         m.insert("queue_len".into(), Json::Num(self.queue_len as f64));
         m.insert("workers".into(), Json::Num(self.workers as f64));
         m.insert("total".into(), engine_stats(&self.pool.total));
@@ -197,6 +214,17 @@ impl AdaptService {
     /// before the request occupies a queue slot), assigns an id when the
     /// client didn't, and returns a handle resolving to the response.
     pub fn submit(&self, req: InferRequest) -> Result<InferHandle, ServiceError> {
+        self.submit_to(req, None)
+    }
+
+    /// Typed submit pinned to an installed plan version (`None` routes
+    /// to the active one) — what the registry's canary and shadow
+    /// rollouts ride on.
+    pub fn submit_to(
+        &self,
+        req: InferRequest,
+        version: Option<u64>,
+    ) -> Result<InferHandle, ServiceError> {
         let expected = self.engine.input_len();
         if req.input.len() != expected {
             return Err(ServiceError::WrongInputLength {
@@ -207,12 +235,40 @@ impl AdaptService {
         let id = req
             .id
             .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
-        let rx = self.engine.submit_raw(req.input, req.deadline)?;
+        let rx = self.engine.submit_raw_to(req.input, req.deadline, version)?;
         Ok(InferHandle {
             id,
             top_k: req.top_k,
             rx,
         })
+    }
+
+    /// Non-blocking [`submit_to`](Self::submit_to): `Ok(None)` when the
+    /// engine queue is full instead of backpressure — best-effort
+    /// traffic (shadow mirrors) must never stall a serving thread.
+    pub fn try_submit_to(
+        &self,
+        req: InferRequest,
+        version: Option<u64>,
+    ) -> Result<Option<InferHandle>, ServiceError> {
+        let expected = self.engine.input_len();
+        if req.input.len() != expected {
+            return Err(ServiceError::WrongInputLength {
+                got: req.input.len(),
+                expected,
+            });
+        }
+        let id = req
+            .id
+            .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        let rx = self
+            .engine
+            .try_submit_raw_to(req.input, req.deadline, version)?;
+        Ok(rx.map(|rx| InferHandle {
+            id,
+            top_k: req.top_k,
+            rx,
+        }))
     }
 
     /// Blocking convenience wrapper around [`submit`](Self::submit).
@@ -229,7 +285,9 @@ impl AdaptService {
     /// Parse and hot-swap a plan from a `POST /v1/plan` body: either a
     /// plan JSON document (what `adapt plan --out` writes) or a policy
     /// spec `{"spec": "default=mul8s_1l2h_like,c1=exact8"}` resolved
-    /// against the served model.
+    /// against the served model. (Registry-managed services swap through
+    /// [`ModelHandle::create_and_activate`] instead, which also records
+    /// the plan as a store version.)
     pub fn swap_plan_body(&self, body: &str) -> Result<u64, ServiceError> {
         let spec = self.engine.emulator_spec().ok_or_else(|| {
             ServiceError::PlanRejected(
@@ -237,26 +295,7 @@ impl AdaptService {
                     .into(),
             )
         })?;
-        let j = Json::parse(body).map_err(|e| ServiceError::BadRequest(format!("{e:#}")))?;
-        let plan = match j.opt("spec") {
-            Some(s) => {
-                let text = s
-                    .str()
-                    .map_err(|e| ServiceError::BadRequest(format!("spec: {e}")))?;
-                let policy = Policy::parse_spec(text)
-                    .map_err(|e| ServiceError::BadRequest(format!("{e:#}")))?;
-                let unmatched = policy.unmatched_overrides(&spec.model);
-                if !unmatched.is_empty() {
-                    return Err(ServiceError::PlanRejected(format!(
-                        "spec overrides match no layer of {}: {unmatched:?}",
-                        spec.model.name
-                    )));
-                }
-                retransform(&spec.model, &policy)
-            }
-            None => ExecutionPlan::from_json(body, &spec.model)
-                .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?,
-        };
+        let (_source, plan) = registry::parse_plan_body(body, spec)?;
         self.swap_plan(plan)
     }
 
@@ -266,6 +305,7 @@ impl AdaptService {
             model: self.model_name.clone(),
             uptime: self.started.elapsed(),
             generation: self.engine.generation(),
+            active_version: self.engine.active_version(),
             queue_len: self.engine.queue_len(),
             workers: self.engine.workers(),
             pool: self.engine.stats_snapshot(),

@@ -1,0 +1,964 @@
+//! Multi-model registry: named models, immutable plan versions, canary
+//! rollout and live shadow evaluation.
+//!
+//! [`ModelRegistry`] owns N named models. Each [`ModelHandle`] wraps its
+//! own [`AdaptService`] engine pool plus a [`PlanStore`] of immutable,
+//! numbered plan versions (created from a plan JSON document or a
+//! `{"spec": ...}` policy, never mutated, with `created`/`source`
+//! metadata). On top of the store sits the rollout lifecycle:
+//!
+//! * **activate** — install a version on the pool (weights re-quantized
+//!   once, `Arc`-shared) and flip untagged traffic to it at the next
+//!   batch boundary; the previous active version is remembered for
+//!   **rollback**. No executed batch ever mixes versions.
+//! * **canary** — route a configurable fraction of requests to the
+//!   candidate version's workers (deterministic counter-based split:
+//!   exactly `⌊n·fraction⌋` of the first `n` requests).
+//! * **shadow** — mirror every request to the candidate and compare its
+//!   output against the active plan's *online*: per-version disagreement
+//!   rate, top-1 flip rate and max `|Δ|` accumulate in [`ShadowStats`],
+//!   turning the paper's offline accuracy evaluation into a live,
+//!   promote-or-rollback decision.
+//!
+//! The `/v1` single-model routes are a thin shim over the registry's
+//! default model ([`ModelHandle::create_and_activate`] reproduces the
+//! `POST /v1/plan` create-and-flip semantics bit-for-bit).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::SystemTime;
+
+use anyhow::Result;
+
+use super::api::ServiceError;
+use super::{AdaptService, InferHandle, InferRequest, InferResponse};
+use crate::coordinator::engine::EmulatorSpec;
+use crate::graph::{retransform, ExecutionPlan, Policy};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Plan versions
+// ---------------------------------------------------------------------------
+
+/// One immutable, numbered plan version. Once created it never changes;
+/// a "changed" plan is a *new* version.
+pub struct PlanVersion {
+    pub version: u64,
+    /// Where the plan came from: `"initial"`, `"spec:<text>"` or `"json"`.
+    pub source: String,
+    /// Unix seconds at creation.
+    pub created_unix_s: f64,
+    pub plan: ExecutionPlan,
+}
+
+impl PlanVersion {
+    pub fn meta_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("source".into(), Json::Str(self.source.clone()));
+        m.insert("created_unix_s".into(), Json::Num(self.created_unix_s));
+        Json::Obj(m)
+    }
+}
+
+/// Append-only store of a model's plan versions, numbered from 1.
+pub struct PlanStore {
+    versions: BTreeMap<u64, Arc<PlanVersion>>,
+    next: u64,
+}
+
+impl PlanStore {
+    fn new() -> PlanStore {
+        PlanStore {
+            versions: BTreeMap::new(),
+            next: 1,
+        }
+    }
+
+    fn add(&mut self, source: String, plan: ExecutionPlan) -> Arc<PlanVersion> {
+        let version = self.next;
+        self.next += 1;
+        let created_unix_s = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let pv = Arc::new(PlanVersion {
+            version,
+            source,
+            created_unix_s,
+            plan,
+        });
+        self.versions.insert(version, Arc::clone(&pv));
+        pv
+    }
+
+    pub fn get(&self, version: u64) -> Option<Arc<PlanVersion>> {
+        self.versions.get(&version).cloned()
+    }
+
+    /// Every version, ascending.
+    pub fn list(&self) -> Vec<Arc<PlanVersion>> {
+        self.versions.values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.versions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.versions.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shadow evaluation
+// ---------------------------------------------------------------------------
+
+/// Live shadow-comparison counters for one candidate version. Workers
+/// publish through atomics; [`ShadowStats::report`] snapshots any time.
+pub struct ShadowStats {
+    /// Comparisons completed (primary + mirror both answered).
+    mirrored: AtomicU64,
+    /// Mirror or primary failures — nothing to compare.
+    errors: AtomicU64,
+    /// Outputs differed in at least one f32 bit.
+    disagree: AtomicU64,
+    /// Argmax (top-1 class) changed.
+    top1_flips: AtomicU64,
+    /// Max `|candidate - active|` seen, as f32 bits (both non-negative,
+    /// so the bit order is the numeric order and a CAS-max works).
+    max_abs_delta_bits: AtomicU32,
+}
+
+impl ShadowStats {
+    fn new() -> ShadowStats {
+        ShadowStats {
+            mirrored: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            disagree: AtomicU64::new(0),
+            top1_flips: AtomicU64::new(0),
+            max_abs_delta_bits: AtomicU32::new(0),
+        }
+    }
+
+    fn record(&self, primary: &[f32], mirror: &[f32]) {
+        let disagree = primary.len() != mirror.len()
+            || primary
+                .iter()
+                .zip(mirror)
+                .any(|(a, b)| a.to_bits() != b.to_bits());
+        if disagree {
+            self.disagree.fetch_add(1, Ordering::Relaxed);
+        }
+        if argmax(primary) != argmax(mirror) {
+            self.top1_flips.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut max_d = 0f32;
+        for (a, b) in primary.iter().zip(mirror) {
+            max_d = max_d.max((a - b).abs());
+        }
+        let bits = max_d.to_bits();
+        let mut cur = self.max_abs_delta_bits.load(Ordering::Relaxed);
+        while bits > cur {
+            match self.max_abs_delta_bits.compare_exchange_weak(
+                cur,
+                bits,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        // Last, so a poller that sees `mirrored == n` sees n complete
+        // comparisons in the other counters.
+        self.mirrored.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn report(&self, version: u64) -> ShadowReport {
+        ShadowReport {
+            version,
+            mirrored: self.mirrored.load(Ordering::Acquire),
+            errors: self.errors.load(Ordering::Relaxed),
+            disagree: self.disagree.load(Ordering::Relaxed),
+            top1_flips: self.top1_flips.load(Ordering::Relaxed),
+            max_abs_delta: f32::from_bits(self.max_abs_delta_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// POD snapshot of one candidate's [`ShadowStats`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShadowReport {
+    pub version: u64,
+    pub mirrored: u64,
+    pub errors: u64,
+    pub disagree: u64,
+    pub top1_flips: u64,
+    pub max_abs_delta: f32,
+}
+
+impl ShadowReport {
+    /// Fraction of compared requests whose outputs differed anywhere.
+    pub fn disagreement_rate(&self) -> f64 {
+        self.disagree as f64 / (self.mirrored as f64).max(1.0)
+    }
+
+    /// Fraction of compared requests whose top-1 class flipped.
+    pub fn top1_flip_rate(&self) -> f64 {
+        self.top1_flips as f64 / (self.mirrored as f64).max(1.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("mirrored".into(), Json::Num(self.mirrored as f64));
+        m.insert("errors".into(), Json::Num(self.errors as f64));
+        m.insert("disagree".into(), Json::Num(self.disagree as f64));
+        m.insert(
+            "disagreement_rate".into(),
+            Json::Num(self.disagreement_rate()),
+        );
+        m.insert("top1_flips".into(), Json::Num(self.top1_flips as f64));
+        m.insert("top1_flip_rate".into(), Json::Num(self.top1_flip_rate()));
+        m.insert("max_abs_delta".into(), Json::Num(self.max_abs_delta as f64));
+        Json::Obj(m)
+    }
+}
+
+/// First index of the largest element (ties break to the lower index —
+/// same convention as [`top_k_of`](super::top_k_of)).
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate().skip(1) {
+        if v.total_cmp(&xs[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One completed primary response waiting for its mirror: the collector
+/// thread blocks on `rx` and folds the comparison into `stats`.
+struct ShadowJob {
+    stats: Arc<ShadowStats>,
+    primary: Vec<f32>,
+    rx: crate::coordinator::engine::RawReceiver,
+}
+
+// ---------------------------------------------------------------------------
+// Rollout state
+// ---------------------------------------------------------------------------
+
+/// Traffic-splitting state for one model.
+struct Rollout {
+    /// Version untagged requests route to (kept for `previous`
+    /// bookkeeping; reporting reads the engine's table, the single
+    /// source of truth).
+    active: u64,
+    /// The version `active` replaced (the rollback target).
+    previous: Option<u64>,
+    canary: Option<Arc<CanaryState>>,
+    /// The live shadow experiment, if any.
+    shadow: Option<ShadowState>,
+}
+
+/// One shadow experiment: the candidate version plus the comparison
+/// sinks — carried in the rollout state so the serving path gets
+/// everything from the single rollout-lock read it already takes.
+#[derive(Clone)]
+struct ShadowState {
+    version: u64,
+    stats: Arc<ShadowStats>,
+    tx: mpsc::Sender<ShadowJob>,
+}
+
+/// One canary experiment: the split counters live *inside* the state,
+/// so a retune (a fresh `CanaryState`) can never have its counters
+/// corrupted by an in-flight request that read the previous experiment
+/// under the rollout lock — stragglers increment the discarded state.
+struct CanaryState {
+    version: u64,
+    fraction: f64,
+    /// Requests seen by this experiment (the split counter).
+    seq: AtomicU64,
+    /// Requests routed to the candidate.
+    routed: AtomicU64,
+}
+
+/// Deterministic canary split: request `t` (0-based) goes to the
+/// candidate iff the running target `⌊(t+1)·f⌋` advanced — exactly
+/// `⌊n·f⌋` of the first `n` requests, at any concurrency.
+fn canary_pick(t: u64, fraction: f64) -> bool {
+    ((t + 1) as f64 * fraction).floor() > (t as f64 * fraction).floor()
+}
+
+// ---------------------------------------------------------------------------
+// Per-model handle
+// ---------------------------------------------------------------------------
+
+/// One named model in the registry: its engine pool, plan-version store
+/// and rollout state.
+pub struct ModelHandle {
+    name: String,
+    service: Arc<AdaptService>,
+    store: Mutex<PlanStore>,
+    rollout: Mutex<Rollout>,
+    /// Cumulative shadow stats per candidate version.
+    shadow_stats: Mutex<BTreeMap<u64, Arc<ShadowStats>>>,
+    shadow_tx: Mutex<Option<mpsc::Sender<ShadowJob>>>,
+    shadow_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// In-flight request on a registry model: the primary handle plus an
+/// optional shadow mirror handed to the collector on completion.
+pub struct ModelInferHandle {
+    primary: InferHandle,
+    mirror: Option<(Arc<ShadowStats>, InferHandle, mpsc::Sender<ShadowJob>)>,
+}
+
+impl ModelInferHandle {
+    pub fn id(&self) -> u64 {
+        self.primary.id()
+    }
+
+    /// Block until the primary answers; a completed mirror comparison is
+    /// handed off to the model's collector thread (never blocks on the
+    /// mirror itself).
+    pub fn wait(self) -> Result<InferResponse, ServiceError> {
+        let resp = self.primary.wait();
+        if let Some((stats, mirror, tx)) = self.mirror {
+            match &resp {
+                Ok(ok) => {
+                    let job = ShadowJob {
+                        stats: Arc::clone(&stats),
+                        primary: ok.output.clone(),
+                        rx: mirror.rx,
+                    };
+                    if tx.send(job).is_err() {
+                        // Collector gone (model shutting down).
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(_) => {
+                    // Nothing to compare; the mirror's answer is dropped.
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        resp
+    }
+}
+
+impl ModelHandle {
+    fn new(name: String, service: Arc<AdaptService>) -> Arc<ModelHandle> {
+        let mut store = PlanStore::new();
+        let mut active = 0;
+        // Seed version 1 with the engine's starting plan (emulator pools;
+        // PJRT pools serve unversioned and keep an empty store).
+        if let Some(spec) = service.engine().emulator_spec() {
+            let pv = store.add("initial".into(), spec.plan.clone());
+            active = pv.version;
+        }
+        Arc::new(ModelHandle {
+            name,
+            service,
+            store: Mutex::new(store),
+            rollout: Mutex::new(Rollout {
+                active,
+                previous: None,
+                canary: None,
+                shadow: None,
+            }),
+            shadow_stats: Mutex::new(BTreeMap::new()),
+            shadow_tx: Mutex::new(None),
+            shadow_thread: Mutex::new(None),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The wrapped control plane (stats, health, direct typed calls).
+    pub fn service(&self) -> &Arc<AdaptService> {
+        &self.service
+    }
+
+    fn emulator_spec(&self) -> Result<Arc<EmulatorSpec>, ServiceError> {
+        self.service
+            .engine()
+            .emulator_spec()
+            .cloned()
+            .ok_or_else(|| {
+                ServiceError::PlanRejected(
+                    "plan versioning requires the emulator backend (PJRT executables bake their plan in)"
+                        .into(),
+                )
+            })
+    }
+
+    fn plan_of(&self, version: u64) -> Result<Arc<PlanVersion>, ServiceError> {
+        self.store
+            .lock()
+            .expect("plan store poisoned")
+            .get(version)
+            .ok_or(ServiceError::NoSuchVersion { version })
+    }
+
+    // ----- inference (canary + shadow routing) ---------------------------
+
+    /// Submit one request through the model's rollout state: a running
+    /// canary claims its fraction, a running shadow mirrors the request
+    /// to the candidate. The mirror is best-effort and enqueued *after*
+    /// the primary, non-blocking — it never delays or fails the primary
+    /// (a full queue drops the mirror and counts a shadow error).
+    pub fn submit(&self, req: InferRequest) -> Result<ModelInferHandle, ServiceError> {
+        let (canary, shadow) = {
+            let r = self.rollout.lock().expect("rollout state poisoned");
+            (r.canary.clone(), r.shadow.clone())
+        };
+        let version = match &canary {
+            Some(c) => {
+                let t = c.seq.fetch_add(1, Ordering::Relaxed);
+                if canary_pick(t, c.fraction) {
+                    c.routed.fetch_add(1, Ordering::Relaxed);
+                    Some(c.version)
+                } else {
+                    None
+                }
+            }
+            None => None,
+        };
+        // Only mirror requests whose primary runs the *active* plan:
+        // canary-routed requests would otherwise feed the comparison a
+        // candidate-vs-canary baseline and corrupt the stats. The input
+        // copy happens before the primary consumes `req`.
+        let mirror_input = match (&shadow, version) {
+            (Some(_), None) => Some(req.input.clone()),
+            _ => None,
+        };
+        // A candidate retired between the rollout read and here
+        // (promote/rollback race) routes to the active plan instead of
+        // failing the request; the residual worker-side race is answered
+        // with a typed `no_such_version` (see `retire_version`).
+        let version = version.filter(|&v| self.service.engine().has_version(v));
+        let primary = self.service.submit_to(req, version)?;
+        let mirror = match (shadow, mirror_input) {
+            (Some(s), Some(input)) => {
+                let mirror_req = InferRequest {
+                    id: None,
+                    input,
+                    top_k: None,
+                    deadline: None,
+                };
+                match self.service.try_submit_to(mirror_req, Some(s.version)) {
+                    Ok(Some(handle)) => Some((s.stats, handle, s.tx)),
+                    // Queue full or candidate gone: drop the mirror.
+                    Ok(None) | Err(_) => {
+                        s.stats.errors.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                }
+            }
+            _ => None,
+        };
+        Ok(ModelInferHandle { primary, mirror })
+    }
+
+    /// Blocking convenience wrapper around [`submit`](Self::submit).
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse, ServiceError> {
+        self.submit(req)?.wait()
+    }
+
+    // ----- plan-version lifecycle ----------------------------------------
+
+    /// Create an immutable plan version from a request body — a plan
+    /// JSON document (what `adapt plan --out` writes) or a policy spec
+    /// `{"spec": "default=mul8s_1l2h_like,c1=exact8"}` — validated
+    /// against the served model. Routes no traffic.
+    pub fn create_version(&self, body: &str) -> Result<Arc<PlanVersion>, ServiceError> {
+        let spec = self.emulator_spec()?;
+        let (source, plan) = parse_plan_body(body, &spec)?;
+        // Every named ACU must resolve before the version enters the
+        // store — broken plans never become versions.
+        spec.luts
+            .preload(&plan.acus())
+            .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?;
+        Ok(self
+            .store
+            .lock()
+            .expect("plan store poisoned")
+            .add(source, plan))
+    }
+
+    /// Version metadata for `GET /v2/models/{name}/plans`.
+    pub fn list_versions(&self) -> Vec<Arc<PlanVersion>> {
+        self.store.lock().expect("plan store poisoned").list()
+    }
+
+    /// Route untagged traffic to `version` (installing it on the pool if
+    /// needed), remember the replaced version for rollback, and end any
+    /// running canary/shadow experiment. Engine versions no longer
+    /// reachable (not active, not the rollback target) are retired to
+    /// free their prepared weights. Returns the new generation.
+    pub fn activate(&self, version: u64) -> Result<u64, ServiceError> {
+        let pv = self.plan_of(version)?;
+        let engine = self.service.engine();
+        engine.install_version(version, pv.plan.clone())?;
+        let generation = engine.activate_version(version)?;
+        {
+            let mut r = self.rollout.lock().expect("rollout state poisoned");
+            if r.active != version {
+                r.previous = Some(r.active);
+                r.active = version;
+            }
+            r.canary = None;
+            r.shadow = None;
+        }
+        self.retire_unreachable();
+        Ok(generation)
+    }
+
+    /// Retire engine versions no longer reachable from the rollout state
+    /// (not active, not the rollback target, not a live experiment) so
+    /// abandoned candidates release their prepared weights and every
+    /// worker's cached executor for them.
+    fn retire_unreachable(&self) {
+        let (active, previous, canary, shadow) = {
+            let r = self.rollout.lock().expect("rollout state poisoned");
+            (
+                r.active,
+                r.previous,
+                r.canary.as_ref().map(|c| c.version),
+                r.shadow.as_ref().map(|s| s.version),
+            )
+        };
+        let engine = self.service.engine();
+        for v in engine.installed_versions() {
+            if v != active && Some(v) != previous && Some(v) != canary && Some(v) != shadow {
+                let _ = engine.retire_version(v);
+            }
+        }
+    }
+
+    /// The `POST /v1/plan` semantics on this model: create a version
+    /// from the body and activate it in one call. Returns the new
+    /// generation (the v1 hot-swap counter).
+    pub fn create_and_activate(&self, body: &str) -> Result<u64, ServiceError> {
+        let pv = self.create_version(body)?;
+        self.activate(pv.version)
+    }
+
+    /// Revert untagged traffic to the previously active version. The
+    /// rolled-back-from version becomes the new rollback target, so two
+    /// rollbacks ping-pong. Ends any canary/shadow experiment.
+    pub fn rollback(&self) -> Result<(u64, u64), ServiceError> {
+        let previous = self
+            .rollout
+            .lock()
+            .expect("rollout state poisoned")
+            .previous
+            .ok_or_else(|| {
+                ServiceError::PlanRejected("no previous version to roll back to".into())
+            })?;
+        let generation = self.activate(previous)?;
+        Ok((previous, generation))
+    }
+
+    /// Start (or retune) a canary: route `fraction` of subsequent
+    /// requests to `version`. The split counters restart.
+    pub fn start_canary(&self, version: u64, fraction: f64) -> Result<(), ServiceError> {
+        if !(0.0..=1.0).contains(&fraction) {
+            return Err(ServiceError::BadRequest(format!(
+                "canary fraction must be in [0, 1], got {fraction}"
+            )));
+        }
+        let pv = self.plan_of(version)?;
+        let engine = self.service.engine();
+        engine.install_version(version, pv.plan.clone())?;
+        {
+            let mut r = self.rollout.lock().expect("rollout state poisoned");
+            if r.active == version {
+                return Err(ServiceError::PlanRejected(format!(
+                    "version {version} is already active"
+                )));
+            }
+            // A fresh CanaryState carries its own zeroed counters, so
+            // the exact ⌊n·f⌋ split holds from the first request that
+            // observes this experiment — an in-flight request that read
+            // a previous canary increments that discarded state instead.
+            r.canary = Some(Arc::new(CanaryState {
+                version,
+                fraction,
+                seq: AtomicU64::new(0),
+                routed: AtomicU64::new(0),
+            }));
+        }
+        // A replaced (retuned-away) candidate releases its engine
+        // resources instead of lingering installed.
+        self.retire_unreachable();
+        Ok(())
+    }
+
+    /// Start mirroring every request to `version` and comparing its
+    /// outputs against the active plan's online.
+    pub fn start_shadow(&self, version: u64) -> Result<(), ServiceError> {
+        let pv = self.plan_of(version)?;
+        let engine = self.service.engine();
+        engine.install_version(version, pv.plan.clone())?;
+        let stats = self.shadow_stats_for(version);
+        let tx = self.collector_tx();
+        {
+            let mut r = self.rollout.lock().expect("rollout state poisoned");
+            if r.active == version {
+                return Err(ServiceError::PlanRejected(format!(
+                    "version {version} is already active"
+                )));
+            }
+            r.shadow = Some(ShadowState { version, stats, tx });
+        }
+        self.retire_unreachable();
+        Ok(())
+    }
+
+    /// (requests routed to the canary, requests seen) since the current
+    /// canary experiment started; `(0, 0)` when none is running.
+    pub fn canary_counters(&self) -> (u64, u64) {
+        self.rollout
+            .lock()
+            .expect("rollout state poisoned")
+            .canary
+            .as_ref()
+            .map(|c| {
+                (
+                    c.routed.load(Ordering::Relaxed),
+                    c.seq.load(Ordering::Relaxed),
+                )
+            })
+            .unwrap_or((0, 0))
+    }
+
+    /// Live shadow report for a candidate version, if it ever shadowed.
+    pub fn shadow_report(&self, version: u64) -> Option<ShadowReport> {
+        self.shadow_stats
+            .lock()
+            .expect("shadow stats poisoned")
+            .get(&version)
+            .map(|s| s.report(version))
+    }
+
+    fn shadow_stats_for(&self, version: u64) -> Arc<ShadowStats> {
+        Arc::clone(
+            self.shadow_stats
+                .lock()
+                .expect("shadow stats poisoned")
+                .entry(version)
+                .or_insert_with(|| Arc::new(ShadowStats::new())),
+        )
+    }
+
+    /// The mirror-comparison collector's channel, spawning the collector
+    /// on first use. One thread per model: it blocks on each mirror's
+    /// receiver in submission order, so shadow comparison never sits on
+    /// a serving thread.
+    fn collector_tx(&self) -> mpsc::Sender<ShadowJob> {
+        let mut guard = self.shadow_tx.lock().expect("shadow channel poisoned");
+        if let Some(tx) = guard.as_ref() {
+            return tx.clone();
+        }
+        let (sender, receiver) = mpsc::channel::<ShadowJob>();
+        *guard = Some(sender.clone());
+        let handle = std::thread::Builder::new()
+            .name(format!("adapt-shadow-{}", self.name))
+            .spawn(move || {
+                for job in receiver {
+                    match job.rx.recv() {
+                        Ok(Ok(raw)) => job.stats.record(&job.primary, &raw.output),
+                        _ => {
+                            job.stats.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        if let Ok(h) = handle {
+            *self.shadow_thread.lock().expect("shadow thread poisoned") = Some(h);
+        }
+        sender
+    }
+
+    // ----- observability --------------------------------------------------
+
+    /// The `GET /v2/models/{name}/stats` body: the service stats plus
+    /// rollout state, canary counters and per-version shadow reports.
+    pub fn stats_json(&self) -> Json {
+        let Json::Obj(mut m) = self.service.stats().to_json() else {
+            unreachable!("ServiceStats::to_json always returns an object");
+        };
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        // "active_version" stays the engine-table value ServiceStats
+        // already reported — the single source of truth.
+        let (previous, canary, shadow) = {
+            let r = self.rollout.lock().expect("rollout state poisoned");
+            (
+                r.previous,
+                r.canary.clone(),
+                r.shadow.as_ref().map(|s| s.version),
+            )
+        };
+        m.insert(
+            "previous_version".into(),
+            match previous {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "canary".into(),
+            match canary {
+                Some(c) => {
+                    let mut cm = BTreeMap::new();
+                    cm.insert("version".into(), Json::Num(c.version as f64));
+                    cm.insert("fraction".into(), Json::Num(c.fraction));
+                    cm.insert(
+                        "routed".into(),
+                        Json::Num(c.routed.load(Ordering::Relaxed) as f64),
+                    );
+                    cm.insert(
+                        "seen".into(),
+                        Json::Num(c.seq.load(Ordering::Relaxed) as f64),
+                    );
+                    Json::Obj(cm)
+                }
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "shadow".into(),
+            match shadow {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        );
+        let reports: BTreeMap<String, Json> = {
+            let stats = self.shadow_stats.lock().expect("shadow stats poisoned");
+            stats
+                .iter()
+                .map(|(v, s)| (v.to_string(), s.report(*v).to_json()))
+                .collect()
+        };
+        m.insert("shadow_reports".into(), Json::Obj(reports));
+        m.insert(
+            "versions".into(),
+            Json::Num(self.store.lock().expect("plan store poisoned").len() as f64),
+        );
+        Json::Obj(m)
+    }
+
+    /// One row of the `GET /v2/models` listing.
+    pub fn summary_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert(
+            "model".into(),
+            Json::Str(self.service.model_name().to_string()),
+        );
+        let (canary, shadow) = {
+            let r = self.rollout.lock().expect("rollout state poisoned");
+            (
+                r.canary.as_ref().map(|c| c.version),
+                r.shadow.as_ref().map(|s| s.version),
+            )
+        };
+        m.insert(
+            "active_version".into(),
+            Json::Num(self.service.engine().active_version() as f64),
+        );
+        m.insert(
+            "versions".into(),
+            Json::Num(self.store.lock().expect("plan store poisoned").len() as f64),
+        );
+        m.insert(
+            "generation".into(),
+            Json::Num(self.service.engine().generation() as f64),
+        );
+        m.insert(
+            "workers".into(),
+            Json::Num(self.service.engine().workers() as f64),
+        );
+        m.insert(
+            "input_len".into(),
+            Json::Num(self.service.input_len() as f64),
+        );
+        m.insert("out_dim".into(), Json::Num(self.service.out_dim() as f64));
+        m.insert(
+            "canary_version".into(),
+            canary.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+        );
+        m.insert(
+            "shadow_version".into(),
+            shadow.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+        );
+        Json::Obj(m)
+    }
+}
+
+impl Drop for ModelHandle {
+    fn drop(&mut self) {
+        // Close the collector channel, then join the thread so pending
+        // comparisons finish before the engine pool is torn down.
+        *self.shadow_tx.lock().expect("shadow channel poisoned") = None;
+        if let Some(h) = self
+            .shadow_thread
+            .lock()
+            .expect("shadow thread poisoned")
+            .take()
+        {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Parse a plan body: `{"spec": "..."}` resolves a policy against the
+/// served model; anything else must be a plan JSON document. Returns the
+/// version `source` tag alongside the plan. (Shared by the `/v1` swap
+/// shim and `/v2` version creation, so their error surfaces match.)
+pub(crate) fn parse_plan_body(
+    body: &str,
+    spec: &EmulatorSpec,
+) -> Result<(String, ExecutionPlan), ServiceError> {
+    let j = Json::parse(body).map_err(|e| ServiceError::BadRequest(format!("{e:#}")))?;
+    match j.opt("spec") {
+        Some(s) => {
+            let text = s
+                .str()
+                .map_err(|e| ServiceError::BadRequest(format!("spec: {e}")))?;
+            let policy = Policy::parse_spec(text)
+                .map_err(|e| ServiceError::BadRequest(format!("{e:#}")))?;
+            let unmatched = policy.unmatched_overrides(&spec.model);
+            if !unmatched.is_empty() {
+                return Err(ServiceError::PlanRejected(format!(
+                    "spec overrides match no layer of {}: {unmatched:?}",
+                    spec.model.name
+                )));
+            }
+            Ok((format!("spec:{text}"), retransform(&spec.model, &policy)))
+        }
+        None => Ok((
+            "json".into(),
+            ExecutionPlan::from_json(body, &spec.model)
+                .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?,
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// N named models, each with its own engine pool and plan lifecycle.
+/// The first entry is the **default model** the `/v1` shim serves.
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<ModelHandle>>,
+    /// Names in registration order (BTreeMap sorts; listings shouldn't).
+    order: Vec<String>,
+    default: String,
+}
+
+impl ModelRegistry {
+    /// Build a registry over named services. Fails on an empty list or a
+    /// duplicate name.
+    pub fn new(entries: Vec<(String, Arc<AdaptService>)>) -> Result<ModelRegistry> {
+        anyhow::ensure!(!entries.is_empty(), "registry needs at least one model");
+        let default = entries[0].0.clone();
+        let mut models = BTreeMap::new();
+        let mut order = Vec::with_capacity(entries.len());
+        for (name, service) in entries {
+            anyhow::ensure!(
+                !models.contains_key(&name),
+                "duplicate model name {name:?} in registry"
+            );
+            order.push(name.clone());
+            models.insert(name.clone(), ModelHandle::new(name, service));
+        }
+        Ok(ModelRegistry {
+            models,
+            order,
+            default,
+        })
+    }
+
+    /// Single-model registry (what wrapping a bare [`AdaptService`] in
+    /// the HTTP front-end builds): the model registers under its own
+    /// name and becomes the default.
+    pub fn single(service: Arc<AdaptService>) -> ModelRegistry {
+        let name = service.model_name().to_string();
+        ModelRegistry::new(vec![(name, service)]).expect("one named model is always valid")
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Arc<ModelHandle>, ServiceError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| ServiceError::ModelNotFound(name.to_string()))
+    }
+
+    /// The model the `/v1` shim serves.
+    pub fn default_model(&self) -> &Arc<ModelHandle> {
+        self.models.get(&self.default).expect("default model exists")
+    }
+
+    /// Every model, in registration order.
+    pub fn models(&self) -> Vec<&Arc<ModelHandle>> {
+        self.order
+            .iter()
+            .map(|n| self.models.get(n).expect("ordered name exists"))
+            .collect()
+    }
+
+    /// The `GET /v2/models` body.
+    pub fn list_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("default".into(), Json::Str(self.default.clone()));
+        m.insert(
+            "models".into(),
+            Json::Arr(self.models().iter().map(|h| h.summary_json()).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canary_split_is_exact() {
+        for (n, f) in [(100u64, 0.25f64), (40, 0.5), (7, 0.33), (64, 0.0), (64, 1.0)] {
+            let picked = (0..n).filter(|&t| canary_pick(t, f)).count() as u64;
+            assert_eq!(picked, (n as f64 * f).floor() as u64, "n={n} f={f}");
+        }
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        assert_eq!(argmax(&[0.5, 2.0, 2.0, -1.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[-1.0, -1.0]), 0);
+    }
+
+    #[test]
+    fn shadow_stats_accumulate() {
+        let s = ShadowStats::new();
+        s.record(&[1.0, 2.0], &[1.0, 2.0]);
+        s.record(&[1.0, 2.0], &[2.5, 2.0]); // disagree + flip, |Δ| = 1.5
+        s.record(&[1.0, 2.0], &[1.0, 2.25]); // disagree, no flip
+        let r = s.report(7);
+        assert_eq!(r.version, 7);
+        assert_eq!(r.mirrored, 3);
+        assert_eq!(r.disagree, 2);
+        assert_eq!(r.top1_flips, 1);
+        assert_eq!(r.max_abs_delta, 1.5);
+        assert!((r.disagreement_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

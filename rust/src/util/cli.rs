@@ -1,7 +1,9 @@
 //! Tiny CLI argument parser (clap substitute).
 //!
 //! Grammar: `adapt <subcommand> [--flag] [--key value] [positional...]`.
-//! Flags may be written `--key=value` or `--key value`.
+//! Flags may be written `--key=value` or `--key value`. An option may
+//! repeat (`--model a --model b`): [`Args::get`] returns the last value,
+//! [`Args::get_all`] every value in order.
 
 use std::collections::BTreeMap;
 
@@ -12,7 +14,7 @@ use anyhow::{bail, Result};
 pub struct Args {
     pub subcommand: Option<String>,
     pub positional: Vec<String>,
-    pub options: BTreeMap<String, String>,
+    pub options: BTreeMap<String, Vec<String>>,
     pub flags: Vec<String>,
 }
 
@@ -31,14 +33,17 @@ impl Args {
                     bail!("bare `--` not supported");
                 }
                 if let Some((k, v)) = body.split_once('=') {
-                    out.options.insert(k.to_string(), v.to_string());
+                    out.options
+                        .entry(k.to_string())
+                        .or_default()
+                        .push(v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.options.insert(body.to_string(), v);
+                    out.options.entry(body.to_string()).or_default().push(v);
                 } else {
                     out.flags.push(body.to_string());
                 }
@@ -55,8 +60,17 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last value of a (possibly repeated) option.
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every value of a repeated option, in order (`--model a --model b`).
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.options.get(name).cloned().unwrap_or_default()
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -147,6 +161,16 @@ mod tests {
         let b = parse("sensitivity --model small_vgg");
         assert_eq!(b.get_usize("workers", 8).unwrap(), 8);
         assert!(parse("serve --workers nope").get_usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let a = parse("serve --model alpha --model beta --synthetic");
+        assert_eq!(a.get_all("model"), vec!["alpha", "beta"]);
+        assert_eq!(a.get("model"), Some("beta"), "get returns the last value");
+        assert!(a.get_all("nope").is_empty());
+        let b = parse("serve --workers=2 --workers=4");
+        assert_eq!(b.get_usize("workers", 1).unwrap(), 4);
     }
 
     #[test]

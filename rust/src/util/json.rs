@@ -21,11 +21,18 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Max container nesting the parser accepts. The parser recurses per
+/// level, so an adversarial `[[[[...` document must hit this typed error
+/// long before it can exhaust the thread's stack (serving threads parse
+/// untrusted request bodies).
+pub const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.ws();
         let v = p.value()?;
@@ -131,9 +138,17 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
+                // JSON has no inf/NaN: emit null rather than an unparseable
+                // bare `inf` (the bit-exact round-trip promise covers
+                // finite floats only).
+                if !n.is_finite() {
+                    out.push_str("null");
                 // -0.0 must keep its sign bit (inference payloads promise
                 // bit-exact f32 round-trips), so it takes the float path.
-                if n.fract() == 0.0 && n.abs() < 9.0e15 && (*n != 0.0 || n.is_sign_positive()) {
+                } else if n.fract() == 0.0
+                    && n.abs() < 9.0e15
+                    && (*n != 0.0 || n.is_sign_positive())
+                {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -187,6 +202,7 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -237,12 +253,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.i);
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json> {
+        self.enter()?;
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek()? == b'}' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -260,6 +286,7 @@ impl<'a> Parser<'a> {
                 }
                 b'}' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 c => bail!("expected ',' or '}}' at byte {}, got {:?}", self.i, c as char),
@@ -268,11 +295,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
+        self.enter()?;
         self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
         if self.peek()? == b']' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -285,6 +314,7 @@ impl<'a> Parser<'a> {
                 }
                 b']' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 c => bail!("expected ',' or ']' at byte {}, got {:?}", self.i, c as char),
@@ -446,5 +476,79 @@ mod tests {
         let v = Json::parse(r#"{"a": [], "b": {}}"#).unwrap();
         assert!(v.get("a").unwrap().arr().unwrap().is_empty());
         assert!(v.get("b").unwrap().obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn depth_cap_rejects_instead_of_overflowing() {
+        // Within the cap parses fine (cap counts containers, so exactly
+        // MAX_DEPTH arrays is legal).
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // One past the cap is a typed error...
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&over).unwrap_err();
+        assert!(e.to_string().contains("nesting"), "got: {e}");
+        // ...and so is an adversarial 100k-deep document — an error, not
+        // a stack overflow (serving threads parse untrusted bodies).
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        let bomb = format!("{}{}", "{\"a\":".repeat(100_000), "1");
+        assert!(Json::parse(&bomb).is_err());
+        // Mixed nesting counts every container level.
+        let mixed = format!("{}1{}", "[{\"k\":".repeat(70), "}]".repeat(70));
+        assert!(Json::parse(&mixed).is_err(), "140 levels exceeds the cap");
+    }
+
+    #[test]
+    fn unicode_escape_surrogate_pairs() {
+        // A surrogate pair (U+1F600) assembles into one char.
+        let v = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(v.str().unwrap(), "😀");
+        // Pair + ASCII escapes + BMP escape in one string.
+        let v = Json::parse(r#""aA😀\né""#).unwrap();
+        assert_eq!(v.str().unwrap(), "aA😀\né");
+        // A lone high surrogate is malformed, not a panic.
+        assert!(Json::parse(r#""\ud83d""#).is_err());
+        assert!(Json::parse(r#""\ud83dx""#).is_err());
+        // Truncated escapes are malformed too.
+        assert!(Json::parse(r#""\u00""#).is_err());
+        assert!(Json::parse(r#""\ud83d\ude""#).is_err());
+        // Escaped strings survive a write → parse round trip.
+        let original = Json::Str("quote\" slash\\ tab\t 😀 \u{1} end".into());
+        assert_eq!(Json::parse(&original.to_string()).unwrap(), original);
+    }
+
+    #[test]
+    fn non_finite_numbers_write_as_null_not_bare_inf() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        // The output stays parseable JSON.
+        let text = Json::Arr(vec![Json::Num(1.5), Json::Num(f64::NAN)]).to_string();
+        assert_eq!(text, "[1.5,null]");
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn extreme_f32_values_roundtrip_through_from_f32s() {
+        let xs = vec![
+            f32::MAX,
+            -f32::MAX,
+            f32::MIN_POSITIVE,          // smallest normal
+            -f32::MIN_POSITIVE,
+            f32::from_bits(1),          // smallest subnormal
+            f32::from_bits(0x007f_ffff), // largest subnormal
+            -f32::from_bits(1),
+            0.0,
+            -0.0,
+            1.0e-45,
+            3.402_823_4e38,
+        ];
+        let text = Json::from_f32s(&xs).to_string();
+        let back = Json::parse(&text).unwrap().f32_vec().unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a:e} mangled to {b:e}");
+        }
     }
 }
