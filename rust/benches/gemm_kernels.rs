@@ -1,0 +1,137 @@
+//! Kernel-tier microbench: scalar-tier LUT vs SIMD-gather LUT vs the
+//! branchless closed-form kernels, per GEMM shape and ACU, emitted as
+//! `artifacts/results/BENCH_gemm.json` with GFLOP/s and speedup columns.
+//!
+//! Every timed kernel is *validated first*: its output must match the
+//! naive scalar LUT reference bit-for-bit on the bench inputs, so the
+//! numbers can never come from a kernel that silently diverged.
+//!
+//! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench gemm_kernels`
+
+use std::collections::BTreeMap;
+
+use adapt::emulator::gemm;
+use adapt::emulator::simd::{self, Isa};
+use adapt::lut::Lut;
+use adapt::mult;
+use adapt::util::bench::{self, Config};
+use adapt::util::json::Json;
+use adapt::util::rng::Rng;
+
+fn rand_q(rng: &mut Rng, len: usize, half: i64) -> Vec<i32> {
+    (0..len).map(|_| rng.range_i64(-half, half) as i32).collect()
+}
+
+fn entry(s: &bench::Stats, macs: f64, naive: f64, scalar_lut: f64) -> Json {
+    let med = s.median_secs().max(1e-12);
+    let mut e = BTreeMap::new();
+    e.insert("median_s".to_string(), Json::Num(s.median_secs()));
+    e.insert("gflops".to_string(), Json::Num(2.0 * macs / med / 1e9));
+    e.insert("speedup_vs_naive".to_string(), Json::Num(naive / med));
+    e.insert("speedup_vs_scalar_lut".to_string(), Json::Num(scalar_lut / med));
+    Json::Obj(e)
+}
+
+fn main() {
+    let cfg = Config::default().from_env();
+    let threads = adapt::util::threadpool::default_threads();
+    let active = simd::isa();
+    println!("GEMM kernel tiers (threads = {threads}, active ISA = {active:?})\n");
+
+    // (m, k, n): conv-patch GEMM, fc GEMM, LSTM-gate GEMM.
+    let shapes = [(4096usize, 288usize, 32usize), (256, 2048, 128), (32, 96, 256)];
+    // Two closed-form families (floor-trunc, DRUM) + one opaque ACU that
+    // can only take the gather path.
+    let acus = ["mul8s_1l2h_like", "drum8_4", "mitchell8"];
+
+    let mut all_shapes: BTreeMap<String, Json> = BTreeMap::new();
+    let mut best_speedup = 0.0f64;
+    for (m, k, n) in shapes {
+        let mut rng = Rng::new(42);
+        let xq = rand_q(&mut rng, m * k, 128);
+        let wq = rand_q(&mut rng, k * n, 128);
+        let wb: Vec<u16> = wq.iter().map(|&v| (v + 128) as u16).collect();
+        let macs = (m * k * n) as f64;
+        let mut by_acu: BTreeMap<String, Json> = BTreeMap::new();
+        println!("GEMM {m}x{k}x{n} ({:.1} MMAC):", macs / 1e6);
+
+        for acu in acus {
+            let ml = mult::get(acu).unwrap();
+            let lut = Lut::generate(ml);
+            let mut want = vec![0i64; m * n];
+            gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut want);
+            let want = want; // frozen: the validation reference
+            let check32 = |got: &[i32], label: &str| {
+                assert!(
+                    want.iter().zip(got).all(|(&a, &b)| a == b as i64),
+                    "{acu} {m}x{k}x{n}: {label} diverged from the naive reference"
+                );
+            };
+
+            println!("  {acu} ({:?}):", ml.form);
+            let mut kernels: BTreeMap<String, Json> = BTreeMap::new();
+            let mut acc64 = vec![0i64; m * n];
+            let s = bench::run("    lut naive (baseline engine)", cfg, || {
+                gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut acc64)
+            });
+            s.print();
+            let naive = s.median_secs();
+            kernels.insert("lut_naive".to_string(), entry(&s, macs, naive, naive));
+
+            let mut acc32 = vec![0i32; m * n];
+            gemm::lut_opt_biased_with(&xq, m, k, &wb, n, &lut, threads, Isa::Scalar, &mut acc32);
+            check32(&acc32, "lut scalar tier");
+            let s = bench::run("    lut blocked, scalar tier", cfg, || {
+                gemm::lut_opt_biased_with(&xq, m, k, &wb, n, &lut, threads, Isa::Scalar, &mut acc32)
+            });
+            s.print();
+            let scalar_lut = s.median_secs();
+            kernels.insert("lut_scalar".to_string(), entry(&s, macs, naive, scalar_lut));
+
+            if active != Isa::Scalar {
+                gemm::lut_opt_biased_with(&xq, m, k, &wb, n, &lut, threads, active, &mut acc32);
+                check32(&acc32, "lut SIMD tier");
+                let s = bench::run("    lut blocked, SIMD gather", cfg, || {
+                    gemm::lut_opt_biased_with(&xq, m, k, &wb, n, &lut, threads, active, &mut acc32)
+                });
+                s.print();
+                best_speedup = best_speedup.max(scalar_lut / s.median_secs().max(1e-12));
+                kernels.insert("lut_simd".to_string(), entry(&s, macs, naive, scalar_lut));
+            }
+
+            if ml.form.is_closed() {
+                let mut tiers = vec![(Isa::Scalar, "cf_scalar", "    closed-form, scalar tier")];
+                if active != Isa::Scalar {
+                    tiers.push((active, "cf_simd", "    closed-form, SIMD"));
+                }
+                for (isa, name, label) in tiers {
+                    gemm::cf_opt_i32_with(&xq, m, k, &wq, n, ml.form, threads, isa, &mut acc32);
+                    check32(&acc32, name);
+                    let s = bench::run(label, cfg, || {
+                        gemm::cf_opt_i32_with(&xq, m, k, &wq, n, ml.form, threads, isa, &mut acc32)
+                    });
+                    s.print();
+                    best_speedup = best_speedup.max(scalar_lut / s.median_secs().max(1e-12));
+                    kernels.insert(name.to_string(), entry(&s, macs, naive, scalar_lut));
+                }
+            }
+            by_acu.insert(acu.to_string(), Json::Obj(kernels));
+        }
+        println!();
+        all_shapes.insert(format!("{m}x{k}x{n}"), Json::Obj(by_acu));
+    }
+
+    println!("best speedup vs blocked scalar-LUT tier: {best_speedup:.2}x");
+    let mut doc = BTreeMap::new();
+    doc.insert("threads".to_string(), Json::Num(threads as f64));
+    doc.insert("isa".to_string(), Json::Str(format!("{active:?}")));
+    doc.insert("best_speedup_vs_scalar_lut".to_string(), Json::Num(best_speedup));
+    doc.insert("shapes".to_string(), Json::Obj(all_shapes));
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_gemm.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("written {}", path.display());
+        }
+    }
+}

@@ -44,7 +44,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::graph::{ExecutionPlan, LayerMode, Model, Node, Op};
 use crate::layers;
 use crate::lut::{Lut, LutRegistry};
-use crate::mult::MulFn;
+use crate::mult::{Form, MulFn};
 use crate::quant;
 use crate::tensor::{
     conv_out, im2col_f32_range_into, im2col_i32_range_into, numel, Tensor, TensorI32,
@@ -81,6 +81,30 @@ fn func_for(trunc_k: u32) -> MulFn {
     }
 }
 
+/// Closed-form descriptor matching [`func_for`] exactly (both truncate
+/// the exact product by `trunc_k` bits).
+fn form_for_trunc(trunc_k: u32) -> Form {
+    match trunc_k {
+        0 => Form::Exact,
+        k => Form::TruncOut(k.min(8)),
+    }
+}
+
+/// Closed-form descriptor for a LUT-backed node, when its ACU name
+/// resolves to a registry model with one. File-only LUTs (names outside
+/// the behavioral registry) keep the gather path; name-based selection is
+/// sound because `tests/lut_cross_check.rs` pins every shipped LUT
+/// artifact to its registry model. Gated to 8-bit tables: the closed
+/// path accumulates in i32 (the `lut_opt_biased` contract), which wider
+/// products could overflow.
+fn closed_form_for(acu: &str, bits: u32) -> Option<Form> {
+    if bits > 8 {
+        return None;
+    }
+    let form = crate::mult::get(acu).ok()?.form;
+    form.is_closed().then_some(form)
+}
+
 /// One pre-quantized weight matrix: (k, n) row-major + per-col scales.
 /// `wq_biased` is the §Perf representation for the optimized LUT engine:
 /// indices pre-offset by 2^(bits-1) so the hot loop is a bare gather.
@@ -108,12 +132,16 @@ impl QuantMat {
     }
 }
 
-/// Resolved product backend for one quantized node.
+/// Resolved product backend for one quantized node. `form` is the
+/// kernel-compilation handle: when the node's ACU has a closed form, the
+/// optimized engine lowers it to the branchless `cf_opt_*` kernels and
+/// never touches the LUT / function pointer on the hot path (the naive
+/// engine always uses the table/function — it is the paper's baseline).
 enum Backend {
     /// Shared ACU table (resolved from the plan's ACU name).
-    Lut(Arc<Lut>),
+    Lut { lut: Arc<Lut>, form: Option<Form> },
     /// Behavioral multiplier function (large-bitwidth fallback).
-    Func(MulFn),
+    Func { f: MulFn, form: Option<Form> },
 }
 
 /// A model's weights quantized/flattened for one plan, shareable across
@@ -543,9 +571,11 @@ impl<'m> Executor<'m> {
     }
 
     /// Quantized-input GEMM + dequant. The §Perf hot path: the optimized
-    /// LUT engine takes the biased-u16/i32-accumulator kernel; everything
-    /// else goes through the generic i64 kernels. The LUT is the *node's
-    /// own* table — different nodes may gather from different ACUs.
+    /// LUT engine takes a closed-form branchless kernel when the node's
+    /// ACU has one, else the biased-u16/i32-accumulator gather kernel;
+    /// everything else goes through the generic i64 kernels. The LUT is
+    /// the *node's own* table — different nodes may gather from
+    /// different ACUs.
     fn dense_q(
         &self,
         node_id: usize,
@@ -559,10 +589,17 @@ impl<'m> Executor<'m> {
             bail!("dense_q on a non-quant node");
         };
         let mat = &mats[mat_idx];
-        if let (Backend::Lut(lut), Style::Optimized { threads }) = (backend, self.style) {
+        if let (Backend::Lut { lut, form }, Style::Optimized { threads }) = (backend, self.style) {
             let mut acc = self.scratch.acc32.grab(m * mat.n, self.reuse_scratch);
             let acc = &mut acc[..m * mat.n];
-            gemm::lut_opt_biased(xq, m, mat.k, &mat.wq_biased, mat.n, lut, threads, acc);
+            match form {
+                // Kernel-compilation tier: branchless bit ops, no LUT.
+                Some(f) => gemm::cf_opt_i32(xq, m, mat.k, &mat.wq, mat.n, *f, threads, acc),
+                // Opaque ACU: vectorized-gather LUT kernel.
+                None => {
+                    gemm::lut_opt_biased(xq, m, mat.k, &mat.wq_biased, mat.n, lut, threads, acc)
+                }
+            }
             for mi in 0..m {
                 for ni in 0..mat.n {
                     out[mi * mat.n + ni] = acc[mi * mat.n + ni] as f32 * (sa * mat.scales[ni]);
@@ -573,16 +610,17 @@ impl<'m> Executor<'m> {
         let mut acc = self.scratch.acc64.grab(m * mat.n, self.reuse_scratch);
         let acc = &mut acc[..m * mat.n];
         match (backend, self.style) {
-            (Backend::Lut(lut), Style::Naive) => {
+            (Backend::Lut { lut, .. }, Style::Naive) => {
                 gemm::lut_naive(xq, m, mat.k, &mat.wq, mat.n, lut, acc)
             }
-            (Backend::Func(f), Style::Naive) => {
+            (Backend::Func { f, .. }, Style::Naive) => {
                 gemm::func_naive(xq, m, mat.k, &mat.wq, mat.n, *f, acc)
             }
-            (Backend::Func(f), Style::Optimized { threads }) => {
-                gemm::func_opt(xq, m, mat.k, &mat.wq, mat.n, *f, threads, acc)
-            }
-            (Backend::Lut(_), Style::Optimized { .. }) => unreachable!(),
+            (Backend::Func { f, form }, Style::Optimized { threads }) => match form {
+                Some(cf) => gemm::cf_opt_i64(xq, m, mat.k, &mat.wq, mat.n, *cf, threads, acc),
+                None => gemm::func_opt(xq, m, mat.k, &mat.wq, mat.n, *f, threads, acc),
+            },
+            (Backend::Lut { .. }, Style::Optimized { .. }) => unreachable!(),
         }
         for mi in 0..m {
             for ni in 0..mat.n {
@@ -997,7 +1035,10 @@ fn prepare_nodes(
                             ],
                             bias: b.data.clone(),
                             bits,
-                            backend: Backend::Lut(lut),
+                            backend: Backend::Lut {
+                                form: closed_form_for(acu, bits),
+                                lut,
+                            },
                         }
                     }
                     LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
@@ -1007,7 +1048,10 @@ fn prepare_nodes(
                         ],
                         bias: b.data.clone(),
                         bits: *bits,
-                        backend: Backend::Func(func_for(*trunc_k)),
+                        backend: Backend::Func {
+                            f: func_for(*trunc_k),
+                            form: Some(form_for_trunc(*trunc_k)),
+                        },
                     },
                 }
             }
@@ -1041,7 +1085,10 @@ fn build_prepared(
                     .collect(),
                 bias,
                 bits,
-                backend: Backend::Lut(lut),
+                backend: Backend::Lut {
+                    form: closed_form_for(acu, bits),
+                    lut,
+                },
             }
         }
         LayerMode::ApproxFunc { bits, trunc_k } => PreparedNode::Quant {
@@ -1051,7 +1098,10 @@ fn build_prepared(
                 .collect(),
             bias,
             bits: *bits,
-            backend: Backend::Func(func_for(*trunc_k)),
+            backend: Backend::Func {
+                f: func_for(*trunc_k),
+                form: Some(form_for_trunc(*trunc_k)),
+            },
         },
     })
 }

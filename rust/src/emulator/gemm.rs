@@ -1,29 +1,51 @@
 //! ACU GEMM kernels — the hot path of the emulation (§4).
 //!
-//! Three product backends (exact f32, LUT gather, functional multiplier) ×
-//! two engine styles:
+//! Loop nests live here; the innermost steps live in
+//! [`simd`](crate::emulator::simd) and are runtime-dispatched across three
+//! tiers (AVX2 → NEON → scalar, see that module). Product backends:
 //!
-//! * **Naive** — the Table-4 "Baseline Approx." column: textbook
-//!   m/n/k loop nest, column-strided weight access, one scalar table
-//!   lookup per product, no threads. This is deliberately the
-//!   unoptimized LUT emulation the paper compares against.
-//! * **Optimized** — the paper's §4 design re-expressed for scalar Rust:
-//!   row-parallel over the threadpool (OpenMP analogue), loop order
-//!   m-k-n with the LUT *row for x[m,k] hoisted out of the inner loop*
-//!   (one add + one indexed load per product, unit-stride over both the
-//!   weight row and the accumulator — the shape the compiler can
-//!   auto-vectorize into gathers, standing in for AVX2 `vpgatherdd`).
+//! * **Naive** — the Table-4 "Baseline Approx." column: textbook m/n/k
+//!   loop nest, column-strided weight access, one scalar table lookup (or
+//!   behavioral-function call) per product, no threads. Deliberately the
+//!   unoptimized emulation the paper compares against; never dispatched.
+//! * **LUT gather** (`lut_opt`, `lut_opt_biased`) — the paper's §4
+//!   design: row-parallel over the threadpool, loop order m-k-n with the
+//!   LUT *row for x[m,k] hoisted out of the inner loop*, unit stride over
+//!   both the weight row and the accumulator. On AVX2 the inner step is a
+//!   real `vpgatherdd`; `lut_opt_biased` additionally pre-biases weight
+//!   indices at plan-build time and pairs 4 output rows per weight stream.
+//! * **Closed-form** (`cf_opt_i32`, `cf_opt_i64`) — the kernel-compilation
+//!   tier: ACU families with a [`Form`] descriptor (truncation,
+//!   perforation, DRUM…) lower to branchless bit-op inner loops that
+//!   never touch a LUT — TFApprox's "functional" trick. Selected
+//!   per-layer by the executor from the plan.
 //!
-//! Accumulators are i64: at 8-bit they cannot overflow i32 for any model
-//! in the zoo, but the 12-bit functional ACUs can (|p|max ≈ 2^22, K up to
-//! ~1.2k ⇒ 2^32+), so the wide type is the correct shared contract.
+//! **Determinism contract.** All optimized kernels share one reduction
+//! order: k-blocked by [`BLOCK_K`] with each output element accumulated by
+//! exactly one worker. Integer kernels are order-insensitive
+//! (associative adds ⇒ bit-identical across tiers and thread counts); the
+//! f32 kernels pin the order explicitly — per-element accumulation chains
+//! for `fp32_opt`/`fp32_at_b`, the fixed 8-lane striped reduction of
+//! [`simd::dot_f32`] for `fp32_a_bt` — so every kernel is bit-identical
+//! across `Isa` tiers and `ADAPT_THREADS` values (enforced by
+//! `tests/kernel_equivalence.rs`). Each public kernel has a `*_with`
+//! variant taking an explicit [`Isa`] for A/B tests and benches; the
+//! plain entry points dispatch on [`simd::isa`].
+//!
+//! Accumulators: `lut_opt_biased`/`cf_opt_i32` use i32 (safe at 8-bit:
+//! |product| ≤ 2^14, K < 2^17 in the zoo); `lut_opt`/`func_opt`/
+//! `cf_opt_i64` use i64, the correct contract for 12-bit ACUs (|p|max ≈
+//! 2^22 overflows i32 sums at K ≥ ~1k).
 
 use crate::lut::Lut;
-use crate::mult::MulFn;
+use crate::mult::{Form, MulFn};
 use crate::util::threadpool;
 
+use super::simd::{self, Isa};
+
 /// K-block size for the optimized engines: keeps the active x block and
-/// accumulator row in L1 while streaming weight rows.
+/// accumulator row in L1 while streaming weight rows. Every optimized
+/// kernel uses the same blocking — one reduction-order story.
 const BLOCK_K: usize = 64;
 
 // ---------------------------------------------------------------------------
@@ -56,6 +78,21 @@ pub fn fp32_opt(
     threads: usize,
     out: &mut [f32],
 ) {
+    fp32_opt_with(x, m, k, w, n, threads, simd::isa(), out);
+}
+
+/// [`fp32_opt`] with an explicit ISA tier (A/B tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn fp32_opt_with(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    threads: usize,
+    isa: Isa,
+    out: &mut [f32],
+) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(out.len(), m * n);
@@ -67,11 +104,7 @@ pub fn fp32_opt(
         for k0 in (0..k).step_by(BLOCK_K) {
             let k1 = (k0 + BLOCK_K).min(k);
             for ki in k0..k1 {
-                let xv = xrow[ki];
-                let wrow = &w[ki * n..(ki + 1) * n];
-                for (o, &wv) in row.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
+                simd::axpy_f32(isa, xrow[ki], &w[ki * n..(ki + 1) * n], row);
             }
         }
     });
@@ -98,8 +131,8 @@ pub fn lut_naive(xq: &[i32], m: usize, k: usize, wq: &[i32], n: usize, lut: &Lut
     }
 }
 
-/// Optimized LUT GEMM: threaded over rows, LUT row hoisted per (m,k), unit
-/// stride inner loop over weights + accumulators.
+/// Optimized LUT GEMM: threaded over rows, LUT row hoisted per (m,k),
+/// vectorized gather + i64-widening accumulation in the inner step.
 pub fn lut_opt(
     xq: &[i32],
     m: usize,
@@ -108,6 +141,22 @@ pub fn lut_opt(
     n: usize,
     lut: &Lut,
     threads: usize,
+    out: &mut [i64],
+) {
+    lut_opt_with(xq, m, k, wq, n, lut, threads, simd::isa(), out);
+}
+
+/// [`lut_opt`] with an explicit ISA tier (A/B tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_opt_with(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    lut: &Lut,
+    threads: usize,
+    isa: Isa,
     out: &mut [i64],
 ) {
     assert_eq!(xq.len(), m * k);
@@ -125,15 +174,7 @@ pub fn lut_opt(
                 // One LUT row per (m, k): the gather base the paper keeps
                 // in a register for vpgatherdd.
                 let lrow = lut.row(xrow[ki]);
-                let wrow = &wq[ki * n..(ki + 1) * n];
-                for (o, &wv) in row.iter_mut().zip(wrow) {
-                    *o += unsafe {
-                        // SAFETY: wv is a quantized value in [-half, half-1]
-                        // by construction (quantize_slice clamps), so
-                        // wv + half indexes inside the 2^bits row.
-                        *lrow.get_unchecked((wv + half) as usize)
-                    } as i64;
-                }
+                simd::lut_row1_i64(isa, lrow, half, &wq[ki * n..(ki + 1) * n], row);
             }
         }
     });
@@ -142,7 +183,7 @@ pub fn lut_opt(
 /// Fastest LUT GEMM: weights pre-converted to *biased* u16 LUT indices at
 /// plan-build time (one add removed from every product), i32 accumulators
 /// (safe: |product| <= 2^14 at 8-bit, K < 2^17 in the zoo), row-paired so
-/// each weight index is loaded once and used for two output rows.
+/// each weight index is loaded once and used for four output rows.
 ///
 /// This is the §Perf-pass kernel; `lut_opt` is kept for the generic i64
 /// path and as the before/after comparison point.
@@ -154,6 +195,22 @@ pub fn lut_opt_biased(
     n: usize,
     lut: &Lut,
     threads: usize,
+    out: &mut [i32],
+) {
+    lut_opt_biased_with(xq, m, k, wq_biased, n, lut, threads, simd::isa(), out);
+}
+
+/// [`lut_opt_biased`] with an explicit ISA tier (A/B tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn lut_opt_biased_with(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq_biased: &[u16],
+    n: usize,
+    lut: &Lut,
+    threads: usize,
+    isa: Isa,
     out: &mut [i32],
 ) {
     assert_eq!(xq.len(), m * k);
@@ -174,39 +231,123 @@ pub fn lut_opt_biased(
             let x1 = &xq[(m0 + 1) * k..(m0 + 2) * k];
             let x2 = &xq[(m0 + 2) * k..(m0 + 3) * k];
             let x3 = &xq[(m0 + 3) * k..(m0 + 4) * k];
-            for ki in 0..k {
-                // One LUT row per x value; the shared weight-index stream
-                // is loaded once and feeds four accumulator rows (ILP).
-                let l0 = lut.row(x0[ki]);
-                let l1 = lut.row(x1[ki]);
-                let l2 = lut.row(x2[ki]);
-                let l3 = lut.row(x3[ki]);
-                let wrow = &wq_biased[ki * n..(ki + 1) * n];
-                for (j, &wi) in wrow.iter().enumerate() {
-                    let wi = wi as usize;
-                    // SAFETY: wi < 2^bits by construction (quantize clamps
-                    // to ±qmax, bias adds 2^(bits-1)); j < n == row length.
-                    unsafe {
-                        *r0.get_unchecked_mut(j) += *l0.get_unchecked(wi);
-                        *r1.get_unchecked_mut(j) += *l1.get_unchecked(wi);
-                        *r2.get_unchecked_mut(j) += *l2.get_unchecked(wi);
-                        *r3.get_unchecked_mut(j) += *l3.get_unchecked(wi);
-                    }
+            for k0 in (0..k).step_by(BLOCK_K) {
+                let k1 = (k0 + BLOCK_K).min(k);
+                for ki in k0..k1 {
+                    // One LUT row per x value; the shared weight-index
+                    // stream is loaded once and feeds four accumulator
+                    // rows (ILP / one gather-index widen per 4 rows).
+                    let l0 = lut.row(x0[ki]);
+                    let l1 = lut.row(x1[ki]);
+                    let l2 = lut.row(x2[ki]);
+                    let l3 = lut.row(x3[ki]);
+                    let wrow = &wq_biased[ki * n..(ki + 1) * n];
+                    simd::lut_rows4(isa, l0, l1, l2, l3, wrow, r0, r1, r2, r3);
                 }
             }
         } else {
-            // Tail block (< ROWS rows).
+            // Tail block (< ROWS rows): same k-blocking as the main path,
+            // so biased/unbiased kernels share one reduction-order story.
             for r in 0..rows {
                 let xrow = &xq[(m0 + r) * k..(m0 + r + 1) * k];
                 let orow = &mut chunk[r * n..(r + 1) * n];
-                for ki in 0..k {
-                    let l0 = lut.row(xrow[ki]);
-                    let wrow = &wq_biased[ki * n..(ki + 1) * n];
-                    for (o0, &wi) in orow.iter_mut().zip(wrow) {
-                        unsafe {
-                            *o0 += *l0.get_unchecked(wi as usize);
-                        }
+                for k0 in (0..k).step_by(BLOCK_K) {
+                    let k1 = (k0 + BLOCK_K).min(k);
+                    for ki in k0..k1 {
+                        let lrow = lut.row(xrow[ki]);
+                        let wrow = &wq_biased[ki * n..(ki + 1) * n];
+                        simd::lut_row1_i32(isa, lrow, wrow, orow);
                     }
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form ACU (kernel-compilation tier)
+// ---------------------------------------------------------------------------
+
+/// Closed-form ACU GEMM with i32 accumulation: the branchless bit-op
+/// lowering of a [`Form`] family — no LUT touched, no function-pointer
+/// call per product. Bit-identical to `lut_naive`/`lut_opt*` over the
+/// same ACU (the LUT is generated from the same model). 8-bit operands
+/// only (i32 accumulator contract, as `lut_opt_biased`).
+#[allow(clippy::too_many_arguments)]
+pub fn cf_opt_i32(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    form: Form,
+    threads: usize,
+    out: &mut [i32],
+) {
+    cf_opt_i32_with(xq, m, k, wq, n, form, threads, simd::isa(), out);
+}
+
+/// [`cf_opt_i32`] with an explicit ISA tier (A/B tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn cf_opt_i32_with(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    form: Form,
+    threads: usize,
+    isa: Isa,
+    out: &mut [i32],
+) {
+    assert!(form.is_closed(), "opaque ACU has no closed-form kernel");
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let rows: Vec<&mut [i32]> = out.chunks_mut(n).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
+        row.fill(0);
+        let xrow = &xq[mi * k..(mi + 1) * k];
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for ki in k0..k1 {
+                simd::cf_row_i32(isa, form, xrow[ki], &wq[ki * n..(ki + 1) * n], row);
+            }
+        }
+    });
+}
+
+/// Closed-form ACU GEMM with i64 accumulation — the wide-operand twin of
+/// [`cf_opt_i32`] used for 12-bit functional plans. The inner body is the
+/// branchless scalar [`Form::mul_i64`] (i64 lanes halve SIMD width and
+/// the win over the bit-op scalar body is marginal; correctness first).
+pub fn cf_opt_i64(
+    xq: &[i32],
+    m: usize,
+    k: usize,
+    wq: &[i32],
+    n: usize,
+    form: Form,
+    threads: usize,
+    out: &mut [i64],
+) {
+    assert!(form.is_closed(), "opaque ACU has no closed-form kernel");
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let rows: Vec<&mut [i64]> = out.chunks_mut(n).collect();
+    let mut rows = rows;
+    threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
+        row.fill(0);
+        let xrow = &xq[mi * k..(mi + 1) * k];
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for ki in k0..k1 {
+                let xv = xrow[ki] as i64;
+                let wrow = &wq[ki * n..(ki + 1) * n];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += form.mul_i64(xv, wv as i64);
                 }
             }
         }
@@ -220,8 +361,9 @@ pub fn lut_opt_biased(
 /// C (m, k) = A (m, n) @ Bᵀ where B is (k, n) row-major — the input-grad
 /// GEMM of the STE backward (`dX = dY @ Ŵᵀ`) without materializing the
 /// transpose. Both inner operands stream with unit stride. Row-parallel
-/// over m; bit-deterministic at any thread count (each output row is one
-/// worker's sequential dot products).
+/// over m; each dot product uses the fixed 8-lane striped reduction of
+/// [`simd::dot_f32`], so outputs are bit-identical at any thread count
+/// and ISA tier.
 pub fn fp32_a_bt(
     a: &[f32],
     m: usize,
@@ -229,6 +371,21 @@ pub fn fp32_a_bt(
     b: &[f32],
     k: usize,
     threads: usize,
+    out: &mut [f32],
+) {
+    fp32_a_bt_with(a, m, n, b, k, threads, simd::isa(), out);
+}
+
+/// [`fp32_a_bt`] with an explicit ISA tier (A/B tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn fp32_a_bt_with(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    b: &[f32],
+    k: usize,
+    threads: usize,
+    isa: Isa,
     out: &mut [f32],
 ) {
     assert_eq!(a.len(), m * n);
@@ -239,20 +396,16 @@ pub fn fp32_a_bt(
     threadpool::parallel_map_into(&mut rows, threads, |mi, row| {
         let arow = &a[mi * n..(mi + 1) * n];
         for (ki, o) in row.iter_mut().enumerate() {
-            let brow = &b[ki * n..(ki + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *o = acc;
+            *o = simd::dot_f32(isa, arow, &b[ki * n..(ki + 1) * n]);
         }
     });
 }
 
 /// C (k, n) = Aᵀ @ B where A is (m, k) and B is (m, n), both row-major —
 /// the weight-grad GEMM of the STE backward (`dW = X̂ᵀ @ dY`) without
-/// materializing the transpose. Row-parallel over k (each worker owns
-/// whole output rows), deterministic at any thread count.
+/// materializing the transpose. Row-parallel over k with the shared
+/// m-blocking; per-element accumulation chains keep the scalar order, so
+/// outputs are bit-identical at any thread count and ISA tier.
 pub fn fp32_at_b(
     a: &[f32],
     m: usize,
@@ -262,6 +415,21 @@ pub fn fp32_at_b(
     threads: usize,
     out: &mut [f32],
 ) {
+    fp32_at_b_with(a, m, k, b, n, threads, simd::isa(), out);
+}
+
+/// [`fp32_at_b`] with an explicit ISA tier (A/B tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn fp32_at_b_with(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    threads: usize,
+    isa: Isa,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     assert_eq!(out.len(), k * n);
@@ -269,11 +437,10 @@ pub fn fp32_at_b(
     let mut rows = rows;
     threadpool::parallel_map_into(&mut rows, threads, |ki, row| {
         row.fill(0.0);
-        for mi in 0..m {
-            let av = a[mi * k + ki];
-            let brow = &b[mi * n..(mi + 1) * n];
-            for (o, &bv) in row.iter_mut().zip(brow) {
-                *o += av * bv;
+        for m0 in (0..m).step_by(BLOCK_K) {
+            let m1 = (m0 + BLOCK_K).min(m);
+            for mi in m0..m1 {
+                simd::axpy_f32(isa, a[mi * k + ki], &b[mi * n..(mi + 1) * n], row);
             }
         }
     });
@@ -307,7 +474,9 @@ pub fn func_naive(
     }
 }
 
-/// Optimized functional GEMM: threaded, k-blocked, unit-stride inner loop.
+/// Optimized functional GEMM: threaded, k-blocked, unit-stride inner loop
+/// over an opaque [`MulFn`]. Closed-form families should use
+/// [`cf_opt_i64`] instead (no indirect call per product).
 pub fn func_opt(
     xq: &[i32],
     m: usize,
@@ -399,6 +568,39 @@ mod tests {
             lut_opt_biased(&xq, m, k, &wb, n, &lut, 2, &mut b);
             assert_eq!(a, b.iter().map(|&v| v as i64).collect::<Vec<_>>(), "{m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn cf_opt_matches_lut_naive() {
+        // The closed-form tier must agree bit-for-bit with the LUT of the
+        // same model, for both symmetric and floor-trunc families.
+        let mut rng = Rng::new(78);
+        for acu in ["drum8_4", "mul8s_1l2h_like", "comp_trunc_out8_6"] {
+            let m8 = mult::get(acu).unwrap();
+            let lut = Lut::generate(m8);
+            let (m, k, n) = (9, 41, 14);
+            let xq = rand_q(&mut rng, m * k, 128);
+            let wq = rand_q(&mut rng, k * n, 128);
+            let mut a = vec![0i64; m * n];
+            let mut b = vec![0i32; m * n];
+            lut_naive(&xq, m, k, &wq, n, &lut, &mut a);
+            cf_opt_i32(&xq, m, k, &wq, n, m8.form, 2, &mut b);
+            assert_eq!(a, b.iter().map(|&v| v as i64).collect::<Vec<_>>(), "{acu}");
+        }
+    }
+
+    #[test]
+    fn cf_opt_i64_matches_func_opt_at_12bit() {
+        let m12 = mult::get("mul12s_2km_like").unwrap();
+        let mut rng = Rng::new(79);
+        let (m, k, n) = (4, 70, 6);
+        let xq = rand_q(&mut rng, m * k, 2048);
+        let wq = rand_q(&mut rng, k * n, 2048);
+        let mut a = vec![0i64; m * n];
+        let mut b = vec![0i64; m * n];
+        func_opt(&xq, m, k, &wq, n, m12.fun, 2, &mut a);
+        cf_opt_i64(&xq, m, k, &wq, n, m12.form, 2, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -5,8 +5,31 @@
 //! * [`Style::Naive`] — the paper's *baseline* approximate implementation:
 //!   scalar LUT lookups, no blocking, no threads.
 //! * [`Style::Optimized`] — the paper's AdaPT CPU design: threadpool
-//!   row-parallelism (§4.2) + hoisted-row LUT gathers with unit-stride
-//!   inner loops (§4.3) + buffer reuse (§4.1).
+//!   row-parallelism (§4.2) + cache-blocked, SIMD-dispatched kernels
+//!   (§4.3) + buffer reuse (§4.1).
+//!
+//! ## Kernel dispatch tiers
+//!
+//! The optimized engine selects its inner loops at two levels:
+//!
+//! 1. **Per layer (plan-time):** an ACU whose family has a closed form
+//!    ([`crate::mult::Form`] — truncation, perforation, DRUM…) compiles to
+//!    a *branchless bit-op kernel* that never touches a LUT
+//!    ([`gemm::cf_opt_i32`]/[`gemm::cf_opt_i64`]); opaque ACUs (Mitchell,
+//!    file-only LUTs) take the *vectorized-gather* LUT kernels. Mixed-ACU
+//!    plans therefore pick the best kernel per node.
+//! 2. **Per process (run-time):** [`simd::isa`] detects AVX2 (x86_64) or
+//!    NEON (aarch64) once and every kernel dispatches to that tier, with
+//!    the scalar bodies as the portable fallback (`ADAPT_NO_SIMD=1`
+//!    forces them).
+//!
+//! **Determinism contract:** all tiers share one k-blocked reduction
+//! order, so scalar/SIMD/closed-form kernels produce bit-identical
+//! outputs at any `ADAPT_THREADS` value (see [`gemm`] docs and
+//! `tests/kernel_equivalence.rs`). Adding a closed-form family =
+//! a [`crate::mult::Form`] variant + scalar body (there) + vector body in
+//! [`simd`]; the registry test and equivalence suite pin it to the
+//! reference model.
 //!
 //! The third Table-4 column ("AdaPT", ours via XLA) runs through
 //! [`crate::runtime`] instead: the same graph AOT-lowered with the Pallas
@@ -20,5 +43,6 @@
 
 pub mod exec;
 pub mod gemm;
+pub mod simd;
 
 pub use exec::{Executor, PreparedWeights, ScratchArena, Style, Value};

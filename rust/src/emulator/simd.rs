@@ -1,0 +1,850 @@
+//! Runtime-dispatched SIMD inner loops for the GEMM kernels (§4).
+//!
+//! [`gemm`](crate::emulator::gemm) owns the loop nests (row-parallelism,
+//! k-blocking, row-pairing); this module owns the innermost step, in three
+//! tiers selected once per process by [`isa`]:
+//!
+//! * **AVX2** (x86_64, runtime-detected): 8-lane `vpgatherdd` into the
+//!   LUT rows with i32/i64-lane accumulation — the instruction the paper's
+//!   §4 vectorization is built around — plus 8-lane branchless bodies for
+//!   the closed-form ACU families and 8-lane f32 axpy/dot.
+//! * **NEON** (aarch64 baseline): no vector gather exists, so the LUT
+//!   kernels keep the scalar body there; the closed-form and f32 loops get
+//!   4-lane vector bodies.
+//! * **Scalar**: the portable fallback, also forced by `ADAPT_NO_SIMD=1`
+//!   (the CI portability leg).
+//!
+//! **Determinism contract:** for the integer kernels every tier performs
+//! the same adds in a different order only — integer addition is
+//! associative, so outputs are bit-identical by construction. For the f32
+//! kernels order matters, so the scalar bodies here mirror the vector
+//! schedule exactly: `axpy_f32` keeps one accumulation chain per output
+//! element (order-preserving under lane-splitting), and `dot_f32` uses a
+//! fixed 8-lane striped reduction in *all* tiers (8 partial sums over k,
+//! folded left, then the tail). Every helper takes its [`Isa`] explicitly
+//! so A/B tests and benches can force tiers; production callers pass
+//! [`isa()`].
+
+use std::sync::OnceLock;
+
+use crate::mult::Form;
+
+/// Instruction set the dispatched inner loops run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar bodies (always available).
+    Scalar,
+    /// AVX2 8-lane integer/f32 bodies with `vpgatherdd` LUT gathers.
+    Avx2,
+    /// NEON 4-lane closed-form/f32 bodies (LUT stays scalar: no gather).
+    Neon,
+}
+
+static ISA: OnceLock<Isa> = OnceLock::new();
+
+/// The tier the kernels dispatch to, detected once per process.
+/// `ADAPT_NO_SIMD=1` forces [`Isa::Scalar`].
+pub fn isa() -> Isa {
+    *ISA.get_or_init(detect)
+}
+
+fn detect() -> Isa {
+    if std::env::var("ADAPT_NO_SIMD").as_deref() == Ok("1") {
+        return Isa::Scalar;
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Isa {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Isa {
+    Isa::Scalar
+}
+
+/// Per-family `(x-mask, w-mask, product-mask, compensation)` constants for
+/// the masked sign-magnitude families (`-1` = identity mask). Shared by
+/// the vector bodies; the scalar tier inlines the same arithmetic via
+/// [`Form::mul_i32`].
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn masked_consts(form: Form) -> (i32, i32, i32, i32) {
+    match form {
+        Form::TruncIn(k) => {
+            let m = !((1i32 << k) - 1);
+            (m, m, -1, 0)
+        }
+        Form::PerfPp(k) => (-1, !((1i32 << k) - 1), -1, 0),
+        Form::TruncOut(k) => (-1, -1, !((1i32 << k) - 1), 0),
+        Form::CompTruncOut(k) => (-1, -1, !((1i32 << k) - 1), 1i32 << (k - 1)),
+        _ => unreachable!("not a masked family"),
+    }
+}
+
+/// Scalar tail for the vector closed-form bodies, from element `from`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn cf_tail(form: Form, xv: i32, wrow: &[i32], acc: &mut [i32], from: usize) {
+    for (o, &wv) in acc[from..].iter_mut().zip(&wrow[from..]) {
+        *o += form.mul_i32(xv, wv);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar tier
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn scalar_lut_rows4(
+    l0: &[i32],
+    l1: &[i32],
+    l2: &[i32],
+    l3: &[i32],
+    wrow: &[u16],
+    r0: &mut [i32],
+    r1: &mut [i32],
+    r2: &mut [i32],
+    r3: &mut [i32],
+) {
+    for (j, &wi) in wrow.iter().enumerate() {
+        let wi = wi as usize;
+        // SAFETY: caller contract (see `lut_rows4`) — wi < LUT row length
+        // by quantization clamping, j < n == accumulator row length.
+        unsafe {
+            *r0.get_unchecked_mut(j) += *l0.get_unchecked(wi);
+            *r1.get_unchecked_mut(j) += *l1.get_unchecked(wi);
+            *r2.get_unchecked_mut(j) += *l2.get_unchecked(wi);
+            *r3.get_unchecked_mut(j) += *l3.get_unchecked(wi);
+        }
+    }
+}
+
+fn scalar_lut_row1_i32(lrow: &[i32], wrow: &[u16], acc: &mut [i32]) {
+    for (o, &wi) in acc.iter_mut().zip(wrow) {
+        // SAFETY: caller contract — biased index < LUT row length.
+        *o += unsafe { *lrow.get_unchecked(wi as usize) };
+    }
+}
+
+fn scalar_lut_row1_i64(lrow: &[i32], half: i32, wrow: &[i32], acc: &mut [i64]) {
+    for (o, &wv) in acc.iter_mut().zip(wrow) {
+        // SAFETY: caller contract — wv in [-half, half-1] by quantization
+        // clamping, so wv + half indexes inside the LUT row.
+        *o += unsafe { *lrow.get_unchecked((wv + half) as usize) } as i64;
+    }
+}
+
+fn scalar_cf_row(form: Form, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+    for (o, &wv) in acc.iter_mut().zip(wrow) {
+        *o += form.mul_i32(xv, wv);
+    }
+}
+
+fn scalar_axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+    for (o, &s) in dst.iter_mut().zip(src) {
+        *o += a * s;
+    }
+}
+
+/// Fixed 8-lane striped dot product — the canonical reduction order every
+/// tier reproduces exactly: lane `l` accumulates elements `c*8 + l`, the
+/// eight lane sums fold left, then the sub-8 tail adds in order.
+fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let n8 = n - n % 8;
+    let mut lanes = [0f32; 8];
+    let mut j = 0;
+    while j < n8 {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane += a[j + l] * b[j + l];
+        }
+        j += 8;
+    }
+    let mut s = 0f32;
+    for lane in lanes {
+        s += lane;
+    }
+    while j < n {
+        s += a[j] * b[j];
+        j += 1;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! 8-lane AVX2 bodies. Every fn here requires AVX2 to be detected at
+    //! runtime plus the same index/length contracts as the scalar bodies;
+    //! fused multiply-add is deliberately never used (it would change f32
+    //! rounding vs the scalar tier and break bit-exactness).
+
+    use super::{cf_tail, masked_consts};
+    use crate::mult::Form;
+    use std::arch::x86_64::*;
+
+    /// Widen 8 biased u16 LUT indices to i32 gather lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_idx8(p: *const u16) -> __m256i {
+        _mm256_cvtepu16_epi32(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// `acc[0..8] += lrow[idx[0..8]]` via vpgatherdd.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather_add(lrow: *const i32, idx: __m256i, accp: *mut i32) {
+        let g = _mm256_i32gather_epi32::<4>(lrow, idx);
+        let a = _mm256_loadu_si256(accp as *const __m256i);
+        _mm256_storeu_si256(accp as *mut __m256i, _mm256_add_epi32(a, g));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut_rows4(
+        l0: &[i32],
+        l1: &[i32],
+        l2: &[i32],
+        l3: &[i32],
+        wrow: &[u16],
+        r0: &mut [i32],
+        r1: &mut [i32],
+        r2: &mut [i32],
+        r3: &mut [i32],
+    ) {
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let idx = load_idx8(wrow.as_ptr().add(j));
+            gather_add(l0.as_ptr(), idx, r0.as_mut_ptr().add(j));
+            gather_add(l1.as_ptr(), idx, r1.as_mut_ptr().add(j));
+            gather_add(l2.as_ptr(), idx, r2.as_mut_ptr().add(j));
+            gather_add(l3.as_ptr(), idx, r3.as_mut_ptr().add(j));
+            j += 8;
+        }
+        while j < n {
+            let wi = *wrow.get_unchecked(j) as usize;
+            *r0.get_unchecked_mut(j) += *l0.get_unchecked(wi);
+            *r1.get_unchecked_mut(j) += *l1.get_unchecked(wi);
+            *r2.get_unchecked_mut(j) += *l2.get_unchecked(wi);
+            *r3.get_unchecked_mut(j) += *l3.get_unchecked(wi);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut_row1_i32(lrow: &[i32], wrow: &[u16], acc: &mut [i32]) {
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let idx = load_idx8(wrow.as_ptr().add(j));
+            gather_add(lrow.as_ptr(), idx, acc.as_mut_ptr().add(j));
+            j += 8;
+        }
+        while j < n {
+            *acc.get_unchecked_mut(j) += *lrow.get_unchecked(*wrow.get_unchecked(j) as usize);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut_row1_i64(lrow: &[i32], half: i32, wrow: &[i32], acc: &mut [i64]) {
+        let vhalf = _mm256_set1_epi32(half);
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let w = _mm256_loadu_si256(wrow.as_ptr().add(j) as *const __m256i);
+            let idx = _mm256_add_epi32(w, vhalf);
+            let g = _mm256_i32gather_epi32::<4>(lrow.as_ptr(), idx);
+            // Widen the 8 gathered i32 products into 2x4 i64 lanes.
+            let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(g));
+            let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(g));
+            let p0 = acc.as_mut_ptr().add(j);
+            let p1 = acc.as_mut_ptr().add(j + 4);
+            let a0 = _mm256_loadu_si256(p0 as *const __m256i);
+            let a1 = _mm256_loadu_si256(p1 as *const __m256i);
+            _mm256_storeu_si256(p0 as *mut __m256i, _mm256_add_epi64(a0, lo));
+            _mm256_storeu_si256(p1 as *mut __m256i, _mm256_add_epi64(a1, hi));
+            j += 8;
+        }
+        while j < n {
+            let wi = (*wrow.get_unchecked(j) + half) as usize;
+            *acc.get_unchecked_mut(j) += *lrow.get_unchecked(wi) as i64;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn cf_row(form: Form, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        match form {
+            Form::Exact => cf_exact(xv, wrow, acc),
+            Form::TruncIn(_) | Form::PerfPp(_) | Form::TruncOut(_) | Form::CompTruncOut(_) => {
+                cf_masked(form, xv, wrow, acc)
+            }
+            Form::FloorTrunc(k) => cf_floor_trunc(k, xv, wrow, acc),
+            Form::Drum(k) => cf_drum(k, xv, wrow, acc),
+            Form::Opaque => unreachable!("opaque ACU has no closed form"),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn cf_exact(xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let va = _mm256_set1_epi32(xv);
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let w = _mm256_loadu_si256(wrow.as_ptr().add(j) as *const __m256i);
+            let p = _mm256_mullo_epi32(va, w);
+            let ap = acc.as_mut_ptr().add(j);
+            let a = _mm256_loadu_si256(ap as *const __m256i);
+            _mm256_storeu_si256(ap as *mut __m256i, _mm256_add_epi32(a, p));
+            j += 8;
+        }
+        cf_tail(Form::Exact, xv, wrow, acc, j);
+    }
+
+    /// TruncIn / PerfPp / TruncOut / CompTruncOut: masked magnitude
+    /// product with the exact sign re-applied per lane via
+    /// `(p ^ neg) - neg`. (`_mm256_sign_epi32` is NOT usable here: it
+    /// zeroes lanes where the control is zero.)
+    #[target_feature(enable = "avx2")]
+    unsafe fn cf_masked(form: Form, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let (a_mask, b_mask, out_mask, comp) = masked_consts(form);
+        let va = _mm256_set1_epi32(xv.wrapping_abs() & a_mask);
+        let vxneg = _mm256_set1_epi32(xv >> 31);
+        let vbmask = _mm256_set1_epi32(b_mask);
+        let vomask = _mm256_set1_epi32(out_mask);
+        let vcomp = _mm256_set1_epi32(comp);
+        let zero = _mm256_setzero_si256();
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let w = _mm256_loadu_si256(wrow.as_ptr().add(j) as *const __m256i);
+            let wabs = _mm256_and_si256(_mm256_abs_epi32(w), vbmask);
+            let praw = _mm256_mullo_epi32(va, wabs);
+            let pmask = _mm256_and_si256(praw, vomask);
+            // Compensation keys off the untruncated product (praw >= 0).
+            let nz = _mm256_cmpgt_epi32(praw, zero);
+            let p = _mm256_add_epi32(pmask, _mm256_and_si256(nz, vcomp));
+            let wneg = _mm256_cmpgt_epi32(zero, w);
+            let neg = _mm256_xor_si256(wneg, vxneg);
+            let signed = _mm256_sub_epi32(_mm256_xor_si256(p, neg), neg);
+            let ap = acc.as_mut_ptr().add(j);
+            let a = _mm256_loadu_si256(ap as *const __m256i);
+            _mm256_storeu_si256(ap as *mut __m256i, _mm256_add_epi32(a, signed));
+            j += 8;
+        }
+        cf_tail(form, xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn cf_floor_trunc(k: u32, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let va = _mm256_set1_epi32(xv);
+        let cnt = _mm_cvtsi32_si128(k as i32);
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let w = _mm256_loadu_si256(wrow.as_ptr().add(j) as *const __m256i);
+            let p = _mm256_mullo_epi32(va, w);
+            // Two's-complement floor: arithmetic shift right then left.
+            let t = _mm256_sll_epi32(_mm256_sra_epi32(p, cnt), cnt);
+            let ap = acc.as_mut_ptr().add(j);
+            let a = _mm256_loadu_si256(ap as *const __m256i);
+            _mm256_storeu_si256(ap as *mut __m256i, _mm256_add_epi32(a, t));
+            j += 8;
+        }
+        cf_tail(Form::FloorTrunc(k), xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn cf_drum(k: u32, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        // The x operand reduces once per row (scalar); the weight lanes
+        // reduce vectorized: floor_log2 via the f32 exponent field (exact
+        // for magnitudes < 2^24), per-lane variable shifts for the
+        // keep-top-k + trailing-one reduction.
+        let va = _mm256_set1_epi32(crate::mult::drum_reduce_i32(xv.wrapping_abs(), k));
+        let vxneg = _mm256_set1_epi32(xv >> 31);
+        let ones = _mm256_set1_epi32(1);
+        let vkm1 = _mm256_set1_epi32(k as i32 - 1);
+        let bias = _mm256_set1_epi32(127);
+        let zero = _mm256_setzero_si256();
+        let n = wrow.len();
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let w = _mm256_loadu_si256(wrow.as_ptr().add(j) as *const __m256i);
+            let wabs = _mm256_abs_epi32(w);
+            let f = _mm256_cvtepi32_ps(_mm256_or_si256(wabs, ones));
+            let ex = _mm256_sub_epi32(_mm256_srli_epi32::<23>(_mm256_castps_si256(f)), bias);
+            let t = _mm256_max_epi32(_mm256_sub_epi32(ex, vkm1), zero);
+            let top = _mm256_sllv_epi32(_mm256_srlv_epi32(wabs, t), t);
+            let half = _mm256_srli_epi32::<1>(_mm256_sllv_epi32(ones, t));
+            let rb = _mm256_or_si256(top, half);
+            let p = _mm256_mullo_epi32(va, rb);
+            let wneg = _mm256_cmpgt_epi32(zero, w);
+            let neg = _mm256_xor_si256(wneg, vxneg);
+            let signed = _mm256_sub_epi32(_mm256_xor_si256(p, neg), neg);
+            let ap = acc.as_mut_ptr().add(j);
+            let a = _mm256_loadu_si256(ap as *const __m256i);
+            _mm256_storeu_si256(ap as *mut __m256i, _mm256_add_epi32(a, signed));
+            j += 8;
+        }
+        cf_tail(Form::Drum(k), xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+        let va = _mm256_set1_ps(a);
+        let n = src.len().min(dst.len());
+        let n8 = n - n % 8;
+        let mut j = 0;
+        while j < n8 {
+            let s = _mm256_loadu_ps(src.as_ptr().add(j));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+            // mul then add (never fmadd): matches scalar rounding exactly.
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, _mm256_mul_ps(va, s)));
+            j += 8;
+        }
+        while j < n {
+            *dst.get_unchecked_mut(j) += a * *src.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let n8 = n - n % 8;
+        let mut vacc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j < n8 {
+            let x = _mm256_loadu_ps(a.as_ptr().add(j));
+            let y = _mm256_loadu_ps(b.as_ptr().add(j));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(x, y));
+            j += 8;
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+        let mut s = 0f32;
+        for lane in lanes {
+            s += lane;
+        }
+        while j < n {
+            s += *a.get_unchecked(j) * *b.get_unchecked(j);
+            j += 1;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON tier
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! 4-lane NEON bodies (closed-form + f32 only; no vector gather on
+    //! NEON, so the LUT kernels stay scalar on aarch64). `dot` keeps the
+    //! canonical 8-lane stripe as two 4-lane accumulators so all tiers
+    //! reduce in the same order.
+
+    use super::{cf_tail, masked_consts};
+    use crate::mult::Form;
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cf_row(form: Form, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        match form {
+            Form::Exact => cf_exact(xv, wrow, acc),
+            Form::TruncIn(_) | Form::PerfPp(_) | Form::TruncOut(_) | Form::CompTruncOut(_) => {
+                cf_masked(form, xv, wrow, acc)
+            }
+            Form::FloorTrunc(k) => cf_floor_trunc(k, xv, wrow, acc),
+            Form::Drum(k) => cf_drum(k, xv, wrow, acc),
+            Form::Opaque => unreachable!("opaque ACU has no closed form"),
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn cf_exact(xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let va = vdupq_n_s32(xv);
+        let n = wrow.len();
+        let n4 = n - n % 4;
+        let mut j = 0;
+        while j < n4 {
+            let w = vld1q_s32(wrow.as_ptr().add(j));
+            let a = vld1q_s32(acc.as_ptr().add(j));
+            vst1q_s32(acc.as_mut_ptr().add(j), vaddq_s32(a, vmulq_s32(va, w)));
+            j += 4;
+        }
+        cf_tail(Form::Exact, xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn cf_masked(form: Form, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let (a_mask, b_mask, out_mask, comp) = masked_consts(form);
+        let va = vdupq_n_s32(xv.wrapping_abs() & a_mask);
+        let vxneg = vdupq_n_s32(xv >> 31);
+        let vbmask = vdupq_n_s32(b_mask);
+        let vomask = vdupq_n_s32(out_mask);
+        let vcomp = vdupq_n_s32(comp);
+        let zero = vdupq_n_s32(0);
+        let n = wrow.len();
+        let n4 = n - n % 4;
+        let mut j = 0;
+        while j < n4 {
+            let w = vld1q_s32(wrow.as_ptr().add(j));
+            let wabs = vandq_s32(vabsq_s32(w), vbmask);
+            let praw = vmulq_s32(va, wabs);
+            let pmask = vandq_s32(praw, vomask);
+            let nz = vreinterpretq_s32_u32(vcgtq_s32(praw, zero));
+            let p = vaddq_s32(pmask, vandq_s32(nz, vcomp));
+            let wneg = vreinterpretq_s32_u32(vcltq_s32(w, zero));
+            let neg = veorq_s32(wneg, vxneg);
+            let signed = vsubq_s32(veorq_s32(p, neg), neg);
+            let a = vld1q_s32(acc.as_ptr().add(j));
+            vst1q_s32(acc.as_mut_ptr().add(j), vaddq_s32(a, signed));
+            j += 4;
+        }
+        cf_tail(form, xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn cf_floor_trunc(k: u32, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let va = vdupq_n_s32(xv);
+        // Negative shift count = arithmetic shift right for signed lanes.
+        let down = vdupq_n_s32(-(k as i32));
+        let up = vdupq_n_s32(k as i32);
+        let n = wrow.len();
+        let n4 = n - n % 4;
+        let mut j = 0;
+        while j < n4 {
+            let w = vld1q_s32(wrow.as_ptr().add(j));
+            let p = vmulq_s32(va, w);
+            let t = vshlq_s32(vshlq_s32(p, down), up);
+            let a = vld1q_s32(acc.as_ptr().add(j));
+            vst1q_s32(acc.as_mut_ptr().add(j), vaddq_s32(a, t));
+            j += 4;
+        }
+        cf_tail(Form::FloorTrunc(k), xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn cf_drum(k: u32, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+        let va = vdupq_n_s32(crate::mult::drum_reduce_i32(xv.wrapping_abs(), k));
+        let vxneg = vdupq_n_s32(xv >> 31);
+        let ones = vdupq_n_s32(1);
+        let vkm1 = vdupq_n_s32(k as i32 - 1);
+        let bias = vdupq_n_s32(127);
+        let zero = vdupq_n_s32(0);
+        let n = wrow.len();
+        let n4 = n - n % 4;
+        let mut j = 0;
+        while j < n4 {
+            let w = vld1q_s32(wrow.as_ptr().add(j));
+            let wabs = vabsq_s32(w);
+            // floor_log2 via the f32 exponent (exact for |w| < 2^24).
+            let f = vcvtq_f32_s32(vorrq_s32(wabs, ones));
+            let ex = vsubq_s32(vshrq_n_s32::<23>(vreinterpretq_s32_f32(f)), bias);
+            let t = vmaxq_s32(vsubq_s32(ex, vkm1), zero);
+            let top = vshlq_s32(vshlq_s32(wabs, vnegq_s32(t)), t);
+            let half = vshrq_n_s32::<1>(vshlq_s32(ones, t));
+            let rb = vorrq_s32(top, half);
+            let p = vmulq_s32(va, rb);
+            let wneg = vreinterpretq_s32_u32(vcltq_s32(w, zero));
+            let neg = veorq_s32(wneg, vxneg);
+            let signed = vsubq_s32(veorq_s32(p, neg), neg);
+            let a = vld1q_s32(acc.as_ptr().add(j));
+            vst1q_s32(acc.as_mut_ptr().add(j), vaddq_s32(a, signed));
+            j += 4;
+        }
+        cf_tail(Form::Drum(k), xv, wrow, acc, j);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+        let va = vdupq_n_f32(a);
+        let n = src.len().min(dst.len());
+        let n4 = n - n % 4;
+        let mut j = 0;
+        while j < n4 {
+            let s = vld1q_f32(src.as_ptr().add(j));
+            let d = vld1q_f32(dst.as_ptr().add(j));
+            // mul then add (never fma): matches scalar rounding exactly.
+            vst1q_f32(dst.as_mut_ptr().add(j), vaddq_f32(d, vmulq_f32(va, s)));
+            j += 4;
+        }
+        while j < n {
+            *dst.get_unchecked_mut(j) += a * *src.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let n8 = n - n % 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut j = 0;
+        while j < n8 {
+            let x0 = vld1q_f32(a.as_ptr().add(j));
+            let y0 = vld1q_f32(b.as_ptr().add(j));
+            acc0 = vaddq_f32(acc0, vmulq_f32(x0, y0));
+            let x1 = vld1q_f32(a.as_ptr().add(j + 4));
+            let y1 = vld1q_f32(b.as_ptr().add(j + 4));
+            acc1 = vaddq_f32(acc1, vmulq_f32(x1, y1));
+            j += 8;
+        }
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut s = 0f32;
+        for lane in lanes {
+            s += lane;
+        }
+        while j < n {
+            s += *a.get_unchecked(j) * *b.get_unchecked(j);
+            j += 1;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Four output rows accumulate LUT gathers off one shared biased
+/// weight-index stream (the inner step of `gemm::lut_opt_biased`).
+///
+/// Caller contract (unchecked, as throughout the hot path): every index in
+/// `wrow` is inside all four LUT rows and `r0..r3` are at least
+/// `wrow.len()` long — guaranteed by plan-build quantization, which clamps
+/// to ±qmax before biasing.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn lut_rows4(
+    isa: Isa,
+    l0: &[i32],
+    l1: &[i32],
+    l2: &[i32],
+    l3: &[i32],
+    wrow: &[u16],
+    r0: &mut [i32],
+    r1: &mut [i32],
+    r2: &mut [i32],
+    r3: &mut [i32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only produced after runtime feature
+        // detection; index/length contract is the caller's (doc above).
+        unsafe { avx2::lut_rows4(l0, l1, l2, l3, wrow, r0, r1, r2, r3) };
+        return;
+    }
+    let _ = isa;
+    scalar_lut_rows4(l0, l1, l2, l3, wrow, r0, r1, r2, r3);
+}
+
+/// Single-row variant of [`lut_rows4`] (tail rows). Same contract.
+#[inline]
+pub fn lut_row1_i32(isa: Isa, lrow: &[i32], wrow: &[u16], acc: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: as in `lut_rows4`.
+        unsafe { avx2::lut_row1_i32(lrow, wrow, acc) };
+        return;
+    }
+    let _ = isa;
+    scalar_lut_row1_i32(lrow, wrow, acc);
+}
+
+/// i64-accumulating gather step over *unbiased* quantized weights
+/// (`gemm::lut_opt`): gathers `lrow[wv + half]`, widens, accumulates.
+/// Contract: every `wv + half` is inside `lrow`, `acc.len() >= wrow.len()`.
+#[inline]
+pub fn lut_row1_i64(isa: Isa, lrow: &[i32], half: i32, wrow: &[i32], acc: &mut [i64]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: as in `lut_rows4`.
+        unsafe { avx2::lut_row1_i64(lrow, half, wrow, acc) };
+        return;
+    }
+    let _ = isa;
+    scalar_lut_row1_i64(lrow, half, wrow, acc);
+}
+
+/// Closed-form inner step: `acc[j] += form.mul(xv, wrow[j])` with the
+/// branchless family bodies vectorized. `form` must satisfy
+/// [`Form::is_closed`].
+#[inline]
+pub fn cf_row_i32(isa: Isa, form: Form, xv: i32, wrow: &[i32], acc: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only produced after runtime detection; the
+        // body only touches the overlapping prefix of wrow/acc.
+        unsafe { avx2::cf_row(form, xv, wrow, acc) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::cf_row(form, xv, wrow, acc) };
+        return;
+    }
+    let _ = isa;
+    scalar_cf_row(form, xv, wrow, acc);
+}
+
+/// `dst[j] += a * src[j]` — the fp32 GEMM inner step. Per-element
+/// accumulation chains are independent, so lane-splitting preserves the
+/// scalar order exactly (bit-identical across tiers).
+#[inline]
+pub fn axpy_f32(isa: Isa, a: f32, src: &[f32], dst: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only produced after runtime detection; the
+        // body only touches the overlapping prefix of src/dst.
+        unsafe { avx2::axpy(a, src, dst) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::axpy(a, src, dst) };
+        return;
+    }
+    let _ = isa;
+    scalar_axpy(a, src, dst);
+}
+
+/// Dot product in the fixed 8-lane striped reduction order (see module
+/// docs) — bit-identical across all tiers by construction.
+#[inline]
+pub fn dot_f32(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only produced after runtime detection.
+        return unsafe { avx2::dot(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { neon::dot(a, b) };
+    }
+    let _ = isa;
+    scalar_dot(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn detect_returns_some_tier() {
+        // Smoke: detection is stable and cached.
+        assert_eq!(isa(), isa());
+    }
+
+    #[test]
+    fn cf_row_all_tiers_match_scalar_for_every_closed_form() {
+        let mut rng = Rng::new(3);
+        let active = isa();
+        for m in mult::REGISTRY {
+            if !m.form.is_closed() {
+                continue;
+            }
+            let half = 1i64 << (m.bits - 1);
+            for n in [1usize, 5, 8, 17, 64, 100] {
+                let wrow: Vec<i32> = (0..n).map(|_| rng.range_i64(-half, half) as i32).collect();
+                for xv in [-half as i32, -37, -1, 0, 1, 19, half as i32 - 1] {
+                    let mut a = vec![0i32; n];
+                    let mut b = vec![0i32; n];
+                    cf_row_i32(active, m.form, xv, &wrow, &mut a);
+                    cf_row_i32(Isa::Scalar, m.form, xv, &wrow, &mut b);
+                    assert_eq!(a, b, "{} n={n} xv={xv} isa={active:?}", m.name);
+                    // And the scalar body is the Form reference itself.
+                    for (j, &wv) in wrow.iter().enumerate() {
+                        assert_eq!(b[j], m.form.mul_i32(xv, wv), "{} {xv}*{wv}", m.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_helpers_match_scalar_tier() {
+        let m8 = mult::get("mitchell8").unwrap();
+        let lut = crate::lut::Lut::generate(m8);
+        let mut rng = Rng::new(4);
+        let active = isa();
+        for n in [1usize, 7, 8, 33, 256] {
+            let wq: Vec<i32> = (0..n).map(|_| rng.range_i64(-128, 128) as i32).collect();
+            let wb: Vec<u16> = wq.iter().map(|&v| (v + 128) as u16).collect();
+            let rows: Vec<&[i32]> = (0..4i32).map(|i| lut.row(-61 + 40 * i)).collect();
+            let mut g0 = vec![0i32; n];
+            let mut g1 = vec![0i32; n];
+            let mut g2 = vec![0i32; n];
+            let mut g3 = vec![0i32; n];
+            lut_rows4(
+                active, rows[0], rows[1], rows[2], rows[3], &wb, &mut g0, &mut g1, &mut g2,
+                &mut g3,
+            );
+            let got = [g0, g1, g2, g3];
+            for (i, row) in rows.iter().enumerate() {
+                let mut want = vec![0i32; n];
+                lut_row1_i32(Isa::Scalar, row, &wb, &mut want);
+                assert_eq!(got[i], want, "rows4 row {i} n={n}");
+                let mut one = vec![0i32; n];
+                lut_row1_i32(active, row, &wb, &mut one);
+                assert_eq!(one, want, "row1_i32 n={n}");
+            }
+            let mut a64 = vec![0i64; n];
+            let mut b64 = vec![0i64; n];
+            lut_row1_i64(active, rows[0], 128, &wq, &mut a64);
+            lut_row1_i64(Isa::Scalar, rows[0], 128, &wq, &mut b64);
+            assert_eq!(a64, b64, "row1_i64 n={n}");
+        }
+    }
+
+    #[test]
+    fn f32_helpers_bit_identical_across_tiers() {
+        let mut rng = Rng::new(5);
+        let active = isa();
+        for n in [1usize, 7, 8, 9, 64, 129] {
+            let a: Vec<f32> = (0..n).map(|_| rng.next_gauss()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_gauss()).collect();
+            let mut d0: Vec<f32> = (0..n).map(|_| rng.next_gauss()).collect();
+            let mut d1 = d0.clone();
+            axpy_f32(active, 1.75, &a, &mut d0);
+            axpy_f32(Isa::Scalar, 1.75, &a, &mut d1);
+            assert_eq!(d0, d1, "axpy n={n}");
+            let s0 = dot_f32(active, &a, &b);
+            let s1 = dot_f32(Isa::Scalar, &a, &b);
+            assert_eq!(s0.to_bits(), s1.to_bits(), "dot n={n}");
+        }
+    }
+}

@@ -32,9 +32,13 @@
 //!   [`graph::ExecutionPlan`] serializes to/from plan JSON, making
 //!   mixed-precision configurations first-class artifacts.
 //! * [`emulator`] — the Table-4 engines: naive scalar *baseline* and the
-//!   blocked, threaded, LUT-gather *optimized* engine (§4). Executes
-//!   heterogeneous per-layer ACU plans with a grow-only scratch arena
-//!   (zero per-layer heap allocations in steady state).
+//!   blocked, threaded *optimized* engine (§4). Kernels dispatch at two
+//!   tiers: per layer, closed-form ACU families compile to branchless
+//!   bit-op inner loops while opaque ACUs take vectorized LUT gathers;
+//!   per process, [`emulator::simd`] picks AVX2/NEON/scalar once (all
+//!   tiers bit-identical at any thread count). Executes heterogeneous
+//!   per-layer ACU plans with a grow-only scratch arena (zero per-layer
+//!   heap allocations in steady state).
 //! * [`data`] — deterministic synthetic datasets (CIFAR/MNIST/IMDB stand-ins).
 //! * [`runtime`] — PJRT artifact loading/execution (the AdaPT fast path;
 //!   stubbed by `rust/vendor/xla` in offline builds).

@@ -120,6 +120,147 @@ pub fn drum(a: i64, b: i64, k: u32) -> i64 {
     sign * (reduce(aa) * reduce(ab))
 }
 
+/// Closed-form descriptor of an ACU — the contract of the emulator's
+/// kernel-compilation layer (`emulator::simd` / `emulator::gemm`).
+///
+/// Families whose product is a short sequence of bit operations carry
+/// their parameters here so the GEMM kernels can lower them to branchless
+/// inner loops that never touch a LUT (the TFApprox "functional" trick).
+/// [`Form::Opaque`] marks models with no such lowering (e.g. Mitchell);
+/// those always go through the LUT/function paths.
+///
+/// Adding a new closed-form family means: a variant here, a branchless
+/// body in [`Form::mul_i32`]/[`Form::mul_i64`] (they must stay bit-exact
+/// vs the reference [`MulFn`] — see the `form_matches_fun` test), and a
+/// vector body in `emulator::simd::cf_row_i32`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Form {
+    /// No closed form; LUT or behavioral function only.
+    Opaque,
+    Exact,
+    /// [`trunc_in`] with k masked magnitude LSBs per operand.
+    TruncIn(u32),
+    /// [`perf_pp`] with k perforated rows (weight-operand mask).
+    PerfPp(u32),
+    /// [`trunc_out`] with k zeroed product LSBs.
+    TruncOut(u32),
+    /// [`comp_trunc_out`]: truncation plus midpoint compensation.
+    CompTruncOut(u32),
+    /// [`floor_trunc`]: two's-complement arithmetic-shift truncation.
+    FloorTrunc(u32),
+    /// [`drum`] keeping k leading magnitude bits per operand.
+    Drum(u32),
+}
+
+/// Branchless DRUM operand reduction on a nonnegative magnitude: keep the
+/// k leading bits, set the trailing-one unbiasing bit. `x == 0` and the
+/// no-truncation case (`t == 0`) fall out of the arithmetic with no
+/// branches: `(x | 1)` pins `leading_zeros` and `(1 << 0) >> 1 == 0`.
+#[inline(always)]
+pub fn drum_reduce_i32(x: i32, k: u32) -> i32 {
+    let lx = 31 - (x | 1).leading_zeros();
+    let t = lx.saturating_sub(k - 1);
+    ((x >> t) << t) | ((1i32 << t) >> 1)
+}
+
+/// 64-bit twin of [`drum_reduce_i32`].
+#[inline(always)]
+pub fn drum_reduce_i64(x: i64, k: u32) -> i64 {
+    let lx = 63 - (x | 1).leading_zeros();
+    let t = lx.saturating_sub(k - 1);
+    ((x >> t) << t) | ((1i64 << t) >> 1)
+}
+
+impl Form {
+    /// Whether a branchless closed-form kernel exists for this ACU.
+    pub fn is_closed(self) -> bool {
+        self != Form::Opaque
+    }
+
+    /// Branchless i32 product — bit-exact vs the reference [`MulFn`] of
+    /// the same family. Valid for operands whose product magnitude fits
+    /// i32 (any registry bitwidth; the *accumulator* width is the
+    /// caller's concern). Sign handling is the two's-complement identity
+    /// `(p ^ neg) - neg` with `neg = (a ^ b) >> 31` — no `signum`, no
+    /// branches, and exact for `a == 0` or `b == 0` (magnitude is 0).
+    #[inline(always)]
+    pub fn mul_i32(self, a: i32, b: i32) -> i32 {
+        let neg = (a ^ b) >> 31;
+        let aa = a.wrapping_abs();
+        let ab = b.wrapping_abs();
+        match self {
+            Form::Opaque => unreachable!("opaque ACU has no closed form"),
+            Form::Exact => a * b,
+            Form::TruncIn(k) => {
+                let mask = !((1i32 << k) - 1);
+                let p = (aa & mask) * (ab & mask);
+                (p ^ neg) - neg
+            }
+            Form::PerfPp(k) => {
+                let mask = !((1i32 << k) - 1);
+                let p = aa * (ab & mask);
+                (p ^ neg) - neg
+            }
+            Form::TruncOut(k) => {
+                let mask = !((1i32 << k) - 1);
+                let p = (aa * ab) & mask;
+                (p ^ neg) - neg
+            }
+            Form::CompTruncOut(k) => {
+                // Compensation keys off the *untruncated* product being
+                // nonzero (p >= 0 here, so p > 0 <=> p != 0).
+                let mask = !((1i32 << k) - 1);
+                let p = aa * ab;
+                let r = (p & mask) + (((p != 0) as i32) << (k - 1));
+                (r ^ neg) - neg
+            }
+            Form::FloorTrunc(k) => ((a * b) >> k) << k,
+            Form::Drum(k) => {
+                let p = drum_reduce_i32(aa, k) * drum_reduce_i32(ab, k);
+                (p ^ neg) - neg
+            }
+        }
+    }
+
+    /// 64-bit twin of [`mul_i32`] for wide-operand functional plans.
+    #[inline(always)]
+    pub fn mul_i64(self, a: i64, b: i64) -> i64 {
+        let neg = (a ^ b) >> 63;
+        let aa = a.wrapping_abs();
+        let ab = b.wrapping_abs();
+        match self {
+            Form::Opaque => unreachable!("opaque ACU has no closed form"),
+            Form::Exact => a * b,
+            Form::TruncIn(k) => {
+                let mask = !((1i64 << k) - 1);
+                let p = (aa & mask) * (ab & mask);
+                (p ^ neg) - neg
+            }
+            Form::PerfPp(k) => {
+                let mask = !((1i64 << k) - 1);
+                let p = aa * (ab & mask);
+                (p ^ neg) - neg
+            }
+            Form::TruncOut(k) => {
+                let mask = !((1i64 << k) - 1);
+                let p = (aa * ab) & mask;
+                (p ^ neg) - neg
+            }
+            Form::CompTruncOut(k) => {
+                let mask = !((1i64 << k) - 1);
+                let p = aa * ab;
+                let r = (p & mask) + (((p != 0) as i64) << (k - 1));
+                (r ^ neg) - neg
+            }
+            Form::FloorTrunc(k) => ((a * b) >> k) << k,
+            Form::Drum(k) => {
+                let p = drum_reduce_i64(aa, k) * drum_reduce_i64(ab, k);
+                (p ^ neg) - neg
+            }
+        }
+    }
+}
+
 /// A named ACU with its bitwidth and power proxy (mirrors the Python
 /// registry; power normalized to exact8 == 1.0).
 #[derive(Clone, Copy, Debug)]
@@ -131,6 +272,9 @@ pub struct Multiplier {
     /// Sign-magnitude models satisfy approx(-a,b) == -approx(a,b); the
     /// two's-complement floor-truncation family does not.
     pub symmetric: bool,
+    /// Closed-form kernel descriptor ([`Form::Opaque`] = LUT/function
+    /// only). Must agree bit-for-bit with `fun` — tested exhaustively.
+    pub form: Form,
 }
 
 impl Multiplier {
@@ -144,42 +288,83 @@ impl Multiplier {
 }
 
 macro_rules! mul_entry {
-    ($name:literal, $bits:literal, $power:literal, $f:expr) => {
-        mul_entry!($name, $bits, $power, $f, true)
+    ($name:literal, $bits:literal, $power:literal, $form:expr, $f:expr) => {
+        mul_entry!($name, $bits, $power, $form, $f, true)
     };
-    ($name:literal, $bits:literal, $power:literal, $f:expr, $sym:literal) => {
+    ($name:literal, $bits:literal, $power:literal, $form:expr, $f:expr, $sym:literal) => {
         Multiplier {
             name: $name,
             bits: $bits,
             fun: $f,
             power: $power,
             symmetric: $sym,
+            form: $form,
         }
     };
 }
 
 /// The full registry — order matches the Python `LUT_ACUS` superset.
 pub const REGISTRY: &[Multiplier] = &[
-    mul_entry!("exact8", 8, 1.00, |a, b| exact(a, b)),
-    mul_entry!("trunc_in8_2", 8, 0.62, |a, b| trunc_in(a, b, 2)),
-    mul_entry!("perf_pp8_3", 8, 0.66, |a, b| perf_pp(a, b, 3)),
-    mul_entry!("perf_pp8_5", 8, 0.45, |a, b| perf_pp(a, b, 5)),
-    mul_entry!("trunc_out8_4", 8, 0.78, |a, b| trunc_out(a, b, 4)),
-    mul_entry!("comp_trunc_out8_6", 8, 0.70, |a, b| comp_trunc_out(a, b, 6)),
-    mul_entry!("mitchell8", 8, 0.40, |a, b| mitchell(a, b)),
-    mul_entry!("drum8_4", 8, 0.52, |a, b| drum(a, b, 4)),
-    mul_entry!("drum8_6", 8, 0.74, |a, b| drum(a, b, 6)),
-    mul_entry!("floor_trunc8_5", 8, 0.72, |a, b| floor_trunc(a, b, 5), false),
-    mul_entry!("floor_trunc8_6", 8, 0.65, |a, b| floor_trunc(a, b, 6), false),
-    mul_entry!("floor_trunc8_7", 8, 0.58, |a, b| floor_trunc(a, b, 7), false),
-    mul_entry!("exact12", 12, 2.25, |a, b| exact(a, b)),
-    mul_entry!("trunc_out12_4", 12, 1.95, |a, b| trunc_out(a, b, 4)),
-    mul_entry!("comp_trunc_out12_4", 12, 1.97, |a, b| comp_trunc_out(a, b, 4)),
-    mul_entry!("mitchell12", 12, 0.90, |a, b| mitchell(a, b)),
-    mul_entry!("drum12_6", 12, 1.15, |a, b| drum(a, b, 6)),
+    mul_entry!("exact8", 8, 1.00, Form::Exact, |a, b| exact(a, b)),
+    mul_entry!("trunc_in8_2", 8, 0.62, Form::TruncIn(2), |a, b| trunc_in(a, b, 2)),
+    mul_entry!("perf_pp8_3", 8, 0.66, Form::PerfPp(3), |a, b| perf_pp(a, b, 3)),
+    mul_entry!("perf_pp8_5", 8, 0.45, Form::PerfPp(5), |a, b| perf_pp(a, b, 5)),
+    mul_entry!("trunc_out8_4", 8, 0.78, Form::TruncOut(4), |a, b| trunc_out(a, b, 4)),
+    mul_entry!(
+        "comp_trunc_out8_6",
+        8,
+        0.70,
+        Form::CompTruncOut(6),
+        |a, b| comp_trunc_out(a, b, 6)
+    ),
+    mul_entry!("mitchell8", 8, 0.40, Form::Opaque, |a, b| mitchell(a, b)),
+    mul_entry!("drum8_4", 8, 0.52, Form::Drum(4), |a, b| drum(a, b, 4)),
+    mul_entry!("drum8_6", 8, 0.74, Form::Drum(6), |a, b| drum(a, b, 6)),
+    mul_entry!(
+        "floor_trunc8_5",
+        8,
+        0.72,
+        Form::FloorTrunc(5),
+        |a, b| floor_trunc(a, b, 5),
+        false
+    ),
+    mul_entry!(
+        "floor_trunc8_6",
+        8,
+        0.65,
+        Form::FloorTrunc(6),
+        |a, b| floor_trunc(a, b, 6),
+        false
+    ),
+    mul_entry!(
+        "floor_trunc8_7",
+        8,
+        0.58,
+        Form::FloorTrunc(7),
+        |a, b| floor_trunc(a, b, 7),
+        false
+    ),
+    mul_entry!("exact12", 12, 2.25, Form::Exact, |a, b| exact(a, b)),
+    mul_entry!("trunc_out12_4", 12, 1.95, Form::TruncOut(4), |a, b| trunc_out(a, b, 4)),
+    mul_entry!(
+        "comp_trunc_out12_4",
+        12,
+        1.97,
+        Form::CompTruncOut(4),
+        |a, b| comp_trunc_out(a, b, 4)
+    ),
+    mul_entry!("mitchell12", 12, 0.90, Form::Opaque, |a, b| mitchell(a, b)),
+    mul_entry!("drum12_6", 12, 1.15, Form::Drum(6), |a, b| drum(a, b, 6)),
     // Table-2 operating-point aliases (same functions as in Python).
-    mul_entry!("mul8s_1l2h_like", 8, 0.65, |a, b| floor_trunc(a, b, 6), false),
-    mul_entry!("mul12s_2km_like", 12, 1.95, |a, b| trunc_out(a, b, 4)),
+    mul_entry!(
+        "mul8s_1l2h_like",
+        8,
+        0.65,
+        Form::FloorTrunc(6),
+        |a, b| floor_trunc(a, b, 6),
+        false
+    ),
+    mul_entry!("mul12s_2km_like", 12, 1.95, Form::TruncOut(4), |a, b| trunc_out(a, b, 4)),
 ];
 
 /// Look up an ACU by name.
@@ -385,5 +570,60 @@ mod tests {
         assert!(get("mul8s_1l2h_like").is_ok());
         assert!(get("nope").is_err());
         assert_eq!(names_with_bits(8).len(), 13);
+    }
+
+    #[test]
+    fn form_matches_fun_exhaustive_at_8bit() {
+        // The closed-form kernels compile `form`, the LUTs compile `fun`;
+        // this is the contract that lets the emulator swap between them.
+        for m in REGISTRY.iter().filter(|m| m.bits == 8) {
+            if !m.form.is_closed() {
+                continue;
+            }
+            for a in -128i64..128 {
+                for b in -128i64..128 {
+                    let want = m.apply(a, b);
+                    let got32 = m.form.mul_i32(a as i32, b as i32) as i64;
+                    let got64 = m.form.mul_i64(a, b);
+                    assert_eq!(got32, want, "{} mul_i32 {a}*{b}", m.name);
+                    assert_eq!(got64, want, "{} mul_i64 {a}*{b}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn form_matches_fun_sampled_at_12bit() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        for m in REGISTRY.iter().filter(|m| m.bits == 12) {
+            if !m.form.is_closed() {
+                continue;
+            }
+            let half = 1i64 << (m.bits - 1);
+            for _ in 0..20_000 {
+                let a = rng.range_i64(-half, half);
+                let b = rng.range_i64(-half, half);
+                let want = m.apply(a, b);
+                assert_eq!(
+                    m.form.mul_i32(a as i32, b as i32) as i64,
+                    want,
+                    "{} mul_i32 {a}*{b}",
+                    m.name
+                );
+                assert_eq!(m.form.mul_i64(a, b), want, "{} mul_i64 {a}*{b}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn drum_reduce_edge_cases() {
+        // Branchless reduction must keep x == 0 and small operands exact.
+        for k in [4u32, 6] {
+            assert_eq!(drum_reduce_i32(0, k), 0);
+            assert_eq!(drum_reduce_i64(0, k), 0);
+            for x in 0..(1i32 << k) {
+                assert_eq!(drum_reduce_i32(x, k), x, "k={k} x={x}");
+            }
+        }
     }
 }

@@ -10,7 +10,10 @@
 //!   [`InferenceEngine`]: typed submit/infer, [`AdaptService::swap_plan`]
 //!   (workers adopt a new plan + `Arc`-shared quantized weights at a
 //!   batch boundary — no restart), live [`stats`](AdaptService::stats)
-//!   without shutdown, and [`health`](AdaptService::health).
+//!   without shutdown, and [`health`](AdaptService::health). Body-level
+//!   plan swaps live on [`ModelHandle::swap_plan_body`], so every swap on
+//!   a registry-managed model is recorded as a [`registry::PlanStore`]
+//!   version — there is no store-bypassing text path anymore.
 //! * [`registry`] — the multi-model control plane: [`ModelRegistry`]
 //!   owns N named models, each a [`ModelHandle`] wrapping its own
 //!   engine pool plus a [`registry::PlanStore`] of immutable numbered
@@ -280,23 +283,6 @@ impl AdaptService {
     /// generation number (see [`InferenceEngine::swap_plan`]).
     pub fn swap_plan(&self, plan: ExecutionPlan) -> Result<u64, ServiceError> {
         self.engine.swap_plan(plan)
-    }
-
-    /// Parse and hot-swap a plan from a `POST /v1/plan` body: either a
-    /// plan JSON document (what `adapt plan --out` writes) or a policy
-    /// spec `{"spec": "default=mul8s_1l2h_like,c1=exact8"}` resolved
-    /// against the served model. (Registry-managed services swap through
-    /// [`ModelHandle::create_and_activate`] instead, which also records
-    /// the plan as a store version.)
-    pub fn swap_plan_body(&self, body: &str) -> Result<u64, ServiceError> {
-        let spec = self.engine.emulator_spec().ok_or_else(|| {
-            ServiceError::PlanRejected(
-                "plan hot-swap requires the emulator backend (PJRT executables bake their plan in)"
-                    .into(),
-            )
-        })?;
-        let (_source, plan) = registry::parse_plan_body(body, spec)?;
-        self.swap_plan(plan)
     }
 
     /// Live stats snapshot — mid-run, no shutdown required.

@@ -551,6 +551,16 @@ impl ModelHandle {
         self.activate(pv.version)
     }
 
+    /// Parse and hot-swap a plan from a request body — a plan JSON
+    /// document or a `{"spec": "..."}` policy — on this model. The former
+    /// `AdaptService::swap_plan_body`, folded in here so a direct
+    /// in-process swap goes through the [`PlanStore`] like the HTTP path:
+    /// the body becomes an immutable numbered version *and* activates.
+    /// Returns the new generation.
+    pub fn swap_plan_body(&self, body: &str) -> Result<u64, ServiceError> {
+        self.create_and_activate(body)
+    }
+
     /// Revert untagged traffic to the previously active version. The
     /// rolled-back-from version becomes the new rollback target, so two
     /// rollbacks ping-pong. Ends any canary/shadow experiment.

@@ -1,0 +1,206 @@
+//! A/B kernel-equivalence suite: the determinism contract, enforced.
+//!
+//! Every optimized GEMM tier — scalar, the active SIMD tier (AVX2/NEON
+//! when present), and the branchless closed-form kernels — must produce
+//! **bit-identical** outputs to the naive reference, for every registered
+//! ACU, across irregular shapes, at any thread count. These tests run the
+//! same inputs through all tiers via the `*_with(..., Isa, ...)` kernel
+//! entry points and compare exactly (`assert_eq!` on integer outputs,
+//! `to_bits` on f32). On hardware without AVX2/NEON the active tier *is*
+//! scalar and the comparisons degrade to self-consistency — still a valid
+//! run, just not an interesting one; CI's `ADAPT_NO_SIMD=1` matrix entry
+//! covers the forced-scalar side on SIMD hardware.
+
+use adapt::emulator::gemm;
+use adapt::emulator::simd::{self, Isa};
+use adapt::lut::Lut;
+use adapt::mult;
+use adapt::util::rng::Rng;
+
+const THREADS: [usize; 2] = [1, 4];
+
+fn rand_q(rng: &mut Rng, len: usize, half: i64) -> Vec<i32> {
+    (0..len).map(|_| rng.range_i64(-half, half) as i32).collect()
+}
+
+/// Irregular (m, k, n) shapes: deliberately off the 8-lane / BLOCK_K
+/// grid so vector tails, 4-row tails and partial k-blocks all execute.
+fn shapes(rng: &mut Rng, rounds: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = vec![(1, 1, 1), (3, 64, 8), (5, 65, 9), (2, 128, 17)];
+    for _ in 0..rounds {
+        out.push((
+            1 + rng.below(13) as usize,
+            1 + rng.below(90) as usize,
+            1 + rng.below(45) as usize,
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// LUT gather kernels: every 8-bit ACU, all tiers, both thread counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lut_biased_all_tiers_match_naive_for_every_8bit_acu() {
+    let active = simd::isa();
+    for name in mult::names_with_bits(8) {
+        let lut = Lut::generate(mult::get(name).unwrap());
+        let mut rng = Rng::new(0xA11CE);
+        for (m, k, n) in shapes(&mut rng, 6) {
+            let xq = rand_q(&mut rng, m * k, 128);
+            let wq = rand_q(&mut rng, k * n, 128);
+            let wb: Vec<u16> = wq.iter().map(|&v| (v + 128) as u16).collect();
+            let mut want = vec![0i64; m * n];
+            gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut want);
+            for threads in THREADS {
+                for isa in [Isa::Scalar, active] {
+                    let mut got = vec![0i32; m * n];
+                    gemm::lut_opt_biased_with(&xq, m, k, &wb, n, &lut, threads, isa, &mut got);
+                    assert_eq!(
+                        want,
+                        got.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+                        "{name} {m}x{k}x{n} threads={threads} isa={isa:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lut_i64_all_tiers_match_naive() {
+    // The unbiased i64-accumulator gather kernel (the 12-bit executor
+    // path). Two 8-bit models cover the same code cheaply; one 12-bit
+    // model (a 4096² generated table) pins the wide-index case.
+    let active = simd::isa();
+    for name in ["mitchell8", "drum8_6", "mul12s_2km_like"] {
+        let m_ = mult::get(name).unwrap();
+        let half = 1i64 << (m_.bits - 1);
+        let lut = Lut::generate(m_);
+        let mut rng = Rng::new(0xB0B);
+        for (m, k, n) in shapes(&mut rng, 3) {
+            let xq = rand_q(&mut rng, m * k, half);
+            let wq = rand_q(&mut rng, k * n, half);
+            let mut want = vec![0i64; m * n];
+            gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut want);
+            for threads in THREADS {
+                for isa in [Isa::Scalar, active] {
+                    let mut got = vec![0i64; m * n];
+                    gemm::lut_opt_with(&xq, m, k, &wq, n, &lut, threads, isa, &mut got);
+                    assert_eq!(want, got, "{name} {m}x{k}x{n} threads={threads} isa={isa:?}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form kernels: every family pins to the LUT of the same model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn closed_form_all_tiers_match_lut_for_every_8bit_family() {
+    let active = simd::isa();
+    let mut covered = 0usize;
+    for name in mult::names_with_bits(8) {
+        let m8 = mult::get(name).unwrap();
+        if !m8.form.is_closed() {
+            continue; // mitchell8 and friends stay on the gather path
+        }
+        covered += 1;
+        let lut = Lut::generate(m8);
+        let mut rng = Rng::new(0xC0FFEE);
+        for (m, k, n) in shapes(&mut rng, 6) {
+            let xq = rand_q(&mut rng, m * k, 128);
+            let wq = rand_q(&mut rng, k * n, 128);
+            let mut want = vec![0i64; m * n];
+            gemm::lut_naive(&xq, m, k, &wq, n, &lut, &mut want);
+            for threads in THREADS {
+                for isa in [Isa::Scalar, active] {
+                    let mut got = vec![0i32; m * n];
+                    gemm::cf_opt_i32_with(&xq, m, k, &wq, n, m8.form, threads, isa, &mut got);
+                    assert_eq!(
+                        want,
+                        got.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+                        "{name} {m}x{k}x{n} threads={threads} isa={isa:?}"
+                    );
+                }
+            }
+        }
+    }
+    assert!(covered >= 8, "expected most 8-bit ACUs to have closed forms, got {covered}");
+}
+
+#[test]
+fn closed_form_i64_matches_func_naive_at_12bit() {
+    for name in mult::names_with_bits(12) {
+        let m12 = mult::get(name).unwrap();
+        if !m12.form.is_closed() {
+            continue;
+        }
+        let mut rng = Rng::new(0xD00D);
+        for (m, k, n) in shapes(&mut rng, 3) {
+            let xq = rand_q(&mut rng, m * k, 2048);
+            let wq = rand_q(&mut rng, k * n, 2048);
+            let mut want = vec![0i64; m * n];
+            gemm::func_naive(&xq, m, k, &wq, n, m12.fun, &mut want);
+            for threads in THREADS {
+                let mut got = vec![0i64; m * n];
+                gemm::cf_opt_i64(&xq, m, k, &wq, n, m12.form, threads, &mut got);
+                assert_eq!(want, got, "{name} {m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 kernels: SIMD vs scalar must agree to the bit (pinned reduction
+// order, no FMA), at both thread counts
+// ---------------------------------------------------------------------------
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn fp32_kernels_bit_identical_across_tiers_and_threads() {
+    let active = simd::isa();
+    let mut rng = Rng::new(0xF32);
+    for (m, k, n) in shapes(&mut rng, 5) {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.next_gauss()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.next_gauss()).collect();
+        let mut want = vec![0f32; m * n];
+        gemm::fp32_opt_with(&x, m, k, &w, n, 1, Isa::Scalar, &mut want);
+        for threads in THREADS {
+            for isa in [Isa::Scalar, active] {
+                let mut got = vec![0f32; m * n];
+                gemm::fp32_opt_with(&x, m, k, &w, n, threads, isa, &mut got);
+                assert_bits_eq(&want, &got, "fp32_opt");
+            }
+        }
+
+        // The trainer's transpose GEMMs: a·bᵀ (striped dot) and aᵀ·b (axpy).
+        let g: Vec<f32> = (0..m * n).map(|_| rng.next_gauss()).collect();
+        let mut want = vec![0f32; m * k];
+        gemm::fp32_a_bt_with(&g, m, n, &w, k, 1, Isa::Scalar, &mut want);
+        for threads in THREADS {
+            for isa in [Isa::Scalar, active] {
+                let mut got = vec![0f32; m * k];
+                gemm::fp32_a_bt_with(&g, m, n, &w, k, threads, isa, &mut got);
+                assert_bits_eq(&want, &got, "fp32_a_bt");
+            }
+        }
+        let mut want = vec![0f32; k * n];
+        gemm::fp32_at_b_with(&x, m, k, &g, n, 1, Isa::Scalar, &mut want);
+        for threads in THREADS {
+            for isa in [Isa::Scalar, active] {
+                let mut got = vec![0f32; k * n];
+                gemm::fp32_at_b_with(&x, m, k, &g, n, threads, isa, &mut got);
+                assert_bits_eq(&want, &got, "fp32_at_b");
+            }
+        }
+    }
+}

@@ -343,6 +343,42 @@ fn plan_versions_are_immutable_and_enumerable() {
 }
 
 // ---------------------------------------------------------------------------
+// In-process plan swap goes through the store
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swap_plan_body_records_a_store_version_and_activates() {
+    let registry =
+        ModelRegistry::new(vec![("m".into(), make_service("m", 42, 1, 4))]).unwrap();
+    let handle = registry.get("m").unwrap();
+    let model = synth_model("m");
+    let inputs: Vec<Vec<f32>> = (0..6).map(|i| sample(11, i)).collect();
+    let expect_b = reference_outputs("m", 42, &plan_b(&model), &inputs);
+
+    // The direct in-process swap cannot bypass the store: the body
+    // becomes immutable version 2 *and* activates in one call.
+    let generation = handle.swap_plan_body(r#"{"spec": "default=exact8"}"#).unwrap();
+    assert!(generation > 0);
+    let versions = handle.list_versions();
+    assert_eq!(versions.len(), 2, "the swap must be recorded as a store version");
+    assert_eq!(versions[1].version, 2);
+    assert_eq!(versions[1].source, "spec:default=exact8");
+
+    // Traffic now runs the swapped plan and self-identifies as version 2.
+    for (i, x) in inputs.iter().enumerate() {
+        let resp = handle.infer(InferRequest::new(x.clone())).unwrap();
+        assert_eq!(resp.version, 2);
+        assert_eq!(resp.output, expect_b[i], "request {i} after swap");
+    }
+
+    // A broken body is rejected without minting a version or rerouting.
+    assert!(handle.swap_plan_body(r#"{"spec": "default=no_such_acu"}"#).is_err());
+    assert_eq!(handle.list_versions().len(), 2);
+    let resp = handle.infer(InferRequest::new(inputs[0].clone())).unwrap();
+    assert_eq!(resp.version, 2);
+}
+
+// ---------------------------------------------------------------------------
 // Canary split
 // ---------------------------------------------------------------------------
 
