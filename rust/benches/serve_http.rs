@@ -8,6 +8,11 @@
 //! `artifacts/results/BENCH_serve_http.json` with per-phase throughput +
 //! client latency, the server-side queue-wait / compute percentiles, the
 //! live shadow disagreement report and the shadow overhead percentage.
+//! A final connection-scaling phase sweeps the keep-alive connection
+//! count (64 → 4096 full, 16 → 64 fast) against the readiness-loop
+//! front-end and emits a `conn_scaling` curve (per-point throughput +
+//! latency percentiles) — the CI connection-scaling gate validates its
+//! presence.
 //!
 //! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench serve_http`
 
@@ -19,7 +24,7 @@ use adapt::coordinator::engine::{EmulatorSpec, EngineConfig};
 use adapt::graph::{retransform, LayerMode, Policy};
 use adapt::lut::LutRegistry;
 use adapt::service::client::{self, LoadConfig};
-use adapt::service::http::HttpServer;
+use adapt::service::http::{HttpServer, ServeOptions};
 use adapt::service::AdaptService;
 use adapt::trainer::synth;
 use adapt::util::json::Json;
@@ -62,8 +67,16 @@ fn main() {
     cfg.queue_depth = 128;
     cfg.max_wait = Duration::from_millis(2);
     let service = Arc::new(AdaptService::start(cfg).expect("service start"));
-    let server = HttpServer::start(Arc::clone(&service), "127.0.0.1:0").expect("server start");
+    // Raise the connection cap above the largest scaling point so the
+    // conn_scaling sweep measures the event loops, not 503 refusals.
+    let opts = ServeOptions {
+        max_conns: 8192,
+        ..ServeOptions::default()
+    };
+    let server =
+        HttpServer::start_with(Arc::clone(&service), "127.0.0.1:0", opts).expect("server start");
     let addr = server.addr().to_string();
+    println!("  transport: {} readiness loop", server.backend().name());
 
     let load = LoadConfig {
         addr: addr.clone(),
@@ -182,6 +195,65 @@ fn main() {
         shadow_report.get("max_abs_delta").unwrap().f64().unwrap(),
     );
 
+    // Phase 4: connection scaling. First promote the shadow candidate —
+    // activation ends the shadow experiment, so the sweep below measures
+    // plain serving (and the mirrored count read above stays final).
+    let (status, body) = client::http_call(
+        &addr,
+        "POST",
+        &format!("/v2/models/{model_name}/plans/{candidate}/activate"),
+        Some("{}"),
+    )
+    .expect("activate candidate");
+    assert_eq!(status, 200, "candidate activation must succeed: {body}");
+
+    // Sweep keep-alive connection counts against the readiness loop.
+    // Every point keeps the per-connection request count fixed at 2, so
+    // the load grows with the fleet and each connection really speaks.
+    let scaling_points: &[usize] = if fast {
+        &[16, 64]
+    } else {
+        &[64, 256, 1024, 4096]
+    };
+    let mut scaling_total = 0usize;
+    let mut conn_scaling = Vec::new();
+    for (i, &conns) in scaling_points.iter().enumerate() {
+        let point_requests = conns * 2;
+        let report = client::run_load(&LoadConfig {
+            requests: point_requests,
+            concurrency: conns,
+            seed: 0x5CA1E ^ ((i as u64 + 1) << 8),
+            ..load.clone()
+        })
+        .expect("conn scaling point");
+        assert_eq!(report.errors, 0, "conn scaling at {conns} connections must be clean");
+        assert_eq!(
+            report.ok,
+            point_requests,
+            "conn scaling at {conns} connections must answer every request"
+        );
+        scaling_total += point_requests;
+        println!(
+            "  conn scaling {conns:>5} conns: {}/{} ok, {:.1} req/s, client p50/p95/p99 = {}/{}/{} µs",
+            report.ok,
+            point_requests,
+            report.requests_per_sec(),
+            report.percentile_us(0.50),
+            report.percentile_us(0.95),
+            report.percentile_us(0.99),
+        );
+        let mut point = BTreeMap::new();
+        point.insert("conns".to_string(), Json::Num(conns as f64));
+        point.insert("requests".to_string(), Json::Num(point_requests as f64));
+        point.insert("ok".to_string(), Json::Num(report.ok as f64));
+        point.insert("errors".to_string(), Json::Num(report.errors as f64));
+        point.insert("req_per_s".to_string(), Json::Num(report.requests_per_sec()));
+        point.insert("p50_us".to_string(), Json::Num(report.percentile_us(0.50) as f64));
+        point.insert("p95_us".to_string(), Json::Num(report.percentile_us(0.95) as f64));
+        point.insert("p99_us".to_string(), Json::Num(report.percentile_us(0.99) as f64));
+        conn_scaling.push(Json::Obj(point));
+    }
+
     // Server-side view: totals + tail latency.
     let stats = service.stats();
     let (qp50, qp95, qp99) = stats.pool.queue_wait_percentiles_us();
@@ -202,6 +274,7 @@ fn main() {
     doc.insert("shadow_candidate".to_string(), Json::Num(candidate as f64));
     doc.insert("shadow_overhead_pct".to_string(), Json::Num(overhead_pct));
     doc.insert("shadow_report".to_string(), shadow_report);
+    doc.insert("conn_scaling".to_string(), Json::Arr(conn_scaling));
     doc.insert("generation_after_swap".to_string(), Json::Num(generation as f64));
     doc.insert("server_stats".to_string(), stats.to_json());
     let dir = adapt::artifacts_dir().join("results");
@@ -218,8 +291,8 @@ fn main() {
         .unwrap_or_else(|arc| arc.engine().stats_snapshot());
     assert_eq!(
         final_stats.total.requests,
-        3 * requests + mirrored,
-        "3 measured phases + every completed mirror, exactly once each"
+        3 * requests + mirrored + scaling_total,
+        "3 measured phases + every completed mirror + the scaling sweep, exactly once each"
     );
     println!("== serve_http bench OK ==");
 }

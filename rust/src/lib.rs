@@ -55,9 +55,11 @@
 //!   models, immutable plan versions, canary rollout, live shadow
 //!   evaluation, activate/rollback), a dependency-free HTTP/1.1
 //!   front-end (the `/v1` single-model shim + the `/v2/models/...`
-//!   registry routes, idle-timeout + connection-cap hardened) and the
-//!   load-generating client behind `adapt serve --listen` /
-//!   `adapt client`.
+//!   registry routes, idle-timeout + connection-cap hardened) served
+//!   by a readiness-loop transport ([`service::net`]: raw-epoll/poll
+//!   event loops, pipelined parsing, batched writes, a timer wheel for
+//!   idle deadlines) and the worker-pool load-generating client behind
+//!   `adapt serve --listen` / `adapt client`.
 //! * [`trainer`] — emulator-native approximation-aware retraining (QAT):
 //!   clipped-STE backward through the quantized/LUT forward
 //!   ([`emulator::Executor::forward_taped`]), SGD-with-momentum, and the

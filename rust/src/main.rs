@@ -27,6 +27,7 @@
 //! adapt serve [--model NAME]... [--requests N] [--workers N]
 //!       [--queue-depth D] [--listen ADDR] [--synthetic]
 //!       [--addr-file PATH] [--max-conns N] [--idle-timeout-ms MS]
+//!       [--event-loops N] [--dispatch-threads N]
 //!       engine-pool serving: N dynamic-batching workers over one bounded
 //!       request queue per model (submitters block when it fills).
 //!       Without --listen, the self-feeding demo; with --listen HOST:PORT
@@ -39,14 +40,20 @@
 //!       default). --synthetic serves bundled tiny models on the
 //!       artifact-free emulator backend, one per name with distinct
 //!       weights (the CI smoke); --addr-file writes the bound address
-//!       for scripts.
+//!       for scripts. The front-end is a readiness loop: --event-loops
+//!       event threads (default ADAPT_THREADS) multiplex every
+//!       connection over epoll (Linux) or poll (forced via
+//!       ADAPT_NET=poll), and --dispatch-threads (default
+//!       2x ADAPT_THREADS, min 8) run the blocking engine waits.
 //! adapt client --addr HOST:PORT [--model NAME] [--requests N]
 //!       [--concurrency C] [--top-k K] [--deadline-ms D]
 //!       [--swap-spec S | --swap-plan F] [--canary FRACTION] [--shadow]
 //!       [--promote] [--bench-out FILE] [--json]
 //!       load generator against a running `adapt serve --listen`:
 //!       submit -> measure -> (optional plan rollout) -> measure -> show
-//!       stats. Default rollout is the v1-style create-and-activate
+//!       stats. --concurrency C keep-alive connections are multiplexed
+//!       over a bounded worker pool, so thousands of connections are
+//!       runnable from modest hardware. Default rollout is the v1-style create-and-activate
 //!       swap; --canary F creates the version and routes fraction F to
 //!       it instead (asserting the split), --shadow mirrors traffic to
 //!       it and prints live disagreement stats, --promote activates the
@@ -347,7 +354,9 @@ fn run() -> Result<()> {
             println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke)");
             println!("  plan --model M [--spec S] | calibrate --model M");
             println!("  serve [--model M]... [--workers N] [--queue-depth D] [--listen ADDR] [--synthetic]");
-            println!("        (--listen = HTTP/1.1 front-end: /v1 shim + /v2 registry routes;");
+            println!("        [--event-loops N] [--dispatch-threads N]");
+            println!("        (--listen = HTTP/1.1 front-end: /v1 shim + /v2 registry routes on a");
+            println!("         readiness loop — epoll on Linux, ADAPT_NET=poll to force poll(2);");
             println!("         repeat --model to serve several models, first = /v1 default)");
             println!("  client --addr HOST:PORT [--model M] [--requests N] [--concurrency C]");
             println!("         [--swap-spec S] [--canary F] [--shadow] [--promote] [--json]");
@@ -463,14 +472,17 @@ fn serve(args: &Args) -> Result<()> {
                 "idle-timeout-ms",
                 ServeOptions::default().idle_timeout.as_millis() as usize,
             )? as u64),
+            event_loops: args.get_usize("event-loops", 0)?,
+            dispatch_threads: args.get_usize("dispatch-threads", 0)?,
             ..ServeOptions::default()
         };
         let server = HttpServer::start_registry(registry, addr, opts)?;
         let bound = server.addr();
         println!(
             "adapt registry [{}] listening on http://{bound} \
-             ({workers} workers/model, queue depth {queue_depth})",
+             ({workers} workers/model, queue depth {queue_depth}, {} readiness loop)",
             served.join(", "),
+            server.backend().name(),
         );
         println!("  POST /v1/infer   POST /v1/plan   GET /v1/stats   GET /v1/healthz");
         println!("  GET /v2/models   /v2/models/{{m}}/infer|stats|plans|rollback");

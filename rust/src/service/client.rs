@@ -2,10 +2,18 @@
 //!
 //! Two layers: [`http_call`] is a one-shot request/response helper (used
 //! for `/v1/plan`, `/v1/stats`, `/v1/healthz` control calls and tests);
-//! [`run_load`] is the `adapt client` load generator — N client threads,
-//! each holding one keep-alive connection, pushing deterministic
-//! inference requests and checking id echo, so the whole
-//! submit → measure → swap plan → measure bench loop runs over the wire.
+//! [`run_load`] is the `adapt client` load generator — N keep-alive
+//! connections multiplexed over a *bounded* worker pool (at most
+//! [`MAX_WORKERS`] OS threads), pushing deterministic inference requests
+//! and checking id echo, so the whole submit → measure → swap plan →
+//! measure bench loop runs over the wire. Each worker drives its
+//! connections in rounds (write one request per connection, then read
+//! every response), keeping one request outstanding per connection —
+//! `--concurrency 4096` holds 4096 open sockets from a few dozen
+//! threads, which is what the readiness-loop server's connection-scaling
+//! bench needs from CI-class hardware. Request payloads and ids are
+//! keyed by *connection index*, not worker, so a given [`LoadConfig`]
+//! always produces the same traffic no matter the pool size.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -241,10 +249,14 @@ pub fn infer_path(model: Option<&str>) -> String {
     }
 }
 
+/// Cap on OS threads the load generator spawns; connections beyond it
+/// are multiplexed round-robin across the pool.
+pub const MAX_WORKERS: usize = 32;
+
 /// Drive `cfg.requests` inference calls over `cfg.concurrency` keep-alive
 /// connections against `POST /v1/infer`. Inputs are deterministic per
-/// (thread, sequence) so a given config always sends the same traffic;
-/// ids are checked for echo (a swapped response fails loudly).
+/// (connection, sequence) so a given config always sends the same
+/// traffic; ids are checked for echo (a swapped response fails loudly).
 pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
     run_load_on(cfg, &infer_path(None))
 }
@@ -252,18 +264,23 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
 /// [`run_load`] against an arbitrary infer route (see [`infer_path`] for
 /// the `/v2/models/{name}/infer` form).
 pub fn run_load_on(cfg: &LoadConfig, path: &str) -> Result<LoadReport> {
-    let threads = cfg.concurrency.max(1);
-    let per_thread = cfg.requests.div_ceil(threads);
+    let conns = cfg.concurrency.max(1);
+    let per_conn = cfg.requests.div_ceil(conns);
+    let workers = conns.min(MAX_WORKERS);
+    // Thousands of client sockets need fd headroom just like the server.
+    super::net::sys::ensure_fd_limit(conns * 2 + 64);
     let t0 = Instant::now();
     let results: Vec<Result<LoadReport>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
                 let cfg = cfg.clone();
-                let n = per_thread.min(cfg.requests.saturating_sub(t * per_thread));
-                s.spawn(move || client_thread(&cfg, path, t, n))
+                s.spawn(move || client_worker(&cfg, path, w, workers, conns, per_conn))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client worker panicked"))
+            .collect()
     });
     let mut report = LoadReport::default();
     for r in results {
@@ -283,40 +300,87 @@ pub fn run_load_on(cfg: &LoadConfig, path: &str) -> Result<LoadReport> {
     Ok(report)
 }
 
-/// One client connection's share of the load.
-fn client_thread(cfg: &LoadConfig, path: &str, thread: usize, n: usize) -> Result<LoadReport> {
+/// One multiplexed connection: its socket, payload stream, and progress.
+struct ClientConn {
+    stream: TcpStream,
+    rng: Rng,
+    /// Connection index in `0..concurrency` (keys ids and payloads).
+    conn: usize,
+    /// Requests sent so far (== the next sequence number).
+    sent: usize,
+    /// Requests this connection owes in total.
+    total: usize,
+    /// Id of the one outstanding request, for the echo check.
+    inflight_id: u64,
+    sent_at: Instant,
+}
+
+/// One worker's share of the load: connections `{c : c % workers == w}`,
+/// driven in lockstep rounds of write-everything then read-everything —
+/// one outstanding request per connection at all times.
+fn client_worker(
+    cfg: &LoadConfig,
+    path: &str,
+    w: usize,
+    workers: usize,
+    conns: usize,
+    per_conn: usize,
+) -> Result<LoadReport> {
     let mut report = LoadReport::default();
-    if n == 0 {
-        return Ok(report);
-    }
-    let mut stream = TcpStream::connect(&cfg.addr)
-        .with_context(|| format!("connecting to {}", cfg.addr))?;
-    stream.set_nodelay(true).ok();
-    let mut rng = Rng::new(cfg.seed ^ ((thread as u64 + 1) * 0x9E37_79B9));
-    for i in 0..n {
-        let input: Vec<f32> = (0..cfg.input_len).map(|_| rng.next_gauss()).collect();
-        let id = (thread * 1_000_000 + i) as u64;
-        let mut req = super::InferRequest::new(input);
-        req.id = Some(id);
-        req.top_k = cfg.top_k;
-        req.deadline = cfg.deadline_ms.map(Duration::from_millis);
-        let body = req.to_json().to_string();
-        let sent = Instant::now();
-        write_request(&mut stream, &cfg.addr, "POST", path, Some(&body), true)?;
-        let (status, resp_body) = read_response(&mut stream)?;
-        let latency = sent.elapsed();
-        if status == 200 {
-            let resp = InferResponse::from_json(&Json::parse(&resp_body)?)?;
-            if resp.id != id {
-                bail!("response id {} for request id {id}: swapped response", resp.id);
-            }
-            report.ok += 1;
-            *report.by_generation.entry(resp.generation).or_insert(0) += 1;
-            *report.by_version.entry(resp.version).or_insert(0) += 1;
-            report.latencies_us.push(latency.as_micros() as u64);
-        } else {
-            report.errors += 1;
+    let mut pool: Vec<ClientConn> = Vec::new();
+    for c in (w..conns).step_by(workers.max(1)) {
+        let total = per_conn.min(cfg.requests.saturating_sub(c * per_conn));
+        if total == 0 {
+            continue;
         }
+        let stream = TcpStream::connect(&cfg.addr)
+            .with_context(|| format!("connecting to {}", cfg.addr))?;
+        stream.set_nodelay(true).ok();
+        pool.push(ClientConn {
+            stream,
+            rng: Rng::new(cfg.seed ^ ((c as u64 + 1) * 0x9E37_79B9)),
+            conn: c,
+            sent: 0,
+            total,
+            inflight_id: 0,
+            sent_at: Instant::now(),
+        });
+    }
+    while !pool.is_empty() {
+        for cc in pool.iter_mut() {
+            let input: Vec<f32> = (0..cfg.input_len).map(|_| cc.rng.next_gauss()).collect();
+            let id = (cc.conn * 1_000_000 + cc.sent) as u64;
+            let mut req = super::InferRequest::new(input);
+            req.id = Some(id);
+            req.top_k = cfg.top_k;
+            req.deadline = cfg.deadline_ms.map(Duration::from_millis);
+            let body = req.to_json().to_string();
+            cc.inflight_id = id;
+            cc.sent_at = Instant::now();
+            write_request(&mut cc.stream, &cfg.addr, "POST", path, Some(&body), true)?;
+            cc.sent += 1;
+        }
+        for cc in pool.iter_mut() {
+            let (status, resp_body) = read_response(&mut cc.stream)?;
+            let latency = cc.sent_at.elapsed();
+            if status == 200 {
+                let resp = InferResponse::from_json(&Json::parse(&resp_body)?)?;
+                if resp.id != cc.inflight_id {
+                    bail!(
+                        "response id {} for request id {}: swapped response",
+                        resp.id,
+                        cc.inflight_id
+                    );
+                }
+                report.ok += 1;
+                *report.by_generation.entry(resp.generation).or_insert(0) += 1;
+                *report.by_version.entry(resp.version).or_insert(0) += 1;
+                report.latencies_us.push(latency.as_micros() as u64);
+            } else {
+                report.errors += 1;
+            }
+        }
+        pool.retain(|cc| cc.sent < cc.total);
     }
     Ok(report)
 }

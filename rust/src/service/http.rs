@@ -1,9 +1,13 @@
 //! Dependency-free HTTP/1.1 front-end for the model registry.
 //!
-//! The build is offline, so the framing is hand-rolled over
-//! `std::net::TcpListener` (the same spirit as the vendored stand-ins):
-//! request-line + headers, `Content-Length` bodies, `keep-alive`
-//! connections, JSON in / JSON out.
+//! The build is offline, so the framing is hand-rolled: request-line +
+//! headers, `Content-Length` bodies, `keep-alive` connections, JSON in
+//! / JSON out. Since the readiness-loop rewrite the transport lives in
+//! [`super::net`]: a small pool of event-loop threads multiplexes every
+//! connection over `epoll` (Linux) or `poll(2)` (`ADAPT_NET=poll`),
+//! with incremental request parsing, pipelining, batched writes and a
+//! timer wheel for idle deadlines — this module keeps the route table,
+//! the response framing, and the [`HttpServer`] facade.
 //!
 //! The `/v1` routes are a wire-compatible shim over the registry's
 //! **default model**: every pre-registry field and status code is
@@ -36,24 +40,25 @@
 //! being read; malformed framing gets 400; unknown routes 404; known
 //! routes with the wrong method 405.
 //!
-//! One thread per connection, hardened against stalls: each read loop
-//! checks a per-request idle deadline ([`ServeOptions::idle_timeout`]) so
-//! a silent keep-alive peer cannot pin its thread forever, and the accept
-//! loop refuses connections beyond [`ServeOptions::max_conns`] with a 503
-//! `overloaded` body instead of spawning an unbounded thread set. Serving
-//! threads only share the `Arc<ModelRegistry>`; all request-level
-//! concurrency control (bounded queue, backpressure) stays in the engine
-//! pools underneath.
+//! Hardening semantics are unchanged from the thread-per-connection
+//! server: a connection that does not *complete* a request within
+//! [`ServeOptions::idle_timeout`] is dropped (trickling header bytes
+//! does not extend the window), and connections beyond
+//! [`ServeOptions::max_conns`] get an immediate 503 `overloaded`. The
+//! blocking engine submit/wait runs on a dispatch thread pool, so all
+//! request-level concurrency control (bounded queue, backpressure)
+//! stays in the engine pools underneath.
 
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::api::ServiceError;
+use super::net::conn::HttpRequest;
+use super::net::server::NetServer;
+use super::net::Backend;
 use super::registry::{ModelHandle, ModelRegistry};
 use super::AdaptService;
 use crate::util::json::Json;
@@ -63,61 +68,48 @@ use crate::util::json::Json;
 pub struct ServeOptions {
     /// Max request-body size in bytes; larger gets 413 without a read.
     pub max_body: usize,
-    /// Per-read socket timeout: the granularity at which connection
-    /// threads notice `stop()` and the idle deadline.
-    pub read_timeout: Duration,
+    /// Event-loop timer granularity: poll timeout and timer-wheel tick
+    /// (bounds how late an idle deadline or stop flag is noticed).
+    pub tick: Duration,
     /// Max time a connection may sit without completing a request before
-    /// it is closed (counted from the start of each request read, so an
-    /// *active* keep-alive connection lives indefinitely).
+    /// it is closed (counted per request, so an *active* keep-alive
+    /// connection lives indefinitely).
     pub idle_timeout: Duration,
     /// Max concurrently served connections; beyond it, new connections
     /// get an immediate 503 `overloaded` and are closed.
     pub max_conns: usize,
+    /// Event-loop threads (0 = `ADAPT_THREADS` / available cores).
+    pub event_loops: usize,
+    /// Dispatch (engine submit/wait) threads
+    /// (0 = `2 × ADAPT_THREADS`, at least 8).
+    pub dispatch_threads: usize,
+    /// Readiness backend override (`None` = `ADAPT_NET` env, else the
+    /// platform default: epoll on Linux, poll elsewhere).
+    pub net: Option<Backend>,
+    /// `SO_SNDBUF` for accepted sockets (tests shrink it to force the
+    /// partial-write path); `None` leaves the kernel default.
+    pub sndbuf: Option<usize>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
         ServeOptions {
             max_body: 8 << 20,
-            read_timeout: Duration::from_millis(100),
+            tick: Duration::from_millis(10),
             idle_timeout: Duration::from_secs(60),
             max_conns: 1024,
+            event_loops: 0,
+            dispatch_threads: 0,
+            net: None,
+            sndbuf: None,
         }
     }
 }
 
-/// One parsed request.
-struct HttpRequest {
-    method: String,
-    path: String,
-    body: Vec<u8>,
-    keep_alive: bool,
-}
-
-/// Connection-level outcome of trying to read a request.
-enum ReadOutcome {
-    Request(HttpRequest),
-    /// Peer closed, idle deadline hit, or server stopping: drop it.
-    Closed,
-    /// Framing error worth answering before closing.
-    Bad(ServiceError),
-}
-
-/// Decrements the live-connection count when a connection thread exits.
-struct ConnGuard(Arc<AtomicUsize>);
-
-impl Drop for ConnGuard {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::AcqRel);
-    }
-}
-
-/// The serving front-end: accept loop + per-connection threads.
+/// The serving front-end: a facade over the readiness-loop
+/// [`NetServer`] keeping the pre-rewrite construction API.
 pub struct HttpServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept: Option<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    inner: Option<NetServer>,
 }
 
 impl HttpServer {
@@ -146,139 +138,26 @@ impl HttpServer {
         addr: &str,
         opts: ServeOptions,
     ) -> Result<HttpServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let conns = Arc::new(Mutex::new(Vec::new()));
-        let accept = {
-            let stop = Arc::clone(&stop);
-            let conns = Arc::clone(&conns);
-            let live = Arc::new(AtomicUsize::new(0));
-            std::thread::Builder::new()
-                .name("adapt-http-accept".into())
-                .spawn(move || {
-                    for stream in listener.incoming() {
-                        if stop.load(Ordering::Acquire) {
-                            break;
-                        }
-                        let Ok(mut stream) = stream else { continue };
-                        // Connection cap: refuse with one short blocking
-                        // write instead of spawning a thread.
-                        let n = live.fetch_add(1, Ordering::AcqRel) + 1;
-                        if n > opts.max_conns {
-                            live.fetch_sub(1, Ordering::AcqRel);
-                            let e = ServiceError::Overloaded {
-                                conns: opts.max_conns,
-                            };
-                            let _ = stream
-                                .set_write_timeout(Some(Duration::from_millis(200)));
-                            let _ = write_response(
-                                &mut stream,
-                                e.http_status(),
-                                &e.to_json(),
-                                false,
-                            );
-                            continue;
-                        }
-                        let guard = ConnGuard(Arc::clone(&live));
-                        let registry = Arc::clone(&registry);
-                        let stop = Arc::clone(&stop);
-                        let handle = std::thread::Builder::new()
-                            .name("adapt-http-conn".into())
-                            .spawn(move || {
-                                let _guard = guard;
-                                serve_conn(stream, &registry, &stop, opts);
-                            });
-                        if let Ok(h) = handle {
-                            let mut guard = conns.lock().expect("conn list poisoned");
-                            // Reap finished threads so a long-lived server
-                            // doesn't accumulate handles.
-                            guard.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
-                            guard.push(h);
-                        }
-                    }
-                })
-                .context("spawning accept loop")?
-        };
         Ok(HttpServer {
-            addr,
-            stop,
-            accept: Some(accept),
-            conns,
+            inner: Some(NetServer::start(registry, addr, opts)?),
         })
     }
 
     /// The bound address (resolves port 0).
     pub fn addr(&self) -> SocketAddr {
-        self.addr
+        self.inner.as_ref().expect("server running").addr()
     }
 
-    /// Stop accepting, wake the accept loop, and join every connection
-    /// thread (each notices the flag within one read timeout).
+    /// Which readiness backend the server is running on.
+    pub fn backend(&self) -> Backend {
+        self.inner.as_ref().expect("server running").backend()
+    }
+
+    /// Stop the event loops (dropping open connections) and drain the
+    /// dispatch pool.
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::Release);
-        // Wake the blocking accept with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-        let handles: Vec<_> = {
-            let mut guard = self.conns.lock().expect("conn list poisoned");
-            guard.drain(..).collect()
-        };
-        for h in handles {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for HttpServer {
-    fn drop(&mut self) {
-        if let Some(h) = self.accept.take() {
-            self.stop.store(true, Ordering::Release);
-            let _ = TcpStream::connect(self.addr);
-            let _ = h.join();
-        }
-    }
-}
-
-/// Serve one connection: a keep-alive loop of read → route → respond.
-fn serve_conn(
-    mut stream: TcpStream,
-    registry: &ModelRegistry,
-    stop: &AtomicBool,
-    opts: ServeOptions,
-) {
-    let _ = stream.set_read_timeout(Some(opts.read_timeout));
-    let _ = stream.set_nodelay(true);
-    // Bytes read past the previous request's body (HTTP/1.1 pipelining):
-    // they are the start of the next request, not garbage.
-    let mut carry: Vec<u8> = Vec::new();
-    loop {
-        // Idle deadline restarts per request: a connection stalls out
-        // only by *not completing* a request within the window.
-        let idle_deadline = Instant::now() + opts.idle_timeout;
-        match read_request(&mut stream, &mut carry, stop, opts.max_body, idle_deadline) {
-            ReadOutcome::Closed => return,
-            ReadOutcome::Bad(e) => {
-                // Drain what the peer already sent (bounded) before the
-                // error response + close: closing with unread data makes
-                // some TCP stacks RST and discard the response in flight.
-                drain(&mut stream, 1 << 20);
-                let _ = write_response(&mut stream, e.http_status(), &e.to_json(), false);
-                return;
-            }
-            ReadOutcome::Request(req) => {
-                let (status, body) = route(registry, &req);
-                if write_response(&mut stream, status, &body, req.keep_alive).is_err()
-                    || !req.keep_alive
-                {
-                    return;
-                }
-            }
-        }
-        if stop.load(Ordering::Acquire) {
-            return;
+        if let Some(inner) = self.inner.take() {
+            inner.stop();
         }
     }
 }
@@ -312,8 +191,10 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
-/// Dispatch one request. Always returns a JSON body.
-fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
+/// Dispatch one request. Always returns a JSON body. Runs on a
+/// dispatch-pool thread (may block on the engine queue), never on an
+/// event loop.
+pub(crate) fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
     let err = |e: ServiceError| (e.http_status(), e.to_json());
     let method = req.method.as_str();
     let path = req.path.as_str();
@@ -481,141 +362,6 @@ fn route_model(
     }
 }
 
-/// Read one request (request line + headers + Content-Length body).
-/// `carry` holds bytes already read past the previous request's body
-/// (pipelining); on return it holds whatever follows *this* request.
-/// `idle_deadline` bounds how long the peer may stall before the
-/// connection is dropped.
-fn read_request(
-    stream: &mut TcpStream,
-    carry: &mut Vec<u8>,
-    stop: &AtomicBool,
-    max_body: usize,
-    idle_deadline: Instant,
-) -> ReadOutcome {
-    const MAX_HEAD: usize = 16 << 10;
-    let mut buf: Vec<u8> = std::mem::take(carry);
-    let mut chunk = [0u8; 4096];
-    // --- head: read until \r\n\r\n -------------------------------------
-    let head_end = loop {
-        if let Some(pos) = find_head_end(&buf) {
-            break pos;
-        }
-        if buf.len() > MAX_HEAD {
-            return ReadOutcome::Bad(ServiceError::BadRequest("header block too large".into()));
-        }
-        // The deadline binds whether the peer is silent *or* trickling
-        // bytes (slow-loris): a request that hasn't completed by it is
-        // dropped, not a pinned thread.
-        if stop.load(Ordering::Acquire) || Instant::now() >= idle_deadline {
-            return ReadOutcome::Closed;
-        }
-        match stream.read(&mut chunk) {
-            Ok(0) => return ReadOutcome::Closed,
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(_) => return ReadOutcome::Closed,
-        }
-    };
-    let head = match std::str::from_utf8(&buf[..head_end]) {
-        Ok(s) => s.to_string(),
-        Err(_) => return ReadOutcome::Bad(ServiceError::BadRequest("non-UTF-8 header".into())),
-    };
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
-        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
-        _ => {
-            return ReadOutcome::Bad(ServiceError::BadRequest(format!(
-                "malformed request line {request_line:?}"
-            )))
-        }
-    };
-    if !version.starts_with("HTTP/1.") {
-        return ReadOutcome::Bad(ServiceError::BadRequest(format!(
-            "unsupported version {version:?}"
-        )));
-    }
-    let mut content_length = 0usize;
-    let mut keep_alive = true; // HTTP/1.1 default
-    for line in lines {
-        let Some((k, v)) = line.split_once(':') else {
-            continue;
-        };
-        let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
-        if k == "content-length" {
-            content_length = match v.parse() {
-                Ok(n) => n,
-                Err(_) => {
-                    return ReadOutcome::Bad(ServiceError::BadRequest(format!(
-                        "bad content-length {v:?}"
-                    )))
-                }
-            };
-        } else if k == "connection" {
-            keep_alive = !v.eq_ignore_ascii_case("close");
-        }
-    }
-    if content_length > max_body {
-        return ReadOutcome::Bad(ServiceError::BodyTooLarge {
-            got: content_length,
-            max: max_body,
-        });
-    }
-    // --- body: exactly content_length bytes past the head ----------------
-    let mut body = buf[head_end + 4..].to_vec();
-    while body.len() < content_length {
-        if stop.load(Ordering::Acquire) || Instant::now() >= idle_deadline {
-            return ReadOutcome::Closed;
-        }
-        match stream.read(&mut chunk) {
-            Ok(0) => return ReadOutcome::Closed,
-            Ok(n) => body.extend_from_slice(&chunk[..n]),
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(_) => return ReadOutcome::Closed,
-        }
-    }
-    // Anything past this request's body is the next pipelined request.
-    if body.len() > content_length {
-        *carry = body.split_off(content_length);
-    }
-    ReadOutcome::Request(HttpRequest {
-        method,
-        path,
-        body,
-        keep_alive,
-    })
-}
-
-fn find_head_end(buf: &[u8]) -> Option<usize> {
-    buf.windows(4).position(|w| w == b"\r\n\r\n")
-}
-
-/// Read and discard up to `cap` already-sent bytes (stops at the first
-/// read timeout — the peer has gone quiet — or EOF).
-fn drain(stream: &mut TcpStream, cap: usize) {
-    let mut chunk = [0u8; 4096];
-    let mut total = 0usize;
-    while total < cap {
-        match stream.read(&mut chunk) {
-            Ok(0) => break,
-            Ok(n) => total += n,
-            Err(_) => break,
-        }
-    }
-}
-
 fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
@@ -631,13 +377,9 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Write one JSON response with correct framing.
-fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    body: &Json,
-    keep_alive: bool,
-) -> std::io::Result<()> {
+/// Serialize one JSON response with correct framing — the head format
+/// is byte-identical to the pre-readiness-loop server.
+pub(crate) fn response_bytes(status: u16, body: &Json, keep_alive: bool) -> Vec<u8> {
     let body = body.to_string();
     let head = format!(
         "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
@@ -645,7 +387,8 @@ fn write_response(
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+    out
 }

@@ -20,13 +20,22 @@
 //!   plan versions, with canary-fraction routing, shadow mirroring
 //!   (live disagreement stats against the active plan) and
 //!   activate/rollback lifecycle.
-//! * [`http`] / [`client`] — a dependency-free HTTP/1.1 server over
-//!   `std::net::TcpListener` exposing the `/v1` single-model routes
+//! * [`net`] — the readiness-loop transport: a fixed pool of event-loop
+//!   threads over a dependency-free `Poller` (raw `epoll` syscalls on
+//!   Linux, portable `poll(2)` via `ADAPT_NET=poll`), per-connection
+//!   state machines with incremental HTTP/1.1 parsing and pipelining,
+//!   batched/partial-write-aware output, a timer wheel for idle
+//!   deadlines, and a dispatch pool running the blocking engine
+//!   submit/wait off the loops.
+//! * [`http`] / [`client`] — the HTTP/1.1 route table + response
+//!   framing over [`net`], exposing the `/v1` single-model routes
 //!   (`POST /v1/infer`, `POST /v1/plan`, `GET /v1/stats`,
 //!   `GET /v1/healthz` — a bit-compatible shim over the registry's
 //!   default model) and the `/v2/models/...` registry routes (JSON
 //!   bodies via [`util::json`](crate::util::json)), plus the matching
-//!   minimal client and load generator behind `adapt client`.
+//!   minimal client and a worker-pool load generator behind
+//!   `adapt client` that multiplexes thousands of keep-alive
+//!   connections over a bounded thread count.
 //!
 //! The old `InferenceEngine::submit`/`infer` surface still works — it is
 //! a shim over the same typed path — so in-process consumers (benches,
@@ -35,6 +44,7 @@
 pub mod api;
 pub mod client;
 pub mod http;
+pub mod net;
 pub mod registry;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,335 @@
+//! Per-connection state for the readiness loop: an incremental
+//! HTTP/1.1 parser plus buffered output.
+//!
+//! The parser consumes whatever bytes have arrived so far and either
+//! produces a complete request, asks for more, or reports a framing
+//! error — byte-for-byte the same accept/reject decisions as the old
+//! blocking reader (`MAX_HEAD`, malformed request lines, bad
+//! `Content-Length`, `413` before the body is read, `connection:
+//! close`). Pipelined requests simply stay in the buffer: the loop
+//! calls [`Conn::try_parse`] again after answering the previous one.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::time::Instant;
+
+use super::Interest;
+use crate::service::api::ServiceError;
+
+/// Request head cap, matching the old blocking server.
+const MAX_HEAD: usize = 16 << 10;
+
+/// How many parsed-but-unanswered requests one connection may queue
+/// (pipelining); beyond this the loop stops reading from the socket,
+/// which backpressures the peer through TCP.
+pub const PIPELINE_MAX: usize = 8;
+
+/// One parsed request (shared with the router in `service::http`).
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    pub keep_alive: bool,
+}
+
+/// Outcome of one [`Conn::try_parse`] pass.
+pub enum ParseStep {
+    /// Head or body incomplete; read more bytes first.
+    NeedMore,
+    /// A full request was consumed from the buffer.
+    Request(HttpRequest),
+    /// Unrecoverable framing error: answer it, then close.
+    Error(ServiceError),
+}
+
+/// State for one live connection on an event loop.
+pub struct Conn {
+    pub stream: TcpStream,
+    /// Unconsumed inbound bytes (head-in-progress + pipelined data).
+    pub read_buf: Vec<u8>,
+    /// Serialized responses not yet accepted by the kernel.
+    pub out: Vec<u8>,
+    /// How far into `out` the kernel has taken (partial writes).
+    pub out_start: usize,
+    /// Parsed requests waiting for a dispatch slot, answered in order.
+    pub parsed: VecDeque<HttpRequest>,
+    /// A request from this connection is in the dispatch pool/engine.
+    pub inflight: bool,
+    /// Idle deadline: when the *current request* must be complete by.
+    /// Re-armed when a response finishes, not when bytes trickle in,
+    /// so slow-loris peers still expire.
+    pub deadline: Instant,
+    /// Close once `out` drains (error responses, `connection: close`).
+    pub close_after_write: bool,
+    /// Framing failed: keep reading and discarding so the peer's
+    /// unread data cannot trigger an RST that eats our error response.
+    pub discard_input: bool,
+    /// Peer sent EOF (half-close): no more requests will arrive, but
+    /// responses already earned still get written before the close.
+    pub peer_eof: bool,
+    /// Serialized framing-error response, held back until every
+    /// previously pipelined request has been answered (responses stay
+    /// in request order, exactly like the sequential blocking server).
+    pub pending_error: Option<Vec<u8>>,
+    /// Interest currently registered with the poller.
+    pub interest: Interest,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, deadline: Instant) -> Conn {
+        Conn {
+            stream,
+            read_buf: Vec::new(),
+            out: Vec::new(),
+            out_start: 0,
+            parsed: VecDeque::new(),
+            inflight: false,
+            deadline,
+            close_after_write: false,
+            discard_input: false,
+            peer_eof: false,
+            pending_error: None,
+            interest: Interest::READ,
+        }
+    }
+
+    /// Bytes still queued for the peer.
+    pub fn pending_out(&self) -> usize {
+        self.out.len() - self.out_start
+    }
+
+    /// Append a serialized response; compacts the flushed prefix first
+    /// so the buffer never grows unboundedly across keep-alive reuse.
+    pub fn queue_output(&mut self, bytes: &[u8]) {
+        if self.out_start > 0 {
+            self.out.drain(..self.out_start);
+            self.out_start = 0;
+        }
+        self.out.extend_from_slice(bytes);
+    }
+
+    /// True when the connection has nothing in flight, nothing queued,
+    /// and nothing buffered — safe to reap on idle timeout.
+    pub fn is_quiescent(&self) -> bool {
+        !self.inflight
+            && self.parsed.is_empty()
+            && self.pending_out() == 0
+            && self.pending_error.is_none()
+    }
+
+    /// Try to consume one complete request from `read_buf`.
+    pub fn try_parse(&mut self, max_body: usize) -> ParseStep {
+        let buf = &self.read_buf;
+        let Some(head_end) = find_head_end(buf) else {
+            if buf.len() > MAX_HEAD {
+                return ParseStep::Error(ServiceError::BadRequest(
+                    "header block too large".into(),
+                ));
+            }
+            return ParseStep::NeedMore;
+        };
+        let head = match std::str::from_utf8(&buf[..head_end]) {
+            Ok(s) => s,
+            Err(_) => {
+                return ParseStep::Error(ServiceError::BadRequest("non-UTF-8 header".into()))
+            }
+        };
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+            _ => {
+                return ParseStep::Error(ServiceError::BadRequest(format!(
+                    "malformed request line {request_line:?}"
+                )))
+            }
+        };
+        if !version.starts_with("HTTP/1.") {
+            return ParseStep::Error(ServiceError::BadRequest(format!(
+                "unsupported version {version:?}"
+            )));
+        }
+        let mut content_length = 0usize;
+        let mut keep_alive = true; // HTTP/1.1 default
+        for line in lines {
+            let Some((k, v)) = line.split_once(':') else {
+                continue;
+            };
+            let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
+            if k == "content-length" {
+                content_length = match v.parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return ParseStep::Error(ServiceError::BadRequest(format!(
+                            "bad content-length {v:?}"
+                        )))
+                    }
+                };
+            } else if k == "connection" {
+                keep_alive = !v.eq_ignore_ascii_case("close");
+            }
+        }
+        if content_length > max_body {
+            // Refused before the body is read, like the old server.
+            return ParseStep::Error(ServiceError::BodyTooLarge {
+                got: content_length,
+                max: max_body,
+            });
+        }
+        let body_start = head_end + 4;
+        if buf.len() < body_start + content_length {
+            return ParseStep::NeedMore;
+        }
+        let body = buf[body_start..body_start + content_length].to_vec();
+        // Whatever follows is the next pipelined request.
+        self.read_buf.drain(..body_start + content_length);
+        ParseStep::Request(HttpRequest {
+            method,
+            path,
+            body,
+            keep_alive,
+        })
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::{Duration, Instant};
+
+    fn test_conn() -> Conn {
+        // try_parse never touches the socket, but Conn owns one; use a
+        // real loopback pair so the test stays dependency-free.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        Conn::new(stream, Instant::now() + Duration::from_secs(60))
+    }
+
+    fn feed(c: &mut Conn, bytes: &[u8]) {
+        c.read_buf.extend_from_slice(bytes);
+    }
+
+    #[test]
+    fn parses_incrementally_across_fragments() {
+        let mut c = test_conn();
+        feed(&mut c, b"POST /v1/infer HTTP/1.1\r\ncontent-le");
+        assert!(matches!(c.try_parse(1024), ParseStep::NeedMore));
+        feed(&mut c, b"ngth: 5\r\n\r\nhel");
+        assert!(matches!(c.try_parse(1024), ParseStep::NeedMore));
+        feed(&mut c, b"lo");
+        match c.try_parse(1024) {
+            ParseStep::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/infer");
+                assert_eq!(r.body, b"hello");
+                assert!(r.keep_alive);
+            }
+            _ => panic!("expected a request"),
+        }
+        assert!(c.read_buf.is_empty());
+    }
+
+    #[test]
+    fn pipelined_requests_stay_buffered() {
+        let mut c = test_conn();
+        feed(
+            &mut c,
+            b"GET /v1/healthz HTTP/1.1\r\n\r\nGET /v1/stats HTTP/1.1\r\n\r\n",
+        );
+        match c.try_parse(1024) {
+            ParseStep::Request(r) => assert_eq!(r.path, "/v1/healthz"),
+            _ => panic!("expected first request"),
+        }
+        match c.try_parse(1024) {
+            ParseStep::Request(r) => assert_eq!(r.path, "/v1/stats"),
+            _ => panic!("expected second request"),
+        }
+        assert!(matches!(c.try_parse(1024), ParseStep::NeedMore));
+    }
+
+    #[test]
+    fn connection_close_clears_keep_alive() {
+        let mut c = test_conn();
+        feed(
+            &mut c,
+            b"GET /v1/healthz HTTP/1.1\r\nConnection: Close\r\n\r\n",
+        );
+        match c.try_parse(1024) {
+            ParseStep::Request(r) => assert!(!r.keep_alive),
+            _ => panic!("expected a request"),
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_bad_request() {
+        let mut c = test_conn();
+        feed(&mut c, b"GET / HTTP/1.1\r\nx-pad: ");
+        let pad = vec![b'a'; MAX_HEAD + 1];
+        feed(&mut c, &pad);
+        match c.try_parse(1024) {
+            ParseStep::Error(ServiceError::BadRequest(m)) => {
+                assert_eq!(m, "header block too large")
+            }
+            _ => panic!("expected header-too-large"),
+        }
+    }
+
+    #[test]
+    fn body_over_limit_is_413_before_body_arrives() {
+        let mut c = test_conn();
+        // Only the head is present; the verdict must not wait for the body.
+        feed(&mut c, b"POST /v1/infer HTTP/1.1\r\ncontent-length: 999\r\n\r\n");
+        match c.try_parse(100) {
+            ParseStep::Error(ServiceError::BodyTooLarge { got, max }) => {
+                assert_eq!((got, max), (999, 100));
+            }
+            _ => panic!("expected body-too-large"),
+        }
+    }
+
+    #[test]
+    fn malformed_line_and_version_rejected() {
+        let mut c = test_conn();
+        feed(&mut c, b"NONSENSE\r\n\r\n");
+        assert!(matches!(
+            c.try_parse(1024),
+            ParseStep::Error(ServiceError::BadRequest(_))
+        ));
+
+        let mut c = test_conn();
+        feed(&mut c, b"GET / SPDY/3\r\n\r\n");
+        match c.try_parse(1024) {
+            ParseStep::Error(ServiceError::BadRequest(m)) => {
+                assert!(m.contains("unsupported version"), "{m}")
+            }
+            _ => panic!("expected version rejection"),
+        }
+
+        let mut c = test_conn();
+        feed(&mut c, b"POST / HTTP/1.1\r\ncontent-length: nope\r\n\r\n");
+        match c.try_parse(1024) {
+            ParseStep::Error(ServiceError::BadRequest(m)) => {
+                assert!(m.contains("bad content-length"), "{m}")
+            }
+            _ => panic!("expected content-length rejection"),
+        }
+    }
+
+    #[test]
+    fn output_buffer_compacts_flushed_prefix() {
+        let mut c = test_conn();
+        c.queue_output(b"0123456789");
+        c.out_start = 6;
+        assert_eq!(c.pending_out(), 4);
+        c.queue_output(b"ab");
+        assert_eq!(c.out_start, 0);
+        assert_eq!(c.out, b"6789ab");
+        assert_eq!(c.pending_out(), 6);
+    }
+}

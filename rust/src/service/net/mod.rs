@@ -1,0 +1,533 @@
+//! Readiness-loop networking for the HTTP front-end.
+//!
+//! # Architecture
+//!
+//! The serving tier used to run one OS thread per connection over
+//! blocking sockets; it fell over at a few hundred keep-alive
+//! connections. This module replaces that accept path with a classic
+//! reactor: a small fixed pool of **event-loop threads** (default
+//! `ADAPT_THREADS`), each owning a [`Poller`] — an abstraction over raw
+//! `epoll` syscalls on Linux with a portable `poll(2)` tier — plus a
+//! slab of per-connection state machines and a hashed timer wheel for
+//! idle deadlines. Everything is level-triggered and non-blocking:
+//!
+//! - every loop registers its own `try_clone` of the listener, so the
+//!   kernel distributes accepts across loops;
+//! - reads feed an **incremental HTTP/1.1 parser** ([`conn`]) that
+//!   supports pipelining — multiple requests parsed from one read are
+//!   queued and answered strictly in order;
+//! - writes are buffered and batched; a partial write registers
+//!   write-interest and the loop finishes the flush when the socket
+//!   drains, so a slow reader never blocks a thread;
+//! - parsed requests are handed to a small **dispatch pool** which runs
+//!   the (blocking) engine submit/wait off the event loops and posts
+//!   the serialized response back through a completion queue + pipe
+//!   waker.
+//!
+//! # Backend selection
+//!
+//! [`Backend::from_env`] picks `epoll` on Linux and `poll` elsewhere;
+//! `ADAPT_NET=poll` forces the portable tier (CI runs the full suite
+//! both ways), `ADAPT_NET=epoll` forces epoll. The two backends are
+//! behaviorally identical — same level-triggered semantics, same
+//! readable/writable/hangup event model — so every test passes
+//! bit-for-bit under either.
+//!
+//! # Determinism contract
+//!
+//! The loop changes *scheduling*, never *semantics*: requests still
+//! flow into the same bounded engine queue, batches still never mix
+//! plan versions, and response bytes for a given request are identical
+//! to the thread-per-connection server. Idle-timeout and `max_conns`
+//! behavior are preserved: the idle window covers an entire request
+//! (trickling bytes does not extend it), connections busy in the engine
+//! are never reaped, and the live-connection cap still answers 503
+//! with `Retry-After` semantics via the standard error JSON.
+
+pub mod conn;
+pub mod server;
+pub mod sys;
+
+use std::io;
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, RawFd};
+use std::time::{Duration, Instant};
+
+/// Which readiness backend a server runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Raw `epoll` syscalls (Linux only; the default there).
+    Epoll,
+    /// Portable `poll(2)` tier (default off Linux; `ADAPT_NET=poll`).
+    Poll,
+}
+
+impl Backend {
+    /// Resolve the backend from `ADAPT_NET` (`"epoll"` / `"poll"`;
+    /// unset or empty picks the platform default).
+    pub fn from_env() -> Backend {
+        match std::env::var("ADAPT_NET").as_deref() {
+            Ok("poll") => Backend::Poll,
+            Ok("epoll") => Backend::Epoll,
+            _ => Backend::default(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Epoll => "epoll",
+            Backend::Poll => "poll",
+        }
+    }
+}
+
+impl Default for Backend {
+    fn default() -> Backend {
+        if cfg!(target_os = "linux") {
+            Backend::Epoll
+        } else {
+            Backend::Poll
+        }
+    }
+}
+
+/// What a registration wants to hear about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+    pub const BOTH: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer closed or the socket errored; the connection is done.
+    pub hangup: bool,
+}
+
+/// Level-triggered readiness poller over epoll (Linux) or `poll(2)`.
+pub enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+    Poll(PollPoller),
+}
+
+impl Poller {
+    pub fn new(backend: Backend) -> io::Result<Poller> {
+        match backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll => Ok(Poller::Epoll(EpollPoller::new()?)),
+            #[cfg(not(target_os = "linux"))]
+            Backend::Epoll => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "epoll backend requires Linux (set ADAPT_NET=poll)",
+            )),
+            Backend::Poll => Ok(Poller::Poll(PollPoller::default())),
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(_) => Backend::Epoll,
+            Poller::Poll(_) => Backend::Poll,
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.register(fd, token, interest),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.reregister(fd, token, interest),
+            Poller::Poll(p) => p.reregister(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.deregister(fd),
+            Poller::Poll(p) => p.deregister(fd),
+        }
+    }
+
+    /// Block up to `timeout` for readiness; append events to `out`.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Duration) -> io::Result<()> {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(out, ms),
+            Poller::Poll(p) => p.wait(out, ms),
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub struct EpollPoller {
+    epfd: RawFd,
+    buf: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    fn new() -> io::Result<EpollPoller> {
+        Ok(EpollPoller {
+            epfd: sys::epoll_create()?,
+            buf: vec![sys::EpollEvent { events: 0, data: 0 }; 1024],
+        })
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = sys::EPOLLRDHUP;
+        if interest.readable {
+            m |= sys::EPOLLIN;
+        }
+        if interest.writable {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        sys::epoll_add(self.epfd, fd, Self::mask(interest), token)
+    }
+
+    fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        sys::epoll_mod(self.epfd, fd, Self::mask(interest), token)
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        sys::epoll_del(self.epfd, fd)
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        let n = sys::epoll_wait_ms(self.epfd, &mut self.buf, timeout_ms)?;
+        for ev in &self.buf[..n] {
+            // Copy out of the (possibly packed) struct before use.
+            let events = ev.events;
+            let data = ev.data;
+            let hangup = events & (sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP) != 0;
+            out.push(Event {
+                token: data,
+                readable: events & sys::EPOLLIN != 0 || hangup,
+                writable: events & sys::EPOLLOUT != 0,
+                hangup,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        sys::close_fd(self.epfd);
+    }
+}
+
+/// `poll(2)` backend: a dense `pollfd` array plus a parallel token
+/// array; removal is `swap_remove` with an fd→index map kept in sync.
+#[derive(Default)]
+pub struct PollPoller {
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<u64>,
+    index: std::collections::HashMap<RawFd, usize>,
+}
+
+impl PollPoller {
+    fn events(interest: Interest) -> std::ffi::c_short {
+        let mut e = 0;
+        if interest.readable {
+            e |= sys::POLLIN;
+        }
+        if interest.writable {
+            e |= sys::POLLOUT;
+        }
+        e
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if self.index.contains_key(&fd) {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                "fd already registered",
+            ));
+        }
+        self.index.insert(fd, self.fds.len());
+        self.fds.push(sys::PollFd {
+            fd,
+            events: Self::events(interest),
+            revents: 0,
+        });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn reregister(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let &i = self
+            .index
+            .get(&fd)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+        self.fds[i].events = Self::events(interest);
+        self.tokens[i] = token;
+        Ok(())
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        let i = self
+            .index
+            .remove(&fd)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+        self.fds.swap_remove(i);
+        self.tokens.swap_remove(i);
+        if i < self.fds.len() {
+            self.index.insert(self.fds[i].fd, i);
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        for f in &mut self.fds {
+            f.revents = 0;
+        }
+        let n = sys::poll_ms(&mut self.fds, timeout_ms)?;
+        if n == 0 {
+            return Ok(());
+        }
+        for (f, &token) in self.fds.iter().zip(&self.tokens) {
+            let r = f.revents;
+            if r == 0 {
+                continue;
+            }
+            let hangup = r & (sys::POLLHUP | sys::POLLERR | sys::POLLNVAL) != 0;
+            out.push(Event {
+                token,
+                readable: r & sys::POLLIN != 0 || hangup,
+                writable: r & sys::POLLOUT != 0,
+                hangup,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Cross-thread wakeup for a loop parked in [`Poller::wait`]: a
+/// non-blocking pipe whose read end is registered like any socket.
+pub struct Waker {
+    write_fd: RawFd,
+}
+
+impl Waker {
+    /// One byte, best-effort: a full pipe means a wake is already
+    /// pending, a broken pipe means the loop already exited.
+    pub fn wake(&self) {
+        sys::write_byte(self.write_fd);
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        sys::close_fd(self.write_fd);
+    }
+}
+
+/// The loop-owned read end of a [`Waker`] pipe.
+pub struct WakeReader {
+    read_fd: RawFd,
+}
+
+impl WakeReader {
+    pub fn fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Swallow all pending wake bytes.
+    pub fn drain(&self) {
+        sys::drain_fd(self.read_fd);
+    }
+}
+
+impl Drop for WakeReader {
+    fn drop(&mut self) {
+        sys::close_fd(self.read_fd);
+    }
+}
+
+/// Build a connected waker pair.
+pub fn waker_pair() -> io::Result<(Waker, WakeReader)> {
+    let (r, w) = sys::make_pipe()?;
+    Ok((Waker { write_fd: w }, WakeReader { read_fd: r }))
+}
+
+/// Hashed timer wheel for idle deadlines: `slots × tick` of horizon,
+/// one live entry per connection. Entries are `(deadline, token)`;
+/// [`TimerWheel::take_due`] hands back every token whose slot has
+/// rotated past, re-queueing entries whose deadline is still in the
+/// future (including ones originally beyond the horizon). The caller
+/// re-checks the connection's *actual* deadline — deadlines move every
+/// time a request completes, and rather than chase each move with a
+/// removal, stale entries are simply dropped or re-inserted on fire.
+pub struct TimerWheel {
+    slots: Vec<Vec<(Instant, u64)>>,
+    tick: Duration,
+    cursor: usize,
+    /// Wheel time: everything strictly before `base` has been scanned.
+    base: Instant,
+}
+
+impl TimerWheel {
+    pub fn new(slots: usize, tick: Duration) -> TimerWheel {
+        assert!(slots >= 2, "timer wheel needs at least two slots");
+        TimerWheel {
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            tick,
+            cursor: 0,
+            base: Instant::now(),
+        }
+    }
+
+    pub fn tick(&self) -> Duration {
+        self.tick
+    }
+
+    /// Queue `token` to fire at (or shortly after) `deadline`.
+    pub fn insert(&mut self, deadline: Instant, token: u64) {
+        let ticks = if deadline <= self.base {
+            1
+        } else {
+            let dt = deadline.duration_since(self.base);
+            // Round up so an entry never fires a slot early, and clamp
+            // to one lap; beyond-horizon entries re-insert on scan.
+            let t = (dt.as_nanos() / self.tick.as_nanos().max(1)) as usize + 1;
+            t.clamp(1, self.slots.len() - 1)
+        };
+        let slot = (self.cursor + ticks) % self.slots.len();
+        self.slots[slot].push((deadline, token));
+    }
+
+    /// Advance the wheel to `now`, returning tokens whose recorded
+    /// deadline has passed. Bounded to one full lap per call.
+    pub fn take_due(&mut self, now: Instant) -> Vec<u64> {
+        let mut due = Vec::new();
+        let mut laps = 0;
+        while now.duration_since(self.base) >= self.tick && laps < self.slots.len() {
+            self.cursor = (self.cursor + 1) % self.slots.len();
+            self.base += self.tick;
+            laps += 1;
+            let entries = std::mem::take(&mut self.slots[self.cursor]);
+            for (deadline, token) in entries {
+                if deadline <= now {
+                    due.push(token);
+                } else {
+                    self.insert(deadline, token);
+                }
+            }
+        }
+        due
+    }
+}
+
+/// Shrink a client socket's kernel receive buffer (tests use this to
+/// force the server down its partial-write path).
+pub fn set_recv_buffer(stream: &TcpStream, bytes: usize) -> io::Result<()> {
+    sys::set_rcvbuf(stream.as_raw_fd(), bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn wheel_fires_after_deadline_not_before() {
+        let mut w = TimerWheel::new(8, Duration::from_millis(10));
+        let start = Instant::now();
+        w.insert(start + Duration::from_millis(25), 7);
+        assert!(w.take_due(start + Duration::from_millis(10)).is_empty());
+        let due = w.take_due(start + Duration::from_millis(60));
+        assert_eq!(due, vec![7]);
+        // Fired entries are gone.
+        assert!(w.take_due(start + Duration::from_millis(200)).is_empty());
+    }
+
+    #[test]
+    fn wheel_requeues_beyond_horizon() {
+        // Horizon is 8 * 5ms = 40ms; a 100ms deadline must survive the
+        // first lap and fire on a later one.
+        let mut w = TimerWheel::new(8, Duration::from_millis(5));
+        let start = Instant::now();
+        w.insert(start + Duration::from_millis(100), 42);
+        assert!(w.take_due(start + Duration::from_millis(50)).is_empty());
+        assert_eq!(w.take_due(start + Duration::from_millis(120)), vec![42]);
+    }
+
+    #[test]
+    fn wheel_handles_many_tokens_one_slot() {
+        let mut w = TimerWheel::new(4, Duration::from_millis(10));
+        let start = Instant::now();
+        for t in 0..16 {
+            w.insert(start + Duration::from_millis(15), t);
+        }
+        let mut due = w.take_due(start + Duration::from_millis(40));
+        due.sort_unstable();
+        assert_eq!(due, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backend_from_env_strings() {
+        // from_env reads the process env, so only exercise the parse
+        // paths that do not depend on ambient ADAPT_NET.
+        assert_eq!(Backend::Epoll.name(), "epoll");
+        assert_eq!(Backend::Poll.name(), "poll");
+        let default = Backend::default();
+        if cfg!(target_os = "linux") {
+            assert_eq!(default, Backend::Epoll);
+        } else {
+            assert_eq!(default, Backend::Poll);
+        }
+    }
+
+    #[test]
+    fn poll_poller_register_cycle() {
+        // The PollPoller bookkeeping (swap_remove + index map) is pure
+        // data structure work; exercise it without real sockets.
+        let mut p = PollPoller::default();
+        p.register(10, 100, Interest::READ).unwrap();
+        p.register(11, 101, Interest::BOTH).unwrap();
+        p.register(12, 102, Interest::WRITE).unwrap();
+        assert!(p.register(11, 999, Interest::READ).is_err());
+        p.deregister(10).unwrap();
+        // 12 swapped into slot 0; reregister must still find it.
+        p.reregister(12, 202, Interest::READ).unwrap();
+        assert_eq!(p.tokens[p.index[&12]], 202);
+        p.deregister(12).unwrap();
+        p.deregister(11).unwrap();
+        assert!(p.fds.is_empty());
+        assert!(p.deregister(11).is_err());
+    }
+}

@@ -1,0 +1,611 @@
+//! The readiness-loop server: event-loop threads + a dispatch pool.
+//!
+//! Each event-loop thread owns a [`Poller`], a `try_clone` of the
+//! listener (the kernel's level-triggered accept readiness spreads
+//! connections across loops), a slab of [`Conn`] state machines, and a
+//! [`TimerWheel`] enforcing idle deadlines. Parsed requests are pushed
+//! onto a shared dispatch [`ThreadPool`] where the *blocking* part —
+//! the engine submit + wait — runs; the serialized response comes back
+//! through a per-loop completion queue and a pipe [`Waker`]. Event
+//! loops therefore never block on the engine: a loop keeps thousands
+//! of connections moving while the dispatch pool's depth (not the
+//! connection count) bounds how much work sits in the engine queue.
+//!
+//! Tokens are `slot | epoch << 32`: the epoch increments every time a
+//! slab slot is reused, so completions and timer entries that outlive
+//! their connection are recognized as stale and dropped instead of
+//! touching an unrelated connection.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::conn::{Conn, ParseStep, PIPELINE_MAX};
+use super::{sys, waker_pair, Backend, Event, Interest, Poller, TimerWheel, Waker, WakeReader};
+use crate::service::api::ServiceError;
+use crate::service::http::{self, ServeOptions};
+use crate::service::registry::ModelRegistry;
+use crate::util::threadpool::{default_threads, ThreadPool};
+
+/// Poller token for the listener registration.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Poller token for the waker pipe.
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+/// Max accepts drained per listener readiness event (fairness).
+const ACCEPT_BURST: usize = 128;
+/// Max socket reads per connection per readiness event (fairness);
+/// level-triggered readiness re-fires for whatever is left.
+const READ_BURST: usize = 8;
+/// Timer wheel size; deadlines beyond `slots × tick` re-insert on scan.
+const WHEEL_SLOTS: usize = 512;
+
+fn token(slot: usize, epoch: u32) -> u64 {
+    slot as u64 | ((epoch as u64) << 32)
+}
+
+fn untoken(t: u64) -> (usize, u32) {
+    ((t & 0xFFFF_FFFF) as usize, (t >> 32) as u32)
+}
+
+/// A finished dispatch job: the serialized response for one request.
+struct Completion {
+    slot: usize,
+    epoch: u32,
+    bytes: Vec<u8>,
+    keep_alive: bool,
+}
+
+/// The cross-thread half of one event loop: where dispatch workers
+/// park finished responses, plus the waker that un-parks the loop.
+struct LoopShared {
+    completions: Mutex<Vec<Completion>>,
+    waker: Waker,
+}
+
+/// Slot-reuse-safe connection store.
+#[derive(Default)]
+struct Slab {
+    entries: Vec<Option<Conn>>,
+    epochs: Vec<u32>,
+    free: Vec<usize>,
+}
+
+impl Slab {
+    fn insert(&mut self, conn: Conn) -> (usize, u32) {
+        if let Some(slot) = self.free.pop() {
+            self.entries[slot] = Some(conn);
+            (slot, self.epochs[slot])
+        } else {
+            self.entries.push(Some(conn));
+            self.epochs.push(0);
+            (self.entries.len() - 1, 0)
+        }
+    }
+
+    fn remove(&mut self, slot: usize) -> Option<Conn> {
+        let conn = self.entries.get_mut(slot)?.take()?;
+        self.epochs[slot] = self.epochs[slot].wrapping_add(1);
+        self.free.push(slot);
+        Some(conn)
+    }
+
+    fn epoch(&self, slot: usize) -> u32 {
+        self.epochs[slot]
+    }
+
+    /// Occupant of `slot` regardless of epoch (single-loop-local use).
+    fn slot_mut(&mut self, slot: usize) -> Option<&mut Conn> {
+        self.entries.get_mut(slot)?.as_mut()
+    }
+
+    /// Epoch-checked lookup for tokens that crossed threads or time.
+    fn checked_mut(&mut self, slot: usize, epoch: u32) -> Option<&mut Conn> {
+        if self.epochs.get(slot) != Some(&epoch) {
+            return None;
+        }
+        self.slot_mut(slot)
+    }
+}
+
+/// One event-loop thread's whole world.
+struct EventLoop {
+    poller: Poller,
+    listener: TcpListener,
+    conns: Slab,
+    wheel: TimerWheel,
+    shared: Arc<LoopShared>,
+    wake_rx: WakeReader,
+    registry: Arc<ModelRegistry>,
+    dispatch: Arc<ThreadPool>,
+    stop: Arc<AtomicBool>,
+    /// Live connections across *all* loops (the `max_conns` cap).
+    live: Arc<AtomicUsize>,
+    opts: ServeOptions,
+    /// Pre-serialized 503 for over-cap connections.
+    overload: Vec<u8>,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let tick = self.wheel.tick();
+        let mut events: Vec<Event> = Vec::with_capacity(256);
+        while !self.stop.load(Ordering::Acquire) {
+            events.clear();
+            if self.poller.wait(&mut events, tick).is_err() {
+                // Transient wait failure: don't spin hot.
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_WAKER => self.wake_rx.drain(),
+                    TOKEN_LISTENER => {
+                        if ev.readable {
+                            self.accept_burst();
+                        }
+                    }
+                    _ => self.on_conn_event(ev),
+                }
+            }
+            self.apply_completions();
+            self.fire_timers(Instant::now());
+        }
+    }
+
+    // ---- accept ---------------------------------------------------------
+
+    fn accept_burst(&mut self) {
+        for _ in 0..ACCEPT_BURST {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        // Same cap semantics as the thread-per-connection server: count
+        // first, refuse with a short best-effort 503 when over.
+        let n = self.live.fetch_add(1, Ordering::AcqRel) + 1;
+        if n > self.opts.max_conns {
+            self.live.fetch_sub(1, Ordering::AcqRel);
+            refuse_overloaded(stream, &self.overload);
+            return;
+        }
+        // Accepted sockets do not inherit the listener's non-blocking
+        // mode on Linux; set it explicitly.
+        if stream.set_nonblocking(true).is_err() {
+            self.live.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        if let Some(bytes) = self.opts.sndbuf {
+            let _ = sys::set_sndbuf(stream.as_raw_fd(), bytes);
+        }
+        let fd = stream.as_raw_fd();
+        let deadline = Instant::now() + self.opts.idle_timeout;
+        let (slot, epoch) = self.conns.insert(Conn::new(stream, deadline));
+        let tok = token(slot, epoch);
+        if self.poller.register(fd, tok, Interest::READ).is_err() {
+            self.conns.remove(slot);
+            self.live.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+        // Exactly one wheel entry per connection for its whole life:
+        // fires either re-arm (deadline moved) or close.
+        self.wheel.insert(deadline, tok);
+    }
+
+    // ---- per-connection events ------------------------------------------
+
+    fn on_conn_event(&mut self, ev: Event) {
+        let (slot, epoch) = untoken(ev.token);
+        if self.conns.checked_mut(slot, epoch).is_none() {
+            return; // stale: the connection this event was for is gone
+        }
+        if ev.readable {
+            self.on_readable(slot);
+        }
+        if ev.writable {
+            self.flush(slot);
+        }
+    }
+
+    fn on_readable(&mut self, slot: usize) {
+        let mut chunk = [0u8; 16 << 10];
+        let mut dead = false;
+        {
+            let Some(conn) = self.conns.slot_mut(slot) else {
+                return;
+            };
+            let mut budget = READ_BURST;
+            while budget > 0 {
+                if !conn.discard_input && conn.parsed.len() >= PIPELINE_MAX {
+                    break; // pipelining cap: stop reading, TCP pushes back
+                }
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        conn.peer_eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        if !conn.discard_input {
+                            conn.read_buf.extend_from_slice(&chunk[..n]);
+                        }
+                        budget -= 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dead {
+            self.close(slot);
+            return;
+        }
+        self.parse_ready(slot);
+        self.maybe_dispatch(slot);
+        self.finalize(slot);
+    }
+
+    /// Consume as many complete requests from the buffer as the
+    /// pipeline cap allows; a framing error flips the connection into
+    /// discard mode with the error response held for ordered delivery.
+    fn parse_ready(&mut self, slot: usize) {
+        let max_body = self.opts.max_body;
+        let Some(conn) = self.conns.slot_mut(slot) else {
+            return;
+        };
+        while !conn.discard_input && conn.parsed.len() < PIPELINE_MAX {
+            match conn.try_parse(max_body) {
+                ParseStep::NeedMore => break,
+                ParseStep::Request(req) => conn.parsed.push_back(req),
+                ParseStep::Error(e) => {
+                    conn.pending_error =
+                        Some(http::response_bytes(e.http_status(), &e.to_json(), false));
+                    conn.discard_input = true;
+                    conn.read_buf.clear();
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Hand the oldest parsed request to the dispatch pool, at most one
+    /// in flight per connection so responses come back in order.
+    fn maybe_dispatch(&mut self, slot: usize) {
+        let (req, epoch) = {
+            let epoch = self.conns.epoch(slot);
+            let Some(conn) = self.conns.slot_mut(slot) else {
+                return;
+            };
+            if conn.inflight || conn.close_after_write {
+                return;
+            }
+            let Some(req) = conn.parsed.pop_front() else {
+                return;
+            };
+            conn.inflight = true;
+            (req, epoch)
+        };
+        let keep_alive = req.keep_alive;
+        let registry = Arc::clone(&self.registry);
+        let shared = Arc::clone(&self.shared);
+        self.dispatch.submit(move || {
+            let (status, body) = http::route(&registry, &req);
+            let bytes = http::response_bytes(status, &body, keep_alive);
+            shared
+                .completions
+                .lock()
+                .expect("completion queue poisoned")
+                .push(Completion {
+                    slot,
+                    epoch,
+                    bytes,
+                    keep_alive,
+                });
+            shared.waker.wake();
+        });
+    }
+
+    /// Post-event bookkeeping: release a held framing-error response
+    /// once earlier requests are answered, then flush + close/interest.
+    fn finalize(&mut self, slot: usize) {
+        if let Some(conn) = self.conns.slot_mut(slot) {
+            if !conn.inflight && conn.parsed.is_empty() {
+                if let Some(bytes) = conn.pending_error.take() {
+                    conn.queue_output(&bytes);
+                    conn.close_after_write = true;
+                }
+            }
+        }
+        self.flush(slot);
+    }
+
+    /// Write as much queued output as the socket takes; on a partial
+    /// write, register write interest and let readiness finish it.
+    fn flush(&mut self, slot: usize) {
+        let mut dead = false;
+        {
+            let Some(conn) = self.conns.slot_mut(slot) else {
+                return;
+            };
+            while conn.pending_out() > 0 {
+                match conn.stream.write(&conn.out[conn.out_start..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => conn.out_start += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if !dead && conn.pending_out() == 0 {
+                if conn.close_after_write {
+                    dead = true;
+                } else if conn.peer_eof && conn.is_quiescent() {
+                    dead = true; // half-closed peer, nothing left to say
+                }
+            }
+        }
+        if dead {
+            self.close(slot);
+        } else {
+            self.update_interest(slot);
+        }
+    }
+
+    /// Re-register with the poller iff the desired interest changed.
+    fn update_interest(&mut self, slot: usize) {
+        let (fd, tok, desired, current) = {
+            let epoch = self.conns.epoch(slot);
+            let Some(conn) = self.conns.slot_mut(slot) else {
+                return;
+            };
+            let desired = Interest {
+                // Stop reading while the pipeline queue is full; always
+                // keep reading in discard mode (draining the peer).
+                readable: conn.discard_input || conn.parsed.len() < PIPELINE_MAX,
+                writable: conn.pending_out() > 0,
+            };
+            (
+                conn.stream.as_raw_fd(),
+                token(slot, epoch),
+                desired,
+                conn.interest,
+            )
+        };
+        if desired != current && self.poller.reregister(fd, tok, desired).is_ok() {
+            if let Some(conn) = self.conns.slot_mut(slot) {
+                conn.interest = desired;
+            }
+        }
+    }
+
+    // ---- completions and timers -----------------------------------------
+
+    fn apply_completions(&mut self) {
+        let done = {
+            let mut q = self
+                .shared
+                .completions
+                .lock()
+                .expect("completion queue poisoned");
+            std::mem::take(&mut *q)
+        };
+        for c in done {
+            {
+                let Some(conn) = self.conns.checked_mut(c.slot, c.epoch) else {
+                    continue; // connection died while the engine worked
+                };
+                conn.inflight = false;
+                conn.queue_output(&c.bytes);
+                if !c.keep_alive {
+                    conn.close_after_write = true;
+                }
+                // The idle window re-arms per completed request, same
+                // as the blocking server's per-request deadline.
+                conn.deadline = Instant::now() + self.opts.idle_timeout;
+            }
+            // Bytes past the pipeline cap may already sit in read_buf
+            // with the socket quiet — re-parse now that a slot freed.
+            self.parse_ready(c.slot);
+            self.maybe_dispatch(c.slot);
+            self.finalize(c.slot);
+        }
+    }
+
+    fn fire_timers(&mut self, now: Instant) {
+        enum Action {
+            Rearm(Instant),
+            RearmIdle,
+            Close,
+        }
+        for tok in self.wheel.take_due(now) {
+            let (slot, epoch) = untoken(tok);
+            let action = {
+                let Some(conn) = self.conns.checked_mut(slot, epoch) else {
+                    continue; // closed since; entry dies with it
+                };
+                if conn.deadline > now {
+                    Action::Rearm(conn.deadline)
+                } else if conn.inflight || !conn.parsed.is_empty() {
+                    // Busy in the engine: never reap a working
+                    // connection, push the deadline out instead.
+                    Action::RearmIdle
+                } else {
+                    Action::Close
+                }
+            };
+            match action {
+                Action::Rearm(d) => self.wheel.insert(d, tok),
+                Action::RearmIdle => {
+                    let d = now + self.opts.idle_timeout;
+                    if let Some(conn) = self.conns.checked_mut(slot, epoch) {
+                        conn.deadline = d;
+                    }
+                    self.wheel.insert(d, tok);
+                }
+                Action::Close => self.close(slot),
+            }
+        }
+    }
+
+    fn close(&mut self, slot: usize) {
+        if let Some(conn) = self.conns.remove(slot) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.live.fetch_sub(1, Ordering::AcqRel);
+            // Socket closes when `conn` drops here.
+        }
+    }
+}
+
+/// Best-effort 503 on a just-accepted (still blocking) socket.
+fn refuse_overloaded(mut stream: TcpStream, bytes: &[u8]) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.write_all(bytes);
+}
+
+/// The readiness-loop server: owns the event-loop threads and the
+/// dispatch pool; [`HttpServer`](crate::service::http::HttpServer) is
+/// the public facade over it.
+pub struct NetServer {
+    addr: SocketAddr,
+    backend: Backend,
+    stop: Arc<AtomicBool>,
+    loops: Vec<std::thread::JoinHandle<()>>,
+    shared: Vec<Arc<LoopShared>>,
+    dispatch: Option<Arc<ThreadPool>>,
+}
+
+impl NetServer {
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        opts: ServeOptions,
+    ) -> Result<NetServer> {
+        sys::ensure_fd_limit(opts.max_conns.saturating_mul(2) + 256);
+        let backend = opts.net.unwrap_or_else(Backend::from_env);
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("non-blocking listener")?;
+        let addr = listener.local_addr()?;
+        let n_loops = match opts.event_loops {
+            0 => default_threads(),
+            n => n,
+        }
+        .max(1);
+        let n_dispatch = match opts.dispatch_threads {
+            0 => (default_threads() * 2).max(8),
+            n => n,
+        };
+        let dispatch = Arc::new(ThreadPool::new(n_dispatch));
+        let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+        let overload = {
+            let e = ServiceError::Overloaded {
+                conns: opts.max_conns,
+            };
+            http::response_bytes(e.http_status(), &e.to_json(), false)
+        };
+        let mut loops = Vec::with_capacity(n_loops);
+        let mut shared_list = Vec::with_capacity(n_loops);
+        for i in 0..n_loops {
+            let loop_listener = listener.try_clone().context("cloning listener")?;
+            let mut poller = Poller::new(backend)?;
+            let (waker, wake_rx) = waker_pair().context("creating loop waker")?;
+            poller
+                .register(loop_listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+                .context("registering listener")?;
+            poller
+                .register(wake_rx.fd(), TOKEN_WAKER, Interest::READ)
+                .context("registering waker")?;
+            let shared = Arc::new(LoopShared {
+                completions: Mutex::new(Vec::new()),
+                waker,
+            });
+            let el = EventLoop {
+                poller,
+                listener: loop_listener,
+                conns: Slab::default(),
+                wheel: TimerWheel::new(WHEEL_SLOTS, opts.tick),
+                shared: Arc::clone(&shared),
+                wake_rx,
+                registry: Arc::clone(&registry),
+                dispatch: Arc::clone(&dispatch),
+                stop: Arc::clone(&stop),
+                live: Arc::clone(&live),
+                opts,
+                overload: overload.clone(),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("adapt-net-{i}"))
+                .spawn(move || el.run())
+                .context("spawning event loop")?;
+            loops.push(handle);
+            shared_list.push(shared);
+        }
+        Ok(NetServer {
+            addr,
+            backend,
+            stop,
+            loops,
+            shared: shared_list,
+            dispatch: Some(dispatch),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Which readiness backend the loops run on.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Stop the loops (dropping every open connection), then drain and
+    /// join the dispatch pool.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for s in &self.shared {
+            s.waker.wake();
+        }
+        for h in self.loops.drain(..) {
+            let _ = h.join();
+        }
+        // Dropping the pool drains queued jobs; their completions go to
+        // queues nobody reads, which is fine — the sockets are gone.
+        self.dispatch = None;
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

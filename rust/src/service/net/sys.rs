@@ -1,0 +1,297 @@
+//! Raw syscall surface for the readiness loop.
+//!
+//! The build is offline and dependency-free, so instead of the `libc`
+//! crate this file declares the handful of C symbols the poller needs —
+//! they are all in the libc `std` already links — and wraps each in a
+//! thin safe function returning `io::Result`. Everything Linux-specific
+//! (`epoll_*`, `pipe2`, `RLIMIT_NOFILE = 7`) is gated on
+//! `target_os = "linux"`; the portable tier (`poll(2)`, `pipe` +
+//! `fcntl`) covers other Unixes.
+
+use std::ffi::{c_int, c_short, c_void};
+use std::io;
+use std::os::fd::RawFd;
+
+// ---------------------------------------------------------------------------
+// epoll (Linux only)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub const EPOLLIN: u32 = 0x001;
+#[cfg(target_os = "linux")]
+pub const EPOLLOUT: u32 = 0x004;
+#[cfg(target_os = "linux")]
+pub const EPOLLERR: u32 = 0x008;
+#[cfg(target_os = "linux")]
+pub const EPOLLHUP: u32 = 0x010;
+#[cfg(target_os = "linux")]
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_ADD: c_int = 1;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_DEL: c_int = 2;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_MOD: c_int = 3;
+#[cfg(target_os = "linux")]
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+/// The kernel's `struct epoll_event`. Packed on x86_64 (kernel ABI);
+/// naturally aligned elsewhere — the same split the `libc` crate makes.
+#[cfg(target_os = "linux")]
+#[derive(Clone, Copy)]
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, evs: *mut EpollEvent, max: c_int, timeout_ms: c_int) -> c_int;
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_create() -> io::Result<RawFd> {
+    let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(fd)
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_op(epfd: RawFd, op: c_int, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    let mut ev = EpollEvent { events, data };
+    let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_add(epfd: RawFd, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_ADD, fd, events, data)
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_mod(epfd: RawFd, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_MOD, fd, events, data)
+}
+
+#[cfg(target_os = "linux")]
+pub fn epoll_del(epfd: RawFd, fd: RawFd) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_DEL, fd, 0, 0)
+}
+
+/// Wait for events; `EINTR` is reported as zero events, not an error.
+#[cfg(target_os = "linux")]
+pub fn epoll_wait_ms(epfd: RawFd, buf: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+    let n = unsafe { epoll_wait(epfd, buf.as_mut_ptr(), buf.len() as c_int, timeout_ms) };
+    if n < 0 {
+        let e = io::Error::last_os_error();
+        if e.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(e);
+    }
+    Ok(n as usize)
+}
+
+// ---------------------------------------------------------------------------
+// poll (portable tier)
+// ---------------------------------------------------------------------------
+
+pub const POLLIN: c_short = 0x001;
+pub const POLLOUT: c_short = 0x004;
+pub const POLLERR: c_short = 0x008;
+pub const POLLHUP: c_short = 0x010;
+pub const POLLNVAL: c_short = 0x020;
+
+/// `struct pollfd` — identical layout on every Unix.
+#[derive(Clone, Copy)]
+#[repr(C)]
+pub struct PollFd {
+    pub fd: c_int,
+    pub events: c_short,
+    pub revents: c_short,
+}
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::ffi::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = u32;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn setsockopt(
+        fd: c_int,
+        level: c_int,
+        optname: c_int,
+        optval: *const c_void,
+        optlen: u32,
+    ) -> c_int;
+}
+
+/// Poll `fds`; `EINTR` is reported as zero ready fds, not an error.
+pub fn poll_ms(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+    if n < 0 {
+        let e = io::Error::last_os_error();
+        if e.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(e);
+    }
+    Ok(n as usize)
+}
+
+pub fn close_fd(fd: RawFd) {
+    unsafe {
+        close(fd);
+    }
+}
+
+/// Best-effort single-byte write (the waker). `EAGAIN` (pipe already
+/// full, a wake is pending) and `EPIPE` (loop gone) are both fine.
+pub fn write_byte(fd: RawFd) {
+    let b = [1u8];
+    unsafe {
+        write(fd, b.as_ptr() as *const c_void, 1);
+    }
+}
+
+/// Drain a non-blocking pipe read end completely.
+pub fn drain_fd(fd: RawFd) {
+    let mut buf = [0u8; 64];
+    loop {
+        let n = unsafe { read(fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+        if n <= 0 {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pipe (the loop waker)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub fn make_pipe() -> io::Result<(RawFd, RawFd)> {
+    const O_NONBLOCK: c_int = 0o4000;
+    const O_CLOEXEC: c_int = 0o2000000;
+    extern "C" {
+        fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+    }
+    let mut fds: [c_int; 2] = [0; 2];
+    let rc = unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok((fds[0], fds[1]))
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn make_pipe() -> io::Result<(RawFd, RawFd)> {
+    const F_SETFL: c_int = 4;
+    const F_SETFD: c_int = 2;
+    const FD_CLOEXEC: c_int = 1;
+    const O_NONBLOCK: c_int = 0x0004; // BSD/macOS value
+    extern "C" {
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    }
+    let mut fds: [c_int; 2] = [0; 2];
+    let rc = unsafe { pipe(fds.as_mut_ptr()) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    for fd in fds {
+        unsafe {
+            fcntl(fd, F_SETFL, O_NONBLOCK);
+            fcntl(fd, F_SETFD, FD_CLOEXEC);
+        }
+    }
+    Ok((fds[0], fds[1]))
+}
+
+// ---------------------------------------------------------------------------
+// Socket buffer knobs (tests force partial writes with tiny buffers)
+// ---------------------------------------------------------------------------
+
+const SOL_SOCKET: c_int = 1;
+const SO_RCVBUF: c_int = 8;
+const SO_SNDBUF: c_int = 7;
+
+fn set_buf(fd: RawFd, opt: c_int, bytes: usize) -> io::Result<()> {
+    let v = bytes as c_int;
+    let rc = unsafe {
+        setsockopt(
+            fd,
+            SOL_SOCKET,
+            opt,
+            &v as *const c_int as *const c_void,
+            std::mem::size_of::<c_int>() as u32,
+        )
+    };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Set `SO_SNDBUF` (the kernel typically doubles the value).
+pub fn set_sndbuf(fd: RawFd, bytes: usize) -> io::Result<()> {
+    set_buf(fd, SO_SNDBUF, bytes)
+}
+
+/// Set `SO_RCVBUF` (the kernel typically doubles the value).
+pub fn set_rcvbuf(fd: RawFd, bytes: usize) -> io::Result<()> {
+    set_buf(fd, SO_RCVBUF, bytes)
+}
+
+// ---------------------------------------------------------------------------
+// File-descriptor limit (thousands of sockets need headroom)
+// ---------------------------------------------------------------------------
+
+/// Raise the soft `RLIMIT_NOFILE` toward `want` (capped by the hard
+/// limit). Best-effort: serving or load-generating thousands of
+/// connections otherwise dies on `EMFILE` under the common 1024 default.
+#[cfg(target_os = "linux")]
+pub fn ensure_fd_limit(want: usize) {
+    const RLIMIT_NOFILE: c_int = 7;
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    }
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return;
+    }
+    let want = want as u64;
+    if lim.cur >= want {
+        return;
+    }
+    let raised = RLimit {
+        cur: want.min(lim.max),
+        max: lim.max,
+    };
+    unsafe {
+        setrlimit(RLIMIT_NOFILE, &raised);
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn ensure_fd_limit(_want: usize) {}

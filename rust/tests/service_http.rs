@@ -3,10 +3,20 @@
 //! `infer()` reference outputs bit-for-bit, live plan hot-swap with
 //! generation integrity, and mid-run stats — all artifact-free on the
 //! emulator backend over real TCP connections.
+//!
+//! The second half is adversarial transport tests against the
+//! readiness-loop front-end: slowloris header trickling hits the idle
+//! deadline, stalled readers are dropped mid-body while cooperating
+//! clients get every byte of a response far larger than the send
+//! buffer, pipelined requests beyond `PIPELINE_MAX` come back in
+//! order, the connection cap refuses with a typed 503 and recovers,
+//! and the portable `poll(2)` backend serves the same load.
 
 use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use adapt::coordinator::engine::{EmulatorSpec, EngineConfig};
 use adapt::emulator::{Executor, Style, Value};
@@ -14,6 +24,8 @@ use adapt::graph::{retransform, ExecutionPlan, LayerMode, Model, Node, Op, Param
 use adapt::lut::LutRegistry;
 use adapt::service::client::{self, http_call};
 use adapt::service::http::{HttpServer, ServeOptions};
+use adapt::service::net::conn::PIPELINE_MAX;
+use adapt::service::net::{self, Backend};
 use adapt::service::{AdaptService, InferRequest, ServiceError};
 use adapt::tensor::Tensor;
 use adapt::util::json::Json;
@@ -464,4 +476,298 @@ fn typed_service_layer_without_http() {
 
     let final_stats = service.shutdown().unwrap();
     assert_eq!(final_stats.total.requests, 2);
+}
+
+// ---------------------------------------------------------------------
+// Adversarial transport tests against the readiness-loop front-end.
+// ---------------------------------------------------------------------
+
+/// `synth_model` with the final linear widened to 8192 outputs, so one
+/// response body is ~100 KB of JSON — enough to overflow a small
+/// `SO_SNDBUF` and force the server's partial-write path.
+fn wide_model() -> Model {
+    let mut m = synth_model();
+    m.name = "service_cnn_wide".into();
+    m.out_dim = 8192;
+    m.params[2] = ParamSpec { name: "w2".into(), shape: vec![64, 8192] };
+    m.params[3] = ParamSpec { name: "b2".into(), shape: vec![8192] };
+    m.nodes[4].op = Op::Linear { din: 64, dout: 8192, scale_idx: 1, name: "fc".into() };
+    m
+}
+
+fn start_wide_server(opts: ServeOptions) -> (Arc<AdaptService>, HttpServer) {
+    let model = wide_model();
+    let params = synth_params(&model, 42);
+    let plan = plan_a(&model);
+    let spec = EmulatorSpec {
+        model,
+        params,
+        plan,
+        act_scales: scales(),
+        luts: LutRegistry::in_memory(),
+        batch: 4,
+        gemm_threads: 1,
+    };
+    let mut cfg = EngineConfig::emulator(spec);
+    cfg.workers = 1;
+    cfg.queue_depth = 64;
+    cfg.max_wait = Duration::from_millis(2);
+    let service = Arc::new(AdaptService::start(cfg).unwrap());
+    let server = HttpServer::start_with(Arc::clone(&service), "127.0.0.1:0", opts).unwrap();
+    (service, server)
+}
+
+/// A raw keep-alive `POST /v1/infer` request with `input_len` inputs.
+fn raw_infer_request(input_len: usize, id: u64) -> Vec<u8> {
+    let input = vec!["0.5"; input_len].join(", ");
+    let body = format!(r#"{{"id": {id}, "input": [{input}]}}"#);
+    format!(
+        "POST /v1/infer HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Pull one HTTP response off `stream`; `carry` holds bytes already
+/// read past the previous response (pipelined responses share reads).
+fn read_one_response(stream: &mut TcpStream, carry: &mut Vec<u8>) -> (u16, String) {
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = carry.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed before the response head");
+        carry.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(carry[..head_end].to_vec()).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("content-length: "))
+        .expect("response must carry content-length")
+        .trim()
+        .parse()
+        .unwrap();
+    while carry.len() < head_end + content_length {
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed mid-body");
+        carry.extend_from_slice(&chunk[..n]);
+    }
+    let body = String::from_utf8(carry[head_end..head_end + content_length].to_vec()).unwrap();
+    carry.drain(..head_end + content_length);
+    (status, body)
+}
+
+#[test]
+fn slowloris_connections_hit_the_idle_deadline() {
+    let opts = ServeOptions {
+        idle_timeout: Duration::from_millis(300),
+        ..ServeOptions::default()
+    };
+    let (_service, server) = start_server(1, 4, opts);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(25))).unwrap();
+    let started = Instant::now();
+
+    // Trickle a syntactically fine request one byte at a time, far too
+    // slowly to ever finish. The idle deadline covers completing a
+    // request, and trickling bytes must NOT extend it.
+    let head = b"POST /v1/infer HTTP/1.1\r\ncontent-length: 100000\r\n\r\n";
+    let mut closed = false;
+    'trickle: for byte in head.iter().cycle().take(400) {
+        if stream.write_all(std::slice::from_ref(byte)).is_err() {
+            closed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        let mut probe = [0u8; 64];
+        loop {
+            match stream.read(&mut probe) {
+                Ok(0) => {
+                    closed = true;
+                    break 'trickle;
+                }
+                Ok(_) => {} // ignore anything the server sends back
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    break
+                }
+                Err(_) => {
+                    closed = true;
+                    break 'trickle;
+                }
+            }
+        }
+    }
+    let elapsed = started.elapsed();
+    assert!(closed, "server never dropped the slowloris connection");
+    assert!(elapsed >= Duration::from_millis(200), "dropped too early: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(5), "idle deadline never fired: {elapsed:?}");
+    server.stop();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let (_service, server) = start_server(2, 4, ServeOptions::default());
+    // Deliberately more than PIPELINE_MAX queued requests on one
+    // connection: the server must shed read interest when the queue
+    // fills, drain, and resume without losing or reordering anything.
+    let n = (PIPELINE_MAX + 4) as u64;
+    let mut batch = Vec::new();
+    for id in 0..n {
+        batch.extend_from_slice(&raw_infer_request(16, id));
+    }
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(&batch).unwrap();
+    let mut carry = Vec::new();
+    for id in 0..n {
+        let (status, body) = read_one_response(&mut stream, &mut carry);
+        assert_eq!(status, 200, "pipelined request {id}: {body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(
+            j.get("id").unwrap().usize().unwrap() as u64,
+            id,
+            "responses must come back in request order"
+        );
+    }
+    server.stop();
+}
+
+#[test]
+fn stalled_readers_are_dropped_at_the_idle_deadline() {
+    // A ~100 KB response against a 4 KB server send buffer: the server
+    // must park the remainder, switch to write interest, and — when
+    // the client never drains — drop the connection at the idle
+    // deadline instead of blocking an event loop on it.
+    let opts = ServeOptions {
+        idle_timeout: Duration::from_millis(400),
+        sndbuf: Some(4096),
+        ..ServeOptions::default()
+    };
+    let (_service, server) = start_wide_server(opts);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    net::set_recv_buffer(&stream, 4096).unwrap();
+    stream.write_all(&raw_infer_request(16, 1)).unwrap();
+
+    // Let the response compute, the partial write stall, and the idle
+    // deadline pass without reading a byte.
+    std::thread::sleep(Duration::from_millis(1500));
+
+    // Drain what the kernel buffered: EOF (or a reset) must arrive
+    // before the promised body completes.
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut got = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => got.extend_from_slice(&chunk[..n]),
+            Err(_) => break, // a reset also counts as dropped
+        }
+    }
+    let head_end = got
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 4)
+        .expect("at least the response head must have been delivered");
+    let head = String::from_utf8_lossy(&got[..head_end]).to_string();
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("content-length: "))
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(
+        got.len() - head_end < content_length,
+        "the stalled connection must be dropped mid-body, not handed all \
+         {content_length} bytes"
+    );
+    server.stop();
+}
+
+#[test]
+fn partial_writes_resume_when_the_client_drains() {
+    // Same oversized response and tiny buffers, but the client comes
+    // back for the rest: the write-interest path must deliver every
+    // byte of the parked remainder.
+    let opts = ServeOptions {
+        sndbuf: Some(4096),
+        ..ServeOptions::default()
+    };
+    let (_service, server) = start_wide_server(opts);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    net::set_recv_buffer(&stream, 4096).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(&raw_infer_request(16, 9)).unwrap();
+    // Give the server time to fill the send buffer and stall.
+    std::thread::sleep(Duration::from_millis(300));
+    let mut carry = Vec::new();
+    let (status, body) = read_one_response(&mut stream, &mut carry);
+    assert_eq!(status, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("id").unwrap().usize().unwrap(), 9);
+    assert_eq!(j.get("output").unwrap().arr().unwrap().len(), 8192);
+    server.stop();
+}
+
+#[test]
+fn connection_cap_returns_503_and_recovers() {
+    let opts = ServeOptions {
+        max_conns: 2,
+        idle_timeout: Duration::from_secs(60), // keep the held conns alive
+        ..ServeOptions::default()
+    };
+    let (_service, server) = start_server(1, 4, opts);
+    let addr = server.addr().to_string();
+
+    // Occupy the cap with two held-open connections.
+    let hold1 = TcpStream::connect(&*addr).unwrap();
+    let hold2 = TcpStream::connect(&*addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // The third connection is refused with a typed 503 and closed.
+    let mut third = TcpStream::connect(&*addr).unwrap();
+    third.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut text = String::new();
+    third.read_to_string(&mut text).unwrap();
+    assert!(text.starts_with("HTTP/1.1 503"), "got: {text}");
+    assert!(text.contains("\"error\":\"overloaded\""), "got: {text}");
+
+    // Dropping a held connection frees its slot without any request —
+    // the event loop notices the EOF, not a read timeout.
+    drop(hold1);
+    std::thread::sleep(Duration::from_millis(200));
+    let (status, _) = http_call(&addr, "GET", "/v1/healthz", None).unwrap();
+    assert_eq!(status, 200, "a freed slot must be reusable");
+    drop(hold2);
+    server.stop();
+}
+
+#[test]
+fn poll_backend_serves_identical_load() {
+    let opts = ServeOptions {
+        net: Some(Backend::Poll),
+        ..ServeOptions::default()
+    };
+    let (service, server) = start_server(2, 4, opts);
+    assert_eq!(server.backend(), Backend::Poll);
+    let cfg = client::LoadConfig {
+        addr: server.addr().to_string(),
+        requests: 40,
+        concurrency: 8,
+        input_len: 16,
+        top_k: Some(1),
+        deadline_ms: None,
+        seed: 23,
+    };
+    let report = client::run_load(&cfg).unwrap();
+    assert_eq!(report.ok, 40);
+    assert_eq!(report.errors, 0);
+    assert_eq!(service.stats().pool.total.requests, 40);
+    server.stop();
 }
