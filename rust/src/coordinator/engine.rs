@@ -55,6 +55,8 @@ use crate::coordinator::ops::{self, InferVariant, ModelState};
 use crate::emulator::{Executor, PreparedWeights, ScratchArena, Style, Value};
 use crate::graph::{ExecutionPlan, Model};
 use crate::lut::LutRegistry;
+use crate::obs::trace::Span;
+use crate::obs::{LayerProfiler, TraceCtx, TraceOutcome, TraceRecorder};
 use crate::runtime::Runtime;
 use crate::service::ServiceError;
 use crate::tensor::{Tensor, TensorI32};
@@ -111,6 +113,8 @@ struct Request {
     resp: Responder,
     /// When the request entered the queue (for `queue_wait`).
     enqueued: Instant,
+    /// Live trace context when the request is traced (sampling on).
+    trace: Option<Arc<TraceCtx>>,
 }
 
 // ---------------------------------------------------------------------------
@@ -559,6 +563,11 @@ pub struct InferenceEngine {
     emu_spec: Option<Arc<EmulatorSpec>>,
     out_dim: usize,
     in_len: usize,
+    /// Request-trace recorder (tail-based sampling + retention ring).
+    tracer: Arc<TraceRecorder>,
+    /// Per-layer kernel profiler shared by every emulator executor in
+    /// the pool (`ADAPT_PROFILE=1` enables it).
+    profiler: Arc<LayerProfiler>,
 }
 
 impl InferenceEngine {
@@ -608,6 +617,8 @@ impl InferenceEngine {
         let cells: Vec<Arc<StatsCell>> = (0..n_workers)
             .map(|_| Arc::new(StatsCell::default()))
             .collect();
+        let tracer = Arc::new(TraceRecorder::from_env());
+        let profiler = Arc::new(LayerProfiler::from_env());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
         let mut workers = Vec::with_capacity(n_workers);
         for (wi, cell) in cells.iter().enumerate() {
@@ -617,6 +628,8 @@ impl InferenceEngine {
             let swap = swap.clone();
             let cell = Arc::clone(cell);
             let max_wait = cfg.max_wait;
+            let tracer = Arc::clone(&tracer);
+            let profiler = Arc::clone(&profiler);
             let handle = std::thread::Builder::new()
                 .name(format!("adapt-engine-{wi}"))
                 .spawn(move || match backend {
@@ -626,11 +639,14 @@ impl InferenceEngine {
                         variant,
                         acu,
                     } => pjrt_worker(
-                        &artifacts, &model, variant, acu, &queue, max_wait, wi, &cell, &ready,
+                        &artifacts, &model, variant, acu, &queue, max_wait, wi, &cell, &tracer,
+                        &ready,
                     ),
                     BackendSpec::Emulator(spec) => {
                         let swap = swap.expect("emulator swap state built above");
-                        emulator_worker(&spec, &swap, &queue, max_wait, wi, &cell, &ready)
+                        emulator_worker(
+                            &spec, &swap, &queue, max_wait, wi, &cell, &tracer, &profiler, &ready,
+                        )
                     }
                 })
                 .context("spawning engine worker")?;
@@ -673,7 +689,19 @@ impl InferenceEngine {
             emu_spec,
             out_dim,
             in_len,
+            tracer,
+            profiler,
         })
+    }
+
+    /// The pool's trace recorder (sampling knobs + retained traces).
+    pub fn tracer(&self) -> &Arc<TraceRecorder> {
+        &self.tracer
+    }
+
+    /// The pool's shared per-layer kernel profiler.
+    pub fn profiler(&self) -> &Arc<LayerProfiler> {
+        &self.profiler
     }
 
     /// Output dimension per sample.
@@ -885,6 +913,20 @@ impl InferenceEngine {
         deadline: Option<Duration>,
         version: Option<u64>,
     ) -> std::result::Result<RawReceiver, ServiceError> {
+        self.submit_raw_traced(x, deadline, version, None)
+    }
+
+    /// [`submit_raw_to`](Self::submit_raw_to) carrying an optional trace
+    /// context (begun via [`tracer`](Self::tracer) with the request id).
+    /// A rejected submit finishes the trace with the matching error code
+    /// so overloads are always retained by the tail sampler.
+    pub fn submit_raw_traced(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+        version: Option<u64>,
+        trace: Option<Arc<TraceCtx>>,
+    ) -> std::result::Result<RawReceiver, ServiceError> {
         if let Some(v) = version {
             let (swap, _) = self.versioned()?;
             if !swap
@@ -894,17 +936,28 @@ impl InferenceEngine {
                 .entries
                 .contains_key(&v)
             {
+                if let Some(tr) = &trace {
+                    self.tracer
+                        .finish(tr, TraceOutcome::Error("no_such_version"));
+                }
                 return Err(ServiceError::NoSuchVersion { version: v });
             }
         }
         let (resp, rx) = mpsc::channel();
-        self.queue.push(Request {
+        let pushed = self.queue.push(Request {
             x,
             deadline,
             version,
             resp: Responder::Raw(resp),
             enqueued: Instant::now(),
-        })?;
+            trace: trace.clone(),
+        });
+        if let Err(e) = pushed {
+            if let Some(tr) = &trace {
+                self.tracer.finish(tr, TraceOutcome::Error(e.code()));
+            }
+            return Err(e);
+        }
         Ok(rx)
     }
 
@@ -918,6 +971,19 @@ impl InferenceEngine {
         deadline: Option<Duration>,
         version: Option<u64>,
     ) -> std::result::Result<Option<RawReceiver>, ServiceError> {
+        self.try_submit_raw_traced(x, deadline, version, None)
+    }
+
+    /// [`try_submit_raw_to`](Self::try_submit_raw_to) carrying an
+    /// optional trace context. A full queue finishes the trace as an
+    /// `overloaded` error (always retained by the tail sampler).
+    pub fn try_submit_raw_traced(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Duration>,
+        version: Option<u64>,
+        trace: Option<Arc<TraceCtx>>,
+    ) -> std::result::Result<Option<RawReceiver>, ServiceError> {
         if let Some(v) = version {
             let (swap, _) = self.versioned()?;
             if !swap
@@ -927,6 +993,10 @@ impl InferenceEngine {
                 .entries
                 .contains_key(&v)
             {
+                if let Some(tr) = &trace {
+                    self.tracer
+                        .finish(tr, TraceOutcome::Error("no_such_version"));
+                }
                 return Err(ServiceError::NoSuchVersion { version: v });
             }
         }
@@ -937,8 +1007,23 @@ impl InferenceEngine {
             version,
             resp: Responder::Raw(resp),
             enqueued: Instant::now(),
-        })?;
-        Ok(accepted.then_some(rx))
+            trace: trace.clone(),
+        });
+        match accepted {
+            Ok(true) => Ok(Some(rx)),
+            Ok(false) => {
+                if let Some(tr) = &trace {
+                    self.tracer.finish(tr, TraceOutcome::Error("overloaded"));
+                }
+                Ok(None)
+            }
+            Err(e) => {
+                if let Some(tr) = &trace {
+                    self.tracer.finish(tr, TraceOutcome::Error(e.code()));
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Submit one sample; returns a receiver for its output row. Blocks
@@ -955,6 +1040,7 @@ impl InferenceEngine {
                 version: None,
                 resp: Responder::Flat(resp),
                 enqueued: Instant::now(),
+                trace: None,
             })
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(rx)
@@ -1050,6 +1136,7 @@ impl Drop for InferenceEngine {
 /// (`None` = active) and returns the flat output plus the (generation,
 /// version) it actually computed under — so no executed batch ever mixes
 /// plan versions.
+#[allow(clippy::too_many_arguments)]
 fn batching_loop<F>(
     queue: &SharedQueue,
     bs: usize,
@@ -1057,6 +1144,7 @@ fn batching_loop<F>(
     max_wait: Duration,
     worker: usize,
     cell: &StatsCell,
+    tracer: &TraceRecorder,
     mut infer: F,
 ) where
     F: FnMut(Option<u64>, &[f32]) -> std::result::Result<(Vec<f32>, u64, u64), ServiceError>,
@@ -1066,22 +1154,37 @@ fn batching_loop<F>(
     let mut flat: Vec<f32> = Vec::with_capacity(bs * per);
     // A malformed or expired request must never take down the worker (or
     // the rest of its batch): answer it with a typed error and keep it
-    // out of the batch.
+    // out of the batch. Traced rejects record their queue span and
+    // finish immediately — errors are always retained by the tail
+    // sampler.
     let admit = |r: Request, pending: &mut Vec<(Request, Duration)>| {
-        let waited = r.enqueued.elapsed();
+        let picked = Instant::now();
+        let waited = picked.duration_since(r.enqueued);
         cell.record_wait(waited);
+        if let Some(tr) = &r.trace {
+            let start = tr.offset_us(r.enqueued);
+            tr.span("queue", start, tr.offset_us(picked));
+        }
         if r.x.len() != per {
-            r.resp.send(Err(ServiceError::WrongInputLength {
+            let err = ServiceError::WrongInputLength {
                 got: r.x.len(),
                 expected: per,
-            }));
+            };
+            if let Some(tr) = &r.trace {
+                tracer.finish(tr, TraceOutcome::Error(err.code()));
+            }
+            r.resp.send(Err(err));
             return;
         }
         if let Some(d) = r.deadline {
             if waited >= d {
-                r.resp.send(Err(ServiceError::DeadlineExceeded {
+                let err = ServiceError::DeadlineExceeded {
                     waited_ms: waited.as_millis() as u64,
-                }));
+                };
+                if let Some(tr) = &r.trace {
+                    tracer.finish(tr, TraceOutcome::Error(err.code()));
+                }
+                r.resp.send(Err(err));
                 return;
             }
         }
@@ -1151,10 +1254,46 @@ fn batching_loop<F>(
             let compute = t0.elapsed();
             cell.record_batch(real, bs - real, compute);
 
+            // Spans for traced members: `batch` covers pickup → batch
+            // launch (gather/pad), `execute` the shared forward. They
+            // share boundary offsets with the queue span, so every
+            // trace's intervals are monotone and non-overlapping.
+            let trace_spans = |r: &Request, waited: Duration, exec: Option<(u64, u64)>| {
+                let Some(tr) = &r.trace else { return };
+                let pickup = tr.offset_us(r.enqueued) + waited.as_micros() as u64;
+                let exec_start = tr.offset_us(t0).max(pickup);
+                tr.push(Span {
+                    name: "batch",
+                    start_us: pickup,
+                    end_us: exec_start,
+                    worker: None,
+                    version: None,
+                    generation: None,
+                    batch: Some(real),
+                });
+                let (generation, version) = match exec {
+                    Some((g, v)) => (Some(g), Some(v)),
+                    None => (None, None),
+                };
+                tr.push(Span {
+                    name: "execute",
+                    start_us: exec_start,
+                    end_us: exec_start + compute.as_micros() as u64,
+                    worker: Some(worker),
+                    version,
+                    generation,
+                    batch: Some(real),
+                });
+            };
+
             match result {
                 Ok((out, generation, version)) => {
                     let row = out.len() / bs;
                     for (i, (r, waited)) in group.drain(..).enumerate() {
+                        trace_spans(&r, waited, Some((generation, version)));
+                        if let Some(tr) = r.trace.clone() {
+                            tracer.finish(&tr, TraceOutcome::Ok);
+                        }
                         r.resp.send(Ok(RawResponse {
                             output: out[i * row..(i + 1) * row].to_vec(),
                             queue_wait: waited,
@@ -1166,7 +1305,11 @@ fn batching_loop<F>(
                     }
                 }
                 Err(e) => {
-                    for (r, _) in group.drain(..) {
+                    for (r, waited) in group.drain(..) {
+                        trace_spans(&r, waited, None);
+                        if let Some(tr) = r.trace.clone() {
+                            tracer.finish(&tr, TraceOutcome::Error(e.code()));
+                        }
                         r.resp.send(Err(e.clone()));
                     }
                 }
@@ -1190,6 +1333,7 @@ fn pjrt_worker(
     max_wait: Duration,
     worker: usize,
     cell: &StatsCell,
+    tracer: &TraceRecorder,
     ready: &mpsc::Sender<Result<(usize, usize)>>,
 ) {
     let setup = (|| -> Result<(Runtime, ModelState, Option<xla::Literal>)> {
@@ -1232,7 +1376,7 @@ fn pjrt_worker(
 
     let bs = rt.manifest.batch;
     let per: usize = st.model.input_shape.iter().product();
-    batching_loop(queue, bs, per, max_wait, worker, cell, |version, flat| {
+    batching_loop(queue, bs, per, max_wait, worker, cell, tracer, |version, flat| {
         // PJRT executables bake their plan in: always generation 0 and
         // unversioned; version-pinned requests are rejected per-request.
         if let Some(v) = version {
@@ -1247,9 +1391,14 @@ fn pjrt_worker(
     });
 }
 
-/// Build one emulator executor for a version's plan + shared weights.
-fn emulator_executor<'m>(spec: &'m EmulatorSpec, vp: &VersionPlan) -> Result<Executor<'m>> {
-    Executor::with_prepared(
+/// Build one emulator executor for a version's plan + shared weights,
+/// wired to the pool's shared per-layer profiler.
+fn emulator_executor<'m>(
+    spec: &'m EmulatorSpec,
+    vp: &VersionPlan,
+    profiler: &Arc<LayerProfiler>,
+) -> Result<Executor<'m>> {
+    let mut exec = Executor::with_prepared(
         &spec.model,
         spec.params.clone(),
         vp.plan.clone(),
@@ -1259,7 +1408,9 @@ fn emulator_executor<'m>(spec: &'m EmulatorSpec, vp: &VersionPlan) -> Result<Exe
         },
         vp.prepared.clone(),
         ScratchArena::new(),
-    )
+    )?;
+    exec.set_profiler(Some(Arc::clone(profiler)));
+    Ok(exec)
 }
 
 /// Emulator-backed worker: adopts the pool's shared quantized weights
@@ -1274,6 +1425,7 @@ fn emulator_executor<'m>(spec: &'m EmulatorSpec, vp: &VersionPlan) -> Result<Exe
 /// never mixes plan versions. Executors for versions beyond the active
 /// one (canary / shadow candidates) build lazily on first use and stay
 /// cached until the version is retired.
+#[allow(clippy::too_many_arguments)]
 fn emulator_worker(
     spec: &EmulatorSpec,
     swap: &SwapState,
@@ -1281,6 +1433,8 @@ fn emulator_worker(
     max_wait: Duration,
     worker: usize,
     cell: &StatsCell,
+    tracer: &TraceRecorder,
+    profiler: &Arc<LayerProfiler>,
     ready: &mpsc::Sender<Result<(usize, usize)>>,
 ) {
     let per: usize = spec.model.input_shape.iter().product();
@@ -1293,7 +1447,7 @@ fn emulator_worker(
     // Build the active version's executor up front: it validates the
     // backend before the pool reports ready.
     let setup = match entries.get(&active) {
-        Some(vp) => emulator_executor(spec, vp),
+        Some(vp) => emulator_executor(spec, vp, profiler),
         None => Err(anyhow::anyhow!("no active plan version")),
     };
     match setup {
@@ -1313,7 +1467,7 @@ fn emulator_worker(
     let bs = spec.batch.max(1);
     let mut shape = vec![bs];
     shape.extend_from_slice(&spec.model.input_shape);
-    batching_loop(queue, bs, per, max_wait, worker, cell, |version, flat| {
+    batching_loop(queue, bs, per, max_wait, worker, cell, tracer, |version, flat| {
         // Batch boundary: adopt newly published table changes before
         // touching this group; executors of retired versions go with it.
         let cur = swap.epoch.load(Ordering::Acquire);
@@ -1332,7 +1486,7 @@ fn emulator_worker(
         };
         if let std::collections::btree_map::Entry::Vacant(slot) = execs.entry(v) {
             slot.insert(
-                emulator_executor(spec, vp)
+                emulator_executor(spec, vp, profiler)
                     .map_err(|e| ServiceError::Backend(format!("{e:#}")))?,
             );
         }
@@ -1389,6 +1543,110 @@ mod tests {
         other.buckets[15] = 5;
         h.merge(&other);
         assert_eq!(h.count(), 105);
+    }
+
+    #[test]
+    fn hist_bucket_of_is_monotone() {
+        // bucket_of must never decrease as the duration grows, across
+        // nine decades of µs values (incl. the boundaries 2^k ± 1).
+        let mut probes: Vec<u64> = vec![0];
+        for k in 0..40u32 {
+            let edge = 1u64 << k;
+            probes.extend_from_slice(&[edge.saturating_sub(1), edge, edge + 1]);
+        }
+        probes.sort_unstable();
+        let mut prev = 0usize;
+        for us in probes {
+            let b = LatencyHist::bucket_of(Duration::from_micros(us));
+            assert!(b >= prev, "bucket_of({us}µs)={b} < previous {prev}");
+            assert!(b < LAT_BUCKETS);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn hist_bucket_brackets_value() {
+        // Every non-saturating sample must satisfy the documented bucket
+        // semantics: value ≤ upper edge, and ≥ half the edge for i ≥ 1.
+        let mut rng = 0x2545F4914F6CDD1Du64;
+        for _ in 0..2000 {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            let us = rng % (1u64 << 26); // keep below the open top bucket
+            let i = LatencyHist::bucket_of(Duration::from_micros(us));
+            let upper = LatencyHist::upper_edge_us(i);
+            assert!(us <= upper, "{us}µs above edge {upper} of bucket {i}");
+            if i >= 1 {
+                assert!(
+                    us >= upper / 2,
+                    "{us}µs below half-edge {} of bucket {i}",
+                    upper / 2
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hist_merge_is_associative_and_commutative() {
+        let mk = |seed: u64| {
+            let mut h = LatencyHist::default();
+            let mut rng = seed;
+            for _ in 0..64 {
+                rng ^= rng << 13;
+                rng ^= rng >> 7;
+                rng ^= rng << 17;
+                h.buckets[(rng % LAT_BUCKETS as u64) as usize] += rng % 17;
+            }
+            h
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        // (a ∪ b) ∪ c == a ∪ (b ∪ c)
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge must be associative");
+        // a ∪ b == b ∪ a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must be commutative");
+    }
+
+    #[test]
+    fn hist_percentile_within_one_bucket_of_exact() {
+        // Synthetic sample set with a known exact percentile: the log2
+        // histogram's estimate (the bucket's upper edge) must stay
+        // within one bucket of it — i.e. exact ∈ [estimate/2, estimate]
+        // for values ≥ 1µs.
+        let mut samples: Vec<u64> = Vec::new();
+        let mut rng = 0x9E3779B97F4A7C15u64;
+        for _ in 0..5000 {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            samples.push(1 + rng % 1_000_000); // 1µs .. 1s
+        }
+        let mut h = LatencyHist::default();
+        for &s in &samples {
+            h.buckets[LatencyHist::bucket_of(Duration::from_micros(s))] += 1;
+        }
+        samples.sort_unstable();
+        for &p in &[0.5, 0.9, 0.95, 0.99] {
+            let rank = ((p * samples.len() as f64).ceil() as usize).max(1) - 1;
+            let exact = samples[rank];
+            let est = h.percentile_us(p);
+            assert!(
+                exact <= est && exact >= est / 2,
+                "p{p}: exact {exact}µs outside [{}, {est}]µs",
+                est / 2
+            );
+        }
     }
 
     #[test]

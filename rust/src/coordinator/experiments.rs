@@ -184,12 +184,16 @@ pub fn ensure_pretrained(
     let log = if verbose { 50 } else { 0 };
     let tr = ops::train(rt, &mut st, TrainVariant::Fp32, &ds, steps, hy.pretrain_lr, None, log)?;
     if verbose {
-        eprintln!(
-            "[pretrain {name}] {} steps, loss {:.4} -> {:.4} in {}",
-            tr.steps,
-            tr.first_loss,
-            tr.last_loss,
-            fmt::dur(tr.wall)
+        crate::obs::log::info(
+            "pretrain",
+            "done",
+            &[
+                ("model", name.to_string()),
+                ("steps", tr.steps.to_string()),
+                ("first_loss", format!("{:.4}", tr.first_loss)),
+                ("last_loss", format!("{:.4}", tr.last_loss)),
+                ("wall", fmt::dur(tr.wall)),
+            ],
         );
     }
     st.save(&trained)?;
@@ -445,7 +449,14 @@ pub fn table4(rt: &mut Runtime, cfg: &Table4Config) -> Result<String> {
     for name in &models {
         let r = table4_row(rt, cfg, name).with_context(|| format!("table4 row {name}"))?;
         if cfg.verbose {
-            eprintln!("[table4] {name} done ({} samples)", r.samples);
+            crate::obs::log::info(
+                "table4",
+                "row done",
+                &[
+                    ("model", name.to_string()),
+                    ("samples", r.samples.to_string()),
+                ],
+            );
         }
         let speedup = |a: Duration, b: Duration| -> String {
             if b.is_zero() || a.is_zero() {
@@ -852,10 +863,14 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
         }
         row.push(format!("{:.2}", 100.0 * worst_drop[li]));
         if cfg.verbose {
-            eprintln!(
-                "[sensitivity {}] {name}: worst drop {:.2} pts",
-                cfg.model,
-                100.0 * worst_drop[li]
+            crate::obs::log::info(
+                "sensitivity",
+                "layer swept",
+                &[
+                    ("model", cfg.model.clone()),
+                    ("layer", name.to_string()),
+                    ("worst_drop_pts", format!("{:.2}", 100.0 * worst_drop[li])),
+                ],
             );
         }
         rows.push(row);

@@ -347,10 +347,15 @@ pub fn train(
         vels = out.split_off(p);
         st.params = out;
         if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
-            eprintln!(
-                "[train {}/{}] step {step:>4} loss {loss:.4}",
-                st.model.name,
-                variant.artifact()
+            crate::obs::log::info(
+                "train",
+                "step",
+                &[
+                    ("model", st.model.name.clone()),
+                    ("variant", variant.artifact().to_string()),
+                    ("step", step.to_string()),
+                    ("loss", format!("{loss:.4}")),
+                ],
             );
         }
     }

@@ -45,6 +45,7 @@ use crate::graph::{ExecutionPlan, LayerMode, Model, Node, Op};
 use crate::layers;
 use crate::lut::{Lut, LutRegistry};
 use crate::mult::{Form, MulFn};
+use crate::obs::LayerProfiler;
 use crate::quant;
 use crate::tensor::{
     conv_out, im2col_f32_range_into, im2col_i32_range_into, numel, Tensor, TensorI32,
@@ -304,6 +305,10 @@ pub struct Executor<'m> {
     last_use: BTreeMap<usize, usize>,
     scratch: Scratch,
     reuse_scratch: bool,
+    /// Optional per-layer kernel profiler. `None` (the default) keeps
+    /// [`Executor::forward`] exactly on the un-instrumented path;
+    /// attached-but-disabled costs one relaxed load per forward.
+    profiler: Option<Arc<LayerProfiler>>,
 }
 
 impl<'m> Executor<'m> {
@@ -426,7 +431,15 @@ impl<'m> Executor<'m> {
             last_use,
             scratch: arena.0,
             reuse_scratch: true,
+            profiler: None,
         })
+    }
+
+    /// Attach (or detach) a per-layer kernel profiler. The engine pool
+    /// attaches its shared profiler to every worker's executors;
+    /// `adapt profile` attaches an always-enabled one.
+    pub fn set_profiler(&mut self, profiler: Option<Arc<LayerProfiler>>) {
+        self.profiler = profiler;
     }
 
     /// The plan this executor was built from.
@@ -810,6 +823,11 @@ impl<'m> Executor<'m> {
     }
 
     /// Run one batch through the network. Returns the output tensor.
+    ///
+    /// When a [`LayerProfiler`] is attached *and* enabled (one relaxed
+    /// load decides, once per forward), every node is additionally wall
+    /// timed and recorded with its resolved kernel identity; otherwise
+    /// this is the bare execution loop.
     pub fn forward(&self, input: Value) -> Result<Tensor> {
         let nvals = self.model.nodes.iter().map(|n| n.id).max().unwrap_or(0) + 1;
         let mut vals = self.scratch.vals.borrow_mut();
@@ -817,11 +835,21 @@ impl<'m> Executor<'m> {
         vals.resize_with(nvals, || None);
         vals[0] = Some(input);
         let last = self.model.nodes.last().map(|n| n.id).unwrap_or(0);
+        let prof = self.profiler.as_deref().filter(|p| p.enabled());
         for (idx, node) in self.model.nodes.iter().enumerate() {
             if node.id == 0 {
                 continue;
             }
-            let v = self.exec_node(idx, node, &mut vals[..], false)?;
+            let v = match prof {
+                None => self.exec_node(idx, node, &mut vals[..], false)?,
+                Some(p) => {
+                    let t0 = std::time::Instant::now();
+                    let v = self.exec_node(idx, node, &mut vals[..], false)?;
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    self.record_node(p, idx, node, &vals[..], &v, ns);
+                    v
+                }
+            };
             // Recycle inputs whose last consumer just ran: their storage
             // backs later layers' outputs instead of hitting the allocator.
             for &inp in &node.inputs {
@@ -836,6 +864,68 @@ impl<'m> Executor<'m> {
         match vals[last].take() {
             Some(Value::F(t)) => Ok(t),
             _ => bail!("model output missing"),
+        }
+    }
+
+    /// Profile one executed node: key `"{idx:03}:{name}"` (execution
+    /// order), kernel identity (SIMD tier + product backend + bits), and
+    /// the batch's MAC count derived from the op and output shape.
+    fn record_node(
+        &self,
+        p: &LayerProfiler,
+        idx: usize,
+        node: &Node,
+        vals: &[Option<Value>],
+        out: &Tensor,
+        ns: u64,
+    ) {
+        let tier = match super::simd::isa() {
+            super::simd::Isa::Scalar => "scalar",
+            super::simd::Isa::Avx2 => "avx2",
+            super::simd::Isa::Neon => "neon",
+        };
+        let kind = op_kind(&node.op);
+        let (backend, bits) = self.node_backend(node);
+        let macs = node_macs(node, vals, out);
+        let name = node.op.layer_name().unwrap_or(kind);
+        p.record(
+            &format!("{idx:03}:{name}"),
+            kind,
+            tier,
+            backend,
+            bits,
+            macs,
+            ns,
+        );
+    }
+
+    /// Resolved product backend label + bitwidth for a node. Closed-form
+    /// lowering only happens on the optimized engine; the naive engine
+    /// always walks the table / function (the paper's baseline).
+    fn node_backend(&self, node: &Node) -> (&'static str, u32) {
+        let lowered = matches!(self.style, Style::Optimized { .. });
+        match self.prepared.get(&node.id) {
+            Some(PreparedNode::Fp32 { .. }) => ("fp32", 0),
+            Some(PreparedNode::Quant { bits, backend, .. }) => {
+                let label = match backend {
+                    Backend::Lut { form, .. } => {
+                        if lowered && form.is_some() {
+                            "closed-form"
+                        } else {
+                            "lut"
+                        }
+                    }
+                    Backend::Func { form, .. } => {
+                        if lowered && form.is_some() {
+                            "closed-form"
+                        } else {
+                            "func"
+                        }
+                    }
+                };
+                (label, *bits)
+            }
+            None => ("none", 0),
         }
     }
 
@@ -960,6 +1050,58 @@ impl<'m> Executor<'m> {
                 x.reshape(&full)?
             }
         })
+    }
+}
+
+/// Short op-kind label for profiling keys / tables.
+fn op_kind(op: &Op) -> &'static str {
+    match op {
+        Op::Input => "input",
+        Op::Conv2d { .. } => "conv2d",
+        Op::Linear { .. } => "linear",
+        Op::Lstm { .. } => "lstm",
+        Op::Embedding { .. } => "embedding",
+        Op::Relu => "relu",
+        Op::Sigmoid => "sigmoid",
+        Op::Tanh => "tanh",
+        Op::AvgPool2 => "avgpool2",
+        Op::Gap => "gap",
+        Op::Flatten => "flatten",
+        Op::Add => "add",
+        Op::Concat => "concat",
+        Op::ChannelShuffle { .. } => "channel_shuffle",
+        Op::SliceLast { .. } => "slice_last",
+        Op::Reshape { .. } => "reshape",
+    }
+}
+
+/// Multiply-accumulates one node executed for this batch (GEMM-bearing
+/// ops only; everything else reports 0). Derived from op parameters plus
+/// the realized output/input shapes, so it reflects the actual batch.
+fn node_macs(node: &Node, vals: &[Option<Value>], out: &Tensor) -> u64 {
+    match &node.op {
+        Op::Conv2d {
+            kh,
+            kw,
+            cin,
+            groups,
+            ..
+        } => {
+            // out.data.len() = n*ho*wo*cout; per output element the
+            // kernel reads kh*kw*(cin/groups) inputs.
+            out.data.len() as u64 * (*kh as u64) * (*kw as u64) * (*cin as u64)
+                / (*groups as u64).max(1)
+        }
+        Op::Linear { din, .. } => out.data.len() as u64 * *din as u64,
+        Op::Lstm { din, hidden, .. } => {
+            let t = match vals.get(node.inputs[0]).and_then(|v| v.as_ref()) {
+                Some(Value::F(x)) if x.shape.len() >= 2 => x.shape[1] as u64,
+                _ => 1,
+            };
+            let n = out.shape.first().copied().unwrap_or(1) as u64;
+            n * t * 4 * (*hidden as u64) * (*din as u64 + *hidden as u64)
+        }
+        _ => 0,
     }
 }
 

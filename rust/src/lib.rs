@@ -66,6 +66,14 @@
 //!   plan-aware [`trainer::fit`] loop — artifact-free, heterogeneous
 //!   mixed-ACU plans included (`adapt retrain`).
 //! * [`metrics`] — accuracy/timing metrics.
+//! * [`obs`] — serving observability: request tracing with tail-based
+//!   sampling ([`obs::TraceRecorder`]), per-layer kernel profiling
+//!   ([`obs::LayerProfiler`], fed by the executor and `adapt profile`),
+//!   Prometheus text exposition behind `GET /metrics`, net-layer
+//!   lifecycle counters ([`obs::NetStats`]), and a leveled structured
+//!   logger (`ADAPT_LOG`, [`obs::log`]). Every hook is gated by one
+//!   relaxed atomic (or an absent `Option`) so the GEMM hot path is
+//!   unaffected when observability is off.
 
 pub mod coordinator;
 pub mod data;
@@ -75,6 +83,7 @@ pub mod layers;
 pub mod lut;
 pub mod metrics;
 pub mod mult;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod service;

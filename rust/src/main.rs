@@ -61,6 +61,13 @@
 //!       (/v2 routes); --json emits the machine-readable report to
 //!       stdout. Exits non-zero on any failed response or a rollout
 //!       that doesn't take.
+//! adapt profile [--spec S] [--batches N] [--batch B] [--threads T]
+//!       [--out FILE]
+//!       per-layer kernel cost table: run N batches of a plan through
+//!       the emulator executor with the layer profiler on, print each
+//!       layer's op / SIMD tier / product backend (LUT vs closed-form)
+//!       / MACs / mean ns, and save the JSON cost model with --out.
+//!       Artifact-free (profiles the bundled tiny model).
 //! adapt selftest                      emulator vs XLA cross-check
 //! ```
 //!
@@ -68,6 +75,18 @@
 //! or env `ADAPT_ARTIFACTS`). Thread defaults (`--workers`, `--threads`)
 //! come from env `ADAPT_THREADS`, falling back to the machine's available
 //! parallelism.
+//!
+//! Observability (all off by default, zero hot-path cost when off):
+//!
+//! * `ADAPT_TRACE_SAMPLE=0..=1` — tail-sampling rate for request traces
+//!   (errors are always kept). Sampled traces are served at
+//!   `GET /v1/trace/{id}` and `GET /v2/models/{m}/traces`.
+//! * `ADAPT_PROFILE=1` — attach an enabled per-layer profiler to every
+//!   engine worker (`adapt profile` is the offline equivalent).
+//! * `ADAPT_LOG=warn|info|debug` (+ `ADAPT_LOG_JSON=1`) — leveled
+//!   key=value (or JSON) diagnostics on stderr.
+//! * `GET /metrics` — Prometheus text: engine counters + latency
+//!   histograms, net-layer lifecycle counters, rollout gauges.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -113,6 +132,13 @@ fn artifacts_from(args: &Args) -> PathBuf {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
+    // The progress diagnostics behind --verbose now go through the
+    // leveled logger at info; honor the flag unless the user already
+    // chose a level explicitly (must happen before the first log call
+    // latches the config).
+    if args.flag("verbose") && std::env::var_os("ADAPT_LOG").is_none() {
+        std::env::set_var("ADAPT_LOG", "info");
+    }
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "specs" => {
@@ -341,6 +367,7 @@ fn run() -> Result<()> {
         }
         "serve" => serve(&args)?,
         "client" => client_cmd(&args)?,
+        "profile" => profile_cmd(&args)?,
         "selftest" => {
             let mut rt = Runtime::open(&artifacts_from(&args))?;
             let model = args.get_or("model", "small_vgg").to_string();
@@ -360,8 +387,12 @@ fn run() -> Result<()> {
             println!("         repeat --model to serve several models, first = /v1 default)");
             println!("  client --addr HOST:PORT [--model M] [--requests N] [--concurrency C]");
             println!("         [--swap-spec S] [--canary F] [--shadow] [--promote] [--json]");
+            println!("  profile [--spec S] [--batches N] [--batch B] [--out FILE]");
+            println!("          (per-layer kernel cost table on the emulator; artifact-free)");
             println!("  selftest [--model M]");
             println!("  thread defaults: env ADAPT_THREADS (else available parallelism)");
+            println!("  observability: ADAPT_TRACE_SAMPLE=0..1, ADAPT_PROFILE=1,");
+            println!("                 ADAPT_LOG=warn|info|debug (ADAPT_LOG_JSON=1), GET /metrics");
         }
     }
     Ok(())
@@ -485,8 +516,9 @@ fn serve(args: &Args) -> Result<()> {
             server.backend().name(),
         );
         println!("  POST /v1/infer   POST /v1/plan   GET /v1/stats   GET /v1/healthz");
-        println!("  GET /v2/models   /v2/models/{{m}}/infer|stats|plans|rollback");
+        println!("  GET /v2/models   /v2/models/{{m}}/infer|stats|plans|traces|rollback");
         println!("  /v2/models/{{m}}/plans/{{v}}/activate|canary|shadow");
+        println!("  GET /metrics (Prometheus)   GET /v1/trace/{{id}} (ADAPT_TRACE_SAMPLE)");
         if let Some(path) = args.get("addr-file") {
             std::fs::write(path, bound.to_string())
                 .with_context(|| format!("writing {path}"))?;
@@ -641,6 +673,21 @@ fn client_cmd(args: &Args) -> Result<()> {
         "load: {requests} requests x {concurrency} connections against http://{addr}{path} \
          (input_len {input_len})"
     ));
+    // Server-side counters bracket each measured phase: a /metrics
+    // scrape before and after gives the deltas (padding ratio, batch
+    // counts, refusals) the BENCH records carry. Scrapes are best
+    // effort — an old server without /metrics degrades to client-only
+    // numbers instead of failing the run.
+    let scrape = |label: &str| -> Option<std::collections::BTreeMap<String, f64>> {
+        match client::scrape_metrics(&addr) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                say(format!("note: /metrics scrape {label} failed: {e:#}"));
+                None
+            }
+        }
+    };
+    let m_start = scrape("before phase 1");
     let print_report = |label: &str, r: &client::LoadReport| {
         let gens: Vec<String> = r
             .by_generation
@@ -667,9 +714,25 @@ fn client_cmd(args: &Args) -> Result<()> {
         ));
     };
     let phase1 = client::run_load_on(&cfg, &path)?;
+    let m_phase1 = scrape("after phase 1");
     print_report("phase 1", &phase1);
     if phase1.errors > 0 {
         bail!("{} failed responses in phase 1", phase1.errors);
+    }
+    let phase1_delta = match (&m_start, &m_phase1) {
+        (Some(b), Some(a)) => Some(client::metrics_delta(b, a)),
+        _ => None,
+    };
+    if let Some(d) = &phase1_delta {
+        let padded = metric_sum(d, "adapt_padded_slots_total");
+        let served = metric_sum(d, "adapt_requests_total");
+        say(format!(
+            "server deltas (phase 1): {served:.0} requests, {:.0} batches, \
+             padding ratio {:.3}, {:.0} conns refused",
+            metric_sum(d, "adapt_batches_total"),
+            padded / (served + padded).max(1.0),
+            metric_sum(d, "adapt_net_refused_total"),
+        ));
     }
 
     // Optional rollout of a candidate plan between the two phases.
@@ -715,6 +778,7 @@ fn client_cmd(args: &Args) -> Result<()> {
     };
 
     let mut phase2: Option<(String, client::LoadReport)> = None;
+    let mut phase2_delta: Option<Json> = None;
     let mut candidate: Option<(String, u64)> = None; // (target model, version)
     if let Some(body) = swap_body {
         let (label, expect_generation, expect_canary) = match &rollout {
@@ -793,6 +857,11 @@ fn client_cmd(args: &Args) -> Result<()> {
             ..cfg.clone()
         };
         let r = client::run_load_on(&cfg2, &path)?;
+        let m_phase2 = scrape("after phase 2");
+        phase2_delta = match (&m_phase1, &m_phase2) {
+            (Some(b), Some(a)) => Some(client::metrics_delta(b, a)),
+            _ => None,
+        };
         print_report(label, &r);
         if r.errors > 0 {
             bail!("{} failed responses in phase 2", r.errors);
@@ -895,9 +964,35 @@ fn client_cmd(args: &Args) -> Result<()> {
             doc.insert("model".to_string(), Json::Str(m.clone()));
         }
         doc.insert("phase1".to_string(), phase1.to_json());
+        if let Some(d) = &phase1_delta {
+            let padded = metric_sum(d, "adapt_padded_slots_total");
+            let served = metric_sum(d, "adapt_requests_total");
+            doc.insert(
+                "phase1_padding_ratio".to_string(),
+                Json::Num(padded / (served + padded).max(1.0)),
+            );
+            doc.insert(
+                "phase1_refused_conns".to_string(),
+                Json::Num(metric_sum(d, "adapt_net_refused_total")),
+            );
+            doc.insert("phase1_metrics_delta".to_string(), d.clone());
+        }
         if let Some((label, r)) = &phase2 {
             doc.insert("phase2".to_string(), r.to_json());
             doc.insert("phase2_label".to_string(), Json::Str(label.clone()));
+        }
+        if let Some(d) = &phase2_delta {
+            let padded = metric_sum(d, "adapt_padded_slots_total");
+            let served = metric_sum(d, "adapt_requests_total");
+            doc.insert(
+                "phase2_padding_ratio".to_string(),
+                Json::Num(padded / (served + padded).max(1.0)),
+            );
+            doc.insert(
+                "phase2_refused_conns".to_string(),
+                Json::Num(metric_sum(d, "adapt_net_refused_total")),
+            );
+            doc.insert("phase2_metrics_delta".to_string(), d.clone());
         }
         if let Some((target, version)) = &candidate {
             doc.insert("candidate_model".to_string(), Json::Str(target.clone()));
@@ -912,6 +1007,120 @@ fn client_cmd(args: &Args) -> Result<()> {
         if json_mode {
             println!("{text}");
         }
+    }
+    Ok(())
+}
+
+/// Sum every series of one metric name (across label sets) in a
+/// [`client::metrics_delta`] object.
+fn metric_sum(delta: &Json, name: &str) -> f64 {
+    let Json::Obj(m) = delta else {
+        return 0.0;
+    };
+    let prefix = format!("{name}{{");
+    m.iter()
+        .filter(|(k, _)| k.as_str() == name || k.starts_with(&prefix))
+        .filter_map(|(_, v)| v.f64().ok())
+        .sum()
+}
+
+/// `adapt profile`: run N batches of a per-layer plan through the
+/// emulator executor with the layer profiler on, print the per-layer
+/// cost table in execution order, and optionally save the JSON cost
+/// model. Artifact-free: profiles the bundled tiny model, so it runs
+/// anywhere the CI smoke does.
+fn profile_cmd(args: &Args) -> Result<()> {
+    let batches = args.get_usize("batches", 16)?;
+    let batch = args.get_usize("batch", 8)?;
+    let threads = args.get_usize("threads", adapt::util::threadpool::default_threads())?;
+    let seed = args.get_usize("seed", 0x5EED)? as u64;
+    let spec = args.get_or("spec", "default=mul8s_1l2h_like").to_string();
+
+    let model = adapt::trainer::synth::tiny_cnn();
+    let params = adapt::trainer::synth::tiny_params(&model, seed);
+    let ds = adapt::trainer::synth::tiny_dataset(256, (batches * batch).max(64));
+    let scales = adapt::trainer::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        32,
+        2,
+        CalibratorKind::Percentile,
+        0.999,
+        threads.max(1),
+    )?;
+    let policy = Policy::parse_spec(&spec)?;
+    let plan = retransform(&model, &policy);
+    let luts = LutRegistry::in_memory();
+    let mut exec = Executor::new(
+        &model,
+        params,
+        plan,
+        scales,
+        &luts,
+        Style::Optimized { threads },
+    )?;
+    let profiler = std::sync::Arc::new(adapt::obs::LayerProfiler::new(true));
+    exec.set_profiler(Some(std::sync::Arc::clone(&profiler)));
+
+    let n_batches = ds.eval.n_batches(batch).max(1);
+    let t0 = std::time::Instant::now();
+    for i in 0..batches {
+        let x = ds.eval.batch_tensor(i % n_batches, batch);
+        exec.forward(Value::F(x))?;
+    }
+    let wall = t0.elapsed();
+
+    let table = profiler.to_json();
+    let layer_total_ns = table.get("layer_total_ns")?.f64()?;
+    let mut rows = Vec::new();
+    for layer in table.get("layers")?.arr()? {
+        let total = layer.get("total_ns")?.f64()?;
+        rows.push(vec![
+            layer.get("name")?.str()?.to_string(),
+            layer.get("op")?.str()?.to_string(),
+            layer.get("tier")?.str()?.to_string(),
+            layer.get("backend")?.str()?.to_string(),
+            format!("{}", layer.get("bits")?.i64()?),
+            format!("{}", layer.get("macs")?.i64()?),
+            format!("{:.0}", layer.get("mean_ns")?.f64()?),
+            format!("{:.1}%", 100.0 * total / layer_total_ns.max(1.0)),
+        ]);
+    }
+    println!(
+        "per-layer kernel profile: {} x batch {batch} on {} (spec {spec}, {threads} threads)\n",
+        batches, model.name,
+    );
+    println!(
+        "{}",
+        fmt::table(
+            &["layer", "op", "tier", "backend", "bits", "macs", "mean ns", "share"],
+            &rows
+        )
+    );
+    let coverage = layer_total_ns / (wall.as_nanos() as f64).max(1.0);
+    println!(
+        "layer-sum {} of {} measured forward wall ({:.1}% coverage)",
+        fmt::dur(Duration::from_nanos(layer_total_ns as u64)),
+        fmt::dur(wall),
+        100.0 * coverage,
+    );
+
+    if let Some(out) = args.get("out") {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("model".to_string(), Json::Str(model.name.clone()));
+        doc.insert("spec".to_string(), Json::Str(spec));
+        doc.insert("batches".to_string(), Json::Num(batches as f64));
+        doc.insert("batch".to_string(), Json::Num(batch as f64));
+        doc.insert("threads".to_string(), Json::Num(threads as f64));
+        doc.insert(
+            "wall_forward_ns".to_string(),
+            Json::Num(wall.as_nanos() as f64),
+        );
+        doc.insert("profile".to_string(), table);
+        std::fs::write(out, Json::Obj(doc).to_string())
+            .with_context(|| format!("writing {out}"))?;
+        println!("written {out}");
     }
     Ok(())
 }

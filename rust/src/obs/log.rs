@@ -1,0 +1,199 @@
+//! Leveled structured logging to stderr, no dependencies.
+//!
+//! Configuration is read from the environment once, on first use:
+//!
+//! * `ADAPT_LOG` — minimum level: `error`, `warn` (default), `info`,
+//!   `debug`. Anything below the threshold is one relaxed-ish
+//!   `OnceLock` read and an integer compare — no formatting, no I/O.
+//! * `ADAPT_LOG_JSON=1` — emit one JSON object per line instead of the
+//!   human `key=value` form (machine-ingestable; field values are
+//!   JSON-escaped strings).
+//!
+//! Lines carry a unix-microsecond timestamp, the level, a `target`
+//! (subsystem tag like `serve` or `engine`), the message, and any
+//! structured fields:
+//!
+//! ```text
+//! ts=1754650000123456 level=info target=serve msg="listening" addr=127.0.0.1:8080
+//! {"ts":1754650000123456,"level":"info","target":"serve","msg":"listening","addr":"127.0.0.1:8080"}
+//! ```
+
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, ordered: `Error < Warn < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+struct Config {
+    max: Level,
+    json: bool,
+}
+
+static CONFIG: OnceLock<Config> = OnceLock::new();
+
+fn config() -> &'static Config {
+    CONFIG.get_or_init(|| {
+        let max = match std::env::var("ADAPT_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            // `warn`, unset, or anything unrecognized: the quiet default
+            // that still surfaces problems (matches the old eprintln!s).
+            _ => Level::Warn,
+        };
+        let json = std::env::var("ADAPT_LOG_JSON").as_deref() == Ok("1");
+        Config { max, json }
+    })
+}
+
+/// Is `level` currently emitted? Callers building expensive field sets
+/// can gate on this first.
+pub fn enabled(level: Level) -> bool {
+    level <= config().max
+}
+
+fn unix_us() -> u128 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros())
+        .unwrap_or(0)
+}
+
+/// Escape a value for the JSON line form.
+fn json_escape(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Quote a `key=value` value only when it needs it.
+fn kv_value(s: &str, out: &mut String) {
+    let plain = !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-' | ':' | '/' | '+'));
+    if plain {
+        out.push_str(s);
+    } else {
+        json_escape(s, out);
+    }
+}
+
+/// Emit one log line (the work happens only if `level` is enabled).
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let cfg = config();
+    let mut line = String::with_capacity(96);
+    if cfg.json {
+        line.push_str("{\"ts\":");
+        line.push_str(&unix_us().to_string());
+        line.push_str(",\"level\":\"");
+        line.push_str(level.name());
+        line.push_str("\",\"target\":");
+        json_escape(target, &mut line);
+        line.push_str(",\"msg\":");
+        json_escape(msg, &mut line);
+        for (k, v) in fields {
+            line.push(',');
+            json_escape(k, &mut line);
+            line.push(':');
+            json_escape(v, &mut line);
+        }
+        line.push('}');
+    } else {
+        line.push_str("ts=");
+        line.push_str(&unix_us().to_string());
+        line.push_str(" level=");
+        line.push_str(level.name());
+        line.push_str(" target=");
+        line.push_str(target);
+        line.push_str(" msg=");
+        kv_value(msg, &mut line);
+        for (k, v) in fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            kv_value(v, &mut line);
+        }
+    }
+    eprintln!("{line}");
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_values_quote_only_when_needed() {
+        let mut out = String::new();
+        kv_value("127.0.0.1:8080", &mut out);
+        assert_eq!(out, "127.0.0.1:8080");
+        let mut out = String::new();
+        kv_value("two words", &mut out);
+        assert_eq!(out, "\"two words\"");
+        let mut out = String::new();
+        kv_value("", &mut out);
+        assert_eq!(out, "\"\"");
+    }
+
+    #[test]
+    fn json_escaping_is_valid_json() {
+        let mut out = String::new();
+        json_escape("a\"b\\c\nd\u{1}", &mut out);
+        let parsed = crate::util::json::Json::parse(&out).unwrap();
+        assert_eq!(parsed.str().unwrap(), "a\"b\\c\nd\u{1}");
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

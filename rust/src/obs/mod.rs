@@ -1,0 +1,55 @@
+//! Observability: tracing, profiling, metrics exposition, logging.
+//!
+//! A dependency-free observability layer threaded through the serving
+//! stack. Everything here is built to be cheap-when-off: every hook is
+//! gated by one relaxed atomic load (or an `Option` that is `None`), so
+//! the GEMM hot path, `tests/kernel_equivalence.rs` and the
+//! `BENCH_gemm.json` numbers are unaffected unless a knob is turned on.
+//!
+//! ## The four surfaces
+//!
+//! * **Request tracing** ([`trace`]) — every engine owns a
+//!   [`trace::TraceRecorder`]. When sampling is on (`ADAPT_TRACE_SAMPLE`
+//!   in `(0, 1]`), a request picks up an `Arc<TraceCtx>` at submit time
+//!   and the batching loop records `queue` → `batch` → `execute` spans
+//!   against it with shared boundary instants (so the intervals are
+//!   monotone and non-overlapping by construction). Retention is
+//!   *tail-based*: the keep/drop decision happens at finish time, and
+//!   errors, deadline misses and overload rejections are always kept
+//!   regardless of the sample rate. Retrieval: `GET /v1/trace/{id}` and
+//!   `GET /v2/models/{m}/traces`.
+//!
+//! * **Per-layer kernel profiling** ([`profile`]) — the emulator
+//!   executor times each node when a [`profile::LayerProfiler`] is
+//!   attached *and* enabled (one relaxed load per forward, then one
+//!   `Instant` pair per node), aggregating per-layer call counts, total
+//!   ns, an EMA, MAC counts and the resolved kernel tier
+//!   (Scalar/Avx2/Neon × LUT/closed-form/fp32). `adapt profile` runs N
+//!   batches against a plan and dumps the table as JSON — the per-layer
+//!   cost model a plan search can consume; a serving engine exposes the
+//!   same table under its model stats when `ADAPT_PROFILE=1`.
+//!
+//! * **Metrics exposition** (`GET /metrics`, rendered with [`prom`]) —
+//!   Prometheus text format: engine counters (requests, batches, padded
+//!   slots, queue depth, queue-wait/compute histograms as cumulative
+//!   buckets), net-layer counters ([`net_stats::NetStats`]: accepted /
+//!   live / refused / idle-closed / pipelined / partial-flush resumes)
+//!   and rollout gauges (active version, canary fraction, shadow
+//!   disagreement rate). Every name is `adapt_`-prefixed snake_case;
+//!   CI's metrics smoke lints the surface and checks counter
+//!   monotonicity across scrapes.
+//!
+//! * **Structured logging** ([`log`]) — a tiny leveled logger
+//!   (`ADAPT_LOG=error|warn|info|debug`, default `warn`) writing
+//!   `key=value` lines — or JSON lines with `ADAPT_LOG_JSON=1` — to
+//!   stderr, replacing the ad-hoc `eprintln!` calls.
+
+pub mod log;
+pub mod net_stats;
+pub mod profile;
+pub mod prom;
+pub mod trace;
+
+pub use net_stats::NetStats;
+pub use profile::LayerProfiler;
+pub use trace::{TraceCtx, TraceOutcome, TraceRecorder};

@@ -1,0 +1,83 @@
+//! Network-layer counters for the readiness-loop front-end.
+//!
+//! One [`NetStats`] per server process, owned by the `ModelRegistry` so
+//! the `/metrics` renderer (which sees the registry) and the event
+//! loops (which see it via `NetServer::start`) share the same atomics.
+//! Everything is a relaxed counter touched on connection lifecycle
+//! edges, never on the per-byte path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::util::json::Json;
+
+/// Lifecycle counters for the net layer. All monotone except `live`.
+#[derive(Default)]
+pub struct NetStats {
+    /// Connections accepted and registered on an event loop.
+    pub accepted: AtomicU64,
+    /// Connections refused with 503 at the `max_conns` cap.
+    pub refused: AtomicU64,
+    /// Connections reaped by the idle-timeout wheel.
+    pub idle_closed: AtomicU64,
+    /// Requests parsed while the connection already had one in flight
+    /// or queued (HTTP/1.1 pipelining depth beyond 1).
+    pub pipelined: AtomicU64,
+    /// Partial flushes resumed via write-interest (slow readers).
+    pub flush_resumes: AtomicU64,
+    /// Currently-open connections (gauge).
+    pub live: AtomicUsize,
+}
+
+impl NetStats {
+    pub fn new() -> NetStats {
+        NetStats::default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "accepted".into(),
+            Json::Num(self.accepted.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "refused".into(),
+            Json::Num(self.refused.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "idle_closed".into(),
+            Json::Num(self.idle_closed.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "pipelined".into(),
+            Json::Num(self.pipelined.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "flush_resumes".into(),
+            Json::Num(self.flush_resumes.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "live".into(),
+            Json::Num(self.live.load(Ordering::Relaxed) as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_round_trip_to_json() {
+        let s = NetStats::new();
+        s.accepted.fetch_add(3, Ordering::Relaxed);
+        s.refused.fetch_add(1, Ordering::Relaxed);
+        s.live.fetch_add(2, Ordering::Relaxed);
+        let j = s.to_json();
+        assert_eq!(j.get("accepted").unwrap().i64().unwrap(), 3);
+        assert_eq!(j.get("refused").unwrap().i64().unwrap(), 1);
+        assert_eq!(j.get("live").unwrap().i64().unwrap(), 2);
+        assert_eq!(j.get("pipelined").unwrap().i64().unwrap(), 0);
+    }
+}

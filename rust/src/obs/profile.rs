@@ -1,0 +1,254 @@
+//! Per-layer kernel profiling for the emulator executor.
+//!
+//! A [`LayerProfiler`] hangs off an [`Executor`] as an
+//! `Option<Arc<LayerProfiler>>`; when absent (benches, equivalence
+//! tests, the trainer) the forward loop pays nothing, and when attached
+//! but disabled it pays one relaxed atomic load per *forward*, not per
+//! node. When enabled, each node's wall time is recorded under its
+//! layer key along with the resolved kernel identity — SIMD tier
+//! (Scalar/Avx2/Neon), product backend (LUT gather / closed-form /
+//! fp32 / behavioral function), bitwidth — and the node's MAC count for
+//! that batch, aggregated into per-layer counts, totals and an EMA.
+//!
+//! Two consumers: `adapt profile` (run N batches, dump the table as a
+//! JSON cost model) and the serving stats path (`ADAPT_PROFILE=1`
+//! attaches an enabled profiler to every engine worker and exposes the
+//! table under the model's stats).
+//!
+//! [`Executor`]: crate::emulator::exec::Executor
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// EMA smoothing for per-call ns (newest sample weight).
+const EMA_ALPHA: f64 = 0.2;
+
+/// Aggregated timing for one layer (one node id).
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    /// Op kind (`conv2d`, `linear`, ...).
+    pub op: String,
+    /// SIMD tier the kernels dispatched to (`scalar`/`avx2`/`neon`).
+    pub tier: String,
+    /// Product backend (`lut`, `closed-form`, `func`, `fp32`, `none`).
+    pub backend: String,
+    /// Quantization bitwidth (0 = fp32 / not a GEMM node).
+    pub bits: u32,
+    /// Multiply-accumulates in the most recent recorded batch.
+    pub macs: u64,
+    /// Calls recorded.
+    pub count: u64,
+    /// Total wall ns across calls.
+    pub total_ns: u64,
+    /// Exponential moving average of per-call ns.
+    pub ema_ns: f64,
+}
+
+/// Per-layer profile aggregator. Keys order layers by node index so the
+/// dumped table reads in execution order.
+pub struct LayerProfiler {
+    enabled: AtomicBool,
+    layers: Mutex<BTreeMap<String, LayerStat>>,
+}
+
+impl LayerProfiler {
+    pub fn new(enabled: bool) -> LayerProfiler {
+        LayerProfiler {
+            enabled: AtomicBool::new(enabled),
+            layers: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Enabled iff `ADAPT_PROFILE=1` (serving-path construction).
+    pub fn from_env() -> LayerProfiler {
+        LayerProfiler::new(std::env::var("ADAPT_PROFILE").as_deref() == Ok("1"))
+    }
+
+    /// The per-forward gate: one relaxed load.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Record one node execution. `key` must sort in execution order
+    /// (the executor uses `"{idx:03}:{name}"`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        key: &str,
+        op: &str,
+        tier: &str,
+        backend: &str,
+        bits: u32,
+        macs: u64,
+        ns: u64,
+    ) {
+        let mut layers = self.layers.lock().unwrap();
+        match layers.get_mut(key) {
+            Some(s) => {
+                s.count += 1;
+                s.total_ns += ns;
+                s.macs = macs;
+                s.ema_ns = EMA_ALPHA * ns as f64 + (1.0 - EMA_ALPHA) * s.ema_ns;
+            }
+            None => {
+                layers.insert(
+                    key.to_string(),
+                    LayerStat {
+                        op: op.to_string(),
+                        tier: tier.to_string(),
+                        backend: backend.to_string(),
+                        bits,
+                        macs,
+                        count: 1,
+                        total_ns: ns,
+                        ema_ns: ns as f64,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Sum of all recorded per-layer wall ns.
+    pub fn total_ns(&self) -> u64 {
+        self.layers.lock().unwrap().values().map(|s| s.total_ns).sum()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.layers.lock().unwrap().is_empty()
+    }
+
+    /// Drop all aggregates (keeps the enable flag).
+    pub fn clear(&self) {
+        self.layers.lock().unwrap().clear();
+    }
+
+    /// Merge another profiler's aggregates into this one (pool workers
+    /// each own a profiler; stats reporting folds them together).
+    pub fn merge_into(&self, other: &LayerProfiler) {
+        let src = self.layers.lock().unwrap();
+        let mut dst = other.layers.lock().unwrap();
+        for (k, s) in src.iter() {
+            match dst.get_mut(k) {
+                Some(d) => {
+                    d.count += s.count;
+                    d.total_ns += s.total_ns;
+                    d.macs = d.macs.max(s.macs);
+                    // Weighted blend keeps the EMA meaningful post-merge.
+                    d.ema_ns = (d.ema_ns + s.ema_ns) / 2.0;
+                }
+                None => {
+                    dst.insert(k.clone(), s.clone());
+                }
+            }
+        }
+    }
+
+    /// The per-layer cost table:
+    /// `{"layers": [{name, op, tier, backend, bits, macs, count,
+    ///   total_ns, mean_ns, ema_ns}...], "layer_total_ns": N}`.
+    pub fn to_json(&self) -> Json {
+        let layers = self.layers.lock().unwrap();
+        let mut rows = Vec::with_capacity(layers.len());
+        let mut total = 0u64;
+        for (name, s) in layers.iter() {
+            total += s.total_ns;
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(name.clone()));
+            m.insert("op".into(), Json::Str(s.op.clone()));
+            m.insert("tier".into(), Json::Str(s.tier.clone()));
+            m.insert("backend".into(), Json::Str(s.backend.clone()));
+            m.insert("bits".into(), Json::Num(s.bits as f64));
+            m.insert("macs".into(), Json::Num(s.macs as f64));
+            m.insert("count".into(), Json::Num(s.count as f64));
+            m.insert("total_ns".into(), Json::Num(s.total_ns as f64));
+            m.insert(
+                "mean_ns".into(),
+                Json::Num(if s.count > 0 {
+                    s.total_ns as f64 / s.count as f64
+                } else {
+                    0.0
+                }),
+            );
+            m.insert("ema_ns".into(), Json::Num(s.ema_ns));
+            rows.push(Json::Obj(m));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("layers".into(), Json::Arr(rows));
+        m.insert("layer_total_ns".into(), Json::Num(total as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_gate() {
+        let p = LayerProfiler::new(false);
+        assert!(!p.enabled());
+        p.set_enabled(true);
+        assert!(p.enabled());
+    }
+
+    #[test]
+    fn record_aggregates_and_dumps() {
+        let p = LayerProfiler::new(true);
+        p.record("001:conv1", "conv2d", "scalar", "lut", 8, 1000, 500);
+        p.record("001:conv1", "conv2d", "scalar", "lut", 8, 1000, 700);
+        p.record("002:fc", "linear", "scalar", "closed-form", 8, 64, 100);
+        assert_eq!(p.total_ns(), 1300);
+        let j = p.to_json();
+        assert_eq!(j.get("layer_total_ns").unwrap().i64().unwrap(), 1300);
+        let rows = j.get("layers").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").unwrap().str().unwrap(), "001:conv1");
+        assert_eq!(rows[0].get("count").unwrap().i64().unwrap(), 2);
+        assert_eq!(rows[0].get("mean_ns").unwrap().i64().unwrap(), 600);
+        assert_eq!(
+            rows[1].get("backend").unwrap().str().unwrap(),
+            "closed-form"
+        );
+    }
+
+    #[test]
+    fn ema_tracks_recent_cost() {
+        let p = LayerProfiler::new(true);
+        for _ in 0..50 {
+            p.record("000:l", "linear", "scalar", "fp32", 0, 10, 100);
+        }
+        for _ in 0..50 {
+            p.record("000:l", "linear", "scalar", "fp32", 0, 10, 1000);
+        }
+        let j = p.to_json();
+        let ema = j.get("layers").unwrap().arr().unwrap()[0]
+            .get("ema_ns")
+            .unwrap()
+            .f64()
+            .unwrap();
+        assert!(ema > 900.0, "EMA should converge to recent cost, got {ema}");
+    }
+
+    #[test]
+    fn merge_folds_counts() {
+        let a = LayerProfiler::new(true);
+        let b = LayerProfiler::new(true);
+        a.record("000:l", "linear", "scalar", "fp32", 0, 10, 100);
+        b.record("000:l", "linear", "scalar", "fp32", 0, 10, 300);
+        b.record("001:m", "conv2d", "scalar", "lut", 8, 20, 50);
+        a.merge_into(&b);
+        assert_eq!(b.total_ns(), 450);
+        let j = b.to_json();
+        let rows = j.get("layers").unwrap().arr().unwrap();
+        assert_eq!(rows[0].get("count").unwrap().i64().unwrap(), 2);
+    }
+}

@@ -1,0 +1,159 @@
+//! Prometheus text-format (exposition format 0.0.4) writer.
+//!
+//! Just enough of the format for `GET /metrics`: `# HELP` / `# TYPE`
+//! headers, counters, gauges, and cumulative histogram series
+//! (`_bucket{le=...}` + `_sum` + `_count`). Label values are escaped
+//! per the spec (backslash, quote, newline). Metric names are the
+//! caller's contract — CI lints that everything exposed matches
+//! `adapt_[a-z0-9_]+`.
+
+use std::fmt::Write as _;
+
+/// Streaming builder for one `/metrics` response body.
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter {
+            out: String::with_capacity(4096),
+        }
+    }
+
+    /// `# HELP` + `# TYPE` header for a metric family.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn write_labels(&mut self, labels: &[(&str, &str)]) {
+        if labels.is_empty() {
+            return;
+        }
+        self.out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                self.out.push(',');
+            }
+            self.out.push_str(k);
+            self.out.push_str("=\"");
+            for c in v.chars() {
+                match c {
+                    '\\' => self.out.push_str("\\\\"),
+                    '"' => self.out.push_str("\\\""),
+                    '\n' => self.out.push_str("\\n"),
+                    c => self.out.push(c),
+                }
+            }
+            self.out.push('"');
+        }
+        self.out.push('}');
+    }
+
+    /// One sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        self.write_labels(labels);
+        self.out.push(' ');
+        if value.fract() == 0.0 && value.abs() < 9.0e15 {
+            let _ = write!(self.out, "{}", value as i64);
+        } else {
+            let _ = write!(self.out, "{value}");
+        }
+        self.out.push('\n');
+    }
+
+    /// A full cumulative histogram family from per-bucket counts.
+    ///
+    /// * `uppers` — inclusive upper edge of each bucket (same length as
+    ///   `counts`); the last bucket is additionally exposed as `+Inf`.
+    /// * `counts` — per-bucket (non-cumulative) observation counts.
+    /// * `sum` — total of all observed values, in the metric's unit.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        uppers: &[u64],
+        counts: &[u64],
+        sum: f64,
+    ) {
+        debug_assert_eq!(uppers.len(), counts.len());
+        let mut cumulative = 0u64;
+        let bucket_name = format!("{name}_bucket");
+        // The `le` string only lives one iteration, so each bucket line
+        // assembles its own label vec rather than reusing one across
+        // the loop (this is the cold exposition path).
+        for (upper, &c) in uppers.iter().zip(counts) {
+            cumulative += c;
+            let le = upper.to_string();
+            let mut lab = labels.to_vec();
+            lab.push(("le", &le));
+            self.sample(&bucket_name, &lab, cumulative as f64);
+        }
+        let mut lab = labels.to_vec();
+        lab.push(("le", "+Inf"));
+        self.sample(&bucket_name, &lab, cumulative as f64);
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.sample(&format!("{name}_count"), labels, cumulative as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for PromWriter {
+    fn default() -> PromWriter {
+        PromWriter::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_and_labels() {
+        let mut w = PromWriter::new();
+        w.header("adapt_requests_total", "Requests admitted.", "counter");
+        w.sample("adapt_requests_total", &[("model", "alpha")], 42.0);
+        w.sample("adapt_padding_ratio", &[], 0.125);
+        let text = w.finish();
+        assert!(text.contains("# TYPE adapt_requests_total counter\n"));
+        assert!(text.contains("adapt_requests_total{model=\"alpha\"} 42\n"));
+        assert!(text.contains("adapt_padding_ratio 0.125\n"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        let mut w = PromWriter::new();
+        w.sample("adapt_x", &[("m", "a\"b\\c\nd")], 1.0);
+        assert_eq!(w.finish(), "adapt_x{m=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn histogram_is_cumulative_with_inf() {
+        let mut w = PromWriter::new();
+        w.histogram(
+            "adapt_queue_wait_us",
+            &[("model", "m")],
+            &[1, 2, 4],
+            &[5, 3, 2],
+            123.0,
+        );
+        let text = w.finish();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines,
+            vec![
+                "adapt_queue_wait_us_bucket{model=\"m\",le=\"1\"} 5",
+                "adapt_queue_wait_us_bucket{model=\"m\",le=\"2\"} 8",
+                "adapt_queue_wait_us_bucket{model=\"m\",le=\"4\"} 10",
+                "adapt_queue_wait_us_bucket{model=\"m\",le=\"+Inf\"} 10",
+                "adapt_queue_wait_us_sum{model=\"m\"} 123",
+                "adapt_queue_wait_us_count{model=\"m\"} 10",
+            ]
+        );
+    }
+}

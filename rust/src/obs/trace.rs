@@ -1,0 +1,354 @@
+//! Request tracing: per-request span recording with tail-based sampling.
+//!
+//! Every inference engine owns one [`TraceRecorder`]. At submit time the
+//! engine asks the recorder to [`begin`](TraceRecorder::begin) a trace
+//! for the request's id; when sampling is off this returns `None` and
+//! the request carries no trace state at all. When sampling is on, the
+//! request carries a cheap `Arc<TraceCtx>` and the batching loop records
+//! spans against it:
+//!
+//! * `queue` — submit → worker pickup,
+//! * `batch` — pickup → batch launch (gather + padding + quantize prep),
+//! * `execute` — the batch forward itself, tagged with worker / plan
+//!   version / generation.
+//!
+//! Consecutive spans share their boundary instants, so a trace's
+//! intervals are monotone and non-overlapping by construction.
+//!
+//! **Tail-based sampling**: the keep/drop decision happens at *finish*
+//! time, when the outcome is known. Failed requests (engine errors,
+//! deadline misses, overload rejections) are always retained; successes
+//! are retained when a deterministic hash of the request id falls under
+//! the sample rate (`ADAPT_TRACE_SAMPLE` in `(0, 1]`). Retained traces
+//! live in a bounded ring (newest win) served by `GET /v1/trace/{id}`
+//! and `GET /v2/models/{m}/traces`.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Traces retained per engine.
+const RING_CAP: usize = 256;
+
+/// One timed interval inside a request's lifetime. Times are µs offsets
+/// from the trace's start.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub end_us: u64,
+    /// Pool worker that ran this span (execute spans).
+    pub worker: Option<usize>,
+    /// Plan version the span ran under (execute spans).
+    pub version: Option<u64>,
+    /// Plan generation the span ran under (execute spans).
+    pub generation: Option<u64>,
+    /// Batch size the request shared (batch/execute spans).
+    pub batch: Option<usize>,
+}
+
+impl Span {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.into()));
+        m.insert("start_us".into(), Json::Num(self.start_us as f64));
+        m.insert("end_us".into(), Json::Num(self.end_us as f64));
+        if let Some(w) = self.worker {
+            m.insert("worker".into(), Json::Num(w as f64));
+        }
+        if let Some(v) = self.version {
+            m.insert("version".into(), Json::Num(v as f64));
+        }
+        if let Some(g) = self.generation {
+            m.insert("generation".into(), Json::Num(g as f64));
+        }
+        if let Some(b) = self.batch {
+            m.insert("batch".into(), Json::Num(b as f64));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Live (in-flight) trace state carried by a request through the engine.
+pub struct TraceCtx {
+    pub id: u64,
+    /// Submit instant — every span offset is relative to this.
+    t0: Instant,
+    started_unix_us: u64,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl TraceCtx {
+    fn new(id: u64) -> TraceCtx {
+        TraceCtx {
+            id,
+            t0: Instant::now(),
+            started_unix_us: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0),
+            spans: Mutex::new(Vec::with_capacity(4)),
+        }
+    }
+
+    /// µs offset of `at` from the trace start (0 if `at` precedes it).
+    pub fn offset_us(&self, at: Instant) -> u64 {
+        at.checked_duration_since(self.t0)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Record one finished span.
+    pub fn push(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Plain interval span.
+    pub fn span(&self, name: &'static str, start_us: u64, end_us: u64) {
+        self.push(Span {
+            name,
+            start_us,
+            end_us,
+            worker: None,
+            version: None,
+            generation: None,
+            batch: None,
+        });
+    }
+}
+
+/// How a traced request ended; decides tail-sampling retention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    Ok,
+    /// Stable error code (`ServiceError::code()`); always retained.
+    Error(&'static str),
+}
+
+/// One retained (finished) trace.
+struct FinishedTrace {
+    id: u64,
+    started_unix_us: u64,
+    outcome: &'static str,
+    total_us: u64,
+    spans: Vec<Span>,
+}
+
+impl FinishedTrace {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert(
+            "started_unix_us".into(),
+            Json::Num(self.started_unix_us as f64),
+        );
+        m.insert("outcome".into(), Json::Str(self.outcome.into()));
+        m.insert("total_us".into(), Json::Num(self.total_us as f64));
+        m.insert(
+            "spans".into(),
+            Json::Arr(self.spans.iter().map(|s| s.to_json()).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Per-engine trace recorder: sampling decision + bounded retention ring.
+pub struct TraceRecorder {
+    /// Sample rate as f32 bits (atomic so tests and ops can retune a
+    /// live engine without racing the submit path).
+    sample_bits: AtomicU32,
+    ring: Mutex<VecDeque<FinishedTrace>>,
+}
+
+impl TraceRecorder {
+    /// Recorder with an explicit sample rate (clamped to `[0, 1]`).
+    pub fn with_sample(rate: f32) -> TraceRecorder {
+        TraceRecorder {
+            sample_bits: AtomicU32::new(rate.clamp(0.0, 1.0).to_bits()),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Read `ADAPT_TRACE_SAMPLE` (a rate in `[0, 1]`; unset or
+    /// unparseable means 0 = tracing off).
+    pub fn from_env() -> TraceRecorder {
+        let rate = std::env::var("ADAPT_TRACE_SAMPLE")
+            .ok()
+            .and_then(|s| s.parse::<f32>().ok())
+            .unwrap_or(0.0);
+        TraceRecorder::with_sample(rate)
+    }
+
+    pub fn sample(&self) -> f32 {
+        f32::from_bits(self.sample_bits.load(Ordering::Relaxed))
+    }
+
+    /// Retune the sample rate on a live engine.
+    pub fn set_sample(&self, rate: f32) {
+        self.sample_bits
+            .store(rate.clamp(0.0, 1.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Is tracing on at all? One relaxed load.
+    pub fn enabled(&self) -> bool {
+        self.sample() > 0.0
+    }
+
+    /// Start a trace for request `id`. `None` when tracing is off — the
+    /// request then carries no trace state whatsoever.
+    pub fn begin(&self, id: u64) -> Option<Arc<TraceCtx>> {
+        if !self.enabled() {
+            return None;
+        }
+        Some(Arc::new(TraceCtx::new(id)))
+    }
+
+    /// Deterministic per-id sampling hash in `[0, 1)`.
+    fn id_hash(id: u64) -> f64 {
+        let h = (id ^ 0xD6E8_FEB8_6659_FD93).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> 40) as f64 / (1u64 << 24) as f64
+    }
+
+    /// Finish a trace: decide retention (tail-based) and store it.
+    pub fn finish(&self, ctx: &TraceCtx, outcome: TraceOutcome) {
+        let keep = match outcome {
+            // Errors / deadline misses / 503s are always worth keeping.
+            TraceOutcome::Error(_) => true,
+            TraceOutcome::Ok => Self::id_hash(ctx.id) < self.sample() as f64,
+        };
+        if !keep {
+            return;
+        }
+        let spans = ctx.spans.lock().unwrap().clone();
+        let total_us = spans.iter().map(|s| s.end_us).max().unwrap_or(0);
+        let outcome = match outcome {
+            TraceOutcome::Ok => "ok",
+            TraceOutcome::Error(code) => code,
+        };
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(FinishedTrace {
+            id: ctx.id,
+            started_unix_us: ctx.started_unix_us,
+            outcome,
+            total_us,
+            spans,
+        });
+    }
+
+    /// Look up a retained trace by request id (newest match wins).
+    pub fn get(&self, id: u64) -> Option<Json> {
+        let ring = self.ring.lock().unwrap();
+        ring.iter().rev().find(|t| t.id == id).map(|t| t.to_json())
+    }
+
+    /// The newest `limit` retained traces, newest first.
+    pub fn recent(&self, limit: usize) -> Json {
+        let ring = self.ring.lock().unwrap();
+        Json::Arr(ring.iter().rev().take(limit).map(|t| t.to_json()).collect())
+    }
+
+    /// Retained trace count (tests).
+    pub fn retained(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_off_records_nothing() {
+        let rec = TraceRecorder::with_sample(0.0);
+        assert!(!rec.enabled());
+        assert!(rec.begin(7).is_none());
+        assert_eq!(rec.retained(), 0);
+    }
+
+    #[test]
+    fn sample_one_keeps_everything() {
+        let rec = TraceRecorder::with_sample(1.0);
+        for id in 0..20 {
+            let ctx = rec.begin(id).unwrap();
+            ctx.span("queue", 0, 5);
+            rec.finish(&ctx, TraceOutcome::Ok);
+        }
+        assert_eq!(rec.retained(), 20);
+        let t = rec.get(13).unwrap();
+        assert_eq!(t.get("outcome").unwrap().str().unwrap(), "ok");
+        assert_eq!(t.get("id").unwrap().i64().unwrap(), 13);
+    }
+
+    #[test]
+    fn errors_always_kept_under_low_sampling() {
+        let rec = TraceRecorder::with_sample(1.0e-9);
+        let mut ok_kept = 0;
+        for id in 0..200 {
+            let ctx = rec.begin(id).unwrap();
+            rec.finish(&ctx, TraceOutcome::Ok);
+            ok_kept = rec.retained();
+        }
+        // At a ~1e-9 rate no success should survive...
+        assert_eq!(ok_kept, 0, "successes must be dropped at tiny rates");
+        // ...but every error does.
+        for id in 200..210 {
+            let ctx = rec.begin(id).unwrap();
+            ctx.span("queue", 0, 3);
+            rec.finish(&ctx, TraceOutcome::Error("deadline_exceeded"));
+        }
+        assert_eq!(rec.retained(), 10);
+        let t = rec.get(205).unwrap();
+        assert_eq!(
+            t.get("outcome").unwrap().str().unwrap(),
+            "deadline_exceeded"
+        );
+    }
+
+    #[test]
+    fn ring_is_bounded_newest_win() {
+        let rec = TraceRecorder::with_sample(1.0);
+        for id in 0..(RING_CAP as u64 + 50) {
+            let ctx = rec.begin(id).unwrap();
+            rec.finish(&ctx, TraceOutcome::Ok);
+        }
+        assert_eq!(rec.retained(), RING_CAP);
+        assert!(rec.get(0).is_none(), "oldest evicted");
+        assert!(rec.get(RING_CAP as u64 + 49).is_some(), "newest kept");
+    }
+
+    #[test]
+    fn recent_lists_newest_first() {
+        let rec = TraceRecorder::with_sample(1.0);
+        for id in 0..5 {
+            let ctx = rec.begin(id).unwrap();
+            rec.finish(&ctx, TraceOutcome::Ok);
+        }
+        let arr = rec.recent(3);
+        let ids: Vec<i64> = arr
+            .arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.get("id").unwrap().i64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![4, 3, 2]);
+    }
+
+    #[test]
+    fn id_hash_is_deterministic_and_uniformish() {
+        let a = TraceRecorder::id_hash(42);
+        assert_eq!(a, TraceRecorder::id_hash(42));
+        assert!((0.0..1.0).contains(&a));
+        // At rate 0.5, roughly half of sequential ids stay.
+        let kept = (0..1000)
+            .filter(|&id| TraceRecorder::id_hash(id) < 0.5)
+            .count();
+        assert!((300..700).contains(&kept), "kept {kept} of 1000 at 0.5");
+    }
+}

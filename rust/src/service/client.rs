@@ -186,6 +186,48 @@ impl LoadReport {
     }
 }
 
+/// Scrape `GET /metrics` into a flat `name{labels} -> value` map.
+/// Histogram series keep their full `_bucket{...,le="..."}` keys, so
+/// two snapshots are directly diffable series-by-series.
+pub fn scrape_metrics(addr: &str) -> Result<BTreeMap<String, f64>> {
+    let (status, body) = http_call(addr, "GET", "/metrics", None)?;
+    if status != 200 {
+        bail!("/metrics returned {status}: {body}");
+    }
+    let mut out = BTreeMap::new();
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // `name{labels} value` or `name value`: split on the *last*
+        // space so spaces inside label values can't skew the parse.
+        let Some((key, val)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        if let Ok(v) = val.trim().parse::<f64>() {
+            out.insert(key.trim().to_string(), v);
+        }
+    }
+    Ok(out)
+}
+
+/// Per-series `after - before` between two [`scrape_metrics`] snapshots
+/// (a series absent from `before` counts from zero; zero deltas are
+/// dropped). This is the object `adapt client --bench-out` embeds per
+/// phase so BENCH records carry server-side counters — padding ratio,
+/// refusals, batch counts — alongside the client-observed timings.
+pub fn metrics_delta(before: &BTreeMap<String, f64>, after: &BTreeMap<String, f64>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in after {
+        let d = v - before.get(k).copied().unwrap_or(0.0);
+        if d != 0.0 {
+            m.insert(k.clone(), Json::Num(d));
+        }
+    }
+    Json::Obj(m)
+}
+
 /// Discover the served model's flat input length from `/v1/healthz`.
 pub fn discover_input_len(addr: &str) -> Result<usize> {
     let (status, body) = http_call(addr, "GET", "/v1/healthz", None)?;

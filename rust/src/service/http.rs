@@ -32,7 +32,19 @@
 //! POST /v2/models/{m}/plans/{v}/canary     {"fraction": 0.25} -> route that share to v
 //! POST /v2/models/{m}/plans/{v}/shadow     mirror traffic to v, compare online
 //! POST /v2/models/{m}/rollback        revert to the previous active version
+//!
+//! GET  /metrics                       Prometheus text exposition (engine, net, rollout)
+//! GET  /v1/trace/{id}                 span tree of one sampled request (404 if unsampled)
+//! GET  /v2/models/{m}/traces          recently retained traces for model {m}
 //! ```
+//!
+//! `/metrics` is the only non-JSON response
+//! (`text/plain; version=0.0.4`); the body is rendered by
+//! [`ModelRegistry::metrics_text`] from live engine counters, the
+//! net-layer [`crate::obs::NetStats`], and rollout state. The trace
+//! routes read the per-engine [`crate::obs::TraceRecorder`] ring;
+//! sampling is off by default (`ADAPT_TRACE_SAMPLE=0..=1` to enable),
+//! so an unsampled or evicted id is a plain 404.
 //!
 //! Every error is a [`ServiceError`] rendered as
 //! `{"error": code, "message": ...}` with that variant's status code.
@@ -191,13 +203,36 @@ fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
-/// Dispatch one request. Always returns a JSON body. Runs on a
-/// dispatch-pool thread (may block on the engine queue), never on an
-/// event loop.
-pub(crate) fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
+/// A response body: JSON for the API routes, Prometheus plain text for
+/// `GET /metrics`.
+pub(crate) enum Payload {
+    Json(Json),
+    Text(String),
+}
+
+/// Dispatch one request. Runs on a dispatch-pool thread (may block on
+/// the engine queue), never on an event loop.
+pub(crate) fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Payload) {
+    if req.path == "/metrics" {
+        if req.method == "GET" {
+            return (200, Payload::Text(registry.metrics_text()));
+        }
+        let e = ServiceError::MethodNotAllowed(format!("{} /metrics", req.method));
+        return (e.http_status(), Payload::Json(e.to_json()));
+    }
+    let (status, body) = route_json(registry, req);
+    (status, Payload::Json(body))
+}
+
+/// All the JSON routes (everything except `/metrics`).
+fn route_json(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
     let err = |e: ServiceError| (e.http_status(), e.to_json());
     let method = req.method.as_str();
     let path = req.path.as_str();
+
+    if let Some(id) = path.strip_prefix("/v1/trace/") {
+        return trace_route(registry.default_model(), method, path, id);
+    }
 
     // ----- /v1: bit-compatible shim over the registry's default model ----
     match (method, path) {
@@ -243,6 +278,25 @@ pub(crate) fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) 
     }
 }
 
+/// `GET /v1/trace/{id}`: the span tree of one sampled request on the
+/// default model, or 404 if the id was never sampled (or fell out of
+/// the bounded ring).
+fn trace_route(handle: &ModelHandle, method: &str, path: &str, id: &str) -> (u16, Json) {
+    let err = |e: ServiceError| (e.http_status(), e.to_json());
+    if method != "GET" {
+        return err(ServiceError::MethodNotAllowed(format!("{method} {path}")));
+    }
+    let Ok(id) = id.parse::<u64>() else {
+        return err(ServiceError::BadRequest(format!(
+            "trace id must be an integer, got {id:?}"
+        )));
+    };
+    match handle.service().engine().tracer().get(id) {
+        Some(trace) => (200, trace),
+        None => err(ServiceError::NotFound(format!("trace {id}"))),
+    }
+}
+
 /// Routes under `/v2/models/{name}/...`.
 fn route_model(
     handle: &ModelHandle,
@@ -265,6 +319,10 @@ fn route_model(
         },
         ["stats"] => match method {
             "GET" => (200, handle.stats_json()),
+            _ => wrong_method(),
+        },
+        ["traces"] => match method {
+            "GET" => (200, handle.service().engine().tracer().recent(50)),
             _ => wrong_method(),
         },
         ["plans"] => match method {
@@ -377,12 +435,16 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Serialize one JSON response with correct framing — the head format
-/// is byte-identical to the pre-readiness-loop server.
-pub(crate) fn response_bytes(status: u16, body: &Json, keep_alive: bool) -> Vec<u8> {
-    let body = body.to_string();
+/// Serialize one response with correct framing — for JSON bodies the
+/// head format is byte-identical to the pre-readiness-loop server;
+/// text bodies (only `/metrics`) carry the Prometheus content type.
+pub(crate) fn response_bytes(status: u16, body: &Payload, keep_alive: bool) -> Vec<u8> {
+    let (ctype, body) = match body {
+        Payload::Json(j) => ("application/json", j.to_string()),
+        Payload::Text(t) => ("text/plain; version=0.0.4", t.clone()),
+    };
     let head = format!(
-        "HTTP/1.1 {status} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\ncontent-type: {ctype}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
         status_text(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },

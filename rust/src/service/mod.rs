@@ -40,6 +40,17 @@
 //! The old `InferenceEngine::submit`/`infer` surface still works — it is
 //! a shim over the same typed path — so in-process consumers (benches,
 //! the sweep, tests) did not have to move.
+//!
+//! ## Observability
+//!
+//! Every layer reports into [`crate::obs`]: typed submits begin a trace
+//! when sampling is on (`ADAPT_TRACE_SAMPLE`; the batching loop records
+//! queue/batch/execute spans, tail-retained under `GET /v1/trace/{id}`
+//! and `GET /v2/models/{m}/traces`), the engine's counters/histograms
+//! plus the registry's rollout state and the net layer's
+//! [`crate::obs::NetStats`] render as Prometheus text under
+//! `GET /metrics`, and `ADAPT_PROFILE=1` attaches the pool's per-layer
+//! kernel profiler (also driven standalone by `adapt profile`).
 
 pub mod api;
 pub mod client;
@@ -238,17 +249,26 @@ impl AdaptService {
         req: InferRequest,
         version: Option<u64>,
     ) -> Result<InferHandle, ServiceError> {
-        let expected = self.engine.input_len();
-        if req.input.len() != expected {
-            return Err(ServiceError::WrongInputLength {
-                got: req.input.len(),
-                expected,
-            });
-        }
         let id = req
             .id
             .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
-        let rx = self.engine.submit_raw_to(req.input, req.deadline, version)?;
+        let trace = self.engine.tracer().begin(id);
+        let expected = self.engine.input_len();
+        if req.input.len() != expected {
+            let err = ServiceError::WrongInputLength {
+                got: req.input.len(),
+                expected,
+            };
+            if let Some(tr) = &trace {
+                self.engine
+                    .tracer()
+                    .finish(tr, crate::obs::TraceOutcome::Error(err.code()));
+            }
+            return Err(err);
+        }
+        let rx = self
+            .engine
+            .submit_raw_traced(req.input, req.deadline, version, trace)?;
         Ok(InferHandle {
             id,
             top_k: req.top_k,
@@ -274,9 +294,10 @@ impl AdaptService {
         let id = req
             .id
             .unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        let trace = self.engine.tracer().begin(id);
         let rx = self
             .engine
-            .try_submit_raw_to(req.input, req.deadline, version)?;
+            .try_submit_raw_traced(req.input, req.deadline, version, trace)?;
         Ok(rx.map(|rx| InferHandle {
             id,
             top_k: req.top_k,

@@ -19,7 +19,7 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::fd::AsRawFd;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -27,6 +27,7 @@ use anyhow::{Context, Result};
 
 use super::conn::{Conn, ParseStep, PIPELINE_MAX};
 use super::{sys, waker_pair, Backend, Event, Interest, Poller, TimerWheel, Waker, WakeReader};
+use crate::obs::NetStats;
 use crate::service::api::ServiceError;
 use crate::service::http::{self, ServeOptions};
 use crate::service::registry::ModelRegistry;
@@ -123,11 +124,13 @@ struct EventLoop {
     registry: Arc<ModelRegistry>,
     dispatch: Arc<ThreadPool>,
     stop: Arc<AtomicBool>,
-    /// Live connections across *all* loops (the `max_conns` cap).
-    live: Arc<AtomicUsize>,
+    /// Net-layer lifecycle counters, shared with the registry's
+    /// `/metrics` exposition; `net.live` doubles as the enforcement
+    /// counter for the `max_conns` cap across *all* loops.
+    net: Arc<NetStats>,
     opts: ServeOptions,
     /// Pre-serialized 503 for over-cap connections.
-    overload: Vec<u8>,
+    overload: Arc<Vec<u8>>,
 }
 
 impl EventLoop {
@@ -175,17 +178,24 @@ impl EventLoop {
 
     fn admit(&mut self, stream: TcpStream) {
         // Same cap semantics as the thread-per-connection server: count
-        // first, refuse with a short best-effort 503 when over.
-        let n = self.live.fetch_add(1, Ordering::AcqRel) + 1;
+        // first, refuse with a short best-effort 503 when over. The
+        // refusal *write* runs on the dispatch pool: the just-accepted
+        // socket is still blocking, so a hostile peer that never reads
+        // could otherwise stall this event loop for the full write
+        // timeout while live connections sit unserved.
+        let n = self.net.live.fetch_add(1, Ordering::AcqRel) + 1;
         if n > self.opts.max_conns {
-            self.live.fetch_sub(1, Ordering::AcqRel);
-            refuse_overloaded(stream, &self.overload);
+            self.net.live.fetch_sub(1, Ordering::AcqRel);
+            self.net.refused.fetch_add(1, Ordering::Relaxed);
+            let overload = Arc::clone(&self.overload);
+            self.dispatch
+                .submit(move || refuse_overloaded(stream, &overload));
             return;
         }
         // Accepted sockets do not inherit the listener's non-blocking
         // mode on Linux; set it explicitly.
         if stream.set_nonblocking(true).is_err() {
-            self.live.fetch_sub(1, Ordering::AcqRel);
+            self.net.live.fetch_sub(1, Ordering::AcqRel);
             return;
         }
         let _ = stream.set_nodelay(true);
@@ -198,9 +208,10 @@ impl EventLoop {
         let tok = token(slot, epoch);
         if self.poller.register(fd, tok, Interest::READ).is_err() {
             self.conns.remove(slot);
-            self.live.fetch_sub(1, Ordering::AcqRel);
+            self.net.live.fetch_sub(1, Ordering::AcqRel);
             return;
         }
+        self.net.accepted.fetch_add(1, Ordering::Relaxed);
         // Exactly one wheel entry per connection for its whole life:
         // fires either re-arm (deadline moved) or close.
         self.wheel.insert(deadline, tok);
@@ -273,10 +284,20 @@ impl EventLoop {
         while !conn.discard_input && conn.parsed.len() < PIPELINE_MAX {
             match conn.try_parse(max_body) {
                 ParseStep::NeedMore => break,
-                ParseStep::Request(req) => conn.parsed.push_back(req),
+                ParseStep::Request(req) => {
+                    // A request parsed while an earlier one on this
+                    // connection is still unanswered = pipelining.
+                    if conn.inflight || !conn.parsed.is_empty() {
+                        self.net.pipelined.fetch_add(1, Ordering::Relaxed);
+                    }
+                    conn.parsed.push_back(req);
+                }
                 ParseStep::Error(e) => {
-                    conn.pending_error =
-                        Some(http::response_bytes(e.http_status(), &e.to_json(), false));
+                    conn.pending_error = Some(http::response_bytes(
+                        e.http_status(),
+                        &http::Payload::Json(e.to_json()),
+                        false,
+                    ));
                     conn.discard_input = true;
                     conn.read_buf.clear();
                     break;
@@ -395,6 +416,11 @@ impl EventLoop {
             )
         };
         if desired != current && self.poller.reregister(fd, tok, desired).is_ok() {
+            if desired.writable && !current.writable {
+                // Entering write interest = a partial flush parked for
+                // writability to finish it later.
+                self.net.flush_resumes.fetch_add(1, Ordering::Relaxed);
+            }
             if let Some(conn) = self.conns.slot_mut(slot) {
                 conn.interest = desired;
             }
@@ -465,7 +491,10 @@ impl EventLoop {
                     }
                     self.wheel.insert(d, tok);
                 }
-                Action::Close => self.close(slot),
+                Action::Close => {
+                    self.net.idle_closed.fetch_add(1, Ordering::Relaxed);
+                    self.close(slot);
+                }
             }
         }
     }
@@ -473,13 +502,15 @@ impl EventLoop {
     fn close(&mut self, slot: usize) {
         if let Some(conn) = self.conns.remove(slot) {
             let _ = self.poller.deregister(conn.stream.as_raw_fd());
-            self.live.fetch_sub(1, Ordering::AcqRel);
+            self.net.live.fetch_sub(1, Ordering::AcqRel);
             // Socket closes when `conn` drops here.
         }
     }
 }
 
-/// Best-effort 503 on a just-accepted (still blocking) socket.
+/// Best-effort 503 on a just-accepted (still blocking) socket. Runs on
+/// a dispatch-pool thread — never on an event loop — because the write
+/// can block for up to the whole timeout against a peer that won't read.
 fn refuse_overloaded(mut stream: TcpStream, bytes: &[u8]) {
     let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
     let _ = stream.write_all(bytes);
@@ -521,12 +552,16 @@ impl NetServer {
         };
         let dispatch = Arc::new(ThreadPool::new(n_dispatch));
         let stop = Arc::new(AtomicBool::new(false));
-        let live = Arc::new(AtomicUsize::new(0));
+        let net = Arc::clone(registry.net_stats());
         let overload = {
             let e = ServiceError::Overloaded {
                 conns: opts.max_conns,
             };
-            http::response_bytes(e.http_status(), &e.to_json(), false)
+            Arc::new(http::response_bytes(
+                e.http_status(),
+                &http::Payload::Json(e.to_json()),
+                false,
+            ))
         };
         let mut loops = Vec::with_capacity(n_loops);
         let mut shared_list = Vec::with_capacity(n_loops);
@@ -554,9 +589,9 @@ impl NetServer {
                 registry: Arc::clone(&registry),
                 dispatch: Arc::clone(&dispatch),
                 stop: Arc::clone(&stop),
-                live: Arc::clone(&live),
+                net: Arc::clone(&net),
                 opts,
-                overload: overload.clone(),
+                overload: Arc::clone(&overload),
             };
             let handle = std::thread::Builder::new()
                 .name(format!("adapt-net-{i}"))

@@ -33,8 +33,10 @@ use anyhow::Result;
 
 use super::api::ServiceError;
 use super::{AdaptService, InferHandle, InferRequest, InferResponse};
-use crate::coordinator::engine::EmulatorSpec;
+use crate::coordinator::engine::{EmulatorSpec, LatencyHist, LAT_BUCKETS};
 use crate::graph::{retransform, ExecutionPlan, Policy};
+use crate::obs::prom::PromWriter;
+use crate::obs::NetStats;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------------------
@@ -633,6 +635,27 @@ impl ModelHandle {
         Ok(())
     }
 
+    /// The running canary's (version, fraction); `None` when no canary
+    /// experiment is live (the `/metrics` gauge source).
+    pub fn canary_fraction(&self) -> Option<(u64, f64)> {
+        self.rollout
+            .lock()
+            .expect("rollout state poisoned")
+            .canary
+            .as_ref()
+            .map(|c| (c.version, c.fraction))
+    }
+
+    /// The running shadow experiment's candidate version, if any.
+    pub fn shadow_version(&self) -> Option<u64> {
+        self.rollout
+            .lock()
+            .expect("rollout state poisoned")
+            .shadow
+            .as_ref()
+            .map(|s| s.version)
+    }
+
     /// (requests routed to the canary, requests seen) since the current
     /// canary experiment started; `(0, 0)` when none is running.
     pub fn canary_counters(&self) -> (u64, u64) {
@@ -874,6 +897,10 @@ pub struct ModelRegistry {
     /// Names in registration order (BTreeMap sorts; listings shouldn't).
     order: Vec<String>,
     default: String,
+    /// Process-wide net-layer lifecycle counters, shared with every
+    /// event loop ([`crate::service::net::NetServer`]) and rendered
+    /// under `GET /metrics`.
+    net: Arc<NetStats>,
 }
 
 impl ModelRegistry {
@@ -896,7 +923,14 @@ impl ModelRegistry {
             models,
             order,
             default,
+            net: Arc::new(NetStats::new()),
         })
+    }
+
+    /// The shared net-layer counters (event loops write, `/metrics`
+    /// reads).
+    pub fn net_stats(&self) -> &Arc<NetStats> {
+        &self.net
     }
 
     /// Single-model registry (what wrapping a bare [`AdaptService`] in
@@ -935,6 +969,185 @@ impl ModelRegistry {
             Json::Arr(self.models().iter().map(|h| h.summary_json()).collect()),
         );
         Json::Obj(m)
+    }
+
+    /// The `GET /metrics` body: Prometheus text exposition (0.0.4) over
+    /// every model's engine counters + latency histograms, rollout
+    /// state, and the shared net-layer counters. Every metric name is
+    /// `adapt_`-prefixed snake_case (CI lints the scrape).
+    pub fn metrics_text(&self) -> String {
+        struct Snap {
+            name: String,
+            stats: super::ServiceStats,
+            canary_fraction: f64,
+            shadow_rate: f64,
+            traces_retained: usize,
+        }
+        let snaps: Vec<Snap> = self
+            .models()
+            .iter()
+            .map(|h| {
+                let shadow_rate = h
+                    .shadow_version()
+                    .and_then(|v| h.shadow_report(v))
+                    .map(|r| r.disagreement_rate())
+                    .unwrap_or(0.0);
+                Snap {
+                    name: h.name().to_string(),
+                    stats: h.service().stats(),
+                    canary_fraction: h.canary_fraction().map(|(_, f)| f).unwrap_or(0.0),
+                    shadow_rate,
+                    traces_retained: h.service().engine().tracer().retained(),
+                }
+            })
+            .collect();
+
+        let mut w = PromWriter::new();
+        let counters: [(&str, &str, fn(&Snap) -> f64); 3] = [
+            (
+                "adapt_requests_total",
+                "Requests admitted by the engine pool.",
+                |s| s.stats.pool.total.requests as f64,
+            ),
+            (
+                "adapt_batches_total",
+                "Batches executed by the engine pool.",
+                |s| s.stats.pool.total.batches as f64,
+            ),
+            (
+                "adapt_padded_slots_total",
+                "Batch slots filled with padding rather than real requests.",
+                |s| s.stats.pool.total.padded_slots as f64,
+            ),
+        ];
+        for (name, help, get) in counters {
+            w.header(name, help, "counter");
+            for s in &snaps {
+                w.sample(name, &[("model", &s.name)], get(s));
+            }
+        }
+        let gauges: [(&str, &str, fn(&Snap) -> f64); 8] = [
+            (
+                "adapt_padding_ratio",
+                "Fraction of executed batch slots that were padding.",
+                |s| {
+                    let real = s.stats.pool.total.requests as f64;
+                    let padded = s.stats.pool.total.padded_slots as f64;
+                    padded / (real + padded).max(1.0)
+                },
+            ),
+            ("adapt_queue_depth", "Requests waiting in the engine queue.", |s| {
+                s.stats.queue_len as f64
+            }),
+            ("adapt_workers", "Configured engine pool workers.", |s| {
+                s.stats.workers as f64
+            }),
+            (
+                "adapt_active_version",
+                "Plan version untagged requests route to.",
+                |s| s.stats.active_version as f64,
+            ),
+            (
+                "adapt_generation",
+                "Plan generation (install counter of the active version).",
+                |s| s.stats.generation as f64,
+            ),
+            (
+                "adapt_canary_fraction",
+                "Fraction of requests routed to a canary candidate (0 = none).",
+                |s| s.canary_fraction,
+            ),
+            (
+                "adapt_shadow_disagreement_rate",
+                "Shadow-mirror disagreement rate for the running candidate (0 = none).",
+                |s| s.shadow_rate,
+            ),
+            (
+                "adapt_traces_retained",
+                "Request traces currently retained in the ring.",
+                |s| s.traces_retained as f64,
+            ),
+        ];
+        for (name, help, get) in gauges {
+            w.header(name, help, "gauge");
+            for s in &snaps {
+                w.sample(name, &[("model", &s.name)], get(s));
+            }
+        }
+
+        let uppers: Vec<u64> = (0..LAT_BUCKETS).map(LatencyHist::upper_edge_us).collect();
+        w.header(
+            "adapt_queue_wait_us",
+            "Per-request queue wait, microseconds.",
+            "histogram",
+        );
+        for s in &snaps {
+            w.histogram(
+                "adapt_queue_wait_us",
+                &[("model", &s.name)],
+                &uppers,
+                &s.stats.pool.total.queue_hist.buckets,
+                s.stats.pool.total.queue_wait.as_micros() as f64,
+            );
+        }
+        w.header(
+            "adapt_compute_us",
+            "Per-request share of batch compute time, microseconds.",
+            "histogram",
+        );
+        for s in &snaps {
+            w.histogram(
+                "adapt_compute_us",
+                &[("model", &s.name)],
+                &uppers,
+                &s.stats.pool.total.compute_hist.buckets,
+                s.stats.pool.total.busy.as_micros() as f64,
+            );
+        }
+
+        let net: [(&str, &str, &str, f64); 6] = [
+            (
+                "adapt_net_accepted_total",
+                "Connections accepted and registered on an event loop.",
+                "counter",
+                self.net.accepted.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "adapt_net_refused_total",
+                "Connections refused with 503 at the connection cap.",
+                "counter",
+                self.net.refused.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "adapt_net_idle_closed_total",
+                "Connections reaped by the idle-timeout wheel.",
+                "counter",
+                self.net.idle_closed.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "adapt_net_pipelined_total",
+                "Requests parsed beyond pipeline depth 1.",
+                "counter",
+                self.net.pipelined.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "adapt_net_flush_resumes_total",
+                "Partial flushes resumed via write interest.",
+                "counter",
+                self.net.flush_resumes.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "adapt_net_live_conns",
+                "Currently open connections.",
+                "gauge",
+                self.net.live.load(Ordering::Relaxed) as f64,
+            ),
+        ];
+        for (name, help, kind, value) in net {
+            w.header(name, help, kind);
+            w.sample(name, &[], value);
+        }
+        w.finish()
     }
 }
 

@@ -206,7 +206,16 @@ pub fn fit(
             losses.push(loss);
             esum += loss as f64;
             if cfg.log_every > 0 && losses.len() % cfg.log_every == 0 {
-                eprintln!("[fit {}] epoch {epoch} step {bi} loss {loss:.4}", model.name);
+                crate::obs::log::info(
+                    "fit",
+                    "step",
+                    &[
+                        ("model", model.name.clone()),
+                        ("epoch", epoch.to_string()),
+                        ("step", bi.to_string()),
+                        ("loss", format!("{loss:.4}")),
+                    ],
+                );
             }
         }
         epoch_losses.push((esum / nb as f64) as f32);

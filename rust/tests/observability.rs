@@ -1,0 +1,380 @@
+//! End-to-end tests for the observability layer: trace propagation
+//! through the engine (queue → batch → execute spans, monotone and
+//! non-overlapping, version-tagged), tail-sampling semantics (off =
+//! zero traces, errors always kept), per-layer profiler coverage of the
+//! forward wall, and the wire surface (`GET /metrics` Prometheus text,
+//! `GET /v1/trace/{id}`, `GET /v2/models/{m}/traces`) — all
+//! artifact-free on the emulator backend.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adapt::coordinator::engine::{EmulatorSpec, EngineConfig};
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, ExecutionPlan, LayerMode, Model, Node, Op, ParamSpec, Policy};
+use adapt::lut::LutRegistry;
+use adapt::obs::LayerProfiler;
+use adapt::service::client::{self, http_call};
+use adapt::service::http::{HttpServer, ServeOptions};
+use adapt::service::{AdaptService, InferRequest};
+use adapt::tensor::Tensor;
+use adapt::util::json::Json;
+use adapt::util::rng::Rng;
+
+/// conv(3x3, 1->4, pad 1) -> relu -> flatten -> linear(64 -> 3), on
+/// 4x4x1 inputs (the same shape the other service tests use).
+fn synth_model() -> Model {
+    Model {
+        name: "obs_cnn".into(),
+        paper_row: "-".into(),
+        kind: "cnn".into(),
+        dataset: "none".into(),
+        input_shape: vec![4, 4, 1],
+        input_dtype: "f32".into(),
+        out_dim: 3,
+        loss: "ce".into(),
+        metric: "top1".into(),
+        table2: false,
+        n_scales: 2,
+        params: vec![
+            ParamSpec { name: "w1".into(), shape: vec![3, 3, 1, 4] },
+            ParamSpec { name: "b1".into(), shape: vec![4] },
+            ParamSpec { name: "w2".into(), shape: vec![64, 3] },
+            ParamSpec { name: "b2".into(), shape: vec![3] },
+        ],
+        params_count: 0,
+        macs: 0,
+        nodes: vec![
+            Node { id: 0, op: Op::Input, inputs: vec![], params: vec![] },
+            Node {
+                id: 1,
+                op: Op::Conv2d {
+                    kh: 3,
+                    kw: 3,
+                    cin: 1,
+                    cout: 4,
+                    stride: 1,
+                    pad: 1,
+                    groups: 1,
+                    scale_idx: 0,
+                    name: "c1".into(),
+                },
+                inputs: vec![0],
+                params: vec![0, 1],
+            },
+            Node { id: 2, op: Op::Relu, inputs: vec![1], params: vec![] },
+            Node { id: 3, op: Op::Flatten, inputs: vec![2], params: vec![] },
+            Node {
+                id: 4,
+                op: Op::Linear { din: 64, dout: 3, scale_idx: 1, name: "fc".into() },
+                inputs: vec![3],
+                params: vec![2, 3],
+            },
+        ],
+        weights_file: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn synth_params(model: &Model, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.5).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect()
+}
+
+fn plan_a(model: &Model) -> ExecutionPlan {
+    retransform(model, &Policy::all(LayerMode::lut("mul8s_1l2h_like")))
+}
+
+fn make_spec(batch: usize) -> EmulatorSpec {
+    let model = synth_model();
+    let params = synth_params(&model, 42);
+    let plan = plan_a(&model);
+    EmulatorSpec {
+        model,
+        params,
+        plan,
+        act_scales: vec![1.5 / 127.0, 4.0 / 127.0],
+        luts: LutRegistry::in_memory(),
+        batch,
+        gemm_threads: 1,
+    }
+}
+
+fn start_service(workers: usize) -> AdaptService {
+    let mut cfg = EngineConfig::emulator(make_spec(4));
+    cfg.workers = workers;
+    cfg.queue_depth = 64;
+    cfg.max_wait = Duration::from_millis(1);
+    AdaptService::start(cfg).unwrap()
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    let mut rng = Rng::new(i as u64 + 7);
+    (0..16).map(|_| rng.next_gauss()).collect()
+}
+
+fn span<'j>(trace: &'j Json, name: &str) -> &'j Json {
+    trace
+        .get("spans")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .find(|s| s.get("name").unwrap().str().unwrap() == name)
+        .unwrap_or_else(|| panic!("trace has no {name} span: {trace}"))
+}
+
+#[test]
+fn trace_propagates_submit_to_execute() {
+    let service = start_service(1);
+    service.engine().tracer().set_sample(1.0);
+
+    let mut req = InferRequest::new(sample(0));
+    req.id = Some(7);
+    let resp = service.infer(req).unwrap();
+    assert_eq!(resp.id, 7);
+
+    // finish() runs before the response is delivered, so the trace is
+    // retrievable as soon as infer() returns.
+    let trace = service.engine().tracer().get(7).expect("trace retained");
+    assert_eq!(trace.get("outcome").unwrap().str().unwrap(), "ok");
+
+    let (queue, batch, execute) =
+        (span(&trace, "queue"), span(&trace, "batch"), span(&trace, "execute"));
+    let iv = |s: &Json| {
+        (
+            s.get("start_us").unwrap().i64().unwrap(),
+            s.get("end_us").unwrap().i64().unwrap(),
+        )
+    };
+    let (q0, q1) = iv(queue);
+    let (b0, b1) = iv(batch);
+    let (e0, e1) = iv(execute);
+    // Monotone and non-overlapping, sharing boundary instants. Each
+    // offset truncates to whole microseconds independently, so adjacent
+    // boundaries may disagree by 1us — allow exactly that much.
+    assert!(q0 <= q1 && q1 <= b0 + 1 && b0 <= b1 && b1 <= e0 && e0 <= e1,
+        "spans out of order: queue [{q0},{q1}] batch [{b0},{b1}] execute [{e0},{e1}]");
+    assert!(trace.get("total_us").unwrap().i64().unwrap() + 1 >= e1);
+
+    // The execute span carries the identity of the run that answered.
+    assert_eq!(
+        execute.get("version").unwrap().i64().unwrap() as u64,
+        resp.version
+    );
+    assert_eq!(
+        execute.get("generation").unwrap().i64().unwrap() as u64,
+        resp.generation
+    );
+    assert_eq!(
+        execute.get("worker").unwrap().i64().unwrap() as usize,
+        resp.worker
+    );
+    assert!(batch.get("batch").unwrap().i64().unwrap() >= 1);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn sampling_off_records_no_traces() {
+    let service = start_service(1);
+    service.engine().tracer().set_sample(0.0);
+    for i in 0..8 {
+        let mut req = InferRequest::new(sample(i));
+        req.id = Some(i as u64);
+        service.infer(req).unwrap();
+    }
+    assert_eq!(service.engine().tracer().retained(), 0);
+    assert!(service.engine().tracer().get(0).is_none());
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn error_traces_kept_at_tiny_sample_rate() {
+    let service = start_service(1);
+    // Rate so small no success survives the tail decision — but errors
+    // must be retained regardless.
+    service.engine().tracer().set_sample(1.0e-9);
+    let mut req = InferRequest::new(vec![0.0; 5]); // wrong length
+    req.id = Some(99);
+    service.infer(req).unwrap_err();
+    let trace = service.engine().tracer().get(99).expect("error trace kept");
+    assert_eq!(
+        trace.get("outcome").unwrap().str().unwrap(),
+        "wrong_input_length"
+    );
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn profiler_layer_sum_covers_forward_wall() {
+    let model = synth_model();
+    let params = synth_params(&model, 42);
+    let plan = plan_a(&model);
+    let luts = LutRegistry::in_memory();
+    let mut exec = Executor::new(
+        &model,
+        params,
+        plan,
+        vec![1.5 / 127.0, 4.0 / 127.0],
+        &luts,
+        Style::Optimized { threads: 1 },
+    )
+    .unwrap();
+    let profiler = Arc::new(LayerProfiler::new(true));
+    exec.set_profiler(Some(Arc::clone(&profiler)));
+
+    // Big enough batch that kernel work dwarfs the (untimed) per-node
+    // bookkeeping between layers.
+    let batch = 64;
+    let x = Tensor::from_vec(
+        &[batch, 4, 4, 1],
+        (0..batch * 16).map(|i| (i as f32 * 0.37).sin()).collect(),
+    )
+    .unwrap();
+    // Warm up once (arena growth, LUT faulting), then measure.
+    exec.forward(Value::F(x.clone())).unwrap();
+    profiler.clear();
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        exec.forward(Value::F(x.clone())).unwrap();
+    }
+    let wall = t0.elapsed().as_nanos() as f64;
+    let layer_sum = profiler.total_ns() as f64;
+
+    // The per-layer sum excludes only per-forward bookkeeping (input
+    // staging, output extraction), so it must land close below the
+    // measured wall. Generous lower bound for noisy CI machines; the
+    // `adapt profile` CLI reports the exact coverage.
+    assert!(layer_sum <= wall * 1.05, "layer sum {layer_sum} > wall {wall}");
+    assert!(
+        layer_sum >= wall * 0.5,
+        "layer sum {layer_sum} covers under half of wall {wall}"
+    );
+
+    // The table carries kernel identity: the GEMM nodes report MACs and
+    // a resolved product backend.
+    let table = profiler.to_json();
+    let layers = table.get("layers").unwrap().arr().unwrap().clone();
+    let gemms: Vec<&Json> = layers
+        .iter()
+        .filter(|l| {
+            let op = l.get("op").unwrap().str().unwrap().to_string();
+            op == "conv2d" || op == "linear"
+        })
+        .collect();
+    assert_eq!(gemms.len(), 2);
+    for g in gemms {
+        assert!(g.get("macs").unwrap().i64().unwrap() > 0);
+        assert_eq!(g.get("bits").unwrap().i64().unwrap(), 8);
+        assert!(g.get("count").unwrap().i64().unwrap() >= 20);
+        let backend = g.get("backend").unwrap().str().unwrap().to_string();
+        assert!(
+            backend == "lut" || backend == "closed-form",
+            "unexpected backend {backend}"
+        );
+    }
+}
+
+#[test]
+fn disabled_profiler_records_nothing() {
+    let model = synth_model();
+    let params = synth_params(&model, 42);
+    let plan = plan_a(&model);
+    let luts = LutRegistry::in_memory();
+    let mut exec = Executor::new(
+        &model,
+        params,
+        plan,
+        vec![1.5 / 127.0, 4.0 / 127.0],
+        &luts,
+        Style::Naive,
+    )
+    .unwrap();
+    let profiler = Arc::new(LayerProfiler::new(false));
+    exec.set_profiler(Some(Arc::clone(&profiler)));
+    let x = Tensor::from_vec(&[1, 4, 4, 1], vec![0.5; 16]).unwrap();
+    exec.forward(Value::F(x)).unwrap();
+    assert!(profiler.is_empty());
+}
+
+#[test]
+fn metrics_and_trace_routes_over_the_wire() {
+    let service = Arc::new(start_service(1));
+    service.engine().tracer().set_sample(1.0);
+    let server =
+        HttpServer::start_with(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default())
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    // Unsampled id: typed 404 (tracing is on, but nothing ran yet).
+    let (status, body) = http_call(&addr, "GET", "/v1/trace/5", None).unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(
+        Json::parse(&body).unwrap().get("error").unwrap().str().unwrap(),
+        "not_found"
+    );
+    // Malformed id: 400, not a panic.
+    let (status, _) = http_call(&addr, "GET", "/v1/trace/xyz", None).unwrap();
+    assert_eq!(status, 400);
+
+    // Drive one inference through the wire, then fetch its trace.
+    let mut req = InferRequest::new(sample(1));
+    req.id = Some(5);
+    let (status, _) =
+        http_call(&addr, "POST", "/v1/infer", Some(&req.to_json().to_string())).unwrap();
+    assert_eq!(status, 200);
+    let (status, body) = http_call(&addr, "GET", "/v1/trace/5", None).unwrap();
+    assert_eq!(status, 200);
+    let trace = Json::parse(&body).unwrap();
+    assert_eq!(trace.get("id").unwrap().i64().unwrap(), 5);
+    for name in ["queue", "batch", "execute"] {
+        span(&trace, name);
+    }
+
+    // The model's recent-traces listing carries the same trace.
+    let (status, body) =
+        http_call(&addr, "GET", "/v2/models/obs_cnn/traces", None).unwrap();
+    assert_eq!(status, 200);
+    let listed = Json::parse(&body).unwrap();
+    assert!(listed
+        .arr()
+        .unwrap()
+        .iter()
+        .any(|t| t.get("id").unwrap().i64().unwrap() == 5));
+
+    // /metrics: Prometheus text with the engine counters, and counters
+    // never decrease between scrapes.
+    let before = client::scrape_metrics(&addr).unwrap();
+    assert!(before.contains_key("adapt_net_accepted_total"));
+    let served: f64 = before
+        .iter()
+        .filter(|(k, _)| k.starts_with("adapt_requests_total"))
+        .map(|(_, v)| *v)
+        .sum();
+    assert!(served >= 1.0, "requests counter missing the driven request");
+    let mut req = InferRequest::new(sample(2));
+    req.id = Some(6);
+    let (status, _) =
+        http_call(&addr, "POST", "/v1/infer", Some(&req.to_json().to_string())).unwrap();
+    assert_eq!(status, 200);
+    let after = client::scrape_metrics(&addr).unwrap();
+    for (k, v) in &before {
+        if k.ends_with("_total") || k.contains("_bucket") || k.ends_with("_count") {
+            let now = after.get(k).copied().unwrap_or(0.0);
+            assert!(now >= *v, "counter {k} decreased: {v} -> {now}");
+        }
+    }
+    // Wrong method on /metrics: 405, JSON error body.
+    let (status, _) = http_call(&addr, "POST", "/metrics", Some("{}")).unwrap();
+    assert_eq!(status, 405);
+
+    server.stop();
+}
