@@ -250,7 +250,7 @@ fn parallel_sweep_section(fast: bool) {
         seq_accs = experiments::sweep_pairs(&ctx, &reference, &layers, &acus, None).unwrap();
     });
     s_seq.print();
-    let (seq_plan, _) = experiments::greedy_mixed(
+    let (seq_plan, _, _) = experiments::greedy_mixed(
         &ctx,
         &reference,
         "exact8",
@@ -276,7 +276,7 @@ fn parallel_sweep_section(fast: bool) {
         });
         s.print();
         assert_eq!(par_accs, seq_accs, "parallel sweep accuracies diverged from sequential");
-        let (par_plan, _) = experiments::greedy_mixed(
+        let (par_plan, _, _) = experiments::greedy_mixed(
             &ctx,
             &reference,
             "exact8",

@@ -1,0 +1,267 @@
+//! Plan-search bench: greedy first-fit vs MCTS at an equal evaluation
+//! budget on the synthetic bench CNN, artifact-free. Measures plan
+//! quality (accuracy + MAC-weighted power savings) and wall time for
+//! both searchers, re-runs MCTS on a 4-worker pool to assert the
+//! determinism contract (byte-identical plan JSON), and emits
+//! `artifacts/results/BENCH_plan_search.json`.
+//!
+//! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench plan_search`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use adapt::coordinator::experiments::{self, EvalBatch, SweepCtx};
+use adapt::emulator::Value;
+use adapt::graph::{retransform, LayerMode, Model, Node, Op, ParamSpec, Policy};
+use adapt::lut::LutRegistry;
+use adapt::search::mcts::{self, MctsConfig, SearchSpace};
+use adapt::search::{layer_macs, plan_cost_macs};
+use adapt::tensor::Tensor;
+use adapt::util::json::Json;
+use adapt::util::rng::Rng;
+use adapt::util::threadpool::ThreadPool;
+
+/// Same 4-quantizable-layer CNN as `multiplier_ablation.rs`:
+/// conv(3->16) -> relu -> conv(16->32, s2) -> relu -> conv(32->32) ->
+/// relu -> gap -> linear(32->10) on 16x16x3 inputs.
+fn bench_model() -> Model {
+    let conv = |id, cin, cout, stride, scale_idx, name: &str, input, p0| Node {
+        id,
+        op: Op::Conv2d {
+            kh: 3,
+            kw: 3,
+            cin,
+            cout,
+            stride,
+            pad: 1,
+            groups: 1,
+            scale_idx,
+            name: name.into(),
+        },
+        inputs: vec![input],
+        params: vec![p0, p0 + 1],
+    };
+    let p = |name: &str, shape: &[usize]| ParamSpec {
+        name: name.into(),
+        shape: shape.to_vec(),
+    };
+    Model {
+        name: "bench_cnn".into(),
+        paper_row: "-".into(),
+        kind: "cnn".into(),
+        dataset: "none".into(),
+        input_shape: vec![16, 16, 3],
+        input_dtype: "f32".into(),
+        out_dim: 10,
+        loss: "ce".into(),
+        metric: "top1".into(),
+        table2: false,
+        n_scales: 4,
+        params: vec![
+            p("w1", &[3, 3, 3, 16]),
+            p("b1", &[16]),
+            p("w2", &[3, 3, 16, 32]),
+            p("b2", &[32]),
+            p("w3", &[3, 3, 32, 32]),
+            p("b3", &[32]),
+            p("w4", &[32, 10]),
+            p("b4", &[10]),
+        ],
+        params_count: 0,
+        macs: 0,
+        nodes: vec![
+            Node { id: 0, op: Op::Input, inputs: vec![], params: vec![] },
+            conv(1, 3, 16, 1, 0, "stem", 0, 0),
+            Node { id: 2, op: Op::Relu, inputs: vec![1], params: vec![] },
+            conv(3, 16, 32, 2, 1, "mid1", 2, 2),
+            Node { id: 4, op: Op::Relu, inputs: vec![3], params: vec![] },
+            conv(5, 32, 32, 1, 2, "mid2", 4, 4),
+            Node { id: 6, op: Op::Relu, inputs: vec![5], params: vec![] },
+            Node { id: 7, op: Op::Gap, inputs: vec![6], params: vec![] },
+            Node {
+                id: 8,
+                op: Op::Linear { din: 32, dout: 10, scale_idx: 3, name: "head".into() },
+                inputs: vec![7],
+                params: vec![6, 7],
+            },
+        ],
+        weights_file: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let model = bench_model();
+    let mut rng = Rng::new(0x9C75);
+    let params: Vec<Tensor> = model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.3).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect();
+    let bs = if fast { 4 } else { 16 };
+    let nb = if fast { 2 } else { 4 };
+    let batches: Vec<EvalBatch> = (0..nb)
+        .map(|bi| {
+            let x: Vec<f32> = (0..bs * 16 * 16 * 3).map(|_| rng.next_gauss()).collect();
+            EvalBatch {
+                input: Value::F(Tensor::from_vec(&[bs, 16, 16, 3], x).unwrap()),
+                labels: (0..bs).map(|i| ((bi + i) % 10) as i32).collect(),
+                target: vec![],
+            }
+        })
+        .collect();
+    let ctx = Arc::new(SweepCtx {
+        model,
+        params,
+        scales: vec![1.5 / 127.0, 3.0 / 127.0, 3.0 / 127.0, 3.0 / 127.0],
+        luts: LutRegistry::in_memory(),
+        batches,
+        bs,
+        gemm_threads: 1,
+    });
+    let layers = ctx.layers();
+    let acus: Vec<String> = ["mul8s_1l2h_like", "drum8_6", "trunc_out8_4", "mitchell8"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let reference = retransform(&ctx.model, &Policy::all(LayerMode::lut("exact8")));
+    let base_acc = ctx.eval_plan(reference.clone()).unwrap();
+    let budget = 0.05;
+    let macs = layer_macs(&ctx.model);
+    let ref_cost = plan_cost_macs(&macs, &reference);
+    let savings_of = |plan: &adapt::graph::ExecutionPlan| {
+        ((ref_cost - plan_cost_macs(&macs, plan)) / ref_cost.max(1e-12)).clamp(0.0, 1.0)
+    };
+
+    println!(
+        "Plan search: {} layers x {} ACUs, batch {bs} x {nb} eval batches, \
+         accuracy budget {budget}",
+        layers.len(),
+        acus.len()
+    );
+
+    // Greedy pipeline: sweep prior + first-fit descent (both timed — the
+    // sweep is part of greedy's cost, and MCTS reuses the same prior).
+    let t0 = Instant::now();
+    let pair = experiments::sweep_pairs(&ctx, &reference, &layers, &acus, None).unwrap();
+    let sweep_wall = t0.elapsed().as_secs_f64();
+    let worst = experiments::worst_drops(base_acc, &pair, layers.len(), acus.len());
+    let t0 = Instant::now();
+    let (gplan, gacc, gevals) = experiments::greedy_mixed(
+        &ctx, &reference, "exact8", base_acc, &layers, &worst, &acus, budget,
+    )
+    .unwrap();
+    let greedy_wall = t0.elapsed().as_secs_f64();
+    let gsavings = savings_of(&gplan);
+    println!(
+        "  greedy: accuracy {gacc:.4} (base {base_acc:.4}), savings {gsavings:.4}, \
+         {gevals} evals, {greedy_wall:.3}s (+{sweep_wall:.3}s sweep)"
+    );
+
+    // MCTS at the same total budget (sweep pairs + greedy's descent;
+    // greedy's plan is the incumbent and is charged 1 evaluation).
+    let eval_budget = (pair.len() + gevals).max(16);
+    let space = || {
+        SearchSpace::build(
+            &ctx.model,
+            reference.clone(),
+            "exact8",
+            base_acc,
+            budget,
+            &layers,
+            &pair,
+            &acus,
+        )
+        .unwrap()
+    };
+    let greward = space().reward(gacc, &gplan);
+    let cfg = MctsConfig { seed: 0x5EED, evals: eval_budget, ..MctsConfig::default() };
+    let t0 = Instant::now();
+    let out = mcts::search(&ctx, space(), &cfg, Some((&gplan, gacc)), None, None).unwrap();
+    let mcts_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  mcts:   accuracy {:.4}, savings {:.4}, {} evals / {} playouts \
+         ({} cache hits), {mcts_wall:.3}s",
+        out.accuracy, out.savings, out.evals, out.playouts, out.cache_hits
+    );
+    let mcts_not_worse = out.reward >= greward;
+    assert!(
+        mcts_not_worse,
+        "MCTS reward {} fell below greedy's {greward} at equal budget",
+        out.reward
+    );
+    assert!(out.evals <= eval_budget, "budget overrun: {} > {eval_budget}", out.evals);
+
+    // Determinism: the same search on a 4-worker pool must emit
+    // byte-identical plan JSON and identical statistics.
+    let seq_json = out.plan.to_json(&ctx.model);
+    let pool = ThreadPool::new(4);
+    let t0 = Instant::now();
+    let par = mcts::search(&ctx, space(), &cfg, Some((&gplan, gacc)), Some(&pool), None).unwrap();
+    let pool_wall = t0.elapsed().as_secs_f64();
+    let plan_json_identical = par.plan.to_json(&ctx.model) == seq_json
+        && par.accuracy == out.accuracy
+        && par.evals == out.evals
+        && par.playouts == out.playouts;
+    assert!(plan_json_identical, "4-worker MCTS diverged from sequential");
+    println!(
+        "  mcts @4 workers: {pool_wall:.3}s ({:.2}x vs sequential), plan byte-identical: \
+         {plan_json_identical}",
+        mcts_wall / pool_wall.max(1e-12)
+    );
+
+    let obj = |pairs: Vec<(&str, Json)>| {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("layers".to_string(), Json::Num(layers.len() as f64));
+    doc.insert(
+        "acus".to_string(),
+        Json::Arr(acus.iter().cloned().map(Json::Str).collect()),
+    );
+    doc.insert("batch".to_string(), Json::Num(bs as f64));
+    doc.insert("eval_batches".to_string(), Json::Num(nb as f64));
+    doc.insert("base_accuracy".to_string(), Json::Num(base_acc));
+    doc.insert("accuracy_budget".to_string(), Json::Num(budget));
+    doc.insert("eval_budget".to_string(), Json::Num(eval_budget as f64));
+    doc.insert("sweep_wall_s".to_string(), Json::Num(sweep_wall));
+    doc.insert(
+        "greedy".to_string(),
+        obj(vec![
+            ("accuracy", Json::Num(gacc)),
+            ("savings", Json::Num(gsavings)),
+            ("evals", Json::Num(gevals as f64)),
+            ("wall_s", Json::Num(greedy_wall)),
+        ]),
+    );
+    doc.insert(
+        "mcts".to_string(),
+        obj(vec![
+            ("accuracy", Json::Num(out.accuracy)),
+            ("savings", Json::Num(out.savings)),
+            ("evals", Json::Num(out.evals as f64)),
+            ("playouts", Json::Num(out.playouts as f64)),
+            ("cache_hits", Json::Num(out.cache_hits as f64)),
+            ("feasible", Json::Bool(out.feasible)),
+            ("wall_s", Json::Num(mcts_wall)),
+            ("wall_s_4_workers", Json::Num(pool_wall)),
+        ]),
+    );
+    doc.insert("mcts_not_worse".to_string(), Json::Bool(mcts_not_worse));
+    doc.insert(
+        "plan_json_identical".to_string(),
+        Json::Bool(plan_json_identical),
+    );
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_plan_search.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("  written {}", path.display());
+        }
+    }
+}

@@ -34,9 +34,11 @@ use crate::lut::LutRegistry;
 use crate::metrics;
 use crate::quant::calib::CalibratorKind;
 use crate::runtime::{weights, Runtime};
+use crate::search::{self, acu_power, mcts, SearchMethod};
 use crate::tensor::Tensor;
 use crate::trainer;
 use crate::util::fmt;
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
 /// Per-model training hyper-parameters for the synthetic tasks.
@@ -559,8 +561,19 @@ pub struct SensitivityConfig {
     pub retrain_epochs: usize,
     /// Learning rate for the post-search retraining.
     pub retrain_lr: f32,
-    /// Shuffle seed for the post-search retraining.
+    /// Shuffle seed for the post-search retraining and the MCTS playout
+    /// streams.
     pub seed: u64,
+    /// Whole-plan search strategy (greedy, or MCTS warm-started by
+    /// greedy's plan).
+    pub search: SearchMethod,
+    /// Fresh plan-evaluation budget for MCTS (0 = auto: the sweep size +
+    /// greedy's trial count, at least 16).
+    pub search_evals: usize,
+    /// QAT-in-the-loop leaf re-scoring: retrain the top-N searched plans
+    /// with a short `trainer::fit` run before picking the winner (MCTS
+    /// only; 0 = off).
+    pub retrain_leaves: usize,
     pub verbose: bool,
 }
 
@@ -582,6 +595,9 @@ impl Default for SensitivityConfig {
             retrain_epochs: 0,
             retrain_lr: 0.002,
             seed: 0x5EED,
+            search: SearchMethod::Greedy,
+            search_evals: 0,
+            retrain_leaves: 0,
             verbose: false,
         }
     }
@@ -653,10 +669,22 @@ impl SweepCtx {
     /// context, never on thread count or which worker runs it (row
     /// chunks are disjoint and each row is computed sequentially).
     pub fn eval_plan_threads(&self, plan: ExecutionPlan, threads: usize) -> Result<f64> {
+        self.eval_plan_params(plan, self.params.clone(), threads)
+    }
+
+    /// [`eval_plan_threads`](Self::eval_plan_threads) with substitute
+    /// weights — the MCTS QAT-in-the-loop mode scores retrained leaves
+    /// through the same path every other evaluation takes.
+    pub fn eval_plan_params(
+        &self,
+        plan: ExecutionPlan,
+        params: Vec<Tensor>,
+        threads: usize,
+    ) -> Result<f64> {
         let arena = SWEEP_ARENA.with(|slot| slot.borrow_mut().take()).unwrap_or_default();
         let exec = Executor::with_arena(
             &self.model,
-            self.params.clone(),
+            params,
             plan,
             self.scales.clone(),
             &self.luts,
@@ -689,10 +717,6 @@ impl SweepCtx {
     }
 }
 
-/// Power proxy for an ACU name (1.0 when unknown).
-fn acu_power(acu: &str) -> f64 {
-    crate::mult::get(acu).map(|m| m.power).unwrap_or(1.0)
-}
 
 /// Per-layer worst accuracy drop from [`sweep_pairs`] output (layer-major,
 /// ACU-minor — the one place that indexing contract is interpreted).
@@ -755,6 +779,8 @@ pub fn sweep_pairs(
 /// cheapest candidate that keeps the cumulative plan within `budget` of
 /// `base_acc`. Inherently sequential (every step depends on the plan so
 /// far), so it is byte-identical after a sequential or a parallel sweep.
+/// The third return is the number of plan evaluations spent — the budget
+/// MCTS is held to for equal-cost comparisons.
 #[allow(clippy::too_many_arguments)]
 pub fn greedy_mixed(
     ctx: &SweepCtx,
@@ -765,13 +791,14 @@ pub fn greedy_mixed(
     worst_drop: &[f64],
     acus: &[String],
     budget: f64,
-) -> Result<(ExecutionPlan, f64)> {
+) -> Result<(ExecutionPlan, f64, usize)> {
     let mut order: Vec<usize> = (0..layers.len()).collect();
     order.sort_by(|&a, &b| worst_drop[a].total_cmp(&worst_drop[b]));
     let mut candidates = acus.to_vec();
     candidates.sort_by(|a, b| acu_power(a).total_cmp(&acu_power(b)));
     let mut plan = reference.clone();
     let mut mixed_acc = base_acc;
+    let mut trials = 0usize;
     for &li in &order {
         let (id, _) = &layers[li];
         for acu in &candidates {
@@ -781,6 +808,7 @@ pub fn greedy_mixed(
             let mut trial = plan.clone();
             trial.modes.insert(*id, LayerMode::lut(acu.as_str()));
             let acc = ctx.eval_plan(trial.clone())?;
+            trials += 1;
             if base_acc - acc <= budget {
                 plan = trial;
                 mixed_acc = acc;
@@ -788,28 +816,42 @@ pub fn greedy_mixed(
             }
         }
     }
-    Ok((plan, mixed_acc))
+    Ok((plan, mixed_acc, trials))
 }
 
-/// Per-layer ACU sensitivity sweep + greedy mixed-ACU search.
+/// Everything one sensitivity/search run produced: the human report, a
+/// machine-readable summary (search method + seed + evaluation budget in
+/// the header, so the plan is reproducible from the artifact alone), and
+/// the exact plan JSON that was written to disk.
+pub struct SensitivityOutcome {
+    pub report: String,
+    pub json: Json,
+    pub plan_json: String,
+}
+
+/// Per-layer ACU sensitivity sweep + mixed-ACU plan search.
 ///
 /// 1. Evaluate the homogeneous reference plan (every layer on
 ///    `cfg.reference`).
 /// 2. For each quantizable layer × candidate ACU, evaluate the plan with
 ///    only that layer swapped; record the accuracy drop (the layer's
 ///    sensitivity to that ACU).
-/// 3. Rank layers by their worst drop, then greedily assign each layer —
-///    most tolerant first — the lowest-power candidate that keeps the
-///    *cumulative* mixed plan within `cfg.budget` of the reference.
+/// 3. Rank layers by their worst drop, then search: greedy assigns each
+///    layer — most tolerant first — the lowest-power candidate that keeps
+///    the *cumulative* mixed plan within `cfg.budget` of the reference;
+///    `--search mcts` additionally runs [`mcts::search`] warm-started by
+///    greedy's plan (so it can only improve on it) under an explicit
+///    fresh-evaluation budget.
 ///
-/// The chosen plan is saved as `artifacts/results/plan_<model>.json`, a
+/// The chosen plan is saved as `artifacts/results/plan_<model>.json` with
+/// a `provenance` field (`"greedy"` / `"mcts:<seed>/<budget>"`), a
 /// first-class artifact `adapt plan --plan-file` / the executor can reload.
 ///
 /// The sweep's (layer, ACU) pair evaluations run on a persistent
 /// [`ThreadPool`] of `cfg.sweep_workers` workers; results are re-ordered
-/// deterministically, so the report, the greedy selection and the saved
+/// deterministically, so the report, the searched plan and the saved
 /// plan JSON are byte-identical at every worker count.
-pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<String> {
+pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<SensitivityOutcome> {
     let model = rt.manifest.model(&cfg.model)?.clone();
     let ds = data::load(&model.dataset, &cfg.sizes);
     let mut st = ensure_pretrained(rt, &cfg.model, &cfg.sizes, 1.0, cfg.verbose)?;
@@ -877,7 +919,7 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
     }
 
     // --- greedy mixed search, most tolerant layers first -----------------
-    let (plan, mixed_acc) = greedy_mixed(
+    let (greedy_plan, greedy_acc, greedy_evals) = greedy_mixed(
         &ctx,
         &reference,
         &cfg.reference,
@@ -888,17 +930,64 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
         cfg.budget,
     )?;
 
-    let plan_power = |p: &ExecutionPlan| -> f64 {
-        let vals: Vec<f64> = p
-            .modes
-            .values()
-            .map(|m| match m {
-                LayerMode::ApproxLut { acu } => acu_power(acu),
-                _ => 1.0,
-            })
-            .collect();
-        vals.iter().sum::<f64>() / vals.len().max(1) as f64
+    // --- optional MCTS, warm-started by greedy's plan --------------------
+    let budget_evals = if cfg.search_evals == 0 {
+        (pair_accs.len() + greedy_evals).max(16)
+    } else {
+        cfg.search_evals
     };
+    let mut mcts_outcome = None;
+    let (plan, mixed_acc) = match cfg.search {
+        SearchMethod::Greedy => (greedy_plan.clone(), greedy_acc),
+        SearchMethod::Mcts => {
+            let space = mcts::SearchSpace::build(
+                &ctx.model,
+                reference.clone(),
+                &cfg.reference,
+                base_acc,
+                cfg.budget,
+                &layers,
+                &pair_accs,
+                &cfg.acus,
+            )?;
+            let mcfg = mcts::MctsConfig {
+                seed: cfg.seed,
+                evals: budget_evals,
+                ..mcts::MctsConfig::default()
+            };
+            let rc_store;
+            let rc = if cfg.retrain_leaves > 0 {
+                rc_store = mcts::RetrainCtx {
+                    train: &ds.train,
+                    leaves: cfg.retrain_leaves,
+                    epochs: cfg.retrain_epochs.max(1),
+                    lr: cfg.retrain_lr,
+                    seed: cfg.seed,
+                };
+                Some(&rc_store)
+            } else {
+                None
+            };
+            let out = mcts::search(
+                &ctx,
+                space,
+                &mcfg,
+                Some((&greedy_plan, greedy_acc)),
+                pool.as_ref(),
+                rc,
+            )?;
+            let picked = (out.plan.clone(), out.accuracy);
+            mcts_outcome = Some(out);
+            picked
+        }
+    };
+    let provenance = match cfg.search {
+        SearchMethod::Greedy => "greedy".to_string(),
+        SearchMethod::Mcts => format!("mcts:{}/{}", cfg.seed, budget_evals),
+    };
+
+    let macs = search::layer_macs(&ctx.model);
+    let plan_power = |p: &ExecutionPlan| -> f64 { search::plan_cost_macs(&macs, p) };
 
     // --- report + plan artifact ------------------------------------------
     let mut headers: Vec<&str> = vec!["layer"];
@@ -915,6 +1004,7 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
     let mut out = format!(
         "Layer sensitivity on {} (reference {}, {} eval batches, budget {:.1} pts, \
          {} sweep workers x {} gemm threads)\n\
+         search: {} (seed {:#x}, eval budget {})\n\
          reference accuracy: {}\n\n",
         cfg.model,
         cfg.reference,
@@ -922,23 +1012,46 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
         100.0 * cfg.budget,
         sweep_workers,
         per_job_threads,
+        cfg.search.label(),
+        cfg.seed,
+        budget_evals,
         fmt::pct(base_acc),
     );
     out.push_str(&fmt::table(&headers, &rows));
     out.push_str(&format!(
         "\nGreedy mixed-ACU plan (accuracy {}, {:+.2} pts vs reference, \
-         mean power {:.2}x -> {:.2}x):\n{}",
-        fmt::pct(mixed_acc),
-        100.0 * (mixed_acc - base_acc),
+         {} evals, MAC-weighted power {:.2}x -> {:.2}x)\n",
+        fmt::pct(greedy_acc),
+        100.0 * (greedy_acc - base_acc),
+        greedy_evals,
         plan_power(&reference),
-        plan_power(&plan),
+        plan_power(&greedy_plan),
+    ));
+    if let Some(m) = &mcts_outcome {
+        out.push_str(&format!(
+            "MCTS plan (accuracy {}, {:+.2} pts vs reference, {} evals + {} cache hits, \
+             {} playouts, {} leaves retrained, MAC-weighted power {:.2}x, savings {:.1}%)\n",
+            fmt::pct(m.accuracy),
+            100.0 * (m.accuracy - base_acc),
+            m.evals,
+            m.cache_hits,
+            m.playouts,
+            m.retrained,
+            m.cost,
+            100.0 * m.savings,
+        ));
+    }
+    out.push_str(&format!(
+        "\nSelected plan ({}):\n{}",
+        provenance,
         plan.describe(&ctx.model),
     ));
 
     let dir = rt.manifest.root.join("results");
     std::fs::create_dir_all(&dir)?;
     let plan_path = dir.join(format!("plan_{}.json", cfg.model));
-    std::fs::write(&plan_path, plan.to_json(&ctx.model))?;
+    let plan_json = plan.to_json_with(&ctx.model, Some(&provenance));
+    std::fs::write(&plan_path, &plan_json)?;
     out.push_str(&format!("\nplan saved to {}\n", plan_path.display()));
 
     // --- optional: QAT-retrain the mixed plan in the same command -------
@@ -990,7 +1103,48 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<St
     }
 
     append_results(&rt.manifest.root, "sensitivity", &out)?;
-    Ok(out)
+
+    // Machine-readable summary; the header carries everything needed to
+    // reproduce the searched plan (method + seed + evaluation budget).
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("model".to_string(), Json::Str(cfg.model.clone()));
+    doc.insert("search".to_string(), Json::Str(cfg.search.label().to_string()));
+    doc.insert("seed".to_string(), Json::Num(cfg.seed as f64));
+    doc.insert("eval_budget".to_string(), Json::Num(budget_evals as f64));
+    doc.insert("reference".to_string(), Json::Str(cfg.reference.clone()));
+    doc.insert(
+        "acus".to_string(),
+        Json::Arr(cfg.acus.iter().map(|a| Json::Str(a.clone())).collect()),
+    );
+    doc.insert("eval_batches".to_string(), Json::Num(nb as f64));
+    doc.insert("budget".to_string(), Json::Num(cfg.budget));
+    doc.insert("base_accuracy".to_string(), Json::Num(base_acc));
+    let mut g = std::collections::BTreeMap::new();
+    g.insert("accuracy".to_string(), Json::Num(greedy_acc));
+    g.insert("evals".to_string(), Json::Num(greedy_evals as f64));
+    g.insert("power".to_string(), Json::Num(plan_power(&greedy_plan)));
+    doc.insert("greedy".to_string(), Json::Obj(g));
+    if let Some(m) = &mcts_outcome {
+        let mut j = std::collections::BTreeMap::new();
+        j.insert("accuracy".to_string(), Json::Num(m.accuracy));
+        j.insert("evals".to_string(), Json::Num(m.evals as f64));
+        j.insert("cache_hits".to_string(), Json::Num(m.cache_hits as f64));
+        j.insert("playouts".to_string(), Json::Num(m.playouts as f64));
+        j.insert("retrained".to_string(), Json::Num(m.retrained as f64));
+        j.insert("power".to_string(), Json::Num(m.cost));
+        j.insert("savings".to_string(), Json::Num(m.savings));
+        j.insert("feasible".to_string(), Json::Bool(m.feasible));
+        doc.insert("mcts".to_string(), Json::Obj(j));
+    }
+    doc.insert("accuracy".to_string(), Json::Num(mixed_acc));
+    doc.insert("provenance".to_string(), Json::Str(provenance));
+    doc.insert("plan_path".to_string(), Json::Str(plan_path.display().to_string()));
+
+    Ok(SensitivityOutcome {
+        report: out,
+        json: Json::Obj(doc),
+        plan_json,
+    })
 }
 
 // ---------------------------------------------------------------------------

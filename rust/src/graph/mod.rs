@@ -431,6 +431,14 @@ impl ExecutionPlan {
     ///   {"node": 5, "name": "fc", "mode": "fp32"}]}
     /// ```
     pub fn to_json(&self, model: &Model) -> String {
+        self.to_json_with(model, None)
+    }
+
+    /// [`to_json`](Self::to_json) with an optional `provenance` string
+    /// recording which search produced the plan (e.g. `"greedy"`,
+    /// `"mcts:<seed>/<budget>"`). Readers that predate the field ignore
+    /// unknown top-level keys, so the document stays backward-compatible.
+    pub fn to_json_with(&self, model: &Model, provenance: Option<&str>) -> String {
         let mut layers = Vec::new();
         for node in &model.nodes {
             let Some(mode) = self.modes.get(&node.id) else {
@@ -460,8 +468,25 @@ impl ExecutionPlan {
         let mut doc = BTreeMap::new();
         doc.insert("model".to_string(), Json::Str(model.name.clone()));
         doc.insert("version".to_string(), Json::Num(1.0));
+        if let Some(p) = provenance {
+            if !p.trim().is_empty() {
+                doc.insert("provenance".to_string(), Json::Str(p.to_string()));
+            }
+        }
         doc.insert("layers".to_string(), Json::Arr(layers));
         Json::Obj(doc).to_string()
+    }
+
+    /// Provenance string of a plan JSON document, if it carries one
+    /// (trimmed, capped at 80 chars so stored `PlanStore` source tags
+    /// stay bounded).
+    pub fn provenance_of(text: &str) -> Option<String> {
+        let j = Json::parse(text).ok()?;
+        let p = j.opt("provenance")?.str().ok()?.trim().to_string();
+        if p.is_empty() {
+            return None;
+        }
+        Some(p.chars().take(80).collect())
     }
 
     /// Parse a plan JSON document against `model`, validating that every

@@ -65,6 +65,12 @@
 //!   ([`emulator::Executor::forward_taped`]), SGD-with-momentum, and the
 //!   plan-aware [`trainer::fit`] loop — artifact-free, heterogeneous
 //!   mixed-ACU plans included (`adapt retrain`).
+//! * [`search`] — whole-plan search over the sensitivity sweep's scoring
+//!   core: the MAC-weighted plan cost model ([`search::plan_cost`]) and
+//!   the [`search::mcts`] Monte Carlo Tree Search planner (TransAxx-style
+//!   UCT + virtual-loss parallel playouts, deterministic per seed at any
+//!   thread count, optional QAT-in-the-loop leaf re-scoring) behind
+//!   `adapt search` / `adapt sensitivity --search mcts`.
 //! * [`metrics`] — accuracy/timing metrics.
 //! * [`obs`] — serving observability: request tracing with tail-based
 //!   sampling ([`obs::TraceRecorder`]), per-layer kernel profiling
@@ -86,6 +92,7 @@ pub mod mult;
 pub mod obs;
 pub mod quant;
 pub mod runtime;
+pub mod search;
 pub mod service;
 pub mod tensor;
 pub mod trainer;

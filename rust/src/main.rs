@@ -10,11 +10,28 @@
 //! adapt table4 [--models a,b] [--eval-batches N] [--skip-baseline]
 //! adapt ablation [--model NAME]       ACU accuracy/power sweep
 //! adapt sensitivity --model NAME [--acus a,b] [--budget PTS] [--workers N]
-//!       [--retrain-epochs N]
-//!       per-layer ACU sweep + greedy mixed-precision search
+//!       [--search greedy|mcts] [--evals N] [--retrain-leaves N]
+//!       [--retrain-epochs N] [--json]
+//!       per-layer ACU sweep + mixed-precision plan search
 //!       (heterogeneous plans); the sweep runs on a persistent pool of
 //!       `--workers` threads with a byte-identical plan at any count;
-//!       --retrain-epochs QAT-retrains the found plan in the same command
+//!       --search mcts runs the UCT planner warm-started by greedy under
+//!       an --evals fresh-evaluation budget (deterministic per --seed);
+//!       --retrain-leaves N re-scores the top searched plans with a short
+//!       QAT run; --retrain-epochs QAT-retrains the found plan in the
+//!       same command; --json prints the machine-readable summary
+//!       (search method + seed + eval budget in the header) to stdout
+//! adapt search [--synthetic] [--budget N] [--seed S] [--max-drop PTS]
+//!       [--floor PCT] [--retrain-leaves N] [--out plan.json] [--json]
+//!       MCTS mixed-ACU plan discovery (TransAxx-style). --synthetic
+//!       searches the bundled tiny model artifact-free (the CI smoke):
+//!       sweep -> greedy incumbent -> MCTS under a --budget of fresh
+//!       plan evaluations, asserting the saved plan reloads bit-exactly
+//!       and meets the accuracy floor (--floor PCT absolute, or
+//!       base - --max-drop points). Without --synthetic, runs the full
+//!       artifact pipeline (`adapt sensitivity --search mcts`). Plans
+//!       carry `provenance: "mcts:<seed>/<budget>"`, which the serving
+//!       PlanStore records as the version source on upload.
 //! adapt retrain --model NAME (--plan-file F | --spec S) [--epochs N]
 //!       [--lr LR] [--seed S] [--save]
 //!       emulator-native QAT retraining of any per-layer plan —
@@ -233,12 +250,27 @@ fn run() -> Result<()> {
                 retrain_epochs: args.get_usize("retrain-epochs", defaults.retrain_epochs)?,
                 retrain_lr: args.get_f32("retrain-lr", defaults.retrain_lr)?,
                 seed: args.get_usize("seed", defaults.seed as usize)? as u64,
+                search: adapt::search::SearchMethod::parse(args.get_or("search", "greedy"))?,
+                search_evals: args.get_usize("evals", defaults.search_evals)?,
+                retrain_leaves: args.get_usize("retrain-leaves", defaults.retrain_leaves)?,
                 verbose: args.flag("verbose"),
             };
-            println!(
-                "Per-layer ACU sensitivity + greedy mixed-precision search\n"
-            );
-            println!("{}", experiments::layer_sensitivity(&mut rt, &cfg)?);
+            let json_mode = args.flag("json");
+            // With --json, stdout carries exactly one JSON document; the
+            // human report moves to stderr (same contract as `adapt client`).
+            let say = |line: &str| {
+                if json_mode {
+                    eprintln!("{line}");
+                } else {
+                    println!("{line}");
+                }
+            };
+            say("Per-layer ACU sensitivity + mixed-precision plan search\n");
+            let outcome = experiments::layer_sensitivity(&mut rt, &cfg)?;
+            say(&outcome.report);
+            if json_mode {
+                println!("{}", outcome.json.to_string());
+            }
         }
         "retrain" => {
             let epochs = args.get_usize("epochs", 2)?;
@@ -365,6 +397,7 @@ fn run() -> Result<()> {
                 println!("  scale[{i:>2}] = {s:.6}  (calib_max = {:.4})", s * 127.0);
             }
         }
+        "search" => search_cmd(&args)?,
         "serve" => serve(&args)?,
         "client" => client_cmd(&args)?,
         "profile" => profile_cmd(&args)?,
@@ -376,7 +409,12 @@ fn run() -> Result<()> {
         _ => {
             println!("adapt — AdaPT-RS coordinator. See `rust/src/main.rs` docs for subcommands.");
             println!("  specs | features | multipliers | table2 | table4 | ablation");
-            println!("  sensitivity --model M [--acus a,b] [--budget PTS] [--workers N] [--retrain-epochs N]");
+            println!("  sensitivity --model M [--acus a,b] [--budget PTS] [--workers N]");
+            println!("              [--search greedy|mcts] [--evals N] [--retrain-leaves N]");
+            println!("              [--retrain-epochs N] [--json]");
+            println!("  search [--synthetic] [--budget N] [--seed S] [--max-drop PTS] [--floor PCT]");
+            println!("         [--retrain-leaves N] [--out plan.json] [--json]");
+            println!("         (MCTS mixed-ACU plan discovery; --synthetic = artifact-free CI smoke)");
             println!("  retrain --model M (--plan-file F | --spec S) [--epochs N] [--lr LR] [--save]");
             println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke)");
             println!("  plan --model M [--spec S] | calibrate --model M");
@@ -1121,6 +1159,265 @@ fn profile_cmd(args: &Args) -> Result<()> {
         std::fs::write(out, Json::Obj(doc).to_string())
             .with_context(|| format!("writing {out}"))?;
         println!("written {out}");
+    }
+    Ok(())
+}
+
+/// `adapt search`: MCTS mixed-ACU plan discovery. `--synthetic` runs the
+/// whole pipeline artifact-free on the bundled tiny model — calibrate,
+/// sweep, greedy incumbent, MCTS under a fresh-evaluation budget — then
+/// verifies the saved plan JSON reloads bit-exactly and meets the accuracy
+/// floor (the CI smoke). Without `--synthetic` it is `adapt sensitivity
+/// --search mcts` with the eval-budget flag mapped.
+fn search_cmd(args: &Args) -> Result<()> {
+    let evals = args.get_usize("budget", 48)?;
+    let seed = args.get_usize("seed", 0x5EED)? as u64;
+    let max_drop = args.get_f64("max-drop", 2.0)? / 100.0;
+    let retrain_leaves = args.get_usize("retrain-leaves", 0)?;
+    let retrain_epochs = args.get_usize("retrain-epochs", 1)?;
+    let retrain_lr = args.get_f32("retrain-lr", 0.002)?;
+    let workers = args.get_usize("workers", adapt::util::threadpool::default_threads())?;
+    let threads = args.get_usize("threads", adapt::util::threadpool::default_threads())?;
+    let reference = args.get_or("reference", "exact8").to_string();
+    let acus: Vec<String> = {
+        let list = args.get_list("acus");
+        if list.is_empty() {
+            vec![
+                "mul8s_1l2h_like".to_string(),
+                "drum8_6".to_string(),
+                "trunc_out8_4".to_string(),
+            ]
+        } else {
+            list
+        }
+    };
+    let json_mode = args.flag("json");
+    let say = |line: String| {
+        if json_mode {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+
+    if !args.flag("synthetic") {
+        // Artifact pipeline: the sensitivity harness with MCTS selected.
+        let mut rt = Runtime::open(&artifacts_from(args))?;
+        let defaults = SensitivityConfig::default();
+        let cfg = SensitivityConfig {
+            model: args.get_or("model", "small_vgg").to_string(),
+            sizes: sizes_from(args)?,
+            eval_batches: args.get_usize("eval-batches", defaults.eval_batches)?,
+            acus,
+            reference,
+            budget: max_drop,
+            threads,
+            sweep_workers: workers,
+            retrain_epochs: args.get_usize("retrain-epochs", 0)?,
+            retrain_lr,
+            seed,
+            search: adapt::search::SearchMethod::Mcts,
+            search_evals: evals,
+            retrain_leaves,
+            verbose: args.flag("verbose"),
+        };
+        say("MCTS mixed-ACU plan search\n".to_string());
+        let outcome = experiments::layer_sensitivity(&mut rt, &cfg)?;
+        say(outcome.report.clone());
+        if let Some(out) = args.get("out") {
+            std::fs::write(out, &outcome.plan_json)
+                .with_context(|| format!("writing {out}"))?;
+            say(format!("plan written to {out}"));
+        }
+        if json_mode {
+            println!("{}", outcome.json.to_string());
+        }
+        return Ok(());
+    }
+
+    // ----- artifact-free synthetic pipeline (the CI smoke) ---------------
+    use adapt::coordinator::experiments::{greedy_mixed, sweep_pairs, worst_drops, EvalBatch, SweepCtx};
+    use adapt::search::mcts;
+
+    let t0 = std::time::Instant::now();
+    let model = adapt::trainer::synth::tiny_cnn();
+    let params = adapt::trainer::synth::tiny_params(&model, 0x5EED);
+    let ds = adapt::trainer::synth::tiny_dataset(256, 64);
+    let scales = adapt::trainer::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        32,
+        2,
+        CalibratorKind::Percentile,
+        0.999,
+        threads.max(1),
+    )?;
+    let bs = 32usize;
+    let nb = args.get_usize("eval-batches", 2)?.max(1).min(ds.eval.n_batches(bs).max(1));
+    let batches: Vec<EvalBatch> = (0..nb)
+        .map(|bi| EvalBatch::from_split(&model, &ds.eval, bi, bs))
+        .collect();
+    let ctx = std::sync::Arc::new(SweepCtx {
+        model,
+        params,
+        scales,
+        luts: LutRegistry::in_memory(),
+        batches,
+        bs,
+        gemm_threads: threads.max(1),
+    });
+    let layers = ctx.layers();
+    let ref_plan = retransform(&ctx.model, &Policy::all(LayerMode::lut(reference.as_str())));
+    let base_acc = ctx.eval_plan(ref_plan.clone())?;
+    let floor = match args.get("floor") {
+        Some(f) => f.parse::<f64>().context("--floor takes an absolute percent")? / 100.0,
+        None => base_acc - max_drop,
+    };
+    let budget = (base_acc - floor).max(0.0);
+    say(format!(
+        "search --synthetic: {} layers, {} ACUs, base accuracy {}, floor {} \
+         (budget {:.2} pts), {evals} evals, seed {seed:#x}",
+        layers.len(),
+        acus.len(),
+        fmt::pct(base_acc),
+        fmt::pct(floor),
+        100.0 * budget,
+    ));
+
+    let pool = (workers > 1).then(|| adapt::util::threadpool::ThreadPool::new(workers));
+    let pair_accs = sweep_pairs(&ctx, &ref_plan, &layers, &acus, pool.as_ref())?;
+    let worst = worst_drops(base_acc, &pair_accs, layers.len(), acus.len());
+    let (gplan, gacc, gevals) =
+        greedy_mixed(&ctx, &ref_plan, &reference, base_acc, &layers, &worst, &acus, budget)?;
+
+    let space = mcts::SearchSpace::build(
+        &ctx.model,
+        ref_plan.clone(),
+        &reference,
+        base_acc,
+        budget,
+        &layers,
+        &pair_accs,
+        &acus,
+    )?;
+    let greedy_reward = space.reward(gacc, &gplan);
+    let greedy_savings = space.savings(&gplan);
+    let mcfg = mcts::MctsConfig {
+        seed,
+        evals,
+        ..mcts::MctsConfig::default()
+    };
+    let rc_store;
+    let rc = if retrain_leaves > 0 {
+        rc_store = mcts::RetrainCtx {
+            train: &ds.train,
+            leaves: retrain_leaves,
+            epochs: retrain_epochs,
+            lr: retrain_lr,
+            seed,
+        };
+        Some(&rc_store)
+    } else {
+        None
+    };
+    let out = mcts::search(&ctx, space, &mcfg, Some((&gplan, gacc)), pool.as_ref(), rc)?;
+    let wall = t0.elapsed();
+
+    say(format!(
+        "greedy:  accuracy {} ({} evals, savings {:.1}%)",
+        fmt::pct(gacc),
+        gevals,
+        100.0 * greedy_savings,
+    ));
+    say(format!(
+        "mcts:    accuracy {} ({} evals + {} cache hits, {} playouts, savings {:.1}%, \
+         reward {:.4}{})",
+        fmt::pct(out.accuracy),
+        out.evals,
+        out.cache_hits,
+        out.playouts,
+        100.0 * out.savings,
+        out.reward,
+        if out.retrained > 0 {
+            format!(", {} leaves retrained", out.retrained)
+        } else {
+            String::new()
+        },
+    ));
+    say(format!("selected plan:\n{}", out.plan.describe(&ctx.model)));
+
+    // Hard guarantees the smoke asserts: the incumbent warm-start means
+    // MCTS can never end up below greedy, and the winner must clear the
+    // accuracy floor.
+    anyhow::ensure!(
+        out.reward >= greedy_reward,
+        "mcts reward {} fell below greedy's {}",
+        out.reward,
+        greedy_reward
+    );
+    anyhow::ensure!(
+        out.accuracy >= floor,
+        "searched plan accuracy {} is below the floor {}",
+        fmt::pct(out.accuracy),
+        fmt::pct(floor)
+    );
+    anyhow::ensure!(out.evals <= evals, "spent {} evals over the budget {evals}", out.evals);
+
+    let provenance = format!("mcts:{seed}/{evals}");
+    let plan_json = out.plan.to_json_with(&ctx.model, Some(&provenance));
+    // Round-trip check: the saved artifact must reload into the very same
+    // plan and score identically on the emulator.
+    let reloaded = ExecutionPlan::from_json(&plan_json, &ctx.model)?;
+    anyhow::ensure!(reloaded == out.plan, "plan JSON did not round-trip");
+    let re_acc = ctx.eval_plan(reloaded)?;
+    anyhow::ensure!(
+        re_acc == out.accuracy || out.retrained > 0,
+        "reloaded plan scored {} vs searched {}",
+        fmt::pct(re_acc),
+        fmt::pct(out.accuracy)
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &plan_json).with_context(|| format!("writing {path}"))?;
+        say(format!("plan written to {path} (provenance {provenance})"));
+    }
+    say(format!("search done in {}", fmt::dur(wall)));
+
+    if json_mode {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("method".to_string(), Json::Str("mcts".into()));
+        doc.insert("seed".to_string(), Json::Num(seed as f64));
+        doc.insert("eval_budget".to_string(), Json::Num(evals as f64));
+        doc.insert("base_accuracy".to_string(), Json::Num(base_acc));
+        doc.insert("floor".to_string(), Json::Num(floor));
+        doc.insert("reference".to_string(), Json::Str(reference));
+        doc.insert(
+            "acus".to_string(),
+            Json::Arr(acus.iter().map(|a| Json::Str(a.clone())).collect()),
+        );
+        doc.insert("sweep_pairs".to_string(), Json::Num(pair_accs.len() as f64));
+        let mut g = std::collections::BTreeMap::new();
+        g.insert("accuracy".to_string(), Json::Num(gacc));
+        g.insert("evals".to_string(), Json::Num(gevals as f64));
+        g.insert("savings".to_string(), Json::Num(greedy_savings));
+        doc.insert("greedy".to_string(), Json::Obj(g));
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("accuracy".to_string(), Json::Num(out.accuracy));
+        m.insert("cost".to_string(), Json::Num(out.cost));
+        m.insert("savings".to_string(), Json::Num(out.savings));
+        m.insert("reward".to_string(), Json::Num(out.reward));
+        m.insert("evals".to_string(), Json::Num(out.evals as f64));
+        m.insert("cache_hits".to_string(), Json::Num(out.cache_hits as f64));
+        m.insert("playouts".to_string(), Json::Num(out.playouts as f64));
+        m.insert("retrained".to_string(), Json::Num(out.retrained as f64));
+        m.insert("feasible".to_string(), Json::Bool(out.feasible));
+        doc.insert("mcts".to_string(), Json::Obj(m));
+        doc.insert("accuracy".to_string(), Json::Num(out.accuracy));
+        doc.insert("mcts_not_worse".to_string(), Json::Bool(out.reward >= greedy_reward));
+        doc.insert("reload_ok".to_string(), Json::Bool(true));
+        doc.insert("provenance".to_string(), Json::Str(provenance));
+        doc.insert("wall_s".to_string(), Json::Num(wall.as_secs_f64()));
+        println!("{}", Json::Obj(doc).to_string());
     }
     Ok(())
 }

@@ -1,0 +1,618 @@
+//! Monte Carlo Tree Search over mixed-ACU execution plans.
+//!
+//! Tree shape: depth `d` in the tree fixes the ACU for `SearchSpace::layers[d]`
+//! (layers ordered most-sensitive-first so the hard decisions are made near
+//! the root, where the tree accumulates the most statistics). Children at a
+//! depth are the layer's candidate modes in prior order; expansion visits
+//! them in that order before UCT takes over. Leaf rollouts fill the
+//! remaining layers uniformly at random from the playout's private RNG
+//! stream, and the completed plan is scored once on the calibration batches
+//! through `SweepCtx::eval_plan` — the same code path greedy and the
+//! benches use.
+//!
+//! Parallelism: playouts are planned sequentially in fixed-size waves with
+//! *virtual loss* (each planned-but-unscored playout temporarily counts as
+//! a zero-reward visit along its path, pushing sibling playouts in the same
+//! wave toward different subtrees), evaluated concurrently via
+//! `ThreadPool::run_ordered`, then committed in playout-index order. The
+//! wave size is a config constant — never the thread count — so the visit
+//! sequence, and therefore the result, is identical at any `ADAPT_THREADS`
+//! or worker-pool size for a fixed seed.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::experiments::SweepCtx;
+use crate::data::Split;
+use crate::graph::{ExecutionPlan, LayerMode, Model};
+use crate::util::rng::{Rng, SplitMix64};
+use crate::util::threadpool::ThreadPool;
+
+use super::{acu_power, layer_macs, plan_cost_macs};
+
+/// Tuning knobs for [`search`]. `evals` is the hard budget of *fresh* plan
+/// evaluations (cache hits are free); `wave` is the fixed parallel-playout
+/// wave size that the determinism contract pins independent of thread
+/// count.
+#[derive(Clone, Debug)]
+pub struct MctsConfig {
+    pub seed: u64,
+    /// Budget of fresh (uncached) plan evaluations.
+    pub evals: usize,
+    /// Playouts planned per wave; fixed so results never depend on thread
+    /// count. Default 8.
+    pub wave: usize,
+    /// UCT exploration constant.
+    pub c_uct: f64,
+    /// Hard cap on planned playouts (cache hits re-visit known plans
+    /// without consuming budget, so playouts can exceed `evals`).
+    /// 0 means `16 * evals`, at least 64.
+    pub max_playouts: usize,
+}
+
+impl Default for MctsConfig {
+    fn default() -> Self {
+        MctsConfig { seed: 0x5EED, evals: 64, wave: 8, c_uct: 0.5, max_playouts: 0 }
+    }
+}
+
+impl MctsConfig {
+    fn playout_cap(&self) -> usize {
+        if self.max_playouts > 0 {
+            self.max_playouts
+        } else {
+            (16 * self.evals).max(64)
+        }
+    }
+}
+
+/// One decision in the tree: which mode the given layer runs in.
+#[derive(Clone, Debug)]
+pub struct LayerChoice {
+    pub node: usize,
+    pub name: String,
+    /// Candidate modes, prior-ordered (index 0 expands first). Always
+    /// contains the reference ("keep") mode so every subtree can fall back
+    /// to exact.
+    pub candidates: Vec<LayerMode>,
+}
+
+/// The search problem: decision layers in depth order, the reference plan
+/// rollouts start from, the accuracy budget, and the MAC cost model.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Decision order: most sensitive layer first (ascending worst-case
+    /// pairwise accuracy, i.e. biggest drop first), ties by node id.
+    pub layers: Vec<LayerChoice>,
+    pub reference: ExecutionPlan,
+    pub base_acc: f64,
+    /// Maximum tolerated accuracy drop (absolute, e.g. 0.02).
+    pub budget: f64,
+    pub macs: BTreeMap<usize, u64>,
+    pub ref_cost: f64,
+}
+
+/// Reward shaping shared by playout scoring and expansion priors.
+/// Feasible (drop ≤ budget) → `0.5 + 0.5·savings` in `[0.5, 1.0]`;
+/// infeasible → `< 0.4`, decaying with overshoot so borderline subtrees
+/// still rank above hopeless ones.
+pub fn shaped_reward(drop: f64, budget: f64, savings: f64) -> f64 {
+    if drop <= budget {
+        0.5 + 0.5 * savings.clamp(0.0, 1.0)
+    } else {
+        let over = ((drop - budget) / budget.max(1e-9)).min(1.0);
+        0.4 * (1.0 - over).max(0.0)
+    }
+}
+
+/// UCT score of a child with `visits` committed visits, `total` committed
+/// reward, and `vloss` in-flight virtual losses, under a parent with
+/// `parent_n` effective visits. Virtual losses count as zero-reward visits,
+/// deflating both the exploitation and exploration terms for nodes already
+/// claimed by the current wave. Unvisited nodes score `+inf` (expansion
+/// order decides among them).
+pub fn uct_score(total: f64, visits: u64, vloss: u32, parent_n: u64, c: f64) -> f64 {
+    let n = visits + vloss as u64;
+    if n == 0 {
+        return f64::INFINITY;
+    }
+    let q = total / n as f64;
+    let ln_p = (parent_n.max(1) as f64).ln().max(0.0);
+    q + c * (ln_p / n as f64).sqrt()
+}
+
+impl SearchSpace {
+    /// Build the space from sweep results. `pair_accs` is the
+    /// layer-major/ACU-minor accuracy matrix from `sweep_pairs` over
+    /// `layers` × `acus`. Candidates keep only ACUs strictly cheaper than
+    /// the reference, plus the reference itself; each layer's candidates
+    /// are ordered by the shaped single-layer reward of flipping just that
+    /// layer (descending, ties by mode label for stability).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        model: &Model,
+        reference: ExecutionPlan,
+        reference_acu: &str,
+        base_acc: f64,
+        budget: f64,
+        layers: &[(usize, String)],
+        pair_accs: &[f64],
+        acus: &[String],
+    ) -> Result<SearchSpace> {
+        ensure!(
+            pair_accs.len() == layers.len() * acus.len(),
+            "sweep matrix is {} entries, expected {}x{}",
+            pair_accs.len(),
+            layers.len(),
+            acus.len()
+        );
+        let macs = layer_macs(model);
+        let total_macs: u64 = macs.values().sum::<u64>().max(1);
+        let ref_cost = plan_cost_macs(&macs, &reference);
+        let ref_p = acu_power(reference_acu);
+
+        // Per-layer worst-case drop orders the decision depths.
+        let mut order: Vec<(f64, usize)> = Vec::with_capacity(layers.len());
+        for (li, _) in layers.iter().enumerate() {
+            let worst = (0..acus.len())
+                .map(|ai| pair_accs[li * acus.len() + ai])
+                .fold(f64::INFINITY, f64::min);
+            order.push((worst, li));
+        }
+        // Most sensitive (lowest worst accuracy) first; ties by node id.
+        order.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal)
+                .then(layers[a.1].0.cmp(&layers[b.1].0))
+        });
+
+        let mut out_layers = Vec::with_capacity(layers.len());
+        for &(_, li) in &order {
+            let (node, name) = &layers[li];
+            let keep = reference.mode_of(*node);
+            let lmacs = macs.get(node).copied().unwrap_or(1).max(1) as f64;
+            let mut cands: Vec<(f64, String, LayerMode)> = vec![(0.5, keep.label(), keep.clone())];
+            for (ai, acu) in acus.iter().enumerate() {
+                let p = acu_power(acu);
+                if p >= ref_p {
+                    continue;
+                }
+                let acc = pair_accs[li * acus.len() + ai];
+                let drop = (base_acc - acc).max(0.0);
+                // Savings from flipping only this layer.
+                let savings = lmacs * (ref_p - p) / (total_macs as f64 * ref_p.max(1e-9));
+                let prior = shaped_reward(drop, budget, savings);
+                cands.push((prior, format!("lut:{acu}"), LayerMode::lut(acu)));
+            }
+            cands.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+            });
+            cands.dedup_by(|a, b| a.1 == b.1);
+            out_layers.push(LayerChoice {
+                node: *node,
+                name: name.clone(),
+                candidates: cands.into_iter().map(|(_, _, m)| m).collect(),
+            });
+        }
+        Ok(SearchSpace {
+            layers: out_layers,
+            reference,
+            base_acc,
+            budget,
+            macs,
+            ref_cost: if ref_cost > 0.0 { ref_cost } else { 1.0 },
+        })
+    }
+
+    /// Fractional MAC-cost savings of `plan` vs the reference plan,
+    /// clamped to `[0, 1]`.
+    pub fn savings(&self, plan: &ExecutionPlan) -> f64 {
+        ((self.ref_cost - plan_cost_macs(&self.macs, plan)) / self.ref_cost).clamp(0.0, 1.0)
+    }
+
+    /// Reward of a completed plan given its measured accuracy.
+    pub fn reward(&self, acc: f64, plan: &ExecutionPlan) -> f64 {
+        shaped_reward((self.base_acc - acc).max(0.0), self.budget, self.savings(plan))
+    }
+
+    /// Deterministic cache key for a plan (node→mode labels).
+    pub fn plan_key(plan: &ExecutionPlan) -> String {
+        let parts: Vec<String> =
+            plan.modes.iter().map(|(id, m)| format!("{id}={}", m.label())).collect();
+        parts.join(",")
+    }
+}
+
+/// Per-playout RNG stream: independent of every other playout, derived
+/// only from the search seed and the playout's global index.
+fn playout_rng(seed: u64, index: u64) -> Rng {
+    let mut sm = SplitMix64::new(seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    Rng::new(sm.next_u64())
+}
+
+struct NodeStat {
+    parent: usize,
+    depth: usize,
+    /// Candidate index within the layer at `depth - 1` (root: unused).
+    choice: usize,
+    /// child node-id per candidate index; `usize::MAX` = unexpanded.
+    children: Vec<usize>,
+    visits: u64,
+    total: f64,
+    vloss: u32,
+}
+
+/// A planned playout: a completed plan, its cache key, its global index
+/// (RNG stream id + commit order), and the tree path holding its virtual
+/// loss.
+pub struct Playout {
+    pub plan: ExecutionPlan,
+    pub key: String,
+    pub index: u64,
+    path: Vec<usize>,
+}
+
+/// The search tree. Public so tests can drive selection/backprop directly
+/// on hand-built spaces.
+pub struct Mcts {
+    space: SearchSpace,
+    cfg: MctsConfig,
+    nodes: Vec<NodeStat>,
+    next_index: u64,
+}
+
+impl Mcts {
+    pub fn new(space: SearchSpace, cfg: MctsConfig) -> Mcts {
+        let root_children = space.layers.first().map(|l| l.candidates.len()).unwrap_or(0);
+        Mcts {
+            space,
+            cfg,
+            nodes: vec![NodeStat {
+                parent: usize::MAX,
+                depth: 0,
+                choice: 0,
+                children: vec![usize::MAX; root_children],
+                visits: 0,
+                total: 0.0,
+                vloss: 0,
+            }],
+            next_index: 0,
+        }
+    }
+
+    pub fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    pub fn root_visits(&self) -> u64 {
+        self.nodes[0].visits
+    }
+
+    pub fn playouts_planned(&self) -> u64 {
+        self.next_index
+    }
+
+    /// Total outstanding virtual loss across the tree (0 when no playout
+    /// is in flight).
+    pub fn total_vloss(&self) -> u64 {
+        self.nodes.iter().map(|n| n.vloss as u64).sum()
+    }
+
+    /// Plan one playout: descend by expansion-order-then-UCT, place a
+    /// virtual loss along the path, and complete the plan with a rollout
+    /// from the playout's own RNG stream.
+    pub fn plan_playout(&mut self) -> Playout {
+        let index = self.next_index;
+        self.next_index += 1;
+        let mut rng = playout_rng(self.cfg.seed, index);
+
+        let mut path = vec![0usize];
+        let mut cur = 0usize;
+        let mut choices: Vec<(usize, usize)> = Vec::new(); // (depth, candidate idx)
+        loop {
+            let depth = self.nodes[cur].depth;
+            if depth >= self.space.layers.len() {
+                break;
+            }
+            // Expand the first unexpanded child, in prior order.
+            if let Some(ci) =
+                self.nodes[cur].children.iter().position(|&c| c == usize::MAX)
+            {
+                let child_cands = self
+                    .space
+                    .layers
+                    .get(depth + 1)
+                    .map(|l| l.candidates.len())
+                    .unwrap_or(0);
+                let id = self.nodes.len();
+                self.nodes.push(NodeStat {
+                    parent: cur,
+                    depth: depth + 1,
+                    choice: ci,
+                    children: vec![usize::MAX; child_cands],
+                    visits: 0,
+                    total: 0.0,
+                    vloss: 0,
+                });
+                self.nodes[cur].children[ci] = id;
+                choices.push((depth, ci));
+                path.push(id);
+                cur = id;
+                break; // rollout from the fresh leaf
+            }
+            // All children expanded: UCT argmax (strict > keeps first-best
+            // on ties, deterministic).
+            let parent_n = self.nodes[cur].visits + self.nodes[cur].vloss as u64;
+            let mut best_ci = 0usize;
+            let mut best_score = f64::NEG_INFINITY;
+            for (ci, &child) in self.nodes[cur].children.iter().enumerate() {
+                let ch = &self.nodes[child];
+                let s = uct_score(ch.total, ch.visits, ch.vloss, parent_n, self.cfg.c_uct);
+                if s > best_score {
+                    best_score = s;
+                    best_ci = ci;
+                }
+            }
+            let child = self.nodes[cur].children[best_ci];
+            choices.push((depth, best_ci));
+            path.push(child);
+            cur = child;
+        }
+        for &n in &path {
+            self.nodes[n].vloss += 1;
+        }
+        // Rollout: random candidates for the remaining depths.
+        let decided = choices.len();
+        for d in decided..self.space.layers.len() {
+            let n = self.space.layers[d].candidates.len();
+            let ci = if n > 1 { rng.below(n as u64) as usize } else { 0 };
+            choices.push((d, ci));
+        }
+        let mut plan = self.space.reference.clone();
+        for (d, ci) in &choices {
+            let layer = &self.space.layers[*d];
+            plan.modes.insert(layer.node, layer.candidates[*ci].clone());
+        }
+        let key = SearchSpace::plan_key(&plan);
+        Playout { plan, key, index, path }
+    }
+
+    /// Commit a scored playout: replace its virtual loss with a real
+    /// visit carrying `reward`.
+    pub fn commit(&mut self, p: &Playout, reward: f64) {
+        for &n in &p.path {
+            let node = &mut self.nodes[n];
+            node.vloss = node.vloss.saturating_sub(1);
+            node.visits += 1;
+            node.total += reward;
+        }
+    }
+
+    /// Abandon a planned playout (budget exhausted): lift its virtual
+    /// loss without recording a visit.
+    pub fn revert(&mut self, p: &Playout) {
+        for &n in &p.path {
+            let node = &mut self.nodes[n];
+            node.vloss = node.vloss.saturating_sub(1);
+        }
+    }
+}
+
+/// Optional QAT-in-the-loop re-scoring of the best leaves: the top
+/// `leaves` distinct plans by reward get a short `trainer::fit` run and
+/// are re-scored with the retrained weights.
+pub struct RetrainCtx<'a> {
+    pub train: &'a Split,
+    pub leaves: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub plan: ExecutionPlan,
+    pub accuracy: f64,
+    pub cost: f64,
+    pub savings: f64,
+    pub reward: f64,
+    /// Fresh evaluations consumed (incumbent counts as 1; reference is
+    /// free — it was already measured to establish `base_acc`).
+    pub evals: usize,
+    pub cache_hits: usize,
+    pub playouts: u64,
+    /// Leaves re-scored with QAT.
+    pub retrained: usize,
+    /// Whether the returned plan meets the accuracy budget.
+    pub feasible: bool,
+}
+
+/// Run MCTS over `space` with a budget of `cfg.evals` fresh plan
+/// evaluations. `incumbent` (typically greedy's plan + accuracy)
+/// warm-starts the cache and best-tracking and is charged 1 evaluation,
+/// keeping equal-budget comparisons against greedy honest — and
+/// guaranteeing the outcome is never worse than the incumbent.
+/// Deterministic given `cfg.seed` at any pool size / `ADAPT_THREADS`.
+pub fn search(
+    ctx: &Arc<SweepCtx>,
+    space: SearchSpace,
+    cfg: &MctsConfig,
+    incumbent: Option<(&ExecutionPlan, f64)>,
+    pool: Option<&ThreadPool>,
+    retrain: Option<&RetrainCtx>,
+) -> Result<SearchOutcome> {
+    ensure!(cfg.evals > 0, "mcts: evaluation budget must be > 0");
+    ensure!(cfg.wave > 0, "mcts: wave size must be > 0");
+    let mut tree = Mcts::new(space, cfg.clone());
+
+    // Ledger of every scored plan: key -> (accuracy, plan).
+    let mut cache: BTreeMap<String, (f64, ExecutionPlan)> = BTreeMap::new();
+    let ref_plan = tree.space.reference.clone();
+    cache.insert(SearchSpace::plan_key(&ref_plan), (tree.space.base_acc, ref_plan.clone()));
+
+    let mut evals = 0usize;
+    let mut cache_hits = 0usize;
+
+    // Best = (reward, accuracy, key, plan); replace on strictly greater
+    // reward, tie-break higher accuracy, then smaller key.
+    let better = |cand: (f64, f64, &str), best: &Option<(f64, f64, String, ExecutionPlan)>| {
+        match best {
+            None => true,
+            Some((br, ba, bk, _)) => {
+                cand.0 > *br
+                    || (cand.0 == *br && cand.1 > *ba)
+                    || (cand.0 == *br && cand.1 == *ba && cand.2 < bk.as_str())
+            }
+        }
+    };
+    let mut best: Option<(f64, f64, String, ExecutionPlan)> = None;
+    {
+        let r = tree.space.reward(tree.space.base_acc, &ref_plan);
+        let k = SearchSpace::plan_key(&ref_plan);
+        if better((r, tree.space.base_acc, k.as_str()), &best) {
+            best = Some((r, tree.space.base_acc, k, ref_plan.clone()));
+        }
+    }
+    if let Some((plan, acc)) = incumbent {
+        let k = SearchSpace::plan_key(plan);
+        if !cache.contains_key(&k) {
+            cache.insert(k.clone(), (acc, plan.clone()));
+            evals += 1; // the incumbent's evaluation counts against our budget
+        }
+        let r = tree.space.reward(acc, plan);
+        if better((r, acc, k.as_str()), &best) {
+            best = Some((r, acc, k, plan.clone()));
+        }
+    }
+
+    let cap = cfg.playout_cap();
+    'outer: while evals < cfg.evals && tree.playouts_planned() < cap as u64 {
+        // Plan a wave sequentially (virtual loss diversifies the wave),
+        // dropping playouts whose fresh eval would exceed the budget.
+        let mut wave: Vec<Playout> = Vec::with_capacity(cfg.wave);
+        let mut fresh_keys: Vec<String> = Vec::new();
+        while wave.len() < cfg.wave && tree.playouts_planned() < cap as u64 {
+            let p = tree.plan_playout();
+            let is_fresh =
+                !cache.contains_key(&p.key) && !fresh_keys.iter().any(|k| k == &p.key);
+            if is_fresh {
+                if evals + fresh_keys.len() >= cfg.evals {
+                    tree.revert(&p);
+                    break;
+                }
+                fresh_keys.push(p.key.clone());
+            }
+            wave.push(p);
+        }
+        if wave.is_empty() {
+            break 'outer;
+        }
+        // Evaluate fresh plans; ordered fold keeps determinism.
+        if !fresh_keys.is_empty() {
+            let plans: Vec<ExecutionPlan> = fresh_keys
+                .iter()
+                .map(|k| {
+                    wave.iter().find(|p| &p.key == k).expect("fresh key from wave").plan.clone()
+                })
+                .collect();
+            let accs: Vec<f64> = match pool {
+                Some(pool) if pool.threads() > 1 => {
+                    let per_job = (ctx.gemm_threads / pool.threads()).max(1);
+                    let jobs: Vec<_> = plans
+                        .into_iter()
+                        .map(|plan| {
+                            let ctx = Arc::clone(ctx);
+                            move || ctx.eval_plan_threads(plan, per_job)
+                        })
+                        .collect();
+                    pool.run_ordered(jobs).into_iter().collect::<Result<Vec<f64>>>()?
+                }
+                _ => plans
+                    .into_iter()
+                    .map(|plan| ctx.eval_plan(plan))
+                    .collect::<Result<Vec<f64>>>()?,
+            };
+            for (k, acc) in fresh_keys.iter().zip(accs) {
+                let plan = wave.iter().find(|p| &p.key == k).expect("fresh key").plan.clone();
+                cache.insert(k.clone(), (acc, plan));
+                evals += 1;
+            }
+        }
+        // Commit in playout-index order (wave is already in that order).
+        for p in &wave {
+            let (acc, _) = cache.get(&p.key).expect("every wave key is cached").clone();
+            if !fresh_keys.iter().any(|k| k == &p.key) {
+                cache_hits += 1;
+            }
+            let r = tree.space.reward(acc, &p.plan);
+            tree.commit(p, r);
+            if better((r, acc, p.key.as_str()), &best) {
+                best = Some((r, acc, p.key.clone(), p.plan.clone()));
+            }
+        }
+    }
+
+    // QAT-in-the-loop: re-score the top-N distinct plans with a short
+    // retrain; keeps whichever score is better.
+    let mut retrained = 0usize;
+    if let Some(rc) = retrain {
+        if rc.leaves > 0 && rc.epochs > 0 && !rc.train.is_tokens {
+            let mut ranked: Vec<(f64, f64, String, ExecutionPlan)> = cache
+                .iter()
+                .map(|(k, (acc, plan))| {
+                    (tree.space.reward(*acc, plan), *acc, k.clone(), plan.clone())
+                })
+                .collect();
+            ranked.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.2.cmp(&b.2))
+            });
+            for (_, _, key, plan) in ranked.into_iter().take(rc.leaves) {
+                let tc = crate::trainer::TrainConfig {
+                    epochs: rc.epochs,
+                    lr: rc.lr,
+                    momentum: 0.9,
+                    batch: ctx.bs,
+                    seed: rc.seed,
+                    threads: ctx.gemm_threads,
+                    max_batches: None,
+                    log_every: 0,
+                };
+                let fit = crate::trainer::fit(
+                    &ctx.model,
+                    ctx.params.clone(),
+                    &plan,
+                    &ctx.scales,
+                    &ctx.luts,
+                    rc.train,
+                    &tc,
+                )
+                .context("mcts: leaf retrain failed")?;
+                let acc =
+                    ctx.eval_plan_params(plan.clone(), fit.params, ctx.gemm_threads)?;
+                retrained += 1;
+                let r = tree.space.reward(acc, &plan);
+                if better((r, acc, key.as_str()), &best) {
+                    best = Some((r, acc, key.clone(), plan.clone()));
+                }
+            }
+        }
+    }
+
+    let (reward, accuracy, _, plan) = best.expect("reference always seeds best");
+    let cost = plan_cost_macs(&tree.space.macs, &plan);
+    let savings = tree.space.savings(&plan);
+    let feasible = (tree.space.base_acc - accuracy) <= tree.space.budget;
+    Ok(SearchOutcome {
+        plan,
+        accuracy,
+        cost,
+        savings,
+        reward,
+        evals,
+        cache_hits,
+        playouts: tree.playouts_planned(),
+        retrained,
+        feasible,
+    })
+}

@@ -1,0 +1,247 @@
+//! Plan-search subsystem: cost models and search strategies for mixed-ACU
+//! execution plans.
+//!
+//! The coordinator's sensitivity sweep produces a per-(layer, ACU) accuracy
+//! prior; this module turns that prior plus the shared
+//! [`SweepCtx::eval_plan`](crate::coordinator::experiments::SweepCtx::eval_plan)
+//! scoring path into whole-plan search:
+//!
+//! - **Greedy** (`coordinator::experiments::greedy_mixed`): sorts layers by
+//!   sensitivity and first-fits the cheapest feasible ACU per layer. Fast,
+//!   but sequential-by-construction — an early aggressive assignment can
+//!   lock later layers out of better joint plans.
+//! - **MCTS** ([`mcts`]): Monte Carlo Tree Search under a UCT policy, the
+//!   TransAxx (arXiv:2402.07545) approach. Tree nodes are *partial* plans:
+//!   depth d fixes the ACU choice for the d-th most sensitive layer
+//!   (ascending worst-case accuracy drop from the pairwise sweep, ties by
+//!   node id). Expansion at each depth is ordered by a per-candidate prior
+//!   (shaped single-layer reward, see [`mcts::SearchSpace::build`]), leaf
+//!   rollouts complete the remaining layers uniformly at random from a
+//!   per-playout RNG stream and the finished plan is scored on the
+//!   calibration batches.
+//!
+//! ## Cost model: MACs vs accuracy
+//!
+//! Plan cost is the MAC-weighted mean of per-layer relative multiplier
+//! power ([`plan_cost`]): `cost = Σ_l macs_l · power(mode_l) / Σ_l macs_l`,
+//! where `power` is the ACU's normalized energy (exact multiplier = 1.0)
+//! and `macs_l` comes from static shape propagation ([`layer_macs`]).
+//! Savings of a plan relative to the reference single-ACU plan is
+//! `(ref_cost − cost) / ref_cost`. A completed plan's reward in `[0, 1]`
+//! combines feasibility and savings: plans whose accuracy drop stays within
+//! the budget score `0.5 + 0.5·savings` (so every feasible plan beats every
+//! infeasible one), while infeasible plans score below `0.4`, shaped by how
+//! far they overshoot the budget so the tree still learns *which* subtrees
+//! are merely borderline.
+//!
+//! ## Determinism contract
+//!
+//! `mcts::search` is bit-deterministic given a seed, at any `ADAPT_THREADS`
+//! and any sweep-worker pool size — the same discipline as `sweep_pairs`:
+//! playouts are planned sequentially in waves of a *fixed* size (never the
+//! thread count) with virtual loss making concurrent playouts diverge,
+//! each playout draws from its own RNG stream derived from
+//! `seed ⊕ mix(playout_index)`, evaluations fold back through
+//! `ThreadPool::run_ordered`, and backpropagation commits in playout-index
+//! order. Plan evaluation itself (`SweepCtx::eval_plan_threads`) is
+//! bit-deterministic at any thread count, so per-job GEMM thread splits
+//! cannot perturb scores.
+
+pub mod mcts;
+
+use std::collections::BTreeMap;
+
+use crate::graph::{ExecutionPlan, LayerMode, Model, Op};
+
+/// Relative power of an ACU (exact multiplier = 1.0). Unknown names fall
+/// back to 1.0 so cost never rewards a typo.
+pub fn acu_power(acu: &str) -> f64 {
+    crate::mult::get(acu).map(|m| m.power).unwrap_or(1.0)
+}
+
+/// Relative power of a layer mode: LUT-backed modes look up the ACU's
+/// power; Fp32 and closed-form-without-ACU modes count as exact.
+pub fn mode_power(mode: &LayerMode) -> f64 {
+    match mode {
+        LayerMode::ApproxLut { acu } => acu_power(acu),
+        LayerMode::Fp32 | LayerMode::ApproxFunc { .. } => 1.0,
+    }
+}
+
+/// Static per-layer MAC counts for every quantizable node, from shape
+/// propagation over the graph (no execution needed). Mirrors the dynamic
+/// `node_macs` accounting in the executor's profiler.
+pub fn layer_macs(model: &Model) -> BTreeMap<usize, u64> {
+    // Track (h, w, c) per node id; (1, 1, features) for flat tensors.
+    let mut shapes: BTreeMap<usize, (usize, usize, usize)> = BTreeMap::new();
+    let mut macs = BTreeMap::new();
+    let input_hwc = match model.input_shape.as_slice() {
+        [h, w, c] => (*h, *w, *c),
+        [n] => (1usize, 1usize, *n),
+        _ => (1, 1, 1),
+    };
+    // Token/sequence models feed an i32 id sequence; treat the flattened
+    // input length as the sequence length for LSTM MAC accounting.
+    let seq_len: usize = model.input_shape.iter().product::<usize>().max(1);
+    for node in &model.nodes {
+        let inp = |i: usize| -> (usize, usize, usize) {
+            node.inputs
+                .get(i)
+                .and_then(|id| shapes.get(id).copied())
+                .unwrap_or((1, 1, 1))
+        };
+        let shape = match &node.op {
+            Op::Input => input_hwc,
+            Op::Conv2d { kh, kw, cin, cout, stride, pad, groups, .. } => {
+                let (h, w, _) = inp(0);
+                let ho = (h + 2 * pad).saturating_sub(*kh) / stride + 1;
+                let wo = (w + 2 * pad).saturating_sub(*kw) / stride + 1;
+                let m = (ho * wo * cout) as u64 * (*kh as u64) * (*kw as u64) * (*cin as u64)
+                    / (*groups).max(1) as u64;
+                macs.insert(node.id, m);
+                (ho, wo, *cout)
+            }
+            Op::Linear { din, dout, .. } => {
+                macs.insert(node.id, (*din as u64) * (*dout as u64));
+                (1, 1, *dout)
+            }
+            Op::Lstm { din, hidden, .. } => {
+                let m = (seq_len as u64) * 4 * (*hidden as u64) * (*din as u64 + *hidden as u64);
+                macs.insert(node.id, m);
+                (1, 1, *hidden)
+            }
+            Op::AvgPool2 => {
+                let (h, w, c) = inp(0);
+                (h / 2, w / 2, c)
+            }
+            Op::Gap => {
+                let (_, _, c) = inp(0);
+                (1, 1, c)
+            }
+            Op::Flatten => {
+                let (h, w, c) = inp(0);
+                (1, 1, h * w * c)
+            }
+            Op::Concat => {
+                let (h, w, c0) = inp(0);
+                let (_, _, c1) = inp(1);
+                (h, w, c0 + c1)
+            }
+            Op::Reshape { shape } => match shape.as_slice() {
+                [h, w, c] => (*h, *w, *c),
+                [n] => (1, 1, *n),
+                _ => inp(0),
+            },
+            Op::Embedding { dim, .. } => (1, 1, *dim),
+            Op::Relu
+            | Op::Sigmoid
+            | Op::Tanh
+            | Op::Add
+            | Op::ChannelShuffle { .. }
+            | Op::SliceLast { .. } => inp(0),
+        };
+        shapes.insert(node.id, shape);
+    }
+    macs
+}
+
+/// MAC-weighted mean relative power of a plan over `model`'s quantizable
+/// layers. Layers without a static MAC estimate weigh 1 MAC; a model with
+/// no quantizable layers costs 1.0 (exact).
+pub fn plan_cost(model: &Model, plan: &ExecutionPlan) -> f64 {
+    plan_cost_macs(&layer_macs(model), plan)
+}
+
+/// [`plan_cost`] with precomputed MAC weights (hot loop in search).
+pub fn plan_cost_macs(macs: &BTreeMap<usize, u64>, plan: &ExecutionPlan) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (id, mode) in &plan.modes {
+        let w = macs.get(id).copied().unwrap_or(1).max(1) as f64;
+        num += w * mode_power(mode);
+        den += w;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        1.0
+    }
+}
+
+/// Which whole-plan search strategy drives `adapt sensitivity` / `adapt
+/// search`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchMethod {
+    /// Sensitivity-ordered first-fit descent (`greedy_mixed`).
+    Greedy,
+    /// Monte Carlo Tree Search with UCT + virtual loss ([`mcts`]).
+    Mcts,
+}
+
+impl SearchMethod {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Ok(SearchMethod::Greedy),
+            "mcts" => Ok(SearchMethod::Mcts),
+            other => anyhow::bail!("unknown search method '{other}' (expected greedy|mcts)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SearchMethod::Greedy => "greedy",
+            SearchMethod::Mcts => "mcts",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Policy;
+
+    #[test]
+    fn layer_macs_tiny_cnn() {
+        let model = crate::trainer::synth::tiny_cnn();
+        let macs = layer_macs(&model);
+        // tiny_cnn: 8x8x3 input; c1 conv3x3 3->8 pad1 (node 1): 8*8*8*3*3*3;
+        // AvgPool2 halves to 4x4; c2 conv3x3 8->8 pad1 (node 4): 4*4*8*3*3*8;
+        // Gap -> 1x1x8; head linear 8->4 (node 7): 8*4.
+        assert_eq!(macs.get(&1), Some(&13824));
+        assert_eq!(macs.get(&4), Some(&9216));
+        assert_eq!(macs.get(&7), Some(&32));
+        assert_eq!(macs.len(), 3);
+    }
+
+    #[test]
+    fn plan_cost_weighs_macs() {
+        let model = crate::trainer::synth::tiny_cnn();
+        let exact = crate::graph::retransform(&model, &Policy::all(LayerMode::lut("exact8")));
+        let cost = plan_cost(&model, &exact);
+        assert!((cost - 1.0).abs() < 1e-12, "exact plan costs 1.0, got {cost}");
+
+        // Approximating only the biggest layer must move cost more than
+        // approximating only the smallest.
+        let p_small = acu_power("drum8_6");
+        assert!(p_small < 1.0, "drum8_6 must be cheaper than exact");
+        let mut big = exact.clone();
+        big.modes.insert(1, LayerMode::lut("drum8_6"));
+        let mut small = exact.clone();
+        small.modes.insert(7, LayerMode::lut("drum8_6"));
+        let c_big = plan_cost(&model, &big);
+        let c_small = plan_cost(&model, &small);
+        assert!(c_big < c_small, "MAC-heavy layer must dominate: {c_big} vs {c_small}");
+        let macs = layer_macs(&model);
+        let total: u64 = macs.values().sum();
+        let expect = (1.0 * (total - 13824) as f64 + p_small * 13824.0) / total as f64;
+        assert!((c_big - expect).abs() < 1e-9, "{c_big} vs {expect}");
+    }
+
+    #[test]
+    fn search_method_parse_roundtrip() {
+        assert_eq!(SearchMethod::parse("mcts").unwrap(), SearchMethod::Mcts);
+        assert_eq!(SearchMethod::parse("GREEDY").unwrap(), SearchMethod::Greedy);
+        assert!(SearchMethod::parse("anneal").is_err());
+        assert_eq!(SearchMethod::Mcts.label(), "mcts");
+    }
+}

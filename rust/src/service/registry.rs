@@ -855,8 +855,11 @@ impl Drop for ModelHandle {
 
 /// Parse a plan body: `{"spec": "..."}` resolves a policy against the
 /// served model; anything else must be a plan JSON document. Returns the
-/// version `source` tag alongside the plan. (Shared by the `/v1` swap
-/// shim and `/v2` version creation, so their error surfaces match.)
+/// version `source` tag alongside the plan — plan documents carrying a
+/// `provenance` field (e.g. `"mcts:<seed>/<budget>"` from `adapt search`)
+/// keep it as the source tag so the store records where a searched plan
+/// came from. (Shared by the `/v1` swap shim and `/v2` version creation,
+/// so their error surfaces match.)
 pub(crate) fn parse_plan_body(
     body: &str,
     spec: &EmulatorSpec,
@@ -879,7 +882,7 @@ pub(crate) fn parse_plan_body(
             Ok((format!("spec:{text}"), retransform(&spec.model, &policy)))
         }
         None => Ok((
-            "json".into(),
+            ExecutionPlan::provenance_of(body).unwrap_or_else(|| "json".into()),
             ExecutionPlan::from_json(body, &spec.model)
                 .map_err(|e| ServiceError::PlanRejected(format!("{e:#}")))?,
         )),

@@ -279,7 +279,7 @@ fn parallel_sweep_matches_sequential_bit_for_bit() {
 
     let seq = experiments::sweep_pairs(&ctx, &reference, &layers, &acus, None).unwrap();
     assert_eq!(seq.len(), layers.len() * acus.len());
-    let (seq_plan, seq_acc) = experiments::greedy_mixed(
+    let (seq_plan, seq_acc, _) = experiments::greedy_mixed(
         &ctx,
         &reference,
         "exact8",
@@ -308,7 +308,7 @@ fn parallel_sweep_matches_sequential_bit_for_bit() {
                 par, seq,
                 "{workers}-worker sweep round {round} diverged from sequential"
             );
-            let (par_plan, par_acc) = experiments::greedy_mixed(
+            let (par_plan, par_acc, _) = experiments::greedy_mixed(
                 &ctx,
                 &reference,
                 "exact8",
@@ -327,6 +327,68 @@ fn parallel_sweep_matches_sequential_bit_for_bit() {
             assert_eq!(par_acc, seq_acc);
         }
     }
+}
+
+#[test]
+fn greedy_plan_is_byte_identical_across_gemm_threads_and_reruns() {
+    // PROPERTY: greedy_mixed emits byte-identical plan JSON (and the same
+    // eval count) regardless of the GEMM thread count (`ADAPT_THREADS`)
+    // and across repeated runs with the same inputs — the determinism
+    // regression the MCTS planner's contract is built on.
+    let run = |gemm_threads: usize| {
+        let model = synth_model();
+        let params = synth_params(&model, 21);
+        let bs = 4;
+        let mut rng = Rng::new(99);
+        let batches: Vec<EvalBatch> = (0..3)
+            .map(|bi| {
+                let x: Vec<f32> = (0..bs * 16).map(|_| rng.next_gauss()).collect();
+                EvalBatch {
+                    input: Value::F(Tensor::from_vec(&[bs, 4, 4, 1], x).unwrap()),
+                    labels: (0..bs).map(|i| ((i + bi) % 3) as i32).collect(),
+                    target: vec![],
+                }
+            })
+            .collect();
+        let ctx = Arc::new(SweepCtx {
+            model,
+            params,
+            scales: scales(),
+            luts: LutRegistry::in_memory(),
+            batches,
+            bs,
+            gemm_threads,
+        });
+        let layers = ctx.layers();
+        let acus = vec![
+            "mul8s_1l2h_like".to_string(),
+            "drum8_4".to_string(),
+            "trunc_out8_4".to_string(),
+        ];
+        let reference = retransform(&ctx.model, &Policy::all(LayerMode::lut("exact8")));
+        let base_acc = ctx.eval_plan(reference.clone()).unwrap();
+        let accs = experiments::sweep_pairs(&ctx, &reference, &layers, &acus, None).unwrap();
+        let worst = experiments::worst_drops(base_acc, &accs, layers.len(), acus.len());
+        let (plan, acc, evals) = experiments::greedy_mixed(
+            &ctx, &reference, "exact8", base_acc, &layers, &worst, &acus, 0.5,
+        )
+        .unwrap();
+        (plan.to_json(&ctx.model), acc, evals)
+    };
+
+    let (json1, acc1, evals1) = run(1);
+    for gemm_threads in [1usize, 4] {
+        for round in 0..2 {
+            let (json, acc, evals) = run(gemm_threads);
+            assert_eq!(
+                json, json1,
+                "greedy plan JSON diverged at {gemm_threads} GEMM threads, round {round}"
+            );
+            assert_eq!(acc, acc1);
+            assert_eq!(evals, evals1, "eval count is part of the determinism contract");
+        }
+    }
+    assert!(evals1 > 0, "greedy must consume evaluations");
 }
 
 #[test]
