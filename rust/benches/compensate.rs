@@ -1,0 +1,113 @@
+//! Compensation bench: per-ACU accuracy recovery on the pre-trained
+//! synthetic CNN. For each registry ACU of interest, evaluates the
+//! all-that-ACU plan with and without calibrated compensation (exact8 is
+//! the accuracy reference), reports the recovered fraction of the drop
+//! plus the MAC-weighted and compensation-inclusive costs, and emits
+//! `artifacts/results/BENCH_compensate.json`.
+//!
+//! Smoke: `ADAPT_BENCH_FAST=1 cargo bench --bench compensate`
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use adapt::compensate;
+use adapt::graph::{retransform, ExecutionPlan, LayerMode, Policy};
+use adapt::lut::LutRegistry;
+use adapt::search::{layer_macs, layer_outputs, plan_cost_comp, plan_cost_macs};
+use adapt::trainer::{self, synth};
+use adapt::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("ADAPT_BENCH_FAST").as_deref() == Ok("1");
+    let threads = 2;
+    let bs = 32;
+    let eval_batches = if fast { 4 } else { 8 };
+    let calib_batches = if fast { 1 } else { 2 };
+    let acus = ["mitchell8", "drum8_6", "mul8s_1l2h_like", "trunc_out8_4"];
+
+    let t0 = Instant::now();
+    let ts = synth::tiny_pretrained(0xC0FF, threads).unwrap();
+    let setup_wall = t0.elapsed().as_secs_f64();
+    let luts = LutRegistry::in_memory();
+
+    let modes: Vec<LayerMode> = acus.iter().map(|a| LayerMode::lut(*a)).collect();
+    let bits = compensate::needed_bits(modes.iter()).unwrap();
+    let t0 = Instant::now();
+    let calib = compensate::collect(
+        &ts.model, &ts.params, &ts.ds.train, bs, calib_batches, &ts.scales, &bits, threads,
+    )
+    .unwrap();
+    let calib_wall = t0.elapsed().as_secs_f64();
+
+    let eval = |p: &ExecutionPlan| {
+        trainer::evaluate(
+            &ts.model, ts.params.clone(), p, &ts.scales, &luts, &ts.ds.eval, bs, eval_batches,
+            threads,
+        )
+        .unwrap()
+    };
+    let base_acc = eval(&retransform(&ts.model, &Policy::all(LayerMode::lut("exact8"))));
+    let macs = layer_macs(&ts.model);
+    let outs = layer_outputs(&ts.model);
+    println!(
+        "Compensation: {} ACUs on {} (base accuracy {base_acc:.4}), \
+         {calib_batches} calib / {eval_batches} eval batches, calibration {calib_wall:.3}s \
+         (setup {setup_wall:.3}s)",
+        acus.len(),
+        ts.model.name
+    );
+
+    let obj = |pairs: Vec<(&str, Json)>| {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
+    let mut rows = Vec::new();
+    for acu in acus {
+        let plan = retransform(&ts.model, &Policy::all(LayerMode::lut(acu)));
+        let mut comp_plan = plan.clone();
+        let t0 = Instant::now();
+        let applied =
+            compensate::compensate_plan(&ts.model, &ts.params, &ts.scales, &calib, &mut comp_plan)
+                .unwrap();
+        let fit_wall = t0.elapsed().as_secs_f64();
+        assert!(applied >= 1, "{acu} is approximate; some layer must get a block");
+
+        let uncomp = eval(&plan);
+        let comp = eval(&comp_plan);
+        let dropped = base_acc - uncomp;
+        let recovered = if dropped <= 1e-9 { 1.0 } else { (comp - uncomp) / dropped };
+        let cost = plan_cost_macs(&macs, &plan);
+        let cost_comp = plan_cost_comp(&macs, &outs, &comp_plan);
+        println!(
+            "  {acu:>16}: uncompensated {uncomp:.4}, compensated {comp:.4} \
+             (drop {dropped:.4}, recovered {recovered:.3}), {applied} layers, \
+             fit {fit_wall:.3}s"
+        );
+        rows.push(obj(vec![
+            ("acu", Json::Str(acu.to_string())),
+            ("compensated_layers", Json::Num(applied as f64)),
+            ("accuracy_uncompensated", Json::Num(uncomp)),
+            ("accuracy_compensated", Json::Num(comp)),
+            ("recovered_frac", Json::Num(recovered)),
+            ("cost_macs", Json::Num(cost)),
+            ("cost_with_comp_adds", Json::Num(cost_comp)),
+            ("fit_wall_s", Json::Num(fit_wall)),
+        ]));
+    }
+
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("model".to_string(), Json::Str(ts.model.name.clone()));
+    doc.insert("batch".to_string(), Json::Num(bs as f64));
+    doc.insert("eval_batches".to_string(), Json::Num(eval_batches as f64));
+    doc.insert("calib_batches".to_string(), Json::Num(calib_batches as f64));
+    doc.insert("base_accuracy".to_string(), Json::Num(base_acc));
+    doc.insert("setup_wall_s".to_string(), Json::Num(setup_wall));
+    doc.insert("calib_wall_s".to_string(), Json::Num(calib_wall));
+    doc.insert("acus".to_string(), Json::Arr(rows));
+    let dir = adapt::artifacts_dir().join("results");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let path = dir.join("BENCH_compensate.json");
+        if std::fs::write(&path, Json::Obj(doc).to_string()).is_ok() {
+            println!("  written {}", path.display());
+        }
+    }
+}

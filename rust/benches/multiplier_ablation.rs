@@ -226,6 +226,7 @@ fn parallel_sweep_section(fast: bool) {
         batches,
         bs,
         gemm_threads: 1,
+        comp: None,
     });
     let layers = ctx.layers();
     let acus: Vec<String> = ["mul8s_1l2h_like", "drum8_6", "trunc_out8_4", "mitchell8"]

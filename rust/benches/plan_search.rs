@@ -123,6 +123,7 @@ fn main() {
         batches,
         bs,
         gemm_threads: 1,
+        comp: None,
     });
     let layers = ctx.layers();
     let acus: Vec<String> = ["mul8s_1l2h_like", "drum8_6", "trunc_out8_4", "mitchell8"]

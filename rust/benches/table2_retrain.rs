@@ -95,6 +95,7 @@ fn emulator_section(cfg: Config) {
         threads,
         max_batches: Some(1),
         log_every: 0,
+        approx_backward: None,
     };
     let s_step = bench::run("  emu train step (fit 1x1)", cfg, || {
         trainer::fit(

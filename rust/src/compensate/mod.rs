@@ -1,0 +1,476 @@
+//! Calibrated error compensation for approximate plans — the
+//! control-variate additive correction of Zervakis et al., "Leveraging
+//! Highly Approximated Multipliers in DNN Inference" (2024).
+//!
+//! An approximate multiplier injects a *biased* error into every MAC:
+//! for operands `(a, b)` the ACU returns `a·b + err(a, b)` with
+//! `E[err] != 0` (Mitchell's logarithmic multiplier is biased low,
+//! floor-truncation biased negative, …). Over a whole GEMM row the bias
+//! accumulates into a per-output-channel offset that shifts logits and
+//! wrecks accuracy long before the error *variance* does. The fix is
+//! cheap: measure the expected accumulated error offline and subtract it.
+//!
+//! The pipeline here:
+//!
+//! 1. **Calibration** ([`collect`]) — run the fp32 forward over a few
+//!    calibration batches with [`Executor::forward_taped`] (the same
+//!    artifact-free tap machinery as
+//!    [`crate::trainer::calibrate_emulator`]) and histogram each
+//!    quantizable layer's *quantized operand distribution*: the im2col
+//!    patch matrix for convs (padding zeros included — they are real GEMM
+//!    operands), the activation matrix for linears, quantized at every
+//!    candidate bitwidth with the layer's calibrated scale.
+//! 2. **Error model** ([`compensation_for`]) — for a layer mode, evaluate
+//!    the ACU's signed error `err(a, b) = acu(a, b) − a·b` (the
+//!    [`crate::mult::Form`] closed form when the ACU has one, its
+//!    behavioral function otherwise) against the operand histogram:
+//!    `rowsum[b] = E_a[err(a, b)]`, then per output channel `n` sum
+//!    `rowsum` over that channel's quantized weights — exactly the
+//!    per-column quantization ([`crate::quant::weight_scales_per_col`])
+//!    and group flattening the executor's prepare step uses, so the model
+//!    predicts the real kernels' accumulated error. Dequantizing through
+//!    `sa · ws[n]` gives the expected fp32 output offset; its negation is
+//!    the correction, split into a `constant` (mean over channels) plus
+//!    per-channel residuals.
+//! 3. **Execution** — the terms ride in the plan
+//!    ([`crate::graph::Compensation`]) and fold into the bias vector at
+//!    executor prepare time: zero cost on the GEMM hot path, bit-identical
+//!    across SIMD tiers and `ADAPT_THREADS`, and a plan without (or with
+//!    all-zero) compensation executes byte-for-byte as before.
+//!
+//! Exact modes (`exact8`, `func:<bits>:0`) have identically zero error and
+//! yield no compensation block. LSTMs are not compensated (gate-structured
+//! outputs do not fit the per-output-channel correction model).
+//!
+//! Everything is deterministic: histogram accumulation and the fits are
+//! sequential, and the taped forward is bit-identical at any thread count,
+//! so the same calibration data produces byte-identical compensation terms
+//! at `ADAPT_THREADS=1` and `=4`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Split;
+use crate::emulator::{Executor, Style, Value};
+use crate::graph::{retransform, Compensation, ExecutionPlan, LayerMode, Model, Op, Policy};
+use crate::mult::{self, Form};
+use crate::quant;
+use crate::tensor::{im2col_f32, Tensor};
+
+/// Quantized-operand histogram of one layer at one bitwidth.
+#[derive(Clone, Debug)]
+pub struct LayerHist {
+    pub node: usize,
+    pub bits: u32,
+    /// `counts[q + qmax]` = occurrences of quantized level `q`.
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl LayerHist {
+    fn new(node: usize, bits: u32) -> LayerHist {
+        let qmax = quant::qmax_for(bits) as usize;
+        LayerHist {
+            node,
+            bits,
+            counts: vec![0; 2 * qmax + 1],
+            total: 0,
+        }
+    }
+
+    fn observe(&mut self, xs: &[f32], sa: f32) {
+        let qmax = quant::qmax_for(self.bits);
+        for &x in xs {
+            let q = quant::quantize_one(x, sa, qmax);
+            self.counts[(q + qmax) as usize] += 1;
+        }
+        self.total += xs.len() as u64;
+    }
+}
+
+/// Calibration artifact: per-(node, bits) operand histograms.
+#[derive(Clone, Debug, Default)]
+pub struct Calibration {
+    pub hists: BTreeMap<(usize, u32), LayerHist>,
+}
+
+/// Distinct activation bitwidths a set of candidate modes quantizes at
+/// (fp32 modes contribute nothing). Drives [`collect`].
+pub fn needed_bits<'a>(modes: impl Iterator<Item = &'a LayerMode>) -> Result<Vec<u32>> {
+    let mut set = std::collections::BTreeSet::new();
+    for mode in modes {
+        if let Some(bits) = mode_bits(mode)? {
+            set.insert(bits);
+        }
+    }
+    Ok(set.into_iter().collect())
+}
+
+/// Activation bitwidth of a mode (`None` for fp32).
+pub fn mode_bits(mode: &LayerMode) -> Result<Option<u32>> {
+    Ok(match mode {
+        LayerMode::Fp32 => None,
+        LayerMode::ApproxLut { acu } => Some(mult::get(acu)?.bits),
+        LayerMode::ApproxFunc { bits, .. } => Some(*bits),
+    })
+}
+
+/// The layer's effective activation scale at `bits` — identical to the
+/// executor's rescale of the calibrated 8-bit scale to the node bitwidth.
+fn sa_at(scales: &[f32], scale_idx: usize, bits: u32) -> f32 {
+    scales[scale_idx] * (quant::qmax_for(8) as f32 / quant::qmax_for(bits) as f32)
+}
+
+/// Calibration pass: fp32 taped forward over `batches` batches of `split`,
+/// histogramming every quantizable layer's operand distribution at each
+/// bitwidth in `bits_list`. `scales` are the layer activation scales from
+/// [`crate::trainer::calibrate_emulator`] (8-bit convention).
+#[allow(clippy::too_many_arguments)]
+pub fn collect(
+    model: &Model,
+    params: &[Tensor],
+    split: &Split,
+    batch: usize,
+    batches: usize,
+    scales: &[f32],
+    bits_list: &[u32],
+    threads: usize,
+) -> Result<Calibration> {
+    anyhow::ensure!(!bits_list.is_empty(), "compensation calibration needs at least one bitwidth");
+    let plan = retransform(model, &Policy::all(LayerMode::Fp32));
+    let luts = crate::lut::LutRegistry::in_memory();
+    let exec = Executor::new(
+        model,
+        params.to_vec(),
+        plan,
+        vec![],
+        &luts,
+        Style::Optimized {
+            threads: threads.max(1),
+        },
+    )?;
+    let mut hists: BTreeMap<(usize, u32), LayerHist> = BTreeMap::new();
+    let bs = batch.max(1);
+    let tape_f = |tape: &[Option<Value>], id: usize| -> Result<Tensor> {
+        match tape.get(id).and_then(|v| v.as_ref()) {
+            Some(Value::F(t)) => Ok(t.clone()),
+            _ => anyhow::bail!("compensation tape missing f32 value {id}"),
+        }
+    };
+    for bi in 0..batches.max(1) {
+        let tape = exec.forward_taped(Value::F(split.batch_tensor(bi, bs)))?;
+        for node in &model.nodes {
+            let (operands, scale_idx) = match &node.op {
+                Op::Conv2d {
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    scale_idx,
+                    ..
+                } => {
+                    let xin = tape_f(&tape, node.inputs[0])?;
+                    (im2col_f32(&xin, *kh, *kw, *stride, *pad).data, *scale_idx)
+                }
+                Op::Linear { scale_idx, .. } => (tape_f(&tape, node.inputs[0])?.data, *scale_idx),
+                Op::Lstm { .. } => bail!(
+                    "LSTM models are not supported by compensation calibration"
+                ),
+                _ => continue,
+            };
+            for &bits in bits_list {
+                let sa = sa_at(scales, scale_idx, bits);
+                hists
+                    .entry((node.id, bits))
+                    .or_insert_with(|| LayerHist::new(node.id, bits))
+                    .observe(&operands, sa);
+            }
+        }
+    }
+    Ok(Calibration { hists })
+}
+
+/// The ACU's signed product error for a mode, or `None` when the mode is
+/// exact (fp32, `exact*`, `func:<bits>:0`) and needs no compensation.
+fn mode_error_fn(mode: &LayerMode) -> Result<Option<(Box<dyn Fn(i64, i64) -> i64>, u32)>> {
+    Ok(match mode {
+        LayerMode::Fp32 => None,
+        LayerMode::ApproxLut { acu } => {
+            let m = mult::get(acu)?;
+            if matches!(m.form, Form::Exact) {
+                None
+            } else {
+                let fun = m.fun;
+                Some((Box::new(move |a, b| fun(a, b) - a * b), m.bits))
+            }
+        }
+        LayerMode::ApproxFunc { bits, trunc_k } => {
+            if *trunc_k == 0 {
+                None
+            } else {
+                let form = Form::TruncOut(*trunc_k);
+                let bits = *bits;
+                Some((Box::new(move |a, b| form.mul_i64(a, b) - a * b), bits))
+            }
+        }
+    })
+}
+
+/// `rowsum[b + qmax] = E_a[err(a, b)]` over the operand histogram — the
+/// expected error contribution of one MAC whose weight level is `b`.
+fn rowsum_err(hist: &LayerHist, err: &dyn Fn(i64, i64) -> i64) -> Vec<f64> {
+    let qmax = quant::qmax_for(hist.bits) as i64;
+    let levels = (2 * qmax + 1) as usize;
+    let mut row = vec![0.0f64; levels];
+    if hist.total == 0 {
+        return row;
+    }
+    for (idx, &count) in hist.counts.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let a = idx as i64 - qmax;
+        let w = count as f64;
+        for (j, slot) in row.iter_mut().enumerate() {
+            let b = j as i64 - qmax;
+            *slot += w * err(a, b) as f64;
+        }
+    }
+    let inv = 1.0 / hist.total as f64;
+    for slot in &mut row {
+        *slot *= inv;
+    }
+    row
+}
+
+/// Fit the additive correction of one layer under one mode: the negated
+/// expected per-output-channel error, dequantized through the layer's
+/// activation and per-column weight scales. Returns `None` for exact
+/// modes, LSTM nodes, and identically-zero corrections.
+pub fn compensation_for(
+    model: &Model,
+    params: &[Tensor],
+    scales: &[f32],
+    calib: &Calibration,
+    node_id: usize,
+    mode: &LayerMode,
+) -> Result<Option<Compensation>> {
+    let Some((err, bits)) = mode_error_fn(mode)? else {
+        return Ok(None);
+    };
+    let node = model
+        .nodes
+        .iter()
+        .find(|n| n.id == node_id)
+        .with_context(|| format!("compensation for unknown node {node_id}"))?;
+    let hist = calib
+        .hists
+        .get(&(node_id, bits))
+        .with_context(|| format!("no {bits}-bit calibration histogram for node {node_id}"))?;
+    let qmax = quant::qmax_for(bits) as i64;
+    let row = rowsum_err(hist, err.as_ref());
+
+    // Per-channel expected output error, through the same flattening +
+    // per-column quantization as the executor's prepare step.
+    let terms: Vec<f32> = match &node.op {
+        Op::Conv2d {
+            kh,
+            kw,
+            cin,
+            cout,
+            groups,
+            scale_idx,
+            ..
+        } => {
+            let w = &params[node.params[0]];
+            let cin_g = cin / groups;
+            let cout_g = cout / groups;
+            let kf = kh * kw * cin_g;
+            let sa = sa_at(scales, *scale_idx, bits);
+            let mut terms = vec![0.0f32; *cout];
+            let mut flat = Vec::with_capacity(kf * cout_g);
+            for g in 0..*groups {
+                flat.clear();
+                for r in 0..kf {
+                    let base = r * cout + g * cout_g;
+                    flat.extend_from_slice(&w.data[base..base + cout_g]);
+                }
+                let ws = quant::weight_scales_per_col(&flat, kf, cout_g, bits);
+                let wq = quant::quantize_weights_per_col(&flat, kf, cout_g, bits, &ws);
+                for ci in 0..cout_g {
+                    let mut esum = 0.0f64;
+                    for r in 0..kf {
+                        esum += row[(wq[r * cout_g + ci] as i64 + qmax) as usize];
+                    }
+                    terms[g * cout_g + ci] = -(esum as f32) * sa * ws[ci];
+                }
+            }
+            terms
+        }
+        Op::Linear {
+            din,
+            dout,
+            scale_idx,
+            ..
+        } => {
+            let w = &params[node.params[0]];
+            let sa = sa_at(scales, *scale_idx, bits);
+            let ws = quant::weight_scales_per_col(&w.data, *din, *dout, bits);
+            let wq = quant::quantize_weights_per_col(&w.data, *din, *dout, bits, &ws);
+            let mut terms = vec![0.0f32; *dout];
+            for (ci, term) in terms.iter_mut().enumerate() {
+                let mut esum = 0.0f64;
+                for r in 0..*din {
+                    esum += row[(wq[r * dout + ci] as i64 + qmax) as usize];
+                }
+                *term = -(esum as f32) * sa * ws[ci];
+            }
+            terms
+        }
+        _ => return Ok(None),
+    };
+
+    if terms.iter().all(|&t| t == 0.0) {
+        return Ok(None);
+    }
+    let mean = (terms.iter().map(|&t| t as f64).sum::<f64>() / terms.len() as f64) as f32;
+    let channels: Vec<f32> = terms.iter().map(|&t| t - mean).collect();
+    Ok(Some(Compensation {
+        constant: mean,
+        channels,
+    }))
+}
+
+/// Attach calibrated compensation to every approximated conv/linear layer
+/// of `plan` in place; returns how many layers got a block.
+pub fn compensate_plan(
+    model: &Model,
+    params: &[Tensor],
+    scales: &[f32],
+    calib: &Calibration,
+    plan: &mut ExecutionPlan,
+) -> Result<usize> {
+    let modes: Vec<(usize, LayerMode)> =
+        plan.modes.iter().map(|(id, m)| (*id, m.clone())).collect();
+    let mut applied = 0usize;
+    for (id, mode) in modes {
+        match compensation_for(model, params, scales, calib, id, &mode)? {
+            Some(comp) => {
+                plan.compensation.insert(id, comp);
+                applied += 1;
+            }
+            None => {
+                plan.compensation.remove(&id);
+            }
+        }
+    }
+    Ok(applied)
+}
+
+/// Precomputed `(node, mode label) -> Compensation` table for plan search:
+/// every (layer, candidate mode) pair fits once up front, and
+/// [`apply_table`] stamps a candidate plan in O(layers). Exact modes have
+/// no entry.
+pub type CompTable = BTreeMap<(usize, String), Compensation>;
+
+/// Build the search-time compensation table for `layers` × `modes`.
+pub fn comp_table(
+    model: &Model,
+    params: &[Tensor],
+    scales: &[f32],
+    calib: &Calibration,
+    layers: &[usize],
+    modes: &[LayerMode],
+) -> Result<CompTable> {
+    let mut table = CompTable::new();
+    for &node_id in layers {
+        for mode in modes {
+            if let Some(comp) =
+                compensation_for(model, params, scales, calib, node_id, mode)?
+            {
+                table.insert((node_id, mode.label()), comp);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Stamp `plan` with the table's terms for its current mode assignment
+/// (clearing entries for modes without one, e.g. exact or fp32).
+pub fn apply_table(table: &CompTable, plan: &mut ExecutionPlan) {
+    let modes: Vec<(usize, String)> = plan
+        .modes
+        .iter()
+        .map(|(id, m)| (*id, m.label()))
+        .collect();
+    for (id, label) in modes {
+        match table.get(&(id, label)) {
+            Some(comp) => {
+                plan.compensation.insert(id, comp.clone());
+            }
+            None => {
+                plan.compensation.remove(&id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist_uniform(bits: u32) -> LayerHist {
+        let mut h = LayerHist::new(7, bits);
+        let qmax = quant::qmax_for(bits);
+        for c in h.counts.iter_mut() {
+            *c = 1;
+        }
+        h.total = (2 * qmax + 1) as u64;
+        h
+    }
+
+    #[test]
+    fn exact_modes_have_no_error_fn() {
+        assert!(mode_error_fn(&LayerMode::Fp32).unwrap().is_none());
+        assert!(mode_error_fn(&LayerMode::lut("exact8")).unwrap().is_none());
+        assert!(mode_error_fn(&LayerMode::ApproxFunc { bits: 12, trunc_k: 0 })
+            .unwrap()
+            .is_none());
+        assert!(mode_error_fn(&LayerMode::lut("mitchell8")).unwrap().is_some());
+        assert!(mode_error_fn(&LayerMode::ApproxFunc { bits: 12, trunc_k: 4 })
+            .unwrap()
+            .is_some());
+    }
+
+    #[test]
+    fn rowsum_matches_bruteforce_mean() {
+        let (err, bits) = mode_error_fn(&LayerMode::lut("drum8_4")).unwrap().unwrap();
+        let hist = hist_uniform(bits);
+        let row = rowsum_err(&hist, err.as_ref());
+        let qmax = quant::qmax_for(bits) as i64;
+        for &b in &[-qmax, -3, 0, 7, qmax] {
+            let mut sum = 0.0f64;
+            for a in -qmax..=qmax {
+                sum += err(a, b) as f64;
+            }
+            let mean = sum / (2 * qmax + 1) as f64;
+            let got = row[(b + qmax) as usize];
+            assert!(
+                (got - mean).abs() < 1e-9,
+                "rowsum[{b}] = {got}, brute force {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn needed_bits_dedups_and_skips_fp32() {
+        let modes = [
+            LayerMode::Fp32,
+            LayerMode::lut("mitchell8"),
+            LayerMode::lut("drum8_6"),
+            LayerMode::ApproxFunc { bits: 12, trunc_k: 4 },
+        ];
+        assert_eq!(needed_bits(modes.iter()).unwrap(), vec![8, 12]);
+    }
+}

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::compensate;
 use crate::coordinator::ops::{self, InferVariant, ModelState, TrainVariant};
 use crate::data::{self, Sizes, Split};
 use crate::emulator::{Executor, ScratchArena, Style, Value};
@@ -574,6 +575,11 @@ pub struct SensitivityConfig {
     /// with a short `trainer::fit` run before picking the winner (MCTS
     /// only; 0 = off).
     pub retrain_leaves: usize,
+    /// Score compensated candidates: fit a [`compensate::CompTable`] over
+    /// every (layer, candidate) pair up front and stamp each evaluated
+    /// plan with its calibrated correction terms, so greedy and MCTS see
+    /// the accuracy the compensated kernels actually deliver.
+    pub compensate: bool,
     pub verbose: bool,
 }
 
@@ -598,6 +604,7 @@ impl Default for SensitivityConfig {
             search: SearchMethod::Greedy,
             search_evals: 0,
             retrain_leaves: 0,
+            compensate: false,
             verbose: false,
         }
     }
@@ -648,6 +655,12 @@ pub struct SweepCtx {
     /// sweep divides this budget by the pool size per job so concurrent
     /// workers never oversubscribe the cores.
     pub gemm_threads: usize,
+    /// When set, every evaluated plan is stamped with these calibrated
+    /// compensation terms for its current mode assignment
+    /// ([`compensate::apply_table`]) before execution — the single hook
+    /// that makes the sweep, greedy and MCTS all score *compensated*
+    /// candidates without any change to the search code.
+    pub comp: Option<compensate::CompTable>,
 }
 
 thread_local! {
@@ -681,6 +694,10 @@ impl SweepCtx {
         params: Vec<Tensor>,
         threads: usize,
     ) -> Result<f64> {
+        let mut plan = plan;
+        if let Some(table) = &self.comp {
+            compensate::apply_table(table, &mut plan);
+        }
         let arena = SWEEP_ARENA.with(|slot| slot.borrow_mut().take()).unwrap_or_default();
         let exec = Executor::with_arena(
             &self.model,
@@ -868,6 +885,36 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
     let batches: Vec<EvalBatch> = (0..nb)
         .map(|bi| EvalBatch::from_split(&model, &ds.eval, bi, bs))
         .collect();
+    // Optional: fit the compensation table over every (layer, candidate)
+    // pair up front, so all downstream plan evaluations score compensated
+    // candidates (and the saved plan carries its terms).
+    let comp = if cfg.compensate {
+        let mut modes: Vec<LayerMode> =
+            cfg.acus.iter().map(|a| LayerMode::lut(a.as_str())).collect();
+        modes.push(LayerMode::lut(cfg.reference.as_str()));
+        let bits = compensate::needed_bits(modes.iter())?;
+        let calib = compensate::collect(
+            &model,
+            &params,
+            &ds.train,
+            bs,
+            2,
+            &scales,
+            &bits,
+            cfg.threads.max(1),
+        )?;
+        let layer_ids: Vec<usize> = model
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_quantizable())
+            .map(|n| n.id)
+            .collect();
+        Some(compensate::comp_table(
+            &model, &params, &scales, &calib, &layer_ids, &modes,
+        )?)
+    } else {
+        None
+    };
     // Inline evaluations (base accuracy, greedy search) get the full GEMM
     // thread budget; sweep_pairs divides it per pooled job itself.
     let ctx = Arc::new(SweepCtx {
@@ -878,6 +925,7 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
         batches,
         bs,
         gemm_threads: cfg.threads.max(1),
+        comp,
     });
     let layers = ctx.layers();
 
@@ -937,7 +985,7 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
         cfg.search_evals
     };
     let mut mcts_outcome = None;
-    let (plan, mixed_acc) = match cfg.search {
+    let (mut plan, mixed_acc) = match cfg.search {
         SearchMethod::Greedy => (greedy_plan.clone(), greedy_acc),
         SearchMethod::Mcts => {
             let space = mcts::SearchSpace::build(
@@ -981,12 +1029,26 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
             picked
         }
     };
-    let provenance = match cfg.search {
-        SearchMethod::Greedy => "greedy".to_string(),
-        SearchMethod::Mcts => format!("mcts:{}/{}", cfg.seed, budget_evals),
+    // The searched plan itself carries the terms it was scored with (the
+    // evaluations stamp internal clones; the artifact must match them).
+    if let Some(table) = &ctx.comp {
+        compensate::apply_table(table, &mut plan);
+    }
+    let plan = plan;
+    let provenance = {
+        let base = match cfg.search {
+            SearchMethod::Greedy => "greedy".to_string(),
+            SearchMethod::Mcts => format!("mcts:{}/{}", cfg.seed, budget_evals),
+        };
+        if cfg.compensate {
+            format!("{base}+comp")
+        } else {
+            base
+        }
     };
 
     let macs = search::layer_macs(&ctx.model);
+    let outs = search::layer_outputs(&ctx.model);
     let plan_power = |p: &ExecutionPlan| -> f64 { search::plan_cost_macs(&macs, p) };
 
     // --- report + plan artifact ------------------------------------------
@@ -1041,6 +1103,15 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
             100.0 * m.savings,
         ));
     }
+    if cfg.compensate {
+        out.push_str(&format!(
+            "Compensation: {} layer(s) carry calibrated terms, \
+             comp-aware power {:.3}x (adds at {:.2}x MAC)\n",
+            plan.compensation.len(),
+            search::plan_cost_comp(&macs, &outs, &plan),
+            search::COMP_ADD_POWER,
+        ));
+    }
     out.push_str(&format!(
         "\nSelected plan ({}):\n{}",
         provenance,
@@ -1065,6 +1136,7 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
             threads: ctx.gemm_threads,
             max_batches: None,
             log_every: if cfg.verbose { 10 } else { 0 },
+            approx_backward: None,
         };
         let fit = trainer::fit(
             &ctx.model,
@@ -1137,6 +1209,17 @@ pub fn layer_sensitivity(rt: &mut Runtime, cfg: &SensitivityConfig) -> Result<Se
         doc.insert("mcts".to_string(), Json::Obj(j));
     }
     doc.insert("accuracy".to_string(), Json::Num(mixed_acc));
+    doc.insert("compensate".to_string(), Json::Bool(cfg.compensate));
+    if cfg.compensate {
+        doc.insert(
+            "compensated_layers".to_string(),
+            Json::Num(plan.compensation.len() as f64),
+        );
+        doc.insert(
+            "comp_power".to_string(),
+            Json::Num(search::plan_cost_comp(&macs, &outs, &plan)),
+        );
+    }
     doc.insert("provenance".to_string(), Json::Str(provenance));
     doc.insert("plan_path".to_string(), Json::Str(plan_path.display().to_string()));
 
@@ -1165,6 +1248,9 @@ pub struct RetrainConfig {
     pub eval_batches: usize,
     /// Snapshot the retrained weights to `trained/<model>_qat.bin`.
     pub save: bool,
+    /// Approximate-gradient training: ACU registry name to route the
+    /// backward transpose GEMMs through (`--approx-backward`).
+    pub approx_backward: Option<String>,
     pub verbose: bool,
 }
 
@@ -1204,6 +1290,11 @@ pub fn retrain_plan(manifest: &Manifest, plan: &ExecutionPlan, cfg: &RetrainConf
     let before = trainer::evaluate(
         &model, params.clone(), plan, &scales, &luts, &ds.eval, bs, eval_batches, threads,
     )?;
+    let approx = cfg
+        .approx_backward
+        .as_deref()
+        .map(trainer::ApproxGrad::from_acu)
+        .transpose()?;
     let tcfg = trainer::TrainConfig {
         epochs: cfg.epochs,
         lr: cfg.lr,
@@ -1213,6 +1304,7 @@ pub fn retrain_plan(manifest: &Manifest, plan: &ExecutionPlan, cfg: &RetrainConf
         threads,
         max_batches: None,
         log_every: if cfg.verbose { 10 } else { 0 },
+        approx_backward: approx,
     };
     let fit = trainer::fit(&model, params, plan, &scales, &luts, &ds.train, &tcfg)?;
     let after = trainer::evaluate(
@@ -1245,6 +1337,9 @@ pub fn retrain_plan(manifest: &Manifest, plan: &ExecutionPlan, cfg: &RetrainConf
         epoch_means.join(", "),
         fmt::dur(fit.wall),
     );
+    if let Some(ag) = approx {
+        out.push_str(&format!("approx backward ACU: {} ({}-bit)\n", ag.name, ag.bits));
+    }
     if cfg.save {
         let path = weights::retrained_path(&manifest.root, &model);
         weights::save_params(&fit.params, &path)?;

@@ -402,6 +402,7 @@ pub fn train_emulator(
         threads,
         max_batches: None,
         log_every: 0,
+        approx_backward: None,
     };
     let fit = crate::trainer::fit(&st.model, params, plan, &scales, luts, &ds.train, &cfg)?;
     st.set_params_tensors(&fit.params)?;

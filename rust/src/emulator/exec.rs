@@ -1124,6 +1124,32 @@ fn prepare_nodes(
             .get(&node.id)
             .ok_or_else(|| anyhow!("plan missing node {}", node.id))?
             .clone();
+        // Calibrated error compensation folds into the bias vector here,
+        // at prepare time: the GEMM epilogue already adds bias per output
+        // channel, so a compensated plan runs the identical hot path on
+        // every SIMD tier at zero extra cost (and an absent/zero block is
+        // bit-identical to no compensation at all).
+        let comp = plan.compensation.get(&node.id);
+        let fold_comp = |bias: Vec<f32>| -> Result<Vec<f32>> {
+            let Some(comp) = comp else { return Ok(bias) };
+            anyhow::ensure!(
+                !matches!(mode, LayerMode::Fp32),
+                "node {} carries compensation but runs fp32",
+                node.id
+            );
+            anyhow::ensure!(
+                comp.channels.is_empty() || comp.channels.len() == bias.len(),
+                "node {} compensation has {} channel terms, layer has {} output channels",
+                node.id,
+                comp.channels.len(),
+                bias.len()
+            );
+            let mut bias = bias;
+            for (n, b) in bias.iter_mut().enumerate() {
+                *b += comp.term(n);
+            }
+            Ok(bias)
+        };
         let prep = match &node.op {
             Op::Conv2d {
                 kh,
@@ -1147,14 +1173,26 @@ fn prepare_nodes(
                         flats[g].extend_from_slice(&w.data[base..base + cout_g]);
                     }
                 }
-                build_prepared(&mode, luts, flats, kf, cout_g, b.data.clone())?
+                build_prepared(&mode, luts, flats, kf, cout_g, fold_comp(b.data.clone())?)?
             }
             Op::Linear { din, dout, .. } => {
                 let w = &params[node.params[0]];
                 let b = &params[node.params[1]];
-                build_prepared(&mode, luts, vec![w.data.clone()], *din, *dout, b.data.clone())?
+                build_prepared(
+                    &mode,
+                    luts,
+                    vec![w.data.clone()],
+                    *din,
+                    *dout,
+                    fold_comp(b.data.clone())?,
+                )?
             }
             Op::Lstm { din, hidden, .. } => {
+                anyhow::ensure!(
+                    comp.is_none(),
+                    "node {} (LSTM) does not support compensation",
+                    node.id
+                );
                 let wx = &params[node.params[0]];
                 let wh = &params[node.params[1]];
                 let b = &params[node.params[2]];

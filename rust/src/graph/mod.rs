@@ -395,15 +395,71 @@ impl LayerMode {
     }
 }
 
+/// Plan-JSON schema generation this build writes. Readers tolerate newer
+/// schemas: unknown per-layer keys are preserved, unknown top-level keys
+/// ignored. Bumped to 2 when the `compensation` block was added.
+pub const PLAN_SCHEMA: u32 = 2;
+
+/// Output-channel count of a quantizable node, for per-channel
+/// compensation sizing. `None` for LSTM (gate-structured outputs — the
+/// per-channel correction model does not apply).
+fn node_out_channels(node: &Node) -> Option<usize> {
+    match &node.op {
+        Op::Conv2d { cout, .. } => Some(*cout),
+        Op::Linear { dout, .. } => Some(*dout),
+        _ => None,
+    }
+}
+
+/// Calibrated additive error-correction terms for one approximated layer
+/// (Zervakis-style control-variate compensation): the executor folds
+/// `constant + channels[n]` into output channel `n`'s bias at prepare
+/// time, so a compensated plan costs nothing extra on the GEMM hot path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Compensation {
+    /// Constant correction added to every output channel.
+    pub constant: f32,
+    /// Per-output-channel residuals (empty = constant-only; otherwise one
+    /// entry per output channel, added on top of `constant`).
+    pub channels: Vec<f32>,
+}
+
+impl Compensation {
+    /// The effective correction for output channel `n`.
+    pub fn term(&self, n: usize) -> f32 {
+        self.constant + self.channels.get(n).copied().unwrap_or(0.0)
+    }
+
+    /// Is this a no-op correction (identical execution to no block at all)?
+    pub fn is_zero(&self) -> bool {
+        self.constant == 0.0 && self.channels.iter().all(|&c| c == 0.0)
+    }
+}
+
 /// Per-layer execution assignment produced by [`retransform`] (or loaded
 /// from a plan JSON) — the first-class mixed-precision artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecutionPlan {
     /// node id -> mode for every quantizable node.
     pub modes: BTreeMap<usize, LayerMode>,
+    /// node id -> calibrated error compensation (approximated layers only;
+    /// nodes without an entry run uncompensated).
+    pub compensation: BTreeMap<usize, Compensation>,
+    /// node id -> per-layer JSON keys this build does not understand,
+    /// preserved verbatim through a parse → serialize round-trip so newer
+    /// plans survive older tooling (forward compatibility).
+    pub extras: BTreeMap<usize, BTreeMap<String, Json>>,
 }
 
 impl ExecutionPlan {
+    /// A plan from bare mode assignments (no compensation, no extras).
+    pub fn from_modes(modes: BTreeMap<usize, LayerMode>) -> ExecutionPlan {
+        ExecutionPlan {
+            modes,
+            compensation: BTreeMap::new(),
+            extras: BTreeMap::new(),
+        }
+    }
     /// Distinct LUT ACU names this plan needs (for registry preloading).
     pub fn acus(&self) -> Vec<String> {
         let mut set = std::collections::BTreeSet::new();
@@ -463,11 +519,23 @@ impl ExecutionPlan {
                     entry.insert("trunc_k".to_string(), Json::Num(*trunc_k as f64));
                 }
             }
+            if let Some(comp) = self.compensation.get(&node.id) {
+                let mut c = BTreeMap::new();
+                c.insert("constant".to_string(), Json::Num(comp.constant as f64));
+                c.insert("channels".to_string(), Json::from_f32s(&comp.channels));
+                entry.insert("compensation".to_string(), Json::Obj(c));
+            }
+            if let Some(extra) = self.extras.get(&node.id) {
+                for (k, v) in extra {
+                    entry.entry(k.clone()).or_insert_with(|| v.clone());
+                }
+            }
             layers.push(Json::Obj(entry));
         }
         let mut doc = BTreeMap::new();
         doc.insert("model".to_string(), Json::Str(model.name.clone()));
         doc.insert("version".to_string(), Json::Num(1.0));
+        doc.insert("schema".to_string(), Json::Num(PLAN_SCHEMA as f64));
         if let Some(p) = provenance {
             if !p.trim().is_empty() {
                 doc.insert("provenance".to_string(), Json::Str(p.to_string()));
@@ -491,7 +559,10 @@ impl ExecutionPlan {
 
     /// Parse a plan JSON document against `model`, validating that every
     /// referenced node exists and is quantizable and that the plan covers
-    /// every quantizable node.
+    /// every quantizable node. Per-layer keys this build does not know are
+    /// preserved in [`extras`](Self::extras) (and re-emitted by
+    /// [`to_json_with`](Self::to_json_with)) rather than rejected, so plans
+    /// written by newer schemas still load.
     pub fn from_json(text: &str, model: &Model) -> Result<ExecutionPlan> {
         let j = Json::parse(text).context("parsing plan JSON")?;
         if let Some(m) = j.opt("model") {
@@ -501,6 +572,8 @@ impl ExecutionPlan {
             }
         }
         let mut modes = BTreeMap::new();
+        let mut compensation = BTreeMap::new();
+        let mut extras: BTreeMap<usize, BTreeMap<String, Json>> = BTreeMap::new();
         for entry in j.get("layers")?.arr()? {
             let id = entry.get("node")?.usize()?;
             let node = model
@@ -529,6 +602,53 @@ impl ExecutionPlan {
                 },
                 other => bail!("unknown plan mode {other:?} for node {id}"),
             };
+            if let Some(cj) = entry.opt("compensation") {
+                let comp = Compensation {
+                    constant: cj.get("constant")?.f64()? as f32,
+                    channels: match cj.opt("channels") {
+                        Some(ch) => ch.f32_vec()?,
+                        None => vec![],
+                    },
+                };
+                if matches!(mode, LayerMode::Fp32) {
+                    bail!("plan node {id} carries compensation but runs fp32");
+                }
+                let cout = node_out_channels(node);
+                match cout {
+                    None => bail!(
+                        "plan node {id} ({:?}) does not support compensation",
+                        node.op.layer_name().unwrap_or("<unnamed>")
+                    ),
+                    Some(cout) => {
+                        if !comp.channels.is_empty() && comp.channels.len() != cout {
+                            bail!(
+                                "plan node {id} compensation has {} channel terms, \
+                                 layer has {cout} output channels",
+                                comp.channels.len()
+                            );
+                        }
+                    }
+                }
+                compensation.insert(id, comp);
+            }
+            let known = [
+                "node",
+                "name",
+                "mode",
+                "acu",
+                "bits",
+                "trunc_k",
+                "compensation",
+            ];
+            let mut extra = BTreeMap::new();
+            for (k, v) in entry.obj()? {
+                if !known.contains(&k.as_str()) {
+                    extra.insert(k.clone(), v.clone());
+                }
+            }
+            if !extra.is_empty() {
+                extras.insert(id, extra);
+            }
             if modes.insert(id, mode).is_some() {
                 bail!("plan assigns node {id} twice");
             }
@@ -542,7 +662,11 @@ impl ExecutionPlan {
                 );
             }
         }
-        Ok(ExecutionPlan { modes })
+        Ok(ExecutionPlan {
+            modes,
+            compensation,
+            extras,
+        })
     }
 
     /// One line per layer (reports / `adapt plan`).
@@ -550,8 +674,15 @@ impl ExecutionPlan {
         let mut out = String::new();
         for node in &model.nodes {
             if let Some(mode) = self.modes.get(&node.id) {
+                let comp = match self.compensation.get(&node.id) {
+                    Some(c) if !c.channels.is_empty() => {
+                        format!("  [comp: const + {}ch]", c.channels.len())
+                    }
+                    Some(_) => "  [comp: const]".to_string(),
+                    None => String::new(),
+                };
                 out.push_str(&format!(
-                    "  node {:>3}  {:<24} {}\n",
+                    "  node {:>3}  {:<24} {}{comp}\n",
                     node.id,
                     node.op.layer_name().unwrap_or("<unnamed>"),
                     mode.label()
@@ -646,7 +777,7 @@ pub fn retransform(model: &Model, policy: &Policy) -> ExecutionPlan {
             .unwrap_or(LayerMode::Fp32);
         modes.insert(node.id, mode);
     }
-    ExecutionPlan { modes }
+    ExecutionPlan::from_modes(modes)
 }
 
 #[cfg(test)]
@@ -799,6 +930,59 @@ mod tests {
         let text = plan.to_json(&m);
         let re = ExecutionPlan::from_json(&text, &m).unwrap();
         assert_eq!(re, plan);
+    }
+
+    #[test]
+    fn plan_json_compensation_and_extras_roundtrip() {
+        let m = tiny_model();
+        let mut plan = retransform(&m, &Policy::all(LayerMode::lut("mitchell8")));
+        plan.compensation.insert(
+            1,
+            Compensation {
+                constant: 0.125,
+                channels: vec![0.5, -0.25, 0.0, 1.0e-3],
+            },
+        );
+        let text = plan.to_json(&m);
+        assert!(text.contains("\"schema\":2"), "missing schema field: {text}");
+        let re = ExecutionPlan::from_json(&text, &m).unwrap();
+        assert_eq!(re, plan);
+        // Byte-level stability: serialize(parse(s)) == s.
+        assert_eq!(re.to_json(&m), text);
+
+        // Unknown per-layer keys from a future schema survive the
+        // parse -> serialize round trip instead of erroring.
+        let future = r#"{"layers": [
+            {"node": 1, "mode": "lut", "acu": "exact8", "robustness": {"pgd": 0.5}},
+            {"node": 2, "mode": "fp32"}]}"#;
+        let p = ExecutionPlan::from_json(future, &m).unwrap();
+        let text2 = p.to_json(&m);
+        assert!(text2.contains("\"robustness\""), "extra key dropped: {text2}");
+        assert_eq!(ExecutionPlan::from_json(&text2, &m).unwrap(), p);
+    }
+
+    #[test]
+    fn plan_json_compensation_validation() {
+        let m = tiny_model();
+        // Compensation on an fp32 layer is rejected.
+        let bad = r#"{"layers": [
+            {"node": 1, "mode": "fp32", "compensation": {"constant": 0.1}},
+            {"node": 2, "mode": "fp32"}]}"#;
+        assert!(ExecutionPlan::from_json(bad, &m).is_err());
+        // Channel-count mismatch is rejected (c1 has cout = 4).
+        let bad = r#"{"layers": [
+            {"node": 1, "mode": "lut", "acu": "exact8",
+             "compensation": {"constant": 0.0, "channels": [1.0, 2.0]}},
+            {"node": 2, "mode": "fp32"}]}"#;
+        assert!(ExecutionPlan::from_json(bad, &m).is_err());
+        // Constant-only compensation (no channels key) parses fine.
+        let ok = r#"{"layers": [
+            {"node": 1, "mode": "lut", "acu": "exact8",
+             "compensation": {"constant": 0.25}},
+            {"node": 2, "mode": "fp32"}]}"#;
+        let p = ExecutionPlan::from_json(ok, &m).unwrap();
+        assert_eq!(p.compensation[&1].constant, 0.25);
+        assert!(p.compensation[&1].channels.is_empty());
     }
 
     #[test]

@@ -65,6 +65,14 @@
 //!   ([`emulator::Executor::forward_taped`]), SGD-with-momentum, and the
 //!   plan-aware [`trainer::fit`] loop — artifact-free, heterogeneous
 //!   mixed-ACU plans included (`adapt retrain`).
+//! * [`compensate`] — calibrated error compensation (Zervakis-style
+//!   control variates): per-ACU signed error models over each layer's
+//!   calibrated operand histogram fit constant + per-output-channel
+//!   additive corrections ([`compensate::compensation_for`]) that ride in
+//!   the plan JSON ([`graph::Compensation`]) and fold into the executor's
+//!   bias epilogue at prepare time — zero hot-path cost, and the knob that
+//!   makes the most aggressive ACUs usable (`adapt compensate`,
+//!   `adapt search --compensate`).
 //! * [`search`] — whole-plan search over the sensitivity sweep's scoring
 //!   core: the MAC-weighted plan cost model ([`search::plan_cost`]) and
 //!   the [`search::mcts`] Monte Carlo Tree Search planner (TransAxx-style
@@ -81,6 +89,7 @@
 //!   relaxed atomic (or an absent `Option`) so the GEMM hot path is
 //!   unaffected when observability is off.
 
+pub mod compensate;
 pub mod coordinator;
 pub mod data;
 pub mod emulator;

@@ -11,7 +11,7 @@
 //! adapt ablation [--model NAME]       ACU accuracy/power sweep
 //! adapt sensitivity --model NAME [--acus a,b] [--budget PTS] [--workers N]
 //!       [--search greedy|mcts] [--evals N] [--retrain-leaves N]
-//!       [--retrain-epochs N] [--json]
+//!       [--retrain-epochs N] [--compensate] [--json]
 //!       per-layer ACU sweep + mixed-precision plan search
 //!       (heterogeneous plans); the sweep runs on a persistent pool of
 //!       `--workers` threads with a byte-identical plan at any count;
@@ -20,9 +20,21 @@
 //!       --retrain-leaves N re-scores the top searched plans with a short
 //!       QAT run; --retrain-epochs QAT-retrains the found plan in the
 //!       same command; --json prints the machine-readable summary
-//!       (search method + seed + eval budget in the header) to stdout
+//!       (search method + seed + eval budget in the header) to stdout;
+//!       --compensate fits calibrated error-compensation terms for every
+//!       (layer, ACU) candidate and scores/search with them stamped on
+//! adapt compensate [--synthetic] [--model NAME] [--acu NAME | --spec S]
+//!       [--calib-batches N] [--eval-batches N] [--floor FRAC]
+//!       [--out plan.json] [--json]
+//!       fit per-output-channel error-compensation terms for a plan
+//!       (rust/src/compensate) and emit the compensated plan JSON;
+//!       --synthetic runs artifact-free on the bundled tiny model and
+//!       asserts compensation recovers >= --floor (default 0.5) of the
+//!       accuracy the raw approximate plan lost vs the exact8 reference,
+//!       at identical MAC-weighted power (the CI smoke)
 //! adapt search [--synthetic] [--budget N] [--seed S] [--max-drop PTS]
-//!       [--floor PCT] [--retrain-leaves N] [--out plan.json] [--json]
+//!       [--floor PCT] [--retrain-leaves N] [--compensate]
+//!       [--out plan.json] [--json]
 //!       MCTS mixed-ACU plan discovery (TransAxx-style). --synthetic
 //!       searches the bundled tiny model artifact-free (the CI smoke):
 //!       sweep -> greedy incumbent -> MCTS under a --budget of fresh
@@ -30,14 +42,20 @@
 //!       and meets the accuracy floor (--floor PCT absolute, or
 //!       base - --max-drop points). Without --synthetic, runs the full
 //!       artifact pipeline (`adapt sensitivity --search mcts`). Plans
-//!       carry `provenance: "mcts:<seed>/<budget>"`, which the serving
-//!       PlanStore records as the version source on upload.
+//!       carry `provenance: "mcts:<seed>/<budget>"` (`+comp` when
+//!       compensated), which the serving PlanStore records as the version
+//!       source on upload. --compensate searches with the calibrated
+//!       correction table stamped on every candidate, then re-runs the
+//!       pipeline uncompensated and asserts the compensated winner is
+//!       strictly cheaper under the comp-aware cost model.
 //! adapt retrain --model NAME (--plan-file F | --spec S) [--epochs N]
-//!       [--lr LR] [--seed S] [--save]
+//!       [--lr LR] [--seed S] [--save] [--approx-backward ACU]
 //!       emulator-native QAT retraining of any per-layer plan —
 //!       artifact-free (no PJRT), deterministic at any ADAPT_THREADS;
 //!       `--synthetic [--check-improved]` runs the bundled tiny-model
-//!       demo end to end (the CI smoke)
+//!       demo end to end (the CI smoke); --approx-backward NAME (or env
+//!       ADAPT_APPROX_BACKWARD) routes the backward pass's transpose
+//!       GEMMs through the named approximate multiplier
 //! adapt plan --model NAME [--spec "default=ACU,layer=ACU,head=fp32"]
 //!       [--out FILE]                  build/inspect a per-layer plan JSON
 //! adapt calibrate --model NAME [--calibrator max|percentile|mse|entropy]
@@ -253,6 +271,7 @@ fn run() -> Result<()> {
                 search: adapt::search::SearchMethod::parse(args.get_or("search", "greedy"))?,
                 search_evals: args.get_usize("evals", defaults.search_evals)?,
                 retrain_leaves: args.get_usize("retrain-leaves", defaults.retrain_leaves)?,
+                compensate: args.flag("compensate"),
                 verbose: args.flag("verbose"),
             };
             let json_mode = args.flag("json");
@@ -277,12 +296,21 @@ fn run() -> Result<()> {
             let threads =
                 args.get_usize("threads", adapt::util::threadpool::default_threads())?;
             let seed = args.get_usize("seed", 0x5EED)? as u64;
+            // --approx-backward NAME routes the QAT backward pass's
+            // transpose GEMMs through the named ACU (paper §"approximate-
+            // aware retraining"); also settable via ADAPT_APPROX_BACKWARD.
+            let approx = args
+                .get("approx-backward")
+                .map(adapt::trainer::ApproxGrad::from_acu)
+                .transpose()
+                .context("bad --approx-backward")?;
             if args.flag("synthetic") {
                 // Bundled tiny-model demo: pre-train -> calibrate ->
                 // damage with a mixed-ACU plan -> QAT-retrain. Fully
                 // in-memory (no artifacts dir at all) — the CI smoke.
                 let lr = args.get_f32("lr", 0.004)?;
-                let demo = adapt::trainer::synth::demo_retrain(epochs, lr, seed, threads)?;
+                let demo =
+                    adapt::trainer::synth::demo_retrain_with(epochs, lr, seed, threads, approx)?;
                 println!("{}", demo.report);
                 if args.flag("check-improved") {
                     let (first, last) = demo.fit.improvement();
@@ -326,6 +354,7 @@ fn run() -> Result<()> {
                     threads,
                     eval_batches: args.get_usize("eval-batches", 4)?,
                     save: args.flag("save"),
+                    approx_backward: args.get("approx-backward").map(|s| s.to_string()),
                     verbose: args.flag("verbose"),
                 };
                 println!("Emulator-native QAT retraining (artifact-free)\n");
@@ -397,6 +426,7 @@ fn run() -> Result<()> {
                 println!("  scale[{i:>2}] = {s:.6}  (calib_max = {:.4})", s * 127.0);
             }
         }
+        "compensate" => compensate_cmd(&args)?,
         "search" => search_cmd(&args)?,
         "serve" => serve(&args)?,
         "client" => client_cmd(&args)?,
@@ -411,12 +441,19 @@ fn run() -> Result<()> {
             println!("  specs | features | multipliers | table2 | table4 | ablation");
             println!("  sensitivity --model M [--acus a,b] [--budget PTS] [--workers N]");
             println!("              [--search greedy|mcts] [--evals N] [--retrain-leaves N]");
-            println!("              [--retrain-epochs N] [--json]");
+            println!("              [--retrain-epochs N] [--compensate] [--json]");
             println!("  search [--synthetic] [--budget N] [--seed S] [--max-drop PTS] [--floor PCT]");
-            println!("         [--retrain-leaves N] [--out plan.json] [--json]");
-            println!("         (MCTS mixed-ACU plan discovery; --synthetic = artifact-free CI smoke)");
+            println!("         [--retrain-leaves N] [--compensate] [--out plan.json] [--json]");
+            println!("         (MCTS mixed-ACU plan discovery; --synthetic = artifact-free CI smoke;");
+            println!("          --compensate = search with calibrated error-compensation stamped)");
+            println!("  compensate [--synthetic] [--model M] [--acu NAME | --spec S] [--floor FRAC]");
+            println!("             [--out plan.json] [--json]");
+            println!("             (fit per-channel error-compensation terms, emit compensated plan;");
+            println!("              --synthetic asserts >= FRAC of the accuracy drop is recovered)");
             println!("  retrain --model M (--plan-file F | --spec S) [--epochs N] [--lr LR] [--save]");
-            println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke)");
+            println!("          [--approx-backward ACU]");
+            println!("          (emulator QAT, artifact-free; --synthetic = bundled tiny-model smoke;");
+            println!("           --approx-backward / ADAPT_APPROX_BACKWARD = approximate gradient GEMMs)");
             println!("  plan --model M [--spec S] | calibrate --model M");
             println!("  serve [--model M]... [--workers N] [--queue-depth D] [--listen ADDR] [--synthetic]");
             println!("        [--event-loops N] [--dispatch-threads N]");
@@ -1163,6 +1200,184 @@ fn profile_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `adapt compensate`: fit the per-ACU error-compensation terms for a
+/// plan and emit the compensated plan JSON. `--synthetic` runs the whole
+/// flow artifact-free on the bundled tiny model (the CI smoke): pre-train,
+/// calibrate activation histograms, stamp an aggressive single-ACU plan
+/// with corrections, then assert the compensated plan recovers at least
+/// `--floor` (default 0.5) of the accuracy the uncompensated plan lost
+/// against the exact8 reference — at identical MAC-weighted power.
+fn compensate_cmd(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", adapt::util::threadpool::default_threads())?;
+    let seed = args.get_usize("seed", 0x5EED)? as u64;
+    let acu = args.get_or("acu", "mitchell8").to_string();
+    let calib_batches = args.get_usize("calib-batches", 2)?;
+    let eval_batches = args.get_usize("eval-batches", 8)?;
+    // Fraction of the accuracy drop compensation must win back.
+    let floor = args.get_f64("floor", 0.5)?;
+    let json_mode = args.flag("json");
+    let say = |line: String| {
+        if json_mode {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    let t0 = std::time::Instant::now();
+
+    // Assemble (model, params, scales, dataset, luts, batch) from either
+    // the bundled synthetic tiny model or the artifact manifest.
+    let (model, params, scales, ds, luts, bs);
+    if args.flag("synthetic") {
+        let setup = adapt::trainer::synth::tiny_pretrained(seed, threads)?;
+        model = setup.model;
+        params = setup.params;
+        scales = setup.scales;
+        ds = setup.ds;
+        luts = LutRegistry::in_memory();
+        bs = 32usize;
+    } else {
+        let mut rt = Runtime::open(&artifacts_from(args))?;
+        let name = args.get_or("model", "small_vgg").to_string();
+        let sizes = sizes_from(args)?;
+        let mut st = experiments::ensure_pretrained(&mut rt, &name, &sizes, 1.0, true)?;
+        ds = adapt::data::load(&st.model.dataset.clone(), &sizes);
+        scales = ops::calibrate(
+            &mut rt,
+            &mut st,
+            &ds,
+            calib_batches,
+            CalibratorKind::Percentile,
+            0.999,
+        )?;
+        model = st.model.clone();
+        params = st.params_tensors()?;
+        luts = LutRegistry::from_manifest(&rt.manifest);
+        bs = rt.manifest.batch;
+    }
+
+    let plan = match args.get("spec") {
+        Some(spec) => {
+            let policy = Policy::parse_spec(spec)?;
+            let unmatched = policy.unmatched_overrides(&model);
+            if !unmatched.is_empty() {
+                bail!("--spec overrides match no layer of {}: {unmatched:?}", model.name);
+            }
+            retransform(&model, &policy)
+        }
+        None => retransform(&model, &Policy::all(LayerMode::lut(acu.as_str()))),
+    };
+    luts.preload(&plan.acus())?;
+
+    // Fit: activation histograms at every bitwidth the plan quantizes at,
+    // then the per-output-channel correction for each approximated layer.
+    let bits = adapt::compensate::needed_bits(plan.modes.values())?;
+    let calib = adapt::compensate::collect(
+        &model,
+        &params,
+        &ds.train,
+        bs,
+        calib_batches,
+        &scales,
+        &bits,
+        threads.max(1),
+    )?;
+    let mut comp_plan = plan.clone();
+    let applied =
+        adapt::compensate::compensate_plan(&model, &params, &scales, &calib, &mut comp_plan)?;
+    say(format!(
+        "compensate: fitted {applied} layer correction(s) for plan [{}] \
+         ({} histogram bitwidth(s))",
+        plan.describe(&model).trim_end().replace('\n', "; "),
+        bits.len(),
+    ));
+
+    // Score the exact reference, the raw approximate plan, and the
+    // compensated twin on the same eval batches.
+    let ref_plan = retransform(&model, &Policy::all(LayerMode::lut("exact8")));
+    let eval = |p: &ExecutionPlan| {
+        adapt::trainer::evaluate(
+            &model,
+            params.clone(),
+            p,
+            &scales,
+            &luts,
+            &ds.eval,
+            bs,
+            eval_batches,
+            threads.max(1),
+        )
+    };
+    let base = eval(&ref_plan)?;
+    let uncomp = eval(&plan)?;
+    let comp = eval(&comp_plan)?;
+    let dropped = (base - uncomp).max(0.0);
+    let recovered = if dropped <= 1e-9 { 1.0 } else { (comp - uncomp) / dropped };
+
+    // The correction rides the bias epilogue: the MAC-weighted power of
+    // the compensated twin is identical by construction; the comp-aware
+    // model charges one add per output element on top.
+    let macs = adapt::search::layer_macs(&model);
+    let outs = adapt::search::layer_outputs(&model);
+    let cost_plain = adapt::search::plan_cost_macs(&macs, &plan);
+    let cost_comp_macs = adapt::search::plan_cost_macs(&macs, &comp_plan);
+    anyhow::ensure!(
+        cost_plain == cost_comp_macs,
+        "compensation changed the MAC-weighted power: {cost_plain} vs {cost_comp_macs}"
+    );
+    let cost_comp = adapt::search::plan_cost_comp(&macs, &outs, &comp_plan);
+
+    say(format!(
+        "exact8 reference {} | uncompensated {} | compensated {} — recovered {:.1}% \
+         of the drop (floor {:.1}%)",
+        fmt::pct(base),
+        fmt::pct(uncomp),
+        fmt::pct(comp),
+        100.0 * recovered,
+        100.0 * floor,
+    ));
+    say(format!(
+        "power: {cost_plain:.4}x MAC-weighted (unchanged), {cost_comp:.4}x with \
+         compensation adds charged",
+    ));
+    anyhow::ensure!(
+        recovered >= floor,
+        "compensation recovered only {:.1}% of the {:.2}-point drop (floor {:.1}%)",
+        100.0 * recovered,
+        100.0 * dropped,
+        100.0 * floor,
+    );
+
+    let provenance = format!("compensate:{acu}");
+    if let Some(path) = args.get("out") {
+        let plan_json = comp_plan.to_json_with(&model, Some(&provenance));
+        let reloaded = ExecutionPlan::from_json(&plan_json, &model)?;
+        anyhow::ensure!(reloaded == comp_plan, "compensated plan JSON did not round-trip");
+        std::fs::write(path, &plan_json).with_context(|| format!("writing {path}"))?;
+        say(format!("compensated plan written to {path} (provenance {provenance})"));
+    }
+    let wall = t0.elapsed();
+    say(format!("compensate done in {}", fmt::dur(wall)));
+
+    if json_mode {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("model".to_string(), Json::Str(model.name.clone()));
+        doc.insert("acu".to_string(), Json::Str(acu));
+        doc.insert("compensated_layers".to_string(), Json::Num(applied as f64));
+        doc.insert("base_accuracy".to_string(), Json::Num(base));
+        doc.insert("uncompensated_accuracy".to_string(), Json::Num(uncomp));
+        doc.insert("compensated_accuracy".to_string(), Json::Num(comp));
+        doc.insert("recovered_frac".to_string(), Json::Num(recovered));
+        doc.insert("floor".to_string(), Json::Num(floor));
+        doc.insert("power".to_string(), Json::Num(cost_plain));
+        doc.insert("comp_power".to_string(), Json::Num(cost_comp));
+        doc.insert("provenance".to_string(), Json::Str(provenance));
+        doc.insert("wall_s".to_string(), Json::Num(wall.as_secs_f64()));
+        println!("{}", Json::Obj(doc).to_string());
+    }
+    Ok(())
+}
+
 /// `adapt search`: MCTS mixed-ACU plan discovery. `--synthetic` runs the
 /// whole pipeline artifact-free on the bundled tiny model — calibrate,
 /// sweep, greedy incumbent, MCTS under a fresh-evaluation budget — then
@@ -1179,14 +1394,21 @@ fn search_cmd(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", adapt::util::threadpool::default_threads())?;
     let threads = args.get_usize("threads", adapt::util::threadpool::default_threads())?;
     let reference = args.get_or("reference", "exact8").to_string();
+    let compensate_on = args.flag("compensate");
     let acus: Vec<String> = {
         let list = args.get_list("acus");
         if list.is_empty() {
-            vec![
+            let mut v = vec![
                 "mul8s_1l2h_like".to_string(),
                 "drum8_6".to_string(),
                 "trunc_out8_4".to_string(),
-            ]
+            ];
+            if compensate_on {
+                // The cheapest, highest-error ACU in the registry —
+                // exactly the candidate calibrated compensation unlocks.
+                v.push("mitchell8".to_string());
+            }
+            v
         } else {
             list
         }
@@ -1219,6 +1441,7 @@ fn search_cmd(args: &Args) -> Result<()> {
             search: adapt::search::SearchMethod::Mcts,
             search_evals: evals,
             retrain_leaves,
+            compensate: compensate_on,
             verbose: args.flag("verbose"),
         };
         say("MCTS mixed-ACU plan search\n".to_string());
@@ -1255,18 +1478,41 @@ fn search_cmd(args: &Args) -> Result<()> {
     )?;
     let bs = 32usize;
     let nb = args.get_usize("eval-batches", 2)?.max(1).min(ds.eval.n_batches(bs).max(1));
-    let batches: Vec<EvalBatch> = (0..nb)
-        .map(|bi| EvalBatch::from_split(&model, &ds.eval, bi, bs))
-        .collect();
-    let ctx = std::sync::Arc::new(SweepCtx {
-        model,
-        params,
-        scales,
-        luts: LutRegistry::in_memory(),
-        batches,
-        bs,
-        gemm_threads: threads.max(1),
-    });
+    // With --compensate, fit the (layer x candidate-ACU) correction table
+    // once up front; the sweep context stamps every evaluated plan with it.
+    let comp_table = if compensate_on {
+        let cand: Vec<LayerMode> = acus.iter().map(|a| LayerMode::lut(a.as_str())).collect();
+        let bits = adapt::compensate::needed_bits(cand.iter())?;
+        let calib = adapt::compensate::collect(
+            &model,
+            &params,
+            &ds.train,
+            bs,
+            2,
+            &scales,
+            &bits,
+            threads.max(1),
+        )?;
+        let ids: Vec<usize> = adapt::search::layer_macs(&model).keys().copied().collect();
+        Some(adapt::compensate::comp_table(&model, &params, &scales, &calib, &ids, &cand)?)
+    } else {
+        None
+    };
+    let mk_ctx = |comp: Option<adapt::compensate::CompTable>| {
+        std::sync::Arc::new(SweepCtx {
+            model: model.clone(),
+            params: params.clone(),
+            scales: scales.clone(),
+            luts: LutRegistry::in_memory(),
+            batches: (0..nb)
+                .map(|bi| EvalBatch::from_split(&model, &ds.eval, bi, bs))
+                .collect(),
+            bs,
+            gemm_threads: threads.max(1),
+            comp,
+        })
+    };
+    let ctx = mk_ctx(comp_table.clone());
     let layers = ctx.layers();
     let ref_plan = retransform(&ctx.model, &Policy::all(LayerMode::lut(reference.as_str())));
     let base_acc = ctx.eval_plan(ref_plan.clone())?;
@@ -1323,6 +1569,12 @@ fn search_cmd(args: &Args) -> Result<()> {
     };
     let out = mcts::search(&ctx, space, &mcfg, Some((&gplan, gacc)), pool.as_ref(), rc)?;
     let wall = t0.elapsed();
+    // The search scores plans with compensation stamped on the fly; the
+    // emitted artifact must carry those terms explicitly.
+    let mut best_plan = out.plan.clone();
+    if let Some(table) = &comp_table {
+        adapt::compensate::apply_table(table, &mut best_plan);
+    }
 
     say(format!(
         "greedy:  accuracy {} ({} evals, savings {:.1}%)",
@@ -1345,7 +1597,7 @@ fn search_cmd(args: &Args) -> Result<()> {
             String::new()
         },
     ));
-    say(format!("selected plan:\n{}", out.plan.describe(&ctx.model)));
+    say(format!("selected plan:\n{}", best_plan.describe(&ctx.model)));
 
     // Hard guarantees the smoke asserts: the incumbent warm-start means
     // MCTS can never end up below greedy, and the winner must clear the
@@ -1364,12 +1616,17 @@ fn search_cmd(args: &Args) -> Result<()> {
     );
     anyhow::ensure!(out.evals <= evals, "spent {} evals over the budget {evals}", out.evals);
 
-    let provenance = format!("mcts:{seed}/{evals}");
-    let plan_json = out.plan.to_json_with(&ctx.model, Some(&provenance));
+    let provenance = if compensate_on {
+        format!("mcts:{seed}/{evals}+comp")
+    } else {
+        format!("mcts:{seed}/{evals}")
+    };
+    let plan_json = best_plan.to_json_with(&ctx.model, Some(&provenance));
     // Round-trip check: the saved artifact must reload into the very same
-    // plan and score identically on the emulator.
+    // plan (compensation terms included) and score identically on the
+    // emulator.
     let reloaded = ExecutionPlan::from_json(&plan_json, &ctx.model)?;
-    anyhow::ensure!(reloaded == out.plan, "plan JSON did not round-trip");
+    anyhow::ensure!(reloaded == best_plan, "plan JSON did not round-trip");
     let re_acc = ctx.eval_plan(reloaded)?;
     anyhow::ensure!(
         re_acc == out.accuracy || out.retrained > 0,
@@ -1380,6 +1637,49 @@ fn search_cmd(args: &Args) -> Result<()> {
     if let Some(path) = args.get("out") {
         std::fs::write(path, &plan_json).with_context(|| format!("writing {path}"))?;
         say(format!("plan written to {path} (provenance {provenance})"));
+    }
+
+    // --compensate acceptance check: re-run the identical pipeline without
+    // the correction table and demand the compensated search bought a
+    // strictly cheaper plan at the same floor — even after charging the
+    // compensation adds in the comp-aware cost model.
+    let mut comp_vs_plain: Option<(f64, f64)> = None;
+    if let Some(table) = &comp_table {
+        let macs = adapt::search::layer_macs(&ctx.model);
+        let outs = adapt::search::layer_outputs(&ctx.model);
+        let plain_ctx = mk_ctx(None);
+        let pairs0 = sweep_pairs(&plain_ctx, &ref_plan, &layers, &acus, pool.as_ref())?;
+        let worst0 = worst_drops(base_acc, &pairs0, layers.len(), acus.len());
+        let (gplan0, gacc0, _) = greedy_mixed(
+            &plain_ctx, &ref_plan, &reference, base_acc, &layers, &worst0, &acus, budget,
+        )?;
+        let space0 = mcts::SearchSpace::build(
+            &plain_ctx.model,
+            ref_plan.clone(),
+            &reference,
+            base_acc,
+            budget,
+            &layers,
+            &pairs0,
+            &acus,
+        )?;
+        let out0 =
+            mcts::search(&plain_ctx, space0, &mcfg, Some((&gplan0, gacc0)), pool.as_ref(), None)?;
+        let plain_cost = adapt::search::plan_cost_macs(&macs, &out0.plan);
+        let mut winner = out.plan.clone();
+        adapt::compensate::apply_table(table, &mut winner);
+        let comp_cost = adapt::search::plan_cost_comp(&macs, &outs, &winner);
+        say(format!(
+            "compensated search: comp-aware cost {comp_cost:.4} vs best uncompensated \
+             {plain_cost:.4} (accuracy {} vs {})",
+            fmt::pct(out.accuracy),
+            fmt::pct(out0.accuracy),
+        ));
+        anyhow::ensure!(
+            comp_cost < plain_cost,
+            "--compensate did not buy a cheaper plan: {comp_cost:.4} >= {plain_cost:.4}"
+        );
+        comp_vs_plain = Some((comp_cost, plain_cost));
     }
     say(format!("search done in {}", fmt::dur(wall)));
 
@@ -1415,6 +1715,15 @@ fn search_cmd(args: &Args) -> Result<()> {
         doc.insert("accuracy".to_string(), Json::Num(out.accuracy));
         doc.insert("mcts_not_worse".to_string(), Json::Bool(out.reward >= greedy_reward));
         doc.insert("reload_ok".to_string(), Json::Bool(true));
+        doc.insert("compensate".to_string(), Json::Bool(compensate_on));
+        if let Some((comp_cost, plain_cost)) = comp_vs_plain {
+            doc.insert("comp_cost".to_string(), Json::Num(comp_cost));
+            doc.insert("plain_cost".to_string(), Json::Num(plain_cost));
+            doc.insert(
+                "compensated_layers".to_string(),
+                Json::Num(best_plan.compensation.len() as f64),
+            );
+        }
         doc.insert("provenance".to_string(), Json::Str(provenance));
         doc.insert("wall_s".to_string(), Json::Num(wall.as_secs_f64()));
         println!("{}", Json::Obj(doc).to_string());

@@ -34,6 +34,15 @@ use crate::util::json::Json;
 /// Traces retained per engine.
 const RING_CAP: usize = 256;
 
+/// Current wall-clock time as µs since the UNIX epoch (0 if the clock
+/// is before it). The net layer stamps its span boundaries with this.
+pub fn unix_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
 /// One timed interval inside a request's lifetime. Times are µs offsets
 /// from the trace's start.
 #[derive(Clone, Debug)]
@@ -129,6 +138,17 @@ pub enum TraceOutcome {
     Error(&'static str),
 }
 
+/// One net-layer interval attached to a retained trace after the fact.
+/// Unlike [`Span`] offsets these are absolute unix-µs instants: the net
+/// layer's clock starts before the engine trace exists (parse precedes
+/// submit), so offsets from the trace start would clamp to zero.
+#[derive(Clone, Debug)]
+struct NetSpan {
+    name: &'static str,
+    start_unix_us: u64,
+    end_unix_us: u64,
+}
+
 /// One retained (finished) trace.
 struct FinishedTrace {
     id: u64,
@@ -136,6 +156,8 @@ struct FinishedTrace {
     outcome: &'static str,
     total_us: u64,
     spans: Vec<Span>,
+    /// Net-layer accept-to-flush intervals ([`TraceRecorder::annotate`]).
+    net: Vec<NetSpan>,
 }
 
 impl FinishedTrace {
@@ -152,6 +174,26 @@ impl FinishedTrace {
             "spans".into(),
             Json::Arr(self.spans.iter().map(|s| s.to_json()).collect()),
         );
+        if !self.net.is_empty() {
+            m.insert(
+                "net".into(),
+                Json::Arr(
+                    self.net
+                        .iter()
+                        .map(|n| {
+                            let mut s = BTreeMap::new();
+                            s.insert("name".into(), Json::Str(n.name.into()));
+                            s.insert(
+                                "start_unix_us".into(),
+                                Json::Num(n.start_unix_us as f64),
+                            );
+                            s.insert("end_unix_us".into(), Json::Num(n.end_unix_us as f64));
+                            Json::Obj(s)
+                        })
+                        .collect(),
+                ),
+            );
+        }
         Json::Obj(m)
     }
 }
@@ -239,7 +281,35 @@ impl TraceRecorder {
             outcome,
             total_us,
             spans,
+            net: Vec::new(),
         });
+    }
+
+    /// Attach a net-layer interval to an already-retained trace (newest
+    /// match wins). The net layer only learns a request's trace id after
+    /// routing finishes — by which time the engine has finished the trace
+    /// — so these arrive post-retention. Returns whether a trace with
+    /// that id was found (unsampled/evicted ids are a silent no-op:
+    /// sampling stays tail-based, the net layer never forces retention).
+    pub fn annotate(
+        &self,
+        id: u64,
+        name: &'static str,
+        start_unix_us: u64,
+        end_unix_us: u64,
+    ) -> bool {
+        let mut ring = self.ring.lock().unwrap();
+        match ring.iter_mut().rev().find(|t| t.id == id) {
+            Some(t) => {
+                t.net.push(NetSpan {
+                    name,
+                    start_unix_us,
+                    end_unix_us: end_unix_us.max(start_unix_us),
+                });
+                true
+            }
+            None => false,
+        }
     }
 
     /// Look up a retained trace by request id (newest match wins).
@@ -338,6 +408,34 @@ mod tests {
             .map(|t| t.get("id").unwrap().i64().unwrap())
             .collect();
         assert_eq!(ids, vec![4, 3, 2]);
+    }
+
+    #[test]
+    fn annotate_attaches_net_spans_to_retained_trace() {
+        let rec = TraceRecorder::with_sample(1.0);
+        let ctx = rec.begin(9).unwrap();
+        ctx.span("queue", 0, 5);
+        rec.finish(&ctx, TraceOutcome::Ok);
+        assert!(rec.annotate(9, "net_dispatch_wait", 1_000, 1_200));
+        assert!(rec.annotate(9, "net_flush", 1_500, 1_480), "end clamps to start");
+        let t = rec.get(9).unwrap();
+        let net = t.get("net").unwrap().arr().unwrap().clone();
+        assert_eq!(net.len(), 2);
+        assert_eq!(net[0].get("name").unwrap().str().unwrap(), "net_dispatch_wait");
+        assert_eq!(net[0].get("start_unix_us").unwrap().i64().unwrap(), 1_000);
+        assert_eq!(net[1].get("end_unix_us").unwrap().i64().unwrap(), 1_500);
+        // Engine spans are untouched.
+        assert_eq!(t.get("spans").unwrap().arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn annotate_unretained_id_is_noop() {
+        let rec = TraceRecorder::with_sample(1.0);
+        assert!(!rec.annotate(404, "net_flush", 0, 1));
+        let ctx = rec.begin(1).unwrap();
+        rec.finish(&ctx, TraceOutcome::Ok);
+        assert!(!rec.annotate(2, "net_flush", 0, 1));
+        assert!(rec.get(1).unwrap().get("net").is_err(), "no net key when empty");
     }
 
     #[test]

@@ -577,6 +577,7 @@ pub fn search(
                     threads: ctx.gemm_threads,
                     max_batches: None,
                     log_every: 0,
+                    approx_backward: None,
                 };
                 let fit = crate::trainer::fit(
                     &ctx.model,

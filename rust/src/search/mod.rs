@@ -72,9 +72,22 @@ pub fn mode_power(mode: &LayerMode) -> f64 {
 /// propagation over the graph (no execution needed). Mirrors the dynamic
 /// `node_macs` accounting in the executor's profiler.
 pub fn layer_macs(model: &Model) -> BTreeMap<usize, u64> {
+    static_counts(model).0
+}
+
+/// Static per-layer *output-element* counts (per sample) for every
+/// quantizable node — the add count an error-compensation epilogue pays
+/// on that layer ([`plan_cost_comp`]).
+pub fn layer_outputs(model: &Model) -> BTreeMap<usize, u64> {
+    static_counts(model).1
+}
+
+/// Shared shape walk behind [`layer_macs`] / [`layer_outputs`].
+fn static_counts(model: &Model) -> (BTreeMap<usize, u64>, BTreeMap<usize, u64>) {
     // Track (h, w, c) per node id; (1, 1, features) for flat tensors.
     let mut shapes: BTreeMap<usize, (usize, usize, usize)> = BTreeMap::new();
     let mut macs = BTreeMap::new();
+    let mut outs = BTreeMap::new();
     let input_hwc = match model.input_shape.as_slice() {
         [h, w, c] => (*h, *w, *c),
         [n] => (1usize, 1usize, *n),
@@ -99,15 +112,18 @@ pub fn layer_macs(model: &Model) -> BTreeMap<usize, u64> {
                 let m = (ho * wo * cout) as u64 * (*kh as u64) * (*kw as u64) * (*cin as u64)
                     / (*groups).max(1) as u64;
                 macs.insert(node.id, m);
+                outs.insert(node.id, (ho * wo * cout) as u64);
                 (ho, wo, *cout)
             }
             Op::Linear { din, dout, .. } => {
                 macs.insert(node.id, (*din as u64) * (*dout as u64));
+                outs.insert(node.id, *dout as u64);
                 (1, 1, *dout)
             }
             Op::Lstm { din, hidden, .. } => {
                 let m = (seq_len as u64) * 4 * (*hidden as u64) * (*din as u64 + *hidden as u64);
                 macs.insert(node.id, m);
+                outs.insert(node.id, (seq_len as u64) * (*hidden as u64));
                 (1, 1, *hidden)
             }
             Op::AvgPool2 => {
@@ -142,7 +158,7 @@ pub fn layer_macs(model: &Model) -> BTreeMap<usize, u64> {
         };
         shapes.insert(node.id, shape);
     }
-    macs
+    (macs, outs)
 }
 
 /// MAC-weighted mean relative power of a plan over `model`'s quantizable
@@ -160,6 +176,38 @@ pub fn plan_cost_macs(macs: &BTreeMap<usize, u64>, plan: &ExecutionPlan) -> f64 
         let w = macs.get(id).copied().unwrap_or(1).max(1) as f64;
         num += w * mode_power(mode);
         den += w;
+    }
+    if den > 0.0 {
+        num / den
+    } else {
+        1.0
+    }
+}
+
+/// Relative power of one compensation *add* vs one exact MAC. The
+/// correction is a single add folded into the bias epilogue, so it is far
+/// cheaper than a multiply-accumulate; 0.05 matches the adder/multiplier
+/// energy ratio the Zervakis control-variate papers assume.
+pub const COMP_ADD_POWER: f64 = 0.05;
+
+/// [`plan_cost_macs`] plus the compensation surcharge: every layer that
+/// carries a [`crate::graph::Compensation`] block pays
+/// `outputs · COMP_ADD_POWER` extra adds (MAC-normalized). With no
+/// compensation anywhere this is exactly [`plan_cost_macs`].
+pub fn plan_cost_comp(
+    macs: &BTreeMap<usize, u64>,
+    outs: &BTreeMap<usize, u64>,
+    plan: &ExecutionPlan,
+) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (id, mode) in &plan.modes {
+        let w = macs.get(id).copied().unwrap_or(1).max(1) as f64;
+        num += w * mode_power(mode);
+        den += w;
+        if plan.compensation.contains_key(id) {
+            num += outs.get(id).copied().unwrap_or(1).max(1) as f64 * COMP_ADD_POWER;
+        }
     }
     if den > 0.0 {
         num / den
@@ -235,6 +283,44 @@ mod tests {
         let total: u64 = macs.values().sum();
         let expect = (1.0 * (total - 13824) as f64 + p_small * 13824.0) / total as f64;
         assert!((c_big - expect).abs() < 1e-9, "{c_big} vs {expect}");
+    }
+
+    #[test]
+    fn layer_outputs_tiny_cnn() {
+        let model = crate::trainer::synth::tiny_cnn();
+        let outs = layer_outputs(&model);
+        // c1: 8x8x8 outputs; c2 after AvgPool2: 4x4x8; head: 4.
+        assert_eq!(outs.get(&1), Some(&512));
+        assert_eq!(outs.get(&4), Some(&128));
+        assert_eq!(outs.get(&7), Some(&4));
+        assert_eq!(outs.len(), 3);
+    }
+
+    #[test]
+    fn plan_cost_comp_charges_adds() {
+        let model = crate::trainer::synth::tiny_cnn();
+        let macs = layer_macs(&model);
+        let outs = layer_outputs(&model);
+        let mut plan =
+            crate::graph::retransform(&model, &Policy::all(LayerMode::lut("mitchell8")));
+        let base = plan_cost_macs(&macs, &plan);
+        // No compensation anywhere: the two models agree exactly.
+        assert_eq!(plan_cost_comp(&macs, &outs, &plan), base);
+        plan.compensation.insert(
+            1,
+            crate::graph::Compensation {
+                constant: 0.1,
+                channels: vec![],
+            },
+        );
+        // Modes-only cost ignores compensation (the "identical
+        // MAC-weighted power" twin contract) ...
+        assert_eq!(plan_cost_macs(&macs, &plan), base);
+        // ... while the comp-aware cost pays 512 adds on node 1.
+        let total: u64 = macs.values().sum();
+        let expect = base + 512.0 * COMP_ADD_POWER / total as f64;
+        let got = plan_cost_comp(&macs, &outs, &plan);
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
     }
 
     #[test]

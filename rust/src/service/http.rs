@@ -210,18 +210,67 @@ pub(crate) enum Payload {
     Text(String),
 }
 
+/// Where the net layer should deliver its accept-to-flush span
+/// annotations: the request id (= trace id) plus the owning engine's
+/// recorder. Returned by [`route`] for successfully routed infer
+/// requests while that model's tracer is sampling.
+pub(crate) struct NetTrace {
+    pub id: u64,
+    pub tracer: Arc<crate::obs::TraceRecorder>,
+}
+
 /// Dispatch one request. Runs on a dispatch-pool thread (may block on
-/// the engine queue), never on an event loop.
-pub(crate) fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Payload) {
+/// the engine queue), never on an event loop. The third element tells
+/// the net layer which trace (if any) to annotate with its own
+/// dispatch-wait / flush timestamps.
+pub(crate) fn route(
+    registry: &ModelRegistry,
+    req: &HttpRequest,
+) -> (u16, Payload, Option<NetTrace>) {
     if req.path == "/metrics" {
         if req.method == "GET" {
-            return (200, Payload::Text(registry.metrics_text()));
+            return (200, Payload::Text(registry.metrics_text()), None);
         }
         let e = ServiceError::MethodNotAllowed(format!("{} /metrics", req.method));
-        return (e.http_status(), Payload::Json(e.to_json()));
+        return (e.http_status(), Payload::Json(e.to_json()), None);
     }
     let (status, body) = route_json(registry, req);
-    (status, Payload::Json(body))
+    let trace = net_trace_for(registry, req, status, &body);
+    (status, Payload::Json(body), trace)
+}
+
+/// The net layer learns a request's trace id only from the routed
+/// response (the id is allocated inside the service), so the annotation
+/// target is resolved after the fact: a 200 infer response on a model
+/// whose tracer is sampling.
+fn net_trace_for(
+    registry: &ModelRegistry,
+    req: &HttpRequest,
+    status: u16,
+    body: &Json,
+) -> Option<NetTrace> {
+    if status != 200 || req.method != "POST" {
+        return None;
+    }
+    let handle = if req.path == "/v1/infer" {
+        registry.default_model()
+    } else {
+        let rest = req.path.strip_prefix("/v2/models/")?;
+        let (name, tail) = rest.split_once('/')?;
+        if tail != "infer" {
+            return None;
+        }
+        registry.get(name).ok()?
+    };
+    let tracer = handle.service().engine().tracer();
+    if !tracer.enabled() {
+        return None;
+    }
+    let id = body.get("id").ok()?.i64().ok()? as u64;
+    Some(NetTrace {
+        id,
+        tracer: Arc::clone(tracer),
+    })
 }
 
 /// All the JSON routes (everything except `/metrics`).

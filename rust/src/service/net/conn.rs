@@ -11,9 +11,12 @@
 
 use std::collections::VecDeque;
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::Interest;
+use crate::obs::trace::unix_us;
+use crate::obs::TraceRecorder;
 use crate::service::api::ServiceError;
 
 /// Request head cap, matching the old blocking server.
@@ -30,6 +33,9 @@ pub struct HttpRequest {
     pub path: String,
     pub body: Vec<u8>,
     pub keep_alive: bool,
+    /// Wall-clock instant (unix µs) the request finished parsing; the
+    /// net layer stamps its dispatch-wait trace span from here.
+    pub parsed_unix_us: u64,
 }
 
 /// Outcome of one [`Conn::try_parse`] pass.
@@ -73,6 +79,10 @@ pub struct Conn {
     pub pending_error: Option<Vec<u8>>,
     /// Interest currently registered with the poller.
     pub interest: Interest,
+    /// Pending `net_flush` trace annotation for the response currently
+    /// draining: (recorder, trace id, queued-at unix µs). Set when a
+    /// traced completion queues its bytes, consumed when `out` drains.
+    pub flush_trace: Option<(Arc<TraceRecorder>, u64, u64)>,
 }
 
 impl Conn {
@@ -90,6 +100,7 @@ impl Conn {
             peer_eof: false,
             pending_error: None,
             interest: Interest::READ,
+            flush_trace: None,
         }
     }
 
@@ -189,6 +200,7 @@ impl Conn {
             path,
             body,
             keep_alive,
+            parsed_unix_us: unix_us(),
         })
     }
 }

@@ -27,7 +27,8 @@ use anyhow::{Context, Result};
 
 use super::conn::{Conn, ParseStep, PIPELINE_MAX};
 use super::{sys, waker_pair, Backend, Event, Interest, Poller, TimerWheel, Waker, WakeReader};
-use crate::obs::NetStats;
+use crate::obs::trace::unix_us;
+use crate::obs::{NetStats, TraceRecorder};
 use crate::service::api::ServiceError;
 use crate::service::http::{self, ServeOptions};
 use crate::service::registry::ModelRegistry;
@@ -59,6 +60,9 @@ struct Completion {
     epoch: u32,
     bytes: Vec<u8>,
     keep_alive: bool,
+    /// Trace to annotate with the response's `net_flush` interval
+    /// (recorder + trace id), for traced infer requests.
+    trace: Option<(Arc<TraceRecorder>, u64)>,
 }
 
 /// The cross-thread half of one event loop: where dispatch workers
@@ -324,11 +328,24 @@ impl EventLoop {
             (req, epoch)
         };
         let keep_alive = req.keep_alive;
+        let parsed_us = req.parsed_unix_us;
         let registry = Arc::clone(&self.registry);
         let shared = Arc::clone(&self.shared);
         self.dispatch.submit(move || {
-            let (status, body) = http::route(&registry, &req);
+            let picked_us = unix_us();
+            let (status, body, nt) = http::route(&registry, &req);
+            let routed_us = unix_us();
             let bytes = http::response_bytes(status, &body, keep_alive);
+            // Traced infer requests get the net layer's view appended to
+            // the engine trace: parse -> dispatch pickup (pool wait) and
+            // pickup -> routed (engine submit/wait + serialization). The
+            // flush interval is annotated by the event loop once the
+            // response bytes drain.
+            let trace = nt.map(|nt| {
+                nt.tracer.annotate(nt.id, "net_dispatch_wait", parsed_us, picked_us);
+                nt.tracer.annotate(nt.id, "net_route", picked_us, routed_us);
+                (nt.tracer, nt.id)
+            });
             shared
                 .completions
                 .lock()
@@ -338,6 +355,7 @@ impl EventLoop {
                     epoch,
                     bytes,
                     keep_alive,
+                    trace,
                 });
             shared.waker.wake();
         });
@@ -361,6 +379,7 @@ impl EventLoop {
     /// write, register write interest and let readiness finish it.
     fn flush(&mut self, slot: usize) {
         let mut dead = false;
+        let mut flushed: Option<(Arc<TraceRecorder>, u64, u64)> = None;
         {
             let Some(conn) = self.conns.slot_mut(slot) else {
                 return;
@@ -381,12 +400,18 @@ impl EventLoop {
                 }
             }
             if !dead && conn.pending_out() == 0 {
+                // The traced response's bytes are fully with the kernel:
+                // close out its accept-to-flush timeline.
+                flushed = conn.flush_trace.take();
                 if conn.close_after_write {
                     dead = true;
                 } else if conn.peer_eof && conn.is_quiescent() {
                     dead = true; // half-closed peer, nothing left to say
                 }
             }
+        }
+        if let Some((tracer, id, queued_us)) = flushed {
+            tracer.annotate(id, "net_flush", queued_us, unix_us());
         }
         if dead {
             self.close(slot);
@@ -445,6 +470,8 @@ impl EventLoop {
                 };
                 conn.inflight = false;
                 conn.queue_output(&c.bytes);
+                conn.flush_trace =
+                    c.trace.map(|(tracer, id)| (tracer, id, unix_us()));
                 if !c.keep_alive {
                     conn.close_after_write = true;
                 }

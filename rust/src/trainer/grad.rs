@@ -18,6 +18,15 @@
 //! flow through im2col / [`col2im_f32_range_add`]. All workspaces live in
 //! a grow-only [`Workspace`] (the trainer's scratch arena).
 //!
+//! **Approximate-gradient training** (ApproxTrain-style): when an
+//! [`ApproxGrad`] is supplied ([`backward_with`], `--approx-backward`,
+//! `ADAPT_APPROX_BACKWARD`), both transpose GEMMs instead quantize their
+//! operands per-tensor (symmetric, `max|x| / qmax`) and run the ACU's
+//! closed-form ([`gemm::cf_opt_i64`]) or behavioral ([`gemm::func_opt`])
+//! integer kernel — the gradients themselves pass through the approximate
+//! multiplier, modeling accelerators that train on approximate hardware.
+//! Bias gradients are plain column sums (no products) either way.
+//!
 //! Determinism: every kernel computes each output row sequentially on one
 //! worker, so gradients are bit-identical at any thread count.
 
@@ -25,8 +34,36 @@ use anyhow::{Context, Result};
 
 use crate::emulator::{gemm, Executor, Value};
 use crate::graph::{Node, Op};
+use crate::mult;
 use crate::quant;
 use crate::tensor::{col2im_f32_range_add, conv_out, im2col_f32_range_into, Tensor};
+
+/// Backward-pass ACU: the resolved routing target for approximate-gradient
+/// training. `Copy` so [`super::TrainConfig`] stays `Copy`.
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxGrad {
+    /// Registry name (provenance / logging).
+    pub name: &'static str,
+    /// Operand bitwidth of the gradient quantizer.
+    pub bits: u32,
+    fun: mult::MulFn,
+    /// `Some` for closed-form families (branchless kernel); `None` routes
+    /// through the behavioral function.
+    form: Option<mult::Form>,
+}
+
+impl ApproxGrad {
+    /// Resolve a registry ACU name into a backward-pass routing target.
+    pub fn from_acu(name: &str) -> Result<ApproxGrad> {
+        let m = mult::get(name)?;
+        Ok(ApproxGrad {
+            name: m.name,
+            bits: m.bits,
+            fun: m.fun,
+            form: (m.form != mult::Form::Opaque).then_some(m.form),
+        })
+    }
+}
 
 /// Grow-only backward workspaces: sized by the largest layer on first
 /// use, reused by every later layer, batch and epoch (same grow-only
@@ -37,6 +74,12 @@ pub struct Workspace {
     dyg: Vec<f32>,
     dwg: Vec<f32>,
     dpatch: Vec<f32>,
+    // Approximate-backward scratch: quantized operands (transposes are
+    // materialized — the integer kernels want row-major (M,K)/(K,N)) and
+    // the i64 accumulator block.
+    qa: Vec<i32>,
+    qb: Vec<i32>,
+    qacc: Vec<i64>,
 }
 
 fn grab(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
@@ -44,6 +87,128 @@ fn grab(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
         buf.resize(len, 0.0);
     }
     &mut buf[..len]
+}
+
+fn grab_i32(buf: &mut Vec<i32>, len: usize) -> &mut [i32] {
+    if buf.len() < len {
+        buf.resize(len, 0);
+    }
+    &mut buf[..len]
+}
+
+fn grab_i64(buf: &mut Vec<i64>, len: usize) -> &mut [i64] {
+    if buf.len() < len {
+        buf.resize(len, 0);
+    }
+    &mut buf[..len]
+}
+
+/// Per-tensor symmetric quantizer scale `max|x| / qmax` (sequential fold —
+/// deterministic). `0.0` means the tensor is all-zero; callers short-cut
+/// to a zero output instead of dividing by it.
+fn tensor_scale(xs: &[f32], qmax: i32) -> f32 {
+    let mut mx = 0.0f32;
+    for &v in xs {
+        mx = mx.max(v.abs());
+    }
+    mx / qmax as f32
+}
+
+/// Approximate twin of [`gemm::fp32_at_b`]: `out (k, n) = Aᵀ @ B` with
+/// both operands per-tensor quantized and every product taken by the
+/// backward ACU. The transpose is materialized (quantized) so the integer
+/// kernels see their native row-major layout.
+#[allow(clippy::too_many_arguments)]
+fn approx_at_b(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    ag: ApproxGrad,
+    threads: usize,
+    qa: &mut Vec<i32>,
+    qb: &mut Vec<i32>,
+    qacc: &mut Vec<i64>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    let qmax = quant::qmax_for(ag.bits);
+    let sa = tensor_scale(a, qmax);
+    let sb = tensor_scale(b, qmax);
+    if sa == 0.0 || sb == 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    let at = grab_i32(qa, k * m);
+    for mi in 0..m {
+        for ki in 0..k {
+            at[ki * m + mi] = quant::quantize_one(a[mi * k + ki], sa, qmax);
+        }
+    }
+    let bq = grab_i32(qb, m * n);
+    for (o, &v) in bq.iter_mut().zip(b) {
+        *o = quant::quantize_one(v, sb, qmax);
+    }
+    let acc = grab_i64(qacc, k * n);
+    match ag.form {
+        Some(form) => gemm::cf_opt_i64(at, k, m, bq, n, form, threads, acc),
+        None => gemm::func_opt(at, k, m, bq, n, ag.fun, threads, acc),
+    }
+    let s = sa * sb;
+    for (o, &v) in out.iter_mut().zip(acc.iter()) {
+        *o = v as f32 * s;
+    }
+}
+
+/// Approximate twin of [`gemm::fp32_a_bt`]: `out (m, k) = A @ Bᵀ` where
+/// `B` is `(k, n)` row-major — same quantize/route/dequant scheme as
+/// [`approx_at_b`], with `Bᵀ` materialized.
+#[allow(clippy::too_many_arguments)]
+fn approx_a_bt(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    b: &[f32],
+    k: usize,
+    ag: ApproxGrad,
+    threads: usize,
+    qa: &mut Vec<i32>,
+    qb: &mut Vec<i32>,
+    qacc: &mut Vec<i64>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    let qmax = quant::qmax_for(ag.bits);
+    let sa = tensor_scale(a, qmax);
+    let sb = tensor_scale(b, qmax);
+    if sa == 0.0 || sb == 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    let aq = grab_i32(qa, m * n);
+    for (o, &v) in aq.iter_mut().zip(a) {
+        *o = quant::quantize_one(v, sa, qmax);
+    }
+    let bt = grab_i32(qb, n * k);
+    for ki in 0..k {
+        for ni in 0..n {
+            bt[ni * k + ki] = quant::quantize_one(b[ki * n + ni], sb, qmax);
+        }
+    }
+    let acc = grab_i64(qacc, m * k);
+    match ag.form {
+        Some(form) => gemm::cf_opt_i64(aq, m, n, bt, k, form, threads, acc),
+        None => gemm::func_opt(aq, m, n, bt, k, ag.fun, threads, acc),
+    }
+    let s = sa * sb;
+    for (o, &v) in out.iter_mut().zip(acc.iter()) {
+        *o = v as f32 * s;
+    }
 }
 
 fn tape_f(tape: &[Option<Value>], id: usize) -> Result<&Tensor> {
@@ -125,6 +290,20 @@ pub fn backward(
     threads: usize,
     ws: &mut Workspace,
 ) -> Result<Gradients> {
+    backward_with(exec, tape, d_out, threads, ws, None)
+}
+
+/// [`backward`] with an optional approximate-gradient ACU: when `approx`
+/// is `Some`, the weight- and input-grad transpose GEMMs run through the
+/// ACU's integer kernel instead of exact fp32 (see the module docs).
+pub fn backward_with(
+    exec: &Executor,
+    tape: &[Option<Value>],
+    d_out: Tensor,
+    threads: usize,
+    ws: &mut Workspace,
+    approx: Option<ApproxGrad>,
+) -> Result<Gradients> {
     let model = exec.model;
     let threads = threads.max(1);
     let mut grads: Vec<Option<Tensor>> = Vec::new();
@@ -147,12 +326,12 @@ pub fn backward(
         match &node.op {
             Op::Conv2d { .. } => {
                 let x = tape_f(tape, node.inputs[0])?;
-                let dx = conv_backward(exec, node, x, &dy, &mut pgrads, threads, ws)?;
+                let dx = conv_backward(exec, node, x, &dy, &mut pgrads, threads, ws, approx)?;
                 accum(&mut grads[node.inputs[0]], dx)?;
             }
             Op::Linear { .. } => {
                 let x = tape_f(tape, node.inputs[0])?;
-                let dx = linear_backward(exec, node, x, &dy, &mut pgrads, threads, ws)?;
+                let dx = linear_backward(exec, node, x, &dy, &mut pgrads, threads, ws, approx)?;
                 accum(&mut grads[node.inputs[0]], dx)?;
             }
             Op::Relu => {
@@ -294,6 +473,7 @@ fn conv_backward(
     pgrads: &mut [Tensor],
     threads: usize,
     ws: &mut Workspace,
+    approx: Option<ApproxGrad>,
 ) -> Result<Tensor> {
     let (kh, kw, cin, cout, stride, pad, groups, scale_idx) = match &node.op {
         Op::Conv2d {
@@ -351,7 +531,13 @@ fn conv_backward(
         // dW_g = patchesᵀ @ dY_g, scattered into the (kh*kw*cin_g, cout)
         // weight-parameter layout (inverse of the prepare-time flatten).
         let dwg = grab(&mut ws.dwg, kf * cout_g);
-        gemm::fp32_at_b(patches, m, kf, dyg, cout_g, threads, dwg);
+        match approx {
+            Some(ag) => approx_at_b(
+                patches, m, kf, dyg, cout_g, ag, threads, &mut ws.qa, &mut ws.qb, &mut ws.qacc,
+                dwg,
+            ),
+            None => gemm::fp32_at_b(patches, m, kf, dyg, cout_g, threads, dwg),
+        }
         let pw = &mut pgrads[node.params[0]];
         for row in 0..kf {
             let dst = row * cout + g * cout_g;
@@ -370,7 +556,12 @@ fn conv_backward(
         }
         // dPatches = dY_g @ Ŵᵀ, scatter-added back onto dX.
         let dpatch = grab(&mut ws.dpatch, m * kf);
-        gemm::fp32_a_bt(dyg, m, cout_g, wg, kf, threads, dpatch);
+        match approx {
+            Some(ag) => approx_a_bt(
+                dyg, m, cout_g, wg, kf, ag, threads, &mut ws.qa, &mut ws.qb, &mut ws.qacc, dpatch,
+            ),
+            None => gemm::fp32_a_bt(dyg, m, cout_g, wg, kf, threads, dpatch),
+        }
         col2im_f32_range_add(
             dpatch,
             &x.shape,
@@ -397,6 +588,7 @@ fn linear_backward(
     pgrads: &mut [Tensor],
     threads: usize,
     ws: &mut Workspace,
+    approx: Option<ApproxGrad>,
 ) -> Result<Tensor> {
     let (din, dout, scale_idx) = match &node.op {
         Op::Linear {
@@ -418,7 +610,13 @@ fn linear_backward(
 
     // dW = X̂ᵀ @ dY.
     let dwg = grab(&mut ws.dwg, din * dout);
-    gemm::fp32_at_b(&xhat.data, m, din, &dy.data, dout, threads, dwg);
+    match approx {
+        Some(ag) => approx_at_b(
+            &xhat.data, m, din, &dy.data, dout, ag, threads, &mut ws.qa, &mut ws.qb,
+            &mut ws.qacc, dwg,
+        ),
+        None => gemm::fp32_at_b(&xhat.data, m, din, &dy.data, dout, threads, dwg),
+    }
     let pw = &mut pgrads[node.params[0]];
     for (o, &g) in pw.data.iter_mut().zip(dwg.iter()) {
         *o += g;
@@ -433,7 +631,13 @@ fn linear_backward(
     }
     // dX = dY @ Ŵᵀ, clipped-STE-masked.
     let mut dx = Tensor::zeros(&x.shape);
-    gemm::fp32_a_bt(&dy.data, m, dout, wg, din, threads, &mut dx.data);
+    match approx {
+        Some(ag) => approx_a_bt(
+            &dy.data, m, dout, wg, din, ag, threads, &mut ws.qa, &mut ws.qb, &mut ws.qacc,
+            &mut dx.data,
+        ),
+        None => gemm::fp32_a_bt(&dy.data, m, dout, wg, din, threads, &mut dx.data),
+    }
     apply_clip_mask(&mut dx, x, sa, bits);
     Ok(dx)
 }

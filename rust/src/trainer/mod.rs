@@ -36,7 +36,7 @@ pub mod loss;
 pub mod sgd;
 pub mod synth;
 
-pub use grad::{backward, Gradients, Workspace};
+pub use grad::{backward, backward_with, ApproxGrad, Gradients, Workspace};
 pub use loss::{loss_and_grad, LossKind};
 pub use sgd::SgdMomentum;
 
@@ -68,6 +68,11 @@ pub struct TrainConfig {
     pub max_batches: Option<usize>,
     /// Progress line every N steps on stderr (0 = silent).
     pub log_every: usize,
+    /// Approximate-gradient training (ApproxTrain-style): route the
+    /// backward transpose GEMMs through this ACU's integer kernel.
+    /// `None` falls back to the `ADAPT_APPROX_BACKWARD` env (an ACU
+    /// registry name), and then to the exact fp32 backward.
+    pub approx_backward: Option<grad::ApproxGrad>,
 }
 
 impl Default for TrainConfig {
@@ -81,7 +86,25 @@ impl Default for TrainConfig {
             threads: crate::util::threadpool::default_threads(),
             max_batches: None,
             log_every: 0,
+            approx_backward: None,
         }
+    }
+}
+
+/// Resolve the backward-pass ACU: an explicit config wins, then the
+/// `ADAPT_APPROX_BACKWARD` env (ACU registry name; bad names are an
+/// error, not silently exact), then the exact fp32 backward.
+fn resolve_approx_backward(cfg: &TrainConfig) -> Result<Option<grad::ApproxGrad>> {
+    if cfg.approx_backward.is_some() {
+        return Ok(cfg.approx_backward);
+    }
+    match std::env::var("ADAPT_APPROX_BACKWARD") {
+        Ok(name) if !name.trim().is_empty() => {
+            let ag = grad::ApproxGrad::from_acu(name.trim())
+                .context("ADAPT_APPROX_BACKWARD names an unknown ACU")?;
+            Ok(Some(ag))
+        }
+        _ => Ok(None),
     }
 }
 
@@ -147,6 +170,14 @@ pub fn fit(
     let threads = cfg.threads.max(1);
     let needs_target = matches!(kind, LossKind::Vae);
     let last = model.nodes.last().context("empty model")?.id;
+    let approx = resolve_approx_backward(cfg)?;
+    if let Some(ag) = approx {
+        crate::obs::log::info(
+            "fit",
+            "approx-backward",
+            &[("model", model.name.clone()), ("acu", ag.name.to_string())],
+        );
+    }
 
     let mut params = params;
     let mut opt = SgdMomentum::new(cfg.lr, cfg.momentum, &params);
@@ -198,7 +229,7 @@ pub fn fit(
                 "{} diverged at epoch {epoch} step {bi} (loss {loss})",
                 model.name
             );
-            let pgrads = backward(&exec, &tape, d_out, threads, &mut ws)?;
+            let pgrads = backward_with(&exec, &tape, d_out, threads, &mut ws, approx)?;
             drop(tape);
             arena = exec.into_arena();
             opt.step(&mut params, &pgrads.params);

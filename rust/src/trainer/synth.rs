@@ -144,6 +144,59 @@ pub fn tiny_dataset(n_train: usize, n_eval: usize) -> Dataset {
     )
 }
 
+/// Pre-trained [`tiny_cnn`] with emulator-calibrated activation scales —
+/// the shared setup for the retraining demo, the compensation demo
+/// (`adapt compensate --synthetic`), `tests/compensate.rs` and
+/// `benches/compensate.rs`. Deterministic for a fixed seed at any thread
+/// count.
+pub struct TinySetup {
+    pub model: Model,
+    /// fp32 pre-trained parameters.
+    pub params: Vec<Tensor>,
+    /// Per-scale activation scales from [`super::calibrate_emulator`].
+    pub scales: Vec<f32>,
+    pub ds: Dataset,
+}
+
+/// fp32 pre-train [`tiny_cnn`] (6 epochs, the "download a pretrained
+/// model" stand-in) and calibrate the emulator's activation scales.
+pub fn tiny_pretrained(seed: u64, threads: usize) -> Result<TinySetup> {
+    let model = tiny_cnn();
+    let ds = tiny_dataset(512, 256);
+    let luts = LutRegistry::in_memory();
+    let bs = 32;
+    let fp32_plan = retransform(&model, &Policy::all(LayerMode::Fp32));
+    let pre_cfg = super::TrainConfig {
+        epochs: 6,
+        lr: 0.012,
+        momentum: 0.9,
+        batch: bs,
+        seed,
+        threads,
+        max_batches: None,
+        log_every: 0,
+        approx_backward: None,
+    };
+    let pre = super::fit(&model, tiny_params(&model, seed), &fp32_plan, &[], &luts, &ds.train, &pre_cfg)?;
+    let params = pre.params;
+    let scales = super::calibrate_emulator(
+        &model,
+        &params,
+        &ds.train,
+        bs,
+        2,
+        CalibratorKind::Percentile,
+        0.999,
+        threads,
+    )?;
+    Ok(TinySetup {
+        model,
+        params,
+        scales,
+        ds,
+    })
+}
+
 /// Outcome of [`demo_retrain`].
 pub struct DemoOutcome {
     /// fp32 eval accuracy after pre-training.
@@ -160,38 +213,28 @@ pub struct DemoOutcome {
 /// (emulator taps) → damage with [`tiny_mixed_plan`] → QAT-retrain on
 /// that plan. Deterministic for a fixed seed at any thread count.
 pub fn demo_retrain(epochs: usize, lr: f32, seed: u64, threads: usize) -> Result<DemoOutcome> {
-    let model = tiny_cnn();
-    let ds = tiny_dataset(512, 256);
+    demo_retrain_with(epochs, lr, seed, threads, None)
+}
+
+/// [`demo_retrain`] with an optional approximate-gradient ACU for the QAT
+/// phase (the fp32 pre-training always uses the exact backward).
+pub fn demo_retrain_with(
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+    threads: usize,
+    approx: Option<super::ApproxGrad>,
+) -> Result<DemoOutcome> {
     let luts = LutRegistry::in_memory();
     let bs = 32;
     let eval_batches = 8;
+    let TinySetup {
+        model,
+        params,
+        scales,
+        ds,
+    } = tiny_pretrained(seed, threads)?;
     let fp32_plan = retransform(&model, &Policy::all(LayerMode::Fp32));
-
-    // fp32 pre-training (the "download a pretrained model" stand-in).
-    let pre_cfg = super::TrainConfig {
-        epochs: 6,
-        lr: 0.012,
-        momentum: 0.9,
-        batch: bs,
-        seed,
-        threads,
-        max_batches: None,
-        log_every: 0,
-    };
-    let pre = super::fit(&model, tiny_params(&model, seed), &fp32_plan, &[], &luts, &ds.train, &pre_cfg)?;
-    let params = pre.params;
-
-    // Post-training calibration on the emulator's own fp32 taps.
-    let scales = super::calibrate_emulator(
-        &model,
-        &params,
-        &ds.train,
-        bs,
-        2,
-        CalibratorKind::Percentile,
-        0.999,
-        threads,
-    )?;
 
     let fp32_acc = super::evaluate(
         &model, params.clone(), &fp32_plan, &[], &luts, &ds.eval, bs, eval_batches, threads,
@@ -211,6 +254,7 @@ pub fn demo_retrain(epochs: usize, lr: f32, seed: u64, threads: usize) -> Result
         threads,
         max_batches: None,
         log_every: 0,
+        approx_backward: approx,
     };
     let fit = super::fit(&model, params, &plan, &scales, &luts, &ds.train, &qat_cfg)?;
     let retrained_acc = super::evaluate(
@@ -219,7 +263,7 @@ pub fn demo_retrain(epochs: usize, lr: f32, seed: u64, threads: usize) -> Result
 
     let (l0, l1) = fit.improvement();
     let epoch_means: Vec<String> = fit.epoch_losses.iter().map(|l| format!("{l:.4}")).collect();
-    let report = format!(
+    let mut report = format!(
         "tiny_cnn emulator QAT demo (seed {seed:#x}, {} QAT epochs x {} steps, lr {lr}, batch {bs})\n\
          plan:\n{}\
          fp32 accuracy:      {:.2}%\n\
@@ -237,6 +281,9 @@ pub fn demo_retrain(epochs: usize, lr: f32, seed: u64, threads: usize) -> Result
         l0,
         l1,
     );
+    if let Some(ag) = approx {
+        report.push_str(&format!("approx backward ACU: {} ({}-bit)\n", ag.name, ag.bits));
+    }
     Ok(DemoOutcome {
         fp32_acc,
         approx_acc,

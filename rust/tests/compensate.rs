@@ -1,0 +1,210 @@
+//! Integration tests for the error-compensation subsystem
+//! (`adapt::compensate`):
+//!
+//! 1. calibration is byte-deterministic across `ADAPT_THREADS` — identical
+//!    operand histograms and bit-identical fitted corrections at 1 and 4
+//!    threads,
+//! 2. a compensated plan (terms + provenance) survives a JSON round trip
+//!    byte-for-byte,
+//! 3. the executor's no-compensation path is untouched: plans without a
+//!    compensation block (or with the blocks stripped) execute
+//!    bit-identically to before, at any thread count and style,
+//! 4. end-to-end on the pre-trained synthetic CNN, compensating an
+//!    aggressive mitchell8 plan recovers accuracy at identical
+//!    MAC-weighted power.
+
+use adapt::compensate;
+use adapt::data::Split;
+use adapt::emulator::{Executor, Style, Value};
+use adapt::graph::{retransform, ExecutionPlan, LayerMode, Model, Policy};
+use adapt::lut::LutRegistry;
+use adapt::search;
+use adapt::tensor::Tensor;
+use adapt::trainer::{self, synth};
+use adapt::util::rng::Rng;
+
+/// Untrained [`synth::tiny_cnn`] with random weights, fixed activation
+/// scales, and an in-memory calibration split — enough for the
+/// determinism / round-trip / bit-equivalence properties, which do not
+/// care whether the network classifies anything.
+fn synth_setup(seed: u64) -> (Model, Vec<Tensor>, Vec<f32>, Split) {
+    let model = synth::tiny_cnn();
+    let mut rng = Rng::new(seed);
+    let params: Vec<Tensor> = model
+        .params
+        .iter()
+        .map(|spec| {
+            let data = (0..spec.numel()).map(|_| rng.next_gauss() * 0.4).collect();
+            Tensor::from_vec(&spec.shape, data).unwrap()
+        })
+        .collect();
+    let per: usize = model.input_shape.iter().product();
+    let n = 64;
+    let x_f: Vec<f32> = (0..n * per).map(|_| rng.next_gauss()).collect();
+    let split = Split {
+        x_f,
+        x_i: vec![],
+        labels: (0..n).map(|i| (i % model.out_dim) as i32).collect(),
+        num: n,
+        sample_shape: model.input_shape.clone(),
+        is_tokens: false,
+    };
+    let scales = vec![2.0 / 127.0; model.n_scales];
+    (model, params, scales, split)
+}
+
+fn calibrate(
+    model: &Model,
+    params: &[Tensor],
+    scales: &[f32],
+    split: &Split,
+    threads: usize,
+) -> compensate::Calibration {
+    compensate::collect(model, params, split, 16, 3, scales, &[8], threads).unwrap()
+}
+
+#[test]
+fn calibration_is_deterministic_across_thread_counts() {
+    // PROPERTY: `collect` histograms and the corrections fitted from them
+    // are byte-identical at ADAPT_THREADS=1 and =4 — the contract that
+    // lets a plan calibrated on one machine reproduce anywhere.
+    let (model, params, scales, split) = synth_setup(11);
+    let c1 = calibrate(&model, &params, &scales, &split, 1);
+    let c4 = calibrate(&model, &params, &scales, &split, 4);
+
+    assert_eq!(c1.hists.len(), c4.hists.len());
+    for ((k1, h1), (k4, h4)) in c1.hists.iter().zip(c4.hists.iter()) {
+        assert_eq!(k1, k4);
+        assert_eq!(
+            h1.counts, h4.counts,
+            "operand histogram diverged for node {} at {} bits",
+            k1.0, k1.1
+        );
+        assert_eq!(h1.total, h4.total);
+    }
+
+    let mode = LayerMode::lut("mitchell8");
+    for (&id, _) in &search::layer_macs(&model) {
+        let a = compensate::compensation_for(&model, &params, &scales, &c1, id, &mode)
+            .unwrap()
+            .expect("mitchell8 has systematic error; every layer should get a block");
+        let b = compensate::compensation_for(&model, &params, &scales, &c4, id, &mode)
+            .unwrap()
+            .unwrap();
+        assert_eq!(
+            a.constant.to_bits(),
+            b.constant.to_bits(),
+            "constant term of node {id} is not bit-identical"
+        );
+        let bits_a: Vec<u32> = a.channels.iter().map(|c| c.to_bits()).collect();
+        let bits_b: Vec<u32> = b.channels.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "channel terms of node {id} are not bit-identical");
+    }
+}
+
+#[test]
+fn compensated_plan_json_round_trips_byte_identically() {
+    let (model, params, scales, split) = synth_setup(23);
+    let calib = calibrate(&model, &params, &scales, &split, 1);
+    let mut plan = retransform(&model, &Policy::all(LayerMode::lut("mitchell8")));
+    let applied = compensate::compensate_plan(&model, &params, &scales, &calib, &mut plan).unwrap();
+    assert!(applied >= 1, "at least one layer must be compensated");
+    assert_eq!(applied, plan.compensation.len());
+
+    let json1 = plan.to_json_with(&model, Some("compensate:mitchell8"));
+    assert_eq!(
+        ExecutionPlan::provenance_of(&json1).as_deref(),
+        Some("compensate:mitchell8")
+    );
+    let reloaded = ExecutionPlan::from_json(&json1, &model).unwrap();
+    assert_eq!(
+        reloaded.compensation, plan.compensation,
+        "compensation terms must survive the round trip exactly"
+    );
+    let json2 = reloaded.to_json_with(&model, Some("compensate:mitchell8"));
+    assert_eq!(json1, json2, "plan JSON round trip must be byte-identical");
+}
+
+#[test]
+fn absent_compensation_executes_bit_identically_at_any_thread_count() {
+    // PROPERTY: compensation folds into the bias at prepare time, so (a) a
+    // plan without a block runs the exact pre-subsystem path, (b) a
+    // compensated plan is still bit-identical across thread counts and
+    // styles, and (c) stripping the blocks restores (a) byte-for-byte.
+    let (model, params, scales, split) = synth_setup(37);
+    let calib = calibrate(&model, &params, &scales, &split, 1);
+    let plain = retransform(&model, &Policy::all(LayerMode::lut("mitchell8")));
+    let mut comp = plain.clone();
+    let applied = compensate::compensate_plan(&model, &params, &scales, &calib, &mut comp).unwrap();
+    assert!(applied >= 1);
+
+    let luts = LutRegistry::in_memory();
+    let x = split.batch_tensor(0, 8);
+    let run = |p: &ExecutionPlan, style: Style| {
+        let exec = Executor::new(&model, params.clone(), p.clone(), scales.clone(), &luts, style)
+            .unwrap();
+        exec.forward(Value::F(x.clone())).unwrap()
+    };
+
+    let plain1 = run(&plain, Style::Optimized { threads: 1 });
+    let plain4 = run(&plain, Style::Optimized { threads: 4 });
+    assert_eq!(plain1.data, plain4.data, "uncompensated plan must be thread-invariant");
+
+    let comp1 = run(&comp, Style::Optimized { threads: 1 });
+    let comp4 = run(&comp, Style::Optimized { threads: 4 });
+    let comp_naive = run(&comp, Style::Naive);
+    assert_eq!(comp1.data, comp4.data, "compensated plan must be thread-invariant");
+    assert_eq!(comp1.data, comp_naive.data, "styles must agree on the compensated plan");
+    assert_ne!(plain1.data, comp1.data, "compensation must actually change outputs");
+
+    let mut stripped = comp.clone();
+    stripped.compensation.clear();
+    assert_eq!(
+        run(&stripped, Style::Optimized { threads: 2 }).data,
+        plain1.data,
+        "stripping the blocks must restore the uncompensated execution"
+    );
+}
+
+#[test]
+fn compensation_recovers_accuracy_at_identical_mac_cost() {
+    // END-TO-END: on the pre-trained synthetic CNN, an all-mitchell8 plan
+    // drops accuracy vs exact8; attaching calibrated compensation claws
+    // some of it back without touching a single MAC (identical
+    // MAC-weighted power before and after).
+    let ts = synth::tiny_pretrained(0xADA9, 2).unwrap();
+    let luts = LutRegistry::in_memory();
+    let plain = retransform(&ts.model, &Policy::all(LayerMode::lut("mitchell8")));
+    let bits = compensate::needed_bits(plain.modes.values()).unwrap();
+    let calib = compensate::collect(
+        &ts.model, &ts.params, &ts.ds.train, 32, 2, &ts.scales, &bits, 2,
+    )
+    .unwrap();
+    let mut comp = plain.clone();
+    let applied =
+        compensate::compensate_plan(&ts.model, &ts.params, &ts.scales, &calib, &mut comp).unwrap();
+    assert!(applied >= 2, "both convs at least should be compensated, got {applied}");
+
+    let eval = |p: &ExecutionPlan| {
+        trainer::evaluate(&ts.model, ts.params.clone(), p, &ts.scales, &luts, &ts.ds.eval, 32, 8, 2)
+            .unwrap()
+    };
+    let exact = eval(&retransform(&ts.model, &Policy::all(LayerMode::lut("exact8"))));
+    let uncomp = eval(&plain);
+    let with_comp = eval(&comp);
+    assert!(
+        exact > uncomp,
+        "mitchell8 must visibly hurt the tiny CNN (exact {exact}, uncompensated {uncomp})"
+    );
+    assert!(
+        with_comp > uncomp,
+        "compensation must recover accuracy: exact {exact}, uncompensated {uncomp}, compensated {with_comp}"
+    );
+
+    let macs = search::layer_macs(&ts.model);
+    assert_eq!(
+        search::plan_cost_macs(&macs, &plain),
+        search::plan_cost_macs(&macs, &comp),
+        "compensation must not change the MAC-weighted power"
+    );
+}

@@ -262,6 +262,7 @@ fn parallel_sweep_matches_sequential_bit_for_bit() {
         batches,
         bs,
         gemm_threads: 1,
+        comp: None,
     });
     let layers = ctx.layers();
     assert_eq!(layers.len(), 3, "c1, c2, fc");
@@ -358,6 +359,7 @@ fn greedy_plan_is_byte_identical_across_gemm_threads_and_reruns() {
             batches,
             bs,
             gemm_threads,
+            comp: None,
         });
         let layers = ctx.layers();
         let acus = vec![

@@ -125,6 +125,7 @@ fn make_ctx(gemm_threads: usize) -> Arc<SweepCtx> {
         batches,
         bs,
         gemm_threads,
+        comp: None,
     })
 }
 

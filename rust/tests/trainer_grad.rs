@@ -346,6 +346,7 @@ fn fit_is_deterministic_at_any_thread_count() {
             threads,
             max_batches: None,
             log_every: 0,
+            approx_backward: None,
         };
         trainer::fit(&model, params.clone(), &plan, &scales, &luts, &split, &cfg).unwrap()
     };
